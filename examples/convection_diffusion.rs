@@ -1,0 +1,74 @@
+//! End-to-end validation (DESIGN.md E8): the paper's full evaluation
+//! workload through the complete three-layer stack.
+//!
+//! * L1/L2: the Pallas stencil kernel inside the JAX sweep, AOT-compiled
+//!   to `artifacts/*.hlo.txt` (`make artifacts`).
+//! * L3: eight JACK2 ranks on the simulated cluster solve the backward-
+//!   Euler convection–diffusion system per time step, in both classical
+//!   and asynchronous mode, executing the sweep via PJRT.
+//!
+//! Output is recorded in EXPERIMENTS.md §E8.
+//!
+//! Run: make artifacts && cargo run --release --example convection_diffusion
+
+use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::harness::{fmt_secs, Table};
+use jack2::solver::solve;
+
+fn main() {
+    let backend = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Backend::Xla
+    } else {
+        eprintln!("warning: artifacts/ missing, falling back to native backend");
+        Backend::Native
+    };
+
+    let time_steps = 3;
+    println!(
+        "convection-diffusion: nu=0.5 a=(0.1,-0.2,0.3) dt=0.01, {time_steps} backward-Euler steps"
+    );
+    println!("grid 16^3 over 2x2x2 ranks, backend = {}\n", backend.name());
+
+    let mut table = Table::new(&[
+        "scheme", "step", "time", "iters", "snaps", "reported norm", "r_n (verified)",
+    ]);
+
+    for scheme in [Scheme::Overlapping, Scheme::Asynchronous] {
+        let cfg = ExperimentConfig {
+            process_grid: (2, 2, 2),
+            n: 16,
+            scheme,
+            backend,
+            threshold: 1e-6,
+            time_steps,
+            net_latency_us: 30,
+            net_jitter: 0.2,
+            max_iters: 50_000,
+            ..Default::default()
+        };
+        let rep = solve(&cfg).expect("solve failed");
+        for s in &rep.steps {
+            table.row(&[
+                scheme.name().into(),
+                s.step.to_string(),
+                fmt_secs(s.wall),
+                s.iterations.to_string(),
+                s.snapshots.to_string(),
+                format!("{:.2e}", s.reported_norm),
+                if s.step + 1 == rep.steps.len() {
+                    format!("{:.2e}", rep.r_n)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        assert!(
+            rep.r_n < 1e-5,
+            "{} solve failed verification: r_n = {}",
+            scheme.name(),
+            rep.r_n
+        );
+    }
+    table.print();
+    println!("\nall solves verified: r_n < 1e-5 against the sequential operator");
+}

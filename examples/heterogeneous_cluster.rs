@@ -1,0 +1,69 @@
+//! Heterogeneous-cluster scenario: the paper's core motivation — under
+//! unbalanced workload (per-iteration compute jitter, slow nodes) the
+//! classical scheme pays the *maximum* over all ranks every iteration,
+//! while asynchronous iterations let every rank proceed at its own pace.
+//!
+//! Sweeps the compute-jitter amplitude on a half-slowed 8-rank world and
+//! prints the sync/async gap.
+//!
+//! Run: cargo run --release --example heterogeneous_cluster
+
+use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::harness::{fmt_secs, Table};
+use jack2::solver::solve;
+
+fn main() {
+    println!(
+        "heterogeneous cluster: 8 ranks, half at 0.6x speed, latency 20µs,\n\
+         200µs/iter base compute, sweeping per-iteration compute jitter\n"
+    );
+    let mut table = Table::new(&[
+        "work jitter", "sync time", "sync iters", "async time", "async iters", "snaps", "speedup",
+    ]);
+
+    for jitter in [0.0, 0.5, 1.0, 2.0] {
+        let speeds: Vec<f64> = (0..8).map(|r| if r % 2 == 1 { 0.6 } else { 1.0 }).collect();
+        let mut times = Vec::new();
+        let mut iters = Vec::new();
+        let mut snaps = 0;
+        for scheme in [Scheme::Overlapping, Scheme::Asynchronous] {
+            let cfg = ExperimentConfig {
+                process_grid: (2, 2, 2),
+                n: 16,
+                scheme,
+                backend: Backend::Native,
+                threshold: 1e-6,
+                net_latency_us: 20,
+                net_jitter: 0.3,
+                rank_speed: speeds.clone(),
+                work_floor_us: 200, // paper-scale subdomain compute
+                work_jitter: jitter,
+                max_iters: 400_000,
+                ..Default::default()
+            };
+            let rep = solve(&cfg).expect("solve failed");
+            assert!(rep.r_n < 1e-5, "verification failed: {}", rep.r_n);
+            times.push(rep.steps[0].wall);
+            iters.push(rep.iterations());
+            if scheme.is_async() {
+                snaps = rep.snapshots();
+            }
+        }
+        table.row(&[
+            format!("{jitter:.2}"),
+            fmt_secs(times[0]),
+            iters[0].to_string(),
+            fmt_secs(times[1]),
+            iters[1].to_string(),
+            snaps.to_string(),
+            format!("{:.2}x", times[0].as_secs_f64() / times[1].as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper §4.2): asynchronous iterations stay well ahead\n\
+         of the synchronous scheme at every imbalance level (the paper's\n\
+         widening-with-scale effect is the p-axis of `repro table1`, where the\n\
+         per-iteration max-over-ranks penalty grows with the world size)"
+    );
+}

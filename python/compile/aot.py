@@ -1,0 +1,109 @@
+"""AOT path: lower the L2 sweep to HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts/model.hlo.txt
+    python -m compile.aot --outdir ../artifacts --shapes 16x16x16,32x32x32
+
+Each artifact is accompanied by a ``manifest.json`` describing input
+order, shapes and dtype, which ``rust/src/runtime`` consumes.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import sweep, sweep_k, sweep_shapes
+
+jax.config.update("jax_enable_x64", True)
+
+DEFAULT_SHAPES = ["8x8x8", "16x16x16", "24x24x24"]
+# Inner-sweep variants compiled per shape (k=1 is the plain sweep; k>1
+# amortizes PJRT dispatch over k block-relaxation sweeps).
+DEFAULT_KS = [1, 4]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_sweep(nx: int, ny: int, nz: int, k: int = 1) -> str:
+    fn = sweep if k == 1 else functools.partial(sweep_k, k=k)
+    lowered = jax.jit(fn).lower(*sweep_shapes(nx, ny, nz))
+    return to_hlo_text(lowered)
+
+
+def artifact_name(nx: int, ny: int, nz: int, k: int = 1) -> str:
+    suffix = "" if k == 1 else f"_k{k}"
+    return f"sweep_{nx}x{ny}x{nz}{suffix}_f64.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", help="single-artifact mode: output path for the "
+                    "first shape (kept for Makefile freshness tracking)")
+    ap.add_argument("--outdir", default=None,
+                    help="directory for the full artifact set + manifest")
+    ap.add_argument("--shapes", default=",".join(DEFAULT_SHAPES),
+                    help="comma-separated NXxNYxNZ block shapes")
+    args = ap.parse_args()
+
+    outdir = args.outdir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    os.makedirs(outdir, exist_ok=True)
+
+    shapes = []
+    for spec in args.shapes.split(","):
+        nx, ny, nz = (int(t) for t in spec.lower().split("x"))
+        shapes.append((nx, ny, nz))
+
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "f64",
+        "coeff_len": 8,
+        "inputs": ["u", "xm", "xp", "ym", "yp", "zm", "zp", "rhs", "coeffs"],
+        "outputs": ["u_new", "res"],
+        "coeff_layout": ["c_d", "c_xm", "c_xp", "c_ym", "c_yp", "c_zm",
+                         "c_zp", "omega"],
+        "entries": [],
+    }
+
+    for i, (nx, ny, nz) in enumerate(shapes):
+        for k in DEFAULT_KS:
+            text = lower_sweep(nx, ny, nz, k)
+            name = artifact_name(nx, ny, nz, k)
+            path = os.path.join(outdir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {"shape": [nx, ny, nz], "k": k, "file": name,
+                 "hlo_bytes": len(text)}
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+            if i == 0 and k == 1 and args.out:
+                # Makefile freshness sentinel: a copy of the first artifact
+                # at the requested path.
+                with open(args.out, "w") as f:
+                    f.write(text)
+                print(f"wrote {args.out} (sentinel)")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: tiled 7-point convection-diffusion Jacobi sweep.
+
+The kernel consumes a halo-padded block ``u_pad`` of shape
+(nx+2, ny+2, nz+2), the RHS block (nx, ny, nz) and the length-8
+coefficient vector, and produces the relaxed block ``u_new`` and the
+pointwise residual ``res`` (both (nx, ny, nz)).
+
+Tiling strategy (TPU adaptation, see DESIGN.md §Hardware-Adaptation):
+the grid iterates over x-slabs of height ``bx``; each program instance
+loads a (bx+2, ny+2, nz+2) window of the padded array into VMEM-resident
+registers via ``pl.load`` with dynamic slices (windows of adjacent
+programs overlap by the 2-cell halo, which BlockSpec cannot express, so
+the padded array is left un-blocked and sliced explicitly). The stencil
+itself is evaluated as six shifted whole-slab slices — pure VPU
+element-wise work, no gathers. Arithmetic intensity is ~13 flops per
+8-byte point, so the kernel is bandwidth-bound by design; the roofline
+estimate lives in DESIGN.md §Perf.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness is the objective of this build (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import COEFF_LEN
+
+DEFAULT_BLOCK_X = 8
+
+
+def _sweep_kernel(u_pad_ref, rhs_ref, coeffs_ref, u_new_ref, res_ref, *, bx, nx):
+    """One grid step: relax x-slab [i*bx, i*bx+sl) of the block.
+
+    u_pad_ref : (nx+2, ny+2, nz+2)  halo-padded input, un-blocked
+    rhs_ref   : (sl, ny, nz)        RHS slab (BlockSpec-tiled over x)
+    coeffs_ref: (8,)                stencil coefficients, un-blocked
+    u_new_ref : (sl, ny, nz)        output slab
+    res_ref   : (sl, ny, nz)        output residual slab
+    """
+    i = pl.program_id(0)
+    x0 = i * bx  # slab origin in block coordinates
+
+    # Load the (bx+2)-high padded window around the slab. bx divides nx
+    # (enforced by sweep_pallas), so the window never runs out of range.
+    win = u_pad_ref[pl.dslice(x0, bx + 2), :, :]
+
+    c = coeffs_ref[...]
+    c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega = (
+        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+    )
+
+    u = win[1:-1, 1:-1, 1:-1]
+    neigh = (
+        c_xm * win[:-2, 1:-1, 1:-1]
+        + c_xp * win[2:, 1:-1, 1:-1]
+        + c_ym * win[1:-1, :-2, 1:-1]
+        + c_yp * win[1:-1, 2:, 1:-1]
+        + c_zm * win[1:-1, 1:-1, :-2]
+        + c_zp * win[1:-1, 1:-1, 2:]
+    )
+    rhs = rhs_ref[...]
+    u_star = (rhs - neigh) / c_d
+    res = c_d * (u_star - u)
+    u_new = u + omega * (u_star - u)
+
+    u_new_ref[...] = u_new
+    res_ref[...] = res
+
+
+def sweep_pallas(u_pad, rhs, coeffs, *, block_x=DEFAULT_BLOCK_X):
+    """Tiled Pallas Jacobi sweep. Returns (u_new, res).
+
+    u_pad  : (nx+2, ny+2, nz+2)
+    rhs    : (nx, ny, nz)
+    coeffs : (COEFF_LEN,)
+    """
+    nx, ny, nz = rhs.shape
+    assert u_pad.shape == (nx + 2, ny + 2, nz + 2), (u_pad.shape, rhs.shape)
+    assert coeffs.shape == (COEFF_LEN,)
+    # Largest slab height <= block_x that divides nx, so every grid step
+    # sees a full slab (overlapping pl.load windows cannot be ragged).
+    bx = next(b for b in range(min(block_x, nx), 0, -1) if nx % b == 0)
+    grid = (nx // bx,)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((nx, ny, nz), u_pad.dtype),
+        jax.ShapeDtypeStruct((nx, ny, nz), u_pad.dtype),
+    ]
+    kernel = functools.partial(_sweep_kernel, bx=bx, nx=nx)
+    u_new, res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # padded input and coeffs stay whole (overlapping windows);
+            # rhs is genuinely blocked over x.
+            pl.BlockSpec(u_pad.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((bx, ny, nz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((COEFF_LEN,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bx, ny, nz), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bx, ny, nz), lambda i: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(u_pad, rhs, coeffs)
+    return u_new, res

@@ -1,0 +1,73 @@
+"""L2 JAX model: one subdomain's compute phase for the iterative solve.
+
+This is the function the paper's Listing 6 calls ``Compute``: given the
+subdomain's current solution block, the six halo faces most recently
+received from neighbours (JACK2 ``recv_buf``), and the RHS block, it
+performs one (weighted-)Jacobi relaxation sweep of the backward-Euler
+convection-diffusion operator and returns
+
+    (u_new, res)
+
+where ``res`` is the pointwise residual ``b - A u`` (the paper's
+``res_vec_buf``). The hot loop is the L1 Pallas kernel in
+``kernels/stencil.py``; everything else (halo embedding) fuses into the
+same HLO module at AOT time.
+
+Python never runs on the request path: ``aot.py`` lowers ``sweep`` once
+per block shape to HLO text and the Rust runtime executes it via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import pad_with_faces, stencil_coeffs, COEFF_LEN  # noqa: F401
+from .kernels.stencil import sweep_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+def sweep(u, xm, xp, ym, yp, zm, zp, rhs, coeffs):
+    """One relaxation sweep on a subdomain block.
+
+    u      : (nx, ny, nz)  current local solution block
+    xm..zp : halo faces — xm/xp (ny,nz), ym/yp (nx,nz), zm/zp (nx,ny);
+             zeros on physical (Dirichlet) boundaries
+    rhs    : (nx, ny, nz)  right-hand side block
+    coeffs : (8,)          [c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega]
+
+    Returns (u_new, res), both (nx, ny, nz).
+    """
+    u_pad = pad_with_faces(u, xm, xp, ym, yp, zm, zp)
+    return sweep_pallas(u_pad, rhs, coeffs)
+
+
+def sweep_k(u, xm, xp, ym, yp, zm, zp, rhs, coeffs, k=4):
+    """`k` relaxation sweeps with *frozen* halo faces (block relaxation).
+
+    Asynchronous iterative methods permit any number of local updates
+    between exchanges (the paper's model (4) with repeated i in P^k);
+    performing them inside one AOT executable amortizes the PJRT call
+    overhead over k sweeps. Returns (u_new, res) where res is the residual
+    of the final sweep. k is static (unrolled at lowering time).
+    """
+    res = None
+    for _ in range(k):
+        u_pad = pad_with_faces(u, xm, xp, ym, yp, zm, zp)
+        u, res = sweep_pallas(u_pad, rhs, coeffs)
+    return u, res
+
+
+def sweep_shapes(nx, ny, nz, dtype=jnp.float64):
+    """ShapeDtypeStructs for ``sweep`` inputs, in argument order."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((nx, ny, nz), dtype),   # u
+        s((ny, nz), dtype),       # xm
+        s((ny, nz), dtype),       # xp
+        s((nx, nz), dtype),       # ym
+        s((nx, nz), dtype),       # yp
+        s((nx, ny), dtype),       # zm
+        s((nx, ny), dtype),       # zp
+        s((nx, ny, nz), dtype),   # rhs
+        s((COEFF_LEN,), dtype),   # coeffs
+    )

@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps block shapes and dtypes; fixed cases pin down the
+analytic identities (residual identity, fixed-point property, Dirichlet
+boundary handling).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.ref import (  # noqa: E402
+    COEFF_LEN,
+    pad_with_faces,
+    stencil_coeffs,
+    sweep_padded_ref,
+    sweep_ref,
+)
+from compile.kernels.stencil import sweep_pallas  # noqa: E402
+
+
+def rand_case(rng, nx, ny, nz, dtype):
+    u = rng.standard_normal((nx, ny, nz)).astype(dtype)
+    faces = (
+        rng.standard_normal((ny, nz)).astype(dtype),
+        rng.standard_normal((ny, nz)).astype(dtype),
+        rng.standard_normal((nx, nz)).astype(dtype),
+        rng.standard_normal((nx, nz)).astype(dtype),
+        rng.standard_normal((nx, ny)).astype(dtype),
+        rng.standard_normal((nx, ny)).astype(dtype),
+    )
+    rhs = rng.standard_normal((nx, ny, nz)).astype(dtype)
+    coeffs = np.asarray(
+        stencil_coeffs(0.01, 0.5, (0.1, -0.2, 0.3), 1.0 / (nx + 1)), dtype
+    )
+    return u, faces, rhs, coeffs
+
+
+def tol(dtype):
+    return dict(rtol=1e-12, atol=1e-12) if dtype == np.float64 else dict(
+        rtol=1e-4, atol=1e-4
+    )
+
+
+shape_st = st.tuples(
+    st.integers(2, 10), st.integers(2, 10), st.integers(2, 10)
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_st, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float64, np.float32]))
+def test_kernel_matches_ref(shape, seed, dtype):
+    nx, ny, nz = shape
+    rng = np.random.default_rng(seed)
+    u, faces, rhs, coeffs = rand_case(rng, nx, ny, nz, dtype)
+    u_pad = pad_with_faces(jnp.asarray(u), *map(jnp.asarray, faces))
+    got_u, got_r = sweep_pallas(u_pad, jnp.asarray(rhs), jnp.asarray(coeffs))
+    want_u, want_r = sweep_padded_ref(u_pad, jnp.asarray(rhs), jnp.asarray(coeffs))
+    np.testing.assert_allclose(got_u, want_u, **tol(dtype))
+    np.testing.assert_allclose(got_r, want_r, **tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=shape_st, seed=st.integers(0, 2**31 - 1),
+       block_x=st.integers(1, 12))
+def test_kernel_block_size_invariant(shape, seed, block_x):
+    """The tiling block size must not change the numerics."""
+    nx, ny, nz = shape
+    rng = np.random.default_rng(seed)
+    u, faces, rhs, coeffs = rand_case(rng, nx, ny, nz, np.float64)
+    u_pad = pad_with_faces(jnp.asarray(u), *map(jnp.asarray, faces))
+    a_u, a_r = sweep_pallas(u_pad, jnp.asarray(rhs), jnp.asarray(coeffs),
+                            block_x=block_x)
+    b_u, b_r = sweep_pallas(u_pad, jnp.asarray(rhs), jnp.asarray(coeffs),
+                            block_x=nx)
+    np.testing.assert_allclose(a_u, b_u, rtol=1e-14, atol=1e-14)
+    np.testing.assert_allclose(a_r, b_r, rtol=1e-14, atol=1e-14)
+
+
+def test_residual_identity():
+    """res == c_d * (u_star - u) == b - A u, checked against explicit A u."""
+    rng = np.random.default_rng(0)
+    nx, ny, nz = 5, 6, 7
+    u, faces, rhs, coeffs = rand_case(rng, nx, ny, nz, np.float64)
+    u_new, res = sweep_ref(*map(jnp.asarray, (u, *faces, rhs, coeffs)))
+
+    # explicit A u via the padded array
+    up = np.asarray(pad_with_faces(jnp.asarray(u), *map(jnp.asarray, faces)))
+    c = coeffs
+    Au = (
+        c[0] * up[1:-1, 1:-1, 1:-1]
+        + c[1] * up[:-2, 1:-1, 1:-1]
+        + c[2] * up[2:, 1:-1, 1:-1]
+        + c[3] * up[1:-1, :-2, 1:-1]
+        + c[4] * up[1:-1, 2:, 1:-1]
+        + c[5] * up[1:-1, 1:-1, :-2]
+        + c[6] * up[1:-1, 1:-1, 2:]
+    )
+    np.testing.assert_allclose(res, rhs - Au, rtol=1e-12, atol=1e-12)
+
+
+def test_fixed_point_has_zero_residual():
+    """If u solves A u = b exactly, the sweep is a no-op and res == 0."""
+    rng = np.random.default_rng(1)
+    nx, ny, nz = 6, 5, 4
+    u, faces, _, coeffs = rand_case(rng, nx, ny, nz, np.float64)
+    up = np.asarray(pad_with_faces(jnp.asarray(u), *map(jnp.asarray, faces)))
+    c = coeffs
+    b = (  # construct b := A u so u is the exact solution
+        c[0] * up[1:-1, 1:-1, 1:-1]
+        + c[1] * up[:-2, 1:-1, 1:-1]
+        + c[2] * up[2:, 1:-1, 1:-1]
+        + c[3] * up[1:-1, :-2, 1:-1]
+        + c[4] * up[1:-1, 2:, 1:-1]
+        + c[5] * up[1:-1, 1:-1, :-2]
+        + c[6] * up[1:-1, 1:-1, 2:]
+    )
+    u_new, res = sweep_ref(*map(jnp.asarray, (u, *faces, b, coeffs)))
+    np.testing.assert_allclose(res, np.zeros_like(u), atol=1e-10)
+    np.testing.assert_allclose(u_new, u, atol=1e-10)
+
+
+def test_dirichlet_zero_faces():
+    """Zero faces == physical boundary: interior stencil must not see them
+    as anything but zeros."""
+    rng = np.random.default_rng(2)
+    nx = ny = nz = 4
+    u = rng.standard_normal((nx, ny, nz))
+    rhs = rng.standard_normal((nx, ny, nz))
+    coeffs = np.asarray(stencil_coeffs(0.01, 0.5, (0.1, -0.2, 0.3), 0.2))
+    z2, z3 = np.zeros((ny, nz)), np.zeros((nx, nz))
+    z4 = np.zeros((nx, ny))
+    u_new, res = sweep_ref(*map(jnp.asarray,
+                                (u, z2, z2, z3, z3, z4, z4, rhs, coeffs)))
+    # hand-rolled dense check on one corner point (0,0,0):
+    c = coeffs
+    neigh = c[2] * u[1, 0, 0] + c[4] * u[0, 1, 0] + c[6] * u[0, 0, 1]
+    want = u[0, 0, 0] + c[7] * ((rhs[0, 0, 0] - neigh) / c[0] - u[0, 0, 0])
+    np.testing.assert_allclose(u_new[0, 0, 0], want, rtol=1e-13)
+
+
+def test_sweep_is_affine_in_inputs():
+    """Jacobi sweep is affine: sweep(alpha*(u,faces,rhs)) == alpha*sweep for
+    the linear part (omega fixed). Checks with zero inputs as the offset."""
+    rng = np.random.default_rng(3)
+    nx, ny, nz = 4, 4, 4
+    u, faces, rhs, coeffs = rand_case(rng, nx, ny, nz, np.float64)
+    alpha = 2.5
+    a_u, a_r = sweep_ref(*map(jnp.asarray, (u, *faces, rhs, coeffs)))
+    s_u, s_r = sweep_ref(
+        *map(jnp.asarray,
+             (alpha * u, *(alpha * f for f in faces), alpha * rhs, coeffs))
+    )
+    np.testing.assert_allclose(s_u, alpha * np.asarray(a_u), rtol=1e-12)
+    np.testing.assert_allclose(s_r, alpha * np.asarray(a_r), rtol=1e-12)
+
+
+def test_coeff_vector_layout():
+    c = np.asarray(stencil_coeffs(0.01, 0.5, (0.1, -0.2, 0.3), 0.5, omega=0.9))
+    assert c.shape == (COEFF_LEN,)
+    inv_h2, inv_2h = 4.0, 1.0
+    np.testing.assert_allclose(c[0], 100.0 + 6 * 0.5 * inv_h2)
+    np.testing.assert_allclose(c[1], -0.5 * inv_h2 - 0.1 * inv_2h)
+    np.testing.assert_allclose(c[2], -0.5 * inv_h2 + 0.1 * inv_2h)
+    np.testing.assert_allclose(c[3], -0.5 * inv_h2 + 0.2 * inv_2h)
+    np.testing.assert_allclose(c[4], -0.5 * inv_h2 - 0.2 * inv_2h)
+    np.testing.assert_allclose(c[5], -0.5 * inv_h2 - 0.3 * inv_2h)
+    np.testing.assert_allclose(c[6], -0.5 * inv_h2 + 0.3 * inv_2h)
+    np.testing.assert_allclose(c[7], 0.9)

@@ -1,0 +1,83 @@
+"""L2 model tests: sweep shapes, Jacobi convergence on a real operator,
+and AOT lowering produces loadable HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.model import sweep, sweep_shapes  # noqa: E402
+from compile.kernels.ref import stencil_coeffs, sweep_ref  # noqa: E402
+from compile import aot  # noqa: E402
+
+
+def make_inputs(nx, ny, nz, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = sweep_shapes(nx, ny, nz)
+    arrs = [jnp.asarray(rng.standard_normal(s.shape)) for s in shapes[:-1]]
+    coeffs = stencil_coeffs(0.01, 0.5, (0.1, -0.2, 0.3), 1.0 / (nx + 1))
+    return arrs + [coeffs]
+
+
+def test_sweep_shapes_and_dtypes():
+    args = make_inputs(4, 5, 6)
+    u_new, res = sweep(*args)
+    assert u_new.shape == (4, 5, 6)
+    assert res.shape == (4, 5, 6)
+    assert u_new.dtype == jnp.float64
+
+
+def test_sweep_equals_ref():
+    args = make_inputs(6, 6, 6, seed=7)
+    got_u, got_r = sweep(*args)
+    want_u, want_r = sweep_ref(*args)
+    np.testing.assert_allclose(got_u, want_u, rtol=1e-13, atol=1e-13)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-13, atol=1e-13)
+
+
+def test_jacobi_iteration_converges_single_domain():
+    """Iterating the sweep on a single subdomain (all-zero faces =
+    Dirichlet cube) must converge: the backward-Euler operator is strictly
+    diagonally dominant, so Jacobi contracts."""
+    nx = ny = nz = 8
+    h = 1.0 / (nx + 1)
+    coeffs = stencil_coeffs(0.01, 0.5, (0.1, -0.2, 0.3), h)
+    rng = np.random.default_rng(11)
+    rhs = jnp.asarray(rng.standard_normal((nx, ny, nz)))
+    u = jnp.zeros((nx, ny, nz))
+    z2 = jnp.zeros((ny, nz))
+    z3 = jnp.zeros((nx, nz))
+    z4 = jnp.zeros((nx, ny))
+    norms = []
+    for _ in range(60):
+        u, res = sweep(u, z2, z2, z3, z3, z4, z4, rhs, coeffs)
+        norms.append(float(jnp.max(jnp.abs(res))))
+    assert norms[-1] < 1e-10 * norms[0]
+    # monotone-ish decay: the tail must be strictly below the head
+    assert norms[30] < norms[0] * 1e-3
+
+
+def test_aot_emits_parsable_hlo_text(tmp_path):
+    text = aot.lower_sweep(4, 4, 4)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # text must mention the parameter count we promise in the manifest
+    for i in range(9):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--outdir", str(tmp_path), "--shapes", "4x4x4"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    import json
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["entries"][0]["shape"] == [4, 4, 4]
+    hlo = (tmp_path / man["entries"][0]["file"]).read_text()
+    assert "HloModule" in hlo

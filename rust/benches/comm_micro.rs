@@ -1,0 +1,89 @@
+//! E5 — §3.3 claim: "message delivering is quickly performed by
+//! exchanging memory addresses instead of copying whole buffers"
+//! (Algorithm 4, step 3). `cargo bench --bench comm_micro`.
+//!
+//! Micro-benchmarks: address-swap vs copy delivery across buffer sizes,
+//! plus raw simmpi point-to-point throughput.
+
+use jack2::harness::{Bencher, Table};
+use jack2::jack::buffers::BufferSet;
+use jack2::simmpi::{NetworkModel, WorldConfig};
+
+fn bench_delivery(b: &Bencher) {
+    println!("\ndelivery: address swap (JACK2, Alg. 4) vs element copy");
+    let mut t = Table::new(&["buffer f64s", "swap / msg", "copy / msg", "ratio"]);
+    for size in [64usize, 1024, 16 * 1024, 256 * 1024] {
+        let n_msgs = 1000;
+        // swap delivery
+        let mut bufs = BufferSet::new(&[size], &[size]).unwrap();
+        let mut pool: Vec<Vec<f64>> = (0..n_msgs).map(|i| vec![i as f64; size]).collect();
+        let swap = b.run(&format!("swap {size}"), || {
+            for _ in 0..n_msgs {
+                let incoming = pool.pop().unwrap();
+                let old = bufs.deliver(0, incoming).unwrap();
+                pool.insert(0, old); // recycle, as the transport pool would
+            }
+        });
+        // copy delivery
+        let mut user = vec![0.0f64; size];
+        let src: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64; size]).collect();
+        let copy = b.run(&format!("copy {size}"), || {
+            for i in 0..n_msgs {
+                user.copy_from_slice(&src[i % 8]);
+            }
+        });
+        std::hint::black_box(&user);
+        let per_swap = swap.mean().as_nanos() as f64 / n_msgs as f64;
+        let per_copy = copy.mean().as_nanos() as f64 / n_msgs as f64;
+        t.row(&[
+            size.to_string(),
+            format!("{per_swap:.0}ns"),
+            format!("{per_copy:.0}ns"),
+            format!("{:.1}x", per_copy / per_swap.max(1.0)),
+        ]);
+    }
+    t.print();
+}
+
+fn bench_p2p_rate(b: &Bencher) {
+    println!("\nsimmpi point-to-point throughput (zero-latency model)");
+    let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
+    for size in [8usize, 256, 4096] {
+        let n = 20_000;
+        let st = b.run(&format!("p2p {size}"), || {
+            let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+            let (_w, mut eps) = jack2::simmpi::World::new(cfg);
+            let e0 = eps.remove(0);
+            let mut e1 = eps.remove(0);
+            let h = std::thread::spawn(move || {
+                for _ in 0..n {
+                    e1.isend(0, 1, vec![1.0; size]).unwrap();
+                }
+            });
+            let mut got = 0;
+            while got < n {
+                if e0.try_match(1, 1).is_some() {
+                    got += 1;
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            h.join().unwrap();
+        });
+        let secs = st.mean().as_secs_f64();
+        let rate = n as f64 / secs;
+        t.row(&[
+            size.to_string(),
+            format!("{rate:.0}"),
+            format!("{:.1}", rate * size as f64 * 8.0 / 1e6),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("comm_micro bench (E5)");
+    bench_delivery(&b);
+    bench_p2p_rate(&b);
+}

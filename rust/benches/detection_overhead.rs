@@ -1,0 +1,20 @@
+//! E4 — §4.2 claim: the snapshot-based convergence detection has low
+//! overhead, and more snapshots tend to improve the termination delay.
+//! `cargo bench --bench detection_overhead`.
+
+use jack2::experiments::overhead;
+
+fn main() {
+    let fast = std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 8 } else { 12 };
+    println!("detection_overhead bench (E4), n = {n}");
+    let row = overhead::run(n).expect("overhead run failed");
+    let sweep = overhead::snapshot_frequency_sweep(n).expect("sweep failed");
+    overhead::print(&row, &sweep);
+
+    println!(
+        "\npaper claim: low overhead — measured {:+.1}% (paper reports the \
+         detection cost as unnoticeable in Table 1)",
+        row.overhead_frac * 100.0
+    );
+}

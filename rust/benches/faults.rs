@@ -1,0 +1,20 @@
+//! E9 — resilience to transient faults (paper introduction: async
+//! iterations "naturally self-adapt to ... resource failures").
+//! `cargo bench --bench faults`.
+
+use jack2::experiments::faults;
+
+fn main() {
+    println!("faults bench (E9)");
+    let rows = faults::run().expect("faults run failed");
+    faults::print(&rows);
+
+    let base = &rows[0];
+    let worst = rows.last().unwrap();
+    println!(
+        "\nfault sensitivity: sync degrades {:.2}x, async degrades {:.2}x \
+         (paper shape: async is the robust one)",
+        worst.sync_time.as_secs_f64() / base.sync_time.as_secs_f64(),
+        worst.async_time.as_secs_f64() / base.async_time.as_secs_f64()
+    );
+}

@@ -1,0 +1,26 @@
+//! E7 — Algorithms 1–3 compared under latency and imbalance: the trivial
+//! scheme pays a dedicated communication phase, the overlapping scheme
+//! hides it, asynchronous iterations also stop waiting for the slowest.
+//! `cargo bench --bench schemes`.
+
+use jack2::experiments::schemes;
+
+fn main() {
+    println!("schemes bench (E7)");
+    for (latency, slow) in [(50u64, 1.0f64), (200, 1.0), (200, 0.4)] {
+        let rows = schemes::run(latency, slow).expect("schemes run failed");
+        schemes::print(&rows, latency, slow);
+        let trivial = rows[0].time.as_secs_f64();
+        let overlap = rows[1].time.as_secs_f64();
+        let asynch = rows[2].time.as_secs_f64();
+        println!(
+            "  trivial/overlapping = {:.2}x, overlapping/async = {:.2}x",
+            trivial / overlap,
+            overlap / asynch
+        );
+    }
+    println!(
+        "\npaper claims (§2.1): overlapping < trivial in time; async fastest \
+         under imbalance"
+    );
+}

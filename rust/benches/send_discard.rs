@@ -1,0 +1,17 @@
+//! E6 — §3.3 claim: discarding sends on busy channels (Alg. 6) prevents
+//! pending-request pile-up and stale iterates.
+//! `cargo bench --bench send_discard`.
+
+use jack2::experiments::staleness;
+
+fn main() {
+    println!("send_discard bench (E6)");
+    let (yes, no) = staleness::run().expect("staleness run failed");
+    staleness::print(&yes, &no);
+
+    println!(
+        "\npaper claim: without discarding, \"the number of pending MPI sending \
+         requests may quickly increase, which would yield much more delayed \
+         iterations data\" — traffic ratio above demonstrates the pile-up."
+    );
+}

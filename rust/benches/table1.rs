@@ -1,0 +1,51 @@
+//! E1 — regenerates the paper's Table 1 (Jacobi vs asynchronous
+//! relaxation across world sizes). `cargo bench --bench table1`.
+//!
+//! Paper reference rows (Altix ICE ≤ 420 cores, Bullx ≥ 512 cores):
+//!
+//! |    p | Jacobi time | async time | # Iter. | # Snaps. | speedup |
+//! |------|-------------|------------|---------|----------|---------|
+//! |  120 |         490 |        491 |  127081 |        9 |   1.00x |
+//! |  240 |         281 |        250 |  129031 |       20 |   1.12x |
+//! |  420 |         183 |        154 |  131046 |        7 |   1.19x |
+//! |  512 |          36 |         26 |   80611 |       20 |   1.38x |
+//! | 1024 |          50 |         26 |  135595 |       24 |   1.92x |
+//! | 2048 |          90 |         39 |  312520 |       46 |   2.31x |
+//! | 4096 |         226 |         57 |  736287 |       90 |   3.96x |
+//!
+//! The laptop-scale reproduction keeps the *shape*: async ≥ sync
+//! everywhere, the gap widening as the world grows (latency + imbalance
+//! grow with p, as on the paper's fabric).
+
+use jack2::config::Backend;
+use jack2::experiments::table1;
+
+fn main() {
+    let fast = std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1");
+    let points = table1::default_sweep(fast);
+    println!(
+        "table1 bench: {} scale points, native backend, threshold 1e-6",
+        points.len()
+    );
+    let rows = table1::run(&points, Backend::Native, 1e-6).expect("table1 run failed");
+    table1::print(&rows);
+
+    // Shape assertions (who wins, how the gap moves).
+    let speedups: Vec<f64> = rows
+        .chunks(2)
+        .map(|c| c[0].time.as_secs_f64() / c[1].time.as_secs_f64())
+        .collect();
+    println!("\nspeedups by scale point: {speedups:?}");
+    let wins = speedups.iter().filter(|&&s| s > 1.0).count();
+    println!(
+        "async wins at {wins}/{} scale points (paper: wins at every p >= 240)",
+        speedups.len()
+    );
+    if speedups.len() >= 2 {
+        let grow = speedups.last().unwrap() > speedups.first().unwrap();
+        println!(
+            "gap {} with scale (paper: widens from 1.0x at p=120 to 4.0x at p=4096)",
+            if grow { "widens" } else { "does not widen" }
+        );
+    }
+}

@@ -1,0 +1,347 @@
+//! Experiment configuration: serializable descriptions of a run, consumed
+//! by the `repro` CLI, the benches and the examples.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Which parallel iterative scheme to run (paper Algorithms 1–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Algorithm 1: compute, then blocking exchange.
+    Trivial,
+    /// Algorithm 2: reception posted at iteration start (overlap).
+    Overlapping,
+    /// Algorithm 3: asynchronous iterations.
+    Asynchronous,
+}
+
+impl Scheme {
+    pub fn is_async(self) -> bool {
+        matches!(self, Scheme::Asynchronous)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Trivial => "trivial",
+            Scheme::Overlapping => "overlapping",
+            Scheme::Asynchronous => "asynchronous",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "trivial" => Ok(Scheme::Trivial),
+            "overlapping" | "sync" | "jacobi" => Ok(Scheme::Overlapping),
+            "asynchronous" | "async" => Ok(Scheme::Asynchronous),
+            _ => Err(Error::Config(format!("unknown scheme {s:?}"))),
+        }
+    }
+}
+
+/// Which compute backend evaluates the subdomain sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust stencil (fast; used by the large parameter sweeps).
+    Native,
+    /// AOT-compiled XLA executable via PJRT (proves the 3-layer stack).
+    Xla,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            _ => Err(Error::Config(format!("unknown backend {s:?}"))),
+        }
+    }
+}
+
+/// Full description of one solve experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Process grid (px, py, pz); world size is the product.
+    pub process_grid: (usize, usize, usize),
+    /// Global grid points per axis (interior), e.g. 48 for a 48³ cube.
+    pub n: usize,
+    /// Diffusion coefficient ν.
+    pub nu: f64,
+    /// Convection velocity a.
+    pub a: (f64, f64, f64),
+    /// Time-step size δt.
+    pub dt: f64,
+    /// Number of backward-Euler time steps.
+    pub time_steps: usize,
+    /// Residual threshold for convergence.
+    pub threshold: f64,
+    /// Iteration scheme.
+    pub scheme: Scheme,
+    /// Compute backend.
+    pub backend: Backend,
+    /// Max iterations per time step (safety valve).
+    pub max_iters: u64,
+    /// Network base latency in µs.
+    pub net_latency_us: u64,
+    /// Network jitter fraction.
+    pub net_jitter: f64,
+    /// Per-link bandwidth in bytes/s (0 = infinite). Finite values make
+    /// queued sends serialize on the wire (paper §3.3's pending-request
+    /// pile-up).
+    pub net_bandwidth: f64,
+    /// Transient-fault model: every Nth message suffers an extra delay
+    /// (0 = off). The paper's "resource failures" motivation.
+    pub net_spike_every: u64,
+    /// Extra delay (µs) applied by the fault model.
+    pub net_spike_us: u64,
+    /// Per-rank speed factors (empty = homogeneous).
+    pub rank_speed: Vec<f64>,
+    /// RNG seed (network jitter).
+    pub seed: u64,
+    /// In-flight reception requests per channel in async mode (Alg. 5).
+    pub max_recv_requests: usize,
+    /// Inner relaxation sweeps per compute phase (block relaxation;
+    /// 1 = plain Jacobi). The XLA backend fuses these into one PJRT call
+    /// when a matching k-artifact exists.
+    pub inner_sweeps: usize,
+    /// Norm type: 2.0 = Euclidean, < 1 = max-norm (paper Listing 3).
+    pub norm_type: f32,
+    /// Minimum emulated compute time per iteration (µs). Models the
+    /// paper's large subdomains (≈50k points/rank at p=120) without their
+    /// memory cost: the driver sleeps up to this floor before applying
+    /// the per-rank speed factor. 0 = pure native compute time.
+    pub work_floor_us: u64,
+    /// Per-iteration compute jitter fraction (OS noise / workload
+    /// imbalance): each iteration's floor is scaled by `1 + U(0, jitter)`.
+    /// Synchronous schemes pay the max over all ranks every iteration;
+    /// asynchronous iterations absorb it — the paper's core motivation.
+    pub work_jitter: f64,
+    /// Discard sends on busy channels (Alg. 6). Disabling is the E6
+    /// ablation: every send is queued, delivering ever-staler data.
+    pub send_discard: bool,
+    /// Run convergence detection. Disabling is the E4 ablation: the async
+    /// loop runs exactly `max_iters` iterations with zero detection
+    /// traffic, isolating the detection overhead.
+    pub detect: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            process_grid: (2, 2, 2),
+            n: 16,
+            nu: 0.5,
+            a: (0.1, -0.2, 0.3),
+            dt: 0.01,
+            time_steps: 1,
+            threshold: 1e-6,
+            scheme: Scheme::Overlapping,
+            backend: Backend::Native,
+            max_iters: 200_000,
+            net_latency_us: 20,
+            net_jitter: 0.1,
+            net_bandwidth: 0.0,
+            net_spike_every: 0,
+            net_spike_us: 0,
+            rank_speed: Vec::new(),
+            seed: 0xC0FFEE,
+            max_recv_requests: 4,
+            inner_sweeps: 1,
+            norm_type: 0.0, // max-norm, as in the paper's Table 1
+            work_floor_us: 0,
+            work_jitter: 0.0,
+            send_discard: true,
+            detect: true,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn world_size(&self) -> usize {
+        self.process_grid.0 * self.process_grid.1 * self.process_grid.2
+    }
+
+    /// Serialize to JSON (experiment records).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let (px, py, pz) = self.process_grid;
+        m.insert(
+            "process_grid".into(),
+            Json::Arr(vec![
+                Json::Num(px as f64),
+                Json::Num(py as f64),
+                Json::Num(pz as f64),
+            ]),
+        );
+        m.insert("n".into(), Json::Num(self.n as f64));
+        m.insert("nu".into(), Json::Num(self.nu));
+        m.insert(
+            "a".into(),
+            Json::Arr(vec![
+                Json::Num(self.a.0),
+                Json::Num(self.a.1),
+                Json::Num(self.a.2),
+            ]),
+        );
+        m.insert("dt".into(), Json::Num(self.dt));
+        m.insert("time_steps".into(), Json::Num(self.time_steps as f64));
+        m.insert("threshold".into(), Json::Num(self.threshold));
+        m.insert("scheme".into(), Json::Str(self.scheme.name().into()));
+        m.insert("backend".into(), Json::Str(self.backend.name().into()));
+        m.insert("max_iters".into(), Json::Num(self.max_iters as f64));
+        m.insert(
+            "net_latency_us".into(),
+            Json::Num(self.net_latency_us as f64),
+        );
+        m.insert("net_jitter".into(), Json::Num(self.net_jitter));
+        m.insert("net_bandwidth".into(), Json::Num(self.net_bandwidth));
+        m.insert(
+            "net_spike_every".into(),
+            Json::Num(self.net_spike_every as f64),
+        );
+        m.insert("net_spike_us".into(), Json::Num(self.net_spike_us as f64));
+        m.insert(
+            "rank_speed".into(),
+            Json::Arr(self.rank_speed.iter().map(|&x| Json::Num(x)).collect()),
+        );
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert(
+            "max_recv_requests".into(),
+            Json::Num(self.max_recv_requests as f64),
+        );
+        m.insert("inner_sweeps".into(), Json::Num(self.inner_sweeps as f64));
+        m.insert("norm_type".into(), Json::Num(self.norm_type as f64));
+        m.insert(
+            "work_floor_us".into(),
+            Json::Num(self.work_floor_us as f64),
+        );
+        m.insert("work_jitter".into(), Json::Num(self.work_jitter));
+        m.insert("send_discard".into(), Json::Bool(self.send_discard));
+        m.insert("detect".into(), Json::Bool(self.detect));
+        Json::Obj(m)
+    }
+
+    /// Deserialize from JSON produced by [`Self::to_json`]; missing keys
+    /// fall back to defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = ExperimentConfig::default();
+        if let Some(g) = v.get("process_grid").and_then(|x| x.as_arr()) {
+            if g.len() != 3 {
+                return Err(Error::Config("process_grid must have 3 entries".into()));
+            }
+            c.process_grid = (
+                g[0].as_usize().unwrap_or(1),
+                g[1].as_usize().unwrap_or(1),
+                g[2].as_usize().unwrap_or(1),
+            );
+        }
+        if let Some(n) = v.get("n").and_then(|x| x.as_usize()) {
+            c.n = n;
+        }
+        if let Some(x) = v.get("nu").and_then(|x| x.as_f64()) {
+            c.nu = x;
+        }
+        if let Some(a) = v.get("a").and_then(|x| x.as_arr()) {
+            c.a = (
+                a[0].as_f64().unwrap_or(0.0),
+                a[1].as_f64().unwrap_or(0.0),
+                a[2].as_f64().unwrap_or(0.0),
+            );
+        }
+        if let Some(x) = v.get("dt").and_then(|x| x.as_f64()) {
+            c.dt = x;
+        }
+        if let Some(x) = v.get("time_steps").and_then(|x| x.as_usize()) {
+            c.time_steps = x;
+        }
+        if let Some(x) = v.get("threshold").and_then(|x| x.as_f64()) {
+            c.threshold = x;
+        }
+        if let Some(s) = v.get("scheme").and_then(|x| x.as_str()) {
+            c.scheme = Scheme::parse(s)?;
+        }
+        if let Some(s) = v.get("backend").and_then(|x| x.as_str()) {
+            c.backend = Backend::parse(s)?;
+        }
+        if let Some(x) = v.get("max_iters").and_then(|x| x.as_f64()) {
+            c.max_iters = x as u64;
+        }
+        if let Some(x) = v.get("net_latency_us").and_then(|x| x.as_f64()) {
+            c.net_latency_us = x as u64;
+        }
+        if let Some(x) = v.get("net_jitter").and_then(|x| x.as_f64()) {
+            c.net_jitter = x;
+        }
+        if let Some(x) = v.get("net_bandwidth").and_then(|x| x.as_f64()) {
+            c.net_bandwidth = x;
+        }
+        if let Some(x) = v.get("net_spike_every").and_then(|x| x.as_f64()) {
+            c.net_spike_every = x as u64;
+        }
+        if let Some(x) = v.get("net_spike_us").and_then(|x| x.as_f64()) {
+            c.net_spike_us = x as u64;
+        }
+        if let Some(a) = v.get("rank_speed").and_then(|x| x.as_arr()) {
+            c.rank_speed = a.iter().filter_map(|x| x.as_f64()).collect();
+        }
+        if let Some(x) = v.get("seed").and_then(|x| x.as_f64()) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("max_recv_requests").and_then(|x| x.as_usize()) {
+            c.max_recv_requests = x;
+        }
+        if let Some(x) = v.get("inner_sweeps").and_then(|x| x.as_usize()) {
+            c.inner_sweeps = x.max(1);
+        }
+        if let Some(x) = v.get("norm_type").and_then(|x| x.as_f64()) {
+            c.norm_type = x as f32;
+        }
+        if let Some(x) = v.get("work_floor_us").and_then(|x| x.as_f64()) {
+            c.work_floor_us = x as u64;
+        }
+        if let Some(x) = v.get("work_jitter").and_then(|x| x.as_f64()) {
+            c.work_jitter = x;
+        }
+        if let Some(Json::Bool(b)) = v.get("send_discard") {
+            c.send_discard = *b;
+        }
+        if let Some(Json::Bool(b)) = v.get("detect") {
+            c.detect = *b;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_roundtrips_json() {
+        let c = ExperimentConfig::default();
+        let s = json::write(&c.to_json());
+        let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(d.world_size(), 8);
+        assert_eq!(d.scheme, Scheme::Overlapping);
+        assert_eq!(d.n, c.n);
+        assert_eq!(d.threshold, c.threshold);
+    }
+
+    #[test]
+    fn scheme_names_and_parse() {
+        assert_eq!(Scheme::Trivial.name(), "trivial");
+        assert!(Scheme::Asynchronous.is_async());
+        assert!(!Scheme::Overlapping.is_async());
+        assert_eq!(Scheme::parse("async").unwrap(), Scheme::Asynchronous);
+        assert!(Scheme::parse("nope").is_err());
+        assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+    }
+}

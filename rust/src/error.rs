@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the jack2 crate.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid communicator / graph / buffer configuration.
+    Config(String),
+    /// A simmpi endpoint was used after the world shut down, or a peer
+    /// disappeared.
+    Transport(String),
+    /// Protocol violation detected (e.g. snapshot message outside a
+    /// snapshot round).
+    Protocol(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// I/O failure (artifact loading, experiment output).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,16 @@
+//! Experiment harnesses regenerating every table and figure of the paper
+//! (see DESIGN.md §5 for the experiment index). Each submodule exposes a
+//! `run(...)` that produces structured rows plus a printer; the `repro`
+//! CLI and the cargo benches are thin wrappers over these.
+
+pub mod faults;
+pub mod fig3;
+pub mod overhead;
+pub mod schemes;
+pub mod staleness;
+pub mod table1;
+
+/// Scale factor applied by `--fast` runs (CI-friendly).
+pub fn fast_mode() -> bool {
+    std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1")
+}

@@ -1,0 +1,62 @@
+//! E7 — paper §2.1: the trivial scheme (Alg. 1) pays a dedicated
+//! communication phase every iteration; the overlapping scheme (Alg. 2)
+//! hides it; asynchronous iterations (Alg. 3) additionally stop waiting
+//! for the slowest rank.
+
+use std::time::Duration;
+
+use crate::config::{Backend, ExperimentConfig, Scheme};
+use crate::error::Result;
+use crate::harness::{fmt_secs, Table};
+use crate::solver::solve;
+
+#[derive(Debug, Clone)]
+pub struct SchemeRow {
+    pub scheme: Scheme,
+    pub time: Duration,
+    pub iterations: u64,
+    pub r_n: f64,
+}
+
+/// Compare the three schemes under an imbalanced world.
+pub fn run(latency_us: u64, slow_factor: f64) -> Result<Vec<SchemeRow>> {
+    let mut out = Vec::new();
+    for scheme in [Scheme::Trivial, Scheme::Overlapping, Scheme::Asynchronous] {
+        let cfg = ExperimentConfig {
+            process_grid: (2, 2, 1),
+            n: 12,
+            scheme,
+            backend: Backend::Native,
+            threshold: 1e-6,
+            net_latency_us: latency_us,
+            net_jitter: 0.3,
+            rank_speed: vec![1.0, slow_factor, 1.0, slow_factor],
+            max_iters: 400_000,
+            ..Default::default()
+        };
+        let rep = solve(&cfg)?;
+        out.push(SchemeRow {
+            scheme,
+            time: rep.steps[0].wall,
+            iterations: rep.iterations(),
+            r_n: rep.r_n,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print(rows: &[SchemeRow], latency_us: u64, slow: f64) {
+    println!(
+        "\nE7 — iteration schemes (Algs. 1-3), latency {latency_us}µs, slow ranks at {slow}x"
+    );
+    let mut t = Table::new(&["scheme", "time", "iters", "r_n"]);
+    for r in rows {
+        t.row(&[
+            r.scheme.name().into(),
+            fmt_secs(r.time),
+            r.iterations.to_string(),
+            format!("{:.1e}", r.r_n),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,82 @@
+//! E6 — §3.3 claim: without busy-channel send discarding (Alg. 6), the
+//! number of pending send requests grows and the destination processes
+//! iterate on ever-staler data, hurting performance.
+
+use std::time::Duration;
+
+use crate::config::{Backend, ExperimentConfig, Scheme};
+use crate::error::Result;
+use crate::harness::{fmt_secs, Table};
+use crate::solver::solve;
+
+#[derive(Debug, Clone)]
+pub struct StalenessRow {
+    pub discard: bool,
+    pub time: Duration,
+    pub iterations: u64,
+    pub msgs_sent: u64,
+    pub sends_discarded: u64,
+    pub r_n: f64,
+}
+
+fn cfg(discard: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        process_grid: (2, 2, 1),
+        n: 12,
+        scheme: Scheme::Asynchronous,
+        backend: Backend::Native,
+        threshold: 1e-6,
+        // Slow, *finite-bandwidth* network: queued sends serialize on the
+        // wire, so skipping the discard makes later messages ever staler.
+        net_latency_us: 200,
+        net_jitter: 0.3,
+        net_bandwidth: 5_000_000.0, // 5 MB/s: a 1.2kB face ≈ 230µs wire
+        max_iters: 400_000,
+        send_discard: discard,
+        ..Default::default()
+    }
+}
+
+/// Run with and without send discarding.
+pub fn run() -> Result<(StalenessRow, StalenessRow)> {
+    let mut rows = Vec::new();
+    for discard in [true, false] {
+        let c = cfg(discard);
+        let rep = solve(&c)?;
+        let sent: u64 = rep.per_rank.iter().map(|m| m.msgs_sent).sum();
+        let disc: u64 = rep.per_rank.iter().map(|m| m.sends_discarded).sum();
+        rows.push(StalenessRow {
+            discard,
+            time: rep.steps[0].wall,
+            iterations: rep.iterations(),
+            msgs_sent: sent,
+            sends_discarded: disc,
+            r_n: rep.r_n,
+        });
+    }
+    let no = rows.pop().unwrap();
+    let yes = rows.pop().unwrap();
+    Ok((yes, no))
+}
+
+pub fn print(yes: &StalenessRow, no: &StalenessRow) {
+    println!("\nE6 — busy-channel send discarding (Alg. 6) ablation");
+    let mut t = Table::new(&[
+        "discard", "time", "iters", "msgs sent", "discarded", "r_n",
+    ]);
+    for r in [yes, no] {
+        t.row(&[
+            if r.discard { "on (paper)" } else { "off" }.into(),
+            fmt_secs(r.time),
+            r.iterations.to_string(),
+            r.msgs_sent.to_string(),
+            r.sends_discarded.to_string(),
+            format!("{:.1e}", r.r_n),
+        ]);
+    }
+    t.print();
+    println!(
+        "message traffic without discard: {:.1}x the discard-on traffic",
+        no.msgs_sent as f64 / yes.msgs_sent.max(1) as f64
+    );
+}

@@ -1,0 +1,161 @@
+//! E1 — paper Table 1: Jacobi vs. asynchronous relaxation across world
+//! sizes, reporting execution time, final residual r_n, and the iteration
+//! / snapshot counts.
+//!
+//! The paper ran 120–4096 cores on two clusters; here the cluster-size
+//! axis is reproduced at laptop scale (4–16 ranks) with the inter-node
+//! latency penalty growing with p, mirroring how the paper's Bullx runs
+//! (p ≥ 512) pay relatively more for communication. The expected *shape*
+//! (async gains grow with scale/latency/imbalance) is what EXPERIMENTS.md
+//! compares against the paper's absolute rows.
+
+use std::time::Duration;
+
+use crate::config::{Backend, ExperimentConfig, Scheme};
+use crate::error::Result;
+use crate::harness::{fmt_secs, Table};
+use crate::solver::solve;
+
+/// One scale point of the sweep.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub grid: (usize, usize, usize),
+    pub n: usize,
+    /// Base network latency (µs) — grows with p like the paper's fabric.
+    pub latency_us: u64,
+    /// Per-rank speed profile (heterogeneity grows with p).
+    pub speeds: Vec<f64>,
+    /// Emulated per-iteration compute floor (µs) — stands in for the
+    /// paper's ≈50k-point subdomains.
+    pub work_floor_us: u64,
+}
+
+/// One output row (one scheme at one scale point).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub p: usize,
+    pub n: usize,
+    pub scheme: Scheme,
+    pub time: Duration,
+    pub r_n: f64,
+    pub count: u64, // iterations (sync) or snapshots (async)
+    pub iterations: u64,
+}
+
+/// The default sweep: world sizes 4 → 16 with increasing latency and
+/// imbalance (the laptop-scale analogue of the paper's 120 → 4096 cores).
+pub fn default_sweep(fast: bool) -> Vec<ScalePoint> {
+    let mut pts = vec![
+        ScalePoint {
+            grid: (2, 2, 1),
+            n: 12,
+            latency_us: 20,
+            speeds: vec![],
+            work_floor_us: 150,
+        },
+        ScalePoint {
+            grid: (2, 2, 2),
+            n: 16,
+            latency_us: 50,
+            speeds: mixed_speeds(8, 0.6),
+            work_floor_us: 150,
+        },
+        ScalePoint {
+            grid: (3, 2, 2),
+            n: 18,
+            latency_us: 100,
+            speeds: mixed_speeds(12, 0.45),
+            work_floor_us: 150,
+        },
+        ScalePoint {
+            grid: (4, 2, 2),
+            n: 20,
+            latency_us: 200,
+            speeds: mixed_speeds(16, 0.35),
+            work_floor_us: 150,
+        },
+    ];
+    if fast {
+        pts.truncate(2);
+        for p in pts.iter_mut() {
+            p.n = p.n.min(10);
+        }
+    }
+    pts
+}
+
+/// Every other rank slowed to `slow` — the paper's heterogeneous nodes.
+fn mixed_speeds(p: usize, slow: f64) -> Vec<f64> {
+    (0..p)
+        .map(|r| if r % 2 == 1 { slow } else { 1.0 })
+        .collect()
+}
+
+/// Run the full Table-1 sweep.
+pub fn run(points: &[ScalePoint], backend: Backend, threshold: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for pt in points {
+        for scheme in [Scheme::Overlapping, Scheme::Asynchronous] {
+            let cfg = ExperimentConfig {
+                process_grid: pt.grid,
+                n: pt.n,
+                scheme,
+                backend,
+                threshold,
+                time_steps: 1,
+                net_latency_us: pt.latency_us,
+                net_jitter: 0.3,
+                rank_speed: pt.speeds.clone(),
+                work_floor_us: pt.work_floor_us,
+                max_iters: 400_000,
+                ..Default::default()
+            };
+            let rep = solve(&cfg)?;
+            rows.push(Row {
+                p: cfg.world_size(),
+                n: pt.n,
+                scheme,
+                time: rep.steps[0].wall,
+                r_n: rep.r_n,
+                count: if scheme.is_async() {
+                    rep.snapshots()
+                } else {
+                    rep.iterations()
+                },
+                iterations: rep.iterations(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Print rows in the paper's Table-1 layout.
+pub fn print(rows: &[Row]) {
+    println!("\nTable 1 analogue — Jacobi vs asynchronous relaxation");
+    println!("(time per time-step; residual threshold as configured)\n");
+    let mut t = Table::new(&[
+        "p", "n", "Jac time", "Jac r_n", "# Iter.", "Async time", "Async r_n", "# Snaps.",
+        "speedup",
+    ]);
+    let mut i = 0;
+    while i + 1 < rows.len() {
+        let (jac, asy) = (&rows[i], &rows[i + 1]);
+        assert_eq!(jac.p, asy.p);
+        t.row(&[
+            jac.p.to_string(),
+            jac.n.to_string(),
+            fmt_secs(jac.time),
+            format!("{:.1e}", jac.r_n),
+            jac.count.to_string(),
+            fmt_secs(asy.time),
+            format!("{:.1e}", asy.r_n),
+            asy.count.to_string(),
+            format!(
+                "{:.2}x",
+                jac.time.as_secs_f64() / asy.time.as_secs_f64().max(1e-12)
+            ),
+        ]);
+        i += 2;
+    }
+    t.print();
+}

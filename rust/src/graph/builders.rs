@@ -1,0 +1,179 @@
+//! Whole-world graph constructors (consistent per-rank views).
+
+use super::CommGraph;
+use crate::simmpi::Rank;
+use crate::util::Rng64;
+
+/// Bidirectional ring of `p` ranks.
+pub fn ring_graph(p: usize) -> Vec<CommGraph> {
+    (0..p)
+        .map(|r| {
+            let mut nb = Vec::new();
+            if p > 1 {
+                nb.push((r + p - 1) % p);
+                if p > 2 {
+                    nb.push((r + 1) % p);
+                } else if r == 0 {
+                    // p == 2: single distinct neighbour
+                }
+            }
+            if p == 2 {
+                nb = vec![1 - r];
+            }
+            CommGraph::symmetric(r, nb).expect("ring graph valid")
+        })
+        .collect()
+}
+
+/// Bidirectional line (path) of `p` ranks — always acyclic.
+pub fn line_graph(p: usize) -> Vec<CommGraph> {
+    (0..p)
+        .map(|r| {
+            let mut nb = Vec::new();
+            if r > 0 {
+                nb.push(r - 1);
+            }
+            if r + 1 < p {
+                nb.push(r + 1);
+            }
+            CommGraph::symmetric(r, nb).expect("line graph valid")
+        })
+        .collect()
+}
+
+/// Fully connected graph of `p` ranks.
+pub fn complete_graph(p: usize) -> Vec<CommGraph> {
+    (0..p)
+        .map(|r| {
+            let nb: Vec<Rank> = (0..p).filter(|&x| x != r).collect();
+            CommGraph::symmetric(r, nb).expect("complete graph valid")
+        })
+        .collect()
+}
+
+/// 3-D box-partition adjacency (paper Fig. 2): rank (i,j,k) in a
+/// `px × py × pz` process grid talks to its 6 face neighbours.
+pub fn grid3d_graphs(px: usize, py: usize, pz: usize) -> Vec<CommGraph> {
+    let idx = |i: usize, j: usize, k: usize| (i * py + j) * pz + k;
+    let mut out = Vec::with_capacity(px * py * pz);
+    for i in 0..px {
+        for j in 0..py {
+            for k in 0..pz {
+                let mut nb = Vec::new();
+                if i > 0 {
+                    nb.push(idx(i - 1, j, k));
+                }
+                if i + 1 < px {
+                    nb.push(idx(i + 1, j, k));
+                }
+                if j > 0 {
+                    nb.push(idx(i, j - 1, k));
+                }
+                if j + 1 < py {
+                    nb.push(idx(i, j + 1, k));
+                }
+                if k > 0 {
+                    nb.push(idx(i, j, k - 1));
+                }
+                if k + 1 < pz {
+                    nb.push(idx(i, j, k + 1));
+                }
+                out.push(CommGraph::symmetric(idx(i, j, k), nb).expect("grid graph valid"));
+            }
+        }
+    }
+    out
+}
+
+/// Random connected symmetric graph: a random spanning tree plus extra
+/// edges with probability `extra_p`. Reproducible given `seed`.
+pub fn random_connected(p: usize, extra_p: f64, seed: u64) -> Vec<CommGraph> {
+    let mut rng = Rng64::new(seed);
+    let mut adj = vec![std::collections::BTreeSet::new(); p];
+    // random tree: attach each node to a random earlier node
+    for r in 1..p {
+        let parent = rng.range_usize(0, r);
+        adj[r].insert(parent);
+        adj[parent].insert(r);
+    }
+    for a in 0..p {
+        for b in (a + 1)..p {
+            if !adj[a].contains(&b) && rng.bool(extra_p) {
+                adj[a].insert(b);
+                adj[b].insert(a);
+            }
+        }
+    }
+    adj.into_iter()
+        .enumerate()
+        .map(|(r, nb)| CommGraph::symmetric(r, nb.into_iter().collect()).expect("random graph"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{is_connected, validate_world};
+
+    #[test]
+    fn ring_is_valid_and_connected() {
+        for p in [1, 2, 3, 4, 9] {
+            let g = ring_graph(p);
+            validate_world(&g).unwrap();
+            assert!(is_connected(&g), "ring p={p}");
+        }
+    }
+
+    #[test]
+    fn line_is_valid_and_connected() {
+        for p in [1, 2, 5, 16] {
+            let g = line_graph(p);
+            validate_world(&g).unwrap();
+            assert!(is_connected(&g));
+            // endpoints have degree 1, middles degree 2
+            if p >= 3 {
+                assert_eq!(g[0].num_send(), 1);
+                assert_eq!(g[1].num_send(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn complete_has_full_degree() {
+        let g = complete_graph(5);
+        validate_world(&g).unwrap();
+        for v in &g {
+            assert_eq!(v.num_send(), 4);
+            assert_eq!(v.num_recv(), 4);
+        }
+    }
+
+    #[test]
+    fn grid3d_degrees() {
+        let g = grid3d_graphs(2, 3, 2);
+        assert_eq!(g.len(), 12);
+        validate_world(&g).unwrap();
+        assert!(is_connected(&g));
+        // corner rank (0,0,0) has exactly 3 neighbours
+        assert_eq!(g[0].num_send(), 3);
+        // interior of y-axis: (0,1,0) has 1(x)+2(y)+1(z) = 4
+        let idx = |i: usize, j: usize, k: usize| (i * 3 + j) * 2 + k;
+        assert_eq!(g[idx(0, 1, 0)].num_send(), 4);
+    }
+
+    #[test]
+    fn random_graphs_connected_and_valid() {
+        for seed in 0..10 {
+            let g = random_connected(12, 0.15, seed);
+            validate_world(&g).unwrap();
+            assert!(is_connected(&g), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn random_graph_reproducible() {
+        let a = random_connected(10, 0.3, 77);
+        let b = random_connected(10, 0.3, 77);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,202 @@
+//! Logical communication graphs.
+//!
+//! The paper's Listing 1: each process holds the ranks of its one-hop
+//! neighbours, with outgoing (`sneighb_rank`) and incoming
+//! (`rneighb_rank`) links explicitly distinguished. [`CommGraph`] is the
+//! per-rank view handed to [`crate::jack::JackComm::init_graph`];
+//! [`builders`] construct consistent per-rank views for whole worlds
+//! (rings, 3-D box partitions, random digraphs, …).
+
+pub mod builders;
+
+pub use builders::{complete_graph, grid3d_graphs, line_graph, random_connected, ring_graph};
+
+use crate::simmpi::Rank;
+use crate::{Error, Result};
+
+/// One rank's view of the communication graph (paper Listing 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommGraph {
+    rank: Rank,
+    /// Ranks this process sends to (outgoing links).
+    send_neighbors: Vec<Rank>,
+    /// Ranks this process receives from (incoming links).
+    recv_neighbors: Vec<Rank>,
+}
+
+impl CommGraph {
+    /// Build and validate a per-rank graph view.
+    pub fn new(rank: Rank, send_neighbors: Vec<Rank>, recv_neighbors: Vec<Rank>) -> Result<Self> {
+        for &n in send_neighbors.iter().chain(&recv_neighbors) {
+            if n == rank {
+                return Err(Error::Config(format!("rank {rank}: self-loop neighbor")));
+            }
+        }
+        if has_dup(&send_neighbors) || has_dup(&recv_neighbors) {
+            return Err(Error::Config(format!("rank {rank}: duplicate neighbor")));
+        }
+        Ok(CommGraph {
+            rank,
+            send_neighbors,
+            recv_neighbors,
+        })
+    }
+
+    /// Symmetric view: same neighbours on both directions.
+    pub fn symmetric(rank: Rank, neighbors: Vec<Rank>) -> Result<Self> {
+        CommGraph::new(rank, neighbors.clone(), neighbors)
+    }
+
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    /// `numb_sneighb` / `sneighb_rank` of Listing 1.
+    pub fn send_neighbors(&self) -> &[Rank] {
+        &self.send_neighbors
+    }
+
+    /// `numb_rneighb` / `rneighb_rank` of Listing 1.
+    pub fn recv_neighbors(&self) -> &[Rank] {
+        &self.recv_neighbors
+    }
+
+    pub fn num_send(&self) -> usize {
+        self.send_neighbors.len()
+    }
+
+    pub fn num_recv(&self) -> usize {
+        self.recv_neighbors.len()
+    }
+
+    /// Index of `rank` in the outgoing link list.
+    pub fn send_link_of(&self, rank: Rank) -> Option<usize> {
+        self.send_neighbors.iter().position(|&r| r == rank)
+    }
+
+    /// Index of `rank` in the incoming link list.
+    pub fn recv_link_of(&self, rank: Rank) -> Option<usize> {
+        self.recv_neighbors.iter().position(|&r| r == rank)
+    }
+
+    /// Neighbours in the *undirected* closure (union of both directions,
+    /// deduplicated, sorted). The spanning tree and the leader-election
+    /// norm operate on this view.
+    pub fn undirected_neighbors(&self) -> Vec<Rank> {
+        let mut all: Vec<Rank> = self
+            .send_neighbors
+            .iter()
+            .chain(&self.recv_neighbors)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+}
+
+fn has_dup(v: &[Rank]) -> bool {
+    let mut s = v.to_vec();
+    s.sort_unstable();
+    s.windows(2).any(|w| w[0] == w[1])
+}
+
+/// Validate that a set of per-rank views is globally consistent: for every
+/// outgoing link i→j, rank j lists an incoming link from i, and vice versa.
+pub fn validate_world(graphs: &[CommGraph]) -> Result<()> {
+    for g in graphs {
+        if g.rank() >= graphs.len() {
+            return Err(Error::Config(format!("rank {} out of range", g.rank())));
+        }
+        for &j in g.send_neighbors() {
+            let peer = graphs
+                .get(j)
+                .ok_or_else(|| Error::Config(format!("neighbor {j} out of range")))?;
+            if peer.recv_link_of(g.rank()).is_none() {
+                return Err(Error::Config(format!(
+                    "link {}→{j} not mirrored as incoming at {j}",
+                    g.rank()
+                )));
+            }
+        }
+        for &j in g.recv_neighbors() {
+            let peer = graphs
+                .get(j)
+                .ok_or_else(|| Error::Config(format!("neighbor {j} out of range")))?;
+            if peer.send_link_of(g.rank()).is_none() {
+                return Err(Error::Config(format!(
+                    "link {j}→{} not mirrored as outgoing at {j}",
+                    g.rank()
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// True if the undirected closure of the graph set is connected (required
+/// for spanning-tree construction and convergence detection).
+pub fn is_connected(graphs: &[CommGraph]) -> bool {
+    if graphs.is_empty() {
+        return true;
+    }
+    let n = graphs.len();
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    while let Some(r) = stack.pop() {
+        for nb in graphs[r].undirected_neighbors() {
+            if nb < n && !seen[nb] {
+                seen[nb] = true;
+                stack.push(nb);
+            }
+        }
+    }
+    seen.into_iter().all(|s| s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_self_loop_and_dups() {
+        assert!(CommGraph::new(0, vec![0], vec![]).is_err());
+        assert!(CommGraph::new(0, vec![1, 1], vec![]).is_err());
+        assert!(CommGraph::new(0, vec![1], vec![2, 2]).is_err());
+    }
+
+    #[test]
+    fn link_lookup() {
+        let g = CommGraph::new(0, vec![3, 1], vec![2]).unwrap();
+        assert_eq!(g.send_link_of(1), Some(1));
+        assert_eq!(g.send_link_of(2), None);
+        assert_eq!(g.recv_link_of(2), Some(0));
+        assert_eq!(g.undirected_neighbors(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn validate_catches_unmirrored_link() {
+        let g0 = CommGraph::new(0, vec![1], vec![1]).unwrap();
+        let g1 = CommGraph::new(1, vec![0], vec![]).unwrap(); // missing incoming 0
+        assert!(validate_world(&[g0, g1]).is_err());
+    }
+
+    #[test]
+    fn validate_ok_for_asymmetric_digraph() {
+        // 0 → 1 only (plus 1 → 0 required for... no: digraph 0→1 alone)
+        let g0 = CommGraph::new(0, vec![1], vec![]).unwrap();
+        let g1 = CommGraph::new(1, vec![], vec![0]).unwrap();
+        validate_world(&[g0, g1]).unwrap();
+    }
+
+    #[test]
+    fn connectivity() {
+        let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+        let g1 = CommGraph::symmetric(1, vec![0]).unwrap();
+        let g2 = CommGraph::symmetric(2, vec![3]).unwrap();
+        let g3 = CommGraph::symmetric(3, vec![2]).unwrap();
+        assert!(is_connected(&[g0.clone(), g1.clone()]));
+        assert!(!is_connected(&[g0, g1, g2, g3]));
+    }
+}

@@ -1,0 +1,197 @@
+//! Micro-benchmark harness (offline replacement for criterion).
+//!
+//! Benches in `rust/benches/` are `harness = false` binaries that use
+//! [`Bencher`] for timed sections and [`Table`] to print paper-style rows.
+//! Statistics: warmup, then `samples` timed runs; mean / p50 / p95 reported.
+
+use std::time::{Duration, Instant};
+
+/// One timed measurement series.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    fn percentile(&self, q: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(0.5)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(0.95)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  (n={})",
+            self.name,
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Runs closures with warmup + repeated timed samples.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            samples: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup, samples }
+    }
+
+    /// Quick-mode bencher honouring `REPRO_BENCH_FAST=1` (used by CI and
+    /// `make test` so benches still execute end-to-end, just briefly).
+    pub fn from_env() -> Self {
+        if std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(0, 2)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f` repeatedly; the closure's return value is passed to a sink
+    /// so the optimizer cannot elide the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        Stats {
+            name: name.to_string(),
+            samples,
+        }
+    }
+}
+
+/// Fixed-width table printer for paper-style result rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("| {c:>w$} "));
+            }
+            s.push('|');
+            s
+        };
+        let header = line(&self.headers, &self.widths);
+        println!("{header}");
+        println!("{}", "-".repeat(header.len()));
+        for r in &self.rows {
+            println!("{}", line(r, &self.widths));
+        }
+    }
+}
+
+/// Format seconds with 3 significant digits (paper tables report seconds).
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats {
+            name: "t".into(),
+            samples: (1..=100).map(Duration::from_micros).collect(),
+        };
+        assert_eq!(s.p50(), Duration::from_micros(51)); // round(99*0.5)=50 -> s[50]
+        assert_eq!(s.p95(), Duration::from_micros(95)); // round(99*0.95)=94 -> s[94]
+        assert_eq!(s.mean(), Duration::from_nanos(50_500)); // (1+...+100)/100 = 50.5µs
+    }
+
+    #[test]
+    fn bencher_runs_expected_count() {
+        let mut n = 0;
+        let b = Bencher::new(3, 7);
+        let st = b.run("count", || n += 1);
+        assert_eq!(n, 10);
+        assert_eq!(st.samples.len(), 7);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["p", "time"]);
+        t.row(&["8".into(), "1.23".into()]);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(Duration::from_secs(120)), "120");
+        assert_eq!(fmt_secs(Duration::from_millis(1500)), "1.50");
+        assert_eq!(fmt_secs(Duration::from_micros(2500)), "2.50ms");
+        assert_eq!(fmt_secs(Duration::from_nanos(900)), "0.9us");
+    }
+}

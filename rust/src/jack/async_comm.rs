@@ -1,0 +1,170 @@
+//! Asynchronous data exchange — the paper's `JACKAsyncComm`.
+//!
+//! * **Reception (Algorithm 5)**: incoming channels stay continuously
+//!   open; each `Recv` call drains up to `max_recv_requests` arrived
+//!   messages per channel (the configurable reception-request count of
+//!   §3.3) and leaves the *most recent* one in the user buffer, so the
+//!   computation always uses the least-delayed data.
+//! * **Sending (Algorithm 6)**: a send is posted only if the previous one
+//!   on that channel has completed; otherwise the attempt is **discarded**
+//!   (the channel is busy — queueing would only deliver ever-staler data).
+
+use super::buffers::BufferSet;
+use super::messages::TAG_DATA;
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::metrics::RankMetrics;
+use crate::simmpi::{Endpoint, SendRequest};
+
+/// Non-blocking continuous exchange.
+#[derive(Debug)]
+pub struct AsyncComm {
+    /// In-flight send request per outgoing link (None = channel idle).
+    send_reqs: Vec<Option<SendRequest>>,
+    /// Max messages drained per channel per `Recv` call (Alg. 5's
+    /// `max_numb_request`).
+    pub max_recv_requests: usize,
+    /// Discard sends on busy channels (Alg. 6). `false` is the ablation
+    /// mode: every send is queued regardless (§3.3's counter-performance
+    /// scenario), measured by the `send_discard` bench.
+    pub discard: bool,
+}
+
+impl AsyncComm {
+    pub fn new(num_send_links: usize, max_recv_requests: usize) -> Self {
+        AsyncComm {
+            send_reqs: (0..num_send_links).map(|_| None).collect(),
+            max_recv_requests: max_recv_requests.max(1),
+            discard: true,
+        }
+    }
+
+    /// Algorithm 6: post one send per idle outgoing channel; discard on
+    /// busy channels.
+    pub fn send(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        metrics: &mut RankMetrics,
+    ) -> Result<()> {
+        for (l, &dst) in graph.send_neighbors().iter().enumerate() {
+            let busy = self.send_reqs[l].as_ref().is_some_and(|r| !r.test());
+            if busy && self.discard {
+                metrics.sends_discarded += 1;
+            } else {
+                self.send_reqs[l] = Some(ep.isend(dst, TAG_DATA, bufs.send[l].clone())?);
+                metrics.msgs_sent += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Algorithm 5: drain up to `max_recv_requests` arrived messages per
+    /// incoming channel; the latest lands in the user buffer. Never blocks.
+    pub fn recv(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &mut BufferSet,
+        metrics: &mut RankMetrics,
+    ) -> Result<()> {
+        for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+            for _ in 0..self.max_recv_requests {
+                match ep.try_match(src, TAG_DATA) {
+                    Some(data) => {
+                        bufs.deliver(l, data)?;
+                        metrics.msgs_delivered += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of outgoing channels currently busy (diagnostics).
+    pub fn busy_channels(&self) -> usize {
+        self.send_reqs
+            .iter()
+            .filter(|r| r.as_ref().is_some_and(|r| !r.test()))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CommGraph;
+    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use std::time::Duration;
+
+    fn pair_world(latency_us: u64) -> (crate::simmpi::World, Vec<Endpoint>) {
+        World::new(
+            WorldConfig::homogeneous(2)
+                .with_network(NetworkModel::uniform(latency_us, 0.0)),
+        )
+    }
+
+    #[test]
+    fn recv_never_blocks_and_keeps_latest() {
+        let (_w, mut eps) = pair_world(0);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+        let mut bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut comm = AsyncComm::new(1, 8);
+        let mut m = RankMetrics::default();
+
+        // nothing arrived: recv returns immediately, buffer untouched
+        comm.recv(&mut e0, &g0, &mut bufs, &mut m).unwrap();
+        assert_eq!(bufs.recv[0], vec![0.0]);
+
+        // three arrivals: latest wins
+        for v in 1..=3 {
+            e1.isend(0, TAG_DATA, vec![v as f64]).unwrap();
+        }
+        comm.recv(&mut e0, &g0, &mut bufs, &mut m).unwrap();
+        assert_eq!(bufs.recv[0], vec![3.0]);
+        assert_eq!(m.msgs_delivered, 3);
+    }
+
+    #[test]
+    fn recv_respects_max_requests() {
+        let (_w, mut eps) = pair_world(0);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+        let mut bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut comm = AsyncComm::new(1, 2);
+        let mut m = RankMetrics::default();
+        for v in 1..=5 {
+            e1.isend(0, TAG_DATA, vec![v as f64]).unwrap();
+        }
+        comm.recv(&mut e0, &g0, &mut bufs, &mut m).unwrap();
+        assert_eq!(bufs.recv[0], vec![2.0], "only 2 drained");
+        comm.recv(&mut e0, &g0, &mut bufs, &mut m).unwrap();
+        assert_eq!(bufs.recv[0], vec![4.0]);
+    }
+
+    #[test]
+    fn send_discards_on_busy_channel() {
+        // 50 ms latency: the first send stays in flight across the burst.
+        let (_w, mut eps) = pair_world(50_000);
+        let mut e0 = eps.remove(0);
+        let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+        let bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut comm = AsyncComm::new(1, 1);
+        let mut m = RankMetrics::default();
+        for _ in 0..5 {
+            comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+        }
+        assert_eq!(m.msgs_sent, 1, "first send posted");
+        assert_eq!(m.sends_discarded, 4, "rest discarded while busy");
+        assert_eq!(comm.busy_channels(), 1);
+        // after the latency passes, the channel frees up
+        std::thread::sleep(Duration::from_millis(60));
+        comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+        assert_eq!(m.msgs_sent, 2);
+    }
+}

@@ -1,0 +1,449 @@
+//! Asynchronous convergence detection — the paper's `JACKAsyncConv` +
+//! `JACKSnapshot` (Savari–Bertsekas snapshot protocol, Algorithms 7–9).
+//!
+//! The protocol runs in *rounds* (one round = one snapshot = one entry of
+//! the paper's "# Snaps." column):
+//!
+//! 1. **Coordination phase** (on the spanning tree): local convergence is
+//!    notified from the leaves towards the root. A leaf notifies its
+//!    parent as soon as its `lconv` flag is armed; an internal node when,
+//!    additionally, all of its children have notified.
+//! 2. **Snapshot phase** (on the original communication graph): under the
+//!    same conditions the *root* instead takes its local snapshot and
+//!    sends snapshot-marked copies of its send buffers on every outgoing
+//!    link (Alg. 7). A non-root rank takes its local snapshot when it is
+//!    locally converged *and* has received at least one snapshot message
+//!    (Alg. 8); snapshot faces are stored per incoming link (Alg. 9).
+//! 3. **Residual evaluation**: once a rank holds its snapshot solution and
+//!    a snapshot face for *every* incoming link, the isolated global
+//!    vector is swapped into the user's solution and reception buffers
+//!    (the paper's address exchange), so the *next ordinary iteration*
+//!    computes `f(x̂)` and hence the residual of the snapshot vector with
+//!    no extra user code. During that one iteration the async receive
+//!    path is frozen so the evaluation stays consistent.
+//! 4. **Verdict**: snapshot-residual partials convergecast to the root on
+//!    the spanning tree; the root compares the global norm against the
+//!    threshold and broadcasts *terminate* or *resume*; resume starts the
+//!    next round.
+//!
+//! All control messages carry the round number: ranks can lag one round
+//! behind their neighbours (between a verdict broadcast and its
+//! processing), so early next-round messages are buffered, never dropped.
+
+use std::collections::HashMap;
+
+#[cfg(debug_assertions)]
+pub(crate) fn dbg_log(args: std::fmt::Arguments<'_>) {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static T0: OnceLock<Instant> = OnceLock::new();
+    static ON: OnceLock<bool> = OnceLock::new();
+    if *ON.get_or_init(|| std::env::var("JACK2_DEBUG_SS").is_ok()) {
+        let t0 = T0.get_or_init(Instant::now);
+        eprintln!("[{:>9.3}ms] {args}", t0.elapsed().as_secs_f64() * 1e3);
+    }
+}
+
+macro_rules! dbg_ss {
+    ($($t:tt)*) => {
+        #[cfg(debug_assertions)]
+        dbg_log(format_args!($($t)*));
+    };
+}
+
+use super::buffers::BufferSet;
+use super::messages::{
+    decode_snapshot, encode_snapshot, TAG_CONV_NOTIFY, TAG_NORM_PARTIAL, TAG_SNAPSHOT, TAG_TERM,
+};
+use super::norm::NormKind;
+use super::spanning_tree::SpanningTree;
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::metrics::{Event, RankMetrics, Trace};
+use crate::simmpi::Endpoint;
+
+/// Outcome of the latest completed detection round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Verdict {
+    pub round: u64,
+    pub norm: f64,
+    pub terminated: bool,
+}
+
+/// Per-rank state machine of the snapshot-based termination protocol.
+#[derive(Debug)]
+pub struct AsyncConv {
+    kind: NormKind,
+    threshold: f64,
+    tree: SpanningTree,
+    /// Current round (starts at 1; equals 1 + completed rounds).
+    round: u64,
+
+    // -- coordination phase --
+    /// Highest round for which each child (indexed as in `tree.children`)
+    /// has notified local convergence.
+    child_notified_round: Vec<u64>,
+    sent_notify: bool,
+
+    // -- snapshot phase --
+    ss_taken: bool,
+    ss_sol: Option<Vec<f64>>,
+    /// Snapshot face per incoming link (indexed as in the comm graph).
+    ss_faces: Vec<Option<Vec<f64>>>,
+    /// Early faces for future rounds: (round, link) → face.
+    pending_faces: HashMap<(u64, usize), Vec<f64>>,
+    /// Snapshot swapped into user buffers; next compute evaluates f(x̂).
+    swapped: bool,
+    /// Residual of the snapshot vector harvested from the user's res_vec.
+    own_partial: Option<f64>,
+
+    // -- verdict phase --
+    /// Norm partial per child for the current round.
+    child_partial: Vec<Option<f64>>,
+    pending_partials: HashMap<(u64, usize), f64>,
+    sent_partial: bool,
+
+    /// Latest completed-round outcome.
+    pub verdict: Option<Verdict>,
+}
+
+impl AsyncConv {
+    pub fn new(kind: NormKind, threshold: f64, tree: SpanningTree, num_recv_links: usize) -> Self {
+        let n_children = tree.children.len();
+        AsyncConv {
+            kind,
+            threshold,
+            tree,
+            round: 1,
+            child_notified_round: vec![0; n_children],
+            sent_notify: false,
+            ss_taken: false,
+            ss_sol: None,
+            ss_faces: (0..num_recv_links).map(|_| None).collect(),
+            pending_faces: HashMap::new(),
+            swapped: false,
+            own_partial: None,
+            child_partial: vec![None; n_children],
+            pending_partials: HashMap::new(),
+            sent_partial: false,
+            verdict: None,
+        }
+    }
+
+    pub fn terminated(&self) -> bool {
+        self.verdict.is_some_and(|v| v.terminated)
+    }
+
+    pub fn global_norm(&self) -> Option<f64> {
+        self.verdict.map(|v| v.norm)
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Drain all protocol messages and advance the state machine.
+    /// `lconv` is the user's local-convergence flag (paper `lconv_flag`).
+    pub fn poll(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        sol_vec: &[f64],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        trace: &mut Trace,
+    ) -> Result<()> {
+        if self.terminated() {
+            return Ok(());
+        }
+        self.drain_messages(ep, graph, trace)?;
+        if self.terminated() {
+            return Ok(());
+        }
+
+        // Coordination: notify towards the root / trigger the snapshot.
+        let all_children_notified = self
+            .child_notified_round
+            .iter()
+            .all(|&r| r >= self.round);
+        if lconv && all_children_notified && !self.sent_notify && !self.ss_taken {
+            if self.tree.is_root() {
+                // Algorithm 7: the root triggers the snapshot phase.
+                self.take_snapshot(ep, graph, bufs, sol_vec, metrics)?;
+                trace.record(Event::SnapshotTriggered);
+            } else {
+                dbg_ss!("rank {} notifies parent, round {}", ep.rank(), self.round);
+                ep.isend(
+                    self.tree.parent.expect("non-root has parent"),
+                    TAG_CONV_NOTIFY,
+                    vec![self.round as f64],
+                )?;
+                self.sent_notify = true;
+            }
+        }
+
+        // Algorithm 8: non-root local snapshot once locally converged and
+        // at least one snapshot message received this round.
+        if !self.tree.is_root()
+            && !self.ss_taken
+            && lconv
+            && self.ss_faces.iter().any(|f| f.is_some())
+        {
+            self.take_snapshot(ep, graph, bufs, sol_vec, metrics)?;
+            trace.record(Event::SnapshotLocalTaken);
+        }
+
+        // Verdict: once the snapshot residual is harvested and all child
+        // partials arrived, convergecast / decide.
+        if let Some(own) = self.own_partial {
+            if !self.sent_partial && self.child_partial.iter().all(|p| p.is_some()) {
+                let mut acc = own;
+                for p in self.child_partial.iter().flatten() {
+                    acc = self.kind.combine(acc, *p);
+                }
+                if self.tree.is_root() {
+                    let norm = self.kind.finalize(acc);
+                    let terminated = norm < self.threshold;
+                    let flag = if terminated { 1.0 } else { 0.0 };
+                    for &c in &self.tree.children.clone() {
+                        ep.isend(c, TAG_TERM, vec![self.round as f64, norm, flag])?;
+                    }
+                    self.finish_round(norm, terminated, trace);
+                } else {
+                    ep.isend(
+                        self.tree.parent.expect("non-root has parent"),
+                        TAG_NORM_PARTIAL,
+                        vec![self.round as f64, acc],
+                    )?;
+                    self.sent_partial = true;
+                    metrics.norm_reductions += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// If a completed snapshot is ready, swap the isolated global vector
+    /// into the user buffers (paper's address exchange) and return `true`;
+    /// the caller must then freeze ordinary delivery for one iteration.
+    pub fn try_deliver_snapshot(
+        &mut self,
+        bufs: &mut BufferSet,
+        sol_vec: &mut Vec<f64>,
+    ) -> Result<bool> {
+        if self.terminated() || self.swapped || !self.ss_taken {
+            return Ok(false);
+        }
+        if !self.ss_faces.iter().all(|f| f.is_some()) {
+            return Ok(false);
+        }
+        let ss_sol = self
+            .ss_sol
+            .take()
+            .ok_or_else(|| Error::Protocol("snapshot taken but no solution stored".into()))?;
+        if ss_sol.len() != sol_vec.len() {
+            return Err(Error::Protocol(format!(
+                "snapshot solution size {} != solution size {}",
+                ss_sol.len(),
+                sol_vec.len()
+            )));
+        }
+        *sol_vec = ss_sol;
+        for (l, face) in self.ss_faces.iter_mut().enumerate() {
+            let face = face.take().expect("checked complete");
+            bufs.deliver(l, face)?;
+        }
+        self.swapped = true;
+        Ok(true)
+    }
+
+    /// Harvest the residual of the snapshot vector from the user's
+    /// residual block (call right after the compute that followed the
+    /// snapshot swap).
+    pub fn harvest_residual(&mut self, res_vec: &[f64]) {
+        if self.swapped && self.own_partial.is_none() {
+            self.own_partial = Some(self.kind.partial(res_vec));
+        }
+    }
+
+    /// True while the snapshot-residual iteration is pending: ordinary
+    /// async delivery must stay frozen so `f(x̂)` is evaluated on the
+    /// snapshot vector exactly.
+    pub fn freeze_recv(&self) -> bool {
+        self.swapped && self.own_partial.is_none()
+    }
+
+    fn take_snapshot(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        sol_vec: &[f64],
+        metrics: &mut RankMetrics,
+    ) -> Result<()> {
+        dbg_ss!("rank {} takes snapshot, round {}", ep.rank(), self.round);
+        // ss_sol_vec_buf := sol_vec_buf ; ss_send_buf := send_buf
+        self.ss_sol = Some(sol_vec.to_vec());
+        for (l, &dst) in graph.send_neighbors().iter().enumerate() {
+            ep.isend(dst, TAG_SNAPSHOT, encode_snapshot(self.round, &bufs.send[l]))?;
+        }
+        self.ss_taken = true;
+        metrics.snapshots += 1;
+        Ok(())
+    }
+
+    fn drain_messages(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        trace: &mut Trace,
+    ) -> Result<()> {
+        // Convergence notifications from children.
+        for (ci, &c) in self.tree.children.clone().iter().enumerate() {
+            while let Some(msg) = ep.try_match(c, TAG_CONV_NOTIFY) {
+                let r = msg[0] as u64;
+                dbg_ss!("rank {} got notify round {r} from child {c}", ep.rank());
+                if r > self.child_notified_round[ci] {
+                    self.child_notified_round[ci] = r;
+                }
+            }
+            while let Some(msg) = ep.try_match(c, TAG_NORM_PARTIAL) {
+                let r = msg[0] as u64;
+                if r == self.round {
+                    self.child_partial[ci] = Some(msg[1]);
+                } else if r > self.round {
+                    self.pending_partials.insert((r, ci), msg[1]);
+                }
+            }
+        }
+        // Snapshot faces from incoming links.
+        for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+            while let Some(msg) = ep.try_match(src, TAG_SNAPSHOT) {
+                let (r, face) = decode_snapshot(msg);
+                dbg_ss!(
+                    "rank {} <- src {}: ss face round {r}, own round {}",
+                    ep.rank(),
+                    src,
+                    self.round
+                );
+                if r == self.round && self.ss_faces[l].is_none() {
+                    self.ss_faces[l] = Some(face);
+                } else if r > self.round {
+                    self.pending_faces.entry((r, l)).or_insert(face);
+                }
+                // stale rounds dropped
+            }
+        }
+        // Verdict from the parent.
+        if let Some(p) = self.tree.parent {
+            while let Some(msg) = ep.try_match(p, TAG_TERM) {
+                let r = msg[0] as u64;
+                if r != self.round {
+                    return Err(Error::Protocol(format!(
+                        "rank {}: verdict for round {r} while in round {}",
+                        ep.rank(),
+                        self.round
+                    )));
+                }
+                let norm = msg[1];
+                let terminated = msg[2] != 0.0;
+                let flag = if terminated { 1.0 } else { 0.0 };
+                for &c in &self.tree.children.clone() {
+                    ep.isend(c, TAG_TERM, vec![r as f64, norm, flag])?;
+                }
+                self.finish_round(norm, terminated, trace);
+                if terminated {
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-arm the detector after a terminated round (next backward-Euler
+    /// time step): clears the verdict and opens a fresh round. Round
+    /// numbers stay monotone across time steps so stale control messages
+    /// can never be mistaken for current ones.
+    pub fn reopen(&mut self) {
+        debug_assert!(self.terminated(), "reopen is for terminated detectors");
+        self.verdict = None;
+        self.reset_round_state();
+    }
+
+    fn finish_round(&mut self, norm: f64, terminated: bool, trace: &mut Trace) {
+        self.verdict = Some(Verdict {
+            round: self.round,
+            norm,
+            terminated,
+        });
+        trace.record(if terminated {
+            Event::GlobalConvergence { norm }
+        } else {
+            Event::SnapshotComplete { norm }
+        });
+        if terminated {
+            return;
+        }
+        trace.record(Event::Resume);
+        self.reset_round_state();
+    }
+
+    /// Advance to the next round and seed it from any early messages.
+    fn reset_round_state(&mut self) {
+        self.round += 1;
+        self.sent_notify = false;
+        self.ss_taken = false;
+        self.ss_sol = None;
+        self.swapped = false;
+        self.own_partial = None;
+        self.sent_partial = false;
+        for p in self.child_partial.iter_mut() {
+            *p = None;
+        }
+        let round = self.round;
+        for (l, f) in self.ss_faces.iter_mut().enumerate() {
+            *f = self.pending_faces.remove(&(round, l));
+        }
+        for (ci, cp) in self.child_partial.iter_mut().enumerate() {
+            if let Some(v) = self.pending_partials.remove(&(round, ci)) {
+                *cp = Some(v);
+            }
+        }
+        self.pending_faces.retain(|(r, _), _| *r > round);
+        self.pending_partials.retain(|(r, _), _| *r > round);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdict_accessors() {
+        let tree = SpanningTree::solo();
+        let mut c = AsyncConv::new(NormKind::Max, 1e-6, tree, 0);
+        assert!(!c.terminated());
+        assert_eq!(c.global_norm(), None);
+        assert_eq!(c.round(), 1);
+        let mut trace = Trace::disabled();
+        c.finish_round(0.5, false, &mut trace);
+        assert_eq!(c.round(), 2);
+        assert_eq!(c.global_norm(), Some(0.5));
+        assert!(!c.terminated());
+        c.finish_round(1e-9, true, &mut trace);
+        assert!(c.terminated());
+    }
+
+    #[test]
+    fn freeze_logic() {
+        let tree = SpanningTree::solo();
+        let mut c = AsyncConv::new(NormKind::Max, 1e-6, tree, 0);
+        assert!(!c.freeze_recv());
+        c.swapped = true;
+        assert!(c.freeze_recv());
+        c.harvest_residual(&[1.0]);
+        assert!(!c.freeze_recv());
+        assert_eq!(c.own_partial, Some(1.0));
+    }
+}

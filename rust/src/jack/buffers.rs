@@ -1,0 +1,98 @@
+//! Communication buffer management (the paper's Listing 2 + `JACKBuffer`).
+//!
+//! One send buffer per outgoing link and one receive buffer per incoming
+//! link. Delivery is by **address swap**: arriving payloads are `Vec`s
+//! moved out of the transport and swapped into the user-visible slot in
+//! O(1) — never copied element-by-element (paper Algorithm 4, step 3).
+
+use crate::error::{Error, Result};
+
+/// Per-link send/receive buffers owned by the communicator.
+#[derive(Debug, Default)]
+pub struct BufferSet {
+    /// `send[l]`: written by the user's compute phase, read by `Send()`.
+    pub send: Vec<Vec<f64>>,
+    /// `recv[l]`: filled by `Recv()`, read by the user's compute phase.
+    pub recv: Vec<Vec<f64>>,
+}
+
+impl BufferSet {
+    /// Allocate buffers with the given per-link sizes (paper `sbuf_size`,
+    /// `rbuf_size`), zero-initialized: before any message arrives, the
+    /// halo reads as zero — the Dirichlet initial guess.
+    pub fn new(sbuf_sizes: &[usize], rbuf_sizes: &[usize]) -> Result<Self> {
+        if sbuf_sizes.iter().chain(rbuf_sizes).any(|&s| s == 0) {
+            return Err(Error::Config("zero-sized communication buffer".into()));
+        }
+        Ok(BufferSet {
+            send: sbuf_sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            recv: rbuf_sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        })
+    }
+
+    pub fn num_send_links(&self) -> usize {
+        self.send.len()
+    }
+
+    pub fn num_recv_links(&self) -> usize {
+        self.recv.len()
+    }
+
+    /// Address-swap delivery into receive slot `link` (O(1)).
+    ///
+    /// Returns the *previous* buffer so the caller can recycle its
+    /// allocation (the transport pool reuses it for future messages).
+    pub fn deliver(&mut self, link: usize, mut incoming: Vec<f64>) -> Result<Vec<f64>> {
+        let slot = self
+            .recv
+            .get_mut(link)
+            .ok_or_else(|| Error::Config(format!("recv link {link} out of range")))?;
+        if incoming.len() != slot.len() {
+            return Err(Error::Protocol(format!(
+                "message size {} != recv buffer size {} on link {link}",
+                incoming.len(),
+                slot.len()
+            )));
+        }
+        std::mem::swap(slot, &mut incoming);
+        Ok(incoming)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_zeroed() {
+        let b = BufferSet::new(&[3, 2], &[4]).unwrap();
+        assert_eq!(b.num_send_links(), 2);
+        assert_eq!(b.num_recv_links(), 1);
+        assert_eq!(b.send[0], vec![0.0; 3]);
+        assert_eq!(b.recv[0], vec![0.0; 4]);
+    }
+
+    #[test]
+    fn rejects_zero_size() {
+        assert!(BufferSet::new(&[0], &[1]).is_err());
+        assert!(BufferSet::new(&[1], &[0]).is_err());
+    }
+
+    #[test]
+    fn deliver_swaps_in_o1() {
+        let mut b = BufferSet::new(&[1], &[3]).unwrap();
+        let incoming = vec![1.0, 2.0, 3.0];
+        let ptr_before = incoming.as_ptr();
+        let old = b.deliver(0, incoming).unwrap();
+        assert_eq!(b.recv[0], vec![1.0, 2.0, 3.0]);
+        assert_eq!(b.recv[0].as_ptr(), ptr_before, "no copy: same allocation");
+        assert_eq!(old, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn deliver_size_mismatch_fails() {
+        let mut b = BufferSet::new(&[1], &[3]).unwrap();
+        assert!(b.deliver(0, vec![1.0]).is_err());
+        assert!(b.deliver(5, vec![1.0]).is_err());
+    }
+}

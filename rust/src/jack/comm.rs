@@ -1,0 +1,420 @@
+//! `JackComm` — the single front-end of the library (paper §3.2,
+//! Listings 5–6): one interface for both classical and asynchronous
+//! iterations, switchable at runtime.
+//!
+//! Usage mirrors the paper exactly:
+//!
+//! ```no_run
+//! # use jack2::jack::JackComm;
+//! # use jack2::graph::CommGraph;
+//! # use jack2::simmpi::World;
+//! # let (_w, mut eps) = World::homogeneous(1);
+//! # let ep = eps.pop().unwrap();
+//! # let graph = CommGraph::symmetric(0, vec![]).unwrap();
+//! # let (sbufs, rbufs, n, async_flag) = (vec![], vec![], 8, false);
+//! // -- initialize JACK2 communicator (Listing 5)
+//! let mut comm = JackComm::new(ep, graph).unwrap();
+//! comm.init_buffers(&sbufs, &rbufs).unwrap();
+//! comm.init_residual(n, 0.0).unwrap();
+//! comm.init_solution(n).unwrap();
+//! if async_flag {
+//!     comm.config_async(4, 1e-8).unwrap();
+//!     comm.switch_async().unwrap();
+//! }
+//! // -- iterate (Listing 6)
+//! comm.send().unwrap();
+//! while comm.residual_norm() >= 1e-8 {
+//!     comm.recv().unwrap();
+//!     {
+//!         let v = comm.compute_view();
+//!         // compute phase: reads v.recv + v.sol, writes v.sol, v.send, v.res
+//!     }
+//!     comm.send().unwrap();
+//!     let lconv = comm.local_residual_norm() < 1e-8;
+//!     comm.set_local_convergence(lconv);
+//!     comm.update_residual().unwrap();
+//! }
+//! ```
+
+use std::time::{Duration, Instant};
+
+use super::async_comm::AsyncComm;
+use super::async_conv::AsyncConv;
+use super::buffers::BufferSet;
+use super::norm::NormKind;
+use super::spanning_tree::{self, SpanningTree};
+use super::sync_comm::SyncComm;
+use super::sync_conv::SyncConv;
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::metrics::{RankMetrics, Trace};
+use crate::simmpi::Endpoint;
+
+/// Communication mode (switchable at runtime, paper feature (i)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Synchronous,
+    Asynchronous,
+}
+
+/// Split-borrow view of all per-iteration data for the user compute phase.
+pub struct ComputeView<'a> {
+    /// Per-incoming-link received halo data (paper `recv_buf`).
+    pub recv: &'a [Vec<f64>],
+    /// Per-outgoing-link boundary data to publish (paper `send_buf`).
+    pub send: &'a mut [Vec<f64>],
+    /// Local solution block (paper `sol_vec_buf`).
+    pub sol: &'a mut Vec<f64>,
+    /// Local residual block (paper `res_vec_buf`).
+    pub res: &'a mut Vec<f64>,
+}
+
+/// The JACK2 communicator.
+pub struct JackComm {
+    ep: Endpoint,
+    graph: CommGraph,
+    tree: SpanningTree,
+    bufs: BufferSet,
+    sol_vec: Vec<f64>,
+    res_vec: Vec<f64>,
+    norm_kind: NormKind,
+    res_norm: f64,
+    lconv: bool,
+    mode: Mode,
+    sync_comm: SyncComm,
+    async_comm: Option<AsyncComm>,
+    sync_conv: Option<SyncConv>,
+    async_conv: Option<AsyncConv>,
+    /// Counters for the experiment harnesses.
+    pub metrics: RankMetrics,
+    /// Optional protocol event trace.
+    pub trace: Trace,
+}
+
+impl JackComm {
+    /// Initialize with the communication graph (paper Listing 5, first
+    /// `Init`). Builds the spanning tree used by the convergence-detection
+    /// machinery — call concurrently on every rank.
+    pub fn new(mut ep: Endpoint, graph: CommGraph) -> Result<Self> {
+        if graph.rank() != ep.rank() {
+            return Err(Error::Config(format!(
+                "graph view is for rank {} but endpoint is rank {}",
+                graph.rank(),
+                ep.rank()
+            )));
+        }
+        let tree = spanning_tree::build(
+            &mut ep,
+            &graph.undirected_neighbors(),
+            Duration::from_secs(30),
+        )?;
+        Ok(JackComm {
+            ep,
+            graph,
+            tree,
+            bufs: BufferSet::default(),
+            sol_vec: Vec::new(),
+            res_vec: Vec::new(),
+            norm_kind: NormKind::Max,
+            res_norm: f64::INFINITY,
+            lconv: false,
+            mode: Mode::Synchronous,
+            sync_comm: SyncComm::default(),
+            async_comm: None,
+            sync_conv: None,
+            async_conv: None,
+            metrics: RankMetrics::default(),
+            trace: Trace::disabled(),
+        })
+    }
+
+    /// Register communication buffers (Listing 5, second `Init`).
+    pub fn init_buffers(&mut self, sbuf_sizes: &[usize], rbuf_sizes: &[usize]) -> Result<()> {
+        if sbuf_sizes.len() != self.graph.num_send() || rbuf_sizes.len() != self.graph.num_recv() {
+            return Err(Error::Config(format!(
+                "buffer counts ({}, {}) do not match graph degrees ({}, {})",
+                sbuf_sizes.len(),
+                rbuf_sizes.len(),
+                self.graph.num_send(),
+                self.graph.num_recv()
+            )));
+        }
+        self.bufs = BufferSet::new(sbuf_sizes, rbuf_sizes)?;
+        Ok(())
+    }
+
+    /// Register the residual vector and norm type (Listing 5, third
+    /// `Init`; `norm_type`: 2 = Euclidean, < 1 = maximum norm).
+    pub fn init_residual(&mut self, res_vec_size: usize, norm_type: f32) -> Result<()> {
+        self.res_vec = vec![0.0; res_vec_size];
+        self.norm_kind = NormKind::from_norm_type(norm_type);
+        self.sync_conv = Some(SyncConv::new(self.norm_kind, &self.tree));
+        Ok(())
+    }
+
+    /// Register the solution vector (part of the paper's `ConfigAsync`,
+    /// but useful in both modes: the solver drivers keep the iterate here).
+    pub fn init_solution(&mut self, sol_vec_size: usize) -> Result<()> {
+        self.sol_vec = vec![0.0; sol_vec_size];
+        Ok(())
+    }
+
+    /// Configure asynchronous mode (paper `ConfigAsync`): snapshot-based
+    /// convergence detection with the given residual `threshold`, and up
+    /// to `max_recv_requests` message deliveries per channel per `Recv`.
+    pub fn config_async(&mut self, max_recv_requests: usize, threshold: f64) -> Result<()> {
+        if self.bufs.num_recv_links() != self.graph.num_recv() {
+            return Err(Error::Config("init_buffers must be called first".into()));
+        }
+        if self.sol_vec.is_empty() || self.res_vec.is_empty() {
+            return Err(Error::Config(
+                "init_solution and init_residual must be called first".into(),
+            ));
+        }
+        if !self.tree.is_root() && self.graph.num_recv() == 0 {
+            return Err(Error::Config(
+                "async convergence detection requires every non-root rank to \
+                 have at least one incoming link (snapshot propagation)"
+                    .into(),
+            ));
+        }
+        self.async_comm = Some(AsyncComm::new(self.graph.num_send(), max_recv_requests));
+        self.async_conv = Some(AsyncConv::new(
+            self.norm_kind,
+            threshold,
+            self.tree.clone(),
+            self.graph.num_recv(),
+        ));
+        Ok(())
+    }
+
+    /// Toggle busy-channel send discarding (Alg. 6; default on). The
+    /// "tunable features for advanced experiments" of the paper's
+    /// conclusion — used by the E6 ablation.
+    pub fn set_send_discard(&mut self, discard: bool) -> Result<()> {
+        self.async_comm
+            .as_mut()
+            .ok_or_else(|| Error::Config("call config_async first".into()))?
+            .discard = discard;
+        Ok(())
+    }
+
+    /// Switch to asynchronous iterations (paper `SwitchAsync`).
+    pub fn switch_async(&mut self) -> Result<()> {
+        if self.async_comm.is_none() {
+            return Err(Error::Config("call config_async before switch_async".into()));
+        }
+        self.mode = Mode::Asynchronous;
+        Ok(())
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn rank(&self) -> usize {
+        self.ep.rank()
+    }
+
+    pub fn graph(&self) -> &CommGraph {
+        &self.graph
+    }
+
+    pub fn tree(&self) -> &SpanningTree {
+        &self.tree
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.ep
+    }
+
+    pub fn endpoint_mut(&mut self) -> &mut Endpoint {
+        &mut self.ep
+    }
+
+    /// The norm of the global residual vector — the paper's
+    /// `res_vec_norm` output variable. `INFINITY` until first evaluated.
+    pub fn residual_norm(&self) -> f64 {
+        self.res_norm
+    }
+
+    /// Max-norm of the *local* residual block (for arming `lconv_flag`).
+    pub fn local_residual_norm(&self) -> f64 {
+        self.norm_kind.eval(&self.res_vec)
+    }
+
+    /// Arm/disarm the local convergence flag (paper `lconv_flag`).
+    pub fn set_local_convergence(&mut self, lconv: bool) {
+        self.lconv = lconv;
+    }
+
+    /// Asynchronous mode: true once global termination has been decided by
+    /// the snapshot protocol. (Synchronous mode always returns `false`;
+    /// the caller's loop condition on [`Self::residual_norm`] decides.)
+    pub fn terminated(&self) -> bool {
+        match self.mode {
+            Mode::Synchronous => false,
+            Mode::Asynchronous => self
+                .async_conv
+                .as_ref()
+                .is_some_and(|c| c.terminated()),
+        }
+    }
+
+    /// Snapshot rounds executed so far (paper Table 1 "# Snaps.").
+    pub fn snapshots(&self) -> u64 {
+        self.metrics.snapshots
+    }
+
+    /// Borrow all per-iteration data for the compute phase.
+    pub fn compute_view(&mut self) -> ComputeView<'_> {
+        let BufferSet { send, recv } = &mut self.bufs;
+        ComputeView {
+            recv,
+            send,
+            sol: &mut self.sol_vec,
+            res: &mut self.res_vec,
+        }
+    }
+
+    /// Read-only access to the solution block.
+    pub fn solution(&self) -> &[f64] {
+        &self.sol_vec
+    }
+
+    /// Mutable access to the solution block (initial guess setup).
+    pub fn solution_mut(&mut self) -> &mut Vec<f64> {
+        &mut self.sol_vec
+    }
+
+    /// Re-arm the communicator for a new solve (next backward-Euler time
+    /// step): resets the residual norm, the local-convergence flag and —
+    /// in asynchronous mode — reopens the terminated snapshot detector.
+    /// Callers should place a world barrier between time steps.
+    pub fn reset_for_new_solve(&mut self) -> Result<()> {
+        self.res_norm = f64::INFINITY;
+        self.lconv = false;
+        if let Some(conv) = self.async_conv.as_mut() {
+            if conv.terminated() {
+                conv.reopen();
+            }
+        }
+        Ok(())
+    }
+
+    /// `Send()` of Listing 6.
+    pub fn send(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let out = match self.mode {
+            Mode::Synchronous => {
+                self.sync_comm
+                    .send(&mut self.ep, &self.graph, &self.bufs, &mut self.metrics)
+            }
+            Mode::Asynchronous => self
+                .async_comm
+                .as_mut()
+                .expect("switch_async checked")
+                .send(&mut self.ep, &self.graph, &self.bufs, &mut self.metrics),
+        };
+        self.metrics.comm_time += t0.elapsed();
+        out
+    }
+
+    /// Block until the most recent synchronous sends completed (the
+    /// trivial scheme's full communication wait, Algorithm 1 line 8).
+    /// No-op in asynchronous mode.
+    pub fn wait_sends(&mut self) {
+        if self.mode == Mode::Synchronous {
+            let t0 = Instant::now();
+            self.sync_comm.wait_sends();
+            self.metrics.comm_time += t0.elapsed();
+        }
+    }
+
+    /// `Recv()` of Listing 6. Synchronous mode blocks for one message per
+    /// incoming link; asynchronous mode never blocks.
+    pub fn recv(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let out = match self.mode {
+            Mode::Synchronous => {
+                self.sync_comm
+                    .recv(&mut self.ep, &self.graph, &mut self.bufs, &mut self.metrics)
+            }
+            Mode::Asynchronous => self.recv_async(),
+        };
+        self.metrics.comm_time += t0.elapsed();
+        out
+    }
+
+    fn recv_async(&mut self) -> Result<()> {
+        let Self {
+            ep,
+            graph,
+            bufs,
+            sol_vec,
+            lconv,
+            async_comm,
+            async_conv,
+            metrics,
+            trace,
+            ..
+        } = self;
+        let conv = async_conv.as_mut().expect("switch_async checked");
+        // Advance the detection protocol first: it may complete a snapshot.
+        conv.poll(ep, graph, bufs, sol_vec, *lconv, metrics, trace)?;
+        // Deliver a completed snapshot (address swap) and freeze ordinary
+        // delivery for the evaluation iteration.
+        if conv.try_deliver_snapshot(bufs, sol_vec)? {
+            return Ok(());
+        }
+        if conv.freeze_recv() {
+            return Ok(());
+        }
+        async_comm
+            .as_mut()
+            .expect("switch_async checked")
+            .recv(ep, graph, bufs, metrics)
+    }
+
+    /// `UpdateResidual()` of Listing 6.
+    ///
+    /// Synchronous mode: blocking distributed norm of the residual vector
+    /// (leader-election reduction on the spanning tree). Asynchronous
+    /// mode: advances the snapshot-based detection state machine; the
+    /// global norm becomes available when a detection round completes.
+    pub fn update_residual(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        self.metrics.iterations += 1;
+        let Self {
+            ep,
+            graph,
+            bufs,
+            sol_vec,
+            res_vec,
+            lconv,
+            sync_conv,
+            async_conv,
+            metrics,
+            trace,
+            ..
+        } = self;
+        match self.mode {
+            Mode::Synchronous => {
+                let conv = sync_conv
+                    .as_mut()
+                    .ok_or_else(|| Error::Config("init_residual not called".into()))?;
+                self.res_norm = conv.update_residual(ep, res_vec, metrics)?;
+            }
+            Mode::Asynchronous => {
+                let conv = async_conv.as_mut().expect("switch_async checked");
+                conv.harvest_residual(res_vec);
+                conv.poll(ep, graph, bufs, sol_vec, *lconv, metrics, trace)?;
+                if let Some(n) = conv.global_norm() {
+                    self.res_norm = n;
+                }
+            }
+        }
+        self.metrics.comm_time += t0.elapsed();
+        Ok(self.res_norm)
+    }
+}

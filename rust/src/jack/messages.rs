@@ -1,0 +1,81 @@
+//! Wire protocol: tag allocation and payload encodings.
+//!
+//! simmpi tags multiplex the independent JACK2 protocols over each link.
+//! All payloads are `Vec<f64>`; small control headers are encoded as
+//! leading f64 values (exactly representable: rounds and flags stay far
+//! below 2^53).
+
+use crate::simmpi::Tag;
+
+/// Iteration data exchange (sync and async modes).
+pub const TAG_DATA: Tag = 0x10;
+/// Snapshot-marked data message (Algs. 7–9): `[round, face...]`.
+pub const TAG_SNAPSHOT: Tag = 0x20;
+/// Local-convergence notification, child → tree parent: `[round]`.
+pub const TAG_CONV_NOTIFY: Tag = 0x30;
+/// Snapshot-residual norm partial, child → tree parent: `[round, value]`.
+pub const TAG_NORM_PARTIAL: Tag = 0x40;
+/// Verdict broadcast, parent → children: `[round, norm, flag]` with
+/// flag 1.0 = terminate, 0.0 = resume.
+pub const TAG_TERM: Tag = 0x50;
+/// Spanning-tree construction: BFS wave `[dist]`.
+pub const TAG_TREE_BUILD: Tag = 0x60;
+/// Spanning-tree construction: parent adoption ack `[accepted]`.
+pub const TAG_TREE_ACK: Tag = 0x61;
+/// Spanning-tree construction: subtree-complete convergecast `[]`.
+pub const TAG_TREE_DONE: Tag = 0x62;
+/// Spanning-tree construction: completion broadcast `[]`.
+pub const TAG_TREE_READY: Tag = 0x63;
+/// Blocking leader-election norm: saturation partial `[round, value]`.
+pub const TAG_NORM_SYNC: Tag = 0x70;
+/// Blocking leader-election norm: result flood `[round, norm]`.
+pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
+
+/// Encode a snapshot face message.
+pub fn encode_snapshot(round: u64, face: &[f64]) -> Vec<f64> {
+    let mut v = Vec::with_capacity(face.len() + 1);
+    v.push(round as f64);
+    v.extend_from_slice(face);
+    v
+}
+
+/// Decode a snapshot face message into `(round, face)`.
+pub fn decode_snapshot(msg: Vec<f64>) -> (u64, Vec<f64>) {
+    let round = msg[0] as u64;
+    let mut face = msg;
+    face.remove(0);
+    (round, face)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let (r, f) = decode_snapshot(encode_snapshot(42, &[1.5, -2.0]));
+        assert_eq!(r, 42);
+        assert_eq!(f, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        let tags = [
+            TAG_DATA,
+            TAG_SNAPSHOT,
+            TAG_CONV_NOTIFY,
+            TAG_NORM_PARTIAL,
+            TAG_TERM,
+            TAG_TREE_BUILD,
+            TAG_TREE_ACK,
+            TAG_TREE_DONE,
+            TAG_TREE_READY,
+            TAG_NORM_SYNC,
+            TAG_NORM_SYNC_RESULT,
+        ];
+        let mut s = tags.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), tags.len());
+    }
+}

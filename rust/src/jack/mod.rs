@@ -1,0 +1,39 @@
+//! # The JACK2 library core
+//!
+//! Rust port of the paper's class architecture (Fig. 1):
+//!
+//! | Paper class        | Module                                   |
+//! |--------------------|------------------------------------------|
+//! | `JACKComm`         | [`comm::JackComm`]                       |
+//! | `JACKSyncComm`     | [`sync_comm::SyncComm`]                  |
+//! | `JACKAsyncComm`    | [`async_comm::AsyncComm`]                |
+//! | `JACKSyncConv`     | [`sync_conv::SyncConv`]                  |
+//! | `JACKAsyncConv`    | [`async_conv::AsyncConv`]                |
+//! | `JACKNorm`         | [`norm`]                                 |
+//! | `JACKSpanningTree` | [`spanning_tree`]                        |
+//! | `JACKSnapshot`     | folded into [`async_conv`] (Algs. 7–9)   |
+//! | (buffer manager)   | [`buffers::BufferSet`]                   |
+//!
+//! Plus [`termination`]: the pluggable-protocol extension point the paper
+//! lists among its contributions.
+
+pub mod async_comm;
+pub mod async_conv;
+pub mod buffers;
+pub mod comm;
+pub mod messages;
+pub mod norm;
+pub mod spanning_tree;
+pub mod sync_comm;
+pub mod sync_conv;
+pub mod termination;
+
+pub use async_comm::AsyncComm;
+pub use async_conv::{AsyncConv, Verdict};
+pub use buffers::BufferSet;
+pub use comm::{ComputeView, JackComm, Mode};
+pub use norm::{NormKind, NormPending};
+pub use spanning_tree::SpanningTree;
+pub use sync_comm::SyncComm;
+pub use sync_conv::SyncConv;
+pub use termination::{PersistenceProtocol, SnapshotProtocol, TerminationProtocol};

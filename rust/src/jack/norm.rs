@@ -1,0 +1,243 @@
+//! Distributed norm computation (the paper's `JACKNorm`).
+//!
+//! Computes the norm of a distributed vector whose block-components live on
+//! the ranks, "by using a leader election protocol designed for acyclic
+//! graphs" (paper §3.2). The graph used is the spanning tree built by
+//! [`super::spanning_tree`], so acyclicity always holds.
+//!
+//! The protocol is the classic *saturation / leader election* scheme:
+//!
+//! * every node starts with its local partial (Σ|xᵢ|^q, or max |xᵢ|);
+//! * a node that has received partials from all but one tree neighbour
+//!   sends its combined partial to that remaining neighbour;
+//! * a node that has received partials from *all* its neighbours is
+//!   elected (possibly two adjacent nodes are co-elected after exchanging
+//!   complementary partials); it computes the final norm and floods the
+//!   result back out;
+//! * non-elected nodes adopt and forward the first result they receive.
+//!
+//! Every message carries a round number so that back-to-back reductions
+//! (one per iteration under the synchronous scheme) never mix.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::messages::{TAG_NORM_SYNC, TAG_NORM_SYNC_RESULT};
+use crate::error::{Error, Result};
+use crate::simmpi::{Endpoint, Rank};
+
+/// Norm selector (the paper's `norm_type`: `2` → Euclidean, `< 1` → max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NormKind {
+    /// ℓ^q norm, q ≥ 1.
+    Pow(f64),
+    /// ℓ^∞ (maximum) norm.
+    Max,
+}
+
+impl NormKind {
+    /// Decode the paper's `float norm_type` convention.
+    pub fn from_norm_type(t: f32) -> Self {
+        if t < 1.0 {
+            NormKind::Max
+        } else {
+            NormKind::Pow(t as f64)
+        }
+    }
+
+    /// Local partial aggregate of a block-component.
+    pub fn partial(&self, xs: &[f64]) -> f64 {
+        match self {
+            NormKind::Max => xs.iter().fold(0.0, |m, x| m.max(x.abs())),
+            NormKind::Pow(q) => xs.iter().map(|x| x.abs().powf(*q)).sum(),
+        }
+    }
+
+    /// Combine two partial aggregates.
+    pub fn combine(&self, a: f64, b: f64) -> f64 {
+        match self {
+            NormKind::Max => a.max(b),
+            NormKind::Pow(_) => a + b,
+        }
+    }
+
+    /// Turn the total aggregate into the norm value.
+    pub fn finalize(&self, acc: f64) -> f64 {
+        match self {
+            NormKind::Max => acc,
+            NormKind::Pow(q) => acc.powf(1.0 / q),
+        }
+    }
+
+    /// Direct (single-host) norm of a full vector — test oracle.
+    pub fn eval(&self, xs: &[f64]) -> f64 {
+        self.finalize(self.partial(xs))
+    }
+}
+
+/// Cross-round buffers: partials/results that arrived early for a future
+/// round (neighbours may race ahead by one round).
+#[derive(Debug, Default)]
+pub struct NormPending {
+    partials: HashMap<(u64, Rank), f64>,
+    results: HashMap<u64, f64>,
+}
+
+impl NormPending {
+    /// Drop state from completed rounds.
+    fn prune(&mut self, current: u64) {
+        self.partials.retain(|(r, _), _| *r >= current);
+        self.results.retain(|r, _| *r >= current);
+    }
+}
+
+/// Blocking leader-election norm over the tree neighbours.
+///
+/// Every rank calls this with the same `round` and its local partial
+/// (from [`NormKind::partial`]). Returns the global norm on every rank.
+pub fn saturation_norm(
+    ep: &mut Endpoint,
+    tree_neighbors: &[Rank],
+    local_partial: f64,
+    kind: NormKind,
+    round: u64,
+    pending: &mut NormPending,
+    timeout: Duration,
+) -> Result<f64> {
+    pending.prune(round);
+    let d = tree_neighbors.len();
+    if d == 0 {
+        return Ok(kind.finalize(local_partial));
+    }
+    let deadline = Instant::now() + timeout;
+
+    let mut received: HashMap<Rank, f64> = HashMap::new();
+    for &n in tree_neighbors {
+        if let Some(v) = pending.partials.remove(&(round, n)) {
+            received.insert(n, v);
+        }
+    }
+    // Note: a *result* for this round cannot have arrived before we entered
+    // it — election requires every rank's partial, and ours has not been
+    // sent yet. (Early *partials* are possible and were seeded above.)
+    debug_assert!(!pending.results.contains_key(&round));
+
+    let mut sent_to: Option<Rank> = None;
+
+    loop {
+        // 1. Saturation step: send combined partial to the single missing
+        //    neighbour.
+        if sent_to.is_none() && received.len() == d - 1 {
+            let missing = *tree_neighbors
+                .iter()
+                .find(|n| !received.contains_key(n))
+                .expect("exactly one missing");
+            let mut acc = local_partial;
+            for v in received.values() {
+                acc = kind.combine(acc, *v);
+            }
+            ep.isend(missing, TAG_NORM_SYNC, vec![round as f64, acc])?;
+            sent_to = Some(missing);
+        }
+
+        // 2. Elected: partials from all neighbours.
+        if received.len() == d {
+            let mut acc = local_partial;
+            for v in received.values() {
+                acc = kind.combine(acc, *v);
+            }
+            let norm = kind.finalize(acc);
+            for &n in tree_neighbors {
+                if Some(n) != sent_to {
+                    ep.isend(n, TAG_NORM_SYNC_RESULT, vec![round as f64, norm])?;
+                }
+            }
+            return Ok(norm);
+        }
+
+        // 3. Event-driven wait for the next partial or result from any
+        //    tree neighbour (no polling: hops cost transit time only).
+        let mut pairs = Vec::with_capacity(2 * d);
+        for &n in tree_neighbors {
+            pairs.push((n, TAG_NORM_SYNC));
+            pairs.push((n, TAG_NORM_SYNC_RESULT));
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let Some((idx, msg)) = ep.wait_any(&pairs, remaining) else {
+            return Err(Error::Protocol(format!(
+                "rank {}: saturation norm round {round} timed out ({} of {d} partials)",
+                ep.rank(),
+                received.len()
+            )));
+        };
+        let (n, tag) = pairs[idx];
+        let r = msg[0] as u64;
+        if tag == TAG_NORM_SYNC {
+            if r == round {
+                received.insert(n, msg[1]);
+            } else if r > round {
+                pending.partials.insert((r, n), msg[1]);
+            }
+            // stale rounds (r < round) are dropped
+        } else if r == round {
+            // Adopt and flood onward.
+            let norm = msg[1];
+            for &m in tree_neighbors {
+                if m != n {
+                    ep.isend(m, TAG_NORM_SYNC_RESULT, vec![round as f64, norm])?;
+                }
+            }
+            return Ok(norm);
+        } else if r > round {
+            pending.results.insert(r, msg[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_from_norm_type() {
+        assert_eq!(NormKind::from_norm_type(2.0), NormKind::Pow(2.0));
+        assert_eq!(NormKind::from_norm_type(0.0), NormKind::Max);
+        assert_eq!(NormKind::from_norm_type(-3.0), NormKind::Max);
+        assert_eq!(NormKind::from_norm_type(1.0), NormKind::Pow(1.0));
+    }
+
+    #[test]
+    fn euclidean_norm_math() {
+        let k = NormKind::Pow(2.0);
+        let xs = [3.0, -4.0];
+        assert!((k.eval(&xs) - 5.0).abs() < 1e-12);
+        assert!((k.finalize(k.combine(k.partial(&[3.0]), k.partial(&[-4.0]))) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_norm_math() {
+        let k = NormKind::Max;
+        assert_eq!(k.eval(&[1.0, -7.5, 2.0]), 7.5);
+        assert_eq!(k.combine(3.0, 7.5), 7.5);
+        assert_eq!(k.finalize(7.5), 7.5);
+        assert_eq!(k.partial(&[]), 0.0);
+    }
+
+    #[test]
+    fn one_norm_math() {
+        let k = NormKind::Pow(1.0);
+        assert!((k.eval(&[1.0, -2.0, 3.0]) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pending_prunes() {
+        let mut p = NormPending::default();
+        p.partials.insert((1, 0), 1.0);
+        p.partials.insert((5, 0), 2.0);
+        p.results.insert(1, 3.0);
+        p.results.insert(6, 4.0);
+        p.prune(5);
+        assert_eq!(p.partials.len(), 1);
+        assert_eq!(p.results.len(), 1);
+    }
+}

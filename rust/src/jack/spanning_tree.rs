@@ -1,0 +1,334 @@
+//! Distributed spanning-tree construction (the paper's `JACKSpanningTree`).
+//!
+//! The convergence-detection machinery (coordination phase of the snapshot
+//! protocol, and the norm reductions) runs on a spanning tree of the
+//! logical communication graph. The tree is built once during
+//! initialization by a blocking distributed BFS rooted at rank 0:
+//!
+//! 1. the root floods `BUILD(dist)` to its neighbours;
+//! 2. a node adopts the first `BUILD` sender as its parent, ACKs
+//!    acceptance, and forwards `BUILD` to its other neighbours; later
+//!    `BUILD`s are ACKed as rejections;
+//! 3. each node convergecasts `DONE` to its parent once all its forwarded
+//!    `BUILD`s are ACKed and all accepted children are `DONE`;
+//! 4. the root broadcasts `READY` down the finished tree, releasing all
+//!    ranks with consistent parent/children views.
+//!
+//! The graph view used here is the *undirected closure* of the
+//! communication graph ([`crate::graph::CommGraph::undirected_neighbors`]);
+//! the result is acyclic by construction, which is what the
+//! leader-election norm ([`super::norm`]) requires.
+
+use std::time::{Duration, Instant};
+
+use super::messages::{TAG_TREE_ACK, TAG_TREE_BUILD, TAG_TREE_DONE, TAG_TREE_READY};
+use crate::error::{Error, Result};
+use crate::simmpi::{Endpoint, Rank};
+
+/// One rank's view of the constructed spanning tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanningTree {
+    /// Parent in the tree (`None` on the root).
+    pub parent: Option<Rank>,
+    /// Children, sorted by rank.
+    pub children: Vec<Rank>,
+    /// Distance from the root.
+    pub depth: u64,
+}
+
+impl SpanningTree {
+    pub fn is_root(&self) -> bool {
+        self.parent.is_none()
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Tree-adjacent ranks: parent (if any) followed by children.
+    pub fn tree_neighbors(&self) -> Vec<Rank> {
+        let mut v = Vec::with_capacity(self.children.len() + 1);
+        if let Some(p) = self.parent {
+            v.push(p);
+        }
+        v.extend_from_slice(&self.children);
+        v
+    }
+
+    /// Trivial single-rank tree.
+    pub fn solo() -> Self {
+        SpanningTree {
+            parent: None,
+            children: Vec::new(),
+            depth: 0,
+        }
+    }
+}
+
+const ROOT: Rank = 0;
+
+/// Build the spanning tree. Call concurrently on every rank with that
+/// rank's undirected neighbour list. Blocks until the whole tree is built.
+pub fn build(
+    ep: &mut Endpoint,
+    neighbors: &[Rank],
+    timeout: Duration,
+) -> Result<SpanningTree> {
+    let rank = ep.rank();
+    let deadline = Instant::now() + timeout;
+    if ep.world_size() == 1 {
+        return Ok(SpanningTree::solo());
+    }
+    if neighbors.is_empty() {
+        return Err(Error::Config(format!(
+            "rank {rank}: no neighbours; spanning tree requires a connected graph"
+        )));
+    }
+
+    let mut parent: Option<Rank> = None;
+    let mut depth = 0u64;
+    let mut forwarded: Vec<Rank> = Vec::new(); // neighbours we sent BUILD to
+    let mut acks: Vec<(Rank, bool)> = Vec::new();
+    let mut done_children: Vec<Rank> = Vec::new();
+    let mut sent_done = false;
+    let mut ready = false;
+
+    if rank == ROOT {
+        for &n in neighbors {
+            ep.isend(n, TAG_TREE_BUILD, vec![0.0])?;
+            forwarded.push(n);
+        }
+    }
+
+    // Event loop: service BUILD/ACK/DONE/READY until released.
+    loop {
+        let mut progressed = false;
+
+        for &n in neighbors {
+            // BUILD from n
+            if let Some(msg) = ep.try_match(n, TAG_TREE_BUILD) {
+                progressed = true;
+                let dist = msg[0] as u64;
+                if rank != ROOT && parent.is_none() {
+                    parent = Some(n);
+                    depth = dist + 1;
+                    ep.isend(n, TAG_TREE_ACK, vec![1.0])?;
+                    for &m in neighbors {
+                        if m != n {
+                            ep.isend(m, TAG_TREE_BUILD, vec![depth as f64])?;
+                            forwarded.push(m);
+                        }
+                    }
+                } else {
+                    ep.isend(n, TAG_TREE_ACK, vec![0.0])?;
+                }
+            }
+            // ACK from n
+            if let Some(msg) = ep.try_match(n, TAG_TREE_ACK) {
+                progressed = true;
+                acks.push((n, msg[0] != 0.0));
+            }
+            // DONE from n (must be one of our accepted children)
+            if let Some(_msg) = ep.try_match(n, TAG_TREE_DONE) {
+                progressed = true;
+                done_children.push(n);
+            }
+            // READY from parent
+            if let Some(_msg) = ep.try_match(n, TAG_TREE_READY) {
+                progressed = true;
+                ready = true;
+            }
+        }
+
+        let participates = rank == ROOT || parent.is_some();
+        if participates && acks.len() == forwarded.len() {
+            let children: Vec<Rank> = {
+                let mut c: Vec<Rank> = acks
+                    .iter()
+                    .filter(|(_, ok)| *ok)
+                    .map(|(r, _)| *r)
+                    .collect();
+                c.sort_unstable();
+                c
+            };
+            let all_children_done = children.iter().all(|c| done_children.contains(c));
+            if all_children_done {
+                if rank == ROOT {
+                    // Release the tree.
+                    let tree = SpanningTree {
+                        parent: None,
+                        children: children.clone(),
+                        depth: 0,
+                    };
+                    for &c in &children {
+                        ep.isend(c, TAG_TREE_READY, Vec::new())?;
+                    }
+                    return Ok(tree);
+                }
+                // Convergecast DONE once.
+                if !sent_done {
+                    sent_done = true;
+                    ep.isend(parent.unwrap(), TAG_TREE_DONE, Vec::new())?;
+                }
+                if ready {
+                    for &c in &children {
+                        ep.isend(c, TAG_TREE_READY, Vec::new())?;
+                    }
+                    return Ok(SpanningTree {
+                        parent,
+                        children,
+                        depth,
+                    });
+                }
+            }
+        }
+
+        if Instant::now() > deadline {
+            return Err(Error::Protocol(format!(
+                "rank {rank}: spanning-tree build timed out (parent={parent:?}, \
+                 acks {}/{}, done {}/?)",
+                acks.len(),
+                forwarded.len(),
+                done_children.len()
+            )));
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+/// Global sanity check used by tests: per-rank views form one tree rooted
+/// at rank 0 spanning all ranks.
+pub fn validate_tree(views: &[SpanningTree]) -> Result<()> {
+    let n = views.len();
+    if n == 0 {
+        return Ok(());
+    }
+    if !views[0].is_root() {
+        return Err(Error::Protocol("rank 0 is not the root".into()));
+    }
+    for (r, v) in views.iter().enumerate() {
+        if r != 0 {
+            let p = v
+                .parent
+                .ok_or_else(|| Error::Protocol(format!("rank {r} has no parent")))?;
+            if p >= n {
+                return Err(Error::Protocol(format!("rank {r}: parent {p} OOB")));
+            }
+            if !views[p].children.contains(&r) {
+                return Err(Error::Protocol(format!(
+                    "rank {r}: parent {p} does not list it as child"
+                )));
+            }
+            if v.depth != views[p].depth + 1 {
+                return Err(Error::Protocol(format!(
+                    "rank {r}: depth {} != parent depth {} + 1",
+                    v.depth, views[p].depth
+                )));
+            }
+        }
+        for &c in &v.children {
+            if c >= n || views[c].parent != Some(r) {
+                return Err(Error::Protocol(format!(
+                    "rank {r}: child {c} does not point back"
+                )));
+            }
+        }
+    }
+    // connectivity: walk down from the root
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    while let Some(r) = stack.pop() {
+        for &c in &views[r].children {
+            if !seen[c] {
+                seen[c] = true;
+                stack.push(c);
+            }
+        }
+    }
+    if !seen.iter().all(|&s| s) {
+        return Err(Error::Protocol("tree does not span all ranks".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{grid3d_graphs, line_graph, random_connected, ring_graph};
+    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use std::thread;
+
+    fn build_all(graphs: Vec<crate::graph::CommGraph>) -> Vec<SpanningTree> {
+        let p = graphs.len();
+        let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(5, 0.3));
+        let (_w, eps) = World::new(cfg);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(graphs)
+            .map(|(mut ep, g)| {
+                thread::spawn(move || {
+                    build(&mut ep, &g.undirected_neighbors(), Duration::from_secs(10)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn solo_world() {
+        let views = build_all(line_graph(1));
+        assert_eq!(views[0], SpanningTree::solo());
+    }
+
+    #[test]
+    fn line_tree_is_the_line() {
+        let views = build_all(line_graph(5));
+        validate_tree(&views).unwrap();
+        for (r, v) in views.iter().enumerate() {
+            assert_eq!(v.depth, r as u64);
+            if r > 0 {
+                assert_eq!(v.parent, Some(r - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_tree_valid() {
+        for p in [2, 3, 4, 8] {
+            let views = build_all(ring_graph(p));
+            validate_tree(&views).unwrap();
+        }
+    }
+
+    #[test]
+    fn grid_tree_valid() {
+        let views = build_all(grid3d_graphs(2, 2, 2));
+        validate_tree(&views).unwrap();
+        // BFS from rank 0 in a 2x2x2 grid: depths are the Manhattan dists
+        assert_eq!(views[0].depth, 0);
+        assert_eq!(views[7].depth, 3);
+    }
+
+    #[test]
+    fn random_graphs_tree_valid() {
+        for seed in 0..5 {
+            let views = build_all(random_connected(10, 0.2, seed));
+            validate_tree(&views).unwrap();
+        }
+    }
+
+    #[test]
+    fn tree_neighbors_order() {
+        let t = SpanningTree {
+            parent: Some(3),
+            children: vec![5, 7],
+            depth: 1,
+        };
+        assert_eq!(t.tree_neighbors(), vec![3, 5, 7]);
+        assert!(!t.is_root());
+        assert!(!t.is_leaf());
+    }
+}

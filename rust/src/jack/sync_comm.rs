@@ -1,0 +1,125 @@
+//! Synchronous (blocking) data exchange — the paper's `JACKSyncComm`.
+//!
+//! `Recv` delivers exactly one pending message from **each** incoming
+//! neighbour and does not return until all have arrived (paper Algorithm
+//! 4); delivery is by address swap via [`super::buffers::BufferSet`].
+//! `Send` posts one message per outgoing link. Under the overlapping
+//! scheme (Algorithm 2) the reception is effectively posted from the
+//! iteration start because the transport buffers arrivals continuously.
+
+use std::time::Duration;
+
+use super::buffers::BufferSet;
+use super::messages::TAG_DATA;
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::metrics::RankMetrics;
+use crate::simmpi::Endpoint;
+
+/// Blocking per-iteration exchange.
+#[derive(Debug, Default)]
+pub struct SyncComm {
+    /// Timeout for each per-link blocking receive.
+    pub recv_timeout: Option<Duration>,
+    /// Requests of the most recent `send` (kept so the trivial scheme,
+    /// Algorithm 1, can wait for send completion too).
+    last_sends: Vec<crate::simmpi::SendRequest>,
+}
+
+impl SyncComm {
+    fn timeout(&self) -> Duration {
+        self.recv_timeout.unwrap_or(Duration::from_secs(60))
+    }
+
+    /// Send the current content of every send buffer to its neighbour.
+    pub fn send(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        metrics: &mut RankMetrics,
+    ) -> Result<()> {
+        self.last_sends.clear();
+        for (l, &dst) in graph.send_neighbors().iter().enumerate() {
+            self.last_sends
+                .push(ep.isend(dst, TAG_DATA, bufs.send[l].clone())?);
+            metrics.msgs_sent += 1;
+        }
+        Ok(())
+    }
+
+    /// Block until the most recent sends have completed (Algorithm 1's
+    /// "wait for communication completion" includes the sends; Algorithm 2
+    /// overlaps them with the next compute instead).
+    pub fn wait_sends(&mut self) {
+        for r in self.last_sends.drain(..) {
+            r.wait();
+        }
+    }
+
+    /// Blocking receive of one message per incoming link (Algorithm 4).
+    pub fn recv(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &mut BufferSet,
+        metrics: &mut RankMetrics,
+    ) -> Result<()> {
+        for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+            let mut req = ep.irecv(src, TAG_DATA);
+            let data = ep.wait_recv(&mut req, Some(self.timeout()))?;
+            bufs.deliver(l, data)?;
+            metrics.msgs_delivered += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ring_graph;
+    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use std::thread;
+
+    #[test]
+    fn lockstep_ring_exchange() {
+        let p = 4;
+        let graphs = ring_graph(p);
+        let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(5, 0.2));
+        let (_w, eps) = World::new(cfg);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(graphs)
+            .map(|(mut ep, g)| {
+                thread::spawn(move || {
+                    let mut comm = SyncComm::default();
+                    let sizes = vec![2usize; g.num_send()];
+                    let rsizes = vec![2usize; g.num_recv()];
+                    let mut bufs = BufferSet::new(&sizes, &rsizes).unwrap();
+                    let mut m = RankMetrics::default();
+                    // 3 lockstep iterations: send rank*10 + iter
+                    for it in 0..3 {
+                        for sb in bufs.send.iter_mut() {
+                            sb[0] = ep.rank() as f64;
+                            sb[1] = it as f64;
+                        }
+                        comm.send(&mut ep, &g, &bufs, &mut m).unwrap();
+                        comm.recv(&mut ep, &g, &mut bufs, &mut m).unwrap();
+                        // every received buffer must be from this iteration
+                        for (l, rb) in bufs.recv.iter().enumerate() {
+                            assert_eq!(rb[0] as usize, g.recv_neighbors()[l]);
+                            assert_eq!(rb[1] as usize, it, "lockstep violated");
+                        }
+                    }
+                    m
+                })
+            })
+            .collect();
+        for h in handles {
+            let m = h.join().unwrap();
+            assert_eq!(m.msgs_sent, 6); // 2 neighbours x 3 iters
+            assert_eq!(m.msgs_delivered, 6);
+        }
+    }
+}

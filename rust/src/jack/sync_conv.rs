@@ -1,0 +1,142 @@
+//! Synchronous convergence detection — the paper's `JACKSyncConv`.
+//!
+//! Under classical iterations every rank holds a block of the residual
+//! vector at the same iteration index, so the global residual norm is one
+//! distributed reduction per iteration. JACK2 performs it with the
+//! leader-election norm on the spanning tree ([`super::norm`]), the same
+//! machinery the paper describes for `JACKNorm`.
+
+use std::time::Duration;
+
+use super::norm::{saturation_norm, NormKind, NormPending};
+use super::spanning_tree::SpanningTree;
+use crate::error::Result;
+use crate::metrics::RankMetrics;
+use crate::simmpi::{Endpoint, Rank};
+
+/// Blocking residual-norm evaluation, one round per iteration.
+#[derive(Debug)]
+pub struct SyncConv {
+    kind: NormKind,
+    tree_neighbors: Vec<Rank>,
+    round: u64,
+    pending: NormPending,
+    timeout: Duration,
+}
+
+impl SyncConv {
+    pub fn new(kind: NormKind, tree: &SpanningTree) -> Self {
+        SyncConv {
+            kind,
+            tree_neighbors: tree.tree_neighbors(),
+            round: 0,
+            pending: NormPending::default(),
+            timeout: Duration::from_secs(60),
+        }
+    }
+
+    pub fn kind(&self) -> NormKind {
+        self.kind
+    }
+
+    /// Evaluate the global norm of the distributed residual vector whose
+    /// local block is `res_vec`. Blocks until every rank contributes.
+    pub fn update_residual(
+        &mut self,
+        ep: &mut Endpoint,
+        res_vec: &[f64],
+        metrics: &mut RankMetrics,
+    ) -> Result<f64> {
+        self.round += 1;
+        let partial = self.kind.partial(res_vec);
+        let norm = saturation_norm(
+            ep,
+            &self.tree_neighbors,
+            partial,
+            self.kind,
+            self.round,
+            &mut self.pending,
+            self.timeout,
+        )?;
+        metrics.norm_reductions += 1;
+        Ok(norm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{line_graph, ring_graph};
+    use crate::jack::spanning_tree;
+    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use std::thread;
+
+    /// All ranks repeatedly evaluate the norm of a known distributed vector.
+    fn run_norm_rounds(
+        graphs: Vec<crate::graph::CommGraph>,
+        kind: NormKind,
+        rounds: usize,
+    ) -> Vec<Vec<f64>> {
+        let p = graphs.len();
+        let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(2, 0.4));
+        let (_w, eps) = World::new(cfg);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(graphs)
+            .map(|(mut ep, g)| {
+                thread::spawn(move || {
+                    let tree = spanning_tree::build(
+                        &mut ep,
+                        &g.undirected_neighbors(),
+                        Duration::from_secs(10),
+                    )
+                    .unwrap();
+                    let mut conv = SyncConv::new(kind, &tree);
+                    let mut m = RankMetrics::default();
+                    let mut out = Vec::new();
+                    for round in 0..rounds {
+                        // local block: [rank + round] so the expected norm
+                        // changes every round (catches round mixing)
+                        let block = vec![(ep.rank() + round) as f64];
+                        out.push(conv.update_residual(&mut ep, &block, &mut m).unwrap());
+                    }
+                    assert_eq!(m.norm_reductions, rounds as u64);
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn max_norm_across_ring() {
+        let p = 5;
+        let out = run_norm_rounds(ring_graph(p), NormKind::Max, 4);
+        for per_rank in &out {
+            for (round, norm) in per_rank.iter().enumerate() {
+                assert_eq!(*norm, (p - 1 + round) as f64, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn euclidean_norm_across_line() {
+        let p = 4;
+        let out = run_norm_rounds(line_graph(p), NormKind::Pow(2.0), 3);
+        for per_rank in &out {
+            for (round, norm) in per_rank.iter().enumerate() {
+                let want: f64 = (0..p)
+                    .map(|r| ((r + round) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!((norm - want).abs() < 1e-12, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_norm() {
+        let out = run_norm_rounds(line_graph(1), NormKind::Max, 2);
+        assert_eq!(out[0], vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,300 @@
+//! Pluggable termination protocols (paper conclusion: "the possibility
+//! now to add various other termination protocols").
+//!
+//! [`TerminationProtocol`] abstracts what the asynchronous solver driver
+//! needs from a detector. Two implementations ship:
+//!
+//! * [`SnapshotProtocol`] — the paper's exact mechanism
+//!   ([`super::async_conv::AsyncConv`] behind the trait); supervised,
+//!   non-intrusive, and the only one that evaluates a true global
+//!   residual (paper §3.1).
+//! * [`PersistenceProtocol`] — a decentralized heuristic in the spirit of
+//!   Bahi–Contassot-Vivier–Couturier (paper ref. [2]): global convergence
+//!   is declared when every rank has observed local convergence for `m`
+//!   consecutive probe rounds. Cheaper, but can terminate prematurely on
+//!   non-monotone residuals — exactly the reliability gap the paper uses
+//!   to motivate the snapshot approach (see the `termination_protocols`
+//!   example and the detection-overhead bench).
+
+use std::collections::HashMap;
+
+use super::async_conv::AsyncConv;
+use super::buffers::BufferSet;
+use super::norm::NormKind;
+use super::spanning_tree::SpanningTree;
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::metrics::{RankMetrics, Trace};
+use crate::simmpi::{Endpoint, Tag};
+
+/// Tag namespace for the persistence protocol (disjoint from
+/// [`super::messages`] tags).
+const TAG_PERSIST_UP: Tag = 0x80;
+const TAG_PERSIST_DOWN: Tag = 0x81;
+
+/// What an asynchronous termination detector must provide.
+pub trait TerminationProtocol {
+    /// Advance the detector. Called once per iteration with the user's
+    /// current local-convergence flag.
+    #[allow(clippy::too_many_arguments)]
+    fn poll(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        sol_vec: &[f64],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        trace: &mut Trace,
+    ) -> Result<()>;
+
+    /// Give the detector a chance to commandeer the user buffers (only
+    /// the snapshot protocol uses this). Returns true if it did.
+    fn try_deliver(&mut self, bufs: &mut BufferSet, sol_vec: &mut Vec<f64>) -> Result<bool> {
+        let _ = (bufs, sol_vec);
+        Ok(false)
+    }
+
+    /// Feed the freshly computed residual block to the detector.
+    fn harvest_residual(&mut self, res_vec: &[f64]);
+
+    /// True while ordinary message delivery must be frozen.
+    fn freeze_recv(&self) -> bool {
+        false
+    }
+
+    /// Detector's estimate of the global residual norm, if any.
+    fn global_norm(&self) -> Option<f64>;
+
+    /// True once global termination has been decided.
+    fn terminated(&self) -> bool;
+
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's snapshot-based protocol behind the trait.
+pub struct SnapshotProtocol(pub AsyncConv);
+
+impl TerminationProtocol for SnapshotProtocol {
+    fn poll(
+        &mut self,
+        ep: &mut Endpoint,
+        graph: &CommGraph,
+        bufs: &BufferSet,
+        sol_vec: &[f64],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        trace: &mut Trace,
+    ) -> Result<()> {
+        self.0.poll(ep, graph, bufs, sol_vec, lconv, metrics, trace)
+    }
+
+    fn try_deliver(&mut self, bufs: &mut BufferSet, sol_vec: &mut Vec<f64>) -> Result<bool> {
+        self.0.try_deliver_snapshot(bufs, sol_vec)
+    }
+
+    fn harvest_residual(&mut self, res_vec: &[f64]) {
+        self.0.harvest_residual(res_vec);
+    }
+
+    fn freeze_recv(&self) -> bool {
+        self.0.freeze_recv()
+    }
+
+    fn global_norm(&self) -> Option<f64> {
+        self.0.global_norm()
+    }
+
+    fn terminated(&self) -> bool {
+        self.0.terminated()
+    }
+
+    fn name(&self) -> &'static str {
+        "snapshot"
+    }
+}
+
+/// Decentralized persistence heuristic.
+///
+/// Each rank convergecasts, on the spanning tree, the AND of "my `lconv`
+/// has been armed for ≥ m consecutive polls" over its subtree, together
+/// with the max-combined local residual partial (an *estimate* — blocks
+/// are sampled at unrelated local iterations, so unlike the snapshot
+/// protocol this is not the residual of any consistent global vector).
+/// The root declares termination when the AND holds, and broadcasts down.
+pub struct PersistenceProtocol {
+    kind: NormKind,
+    tree: SpanningTree,
+    /// Required consecutive locally-converged polls.
+    pub persistence: u32,
+    streak: u32,
+    round: u64,
+    child_reports: HashMap<(u64, usize), (bool, f64)>,
+    sent_report: bool,
+    last_partial: f64,
+    verdict: Option<(f64, bool)>,
+}
+
+impl PersistenceProtocol {
+    pub fn new(kind: NormKind, tree: SpanningTree, persistence: u32) -> Self {
+        PersistenceProtocol {
+            kind,
+            tree,
+            persistence: persistence.max(1),
+            streak: 0,
+            round: 1,
+            child_reports: HashMap::new(),
+            sent_report: false,
+            last_partial: f64::INFINITY,
+            verdict: None,
+        }
+    }
+}
+
+impl TerminationProtocol for PersistenceProtocol {
+    fn poll(
+        &mut self,
+        ep: &mut Endpoint,
+        _graph: &CommGraph,
+        _bufs: &BufferSet,
+        _sol_vec: &[f64],
+        lconv: bool,
+        _metrics: &mut RankMetrics,
+        _trace: &mut Trace,
+    ) -> Result<()> {
+        if self.terminated() {
+            return Ok(());
+        }
+        self.streak = if lconv { self.streak + 1 } else { 0 };
+
+        // Collect child reports: [round, flag, partial]
+        let children = self.tree.children.clone();
+        for (ci, &c) in children.iter().enumerate() {
+            while let Some(msg) = ep.try_match(c, TAG_PERSIST_UP) {
+                let r = msg[0] as u64;
+                if r >= self.round {
+                    self.child_reports.insert((r, ci), (msg[1] != 0.0, msg[2]));
+                }
+            }
+        }
+        // Verdict from parent: [round, norm, flag]
+        if let Some(p) = self.tree.parent {
+            while let Some(msg) = ep.try_match(p, TAG_PERSIST_DOWN) {
+                let norm = msg[1];
+                let term = msg[2] != 0.0;
+                for &c in &children {
+                    ep.isend(c, TAG_PERSIST_DOWN, msg.clone())?;
+                }
+                self.verdict = Some((norm, term));
+                if term {
+                    return Ok(());
+                }
+                self.round += 1;
+                self.sent_report = false;
+            }
+        }
+
+        // Report up once per round when all children reported this round.
+        let all_children: Option<Vec<(bool, f64)>> = (0..children.len())
+            .map(|ci| self.child_reports.get(&(self.round, ci)).copied())
+            .collect();
+        if !self.sent_report {
+            if let Some(reports) = all_children {
+                let mut flag = self.streak >= self.persistence;
+                let mut acc = self.last_partial;
+                for (f, p) in reports {
+                    flag &= f;
+                    acc = self.kind.combine(acc, p);
+                }
+                if self.tree.is_root() {
+                    let norm = self.kind.finalize(acc);
+                    let term = flag;
+                    for &c in &children {
+                        ep.isend(
+                            c,
+                            TAG_PERSIST_DOWN,
+                            vec![self.round as f64, norm, if term { 1.0 } else { 0.0 }],
+                        )?;
+                    }
+                    self.verdict = Some((norm, term));
+                    if !term {
+                        self.round += 1;
+                        self.sent_report = false;
+                    }
+                } else {
+                    ep.isend(
+                        self.tree.parent.expect("non-root"),
+                        TAG_PERSIST_UP,
+                        vec![
+                            self.round as f64,
+                            if flag { 1.0 } else { 0.0 },
+                            acc,
+                        ],
+                    )?;
+                    self.sent_report = true;
+                }
+                self.child_reports.retain(|(r, _), _| *r > self.round);
+            }
+        }
+        Ok(())
+    }
+
+    fn harvest_residual(&mut self, res_vec: &[f64]) {
+        self.last_partial = self.kind.partial(res_vec);
+    }
+
+    fn global_norm(&self) -> Option<f64> {
+        self.verdict.map(|(n, _)| n)
+    }
+
+    fn terminated(&self) -> bool {
+        self.verdict.is_some_and(|(_, t)| t)
+    }
+
+    fn name(&self) -> &'static str {
+        "persistence"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persistence_streak_resets() {
+        let mut p = PersistenceProtocol::new(NormKind::Max, SpanningTree::solo(), 3);
+        assert_eq!(p.streak, 0);
+        p.streak = 2;
+        // emulate a disarm via poll on a solo tree
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let g = crate::graph::CommGraph::symmetric(0, vec![]).unwrap();
+        let bufs = BufferSet::default();
+        let mut m = RankMetrics::default();
+        let mut t = Trace::disabled();
+        p.harvest_residual(&[0.5]);
+        p.poll(&mut ep, &g, &bufs, &[], false, &mut m, &mut t).unwrap();
+        assert_eq!(p.streak, 0);
+        assert!(!p.terminated());
+    }
+
+    #[test]
+    fn persistence_solo_terminates_after_streak() {
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let g = crate::graph::CommGraph::symmetric(0, vec![]).unwrap();
+        let bufs = BufferSet::default();
+        let mut m = RankMetrics::default();
+        let mut t = Trace::disabled();
+        let mut p = PersistenceProtocol::new(NormKind::Max, SpanningTree::solo(), 3);
+        p.harvest_residual(&[1e-9]);
+        for i in 0..3 {
+            assert!(!p.terminated(), "iteration {i}");
+            p.poll(&mut ep, &g, &bufs, &[], true, &mut m, &mut t).unwrap();
+        }
+        assert!(p.terminated());
+        assert_eq!(p.global_norm(), Some(1e-9));
+        assert_eq!(p.name(), "persistence");
+    }
+}

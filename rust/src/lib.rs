@@ -1,0 +1,48 @@
+//! # jack2 — high-level communication library for parallel iterative methods
+//!
+//! A full reproduction of *"JACK2: a new high-level communication library
+//! for parallel iterative methods"* (Gbikpi-Benissan & Magoulès, 2022),
+//! built as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **[`simmpi`]** — the message-passing substrate. The paper builds on
+//!   MPI; we provide an in-process simulated MPI with non-blocking
+//!   point-to-point requests, a configurable network model (latency,
+//!   bandwidth, jitter, per-link scaling) and per-rank compute-speed
+//!   heterogeneity, so cluster-scale effects are reproducible on one host.
+//! * **[`graph`]** — logical communication graphs (explicit incoming and
+//!   outgoing link lists, exactly the paper's Listing 1).
+//! * **[`jack`]** — the JACK2 library proper: buffer management with
+//!   address-swap message delivery (Alg. 4), continuous asynchronous
+//!   reception with a configurable in-flight request count (Alg. 5),
+//!   busy-channel send discarding (Alg. 6), distributed spanning trees,
+//!   leader-election norm computation, the Savari–Bertsekas snapshot
+//!   protocol for asynchronous convergence detection (Algs. 7–9), and the
+//!   single [`jack::JackComm`] front-end of the paper's Listings 5–6.
+//! * **[`problem`]** — the paper's evaluation workload: 3-D
+//!   convection–diffusion, finite differences, backward Euler, box
+//!   partitioning (Fig. 2).
+//! * **[`solver`]** — parallel iterative schemes: trivial (Alg. 1),
+//!   overlapping (Alg. 2) and asynchronous (Alg. 3) relaxation, with a
+//!   native Rust compute backend and an AOT-compiled XLA backend.
+//! * **[`runtime`]** — PJRT executor loading the HLO artifacts produced by
+//!   `python/compile/aot.py` (Python is build-time only).
+//! * **[`metrics`]** — counters and event traces used by the experiment
+//!   harnesses in `rust/benches/` and `examples/`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod error;
+pub mod experiments;
+pub mod graph;
+pub mod harness;
+pub mod jack;
+pub mod metrics;
+pub mod problem;
+pub mod runtime;
+pub mod simmpi;
+pub mod solver;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,289 @@
+//! `repro` — experiment launcher for the JACK2 reproduction.
+//!
+//! Subcommands map one-to-one to the experiment index in DESIGN.md §5:
+//!
+//! ```text
+//! repro solve      [--grid 2x2x2] [--n 16] [--scheme sync|async|trivial]
+//!                  [--backend native|xla] [--steps N] [--threshold 1e-6]
+//!                  [--latency-us 20] [--jitter 0.1] [--seed S]
+//!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
+//! repro table1     [--backend native|xla] [--fast]          (E1)
+//! repro fig3       [--n 24] [--budget 60] [--out fig3.csv]  (E2)
+//! repro partition  [--grid 4x2x2] [--n 16]                  (E3)
+//! repro overhead                                            (E4)
+//! repro staleness                                           (E6)
+//! repro schemes    [--latency-us 200] [--slow 0.4]          (E7)
+//! ```
+//!
+//! (Hand-rolled argument parsing: this build environment is offline and
+//! clap is unavailable — see Cargo.toml.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
+use jack2::graph::validate_world;
+use jack2::harness::fmt_secs;
+use jack2::problem::Partition3D;
+use jack2::solver::solve;
+use jack2::util::json;
+use jack2::{Error, Result};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "solve" => cmd_solve(&flags),
+        "table1" => cmd_table1(&flags),
+        "fig3" => cmd_fig3(&flags),
+        "partition" => cmd_partition(&flags),
+        "overhead" => cmd_overhead(),
+        "staleness" => cmd_staleness(),
+        "schemes" => cmd_schemes(&flags),
+        "faults" => cmd_faults(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown subcommand {other:?}; run `repro help`"
+        ))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — JACK2 reproduction experiment launcher\n\n\
+         subcommands:\n  \
+         solve      run one configured solve (see --grid/--n/--scheme/--backend)\n  \
+         table1     E1: Jacobi vs async sweep over world sizes (paper Table 1)\n  \
+         fig3       E2: mid-convergence solution profiles + interface jumps\n  \
+         partition  E3: print the box partition and communication graph\n  \
+         overhead   E4: convergence-detection overhead ablation\n  \
+         staleness  E6: send-discard (Alg. 6) ablation\n  \
+         schemes    E7: trivial vs overlapping vs async under imbalance\n  \
+         faults     E9: transient network faults, sync vs async\n"
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                out.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+            }
+        } else {
+            return Err(Error::Config(format!("unexpected argument {a:?}")));
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+fn parse_grid(s: &str) -> Result<(usize, usize, usize)> {
+    let parts: Vec<usize> = s
+        .split(['x', 'X'])
+        .map(|t| t.parse().map_err(|_| Error::Config(format!("bad grid {s:?}"))))
+        .collect::<Result<_>>()?;
+    if parts.len() != 3 {
+        return Err(Error::Config(format!("grid must be AxBxC, got {s:?}")));
+    }
+    Ok((parts[0], parts[1], parts[2]))
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Config(format!("bad value for --{key}: {v:?}"))),
+    }
+}
+
+fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(g) = flags.get("grid") {
+        cfg.process_grid = parse_grid(g)?;
+    }
+    cfg.n = get(flags, "n", cfg.n)?;
+    if let Some(s) = flags.get("scheme") {
+        cfg.scheme = Scheme::parse(s)?;
+    }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    cfg.time_steps = get(flags, "steps", cfg.time_steps)?;
+    cfg.threshold = get(flags, "threshold", cfg.threshold)?;
+    cfg.net_latency_us = get(flags, "latency-us", cfg.net_latency_us)?;
+    cfg.net_jitter = get(flags, "jitter", cfg.net_jitter)?;
+    cfg.seed = get(flags, "seed", cfg.seed)?;
+    cfg.max_iters = get(flags, "max-iters", cfg.max_iters)?;
+    cfg.max_recv_requests = get(flags, "recv-requests", cfg.max_recv_requests)?;
+    cfg.work_floor_us = get(flags, "work-floor-us", cfg.work_floor_us)?;
+    cfg.work_jitter = get(flags, "work-jitter", cfg.work_jitter)?;
+    cfg.inner_sweeps = get(flags, "inner-sweeps", cfg.inner_sweeps)?;
+    cfg.net_bandwidth = get(flags, "bandwidth", cfg.net_bandwidth)?;
+    if let Some(sp) = flags.get("speeds") {
+        cfg.rank_speed = sp
+            .split(',')
+            .map(|t| {
+                t.parse()
+                    .map_err(|_| Error::Config(format!("bad --speeds entry {t:?}")))
+            })
+            .collect::<Result<_>>()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let rep = solve(&cfg)?;
+    if flags.contains_key("json") {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("config".to_string(), cfg.to_json());
+        obj.insert("r_n".to_string(), json::Json::Num(rep.r_n));
+        obj.insert(
+            "iterations".to_string(),
+            json::Json::Num(rep.iterations() as f64),
+        );
+        obj.insert(
+            "snapshots".to_string(),
+            json::Json::Num(rep.snapshots() as f64),
+        );
+        obj.insert(
+            "wall_seconds".to_string(),
+            json::Json::Num(rep.total_wall.as_secs_f64()),
+        );
+        println!("{}", json::write(&json::Json::Obj(obj)));
+        return Ok(());
+    }
+    println!(
+        "solve: {} backend={} grid={:?} n={} -> {} steps",
+        cfg.scheme.name(),
+        cfg.backend.name(),
+        cfg.process_grid,
+        cfg.n,
+        rep.steps.len()
+    );
+    for s in &rep.steps {
+        println!(
+            "  step {}: {} | iters {} | reported norm {:.3e} | snaps {}",
+            s.step,
+            fmt_secs(s.wall),
+            s.iterations,
+            s.reported_norm,
+            s.snapshots
+        );
+    }
+    println!(
+        "verified r_n = {:.3e} | total {}",
+        rep.r_n,
+        fmt_secs(rep.total_wall)
+    );
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> Result<()> {
+    let backend = match flags.get("backend") {
+        Some(b) => Backend::parse(b)?,
+        None => Backend::Native,
+    };
+    let fast = flags.contains_key("fast") || jack2::experiments::fast_mode();
+    let points = table1::default_sweep(fast);
+    let rows = table1::run(&points, backend, 1e-6)?;
+    table1::print(&rows);
+    Ok(())
+}
+
+fn cmd_fig3(flags: &HashMap<String, String>) -> Result<()> {
+    let n = get(flags, "n", 16usize)?;
+    let budget = get(flags, "budget", 40u64)?;
+    let (sync, asy, reference) = fig3::run(n, budget)?;
+    fig3::print(&sync, &asy);
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, fig3::to_csv(&sync, &asy, &reference))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let grid = match flags.get("grid") {
+        Some(g) => parse_grid(g)?,
+        None => (4, 2, 2),
+    };
+    let n = get(flags, "n", 16usize)?;
+    let part = Partition3D::cube(n, grid)?;
+    let graphs = part.comm_graphs()?;
+    validate_world(&graphs)?;
+    println!(
+        "partition of {n}^3 over {:?} = {} ranks (paper Fig. 2 analogue)",
+        grid,
+        part.world_size()
+    );
+    for r in 0..part.world_size() {
+        let sub = part.subdomain(r);
+        let nb = part.face_neighbors(r);
+        println!(
+            "  rank {r:>3} coords {:?} lo {:?} dims {:?} | links: {}",
+            sub.coords,
+            sub.lo,
+            sub.dims,
+            nb.iter()
+                .map(|(f, j)| format!("{f:?}->{j}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_overhead() -> Result<()> {
+    let row = overhead::run(12)?;
+    let sweep = overhead::snapshot_frequency_sweep(12)?;
+    overhead::print(&row, &sweep);
+    Ok(())
+}
+
+fn cmd_staleness() -> Result<()> {
+    let (yes, no) = staleness::run()?;
+    staleness::print(&yes, &no);
+    Ok(())
+}
+
+fn cmd_faults() -> Result<()> {
+    let rows = faults::run()?;
+    faults::print(&rows);
+    Ok(())
+}
+
+fn cmd_schemes(flags: &HashMap<String, String>) -> Result<()> {
+    let latency = get(flags, "latency-us", 200u64)?;
+    let slow = get(flags, "slow", 0.4f64)?;
+    let rows = schemes::run(latency, slow)?;
+    schemes::print(&rows, latency, slow);
+    Ok(())
+}

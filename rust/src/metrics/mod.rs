@@ -1,0 +1,135 @@
+//! Per-rank counters and event traces for the experiment harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Counters accumulated by one rank during a solve.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankMetrics {
+    /// Local iterations executed (the paper's `k_i`).
+    pub iterations: u64,
+    /// Data messages actually sent on outgoing links.
+    pub msgs_sent: u64,
+    /// Send attempts discarded because the channel was busy (Alg. 6).
+    pub sends_discarded: u64,
+    /// Data messages delivered into user buffers.
+    pub msgs_delivered: u64,
+    /// Snapshot rounds this rank participated in (paper Table 1 "# Snaps.").
+    pub snapshots: u64,
+    /// Residual-norm evaluations (tree reductions) performed.
+    pub norm_reductions: u64,
+    /// Wall-clock spent inside the compute phase.
+    pub compute_time: Duration,
+    /// Wall-clock spent inside JACK2 calls (Send/Recv/UpdateResidual).
+    pub comm_time: Duration,
+}
+
+impl RankMetrics {
+    /// Merge counters from another rank (for whole-world aggregation).
+    pub fn merge(&mut self, o: &RankMetrics) {
+        self.iterations += o.iterations;
+        self.msgs_sent += o.msgs_sent;
+        self.sends_discarded += o.sends_discarded;
+        self.msgs_delivered += o.msgs_delivered;
+        self.snapshots = self.snapshots.max(o.snapshots);
+        self.norm_reductions += o.norm_reductions;
+        self.compute_time += o.compute_time;
+        self.comm_time += o.comm_time;
+    }
+}
+
+/// A timestamped protocol event (only recorded when tracing is enabled).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    IterationDone { k: u64 },
+    LocalConvergence { armed: bool },
+    SnapshotTriggered,
+    SnapshotLocalTaken,
+    SnapshotComplete { norm: f64 },
+    GlobalConvergence { norm: f64 },
+    Resume,
+}
+
+/// Bounded in-memory event trace.
+#[derive(Debug)]
+pub struct Trace {
+    start: Instant,
+    events: Vec<(Duration, Event)>,
+    enabled: bool,
+    cap: usize,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::disabled()
+    }
+}
+
+impl Trace {
+    pub fn enabled(cap: usize) -> Self {
+        Trace {
+            start: Instant::now(),
+            events: Vec::new(),
+            enabled: true,
+            cap,
+        }
+    }
+
+    pub fn disabled() -> Self {
+        Trace {
+            start: Instant::now(),
+            events: Vec::new(),
+            enabled: false,
+            cap: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, e: Event) {
+        if self.enabled && self.events.len() < self.cap {
+            self.events.push((self.start.elapsed(), e));
+        }
+    }
+
+    pub fn events(&self) -> &[(Duration, Event)] {
+        &self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(Event::SnapshotTriggered);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_caps() {
+        let mut t = Trace::enabled(2);
+        for _ in 0..5 {
+            t.record(Event::Resume);
+        }
+        assert_eq!(t.events().len(), 2);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RankMetrics {
+            iterations: 3,
+            msgs_sent: 5,
+            ..Default::default()
+        };
+        let b = RankMetrics {
+            iterations: 2,
+            snapshots: 4,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.iterations, 5);
+        assert_eq!(a.snapshots, 4);
+        assert_eq!(a.msgs_sent, 5);
+    }
+}

@@ -1,0 +1,284 @@
+//! Convection–diffusion operator (paper §4.1).
+//!
+//! PDE on the unit cube with homogeneous Dirichlet boundary:
+//!
+//! ```text
+//! du/dt - ν Δu + a·∇u = s
+//! ```
+//!
+//! Backward Euler + central finite differences on an `n³` interior grid
+//! (spacing h = 1/(n+1)) give, per time step, the sparse system
+//! `A U = B` with the 7-point stencil
+//!
+//! ```text
+//! c_d  = 1/δt + 6ν/h²            c_x∓ = -ν/h² ∓ aₓ/(2h)   (etc. for y,z)
+//! B    = U_prev/δt + s
+//! ```
+//!
+//! Coefficient layout `[c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega]`
+//! matches `python/compile/kernels/ref.py` exactly; the sequential
+//! operations here are the verification oracles for both backends.
+
+use super::{idx3, partition::SubDomain};
+
+/// Problem definition (defaults = the paper's arbitrary values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvDiff {
+    /// Interior grid points per axis.
+    pub n: usize,
+    /// Diffusion coefficient ν.
+    pub nu: f64,
+    /// Convection velocity a.
+    pub a: (f64, f64, f64),
+    /// Time step δt.
+    pub dt: f64,
+    /// Jacobi relaxation weight ω.
+    pub omega: f64,
+}
+
+impl ConvDiff {
+    /// The paper's setup: ν = 0.5, a = (0.1, −0.2, 0.3), δt = 0.01.
+    pub fn paper(n: usize, dt: f64) -> Self {
+        ConvDiff {
+            n,
+            nu: 0.5,
+            a: (0.1, -0.2, 0.3),
+            dt,
+            omega: 1.0,
+        }
+    }
+
+    /// Grid spacing h = 1/(n+1).
+    pub fn h(&self) -> f64 {
+        1.0 / (self.n as f64 + 1.0)
+    }
+
+    /// Stencil coefficients `[c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, ω]`.
+    pub fn coeffs(&self) -> [f64; 8] {
+        let h = self.h();
+        let inv_h2 = 1.0 / (h * h);
+        let inv_2h = 1.0 / (2.0 * h);
+        let (ax, ay, az) = self.a;
+        [
+            1.0 / self.dt + 6.0 * self.nu * inv_h2,
+            -self.nu * inv_h2 - ax * inv_2h,
+            -self.nu * inv_h2 + ax * inv_2h,
+            -self.nu * inv_h2 - ay * inv_2h,
+            -self.nu * inv_h2 + ay * inv_2h,
+            -self.nu * inv_h2 - az * inv_2h,
+            -self.nu * inv_h2 + az * inv_2h,
+            self.omega,
+        ]
+    }
+
+    /// Source term s(x, y, z). A fixed smooth bump keeps the solve
+    /// non-trivial while staying deterministic.
+    pub fn source(&self, x: f64, y: f64, z: f64) -> f64 {
+        1.0 + x * (1.0 - x) * y * (1.0 - y) * z * (1.0 - z) * 100.0
+    }
+
+    /// RHS block for one subdomain: `B = U_prev/δt + s` at each grid point.
+    pub fn rhs_block(&self, sub: &SubDomain, u_prev: &[f64]) -> Vec<f64> {
+        let (nx, ny, nz) = sub.dims;
+        debug_assert_eq!(u_prev.len(), nx * ny * nz);
+        let h = self.h();
+        let mut rhs = vec![0.0; u_prev.len()];
+        for ix in 0..nx {
+            let x = (sub.lo.0 + ix + 1) as f64 * h;
+            for iy in 0..ny {
+                let y = (sub.lo.1 + iy + 1) as f64 * h;
+                for iz in 0..nz {
+                    let z = (sub.lo.2 + iz + 1) as f64 * h;
+                    let i = idx3(sub.dims, ix, iy, iz);
+                    rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
+                }
+            }
+        }
+        rhs
+    }
+
+    /// Sequential `A u` on the full global grid (verification oracle).
+    pub fn apply_global(&self, u: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        debug_assert_eq!(u.len(), n * n * n);
+        let c = self.coeffs();
+        let dims = (n, n, n);
+        let mut out = vec![0.0; u.len()];
+        for ix in 0..n {
+            for iy in 0..n {
+                for iz in 0..n {
+                    let mut acc = c[0] * u[idx3(dims, ix, iy, iz)];
+                    if ix > 0 {
+                        acc += c[1] * u[idx3(dims, ix - 1, iy, iz)];
+                    }
+                    if ix + 1 < n {
+                        acc += c[2] * u[idx3(dims, ix + 1, iy, iz)];
+                    }
+                    if iy > 0 {
+                        acc += c[3] * u[idx3(dims, ix, iy - 1, iz)];
+                    }
+                    if iy + 1 < n {
+                        acc += c[4] * u[idx3(dims, ix, iy + 1, iz)];
+                    }
+                    if iz > 0 {
+                        acc += c[5] * u[idx3(dims, ix, iy, iz - 1)];
+                    }
+                    if iz + 1 < n {
+                        acc += c[6] * u[idx3(dims, ix, iy, iz + 1)];
+                    }
+                    out[idx3(dims, ix, iy, iz)] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// Global RHS for a previous-step solution (verification oracle).
+    pub fn rhs_global(&self, u_prev: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let h = self.h();
+        let dims = (n, n, n);
+        let mut rhs = vec![0.0; n * n * n];
+        for ix in 0..n {
+            for iy in 0..n {
+                for iz in 0..n {
+                    let (x, y, z) = (
+                        (ix + 1) as f64 * h,
+                        (iy + 1) as f64 * h,
+                        (iz + 1) as f64 * h,
+                    );
+                    let i = idx3(dims, ix, iy, iz);
+                    rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
+                }
+            }
+        }
+        rhs
+    }
+
+    /// `‖b − A u‖∞` on the full grid — the paper's reported `r_n`.
+    pub fn residual_max_norm(&self, u: &[f64], b: &[f64]) -> f64 {
+        self.apply_global(u)
+            .iter()
+            .zip(b)
+            .fold(0.0f64, |m, (au, bi)| m.max((bi - au).abs()))
+    }
+
+    /// One sequential global Jacobi sweep (oracle): returns (u_new, res).
+    pub fn sweep_seq(&self, u: &[f64], b: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let au = self.apply_global(u);
+        let c = self.coeffs();
+        let mut u_new = vec![0.0; u.len()];
+        let mut res = vec![0.0; u.len()];
+        for i in 0..u.len() {
+            // r = b - A u ; u* = u + r / c_d ; u_new = u + ω (u* - u)
+            res[i] = b[i] - au[i];
+            let u_star = u[i] + res[i] / c[0];
+            u_new[i] = u[i] + c[7] * (u_star - u[i]);
+        }
+        (u_new, res)
+    }
+
+    /// Strict diagonal dominance margin of A (> 0 ⇒ Jacobi converges).
+    pub fn diagonal_dominance(&self) -> f64 {
+        let c = self.coeffs();
+        c[0] - c[1..7].iter().map(|x| x.abs()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::Partition3D;
+
+    #[test]
+    fn coeffs_match_paper_construction() {
+        let p = ConvDiff::paper(9, 0.01); // h = 0.1
+        let c = p.coeffs();
+        assert!((c[0] - (100.0 + 6.0 * 0.5 * 100.0)).abs() < 1e-12);
+        assert!((c[1] - (-0.5 * 100.0 - 0.1 * 5.0)).abs() < 1e-12);
+        assert!((c[2] - (-0.5 * 100.0 + 0.1 * 5.0)).abs() < 1e-12);
+        assert!((c[3] - (-0.5 * 100.0 + 0.2 * 5.0)).abs() < 1e-12);
+        assert!((c[5] - (-0.5 * 100.0 - 0.3 * 5.0)).abs() < 1e-12);
+        assert_eq!(c[7], 1.0);
+    }
+
+    #[test]
+    fn operator_is_strictly_diagonally_dominant() {
+        for n in [4, 16, 64] {
+            let p = ConvDiff::paper(n, 0.01);
+            assert!(
+                p.diagonal_dominance() > 0.0,
+                "n={n}: dominance {}",
+                p.diagonal_dominance()
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_jacobi_converges() {
+        let p = ConvDiff::paper(6, 0.01);
+        let b = p.rhs_global(&vec![0.0; 216]);
+        let mut u = vec![0.0; 216];
+        let mut last = f64::INFINITY;
+        for _ in 0..200 {
+            let (un, res) = p.sweep_seq(&u, &b);
+            u = un;
+            last = res.iter().fold(0.0f64, |m, r| m.max(r.abs()));
+        }
+        assert!(last < 1e-8, "residual {last}");
+        assert!(p.residual_max_norm(&u, &b) < 1e-8);
+    }
+
+    #[test]
+    fn residual_identity_res_equals_cd_times_delta() {
+        let p = ConvDiff::paper(4, 0.01);
+        let u: Vec<f64> = (0..64).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..64).map(|i| (i as f64).cos()).collect();
+        let (u_new, res) = p.sweep_seq(&u, &b);
+        let c = p.coeffs();
+        for i in 0..64 {
+            assert!((res[i] - c[0] * (u_new[i] - u[i])).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rhs_block_matches_global() {
+        let p = ConvDiff::paper(6, 0.01);
+        let part = Partition3D::cube(6, (2, 1, 1)).unwrap();
+        let u_prev: Vec<f64> = (0..216).map(|i| i as f64 * 0.01).collect();
+        let global = p.rhs_global(&u_prev);
+        for rank in 0..2 {
+            let sub = part.subdomain(rank);
+            // extract this rank's block of u_prev
+            let mut block = vec![0.0; sub.volume()];
+            let (nx, ny, nz) = sub.dims;
+            for ix in 0..nx {
+                for iy in 0..ny {
+                    for iz in 0..nz {
+                        block[idx3(sub.dims, ix, iy, iz)] = u_prev[idx3(
+                            (6, 6, 6),
+                            sub.lo.0 + ix,
+                            sub.lo.1 + iy,
+                            sub.lo.2 + iz,
+                        )];
+                    }
+                }
+            }
+            let rhs = p.rhs_block(&sub, &block);
+            for ix in 0..nx {
+                for iy in 0..ny {
+                    for iz in 0..nz {
+                        let want = global[idx3(
+                            (6, 6, 6),
+                            sub.lo.0 + ix,
+                            sub.lo.1 + iy,
+                            sub.lo.2 + iz,
+                        )];
+                        let got = rhs[idx3(sub.dims, ix, iy, iz)];
+                        assert!((got - want).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Halo face extraction from row-major blocks.
+
+use super::{idx3, Face};
+
+/// Number of points on `face` of a block with the given dims.
+pub fn face_size(dims: (usize, usize, usize), face: Face) -> usize {
+    let (nx, ny, nz) = dims;
+    match face.axis_dir().0 {
+        0 => ny * nz,
+        1 => nx * nz,
+        _ => nx * ny,
+    }
+}
+
+/// Extract the boundary plane of `u` on `face` into `out` (row-major over
+/// the two remaining axes, matching the Python model's face layout).
+pub fn extract_face(u: &[f64], dims: (usize, usize, usize), face: Face, out: &mut [f64]) {
+    let (nx, ny, nz) = dims;
+    debug_assert_eq!(u.len(), nx * ny * nz);
+    debug_assert_eq!(out.len(), face_size(dims, face));
+    match face {
+        Face::XM | Face::XP => {
+            let ix = if face == Face::XM { 0 } else { nx - 1 };
+            // plane (ny, nz) is contiguous in memory
+            let start = idx3(dims, ix, 0, 0);
+            out.copy_from_slice(&u[start..start + ny * nz]);
+        }
+        Face::YM | Face::YP => {
+            let iy = if face == Face::YM { 0 } else { ny - 1 };
+            for ix in 0..nx {
+                let start = idx3(dims, ix, iy, 0);
+                out[ix * nz..(ix + 1) * nz].copy_from_slice(&u[start..start + nz]);
+            }
+        }
+        Face::ZM | Face::ZP => {
+            let iz = if face == Face::ZM { 0 } else { nz - 1 };
+            for ix in 0..nx {
+                for iy in 0..ny {
+                    out[ix * ny + iy] = u[idx3(dims, ix, iy, iz)];
+                }
+            }
+        }
+    }
+}
+
+/// Convenience allocating variant.
+pub fn extract_face_vec(u: &[f64], dims: (usize, usize, usize), face: Face) -> Vec<f64> {
+    let mut out = vec![0.0; face_size(dims, face)];
+    extract_face(u, dims, face, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(dims: (usize, usize, usize)) -> Vec<f64> {
+        (0..dims.0 * dims.1 * dims.2).map(|i| i as f64).collect()
+    }
+
+    #[test]
+    fn face_sizes() {
+        let dims = (2, 3, 4);
+        assert_eq!(face_size(dims, Face::XM), 12);
+        assert_eq!(face_size(dims, Face::YP), 8);
+        assert_eq!(face_size(dims, Face::ZM), 6);
+    }
+
+    #[test]
+    fn x_faces_are_contiguous_planes() {
+        let dims = (2, 3, 4);
+        let u = block(dims);
+        assert_eq!(extract_face_vec(&u, dims, Face::XM), u[0..12].to_vec());
+        assert_eq!(extract_face_vec(&u, dims, Face::XP), u[12..24].to_vec());
+    }
+
+    #[test]
+    fn y_faces() {
+        let dims = (2, 3, 4);
+        let u = block(dims);
+        // YM: points (ix, 0, iz) -> layout [ix*nz + iz]
+        let ym = extract_face_vec(&u, dims, Face::YM);
+        for ix in 0..2 {
+            for iz in 0..4 {
+                assert_eq!(ym[ix * 4 + iz], u[idx3(dims, ix, 0, iz)]);
+            }
+        }
+        let yp = extract_face_vec(&u, dims, Face::YP);
+        for ix in 0..2 {
+            for iz in 0..4 {
+                assert_eq!(yp[ix * 4 + iz], u[idx3(dims, ix, 2, iz)]);
+            }
+        }
+    }
+
+    #[test]
+    fn z_faces() {
+        let dims = (2, 3, 4);
+        let u = block(dims);
+        let zm = extract_face_vec(&u, dims, Face::ZM);
+        let zp = extract_face_vec(&u, dims, Face::ZP);
+        for ix in 0..2 {
+            for iy in 0..3 {
+                assert_eq!(zm[ix * 3 + iy], u[idx3(dims, ix, iy, 0)]);
+                assert_eq!(zp[ix * 3 + iy], u[idx3(dims, ix, iy, 3)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! The paper's evaluation workload: 3-D convection–diffusion on the unit
+//! cube, finite differences + backward Euler, box-partitioned over the
+//! processes (paper §4.1, Fig. 2).
+
+pub mod convdiff;
+pub mod halo;
+pub mod partition;
+
+pub use convdiff::ConvDiff;
+pub use halo::{extract_face, extract_face_vec, face_size};
+pub use partition::{Partition3D, SubDomain};
+
+/// Face directions of a box subdomain, in the canonical link order used
+/// everywhere (send/recv buffer `l` ↔ the l-th *existing* face in this
+/// order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Face {
+    XM = 0,
+    XP = 1,
+    YM = 2,
+    YP = 3,
+    ZM = 4,
+    ZP = 5,
+}
+
+impl Face {
+    pub const ALL: [Face; 6] = [Face::XM, Face::XP, Face::YM, Face::YP, Face::ZM, Face::ZP];
+
+    /// The face seen from the neighbour's side.
+    pub fn opposite(self) -> Face {
+        match self {
+            Face::XM => Face::XP,
+            Face::XP => Face::XM,
+            Face::YM => Face::YP,
+            Face::YP => Face::YM,
+            Face::ZM => Face::ZP,
+            Face::ZP => Face::ZM,
+        }
+    }
+
+    /// Axis (0, 1, 2) and direction (-1, +1).
+    pub fn axis_dir(self) -> (usize, isize) {
+        match self {
+            Face::XM => (0, -1),
+            Face::XP => (0, 1),
+            Face::YM => (1, -1),
+            Face::YP => (1, 1),
+            Face::ZM => (2, -1),
+            Face::ZP => (2, 1),
+        }
+    }
+}
+
+/// Row-major (x, y, z) index into a block of dims (nx, ny, nz).
+#[inline]
+pub fn idx3(dims: (usize, usize, usize), ix: usize, iy: usize, iz: usize) -> usize {
+    debug_assert!(ix < dims.0 && iy < dims.1 && iz < dims.2);
+    (ix * dims.1 + iy) * dims.2 + iz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opposites() {
+        for f in Face::ALL {
+            assert_eq!(f.opposite().opposite(), f);
+            let (ax, d) = f.axis_dir();
+            let (ax2, d2) = f.opposite().axis_dir();
+            assert_eq!(ax, ax2);
+            assert_eq!(d, -d2);
+        }
+    }
+
+    #[test]
+    fn idx3_is_row_major() {
+        let dims = (2, 3, 4);
+        assert_eq!(idx3(dims, 0, 0, 0), 0);
+        assert_eq!(idx3(dims, 0, 0, 1), 1);
+        assert_eq!(idx3(dims, 0, 1, 0), 4);
+        assert_eq!(idx3(dims, 1, 0, 0), 12);
+        assert_eq!(idx3(dims, 1, 2, 3), 23);
+    }
+}

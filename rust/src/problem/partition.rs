@@ -1,0 +1,220 @@
+//! 3-D box partitioning of the cube (paper Fig. 2): the global grid of
+//! `n³` interior points is split over a `px × py × pz` process grid; each
+//! rank owns one box subdomain and talks to its face neighbours.
+
+use super::{halo::face_size, Face};
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::simmpi::Rank;
+
+/// Global partition description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition3D {
+    /// Interior grid points per axis.
+    pub n: (usize, usize, usize),
+    /// Process grid.
+    pub grid: (usize, usize, usize),
+}
+
+/// One rank's subdomain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubDomain {
+    pub rank: Rank,
+    /// Process-grid coordinates.
+    pub coords: (usize, usize, usize),
+    /// Global offset of the block's first point, per axis.
+    pub lo: (usize, usize, usize),
+    /// Block dims (nx, ny, nz).
+    pub dims: (usize, usize, usize),
+}
+
+/// Split `n` points into `p` nearly-equal parts; part `i` gets
+/// `n/p + (i < n%p)` points. Returns (offset, size).
+fn split_axis(n: usize, p: usize, i: usize) -> (usize, usize) {
+    let q = n / p;
+    let r = n % p;
+    let size = q + usize::from(i < r);
+    let offset = i * q + i.min(r);
+    (offset, size)
+}
+
+impl Partition3D {
+    pub fn new(n: (usize, usize, usize), grid: (usize, usize, usize)) -> Result<Self> {
+        if grid.0 == 0 || grid.1 == 0 || grid.2 == 0 {
+            return Err(Error::Config("process grid axes must be positive".into()));
+        }
+        if n.0 < grid.0 || n.1 < grid.1 || n.2 < grid.2 {
+            return Err(Error::Config(format!(
+                "grid {n:?} too small for process grid {grid:?}"
+            )));
+        }
+        Ok(Partition3D { n, grid })
+    }
+
+    /// Uniform cube helper.
+    pub fn cube(n: usize, grid: (usize, usize, usize)) -> Result<Self> {
+        Partition3D::new((n, n, n), grid)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.grid.0 * self.grid.1 * self.grid.2
+    }
+
+    /// Rank of process-grid coordinates (row-major, like `idx3`).
+    pub fn rank_of(&self, c: (usize, usize, usize)) -> Rank {
+        (c.0 * self.grid.1 + c.1) * self.grid.2 + c.2
+    }
+
+    /// Process-grid coordinates of a rank.
+    pub fn coords_of(&self, rank: Rank) -> (usize, usize, usize) {
+        let cz = rank % self.grid.2;
+        let cy = (rank / self.grid.2) % self.grid.1;
+        let cx = rank / (self.grid.1 * self.grid.2);
+        (cx, cy, cz)
+    }
+
+    /// The subdomain owned by `rank`.
+    pub fn subdomain(&self, rank: Rank) -> SubDomain {
+        let c = self.coords_of(rank);
+        let (ox, nx) = split_axis(self.n.0, self.grid.0, c.0);
+        let (oy, ny) = split_axis(self.n.1, self.grid.1, c.1);
+        let (oz, nz) = split_axis(self.n.2, self.grid.2, c.2);
+        SubDomain {
+            rank,
+            coords: c,
+            lo: (ox, oy, oz),
+            dims: (nx, ny, nz),
+        }
+    }
+
+    /// Existing face neighbours of `rank` in canonical [`Face::ALL`] order.
+    pub fn face_neighbors(&self, rank: Rank) -> Vec<(Face, Rank)> {
+        let (cx, cy, cz) = self.coords_of(rank);
+        let mut out = Vec::new();
+        for f in Face::ALL {
+            let (axis, dir) = f.axis_dir();
+            let c = [cx as isize, cy as isize, cz as isize];
+            let mut cc = c;
+            cc[axis] += dir;
+            let g = [self.grid.0 as isize, self.grid.1 as isize, self.grid.2 as isize];
+            if cc[axis] >= 0 && cc[axis] < g[axis] {
+                out.push((
+                    f,
+                    self.rank_of((cc[0] as usize, cc[1] as usize, cc[2] as usize)),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Consistent per-rank communication graphs (symmetric: halo exchange
+    /// needs both directions on every face link).
+    pub fn comm_graphs(&self) -> Result<Vec<CommGraph>> {
+        (0..self.world_size())
+            .map(|r| {
+                let nb: Vec<Rank> = self.face_neighbors(r).iter().map(|&(_, j)| j).collect();
+                CommGraph::symmetric(r, nb)
+            })
+            .collect()
+    }
+
+    /// Per-link send/recv buffer sizes for `rank`, in link order.
+    /// (Send and recv sizes are equal: both are the face area.)
+    pub fn buffer_sizes(&self, rank: Rank) -> Vec<usize> {
+        let sub = self.subdomain(rank);
+        self.face_neighbors(rank)
+            .iter()
+            .map(|&(f, _)| face_size(sub.dims, f))
+            .collect()
+    }
+}
+
+impl SubDomain {
+    pub fn volume(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{is_connected, validate_world};
+
+    #[test]
+    fn split_axis_balanced_and_covering() {
+        for (n, p) in [(10, 3), (16, 4), (7, 7), (5, 2)] {
+            let mut total = 0;
+            let mut next = 0;
+            for i in 0..p {
+                let (off, size) = split_axis(n, p, i);
+                assert_eq!(off, next, "contiguous");
+                assert!(size >= n / p && size <= n / p + 1, "balanced");
+                next = off + size;
+                total += size;
+            }
+            assert_eq!(total, n, "covers");
+        }
+    }
+
+    #[test]
+    fn rank_coords_roundtrip() {
+        let p = Partition3D::cube(12, (2, 3, 2)).unwrap();
+        for r in 0..p.world_size() {
+            assert_eq!(p.rank_of(p.coords_of(r)), r);
+        }
+    }
+
+    #[test]
+    fn subdomains_tile_the_cube() {
+        let p = Partition3D::cube(10, (2, 2, 3)).unwrap();
+        let total: usize = (0..p.world_size()).map(|r| p.subdomain(r).volume()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn face_neighbors_corner_and_interior() {
+        let p = Partition3D::cube(9, (3, 3, 3)).unwrap();
+        // corner (0,0,0): XP, YP, ZP only
+        let nb = p.face_neighbors(0);
+        let faces: Vec<Face> = nb.iter().map(|&(f, _)| f).collect();
+        assert_eq!(faces, vec![Face::XP, Face::YP, Face::ZP]);
+        // center (1,1,1) = rank 13: all six
+        let center = p.rank_of((1, 1, 1));
+        assert_eq!(p.face_neighbors(center).len(), 6);
+    }
+
+    #[test]
+    fn neighbor_faces_are_mutual() {
+        let p = Partition3D::cube(8, (2, 2, 2)).unwrap();
+        for r in 0..p.world_size() {
+            for (f, j) in p.face_neighbors(r) {
+                let back = p.face_neighbors(j);
+                assert!(
+                    back.contains(&(f.opposite(), r)),
+                    "rank {r} face {f:?} -> {j} not mirrored"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn comm_graphs_valid_and_connected() {
+        let p = Partition3D::cube(8, (2, 2, 2)).unwrap();
+        let g = p.comm_graphs().unwrap();
+        validate_world(&g).unwrap();
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn buffer_sizes_match_faces() {
+        let p = Partition3D::new((4, 6, 8), (2, 1, 1)).unwrap();
+        // rank 0: dims (2,6,8); only XP neighbour; face area = 6*8
+        assert_eq!(p.buffer_sizes(0), vec![48]);
+    }
+
+    #[test]
+    fn rejects_oversplit() {
+        assert!(Partition3D::cube(2, (3, 1, 1)).is_err());
+        assert!(Partition3D::cube(2, (0, 1, 1)).is_err());
+    }
+}

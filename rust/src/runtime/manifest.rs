@@ -1,0 +1,149 @@
+//! Artifact manifest reader (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json;
+
+/// One AOT-compiled sweep artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Block shape (nx, ny, nz).
+    pub shape: (usize, usize, usize),
+    /// Inner relaxation sweeps per call (1 = plain sweep).
+    pub k: usize,
+    /// HLO text file name, relative to the artifact directory.
+    pub file: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dtype: String,
+    pub inputs: Vec<String>,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {path:?}: {e}; run `make artifacts` first"
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let dtype = v
+            .get("dtype")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::Runtime("manifest missing dtype".into()))?
+            .to_string();
+        if dtype != "f64" {
+            return Err(Error::Runtime(format!(
+                "unsupported artifact dtype {dtype:?} (runtime marshals f64)"
+            )));
+        }
+        let inputs = v
+            .get("inputs")
+            .and_then(|x| x.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let entries = v
+            .get("entries")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Runtime("manifest missing entries".into()))?
+            .iter()
+            .map(|e| {
+                let shape = e
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .filter(|a| a.len() == 3)
+                    .ok_or_else(|| Error::Runtime("entry missing 3-d shape".into()))?;
+                let file = e
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| Error::Runtime("entry missing file".into()))?
+                    .to_string();
+                Ok(ManifestEntry {
+                    shape: (
+                        shape[0].as_usize().unwrap_or(0),
+                        shape[1].as_usize().unwrap_or(0),
+                        shape[2].as_usize().unwrap_or(0),
+                    ),
+                    k: e.get("k").and_then(|x| x.as_usize()).unwrap_or(1),
+                    file,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dtype,
+            inputs,
+            entries,
+        })
+    }
+
+    /// Find the plain (k = 1) artifact for a block shape.
+    pub fn entry_for(&self, dims: (usize, usize, usize)) -> Option<&ManifestEntry> {
+        self.entry_for_k(dims, 1)
+    }
+
+    /// Find the artifact for a block shape and inner-sweep count.
+    pub fn entry_for_k(&self, dims: (usize, usize, usize), k: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.shape == dims && e.k == k)
+    }
+
+    /// All available (shape, k) pairs (error messages).
+    pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self.entries.iter().map(|e| e.shape).collect();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "format": "hlo-text", "dtype": "f64", "coeff_len": 8,
+        "inputs": ["u","xm","xp","ym","yp","zm","zp","rhs","coeffs"],
+        "outputs": ["u_new","res"],
+        "entries": [
+            {"shape": [8,8,8], "file": "sweep_8x8x8_f64.hlo.txt", "hlo_bytes": 1},
+            {"shape": [16,16,16], "file": "sweep_16x16x16_f64.hlo.txt", "hlo_bytes": 2}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_looks_up() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.inputs.len(), 9);
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(
+            m.entry_for((16, 16, 16)).unwrap().file,
+            "sweep_16x16x16_f64.hlo.txt"
+        );
+        assert!(m.entry_for((4, 4, 4)).is_none());
+        assert_eq!(m.shapes(), vec![(8, 8, 8), (16, 16, 16)]);
+    }
+
+    #[test]
+    fn rejects_f32() {
+        let doc = DOC.replace("f64", "f32");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_entries() {
+        assert!(Manifest::parse(r#"{"dtype":"f64"}"#).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python never runs at solve time: `make artifacts` lowers the L2 JAX
+//! sweep (which embeds the L1 Pallas kernel) to HLO *text* once, and this
+//! module compiles it with the PJRT CPU client at startup. HLO text — not
+//! serialized protos — is the interchange format because jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::problem::Face;
+
+fn rt_err<E: std::fmt::Display>(e: E) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// PJRT client wrapper. One per process; executables are cheap handles.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifact_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(rt_err)?;
+        Ok(Engine {
+            client,
+            artifact_dir,
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile the plain (k = 1) sweep executable for a block shape.
+    pub fn load_sweep(&self, dims: (usize, usize, usize)) -> Result<SweepExecutable> {
+        self.load_sweep_k(dims, 1)
+    }
+
+    /// Compile the k-inner-sweep executable for a block shape. Fails with
+    /// a clear message if no artifact was AOT-compiled for these dims.
+    pub fn load_sweep_k(&self, dims: (usize, usize, usize), k: usize) -> Result<SweepExecutable> {
+        let entry = self.manifest.entry_for_k(dims, k).ok_or_else(|| {
+            Error::Runtime(format!(
+                "no AOT artifact for block shape {dims:?} with k={k}; \
+                 available shapes: {:?} (re-run `make artifacts` with --shapes)",
+                self.manifest.shapes()
+            ))
+        })?;
+        let path = self.artifact_dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(rt_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt_err)?;
+        Ok(SweepExecutable {
+            exe: Arc::new(SharedExe(exe)),
+            dims,
+        })
+    }
+}
+
+/// Send/Sync wrapper over the xla crate's executable handle.
+///
+/// SAFETY: the `xla` crate wraps raw PJRT pointers without auto traits,
+/// but the PJRT C API guarantees `PJRT_LoadedExecutable_Execute` (and the
+/// CPU client generally) is thread-safe; executables are immutable after
+/// compilation. The rank threads only call `execute`, never mutate.
+struct SharedExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
+/// A compiled sweep for one block shape. Clone-able across rank threads
+/// (PJRT executables are internally thread-safe).
+#[derive(Clone)]
+pub struct SweepExecutable {
+    exe: Arc<SharedExe>,
+    dims: (usize, usize, usize),
+}
+
+impl SweepExecutable {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// Build the (nx, ny, nz) literal for a block (used by callers that
+    /// cache invariant inputs, e.g. the per-time-step RHS).
+    pub(crate) fn block_literal(&self, v: &[f64]) -> Result<xla::Literal> {
+        let (nx, ny, nz) = self.dims;
+        xla::Literal::vec1(v)
+            .reshape(&[nx as i64, ny as i64, nz as i64])
+            .map_err(rt_err)
+    }
+
+    /// Execute one sweep.
+    ///
+    /// Input order matches the manifest: `u, xm, xp, ym, yp, zm, zp, rhs,
+    /// coeffs`; faces must be full-size (zeros on physical boundaries).
+    /// Returns `(u_new, res)`.
+    pub fn run(
+        &self,
+        u: &[f64],
+        faces: [&[f64]; 6],
+        rhs: &[f64],
+        coeffs: &[f64; 8],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let rhs_lit = self.block_literal(rhs)?;
+        let coeffs_lit = xla::Literal::vec1(coeffs.as_slice());
+        self.run_cached(u, faces, &rhs_lit, &coeffs_lit)
+    }
+
+    /// Execute one sweep with the invariant inputs pre-marshalled
+    /// (§Perf #8: the RHS is constant per time step and the coefficient
+    /// vector per solve, so the hot loop re-uploads only `u` + faces).
+    pub fn run_cached(
+        &self,
+        u: &[f64],
+        faces: [&[f64]; 6],
+        rhs_lit: &xla::Literal,
+        coeffs_lit: &xla::Literal,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (nx, ny, nz) = self.dims;
+        let vol = nx * ny * nz;
+        if u.len() != vol {
+            return Err(Error::Runtime(format!(
+                "block size mismatch: got {} expected {vol}",
+                u.len()
+            )));
+        }
+        let lit2 = |v: &[f64], r: usize, c: usize| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(&[r as i64, c as i64])
+                .map_err(rt_err)
+        };
+        let face_dims: [(usize, usize); 6] =
+            [(ny, nz), (ny, nz), (nx, nz), (nx, nz), (nx, ny), (nx, ny)];
+        for (f, (r, c)) in Face::ALL.iter().zip(face_dims) {
+            let i = *f as usize;
+            if faces[i].len() != r * c {
+                return Err(Error::Runtime(format!(
+                    "face {f:?} size {} != {}",
+                    faces[i].len(),
+                    r * c
+                )));
+            }
+        }
+        let u_lit = self.block_literal(u)?;
+        let f0 = lit2(faces[0], ny, nz)?;
+        let f1 = lit2(faces[1], ny, nz)?;
+        let f2 = lit2(faces[2], nx, nz)?;
+        let f3 = lit2(faces[3], nx, nz)?;
+        let f4 = lit2(faces[4], nx, ny)?;
+        let f5 = lit2(faces[5], nx, ny)?;
+        let args: [&xla::Literal; 9] = [
+            &u_lit, &f0, &f1, &f2, &f3, &f4, &f5, rhs_lit, coeffs_lit,
+        ];
+        let result = self.exe.0.execute::<&xla::Literal>(&args).map_err(rt_err)?[0][0]
+            .to_literal_sync()
+            .map_err(rt_err)?;
+        // aot.py lowers with return_tuple=True: output is a 2-tuple.
+        let (u_lit, res_lit) = result.to_tuple2().map_err(rt_err)?;
+        let u_new = u_lit.to_vec::<f64>().map_err(rt_err)?;
+        let res = res_lit.to_vec::<f64>().map_err(rt_err)?;
+        Ok((u_new, res))
+    }
+}

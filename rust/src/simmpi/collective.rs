@@ -1,0 +1,380 @@
+//! Collective operations built on the point-to-point layer.
+//!
+//! JACK2's own norm machinery uses spanning-tree reductions
+//! ([`crate::jack::norm`]); these binomial-tree collectives are provided
+//! for the *synchronous* baseline (the paper's "MPI reduction operation",
+//! §3.1) and for tests. Tags in `[COLL_TAG_BASE, COLL_TAG_BASE + 5]` are
+//! reserved; a collective may be called repeatedly but not concurrently
+//! with itself on the same tag.
+//!
+//! [`IAllreduce`] is the *non-blocking* variant — the paper's conclusion
+//! anticipates evolving the distributed norm to "MPI 3 non-blocking
+//! collective routines"; this is that routine on the simulated substrate.
+
+use std::time::Duration;
+
+use super::world::Endpoint;
+use super::{Rank, Tag};
+use crate::error::Result;
+
+/// Reserved tag namespace for collectives (top of the tag space; JACK2
+/// protocol tags live far below — see [`crate::jack::messages`]).
+pub const COLL_TAG_BASE: Tag = u64::MAX - 16;
+const TAG_REDUCE: Tag = COLL_TAG_BASE;
+const TAG_BCAST: Tag = COLL_TAG_BASE + 1;
+const TAG_BARRIER_UP: Tag = COLL_TAG_BASE + 2;
+const TAG_BARRIER_DOWN: Tag = COLL_TAG_BASE + 3;
+const TAG_IALLRED_UP: Tag = COLL_TAG_BASE + 4;
+const TAG_IALLRED_DOWN: Tag = COLL_TAG_BASE + 5;
+
+const COLL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Elementwise reduction operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    fn apply(self, acc: &mut [f64], other: &[f64]) {
+        debug_assert_eq!(acc.len(), other.len());
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a = match self {
+                ReduceOp::Sum => *a + *b,
+                ReduceOp::Max => a.max(*b),
+                ReduceOp::Min => a.min(*b),
+            };
+        }
+    }
+}
+
+fn children(rank: Rank, size: usize) -> impl Iterator<Item = Rank> {
+    let c1 = 2 * rank + 1;
+    let c2 = 2 * rank + 2;
+    [c1, c2].into_iter().filter(move |&c| c < size)
+}
+
+fn parent(rank: Rank) -> Option<Rank> {
+    if rank == 0 {
+        None
+    } else {
+        Some((rank - 1) / 2)
+    }
+}
+
+/// All-reduce over the whole world: every rank contributes `local` and
+/// receives the elementwise reduction. Binary-tree up + broadcast down.
+pub fn allreduce(ep: &mut Endpoint, local: &[f64], op: ReduceOp) -> Result<Vec<f64>> {
+    let size = ep.world_size();
+    let rank = ep.rank();
+    let mut acc = local.to_vec();
+    for c in children(rank, size) {
+        let mut req = ep.irecv(c, TAG_REDUCE);
+        let data = ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+        op.apply(&mut acc, &data);
+    }
+    if let Some(p) = parent(rank) {
+        ep.isend(p, TAG_REDUCE, acc.clone())?;
+        let mut req = ep.irecv(p, TAG_BCAST);
+        acc = ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+    }
+    for c in children(rank, size) {
+        ep.isend(c, TAG_BCAST, acc.clone())?;
+    }
+    Ok(acc)
+}
+
+/// Broadcast `data` from rank 0 to all ranks. On non-root ranks the input
+/// is ignored and the received payload returned.
+pub fn broadcast(ep: &mut Endpoint, data: Vec<f64>) -> Result<Vec<f64>> {
+    let size = ep.world_size();
+    let rank = ep.rank();
+    let payload = if let Some(p) = parent(rank) {
+        let mut req = ep.irecv(p, TAG_BCAST);
+        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?
+    } else {
+        data
+    };
+    for c in children(rank, size) {
+        ep.isend(c, TAG_BCAST, payload.clone())?;
+    }
+    Ok(payload)
+}
+
+/// Barrier over the whole world (tree up then down).
+pub fn barrier(ep: &mut Endpoint) -> Result<()> {
+    let size = ep.world_size();
+    let rank = ep.rank();
+    for c in children(rank, size) {
+        let mut req = ep.irecv(c, TAG_BARRIER_UP);
+        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+    }
+    if let Some(p) = parent(rank) {
+        ep.isend(p, TAG_BARRIER_UP, Vec::new())?;
+        let mut req = ep.irecv(p, TAG_BARRIER_DOWN);
+        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+    }
+    for c in children(rank, size) {
+        ep.isend(c, TAG_BARRIER_DOWN, Vec::new())?;
+    }
+    Ok(())
+}
+
+/// Non-blocking all-reduce (`MPI_Iallreduce` analogue).
+///
+/// Start with [`IAllreduce::start`], then [`IAllreduce::poll`] from the
+/// iteration loop until it returns the reduced vector. One instance may
+/// be outstanding per rank at a time (messages carry a round id so
+/// back-to-back reductions never mix).
+#[derive(Debug)]
+pub struct IAllreduce {
+    op: ReduceOp,
+    round: u64,
+    acc: Vec<f64>,
+    pending_children: Vec<Rank>,
+    sent_up: bool,
+    /// Early next-round contributions (child raced ahead).
+    stash: Vec<(Rank, u64, Vec<f64>)>,
+    result: Option<Vec<f64>>,
+}
+
+impl IAllreduce {
+    /// Begin a non-blocking all-reduce of `local`. `round` must increase
+    /// by 1 on every successive reduction (start at 1).
+    pub fn start(ep: &Endpoint, local: &[f64], op: ReduceOp, round: u64) -> Self {
+        IAllreduce {
+            op,
+            round,
+            acc: local.to_vec(),
+            pending_children: children(ep.rank(), ep.world_size()).collect(),
+            sent_up: false,
+            stash: Vec::new(),
+            result: None,
+        }
+    }
+
+    /// Seed early contributions stashed by a previous round's handle.
+    pub fn adopt_stash(&mut self, stash: Vec<(Rank, u64, Vec<f64>)>) {
+        for (c, r, data) in stash {
+            if r == self.round {
+                self.op.apply(&mut self.acc, &data);
+                self.pending_children.retain(|&x| x != c);
+            } else if r > self.round {
+                self.stash.push((c, r, data));
+            }
+        }
+    }
+
+    /// Take the stash for the next round's handle.
+    pub fn take_stash(&mut self) -> Vec<(Rank, u64, Vec<f64>)> {
+        std::mem::take(&mut self.stash)
+    }
+
+    /// Advance; returns the reduced vector once complete (then keeps
+    /// returning it).
+    pub fn poll(&mut self, ep: &mut Endpoint) -> Result<Option<Vec<f64>>> {
+        if let Some(r) = &self.result {
+            return Ok(Some(r.clone()));
+        }
+        let rank = ep.rank();
+        // gather children
+        let mut i = 0;
+        while i < self.pending_children.len() {
+            let c = self.pending_children[i];
+            let mut advanced = false;
+            while let Some(msg) = ep.try_match(c, TAG_IALLRED_UP) {
+                let r = msg[0] as u64;
+                let data = msg[1..].to_vec();
+                if r == self.round {
+                    self.op.apply(&mut self.acc, &data);
+                    self.pending_children.remove(i);
+                    advanced = true;
+                    break;
+                } else if r > self.round {
+                    self.stash.push((c, r, data));
+                }
+            }
+            if !advanced {
+                i += 1;
+            }
+        }
+        if self.pending_children.is_empty() && !self.sent_up {
+            if let Some(p) = parent(rank) {
+                let mut msg = Vec::with_capacity(self.acc.len() + 1);
+                msg.push(self.round as f64);
+                msg.extend_from_slice(&self.acc);
+                ep.isend(p, TAG_IALLRED_UP, msg)?;
+            }
+            self.sent_up = true;
+        }
+        if self.sent_up {
+            if parent(rank).is_none() {
+                // root: result is the accumulator
+                for c in children(rank, ep.world_size()) {
+                    let mut msg = Vec::with_capacity(self.acc.len() + 1);
+                    msg.push(self.round as f64);
+                    msg.extend_from_slice(&self.acc);
+                    ep.isend(c, TAG_IALLRED_DOWN, msg)?;
+                }
+                self.result = Some(self.acc.clone());
+            } else if let Some(msg) = ep.try_match(parent(rank).unwrap(), TAG_IALLRED_DOWN) {
+                let r = msg[0] as u64;
+                if r == self.round {
+                    let data = msg[1..].to_vec();
+                    for c in children(rank, ep.world_size()) {
+                        let mut m = Vec::with_capacity(data.len() + 1);
+                        m.push(r as f64);
+                        m.extend_from_slice(&data);
+                        ep.isend(c, TAG_IALLRED_DOWN, m)?;
+                    }
+                    self.result = Some(data);
+                }
+                // stale DOWN messages are impossible: one outstanding per
+                // rank and rounds are strictly sequential.
+            }
+        }
+        Ok(self.result.clone())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.result.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use std::thread;
+
+    fn run_world<F>(p: usize, f: F) -> Vec<Vec<f64>>
+    where
+        F: Fn(&mut Endpoint) -> Vec<f64> + Send + Sync + 'static,
+    {
+        let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(5, 0.2));
+        let (_w, eps) = World::new(cfg);
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let f = f.clone();
+                thread::spawn(move || f(&mut ep))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sum_all_sizes() {
+        for p in [1, 2, 3, 5, 8] {
+            let out = run_world(p, |ep| {
+                allreduce(ep, &[ep.rank() as f64, 1.0], ReduceOp::Sum).unwrap()
+            });
+            let want_sum = (0..p).sum::<usize>() as f64;
+            for o in out {
+                assert_eq!(o, vec![want_sum, p as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_max_min() {
+        let out = run_world(6, |ep| {
+            let mx = allreduce(ep, &[ep.rank() as f64], ReduceOp::Max).unwrap();
+            let mn = allreduce(ep, &[ep.rank() as f64], ReduceOp::Min).unwrap();
+            vec![mx[0], mn[0]]
+        });
+        for o in out {
+            assert_eq!(o, vec![5.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let out = run_world(7, |ep| {
+            let data = if ep.rank() == 0 { vec![3.25, -1.0] } else { vec![] };
+            broadcast(ep, data).unwrap()
+        });
+        for o in out {
+            assert_eq!(o, vec![3.25, -1.0]);
+        }
+    }
+
+    #[test]
+    fn iallreduce_matches_blocking() {
+        for p in [1, 2, 4, 7] {
+            let out = run_world(p, |ep| {
+                // two back-to-back non-blocking reductions with stash
+                // hand-off, against the blocking oracle
+                let mut results = Vec::new();
+                let mut stash = Vec::new();
+                for round in 1..=2u64 {
+                    let local = [ep.rank() as f64 + round as f64];
+                    let mut h = IAllreduce::start(ep, &local, ReduceOp::Sum, round);
+                    h.adopt_stash(std::mem::take(&mut stash));
+                    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+                    let out = loop {
+                        if let Some(r) = h.poll(ep).unwrap() {
+                            break r;
+                        }
+                        assert!(std::time::Instant::now() < deadline, "iallreduce hung");
+                        std::thread::yield_now();
+                    };
+                    stash = h.take_stash();
+                    results.push(out[0]);
+                }
+                results
+            });
+            for o in out {
+                let want1: f64 = (0..p).map(|r| r as f64 + 1.0).sum();
+                let want2: f64 = (0..p).map(|r| r as f64 + 2.0).sum();
+                assert_eq!(o, vec![want1, want2], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn iallreduce_overlaps_with_work() {
+        // the handle completes even if polled rarely, interleaved with
+        // "compute" — the non-blocking property the paper wants.
+        let out = run_world(3, |ep| {
+            let local = [1.0];
+            let mut h = IAllreduce::start(ep, &local, ReduceOp::Max, 1);
+            let mut polls = 0;
+            let r = loop {
+                std::thread::sleep(Duration::from_micros(200)); // compute
+                polls += 1;
+                if let Some(r) = h.poll(ep).unwrap() {
+                    break r;
+                }
+            };
+            assert!(h.is_complete());
+            vec![r[0], polls as f64]
+        });
+        for o in out {
+            assert_eq!(o[0], 1.0);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let before = Arc::new(AtomicUsize::new(0));
+        let b2 = before.clone();
+        let out = run_world(4, move |ep| {
+            // stagger arrival
+            std::thread::sleep(Duration::from_millis(ep.rank() as u64 * 10));
+            b2.fetch_add(1, Ordering::SeqCst);
+            barrier(ep).unwrap();
+            vec![b2.load(Ordering::SeqCst) as f64]
+        });
+        // after the barrier every rank must observe all 4 arrivals
+        for o in out {
+            assert_eq!(o, vec![4.0]);
+        }
+        assert_eq!(before.load(Ordering::SeqCst), 4);
+    }
+}

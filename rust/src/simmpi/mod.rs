@@ -1,0 +1,38 @@
+//! # simmpi — simulated MPI substrate
+//!
+//! JACK2 is an MPI-based library; this module is the substrate substitution
+//! documented in `DESIGN.md` §2: an in-process message-passing layer that
+//! reproduces exactly the MPI contract the paper's library consumes —
+//!
+//! * a fixed set of ranks created together (a *world*),
+//! * non-blocking point-to-point sends/receives returning request handles
+//!   ([`SendRequest`], [`RecvRequest`]) with `test`/`wait` semantics,
+//! * per-(source, tag) non-overtaking message ordering,
+//! * tags to multiplex independent protocols over the same link,
+//!
+//! plus the pieces a real cluster would add and a laptop would not:
+//! a configurable [`network::NetworkModel`] (base latency, bandwidth term,
+//! jitter, per-link scaling) and per-rank compute-speed factors
+//! ([`world::WorldConfig::rank_speed`]) used by the solver drivers to
+//! emulate heterogeneous nodes.
+//!
+//! The implementation is real-time (messages become visible when their
+//! simulated arrival instant passes) and thread-per-rank: each rank owns an
+//! [`Endpoint`] moved into its worker thread, mirroring one MPI process.
+
+pub mod collective;
+pub mod network;
+pub mod request;
+pub mod world;
+
+pub use collective::{allreduce, barrier, broadcast, IAllreduce, ReduceOp};
+pub use network::{LinkDelay, NetworkModel};
+pub use request::{RecvRequest, RequestState, SendRequest};
+pub use world::{Endpoint, World, WorldConfig, WorldMetricsSnapshot};
+
+/// Rank index within a world (an "MPI rank").
+pub type Rank = usize;
+
+/// Message tag. JACK2 packs protocol ids into tags; see
+/// [`crate::jack::messages`].
+pub type Tag = u64;

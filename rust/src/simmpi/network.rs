@@ -1,0 +1,268 @@
+//! Network model: simulated message transit times.
+//!
+//! Transit time for a message of `n` bytes on link (src → dst):
+//!
+//! ```text
+//! t = (base_latency + n * per_byte) * link_scale[src][dst] * (1 + U(0, jitter))
+//! ```
+//!
+//! where `U` is uniform noise from a per-endpoint seeded RNG, so runs are
+//! reproducible given a seed. `link_scale` defaults to all-ones; the
+//! cluster-profile constructors give Table-1-like heterogeneity.
+//!
+//! With a finite [`NetworkModel::bandwidth`], each directed link also
+//! *serializes*: a message occupies the wire for `n / bandwidth` seconds
+//! and later messages queue behind it. This is what makes unbounded
+//! pending-send pile-up (paper §3.3, Algorithm 6's motivation) actually
+//! deliver stale data rather than being free.
+
+use std::time::{Duration, Instant};
+
+use super::Rank;
+use crate::util::Rng64;
+
+/// Parameters of the simulated interconnect.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Fixed per-message latency.
+    pub base_latency: Duration,
+    /// Transfer cost per payload byte.
+    pub per_byte: Duration,
+    /// Relative jitter amplitude: each transit is multiplied by
+    /// `1 + U(0, jitter_frac)`.
+    pub jitter_frac: f64,
+    /// Optional per-link multiplier matrix (`scale[src][dst]`); empty means
+    /// homogeneous links.
+    pub link_scale: Vec<Vec<f64>>,
+    /// Finite per-link bandwidth in bytes/s: messages serialize on the
+    /// wire, so queued sends delay later ones. `None` = infinite.
+    pub bandwidth: Option<f64>,
+    /// Transient-fault model: every `spike_every`-th message from an
+    /// endpoint suffers an extra `spike` delay (network hiccups, link
+    /// retries — the paper's "resource failures" motivation). 0 = off.
+    pub spike_every: u64,
+    /// Extra delay applied by the fault model.
+    pub spike: Duration,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // Fast LAN-ish defaults: 20 µs base, ~1 GB/s flat per-byte cost,
+        // no wire serialization.
+        NetworkModel {
+            base_latency: Duration::from_micros(20),
+            per_byte: Duration::from_nanos(1),
+            jitter_frac: 0.1,
+            link_scale: Vec::new(),
+            bandwidth: None,
+            spike_every: 0,
+            spike: Duration::ZERO,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Zero-latency, zero-jitter model for deterministic protocol tests.
+    pub fn instant() -> Self {
+        NetworkModel {
+            base_latency: Duration::ZERO,
+            per_byte: Duration::ZERO,
+            jitter_frac: 0.0,
+            link_scale: Vec::new(),
+            bandwidth: None,
+            spike_every: 0,
+            spike: Duration::ZERO,
+        }
+    }
+
+    /// Homogeneous model with the given base latency (µs) and jitter.
+    pub fn uniform(base_us: u64, jitter_frac: f64) -> Self {
+        NetworkModel {
+            base_latency: Duration::from_micros(base_us),
+            per_byte: Duration::from_nanos(1),
+            jitter_frac,
+            link_scale: Vec::new(),
+            bandwidth: None,
+            spike_every: 0,
+            spike: Duration::ZERO,
+        }
+    }
+
+    /// Cluster-like profile: ranks are grouped into "nodes" of size
+    /// `node_size`; intra-node links are `intra_us`, inter-node links are
+    /// `inter_us` (both µs). Mirrors the paper's Altix/Bullx setups where
+    /// message cost is dominated by whether traffic crosses the fabric.
+    pub fn cluster(p: usize, node_size: usize, intra_us: u64, inter_us: u64, jitter: f64) -> Self {
+        let mut scale = vec![vec![1.0; p]; p];
+        let base = Duration::from_micros(intra_us.max(1));
+        let ratio = inter_us as f64 / intra_us.max(1) as f64;
+        for (s, row) in scale.iter_mut().enumerate() {
+            for (d, v) in row.iter_mut().enumerate() {
+                if node_size > 0 && s / node_size != d / node_size {
+                    *v = ratio;
+                }
+            }
+        }
+        NetworkModel {
+            base_latency: base,
+            per_byte: Duration::from_nanos(1),
+            jitter_frac: jitter,
+            link_scale: scale,
+            bandwidth: None,
+            spike_every: 0,
+            spike: Duration::ZERO,
+        }
+    }
+
+    fn scale(&self, src: Rank, dst: Rank) -> f64 {
+        self.link_scale
+            .get(src)
+            .and_then(|row| row.get(dst))
+            .copied()
+            .unwrap_or(1.0)
+    }
+}
+
+/// Per-endpoint sampler of link transit times; owns a seeded RNG so the
+/// jitter sequence of each rank is reproducible.
+pub struct LinkDelay {
+    model: NetworkModel,
+    rng: Rng64,
+    /// One-shot extra delays injected per destination (fault injection).
+    pending_spikes: Vec<Duration>,
+    /// When each outgoing wire becomes free (bandwidth serialization).
+    wire_free: Vec<Option<Instant>>,
+    /// Messages sent so far (drives the transient-fault model).
+    msg_count: u64,
+}
+
+impl LinkDelay {
+    pub fn new(model: NetworkModel, seed: u64, rank: Rank, world_size: usize) -> Self {
+        LinkDelay {
+            model,
+            rng: Rng64::new(seed).fork(rank as u64 + 1),
+            pending_spikes: vec![Duration::ZERO; world_size],
+            wire_free: vec![None; world_size],
+            msg_count: 0,
+        }
+    }
+
+    /// Sample the transit time of an `n_bytes` message to `dst`
+    /// (latency + per-byte + jitter terms; no wire serialization).
+    pub fn sample(&mut self, src: Rank, dst: Rank, n_bytes: usize) -> Duration {
+        let det = self.model.base_latency + self.model.per_byte * n_bytes as u32;
+        let scaled = det.as_secs_f64() * self.model.scale(src, dst);
+        let jit = if self.model.jitter_frac > 0.0 {
+            1.0 + self.rng.range_f64(0.0, self.model.jitter_frac)
+        } else {
+            1.0
+        };
+        let mut spike = std::mem::replace(&mut self.pending_spikes[dst], Duration::ZERO);
+        self.msg_count += 1;
+        if self.model.spike_every > 0 && self.msg_count % self.model.spike_every == 0 {
+            spike += self.model.spike;
+        }
+        Duration::from_secs_f64(scaled * jit) + spike
+    }
+
+    /// Arrival instant of an `n_bytes` message sent *now* to `dst`:
+    /// the message first occupies the wire for `n / bandwidth` (queueing
+    /// behind earlier unsent traffic on the same link), then takes the
+    /// sampled transit time.
+    pub fn deliver_at(&mut self, src: Rank, dst: Rank, n_bytes: usize) -> Instant {
+        let now = Instant::now();
+        let start = match self.model.bandwidth {
+            Some(bw) if bw > 0.0 => {
+                let wire = Duration::from_secs_f64(n_bytes as f64 / bw);
+                let begin = self.wire_free[dst].map_or(now, |f| f.max(now));
+                let done = begin + wire;
+                self.wire_free[dst] = Some(done);
+                done
+            }
+            _ => now,
+        };
+        start + self.sample(src, dst, n_bytes)
+    }
+
+    /// Fault injection: delay the *next* message to `dst` by `extra`.
+    pub fn inject_spike(&mut self, dst: Rank, extra: Duration) {
+        self.pending_spikes[dst] += extra;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_model_is_zero() {
+        let mut ld = LinkDelay::new(NetworkModel::instant(), 1, 0, 4);
+        assert_eq!(ld.sample(0, 1, 1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn per_byte_term_scales_with_size() {
+        let m = NetworkModel {
+            base_latency: Duration::ZERO,
+            per_byte: Duration::from_nanos(10),
+            jitter_frac: 0.0,
+            link_scale: Vec::new(),
+            bandwidth: None,
+            spike_every: 0,
+            spike: Duration::ZERO,
+        };
+        let mut ld = LinkDelay::new(m, 1, 0, 2);
+        assert_eq!(ld.sample(0, 1, 100), Duration::from_micros(1));
+        assert_eq!(ld.sample(0, 1, 1000), Duration::from_micros(10));
+    }
+
+    #[test]
+    fn cluster_profile_penalizes_inter_node() {
+        let m = NetworkModel::cluster(8, 4, 10, 100, 0.0);
+        let mut ld = LinkDelay::new(m, 7, 0, 8);
+        let intra = ld.sample(0, 3, 0);
+        let inter = ld.sample(0, 4, 0);
+        assert!(inter > intra * 5, "inter={inter:?} intra={intra:?}");
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_reproducible() {
+        let m = NetworkModel::uniform(100, 0.5);
+        let mut a = LinkDelay::new(m.clone(), 42, 3, 8);
+        let mut b = LinkDelay::new(m, 42, 3, 8);
+        for _ in 0..100 {
+            let da = a.sample(3, 1, 0);
+            let db = b.sample(3, 1, 0);
+            assert_eq!(da, db);
+            assert!(da >= Duration::from_micros(100));
+            assert!(da <= Duration::from_micros(151));
+        }
+    }
+
+    #[test]
+    fn bandwidth_serializes_wire() {
+        let mut m = NetworkModel::instant();
+        m.bandwidth = Some(1_000_000.0); // 1 MB/s: 1000 bytes = 1 ms wire
+        let mut ld = LinkDelay::new(m, 1, 0, 2);
+        let t0 = Instant::now();
+        let a = ld.deliver_at(0, 1, 1000);
+        let b = ld.deliver_at(0, 1, 1000);
+        assert!(a >= t0 + Duration::from_millis(1));
+        assert!(
+            b >= a + Duration::from_millis(1),
+            "second message must queue behind the first"
+        );
+        // other link unaffected
+        let mut ld2 = LinkDelay::new(NetworkModel::instant(), 1, 0, 2);
+        let c = ld2.deliver_at(0, 1, 1000);
+        assert!(c < t0 + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn spike_applies_once() {
+        let mut ld = LinkDelay::new(NetworkModel::instant(), 1, 0, 2);
+        ld.inject_spike(1, Duration::from_millis(5));
+        assert_eq!(ld.sample(0, 1, 0), Duration::from_millis(5));
+        assert_eq!(ld.sample(0, 1, 0), Duration::ZERO);
+    }
+}

@@ -1,0 +1,93 @@
+//! Non-blocking request handles (the MPI `MPI_Request` analogue).
+
+use std::time::{Duration, Instant};
+
+/// Completion state of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Pending,
+    Complete,
+}
+
+/// Handle for a non-blocking send.
+///
+/// Semantics follow `MPI_Isend` with an eager/buffered transport: the
+/// payload is moved into the network immediately (the user buffer is
+/// reusable), but the request reports completion only once the message has
+/// *arrived* at the destination mailbox. This is the property JACK2's
+/// Algorithm 6 relies on: a pending send marks the outgoing channel busy,
+/// and new sends on that channel are discarded rather than queued.
+#[derive(Debug)]
+pub struct SendRequest {
+    pub(crate) deliver_at: Instant,
+    pub(crate) bytes: usize,
+}
+
+impl SendRequest {
+    /// Non-blocking completion test (`MPI_Test`).
+    pub fn test(&self) -> bool {
+        Instant::now() >= self.deliver_at
+    }
+
+    /// Blocking wait (`MPI_Wait`).
+    pub fn wait(&self) {
+        let now = Instant::now();
+        if now < self.deliver_at {
+            std::thread::sleep(self.deliver_at - now);
+        }
+    }
+
+    /// Payload size in bytes (metrics).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn state(&self) -> RequestState {
+        if self.test() {
+            RequestState::Complete
+        } else {
+            RequestState::Pending
+        }
+    }
+}
+
+/// Handle for a non-blocking receive (`MPI_Irecv` analogue).
+///
+/// Matching is lazy: the request records `(src, tag)` and matches the
+/// oldest visible packet on that lane when polled. Per-(src, tag) order is
+/// non-overtaking, as in MPI.
+#[derive(Debug)]
+pub struct RecvRequest {
+    pub(crate) src: super::Rank,
+    pub(crate) tag: super::Tag,
+    pub(crate) data: Option<Vec<f64>>,
+}
+
+impl RecvRequest {
+    pub fn src(&self) -> super::Rank {
+        self.src
+    }
+
+    pub fn tag(&self) -> super::Tag {
+        self.tag
+    }
+
+    /// True once a message has been matched (after a successful
+    /// [`super::Endpoint::test_recv`] / `wait_recv`).
+    pub fn is_complete(&self) -> bool {
+        self.data.is_some()
+    }
+
+    /// Take the matched payload, leaving the request consumed.
+    pub fn take(&mut self) -> Option<Vec<f64>> {
+        self.data.take()
+    }
+}
+
+/// Bounded sleep helper used by blocking waits.
+pub(crate) fn sleep_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep((t - now).min(Duration::from_millis(2)));
+    }
+}

@@ -1,0 +1,523 @@
+//! World construction and per-rank endpoints.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::network::{LinkDelay, NetworkModel};
+use super::request::{sleep_until, RecvRequest, SendRequest};
+use super::{Rank, Tag};
+use crate::error::{Error, Result};
+
+/// Configuration of a simulated world.
+#[derive(Debug, Clone)]
+pub struct WorldConfig {
+    /// Number of ranks.
+    pub size: usize,
+    /// Interconnect model.
+    pub network: NetworkModel,
+    /// Seed for all jitter RNGs (runs are reproducible given a seed).
+    pub seed: u64,
+    /// Relative compute speed of each rank (1.0 = nominal). Consumed by
+    /// the solver drivers to emulate heterogeneous nodes; empty means
+    /// homogeneous.
+    pub rank_speed: Vec<f64>,
+}
+
+impl WorldConfig {
+    pub fn homogeneous(size: usize) -> Self {
+        WorldConfig {
+            size,
+            network: NetworkModel::default(),
+            seed: 0xC0FFEE,
+            rank_speed: Vec::new(),
+        }
+    }
+
+    pub fn with_network(mut self, network: NetworkModel) -> Self {
+        self.network = network;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_rank_speed(mut self, speed: Vec<f64>) -> Self {
+        self.rank_speed = speed;
+        self
+    }
+
+    pub fn speed_of(&self, rank: Rank) -> f64 {
+        self.rank_speed.get(rank).copied().unwrap_or(1.0)
+    }
+}
+
+struct Packet {
+    tag: Tag,
+    data: Vec<f64>,
+    deliver_at: Instant,
+}
+
+/// One receive lane per (dst, src) ordered pair; FIFO preserves MPI's
+/// non-overtaking guarantee per (src, tag).
+struct Mailbox {
+    queues: Vec<VecDeque<Packet>>,
+}
+
+struct Lane {
+    mailbox: Mutex<Mailbox>,
+    cv: Condvar,
+}
+
+/// Global world counters (lock-free).
+#[derive(Default)]
+struct Metrics {
+    msgs_sent: AtomicU64,
+    bytes_sent: AtomicU64,
+    msgs_delivered: AtomicU64,
+}
+
+/// Read-only snapshot of world counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorldMetricsSnapshot {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_delivered: u64,
+}
+
+struct Shared {
+    size: usize,
+    lanes: Vec<Lane>, // indexed by destination rank
+    metrics: Metrics,
+}
+
+/// A simulated MPI world. Create once, hand one [`Endpoint`] to each rank
+/// thread.
+pub struct World {
+    shared: Arc<Shared>,
+    config: WorldConfig,
+}
+
+impl World {
+    /// Build a world and its endpoints. `endpoints[i]` belongs to rank `i`.
+    pub fn new(config: WorldConfig) -> (World, Vec<Endpoint>) {
+        assert!(config.size > 0, "world size must be positive");
+        let lanes = (0..config.size)
+            .map(|_| Lane {
+                mailbox: Mutex::new(Mailbox {
+                    queues: (0..config.size).map(|_| VecDeque::new()).collect(),
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            size: config.size,
+            lanes,
+            metrics: Metrics::default(),
+        });
+        let endpoints = (0..config.size)
+            .map(|rank| Endpoint {
+                rank,
+                shared: shared.clone(),
+                delay: LinkDelay::new(config.network.clone(), config.seed, rank, config.size),
+                speed: config.speed_of(rank),
+            })
+            .collect();
+        (World { shared, config }, endpoints)
+    }
+
+    /// Convenience constructor for a homogeneous world.
+    pub fn homogeneous(size: usize) -> (World, Vec<Endpoint>) {
+        World::new(WorldConfig::homogeneous(size))
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    pub fn config(&self) -> &WorldConfig {
+        &self.config
+    }
+
+    /// Snapshot the global message counters.
+    pub fn metrics(&self) -> WorldMetricsSnapshot {
+        WorldMetricsSnapshot {
+            msgs_sent: self.shared.metrics.msgs_sent.load(Ordering::Relaxed),
+            bytes_sent: self.shared.metrics.bytes_sent.load(Ordering::Relaxed),
+            msgs_delivered: self.shared.metrics.msgs_delivered.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One rank's communication endpoint (the "MPI process" handle).
+///
+/// `Endpoint` is `Send` (moved into the rank's worker thread) but not
+/// `Sync`: exactly one thread drives each rank, as in MPI's
+/// single-threaded-per-rank usage that JACK2 assumes.
+pub struct Endpoint {
+    rank: Rank,
+    shared: Arc<Shared>,
+    delay: LinkDelay,
+    speed: f64,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.shared.size
+    }
+
+    /// Relative compute speed of this rank (see [`WorldConfig::rank_speed`]).
+    pub fn speed(&self) -> f64 {
+        self.speed
+    }
+
+    /// Non-blocking send (`MPI_Isend`). The payload is moved into the
+    /// destination mailbox with a simulated arrival instant; the returned
+    /// request completes when that instant passes.
+    pub fn isend(&mut self, dst: Rank, tag: Tag, data: Vec<f64>) -> Result<SendRequest> {
+        if dst >= self.shared.size {
+            return Err(Error::Transport(format!(
+                "isend to rank {dst} out of range (world size {})",
+                self.shared.size
+            )));
+        }
+        let n_bytes = data.len() * std::mem::size_of::<f64>();
+        let deliver_at = self.delay.deliver_at(self.rank, dst, n_bytes);
+        {
+            let lane = &self.shared.lanes[dst];
+            let mut mb = lane.mailbox.lock().unwrap();
+            mb.queues[self.rank].push_back(Packet {
+                tag,
+                data,
+                deliver_at,
+            });
+            lane.cv.notify_all();
+        }
+        self.shared.metrics.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .metrics
+            .bytes_sent
+            .fetch_add(n_bytes as u64, Ordering::Relaxed);
+        Ok(SendRequest {
+            deliver_at,
+            bytes: n_bytes,
+        })
+    }
+
+    /// Post a non-blocking receive for `(src, tag)` (`MPI_Irecv`).
+    pub fn irecv(&self, src: Rank, tag: Tag) -> RecvRequest {
+        RecvRequest {
+            src,
+            tag,
+            data: None,
+        }
+    }
+
+    /// Poll a receive request (`MPI_Test`). On a match the payload is
+    /// stored in the request (take it with [`RecvRequest::take`]).
+    pub fn test_recv(&self, req: &mut RecvRequest) -> bool {
+        if req.data.is_some() {
+            return true;
+        }
+        if let Some(data) = self.try_match(req.src, req.tag) {
+            req.data = Some(data);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Blocking wait on a receive request (`MPI_Wait`), with an optional
+    /// timeout. Returns the payload.
+    pub fn wait_recv(&self, req: &mut RecvRequest, timeout: Option<Duration>) -> Result<Vec<f64>> {
+        if let Some(data) = req.data.take() {
+            return Ok(data);
+        }
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let lane = &self.shared.lanes[self.rank];
+        let mut mb = lane.mailbox.lock().unwrap();
+        loop {
+            // Scan this (src, tag) lane under the lock.
+            let q = &mut mb.queues[req.src];
+            let now = Instant::now();
+            let mut wake_at: Option<Instant> = None;
+            let mut hit: Option<usize> = None;
+            for (i, p) in q.iter().enumerate() {
+                if p.tag == req.tag {
+                    if p.deliver_at <= now {
+                        hit = Some(i);
+                    } else {
+                        wake_at = Some(p.deliver_at);
+                    }
+                    break; // non-overtaking: only the oldest same-tag packet
+                }
+            }
+            if let Some(i) = hit {
+                let p = q.remove(i).expect("index valid under lock");
+                self.shared
+                    .metrics
+                    .msgs_delivered
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(p.data);
+            }
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    return Err(Error::Transport(format!(
+                        "timeout waiting for (src={}, tag={:#x}) at rank {}",
+                        req.src, req.tag, self.rank
+                    )));
+                }
+            }
+            // Sleep until the in-flight packet becomes visible, a new packet
+            // arrives, or a short poll tick elapses.
+            let tick = Duration::from_micros(200);
+            let wait = match (wake_at, deadline) {
+                (Some(w), Some(d)) => (w.min(d)).saturating_duration_since(Instant::now()).min(tick).max(Duration::from_micros(1)),
+                (Some(w), None) => w.saturating_duration_since(Instant::now()).max(Duration::from_micros(1)),
+                (None, _) => tick,
+            };
+            let (g, _) = lane.cv.wait_timeout(mb, wait).unwrap();
+            mb = g;
+        }
+    }
+
+    /// Blocking multiplexed wait: return the first visible message
+    /// matching any of `pairs` (`(src, tag)`), or `None` on timeout.
+    /// Event-driven — wakes on message arrival via the mailbox condvar —
+    /// so protocol hops cost transit time, not polling granularity.
+    pub fn wait_any(
+        &self,
+        pairs: &[(Rank, Tag)],
+        timeout: Duration,
+    ) -> Option<(usize, Vec<f64>)> {
+        let lane = &self.shared.lanes[self.rank];
+        let deadline = Instant::now() + timeout;
+        let mut mb = lane.mailbox.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut wake: Option<Instant> = None;
+            let mut hit: Option<(usize, Rank, usize)> = None;
+            'scan: for (i, &(src, tag)) in pairs.iter().enumerate() {
+                for (j, p) in mb.queues[src].iter().enumerate() {
+                    if p.tag == tag {
+                        if p.deliver_at <= now {
+                            hit = Some((i, src, j));
+                            break 'scan;
+                        }
+                        wake = Some(wake.map_or(p.deliver_at, |w: Instant| w.min(p.deliver_at)));
+                        break; // non-overtaking per (src, tag)
+                    }
+                }
+            }
+            if let Some((i, src, j)) = hit {
+                let p = mb.queues[src].remove(j).expect("index valid under lock");
+                self.shared
+                    .metrics
+                    .msgs_delivered
+                    .fetch_add(1, Ordering::Relaxed);
+                return Some((i, p.data));
+            }
+            if now >= deadline {
+                return None;
+            }
+            let until = wake.map_or(deadline, |w| w.min(deadline));
+            let wait = until
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(5))
+                .max(Duration::from_micros(1));
+            let (g, _) = lane.cv.wait_timeout(mb, wait).unwrap();
+            mb = g;
+        }
+    }
+
+    /// Immediate poll: take the oldest visible `(src, tag)` message if any.
+    pub fn try_match(&self, src: Rank, tag: Tag) -> Option<Vec<f64>> {
+        let lane = &self.shared.lanes[self.rank];
+        let mut mb = lane.mailbox.lock().unwrap();
+        let q = &mut mb.queues[src];
+        let now = Instant::now();
+        let mut hit = None;
+        for (i, p) in q.iter().enumerate() {
+            if p.tag == tag {
+                if p.deliver_at <= now {
+                    hit = Some(i);
+                }
+                break; // non-overtaking per (src, tag)
+            }
+        }
+        let i = hit?;
+        let p = q.remove(i).expect("index valid under lock");
+        self.shared
+            .metrics
+            .msgs_delivered
+            .fetch_add(1, Ordering::Relaxed);
+        Some(p.data)
+    }
+
+    /// Count of visible (deliverable now) messages from `src` with `tag`.
+    pub fn probe_count(&self, src: Rank, tag: Tag) -> usize {
+        let lane = &self.shared.lanes[self.rank];
+        let mb = lane.mailbox.lock().unwrap();
+        let now = Instant::now();
+        mb.queues[src]
+            .iter()
+            .take_while(|p| p.tag != tag || p.deliver_at <= now)
+            .filter(|p| p.tag == tag)
+            .count()
+    }
+
+    /// Fault injection: delay the next message sent to `dst` by `extra`.
+    pub fn inject_link_delay(&mut self, dst: Rank, extra: Duration) {
+        self.delay.inject_spike(dst, extra);
+    }
+
+    /// Simulate roughly `nominal` of compute, scaled by this rank's speed
+    /// factor (slow ranks take proportionally longer). Sleeps rather than
+    /// spins: a slow node does not steal cycles from other nodes, and the
+    /// host may have fewer cores than simulated ranks.
+    pub fn simulate_compute(&self, nominal: Duration) {
+        let scaled = Duration::from_secs_f64(nominal.as_secs_f64() / self.speed);
+        std::thread::sleep(scaled);
+    }
+
+    /// Sleep until `t` in small slices (keeps the thread responsive).
+    pub fn sleep_until(&self, t: Instant) {
+        while Instant::now() < t {
+            sleep_until(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn instant_world(p: usize) -> (World, Vec<Endpoint>) {
+        World::new(
+            WorldConfig::homogeneous(p).with_network(NetworkModel::instant()),
+        )
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (_w, mut eps) = instant_world(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            e1.isend(0, 7, vec![1.0, 2.0, 3.0]).unwrap();
+        });
+        let mut req = e0.irecv(1, 7);
+        let data = e0.wait_recv(&mut req, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(data, vec![1.0, 2.0, 3.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tag_multiplexing_on_one_link() {
+        let (_w, mut eps) = instant_world(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 1, vec![1.0]).unwrap();
+        e1.isend(0, 2, vec![2.0]).unwrap();
+        e1.isend(0, 1, vec![3.0]).unwrap();
+        // tag 2 can be taken before the queued tag-1 messages
+        assert_eq!(e0.try_match(1, 2), Some(vec![2.0]));
+        // tag 1 arrives in order
+        assert_eq!(e0.try_match(1, 1), Some(vec![1.0]));
+        assert_eq!(e0.try_match(1, 1), Some(vec![3.0]));
+        assert_eq!(e0.try_match(1, 1), None);
+    }
+
+    #[test]
+    fn latency_gates_visibility() {
+        let cfg = WorldConfig::homogeneous(2)
+            .with_network(NetworkModel::uniform(20_000, 0.0)); // 20 ms
+        let (_w, mut eps) = World::new(cfg);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let req = e1.isend(0, 5, vec![9.0]).unwrap();
+        assert!(!req.test(), "send must be in flight");
+        assert_eq!(e0.try_match(1, 5), None, "not visible before latency");
+        let mut r = e0.irecv(1, 5);
+        let data = e0.wait_recv(&mut r, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(data, vec![9.0]);
+        assert!(req.test(), "send complete after delivery");
+    }
+
+    #[test]
+    fn wait_timeout_errors() {
+        let (_w, eps) = instant_world(2);
+        let mut r = eps[0].irecv(1, 1);
+        let err = eps[0].wait_recv(&mut r, Some(Duration::from_millis(10)));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn out_of_range_send_fails() {
+        let (_w, mut eps) = instant_world(1);
+        assert!(eps[0].isend(3, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn metrics_count_messages() {
+        let (w, mut eps) = instant_world(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 1, vec![0.0; 8]).unwrap();
+        assert_eq!(w.metrics().msgs_sent, 1);
+        assert_eq!(w.metrics().bytes_sent, 64);
+        let _ = e0.try_match(1, 1).unwrap();
+        assert_eq!(w.metrics().msgs_delivered, 1);
+    }
+
+    #[test]
+    fn many_to_one_stress() {
+        let (_w, mut eps) = instant_world(5);
+        let e0 = eps.remove(0);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut e| {
+                thread::spawn(move || {
+                    for i in 0..100 {
+                        e.isend(0, 42, vec![e.rank() as f64, i as f64]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Each source lane is FIFO: i values must be increasing per source.
+        let mut last = vec![-1.0; 5];
+        let mut count = 0;
+        for src in 1..5 {
+            while let Some(d) = e0.try_match(src, 42) {
+                assert_eq!(d[0] as usize, src);
+                assert!(d[1] > last[src]);
+                last[src] = d[1];
+                count += 1;
+            }
+        }
+        assert_eq!(count, 400);
+    }
+
+    #[test]
+    fn probe_count_sees_visible_only() {
+        let (_w, mut eps) = instant_world(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 3, vec![1.0]).unwrap();
+        e1.isend(0, 3, vec![2.0]).unwrap();
+        assert_eq!(e0.probe_count(1, 3), 2);
+        let _ = e0.try_match(1, 3);
+        assert_eq!(e0.probe_count(1, 3), 1);
+    }
+}

@@ -1,0 +1,45 @@
+//! Compute backend abstraction: who evaluates the subdomain sweep.
+
+use crate::error::Result;
+
+/// One subdomain's compute phase (the paper's `Compute(...)` in Listing 6).
+///
+/// Implementations update `u` in place with the relaxed iterate and fill
+/// `res` with the pointwise residual `b − A u` (evaluated at the *input*
+/// iterate). `faces` are the six halo planes in [`crate::problem::Face`]
+/// order; physical-boundary faces are all-zero slices.
+pub trait ComputeBackend: Send {
+    /// Block dims this backend was built for.
+    fn dims(&self) -> (usize, usize, usize);
+
+    /// One sweep: `u ← u + ω((b − Σc·halo)/c_d − u)`, `res ← b − A u`.
+    fn sweep(
+        &mut self,
+        u: &mut Vec<f64>,
+        faces: [&[f64]; 6],
+        rhs: &[f64],
+        coeffs: &[f64; 8],
+        res: &mut Vec<f64>,
+    ) -> Result<()>;
+
+    /// `k` sweeps with *frozen* halo faces (block relaxation — the
+    /// asynchronous model permits any number of local updates between
+    /// exchanges). Default: loop [`Self::sweep`]; backends may provide a
+    /// fused implementation (the XLA backend compiles a k-sweep artifact).
+    fn sweep_k(
+        &mut self,
+        u: &mut Vec<f64>,
+        faces: [&[f64]; 6],
+        rhs: &[f64],
+        coeffs: &[f64; 8],
+        res: &mut Vec<f64>,
+        k: usize,
+    ) -> Result<()> {
+        for _ in 0..k.max(1) {
+            self.sweep(u, faces, rhs, coeffs, res)?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,12 @@
+//! Parallel iterative solvers over JACK2: the paper's three schemes
+//! (Algorithms 1–3) with pluggable compute backends.
+
+pub mod backend;
+pub mod driver;
+pub mod native;
+pub mod xla_backend;
+
+pub use backend::ComputeBackend;
+pub use driver::{assemble_global, solve, SolveReport, StepReport};
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;

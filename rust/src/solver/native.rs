@@ -1,0 +1,201 @@
+//! Pure-Rust compute backend: the same 7-point weighted-Jacobi sweep the
+//! L1 Pallas kernel implements, used by the large parameter sweeps and as
+//! the cross-check for the XLA backend.
+
+use super::backend::ComputeBackend;
+use crate::error::{Error, Result};
+use crate::problem::idx3;
+
+/// Allocation-free (after construction) native sweep.
+pub struct NativeBackend {
+    dims: (usize, usize, usize),
+    scratch: Vec<f64>,
+}
+
+impl NativeBackend {
+    pub fn new(dims: (usize, usize, usize)) -> Self {
+        NativeBackend {
+            dims,
+            scratch: vec![0.0; dims.0 * dims.1 * dims.2],
+        }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    fn sweep(
+        &mut self,
+        u: &mut Vec<f64>,
+        faces: [&[f64]; 6],
+        rhs: &[f64],
+        coeffs: &[f64; 8],
+        res: &mut Vec<f64>,
+    ) -> Result<()> {
+        let (nx, ny, nz) = self.dims;
+        let vol = nx * ny * nz;
+        if u.len() != vol || rhs.len() != vol || res.len() != vol {
+            return Err(Error::Config(format!(
+                "native sweep: block size mismatch (u {}, rhs {}, res {}, want {vol})",
+                u.len(),
+                rhs.len(),
+                res.len()
+            )));
+        }
+        let [c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega] = *coeffs;
+        let (xm, xp, ym, yp, zm, zp) = (faces[0], faces[1], faces[2], faces[3], faces[4], faces[5]);
+        debug_assert_eq!(xm.len(), ny * nz);
+        debug_assert_eq!(ym.len(), nx * nz);
+        debug_assert_eq!(zm.len(), nx * ny);
+
+        let out = &mut self.scratch;
+        let inv_cd = 1.0 / c_d;
+        for ix in 0..nx {
+            for iy in 0..ny {
+                let row = idx3((nx, ny, nz), ix, iy, 0);
+                for iz in 0..nz {
+                    let i = row + iz;
+                    let vxm = if ix > 0 { u[i - ny * nz] } else { xm[iy * nz + iz] };
+                    let vxp = if ix + 1 < nx { u[i + ny * nz] } else { xp[iy * nz + iz] };
+                    let vym = if iy > 0 { u[i - nz] } else { ym[ix * nz + iz] };
+                    let vyp = if iy + 1 < ny { u[i + nz] } else { yp[ix * nz + iz] };
+                    let vzm = if iz > 0 { u[i - 1] } else { zm[ix * ny + iy] };
+                    let vzp = if iz + 1 < nz { u[i + 1] } else { zp[ix * ny + iy] };
+                    let neigh = c_xm * vxm
+                        + c_xp * vxp
+                        + c_ym * vym
+                        + c_yp * vyp
+                        + c_zm * vzm
+                        + c_zp * vzp;
+                    let u_star = (rhs[i] - neigh) * inv_cd;
+                    let d = u_star - u[i];
+                    res[i] = c_d * d;
+                    out[i] = u[i] + omega * d;
+                }
+            }
+        }
+        std::mem::swap(u, out);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::{extract_face_vec, ConvDiff, Face, Partition3D};
+
+    /// Single-subdomain native sweep must match the sequential oracle.
+    #[test]
+    fn matches_sequential_oracle() {
+        let n = 6;
+        let p = ConvDiff::paper(n, 0.01);
+        let dims = (n, n, n);
+        let mut u: Vec<f64> = (0..n * n * n).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = (0..n * n * n).map(|i| (i as f64 * 0.3).cos()).collect();
+        let (want_u, want_r) = p.sweep_seq(&u, &b);
+
+        let zero_x = vec![0.0; n * n];
+        let faces: [&[f64]; 6] = [&zero_x, &zero_x, &zero_x, &zero_x, &zero_x, &zero_x];
+        let mut res = vec![0.0; n * n * n];
+        let mut be = NativeBackend::new(dims);
+        be.sweep(&mut u, faces, &b, &p.coeffs(), &mut res).unwrap();
+        for i in 0..u.len() {
+            assert!((u[i] - want_u[i]).abs() < 1e-13, "u[{i}]");
+            assert!((res[i] - want_r[i]).abs() < 1e-13, "res[{i}]");
+        }
+    }
+
+    /// Two half-domains with exchanged faces == one global sweep.
+    #[test]
+    fn partitioned_sweep_matches_global() {
+        let n = 4;
+        let p = ConvDiff::paper(n, 0.01);
+        let part = Partition3D::cube(n, (2, 1, 1)).unwrap();
+        let g_dims = (n, n, n);
+        let u_g: Vec<f64> = (0..64).map(|i| (i as f64 * 0.2).sin()).collect();
+        let b_g: Vec<f64> = (0..64).map(|i| (i as f64 * 0.5).cos()).collect();
+        let (want_u, _) = p.sweep_seq(&u_g, &b_g);
+
+        // split into blocks
+        let mut blocks = Vec::new();
+        let mut rhss = Vec::new();
+        for r in 0..2 {
+            let sub = part.subdomain(r);
+            let mut blk = vec![0.0; sub.volume()];
+            let mut rb = vec![0.0; sub.volume()];
+            let (bx, by, bz) = sub.dims;
+            for ix in 0..bx {
+                for iy in 0..by {
+                    for iz in 0..bz {
+                        let gi = crate::problem::idx3(
+                            g_dims,
+                            sub.lo.0 + ix,
+                            sub.lo.1 + iy,
+                            sub.lo.2 + iz,
+                        );
+                        blk[crate::problem::idx3(sub.dims, ix, iy, iz)] = u_g[gi];
+                        rb[crate::problem::idx3(sub.dims, ix, iy, iz)] = b_g[gi];
+                    }
+                }
+            }
+            blocks.push(blk);
+            rhss.push(rb);
+        }
+        // exchange faces: rank 0's XP face is rank 1's XM halo
+        let f0_xp = extract_face_vec(&blocks[0], part.subdomain(0).dims, Face::XP);
+        let f1_xm = extract_face_vec(&blocks[1], part.subdomain(1).dims, Face::XM);
+        let zero_x = vec![0.0; n * n]; // ny*nz
+        let zero_yz = vec![0.0; (n / 2) * n]; // nx*nz == nx*ny for these dims
+
+        for r in 0..2 {
+            let sub = part.subdomain(r);
+            let halo_xm: &[f64] = if r == 0 { &zero_x } else { &f0_xp };
+            let halo_xp: &[f64] = if r == 0 { &f1_xm } else { &zero_x };
+            let faces: [&[f64]; 6] =
+                [halo_xm, halo_xp, &zero_yz, &zero_yz, &zero_yz, &zero_yz];
+            let mut res = vec![0.0; sub.volume()];
+            let mut be = NativeBackend::new(sub.dims);
+            let mut blk = blocks[r].clone();
+            be.sweep(&mut blk, faces, &rhss[r], &p.coeffs(), &mut res)
+                .unwrap();
+            // compare against the corresponding slice of the global sweep
+            let (bx, by, bz) = sub.dims;
+            for ix in 0..bx {
+                for iy in 0..by {
+                    for iz in 0..bz {
+                        let gi = crate::problem::idx3(
+                            g_dims,
+                            sub.lo.0 + ix,
+                            sub.lo.1 + iy,
+                            sub.lo.2 + iz,
+                        );
+                        let li = crate::problem::idx3(sub.dims, ix, iy, iz);
+                        assert!(
+                            (blk[li] - want_u[gi]).abs() < 1e-13,
+                            "rank {r} ({ix},{iy},{iz})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let mut be = NativeBackend::new((2, 2, 2));
+        let z = vec![0.0; 4];
+        let faces: [&[f64]; 6] = [&z, &z, &z, &z, &z, &z];
+        let mut u = vec![0.0; 7]; // wrong
+        let rhs = vec![0.0; 8];
+        let mut res = vec![0.0; 8];
+        assert!(be
+            .sweep(&mut u, faces, &rhs, &ConvDiff::paper(4, 0.01).coeffs(), &mut res)
+            .is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree utilities replacing unavailable third-party crates (this build
+//! environment is offline; see Cargo.toml).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng64;

@@ -1,0 +1,135 @@
+//! JackComm API contract tests: initialization order, validation errors,
+//! and mode semantics — the "user-friendly interface" the paper stresses
+//! must fail loudly on misuse, not corrupt a solve.
+
+use jack2::graph::CommGraph;
+use jack2::jack::{JackComm, Mode};
+use jack2::simmpi::{NetworkModel, World, WorldConfig};
+
+fn pair() -> (JackComm, std::thread::JoinHandle<JackComm>) {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::uniform(2, 0.1));
+    let (_w, mut eps) = World::new(cfg);
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+    let h = std::thread::spawn(move || {
+        let g = CommGraph::symmetric(1, vec![0]).unwrap();
+        JackComm::new(e1, g).unwrap()
+    });
+    let g = CommGraph::symmetric(0, vec![1]).unwrap();
+    let c0 = JackComm::new(e0, g).unwrap();
+    (c0, h)
+}
+
+#[test]
+fn rank_mismatch_rejected() {
+    let (_w, mut eps) = World::homogeneous(1);
+    let ep = eps.pop().unwrap();
+    let g = CommGraph::symmetric(3, vec![]).unwrap(); // wrong rank
+    assert!(JackComm::new(ep, g).is_err());
+}
+
+#[test]
+fn buffer_count_must_match_graph() {
+    let (mut c0, h) = pair();
+    // graph has 1 send + 1 recv link; give wrong counts
+    assert!(c0.init_buffers(&[4, 4], &[4]).is_err());
+    assert!(c0.init_buffers(&[4], &[]).is_err());
+    assert!(c0.init_buffers(&[4], &[4]).is_ok());
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn async_requires_full_init() {
+    let (mut c0, h) = pair();
+    // config_async before buffers/residual/solution must fail
+    assert!(c0.config_async(4, 1e-6).is_err());
+    c0.init_buffers(&[2], &[2]).unwrap();
+    assert!(c0.config_async(4, 1e-6).is_err(), "missing residual/solution");
+    c0.init_residual(8, 0.0).unwrap();
+    c0.init_solution(8).unwrap();
+    assert!(c0.config_async(4, 1e-6).is_ok());
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn switch_async_requires_config() {
+    let (mut c0, h) = pair();
+    c0.init_buffers(&[2], &[2]).unwrap();
+    c0.init_residual(4, 0.0).unwrap();
+    c0.init_solution(4).unwrap();
+    assert!(c0.switch_async().is_err(), "switch before config");
+    assert_eq!(c0.mode(), Mode::Synchronous);
+    c0.config_async(4, 1e-6).unwrap();
+    c0.switch_async().unwrap();
+    assert_eq!(c0.mode(), Mode::Asynchronous);
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn send_discard_toggle_requires_config() {
+    let (mut c0, h) = pair();
+    assert!(c0.set_send_discard(false).is_err());
+    c0.init_buffers(&[2], &[2]).unwrap();
+    c0.init_residual(4, 0.0).unwrap();
+    c0.init_solution(4).unwrap();
+    c0.config_async(4, 1e-6).unwrap();
+    assert!(c0.set_send_discard(false).is_ok());
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn residual_norm_is_infinite_before_first_update() {
+    let (mut c0, h) = pair();
+    c0.init_buffers(&[1], &[1]).unwrap();
+    c0.init_residual(1, 0.0).unwrap();
+    assert!(c0.residual_norm().is_infinite());
+    assert!(!c0.terminated());
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn compute_view_exposes_all_blocks() {
+    let (mut c0, h) = pair();
+    c0.init_buffers(&[3], &[5]).unwrap();
+    c0.init_residual(7, 2.0).unwrap();
+    c0.init_solution(7).unwrap();
+    {
+        let v = c0.compute_view();
+        assert_eq!(v.send.len(), 1);
+        assert_eq!(v.send[0].len(), 3);
+        assert_eq!(v.recv.len(), 1);
+        assert_eq!(v.recv[0].len(), 5);
+        assert_eq!(v.sol.len(), 7);
+        assert_eq!(v.res.len(), 7);
+        v.sol[0] = 42.0;
+        v.res[3] = -1.5;
+    }
+    assert_eq!(c0.solution()[0], 42.0);
+    assert_eq!(c0.local_residual_norm(), 1.5);
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn local_residual_norm_follows_norm_type() {
+    let (mut c0, h) = pair();
+    c0.init_buffers(&[1], &[1]).unwrap();
+    c0.init_residual(2, 2.0).unwrap(); // Euclidean
+    {
+        let v = c0.compute_view();
+        v.res[0] = 3.0;
+        v.res[1] = 4.0;
+    }
+    assert!((c0.local_residual_norm() - 5.0).abs() < 1e-12);
+    drop(h.join().unwrap());
+}
+
+#[test]
+fn reset_for_new_solve_clears_state() {
+    let (mut c0, h) = pair();
+    c0.init_buffers(&[1], &[1]).unwrap();
+    c0.init_residual(1, 0.0).unwrap();
+    c0.set_local_convergence(true);
+    c0.reset_for_new_solve().unwrap();
+    assert!(c0.residual_norm().is_infinite());
+    drop(h.join().unwrap());
+}

@@ -1,0 +1,269 @@
+//! Property-based tests over the protocol invariants (hand-rolled
+//! seeded-random harness; proptest is unavailable offline).
+//!
+//! Each property runs across a sweep of seeded random cases; failures
+//! print the seed so a case can be replayed deterministically.
+
+use std::time::Duration;
+
+use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::graph::{random_connected, validate_world};
+use jack2::jack::norm::{saturation_norm, NormKind, NormPending};
+use jack2::jack::spanning_tree::{self, validate_tree};
+use jack2::simmpi::{NetworkModel, World, WorldConfig};
+use jack2::solver::solve;
+use jack2::util::Rng64;
+
+/// Run `f` for `n` seeded cases, reporting the failing seed.
+fn prop(n: u64, name: &str, f: impl Fn(&mut Rng64)) {
+    for seed in 0..n {
+        let mut rng = Rng64::new(0xFEED ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        println!("property {name:?}: seed {seed}");
+        f(&mut rng);
+    }
+}
+
+/// Distributed norm == sequential norm, for random graphs, block sizes,
+/// values, norm kinds and repeated rounds.
+#[test]
+fn prop_distributed_norm_matches_oracle() {
+    prop(8, "distributed norm", |rng| {
+        let p = rng.range_usize(2, 9);
+        let graphs = random_connected(p, 0.3, rng.next_u64());
+        validate_world(&graphs).unwrap();
+        let kind = if rng.bool(0.5) {
+            NormKind::Max
+        } else {
+            NormKind::Pow(2.0)
+        };
+        let rounds = rng.range_usize(1, 4);
+        // random block per rank per round
+        let blocks: Vec<Vec<Vec<f64>>> = (0..p)
+            .map(|_| {
+                (0..rounds)
+                    .map(|_| {
+                        (0..rng.range_usize(1, 6))
+                            .map(|_| rng.range_f64(-10.0, 10.0))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        // sequential oracle per round
+        let oracle: Vec<f64> = (0..rounds)
+            .map(|r| {
+                let mut acc = 0.0;
+                for b in &blocks {
+                    acc = kind.combine(acc, kind.partial(&b[r]));
+                }
+                kind.finalize(acc)
+            })
+            .collect();
+
+        let cfg = WorldConfig::homogeneous(p)
+            .with_network(NetworkModel::uniform(2, 0.5))
+            .with_seed(rng.next_u64());
+        let (_w, eps) = World::new(cfg);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(graphs)
+            .zip(blocks)
+            .map(|((mut ep, g), my_blocks)| {
+                std::thread::spawn(move || {
+                    let tree = spanning_tree::build(
+                        &mut ep,
+                        &g.undirected_neighbors(),
+                        Duration::from_secs(10),
+                    )
+                    .unwrap();
+                    let neighbors = tree.tree_neighbors();
+                    let mut pending = NormPending::default();
+                    my_blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(r, b)| {
+                            saturation_norm(
+                                &mut ep,
+                                &neighbors,
+                                kind.partial(b),
+                                kind,
+                                r as u64 + 1,
+                                &mut pending,
+                                Duration::from_secs(10),
+                            )
+                            .unwrap()
+                        })
+                        .collect::<Vec<f64>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (g, o) in got.iter().zip(&oracle) {
+                assert!((g - o).abs() < 1e-9, "norm {g} != oracle {o}");
+            }
+        }
+    });
+}
+
+/// Spanning trees over random graphs are always valid and span all ranks,
+/// under jittery networks.
+#[test]
+fn prop_spanning_tree_valid_on_random_graphs() {
+    prop(8, "spanning tree", |rng| {
+        let p = rng.range_usize(2, 13);
+        let graphs = random_connected(p, rng.range_f64(0.0, 0.5), rng.next_u64());
+        let cfg = WorldConfig::homogeneous(p)
+            .with_network(NetworkModel::uniform(rng.range_usize(1, 50) as u64, 0.5))
+            .with_seed(rng.next_u64());
+        let (_w, eps) = World::new(cfg);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(graphs)
+            .map(|(mut ep, g)| {
+                std::thread::spawn(move || {
+                    spanning_tree::build(
+                        &mut ep,
+                        &g.undirected_neighbors(),
+                        Duration::from_secs(10),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let views: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        validate_tree(&views).unwrap();
+    });
+}
+
+/// Norm partial/combine/finalize is partition-invariant: any random
+/// regrouping of the elements yields the same norm.
+#[test]
+fn prop_norm_partition_invariance() {
+    prop(50, "norm partition invariance", |rng| {
+        let n = rng.range_usize(1, 200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+        for kind in [NormKind::Max, NormKind::Pow(2.0), NormKind::Pow(1.0)] {
+            let direct = kind.eval(&xs);
+            // random partition into chunks
+            let mut acc = 0.0;
+            let mut i = 0;
+            while i < n {
+                let len = rng.range_usize(1, (n - i).min(17) + 1);
+                acc = kind.combine(acc, kind.partial(&xs[i..i + len]));
+                i += len;
+            }
+            let grouped = kind.finalize(acc);
+            assert!(
+                (direct - grouped).abs() < 1e-9 * direct.abs().max(1.0),
+                "{kind:?}: {direct} vs {grouped}"
+            );
+        }
+    });
+}
+
+/// End-to-end async solve always terminates with a verified residual
+/// close to the threshold, across random partitions, problem sizes,
+/// latencies and speed profiles.
+#[test]
+fn prop_async_solve_terminates_and_verifies() {
+    prop(6, "async solve", |rng| {
+        let grids = [(2, 1, 1), (2, 2, 1), (3, 1, 1), (2, 2, 2), (1, 3, 1)];
+        let grid = grids[rng.range_usize(0, grids.len())];
+        let n = rng.range_usize(6, 11);
+        let p = grid.0 * grid.1 * grid.2;
+        let cfg = ExperimentConfig {
+            process_grid: grid,
+            n,
+            scheme: Scheme::Asynchronous,
+            backend: Backend::Native,
+            threshold: 1e-6,
+            time_steps: 1,
+            net_latency_us: rng.range_usize(1, 200) as u64,
+            net_jitter: rng.range_f64(0.0, 0.8),
+            rank_speed: (0..p).map(|_| rng.range_f64(0.3, 1.0)).collect(),
+            seed: rng.next_u64(),
+            max_iters: 200_000,
+            ..Default::default()
+        };
+        let rep = solve(&cfg).unwrap();
+        assert!(
+            rep.steps[0].reported_norm < 1e-6,
+            "snapshot norm {} >= threshold",
+            rep.steps[0].reported_norm
+        );
+        assert!(rep.r_n < 1e-4, "verified r_n {}", rep.r_n);
+        assert!(rep.snapshots() >= 1);
+    });
+}
+
+/// Sync solve: all ranks execute identical iteration counts and converge.
+#[test]
+fn prop_sync_lockstep_iterations() {
+    prop(5, "sync lockstep", |rng| {
+        let grids = [(2, 1, 1), (2, 2, 1), (1, 2, 2)];
+        let grid = grids[rng.range_usize(0, grids.len())];
+        let cfg = ExperimentConfig {
+            process_grid: grid,
+            n: rng.range_usize(6, 10),
+            scheme: Scheme::Overlapping,
+            backend: Backend::Native,
+            threshold: 1e-6,
+            time_steps: 1,
+            net_latency_us: rng.range_usize(1, 100) as u64,
+            net_jitter: rng.range_f64(0.0, 0.5),
+            seed: rng.next_u64(),
+            max_iters: 100_000,
+            ..Default::default()
+        };
+        let rep = solve(&cfg).unwrap();
+        let iters: Vec<u64> = rep.per_rank.iter().map(|m| m.iterations).collect();
+        assert!(iters.iter().all(|&i| i == iters[0]), "{iters:?}");
+        assert!(rep.r_n < 1e-5, "r_n {}", rep.r_n);
+    });
+}
+
+/// simmpi FIFO invariant under randomized concurrent traffic: per (src,
+/// tag) sequence numbers arrive in order, nothing is lost or duplicated.
+#[test]
+fn prop_simmpi_fifo_no_loss() {
+    prop(8, "simmpi fifo", |rng| {
+        let p = rng.range_usize(2, 6);
+        let per_sender = rng.range_usize(10, 80);
+        let latency = rng.range_usize(0, 30) as u64;
+        let cfg = WorldConfig::homogeneous(p)
+            .with_network(NetworkModel::uniform(latency, 0.9))
+            .with_seed(rng.next_u64());
+        let (_w, mut eps) = World::new(cfg);
+        let receiver = eps.remove(0);
+        let senders: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    for i in 0..per_sender {
+                        ep.isend(0, 7, vec![ep.rank() as f64, i as f64]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for s in senders {
+            s.join().unwrap();
+        }
+        let mut next = vec![0usize; p];
+        let mut got = 0;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while got < per_sender * (p - 1) {
+            assert!(std::time::Instant::now() < deadline, "lost messages");
+            for src in 1..p {
+                let mut req = receiver.irecv(src, 7);
+                if receiver.test_recv(&mut req) {
+                    let d = req.take().unwrap();
+                    assert_eq!(d[0] as usize, src);
+                    assert_eq!(d[1] as usize, next[src], "out of order from {src}");
+                    next[src] += 1;
+                    got += 1;
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,166 @@
+//! Transport edge cases: wait_any multiplexing, send-request semantics,
+//! bandwidth serialization under concurrency, fault spikes end to end.
+
+use std::time::{Duration, Instant};
+
+use jack2::simmpi::{NetworkModel, World, WorldConfig};
+
+fn instant_world(p: usize) -> (World, Vec<jack2::simmpi::Endpoint>) {
+    World::new(WorldConfig::homogeneous(p).with_network(NetworkModel::instant()))
+}
+
+#[test]
+fn wait_any_returns_first_match() {
+    let (_w, mut eps) = instant_world(3);
+    let e0 = eps.remove(0);
+    let mut e1 = eps.remove(0);
+    let mut e2 = eps.remove(0);
+    e2.isend(0, 7, vec![2.0]).unwrap();
+    e1.isend(0, 9, vec![1.0]).unwrap();
+    // pairs listed in priority order; both visible -> first pair wins
+    let (idx, data) = e0
+        .wait_any(&[(1, 9), (2, 7)], Duration::from_secs(1))
+        .unwrap();
+    assert_eq!(idx, 0);
+    assert_eq!(data, vec![1.0]);
+    let (idx, data) = e0
+        .wait_any(&[(1, 9), (2, 7)], Duration::from_secs(1))
+        .unwrap();
+    assert_eq!(idx, 1);
+    assert_eq!(data, vec![2.0]);
+}
+
+#[test]
+fn wait_any_times_out() {
+    let (_w, eps) = instant_world(2);
+    let t0 = Instant::now();
+    let out = eps[0].wait_any(&[(1, 5)], Duration::from_millis(20));
+    assert!(out.is_none());
+    assert!(t0.elapsed() >= Duration::from_millis(20));
+    assert!(t0.elapsed() < Duration::from_secs(1));
+}
+
+#[test]
+fn wait_any_wakes_on_late_arrival() {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::uniform(100, 0.0));
+    let (_w, mut eps) = World::new(cfg);
+    let e0 = eps.remove(0);
+    let mut e1 = eps.remove(0);
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(5));
+        e1.isend(0, 3, vec![9.0]).unwrap();
+    });
+    let t0 = Instant::now();
+    let (idx, data) = e0
+        .wait_any(&[(1, 3)], Duration::from_secs(5))
+        .expect("must arrive");
+    assert_eq!((idx, data), (0, vec![9.0]));
+    // arrived ~5ms (sleep) + 100µs (latency); must be well before timeout
+    assert!(t0.elapsed() < Duration::from_millis(500));
+    h.join().unwrap();
+}
+
+#[test]
+fn wait_any_respects_non_overtaking() {
+    let (_w, mut eps) = instant_world(2);
+    let e0 = eps.remove(0);
+    let mut e1 = eps.remove(0);
+    for i in 0..5 {
+        e1.isend(0, 1, vec![i as f64]).unwrap();
+    }
+    for want in 0..5 {
+        let (_, data) = e0.wait_any(&[(1, 1)], Duration::from_secs(1)).unwrap();
+        assert_eq!(data, vec![want as f64]);
+    }
+}
+
+#[test]
+fn send_request_completion_tracks_latency() {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::uniform(30_000, 0.0));
+    let (_w, mut eps) = World::new(cfg);
+    let req = eps[0].isend(1, 1, vec![1.0]).unwrap();
+    assert!(!req.test(), "in flight for 30ms");
+    req.wait();
+    assert!(req.test());
+    assert_eq!(req.bytes(), 8);
+}
+
+#[test]
+fn bandwidth_pileup_delays_visibility() {
+    // 1 MB/s, 8 kB messages = 8 ms wire each; the 5th message should not
+    // be visible until ~40 ms even though latency is zero.
+    let mut net = NetworkModel::instant();
+    net.bandwidth = Some(1_000_000.0);
+    let (_w, mut eps) = World::new(WorldConfig::homogeneous(2).with_network(net));
+    let e0 = eps.remove(0);
+    let mut e1 = eps.remove(0);
+    for _ in 0..5 {
+        e1.isend(0, 1, vec![0.0; 1024]).unwrap();
+    }
+    let t0 = Instant::now();
+    let mut got = 0;
+    while got < 5 {
+        if e0.try_match(1, 1).is_some() {
+            got += 1;
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "lost messages");
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(35),
+        "pile-up must serialize: took {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn spike_model_fires_periodically() {
+    let mut net = NetworkModel::instant();
+    net.spike_every = 3;
+    net.spike = Duration::from_millis(20);
+    let (_w, mut eps) = World::new(WorldConfig::homogeneous(2).with_network(net));
+    let e0 = eps.remove(0);
+    let mut e1 = eps.remove(0);
+    // msgs 1,2 instant; msg 3 spiked
+    let r1 = e1.isend(0, 1, vec![1.0]).unwrap();
+    let r2 = e1.isend(0, 1, vec![2.0]).unwrap();
+    let r3 = e1.isend(0, 1, vec![3.0]).unwrap();
+    assert!(r1.test() && r2.test());
+    assert!(!r3.test(), "third message must be spiked");
+    // the spiked message still arrives
+    let t0 = Instant::now();
+    let mut got = 0;
+    while got < 3 && t0.elapsed() < Duration::from_secs(2) {
+        if e0.try_match(1, 1).is_some() {
+            got += 1;
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    assert_eq!(got, 3);
+}
+
+#[test]
+fn fault_injection_spike_is_one_shot() {
+    let (_w, mut eps) = instant_world(2);
+    let mut e1 = eps.pop().unwrap();
+    e1.inject_link_delay(0, Duration::from_millis(15));
+    let r1 = e1.isend(0, 1, vec![1.0]).unwrap();
+    let r2 = e1.isend(0, 1, vec![2.0]).unwrap();
+    assert!(!r1.test());
+    assert!(r2.test(), "spike applies to the next message only");
+}
+
+#[test]
+fn endpoint_speed_and_sizes() {
+    let cfg = WorldConfig::homogeneous(3)
+        .with_network(NetworkModel::instant())
+        .with_rank_speed(vec![1.0, 0.5, 0.25]);
+    let (w, eps) = World::new(cfg);
+    assert_eq!(w.size(), 3);
+    assert_eq!(eps[1].speed(), 0.5);
+    assert_eq!(eps[2].world_size(), 3);
+    assert_eq!(w.config().speed_of(2), 0.25);
+    assert_eq!(w.config().speed_of(99), 1.0);
+}

@@ -1,0 +1,174 @@
+//! Three-layer integration: the Rust coordinator executing the
+//! AOT-compiled JAX/Pallas sweep via PJRT, cross-validated against the
+//! native backend. Requires `make artifacts` (skipped gracefully if the
+//! artifacts are missing so `cargo test` works pre-AOT; the Makefile
+//! `test` target always builds artifacts first).
+
+use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::problem::ConvDiff;
+use jack2::runtime::Engine;
+use jack2::solver::{solve, ComputeBackend, NativeBackend, XlaBackend};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn xla_cfg(scheme: Scheme) -> ExperimentConfig {
+    ExperimentConfig {
+        process_grid: (2, 2, 2), // blocks of 8x8x8, matching an artifact
+        n: 16,
+        scheme,
+        backend: Backend::Xla,
+        threshold: 1e-6,
+        time_steps: 1,
+        net_latency_us: 5,
+        net_jitter: 0.1,
+        max_iters: 20_000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn single_sweep_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let dims = (8, 8, 8);
+    let engine = Engine::cpu("artifacts").unwrap();
+    let exe = engine.load_sweep(dims).unwrap();
+    let mut xla = XlaBackend::new(exe);
+    let mut native = NativeBackend::new(dims);
+
+    let problem = ConvDiff::paper(8, 0.01);
+    let coeffs = problem.coeffs();
+    let vol = 512;
+    let mut u_x: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.13).sin()).collect();
+    let mut u_n = u_x.clone();
+    let rhs: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.07).cos()).collect();
+    let f: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+    let z = vec![0.0; 64];
+    let faces: [&[f64]; 6] = [&f, &z, &f, &z, &f, &z];
+
+    let mut res_x = vec![0.0; vol];
+    let mut res_n = vec![0.0; vol];
+    xla.sweep(&mut u_x, faces, &rhs, &coeffs, &mut res_x).unwrap();
+    native
+        .sweep(&mut u_n, faces, &rhs, &coeffs, &mut res_n)
+        .unwrap();
+
+    for i in 0..vol {
+        assert!(
+            (u_x[i] - u_n[i]).abs() < 1e-12,
+            "u[{i}]: xla {} native {}",
+            u_x[i],
+            u_n[i]
+        );
+        assert!((res_x[i] - res_n[i]).abs() < 1e-12, "res[{i}]");
+    }
+}
+
+#[test]
+fn full_solve_sync_with_xla_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let cfg = xla_cfg(Scheme::Overlapping);
+    let rep = solve(&cfg).unwrap();
+    assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
+}
+
+#[test]
+fn full_solve_async_with_xla_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let cfg = xla_cfg(Scheme::Asynchronous);
+    let rep = solve(&cfg).unwrap();
+    assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
+    assert!(rep.snapshots() >= 1);
+}
+
+#[test]
+fn xla_and_native_solves_agree() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let xla = solve(&xla_cfg(Scheme::Overlapping)).unwrap();
+    let mut ncfg = xla_cfg(Scheme::Overlapping);
+    ncfg.backend = Backend::Native;
+    let nat = solve(&ncfg).unwrap();
+    let max_diff = xla
+        .solution
+        .iter()
+        .zip(&nat.solution)
+        .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+    assert!(max_diff < 1e-9, "xla vs native solution: {max_diff}");
+}
+
+#[test]
+fn fused_inner_sweeps_match_looped() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let dims = (8, 8, 8);
+    let engine = Engine::cpu("artifacts").unwrap();
+    let mut fused = XlaBackend::new(engine.load_sweep(dims).unwrap())
+        .with_inner(4, engine.load_sweep_k(dims, 4).unwrap());
+    let mut looped = NativeBackend::new(dims);
+
+    let problem = ConvDiff::paper(8, 0.01);
+    let coeffs = problem.coeffs();
+    let vol = 512;
+    let mut u_f: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.11).sin()).collect();
+    let mut u_l = u_f.clone();
+    let rhs: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.05).cos()).collect();
+    let z = vec![0.0; 64];
+    let faces: [&[f64]; 6] = [&z, &z, &z, &z, &z, &z];
+    let mut res_f = vec![0.0; vol];
+    let mut res_l = vec![0.0; vol];
+    fused
+        .sweep_k(&mut u_f, faces, &rhs, &coeffs, &mut res_f, 4)
+        .unwrap();
+    looped
+        .sweep_k(&mut u_l, faces, &rhs, &coeffs, &mut res_l, 4)
+        .unwrap();
+    for i in 0..vol {
+        assert!((u_f[i] - u_l[i]).abs() < 1e-11, "u[{i}]");
+        assert!((res_f[i] - res_l[i]).abs() < 1e-11, "res[{i}]");
+    }
+}
+
+#[test]
+fn full_solve_with_fused_inner_sweeps() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut cfg = xla_cfg(Scheme::Overlapping);
+    cfg.inner_sweeps = 4;
+    cfg.threshold = 1e-7; // margin: frozen-halo residual underestimates
+    let rep = solve(&cfg).unwrap();
+    assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
+    // block relaxation needs far fewer outer iterations
+    assert!(rep.iterations() < 100, "iters = {}", rep.iterations());
+}
+
+#[test]
+fn missing_artifact_shape_reports_clearly() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let msg = match engine.load_sweep((3, 5, 7)) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("no AOT artifact"), "{msg}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
