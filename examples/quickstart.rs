@@ -10,10 +10,12 @@
 
 use jack2::graph::CommGraph;
 use jack2::jack::JackComm;
-use jack2::simmpi::World;
+use jack2::simmpi::{Endpoint, World};
 
-/// Per-rank program: exactly the paper's Listing 6 loop.
-fn rank_program(comm: &mut JackComm, async_mode: bool) -> (f64, u64) {
+/// Per-rank program: exactly the paper's Listing 6 loop. (Written against
+/// the simulated-MPI backend here; swap the type parameter to run the
+/// same program over any other `jack2::transport::Transport`.)
+fn rank_program(comm: &mut JackComm<Endpoint>, async_mode: bool) -> (f64, u64) {
     let rank = comm.rank();
     // Each rank solves 4*x_i = c_i + neighbor for its scalar block (a
     // strictly diagonally dominant 2-unknown system split across ranks).

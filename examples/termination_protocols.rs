@@ -16,12 +16,13 @@ use jack2::jack::spanning_tree;
 use jack2::jack::termination::{PersistenceProtocol, TerminationProtocol};
 use jack2::jack::{AsyncConv, BufferSet, SnapshotProtocol};
 use jack2::metrics::{RankMetrics, Trace};
-use jack2::simmpi::{NetworkModel, World, WorldConfig};
+use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
+use jack2::transport::Transport;
 
 /// Distributed fixed point x_i = (Σ_j x_j + c_i) / (deg+2) on a 2x2x1
 /// process grid; strictly contracting.
 fn run_with(
-    make: impl Fn(usize, spanning_tree::SpanningTree, usize) -> Box<dyn TerminationProtocol>
+    make: impl Fn(usize, spanning_tree::SpanningTree, usize) -> Box<dyn TerminationProtocol<Endpoint>>
         + Send
         + Sync
         + 'static,
@@ -76,7 +77,8 @@ fn run_with(
                         sb[0] = sol[0];
                     }
                     for (l, &dst) in g.send_neighbors().iter().enumerate() {
-                        ep.isend(dst, TAG_DATA, bufs.send[l].clone()).unwrap();
+                        // pooled staging: no allocation in steady state
+                        ep.isend_copy(dst, TAG_DATA, &bufs.send[l]).unwrap();
                     }
                     let lconv = res[0].abs() < 1e-9;
                     protocol.harvest_residual(&res);

@@ -1,13 +1,21 @@
 //! E5 — §3.3 claim: "message delivering is quickly performed by
 //! exchanging memory addresses instead of copying whole buffers"
-//! (Algorithm 4, step 3). `cargo bench --bench comm_micro`.
+//! (Algorithm 4, step 3), extended with the ISSUE 1 tentpole: pooled
+//! (recycled `MsgBuf`) sends vs the old clone-per-send baseline.
+//! `cargo bench --bench comm_micro`.
 //!
 //! Micro-benchmarks: address-swap vs copy delivery across buffer sizes,
-//! plus raw simmpi point-to-point throughput.
+//! pooled vs cloning send/recv round-trips, and raw simmpi point-to-point
+//! throughput. Emits `BENCH_comm_micro.json` so the perf trajectory is
+//! machine-readable across PRs.
+
+use std::collections::BTreeMap;
 
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
 use jack2::simmpi::{NetworkModel, WorldConfig};
+use jack2::transport::Transport;
+use jack2::util::json::{self, Json};
 
 fn bench_delivery(b: &Bencher) {
     println!("\ndelivery: address swap (JACK2, Alg. 4) vs element copy");
@@ -21,7 +29,8 @@ fn bench_delivery(b: &Bencher) {
             for _ in 0..n_msgs {
                 let incoming = pool.pop().unwrap();
                 let old = bufs.deliver(0, incoming).unwrap();
-                pool.insert(0, old); // recycle, as the transport pool would
+                // recycle, as the transport pool would
+                pool.insert(0, old.into_vec());
             }
         });
         // copy delivery
@@ -45,9 +54,87 @@ fn bench_delivery(b: &Bencher) {
     t.print();
 }
 
-fn bench_p2p_rate(b: &Bencher) {
+/// Pooled (`isend_copy`, recycled storage) vs cloning (`isend(buf.clone())`,
+/// fresh allocation per message) send/recv round-trips — the tentpole's
+/// headline number. Returns one JSON row per payload size.
+fn bench_pooled_vs_clone(b: &Bencher) -> Vec<Json> {
+    println!("\nsend path: pooled MsgBuf staging vs clone-per-send baseline");
+    let mut t = Table::new(&[
+        "payload f64s",
+        "pooled / msg",
+        "clone / msg",
+        "speedup",
+        "steady allocs",
+    ]);
+    let mut rows = Vec::new();
+    for size in [1024usize, 16 * 1024, 128 * 1024] {
+        let n_msgs = 500;
+        let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+        let (_w, mut eps) = jack2::simmpi::World::new(cfg);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let payload = vec![1.25f64; size];
+
+        let clone_stats = b.run(&format!("clone {size}"), || {
+            for _ in 0..n_msgs {
+                // old-style: fresh Vec per message
+                e0.isend(1, 1, payload.clone()).unwrap();
+                let m = e1.try_match(0, 1).unwrap();
+                // detach so the baseline pays a plain free per message
+                drop(m.into_vec());
+            }
+        });
+
+        // warm the pool, then measure and track steady-state allocations
+        for _ in 0..4 {
+            e0.isend_copy(1, 2, &payload).unwrap();
+            drop(e1.try_match(0, 2).unwrap());
+        }
+        let warm_allocs = e0.pool().stats().allocations;
+        let pooled_stats = b.run(&format!("pooled {size}"), || {
+            for _ in 0..n_msgs {
+                e0.isend_copy(1, 2, &payload).unwrap();
+                // dropping recycles the storage into e0's pool
+                drop(e1.try_match(0, 2).unwrap());
+            }
+        });
+        let steady_allocs = e0.pool().stats().allocations - warm_allocs;
+
+        let per_pooled = pooled_stats.mean().as_nanos() as f64 / n_msgs as f64;
+        let per_clone = clone_stats.mean().as_nanos() as f64 / n_msgs as f64;
+        let speedup = per_clone / per_pooled.max(1.0);
+        t.row(&[
+            size.to_string(),
+            format!("{per_pooled:.0}ns"),
+            format!("{per_clone:.0}ns"),
+            format!("{speedup:.2}x"),
+            steady_allocs.to_string(),
+        ]);
+
+        let mut row = BTreeMap::new();
+        row.insert("payload_f64s".into(), Json::Num(size as f64));
+        row.insert("msgs".into(), Json::Num(n_msgs as f64));
+        row.insert("pooled_ns_per_msg".into(), Json::Num(per_pooled));
+        row.insert("clone_ns_per_msg".into(), Json::Num(per_clone));
+        row.insert("speedup".into(), Json::Num(speedup));
+        row.insert(
+            "steady_state_allocations".into(),
+            Json::Num(steady_allocs as f64),
+        );
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!(
+        "target: pooled >= 1.2x over cloning at every size (zero steady-state \
+         allocations on the pooled path)"
+    );
+    rows
+}
+
+fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
+    let mut rows = Vec::new();
     for size in [8usize, 256, 4096] {
         let n = 20_000;
         let st = b.run(&format!("p2p {size}"), || {
@@ -77,13 +164,37 @@ fn bench_p2p_rate(b: &Bencher) {
             format!("{rate:.0}"),
             format!("{:.1}", rate * size as f64 * 8.0 / 1e6),
         ]);
+        let mut row = BTreeMap::new();
+        row.insert("payload_f64s".into(), Json::Num(size as f64));
+        row.insert("msgs_per_sec".into(), Json::Num(rate));
+        row.insert(
+            "mb_per_sec".into(),
+            Json::Num(rate * size as f64 * 8.0 / 1e6),
+        );
+        rows.push(Json::Obj(row));
     }
     t.print();
+    rows
 }
 
 fn main() {
     let b = Bencher::from_env();
-    println!("comm_micro bench (E5)");
+    println!("comm_micro bench (E5 + pooled transport)");
     bench_delivery(&b);
-    bench_p2p_rate(&b);
+    let pooled_rows = bench_pooled_vs_clone(&b);
+    let p2p_rows = bench_p2p_rate(&b);
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("comm_micro".into()));
+    doc.insert(
+        "command".into(),
+        Json::Str("cargo bench --bench comm_micro".into()),
+    );
+    doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
+    doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
+    let out = "BENCH_comm_micro.json";
+    match std::fs::write(out, json::write(&Json::Obj(doc))) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nwarning: could not write {out}: {e}"),
+    }
 }

@@ -8,19 +8,29 @@
 //! * **Sending (Algorithm 6)**: a send is posted only if the previous one
 //!   on that channel has completed; otherwise the attempt is **discarded**
 //!   (the channel is busy — queueing would only deliver ever-staler data).
+//!
+//! Both paths run through the transport's buffer pool: posted sends stage
+//! the user buffer via [`Transport::isend_copy`] into recycled storage,
+//! drained receives are address-swapped and their displaced buffer
+//! returns to the pool on drop. The discard branch is the pool fast-path:
+//! it touches no storage at all, and the in-flight message's buffer is
+//! recycled on completion and reused in place by the next posted send —
+//! so the steady-state send path performs **zero** heap allocations
+//! whether or not channels are busy (`tests/transport_pool.rs`).
+
+use std::fmt;
 
 use super::buffers::BufferSet;
 use super::messages::TAG_DATA;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
-use crate::simmpi::{Endpoint, SendRequest};
+use crate::transport::Transport;
 
-/// Non-blocking continuous exchange.
-#[derive(Debug)]
-pub struct AsyncComm {
+/// Non-blocking continuous exchange over any [`Transport`].
+pub struct AsyncComm<T: Transport> {
     /// In-flight send request per outgoing link (None = channel idle).
-    send_reqs: Vec<Option<SendRequest>>,
+    send_reqs: Vec<Option<T::SendHandle>>,
     /// Max messages drained per channel per `Recv` call (Alg. 5's
     /// `max_numb_request`).
     pub max_recv_requests: usize,
@@ -30,7 +40,18 @@ pub struct AsyncComm {
     pub discard: bool,
 }
 
-impl AsyncComm {
+impl<T: Transport> fmt::Debug for AsyncComm<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AsyncComm")
+            .field("send_links", &self.send_reqs.len())
+            .field("busy_channels", &self.busy_channels())
+            .field("max_recv_requests", &self.max_recv_requests)
+            .field("discard", &self.discard)
+            .finish()
+    }
+}
+
+impl<T: Transport> AsyncComm<T> {
     pub fn new(num_send_links: usize, max_recv_requests: usize) -> Self {
         AsyncComm {
             send_reqs: (0..num_send_links).map(|_| None).collect(),
@@ -40,10 +61,10 @@ impl AsyncComm {
     }
 
     /// Algorithm 6: post one send per idle outgoing channel; discard on
-    /// busy channels.
+    /// busy channels (no staging, no allocation — the fast path).
     pub fn send(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         metrics: &mut RankMetrics,
@@ -53,7 +74,7 @@ impl AsyncComm {
             if busy && self.discard {
                 metrics.sends_discarded += 1;
             } else {
-                self.send_reqs[l] = Some(ep.isend(dst, TAG_DATA, bufs.send[l].clone())?);
+                self.send_reqs[l] = Some(ep.isend_copy(dst, TAG_DATA, &bufs.send[l])?);
                 metrics.msgs_sent += 1;
             }
         }
@@ -64,7 +85,7 @@ impl AsyncComm {
     /// incoming channel; the latest lands in the user buffer. Never blocks.
     pub fn recv(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &mut BufferSet,
         metrics: &mut RankMetrics,
@@ -96,7 +117,7 @@ impl AsyncComm {
 mod tests {
     use super::*;
     use crate::graph::CommGraph;
-    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use crate::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
     use std::time::Duration;
 
     fn pair_world(latency_us: u64) -> (crate::simmpi::World, Vec<Endpoint>) {
@@ -166,5 +187,28 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
         assert_eq!(m.msgs_sent, 2);
+    }
+
+    #[test]
+    fn discard_path_touches_no_pool_storage() {
+        // 10 s latency: the channel stays busy for the whole test even on
+        // a heavily loaded runner (nothing waits on the send completing).
+        let (_w, mut eps) = pair_world(10_000_000);
+        let mut e0 = eps.remove(0);
+        let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+        let bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut comm = AsyncComm::new(1, 1);
+        let mut m = RankMetrics::default();
+        comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+        let stats_after_post = e0.pool().stats();
+        for _ in 0..100 {
+            comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+        }
+        assert_eq!(m.sends_discarded, 100);
+        assert_eq!(
+            e0.pool().stats(),
+            stats_after_post,
+            "discarded sends must not acquire, allocate or recycle buffers"
+        );
     }
 }

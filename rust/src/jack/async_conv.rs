@@ -52,15 +52,13 @@ macro_rules! dbg_ss {
 }
 
 use super::buffers::BufferSet;
-use super::messages::{
-    decode_snapshot, encode_snapshot, TAG_CONV_NOTIFY, TAG_NORM_PARTIAL, TAG_SNAPSHOT, TAG_TERM,
-};
+use super::messages::{decode_snapshot, TAG_CONV_NOTIFY, TAG_NORM_PARTIAL, TAG_SNAPSHOT, TAG_TERM};
 use super::norm::NormKind;
 use super::spanning_tree::SpanningTree;
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{Event, RankMetrics, Trace};
-use crate::simmpi::Endpoint;
+use crate::transport::Transport;
 
 /// Outcome of the latest completed detection round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -144,9 +142,10 @@ impl AsyncConv {
 
     /// Drain all protocol messages and advance the state machine.
     /// `lconv` is the user's local-convergence flag (paper `lconv_flag`).
-    pub fn poll(
+    #[allow(clippy::too_many_arguments)]
+    pub fn poll<T: Transport>(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         sol_vec: &[f64],
@@ -174,10 +173,10 @@ impl AsyncConv {
                 trace.record(Event::SnapshotTriggered);
             } else {
                 dbg_ss!("rank {} notifies parent, round {}", ep.rank(), self.round);
-                ep.isend(
+                ep.isend_copy(
                     self.tree.parent.expect("non-root has parent"),
                     TAG_CONV_NOTIFY,
-                    vec![self.round as f64],
+                    &[self.round as f64],
                 )?;
                 self.sent_notify = true;
             }
@@ -207,14 +206,14 @@ impl AsyncConv {
                     let terminated = norm < self.threshold;
                     let flag = if terminated { 1.0 } else { 0.0 };
                     for &c in &self.tree.children.clone() {
-                        ep.isend(c, TAG_TERM, vec![self.round as f64, norm, flag])?;
+                        ep.isend_copy(c, TAG_TERM, &[self.round as f64, norm, flag])?;
                     }
                     self.finish_round(norm, terminated, trace);
                 } else {
-                    ep.isend(
+                    ep.isend_copy(
                         self.tree.parent.expect("non-root has parent"),
                         TAG_NORM_PARTIAL,
-                        vec![self.round as f64, acc],
+                        &[self.round as f64, acc],
                     )?;
                     self.sent_partial = true;
                     metrics.norm_reductions += 1;
@@ -274,9 +273,9 @@ impl AsyncConv {
         self.swapped && self.own_partial.is_none()
     }
 
-    fn take_snapshot(
+    fn take_snapshot<T: Transport>(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         sol_vec: &[f64],
@@ -286,16 +285,18 @@ impl AsyncConv {
         // ss_sol_vec_buf := sol_vec_buf ; ss_send_buf := send_buf
         self.ss_sol = Some(sol_vec.to_vec());
         for (l, &dst) in graph.send_neighbors().iter().enumerate() {
-            ep.isend(dst, TAG_SNAPSHOT, encode_snapshot(self.round, &bufs.send[l]))?;
+            // Snapshot messages ride the data path and must not
+            // reintroduce allocations: pooled [round, face...] staging.
+            ep.isend_headed(dst, TAG_SNAPSHOT, self.round as f64, &bufs.send[l])?;
         }
         self.ss_taken = true;
         metrics.snapshots += 1;
         Ok(())
     }
 
-    fn drain_messages(
+    fn drain_messages<T: Transport>(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         trace: &mut Trace,
     ) -> Result<()> {
@@ -320,7 +321,7 @@ impl AsyncConv {
         // Snapshot faces from incoming links.
         for (l, &src) in graph.recv_neighbors().iter().enumerate() {
             while let Some(msg) = ep.try_match(src, TAG_SNAPSHOT) {
-                let (r, face) = decode_snapshot(msg);
+                let (r, face) = decode_snapshot(&msg);
                 dbg_ss!(
                     "rank {} <- src {}: ss face round {r}, own round {}",
                     ep.rank(),
@@ -349,8 +350,9 @@ impl AsyncConv {
                 let norm = msg[1];
                 let terminated = msg[2] != 0.0;
                 let flag = if terminated { 1.0 } else { 0.0 };
+                drop(msg); // recycle before fanning out
                 for &c in &self.tree.children.clone() {
-                    ep.isend(c, TAG_TERM, vec![r as f64, norm, flag])?;
+                    ep.isend_copy(c, TAG_TERM, &[r as f64, norm, flag])?;
                 }
                 self.finish_round(norm, terminated, trace);
                 if terminated {

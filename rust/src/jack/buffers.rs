@@ -1,11 +1,15 @@
 //! Communication buffer management (the paper's Listing 2 + `JACKBuffer`).
 //!
 //! One send buffer per outgoing link and one receive buffer per incoming
-//! link. Delivery is by **address swap**: arriving payloads are `Vec`s
-//! moved out of the transport and swapped into the user-visible slot in
-//! O(1) — never copied element-by-element (paper Algorithm 4, step 3).
+//! link. Delivery is by **address swap**: arriving payloads are moved out
+//! of the transport and swapped into the user-visible slot in O(1) —
+//! never copied element-by-element (paper Algorithm 4, step 3). The
+//! displaced buffer is returned as a [`MsgBuf`]; dropping it recycles the
+//! allocation into the transport's [`crate::transport::BufferPool`], so
+//! the receive path allocates nothing in steady state.
 
 use crate::error::{Error, Result};
+use crate::transport::MsgBuf;
 
 /// Per-link send/receive buffers owned by the communicator.
 #[derive(Debug, Default)]
@@ -40,9 +44,11 @@ impl BufferSet {
 
     /// Address-swap delivery into receive slot `link` (O(1)).
     ///
-    /// Returns the *previous* buffer so the caller can recycle its
-    /// allocation (the transport pool reuses it for future messages).
-    pub fn deliver(&mut self, link: usize, mut incoming: Vec<f64>) -> Result<Vec<f64>> {
+    /// Returns the *previous* buffer, wrapped so that dropping it recycles
+    /// the allocation into the message's pool (the transport reuses it
+    /// for future messages).
+    pub fn deliver(&mut self, link: usize, incoming: impl Into<MsgBuf>) -> Result<MsgBuf> {
+        let mut incoming = incoming.into();
         let slot = self
             .recv
             .get_mut(link)
@@ -54,7 +60,7 @@ impl BufferSet {
                 slot.len()
             )));
         }
-        std::mem::swap(slot, &mut incoming);
+        std::mem::swap(slot, incoming.vec_mut());
         Ok(incoming)
     }
 }
@@ -62,6 +68,7 @@ impl BufferSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transport::BufferPool;
 
     #[test]
     fn allocates_zeroed() {
@@ -94,5 +101,19 @@ mod tests {
         let mut b = BufferSet::new(&[1], &[3]).unwrap();
         assert!(b.deliver(0, vec![1.0]).is_err());
         assert!(b.deliver(5, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn displaced_buffer_recycles_into_pool() {
+        let pool = BufferPool::new();
+        let mut b = BufferSet::new(&[1], &[2]).unwrap();
+        let mut incoming = pool.acquire(2);
+        incoming.copy_from_slice(&[7.0, 8.0]);
+        let displaced = b.deliver(0, incoming).unwrap();
+        assert_eq!(b.recv[0], vec![7.0, 8.0]);
+        // the displaced user buffer inherits the message's pool
+        assert!(displaced.pool().unwrap().same_pool(&pool));
+        drop(displaced);
+        assert_eq!(pool.free_len(), 1);
     }
 }

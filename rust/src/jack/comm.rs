@@ -2,14 +2,19 @@
 //! Listings 5–6): one interface for both classical and asynchronous
 //! iterations, switchable at runtime.
 //!
-//! Usage mirrors the paper exactly:
+//! `JackComm<T>` is generic over the [`Transport`] backend; the paper
+//! builds on MPI, this crate ships the simulated substrate
+//! (`jack2::simmpi::Endpoint`) as its default backend, and any other
+//! implementation of the trait (real MPI binding, shared-memory ring)
+//! slots in without touching this module. Usage mirrors the paper
+//! exactly:
 //!
 //! ```no_run
 //! # use jack2::jack::JackComm;
 //! # use jack2::graph::CommGraph;
 //! # use jack2::simmpi::World;
 //! # let (_w, mut eps) = World::homogeneous(1);
-//! # let ep = eps.pop().unwrap();
+//! # let ep = eps.pop().unwrap(); // any `Transport` backend endpoint
 //! # let graph = CommGraph::symmetric(0, vec![]).unwrap();
 //! # let (sbufs, rbufs, n, async_flag) = (vec![], vec![], 8, false);
 //! // -- initialize JACK2 communicator (Listing 5)
@@ -48,7 +53,7 @@ use super::sync_conv::SyncConv;
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
-use crate::simmpi::Endpoint;
+use crate::transport::Transport;
 
 /// Communication mode (switchable at runtime, paper feature (i)).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,9 +74,9 @@ pub struct ComputeView<'a> {
     pub res: &'a mut Vec<f64>,
 }
 
-/// The JACK2 communicator.
-pub struct JackComm {
-    ep: Endpoint,
+/// The JACK2 communicator, generic over the [`Transport`] backend.
+pub struct JackComm<T: Transport> {
+    ep: T,
     graph: CommGraph,
     tree: SpanningTree,
     bufs: BufferSet,
@@ -81,8 +86,8 @@ pub struct JackComm {
     res_norm: f64,
     lconv: bool,
     mode: Mode,
-    sync_comm: SyncComm,
-    async_comm: Option<AsyncComm>,
+    sync_comm: SyncComm<T>,
+    async_comm: Option<AsyncComm<T>>,
     sync_conv: Option<SyncConv>,
     async_conv: Option<AsyncConv>,
     /// Counters for the experiment harnesses.
@@ -91,11 +96,11 @@ pub struct JackComm {
     pub trace: Trace,
 }
 
-impl JackComm {
+impl<T: Transport> JackComm<T> {
     /// Initialize with the communication graph (paper Listing 5, first
     /// `Init`). Builds the spanning tree used by the convergence-detection
     /// machinery — call concurrently on every rank.
-    pub fn new(mut ep: Endpoint, graph: CommGraph) -> Result<Self> {
+    pub fn new(mut ep: T, graph: CommGraph) -> Result<Self> {
         if graph.rank() != ep.rank() {
             return Err(Error::Config(format!(
                 "graph view is for rank {} but endpoint is rank {}",
@@ -224,11 +229,14 @@ impl JackComm {
         &self.tree
     }
 
-    pub fn endpoint(&self) -> &Endpoint {
+    /// The underlying transport endpoint.
+    pub fn endpoint(&self) -> &T {
         &self.ep
     }
 
-    pub fn endpoint_mut(&mut self) -> &mut Endpoint {
+    /// Mutable access to the transport endpoint (e.g. for barriers
+    /// between time steps or fault injection).
+    pub fn endpoint_mut(&mut self) -> &mut T {
         &mut self.ep
     }
 

@@ -1,11 +1,12 @@
 //! Wire protocol: tag allocation and payload encodings.
 //!
-//! simmpi tags multiplex the independent JACK2 protocols over each link.
-//! All payloads are `Vec<f64>`; small control headers are encoded as
-//! leading f64 values (exactly representable: rounds and flags stay far
-//! below 2^53).
+//! Transport tags multiplex the independent JACK2 protocols over each
+//! link. All payloads are flat `f64` buffers (pooled
+//! [`crate::transport::MsgBuf`]s on the wire); small control headers are
+//! encoded as leading f64 values (exactly representable: rounds and
+//! flags stay far below 2^53).
 
-use crate::simmpi::Tag;
+use crate::transport::Tag;
 
 /// Iteration data exchange (sync and async modes).
 pub const TAG_DATA: Tag = 0x10;
@@ -31,20 +32,13 @@ pub const TAG_NORM_SYNC: Tag = 0x70;
 /// Blocking leader-election norm: result flood `[round, norm]`.
 pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
 
-/// Encode a snapshot face message.
-pub fn encode_snapshot(round: u64, face: &[f64]) -> Vec<f64> {
-    let mut v = Vec::with_capacity(face.len() + 1);
-    v.push(round as f64);
-    v.extend_from_slice(face);
-    v
-}
-
-/// Decode a snapshot face message into `(round, face)`.
-pub fn decode_snapshot(msg: Vec<f64>) -> (u64, Vec<f64>) {
+/// Decode a snapshot face message (`[round, face...]`, as staged by
+/// `Transport::isend_headed`) into `(round, face)`. Accepts any payload
+/// view (a pooled [`crate::transport::MsgBuf`] derefs to `[f64]`), so
+/// the wire buffer can be recycled right after decoding.
+pub fn decode_snapshot(msg: &[f64]) -> (u64, Vec<f64>) {
     let round = msg[0] as u64;
-    let mut face = msg;
-    face.remove(0);
-    (round, face)
+    (round, msg[1..].to_vec())
 }
 
 #[cfg(test)]
@@ -52,8 +46,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn snapshot_roundtrip() {
-        let (r, f) = decode_snapshot(encode_snapshot(42, &[1.5, -2.0]));
+    fn snapshot_decode() {
+        // Wire shape produced by `Transport::isend_headed(round, face)`.
+        let (r, f) = decode_snapshot(&[42.0, 1.5, -2.0]);
         assert_eq!(r, 42);
         assert_eq!(f, vec![1.5, -2.0]);
     }

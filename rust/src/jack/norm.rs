@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use super::messages::{TAG_NORM_SYNC, TAG_NORM_SYNC_RESULT};
 use crate::error::{Error, Result};
-use crate::simmpi::{Endpoint, Rank};
+use crate::transport::{Rank, Transport};
 
 /// Norm selector (the paper's `norm_type`: `2` → Euclidean, `< 1` → max).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -95,8 +95,8 @@ impl NormPending {
 ///
 /// Every rank calls this with the same `round` and its local partial
 /// (from [`NormKind::partial`]). Returns the global norm on every rank.
-pub fn saturation_norm(
-    ep: &mut Endpoint,
+pub fn saturation_norm<T: Transport>(
+    ep: &mut T,
     tree_neighbors: &[Rank],
     local_partial: f64,
     kind: NormKind,
@@ -136,7 +136,7 @@ pub fn saturation_norm(
             for v in received.values() {
                 acc = kind.combine(acc, *v);
             }
-            ep.isend(missing, TAG_NORM_SYNC, vec![round as f64, acc])?;
+            ep.isend_copy(missing, TAG_NORM_SYNC, &[round as f64, acc])?;
             sent_to = Some(missing);
         }
 
@@ -149,7 +149,7 @@ pub fn saturation_norm(
             let norm = kind.finalize(acc);
             for &n in tree_neighbors {
                 if Some(n) != sent_to {
-                    ep.isend(n, TAG_NORM_SYNC_RESULT, vec![round as f64, norm])?;
+                    ep.isend_copy(n, TAG_NORM_SYNC_RESULT, &[round as f64, norm])?;
                 }
             }
             return Ok(norm);
@@ -182,9 +182,10 @@ pub fn saturation_norm(
         } else if r == round {
             // Adopt and flood onward.
             let norm = msg[1];
+            drop(msg); // recycle before flooding onward
             for &m in tree_neighbors {
                 if m != n {
-                    ep.isend(m, TAG_NORM_SYNC_RESULT, vec![round as f64, norm])?;
+                    ep.isend_copy(m, TAG_NORM_SYNC_RESULT, &[round as f64, norm])?;
                 }
             }
             return Ok(norm);

@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use super::messages::{TAG_TREE_ACK, TAG_TREE_BUILD, TAG_TREE_DONE, TAG_TREE_READY};
 use crate::error::{Error, Result};
-use crate::simmpi::{Endpoint, Rank};
+use crate::transport::{Rank, Transport};
 
 /// One rank's view of the constructed spanning tree.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -69,8 +69,8 @@ const ROOT: Rank = 0;
 
 /// Build the spanning tree. Call concurrently on every rank with that
 /// rank's undirected neighbour list. Blocks until the whole tree is built.
-pub fn build(
-    ep: &mut Endpoint,
+pub fn build<T: Transport>(
+    ep: &mut T,
     neighbors: &[Rank],
     timeout: Duration,
 ) -> Result<SpanningTree> {
@@ -161,18 +161,18 @@ pub fn build(
                         depth: 0,
                     };
                     for &c in &children {
-                        ep.isend(c, TAG_TREE_READY, Vec::new())?;
+                        ep.isend(c, TAG_TREE_READY, Vec::<f64>::new())?;
                     }
                     return Ok(tree);
                 }
                 // Convergecast DONE once.
                 if !sent_done {
                     sent_done = true;
-                    ep.isend(parent.unwrap(), TAG_TREE_DONE, Vec::new())?;
+                    ep.isend(parent.unwrap(), TAG_TREE_DONE, Vec::<f64>::new())?;
                 }
                 if ready {
                     for &c in &children {
-                        ep.isend(c, TAG_TREE_READY, Vec::new())?;
+                        ep.isend(c, TAG_TREE_READY, Vec::<f64>::new())?;
                     }
                     return Ok(SpanningTree {
                         parent,

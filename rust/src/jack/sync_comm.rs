@@ -3,9 +3,11 @@
 //! `Recv` delivers exactly one pending message from **each** incoming
 //! neighbour and does not return until all have arrived (paper Algorithm
 //! 4); delivery is by address swap via [`super::buffers::BufferSet`].
-//! `Send` posts one message per outgoing link. Under the overlapping
-//! scheme (Algorithm 2) the reception is effectively posted from the
-//! iteration start because the transport buffers arrivals continuously.
+//! `Send` posts one message per outgoing link, staged through the
+//! transport's buffer pool ([`Transport::isend_copy`]): after warm-up the
+//! send path performs zero heap allocations. Under the overlapping scheme
+//! (Algorithm 2) the reception is effectively posted from the iteration
+//! start because the transport buffers arrivals continuously.
 
 use std::time::Duration;
 
@@ -14,27 +16,36 @@ use super::messages::TAG_DATA;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
-use crate::simmpi::Endpoint;
+use crate::transport::Transport;
 
-/// Blocking per-iteration exchange.
-#[derive(Debug, Default)]
-pub struct SyncComm {
+/// Blocking per-iteration exchange over any [`Transport`].
+pub struct SyncComm<T: Transport> {
     /// Timeout for each per-link blocking receive.
     pub recv_timeout: Option<Duration>,
     /// Requests of the most recent `send` (kept so the trivial scheme,
     /// Algorithm 1, can wait for send completion too).
-    last_sends: Vec<crate::simmpi::SendRequest>,
+    last_sends: Vec<T::SendHandle>,
 }
 
-impl SyncComm {
+impl<T: Transport> Default for SyncComm<T> {
+    fn default() -> Self {
+        SyncComm {
+            recv_timeout: None,
+            last_sends: Vec::new(),
+        }
+    }
+}
+
+impl<T: Transport> SyncComm<T> {
     fn timeout(&self) -> Duration {
         self.recv_timeout.unwrap_or(Duration::from_secs(60))
     }
 
-    /// Send the current content of every send buffer to its neighbour.
+    /// Send the current content of every send buffer to its neighbour
+    /// (pooled copy: no allocation in steady state).
     pub fn send(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         metrics: &mut RankMetrics,
@@ -42,7 +53,7 @@ impl SyncComm {
         self.last_sends.clear();
         for (l, &dst) in graph.send_neighbors().iter().enumerate() {
             self.last_sends
-                .push(ep.isend(dst, TAG_DATA, bufs.send[l].clone())?);
+                .push(ep.isend_copy(dst, TAG_DATA, &bufs.send[l])?);
             metrics.msgs_sent += 1;
         }
         Ok(())
@@ -60,14 +71,13 @@ impl SyncComm {
     /// Blocking receive of one message per incoming link (Algorithm 4).
     pub fn recv(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &mut BufferSet,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         for (l, &src) in graph.recv_neighbors().iter().enumerate() {
-            let mut req = ep.irecv(src, TAG_DATA);
-            let data = ep.wait_recv(&mut req, Some(self.timeout()))?;
+            let data = ep.recv(src, TAG_DATA, Some(self.timeout()))?;
             bufs.deliver(l, data)?;
             metrics.msgs_delivered += 1;
         }

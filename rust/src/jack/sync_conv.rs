@@ -12,7 +12,7 @@ use super::norm::{saturation_norm, NormKind, NormPending};
 use super::spanning_tree::SpanningTree;
 use crate::error::Result;
 use crate::metrics::RankMetrics;
-use crate::simmpi::{Endpoint, Rank};
+use crate::transport::{Rank, Transport};
 
 /// Blocking residual-norm evaluation, one round per iteration.
 #[derive(Debug)]
@@ -41,9 +41,9 @@ impl SyncConv {
 
     /// Evaluate the global norm of the distributed residual vector whose
     /// local block is `res_vec`. Blocks until every rank contributes.
-    pub fn update_residual(
+    pub fn update_residual<T: Transport>(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         res_vec: &[f64],
         metrics: &mut RankMetrics,
     ) -> Result<f64> {

@@ -25,7 +25,7 @@ use super::spanning_tree::SpanningTree;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
-use crate::simmpi::{Endpoint, Tag};
+use crate::transport::{Tag, Transport};
 
 /// Tag namespace for the persistence protocol (disjoint from
 /// [`super::messages`] tags).
@@ -33,13 +33,17 @@ const TAG_PERSIST_UP: Tag = 0x80;
 const TAG_PERSIST_DOWN: Tag = 0x81;
 
 /// What an asynchronous termination detector must provide.
-pub trait TerminationProtocol {
+///
+/// Generic over the [`Transport`] backend at the trait level (not per
+/// method) so detectors stay object-safe: the solver drivers hold a
+/// `Box<dyn TerminationProtocol<T>>` for whatever backend they run on.
+pub trait TerminationProtocol<T: Transport> {
     /// Advance the detector. Called once per iteration with the user's
     /// current local-convergence flag.
     #[allow(clippy::too_many_arguments)]
     fn poll(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         sol_vec: &[f64],
@@ -76,10 +80,10 @@ pub trait TerminationProtocol {
 /// The paper's snapshot-based protocol behind the trait.
 pub struct SnapshotProtocol(pub AsyncConv);
 
-impl TerminationProtocol for SnapshotProtocol {
+impl<T: Transport> TerminationProtocol<T> for SnapshotProtocol {
     fn poll(
         &mut self,
-        ep: &mut Endpoint,
+        ep: &mut T,
         graph: &CommGraph,
         bufs: &BufferSet,
         sol_vec: &[f64],
@@ -150,18 +154,27 @@ impl PersistenceProtocol {
             verdict: None,
         }
     }
-}
 
-impl TerminationProtocol for PersistenceProtocol {
-    fn poll(
+    /// True once global termination has been decided.
+    pub fn terminated(&self) -> bool {
+        self.verdict.is_some_and(|(_, t)| t)
+    }
+
+    /// The root's latest norm estimate, if a round completed.
+    pub fn global_norm(&self) -> Option<f64> {
+        self.verdict.map(|(n, _)| n)
+    }
+
+    /// Feed the freshly computed residual block to the detector.
+    pub fn harvest_residual(&mut self, res_vec: &[f64]) {
+        self.last_partial = self.kind.partial(res_vec);
+    }
+
+    /// Advance the detector (see the trait docs).
+    pub fn poll<T: Transport>(
         &mut self,
-        ep: &mut Endpoint,
-        _graph: &CommGraph,
-        _bufs: &BufferSet,
-        _sol_vec: &[f64],
+        ep: &mut T,
         lconv: bool,
-        _metrics: &mut RankMetrics,
-        _trace: &mut Trace,
     ) -> Result<()> {
         if self.terminated() {
             return Ok(());
@@ -181,10 +194,11 @@ impl TerminationProtocol for PersistenceProtocol {
         // Verdict from parent: [round, norm, flag]
         if let Some(p) = self.tree.parent {
             while let Some(msg) = ep.try_match(p, TAG_PERSIST_DOWN) {
-                let norm = msg[1];
-                let term = msg[2] != 0.0;
+                let fwd = [msg[0], msg[1], msg[2]];
+                let (norm, term) = (fwd[1], fwd[2] != 0.0);
+                drop(msg); // recycle before fanning out
                 for &c in &children {
-                    ep.isend(c, TAG_PERSIST_DOWN, msg.clone())?;
+                    ep.isend_copy(c, TAG_PERSIST_DOWN, &fwd)?;
                 }
                 self.verdict = Some((norm, term));
                 if term {
@@ -211,10 +225,10 @@ impl TerminationProtocol for PersistenceProtocol {
                     let norm = self.kind.finalize(acc);
                     let term = flag;
                     for &c in &children {
-                        ep.isend(
+                        ep.isend_copy(
                             c,
                             TAG_PERSIST_DOWN,
-                            vec![self.round as f64, norm, if term { 1.0 } else { 0.0 }],
+                            &[self.round as f64, norm, if term { 1.0 } else { 0.0 }],
                         )?;
                     }
                     self.verdict = Some((norm, term));
@@ -223,14 +237,10 @@ impl TerminationProtocol for PersistenceProtocol {
                         self.sent_report = false;
                     }
                 } else {
-                    ep.isend(
+                    ep.isend_copy(
                         self.tree.parent.expect("non-root"),
                         TAG_PERSIST_UP,
-                        vec![
-                            self.round as f64,
-                            if flag { 1.0 } else { 0.0 },
-                            acc,
-                        ],
+                        &[self.round as f64, if flag { 1.0 } else { 0.0 }, acc],
                     )?;
                     self.sent_report = true;
                 }
@@ -239,17 +249,32 @@ impl TerminationProtocol for PersistenceProtocol {
         }
         Ok(())
     }
+}
+
+impl<T: Transport> TerminationProtocol<T> for PersistenceProtocol {
+    fn poll(
+        &mut self,
+        ep: &mut T,
+        _graph: &CommGraph,
+        _bufs: &BufferSet,
+        _sol_vec: &[f64],
+        lconv: bool,
+        _metrics: &mut RankMetrics,
+        _trace: &mut Trace,
+    ) -> Result<()> {
+        PersistenceProtocol::poll(self, ep, lconv)
+    }
 
     fn harvest_residual(&mut self, res_vec: &[f64]) {
-        self.last_partial = self.kind.partial(res_vec);
+        PersistenceProtocol::harvest_residual(self, res_vec);
     }
 
     fn global_norm(&self) -> Option<f64> {
-        self.verdict.map(|(n, _)| n)
+        PersistenceProtocol::global_norm(self)
     }
 
     fn terminated(&self) -> bool {
-        self.verdict.is_some_and(|(_, t)| t)
+        PersistenceProtocol::terminated(self)
     }
 
     fn name(&self) -> &'static str {
@@ -269,12 +294,8 @@ mod tests {
         // emulate a disarm via poll on a solo tree
         let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
         let mut ep = eps.pop().unwrap();
-        let g = crate::graph::CommGraph::symmetric(0, vec![]).unwrap();
-        let bufs = BufferSet::default();
-        let mut m = RankMetrics::default();
-        let mut t = Trace::disabled();
         p.harvest_residual(&[0.5]);
-        p.poll(&mut ep, &g, &bufs, &[], false, &mut m, &mut t).unwrap();
+        p.poll(&mut ep, false).unwrap();
         assert_eq!(p.streak, 0);
         assert!(!p.terminated());
     }
@@ -283,18 +304,15 @@ mod tests {
     fn persistence_solo_terminates_after_streak() {
         let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
         let mut ep = eps.pop().unwrap();
-        let g = crate::graph::CommGraph::symmetric(0, vec![]).unwrap();
-        let bufs = BufferSet::default();
-        let mut m = RankMetrics::default();
-        let mut t = Trace::disabled();
         let mut p = PersistenceProtocol::new(NormKind::Max, SpanningTree::solo(), 3);
         p.harvest_residual(&[1e-9]);
         for i in 0..3 {
             assert!(!p.terminated(), "iteration {i}");
-            p.poll(&mut ep, &g, &bufs, &[], true, &mut m, &mut t).unwrap();
+            p.poll(&mut ep, true).unwrap();
         }
         assert!(p.terminated());
         assert_eq!(p.global_norm(), Some(1e-9));
-        assert_eq!(p.name(), "persistence");
+        let as_proto: &dyn TerminationProtocol<crate::simmpi::Endpoint> = &p;
+        assert_eq!(as_proto.name(), "persistence");
     }
 }

@@ -4,11 +4,17 @@
 //! for parallel iterative methods"* (Gbikpi-Benissan & Magoulès, 2022),
 //! built as a three-layer Rust + JAX/Pallas stack:
 //!
-//! * **[`simmpi`]** — the message-passing substrate. The paper builds on
-//!   MPI; we provide an in-process simulated MPI with non-blocking
-//!   point-to-point requests, a configurable network model (latency,
-//!   bandwidth, jitter, per-link scaling) and per-rank compute-speed
-//!   heterogeneity, so cluster-scale effects are reproducible on one host.
+//! * **[`transport`]** — the backend-agnostic message layer: the
+//!   [`transport::Transport`] trait (non-blocking sends, probing, pooled
+//!   buffers) that everything above the substrate is written against, and
+//!   the recycling [`transport::BufferPool`] / [`transport::MsgBuf`] pair
+//!   that makes the steady-state iteration path allocation-free.
+//! * **[`simmpi`]** — the default [`transport::Transport`] backend. The
+//!   paper builds on MPI; we provide an in-process simulated MPI with
+//!   non-blocking point-to-point requests, a configurable network model
+//!   (latency, bandwidth, jitter, per-link scaling) and per-rank
+//!   compute-speed heterogeneity, so cluster-scale effects are
+//!   reproducible on one host.
 //! * **[`graph`]** — logical communication graphs (explicit incoming and
 //!   outgoing link lists, exactly the paper's Listing 1).
 //! * **[`jack`]** — the JACK2 library proper: buffer management with
@@ -43,6 +49,8 @@ pub mod problem;
 pub mod runtime;
 pub mod simmpi;
 pub mod solver;
+pub mod transport;
 pub mod util;
+pub mod xla_stub;
 
 pub use error::{Error, Result};

@@ -17,6 +17,9 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::problem::Face;
+// Offline build: the PJRT binding is stubbed. Vendor the real `xla`
+// crate and drop this alias to enable the compiled-sweep path.
+use crate::xla_stub as xla;
 
 fn rt_err<E: std::fmt::Display>(e: E) -> Error {
     Error::Runtime(e.to_string())

@@ -7,15 +7,24 @@
 //! reserved; a collective may be called repeatedly but not concurrently
 //! with itself on the same tag.
 //!
+//! All collectives are generic over [`Transport`]: they run unchanged on
+//! any backend. The *message path* is allocation-free in steady state:
+//! wire payloads are staged in pooled buffers ([`Transport::acquire`] /
+//! [`Transport::isend_copy`]) and the final upward send *moves* the
+//! accumulator instead of cloning it. (The caller-facing result vectors —
+//! `local.to_vec()` and the detached broadcast payload — are still one
+//! plain allocation per call; they are owned by the caller, not the
+//! transport.)
+//!
 //! [`IAllreduce`] is the *non-blocking* variant — the paper's conclusion
 //! anticipates evolving the distributed norm to "MPI 3 non-blocking
 //! collective routines"; this is that routine on the simulated substrate.
 
 use std::time::Duration;
 
-use super::world::Endpoint;
 use super::{Rank, Tag};
 use crate::error::Result;
+use crate::transport::Transport;
 
 /// Reserved tag namespace for collectives (top of the tag space; JACK2
 /// protocol tags live far below — see [`crate::jack::messages`]).
@@ -66,58 +75,54 @@ fn parent(rank: Rank) -> Option<Rank> {
 
 /// All-reduce over the whole world: every rank contributes `local` and
 /// receives the elementwise reduction. Binary-tree up + broadcast down.
-pub fn allreduce(ep: &mut Endpoint, local: &[f64], op: ReduceOp) -> Result<Vec<f64>> {
+pub fn allreduce<T: Transport>(ep: &mut T, local: &[f64], op: ReduceOp) -> Result<Vec<f64>> {
     let size = ep.world_size();
     let rank = ep.rank();
     let mut acc = local.to_vec();
     for c in children(rank, size) {
-        let mut req = ep.irecv(c, TAG_REDUCE);
-        let data = ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+        let data = ep.recv(c, TAG_REDUCE, Some(COLL_TIMEOUT))?;
         op.apply(&mut acc, &data);
     }
     if let Some(p) = parent(rank) {
-        ep.isend(p, TAG_REDUCE, acc.clone())?;
-        let mut req = ep.irecv(p, TAG_BCAST);
-        acc = ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+        // Move the accumulator up; the broadcast below replaces it.
+        ep.isend(p, TAG_REDUCE, acc)?;
+        acc = ep.recv(p, TAG_BCAST, Some(COLL_TIMEOUT))?.into_vec();
     }
     for c in children(rank, size) {
-        ep.isend(c, TAG_BCAST, acc.clone())?;
+        ep.isend_copy(c, TAG_BCAST, &acc)?;
     }
     Ok(acc)
 }
 
 /// Broadcast `data` from rank 0 to all ranks. On non-root ranks the input
 /// is ignored and the received payload returned.
-pub fn broadcast(ep: &mut Endpoint, data: Vec<f64>) -> Result<Vec<f64>> {
+pub fn broadcast<T: Transport>(ep: &mut T, data: Vec<f64>) -> Result<Vec<f64>> {
     let size = ep.world_size();
     let rank = ep.rank();
     let payload = if let Some(p) = parent(rank) {
-        let mut req = ep.irecv(p, TAG_BCAST);
-        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?
+        ep.recv(p, TAG_BCAST, Some(COLL_TIMEOUT))?.into_vec()
     } else {
         data
     };
     for c in children(rank, size) {
-        ep.isend(c, TAG_BCAST, payload.clone())?;
+        ep.isend_copy(c, TAG_BCAST, &payload)?;
     }
     Ok(payload)
 }
 
 /// Barrier over the whole world (tree up then down).
-pub fn barrier(ep: &mut Endpoint) -> Result<()> {
+pub fn barrier<T: Transport>(ep: &mut T) -> Result<()> {
     let size = ep.world_size();
     let rank = ep.rank();
     for c in children(rank, size) {
-        let mut req = ep.irecv(c, TAG_BARRIER_UP);
-        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+        ep.recv(c, TAG_BARRIER_UP, Some(COLL_TIMEOUT))?;
     }
     if let Some(p) = parent(rank) {
-        ep.isend(p, TAG_BARRIER_UP, Vec::new())?;
-        let mut req = ep.irecv(p, TAG_BARRIER_DOWN);
-        ep.wait_recv(&mut req, Some(COLL_TIMEOUT))?;
+        ep.isend(p, TAG_BARRIER_UP, Vec::<f64>::new())?;
+        ep.recv(p, TAG_BARRIER_DOWN, Some(COLL_TIMEOUT))?;
     }
     for c in children(rank, size) {
-        ep.isend(c, TAG_BARRIER_DOWN, Vec::new())?;
+        ep.isend(c, TAG_BARRIER_DOWN, Vec::<f64>::new())?;
     }
     Ok(())
 }
@@ -143,7 +148,7 @@ pub struct IAllreduce {
 impl IAllreduce {
     /// Begin a non-blocking all-reduce of `local`. `round` must increase
     /// by 1 on every successive reduction (start at 1).
-    pub fn start(ep: &Endpoint, local: &[f64], op: ReduceOp, round: u64) -> Self {
+    pub fn start<T: Transport>(ep: &T, local: &[f64], op: ReduceOp, round: u64) -> Self {
         IAllreduce {
             op,
             round,
@@ -174,7 +179,7 @@ impl IAllreduce {
 
     /// Advance; returns the reduced vector once complete (then keeps
     /// returning it).
-    pub fn poll(&mut self, ep: &mut Endpoint) -> Result<Option<Vec<f64>>> {
+    pub fn poll<T: Transport>(&mut self, ep: &mut T) -> Result<Option<Vec<f64>>> {
         if let Some(r) = &self.result {
             return Ok(Some(r.clone()));
         }
@@ -202,10 +207,7 @@ impl IAllreduce {
         }
         if self.pending_children.is_empty() && !self.sent_up {
             if let Some(p) = parent(rank) {
-                let mut msg = Vec::with_capacity(self.acc.len() + 1);
-                msg.push(self.round as f64);
-                msg.extend_from_slice(&self.acc);
-                ep.isend(p, TAG_IALLRED_UP, msg)?;
+                ep.isend_headed(p, TAG_IALLRED_UP, self.round as f64, &self.acc)?;
             }
             self.sent_up = true;
         }
@@ -213,21 +215,16 @@ impl IAllreduce {
             if parent(rank).is_none() {
                 // root: result is the accumulator
                 for c in children(rank, ep.world_size()) {
-                    let mut msg = Vec::with_capacity(self.acc.len() + 1);
-                    msg.push(self.round as f64);
-                    msg.extend_from_slice(&self.acc);
-                    ep.isend(c, TAG_IALLRED_DOWN, msg)?;
+                    ep.isend_headed(c, TAG_IALLRED_DOWN, self.round as f64, &self.acc)?;
                 }
                 self.result = Some(self.acc.clone());
             } else if let Some(msg) = ep.try_match(parent(rank).unwrap(), TAG_IALLRED_DOWN) {
                 let r = msg[0] as u64;
                 if r == self.round {
                     let data = msg[1..].to_vec();
+                    drop(msg); // recycle before fanning out
                     for c in children(rank, ep.world_size()) {
-                        let mut m = Vec::with_capacity(data.len() + 1);
-                        m.push(r as f64);
-                        m.extend_from_slice(&data);
-                        ep.isend(c, TAG_IALLRED_DOWN, m)?;
+                        ep.isend_headed(c, TAG_IALLRED_DOWN, r as f64, &data)?;
                     }
                     self.result = Some(data);
                 }
@@ -246,7 +243,7 @@ impl IAllreduce {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simmpi::{NetworkModel, World, WorldConfig};
+    use crate::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
     use std::thread;
 
     fn run_world<F>(p: usize, f: F) -> Vec<Vec<f64>>

@@ -19,6 +19,15 @@
 //! The implementation is real-time (messages become visible when their
 //! simulated arrival instant passes) and thread-per-rank: each rank owns an
 //! [`Endpoint`] moved into its worker thread, mirroring one MPI process.
+//!
+//! [`Endpoint`] implements [`crate::transport::Transport`]; everything
+//! above this module (the collectives, `jack`, the solver driver) is
+//! written against that trait, so this whole module is one pluggable
+//! backend. Message storage is pooled: payloads travel as
+//! [`crate::transport::MsgBuf`]s and, once drained at the destination,
+//! their allocation returns to the pool of the endpoint that staged the
+//! send — the in-process analogue of MPI send-completion handing the
+//! buffer back to the sender.
 
 pub mod collective;
 pub mod network;
@@ -30,9 +39,6 @@ pub use network::{LinkDelay, NetworkModel};
 pub use request::{RecvRequest, RequestState, SendRequest};
 pub use world::{Endpoint, World, WorldConfig, WorldMetricsSnapshot};
 
-/// Rank index within a world (an "MPI rank").
-pub type Rank = usize;
-
-/// Message tag. JACK2 packs protocol ids into tags; see
-/// [`crate::jack::messages`].
-pub type Tag = u64;
+// Rank and Tag are defined by the transport layer; re-exported here so
+// `simmpi::Rank` / `simmpi::Tag` keep working.
+pub use crate::transport::{Rank, Tag};

@@ -2,6 +2,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::transport::MsgBuf;
+
 /// Completion state of a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestState {
@@ -51,6 +53,20 @@ impl SendRequest {
     }
 }
 
+impl crate::transport::SendHandle for SendRequest {
+    fn test(&self) -> bool {
+        SendRequest::test(self)
+    }
+
+    fn wait(&self) {
+        SendRequest::wait(self)
+    }
+
+    fn bytes(&self) -> usize {
+        SendRequest::bytes(self)
+    }
+}
+
 /// Handle for a non-blocking receive (`MPI_Irecv` analogue).
 ///
 /// Matching is lazy: the request records `(src, tag)` and matches the
@@ -60,7 +76,7 @@ impl SendRequest {
 pub struct RecvRequest {
     pub(crate) src: super::Rank,
     pub(crate) tag: super::Tag,
-    pub(crate) data: Option<Vec<f64>>,
+    pub(crate) data: Option<MsgBuf>,
 }
 
 impl RecvRequest {
@@ -79,7 +95,7 @@ impl RecvRequest {
     }
 
     /// Take the matched payload, leaving the request consumed.
-    pub fn take(&mut self) -> Option<Vec<f64>> {
+    pub fn take(&mut self) -> Option<MsgBuf> {
         self.data.take()
     }
 }

@@ -9,6 +9,7 @@ use super::network::{LinkDelay, NetworkModel};
 use super::request::{sleep_until, RecvRequest, SendRequest};
 use super::{Rank, Tag};
 use crate::error::{Error, Result};
+use crate::transport::{BufferPool, MsgBuf, Transport};
 
 /// Configuration of a simulated world.
 #[derive(Debug, Clone)]
@@ -57,7 +58,7 @@ impl WorldConfig {
 
 struct Packet {
     tag: Tag,
-    data: Vec<f64>,
+    data: MsgBuf,
     deliver_at: Instant,
 }
 
@@ -124,6 +125,7 @@ impl World {
                 shared: shared.clone(),
                 delay: LinkDelay::new(config.network.clone(), config.seed, rank, config.size),
                 speed: config.speed_of(rank),
+                pool: BufferPool::new(),
             })
             .collect();
         (World { shared, config }, endpoints)
@@ -157,11 +159,18 @@ impl World {
 /// `Endpoint` is `Send` (moved into the rank's worker thread) but not
 /// `Sync`: exactly one thread drives each rank, as in MPI's
 /// single-threaded-per-rank usage that JACK2 assumes.
+///
+/// Each endpoint owns a [`BufferPool`]. Payloads staged from the pool
+/// keep it as their recycling destination, so when the receiver drains
+/// and drops a message the storage returns to *this* endpoint's pool —
+/// the in-process analogue of MPI send-completion releasing the sender's
+/// buffer. Raw `Vec` payloads are adopted by the receiver's pool instead.
 pub struct Endpoint {
     rank: Rank,
     shared: Arc<Shared>,
     delay: LinkDelay,
     speed: f64,
+    pool: BufferPool,
 }
 
 impl Endpoint {
@@ -178,10 +187,23 @@ impl Endpoint {
         self.speed
     }
 
+    /// This endpoint's message-buffer pool.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Adopt an arrived payload: raw `Vec` messages join this endpoint's
+    /// pool; pooled messages keep their origin pool.
+    fn adopt(&self, mut buf: MsgBuf) -> MsgBuf {
+        buf.attach_pool_if_absent(&self.pool);
+        buf
+    }
+
     /// Non-blocking send (`MPI_Isend`). The payload is moved into the
     /// destination mailbox with a simulated arrival instant; the returned
     /// request completes when that instant passes.
-    pub fn isend(&mut self, dst: Rank, tag: Tag, data: Vec<f64>) -> Result<SendRequest> {
+    pub fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<SendRequest> {
+        let data = data.into();
         if dst >= self.shared.size {
             return Err(Error::Transport(format!(
                 "isend to rank {dst} out of range (world size {})",
@@ -236,7 +258,7 @@ impl Endpoint {
 
     /// Blocking wait on a receive request (`MPI_Wait`), with an optional
     /// timeout. Returns the payload.
-    pub fn wait_recv(&self, req: &mut RecvRequest, timeout: Option<Duration>) -> Result<Vec<f64>> {
+    pub fn wait_recv(&self, req: &mut RecvRequest, timeout: Option<Duration>) -> Result<MsgBuf> {
         if let Some(data) = req.data.take() {
             return Ok(data);
         }
@@ -265,7 +287,7 @@ impl Endpoint {
                     .metrics
                     .msgs_delivered
                     .fetch_add(1, Ordering::Relaxed);
-                return Ok(p.data);
+                return Ok(self.adopt(p.data));
             }
             if let Some(dl) = deadline {
                 if Instant::now() >= dl {
@@ -296,7 +318,7 @@ impl Endpoint {
         &self,
         pairs: &[(Rank, Tag)],
         timeout: Duration,
-    ) -> Option<(usize, Vec<f64>)> {
+    ) -> Option<(usize, MsgBuf)> {
         let lane = &self.shared.lanes[self.rank];
         let deadline = Instant::now() + timeout;
         let mut mb = lane.mailbox.lock().unwrap();
@@ -322,7 +344,7 @@ impl Endpoint {
                     .metrics
                     .msgs_delivered
                     .fetch_add(1, Ordering::Relaxed);
-                return Some((i, p.data));
+                return Some((i, self.adopt(p.data)));
             }
             if now >= deadline {
                 return None;
@@ -338,7 +360,7 @@ impl Endpoint {
     }
 
     /// Immediate poll: take the oldest visible `(src, tag)` message if any.
-    pub fn try_match(&self, src: Rank, tag: Tag) -> Option<Vec<f64>> {
+    pub fn try_match(&self, src: Rank, tag: Tag) -> Option<MsgBuf> {
         let lane = &self.shared.lanes[self.rank];
         let mut mb = lane.mailbox.lock().unwrap();
         let q = &mut mb.queues[src];
@@ -358,7 +380,7 @@ impl Endpoint {
             .metrics
             .msgs_delivered
             .fetch_add(1, Ordering::Relaxed);
-        Some(p.data)
+        Some(self.adopt(p.data))
     }
 
     /// Count of visible (deliverable now) messages from `src` with `tag`.
@@ -392,6 +414,47 @@ impl Endpoint {
         while Instant::now() < t {
             sleep_until(t);
         }
+    }
+}
+
+impl Transport for Endpoint {
+    type SendHandle = SendRequest;
+
+    fn rank(&self) -> Rank {
+        Endpoint::rank(self)
+    }
+
+    fn world_size(&self) -> usize {
+        Endpoint::world_size(self)
+    }
+
+    fn speed(&self) -> f64 {
+        Endpoint::speed(self)
+    }
+
+    fn pool(&self) -> &BufferPool {
+        Endpoint::pool(self)
+    }
+
+    fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<SendRequest> {
+        Endpoint::isend(self, dst, tag, data)
+    }
+
+    fn try_match(&mut self, src: Rank, tag: Tag) -> Option<MsgBuf> {
+        Endpoint::try_match(self, src, tag)
+    }
+
+    fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        let mut req = self.irecv(src, tag);
+        self.wait_recv(&mut req, timeout)
+    }
+
+    fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        Endpoint::wait_any(self, pairs, timeout)
+    }
+
+    fn probe_count(&self, src: Rank, tag: Tag) -> usize {
+        Endpoint::probe_count(self, src, tag)
     }
 }
 
@@ -429,11 +492,11 @@ mod tests {
         e1.isend(0, 2, vec![2.0]).unwrap();
         e1.isend(0, 1, vec![3.0]).unwrap();
         // tag 2 can be taken before the queued tag-1 messages
-        assert_eq!(e0.try_match(1, 2), Some(vec![2.0]));
+        assert_eq!(e0.try_match(1, 2).unwrap(), vec![2.0]);
         // tag 1 arrives in order
-        assert_eq!(e0.try_match(1, 1), Some(vec![1.0]));
-        assert_eq!(e0.try_match(1, 1), Some(vec![3.0]));
-        assert_eq!(e0.try_match(1, 1), None);
+        assert_eq!(e0.try_match(1, 1).unwrap(), vec![1.0]);
+        assert_eq!(e0.try_match(1, 1).unwrap(), vec![3.0]);
+        assert!(e0.try_match(1, 1).is_none());
     }
 
     #[test]
@@ -445,7 +508,7 @@ mod tests {
         let e0 = eps.pop().unwrap();
         let req = e1.isend(0, 5, vec![9.0]).unwrap();
         assert!(!req.test(), "send must be in flight");
-        assert_eq!(e0.try_match(1, 5), None, "not visible before latency");
+        assert!(e0.try_match(1, 5).is_none(), "not visible before latency");
         let mut r = e0.irecv(1, 5);
         let data = e0.wait_recv(&mut r, Some(Duration::from_secs(2))).unwrap();
         assert_eq!(data, vec![9.0]);
@@ -463,7 +526,7 @@ mod tests {
     #[test]
     fn out_of_range_send_fails() {
         let (_w, mut eps) = instant_world(1);
-        assert!(eps[0].isend(3, 0, vec![]).is_err());
+        assert!(eps[0].isend(3, 0, Vec::<f64>::new()).is_err());
     }
 
     #[test]
@@ -519,5 +582,35 @@ mod tests {
         assert_eq!(e0.probe_count(1, 3), 2);
         let _ = e0.try_match(1, 3);
         assert_eq!(e0.probe_count(1, 3), 1);
+    }
+
+    #[test]
+    fn pooled_send_storage_returns_to_sender_pool() {
+        let (_w, mut eps) = instant_world(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let buf = e0.pool().acquire(16);
+        e0.isend(1, 9, buf).unwrap();
+        assert_eq!(e0.pool().free_len(), 0, "buffer is in flight");
+        let got = e1.try_match(0, 9).unwrap();
+        assert!(
+            got.pool().unwrap().same_pool(e0.pool()),
+            "pooled payloads keep their origin pool"
+        );
+        drop(got);
+        assert_eq!(e0.pool().free_len(), 1, "drained storage returns home");
+    }
+
+    #[test]
+    fn raw_vec_payload_adopted_by_receiver_pool() {
+        let (_w, mut eps) = instant_world(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.isend(1, 9, vec![1.0, 2.0]).unwrap();
+        let got = e1.try_match(0, 9).unwrap();
+        assert!(got.pool().unwrap().same_pool(e1.pool()));
+        drop(got);
+        assert_eq!(e1.pool().free_len(), 1);
+        assert_eq!(e0.pool().free_len(), 0);
     }
 }

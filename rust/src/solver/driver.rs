@@ -16,7 +16,8 @@ use crate::jack::JackComm;
 use crate::metrics::RankMetrics;
 use crate::problem::{extract_face, idx3, ConvDiff, Face, Partition3D, SubDomain};
 use crate::runtime::Engine;
-use crate::simmpi::{barrier, Endpoint, NetworkModel, World, WorldConfig};
+use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
+use crate::transport::Transport;
 
 /// Aggregated per-time-step results.
 #[derive(Debug, Clone)]
@@ -218,10 +219,12 @@ pub fn assemble_global<'a>(
     out
 }
 
-/// Per-rank worker: full time-stepped solve.
+/// Per-rank worker: full time-stepped solve. Generic over the
+/// [`Transport`] backend — the driver composes a concrete world in
+/// [`solve`], but the per-rank solve logic never names it.
 #[allow(clippy::too_many_arguments)]
-fn run_rank(
-    ep: Endpoint,
+fn run_rank<T: Transport>(
+    ep: T,
     graph: CommGraph,
     sub: SubDomain,
     part: Partition3D,
@@ -360,8 +363,8 @@ fn run_rank(
 }
 
 /// Write the current solution's boundary planes into the send buffers.
-fn publish_faces(
-    comm: &mut JackComm,
+fn publish_faces<T: Transport>(
+    comm: &mut JackComm<T>,
     sub: &SubDomain,
     faces: &[(Face, usize)],
 ) -> Result<()> {
@@ -375,8 +378,8 @@ fn publish_faces(
 
 /// One compute phase: sweep + publish boundary faces + heterogeneity spin.
 #[allow(clippy::too_many_arguments)]
-fn compute_phase(
-    comm: &mut JackComm,
+fn compute_phase<T: Transport>(
+    comm: &mut JackComm<T>,
     backend: &mut Box<dyn ComputeBackend>,
     sub: &SubDomain,
     faces: &[(Face, usize)],

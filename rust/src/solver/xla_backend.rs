@@ -8,6 +8,8 @@
 use super::backend::ComputeBackend;
 use crate::error::Result;
 use crate::runtime::SweepExecutable;
+// Offline build: the PJRT binding is stubbed (see crate::xla_stub).
+use crate::xla_stub as xla;
 
 /// Send wrapper for cached literals (host buffers; the xla crate's raw
 /// pointer wrapper lacks the auto trait). Each backend instance is owned

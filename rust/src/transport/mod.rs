@@ -1,0 +1,138 @@
+//! # transport — backend-agnostic message transport
+//!
+//! The layer between the JACK2 library core ([`crate::jack`]) and a
+//! concrete message-passing substrate. The paper builds directly on MPI;
+//! this crate's seed built directly on the simulated substrate
+//! ([`crate::simmpi`]). Everything above the substrate is now written
+//! against the [`Transport`] trait instead, so alternative backends (a
+//! real MPI binding, a shared-memory ring, RDMA) can slot in without
+//! touching `jack`, the collectives, or the solver driver.
+//!
+//! The second half of this module is buffer management — the part of
+//! JACK2's contribution the paper summarizes as "efficient management of
+//! communication requests and buffers":
+//!
+//! * [`MsgBuf`] is an owned message payload that remembers which
+//!   [`BufferPool`] its storage came from and recycles itself on drop.
+//! * [`BufferPool`] is a lock-free free list of retired allocations.
+//!   Completed sends and drained receives return their storage to the
+//!   pool; the steady-state iteration path performs **zero** new heap
+//!   allocations (see `tests/transport_pool.rs` for the enforced
+//!   invariant and `benches/comm_micro.rs` for the measured effect).
+//!
+//! ## Writing a new backend
+//!
+//! Implement [`Transport`] (and [`SendHandle`] for your send-request
+//! type). The contract mirrors the MPI subset JACK2 consumes:
+//!
+//! * `isend` is non-blocking and *moves* the payload; the returned
+//!   [`SendHandle`] completes when the message has arrived.
+//! * delivery is non-overtaking per `(source, tag)` pair;
+//! * `try_match` / `recv` / `wait_any` surface arrived messages as
+//!   [`MsgBuf`]s whose storage, once dropped, is recycled — a backend
+//!   should route that storage back to the pool of the endpoint that
+//!   allocated it (or adopt it locally when the origin is unknown).
+
+pub mod msgbuf;
+pub mod pool;
+
+pub use msgbuf::MsgBuf;
+pub use pool::{BufferPool, PoolStats};
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// Rank index within a world (an "MPI rank").
+pub type Rank = usize;
+
+/// Message tag. JACK2 packs protocol ids into tags; see
+/// [`crate::jack::messages`].
+pub type Tag = u64;
+
+/// Completion handle for a non-blocking send (the `MPI_Request` analogue
+/// on the sending side).
+pub trait SendHandle: fmt::Debug + Send {
+    /// Non-blocking completion test (`MPI_Test`).
+    fn test(&self) -> bool;
+
+    /// Blocking wait (`MPI_Wait`).
+    fn wait(&self);
+
+    /// Payload size in bytes (metrics).
+    fn bytes(&self) -> usize;
+}
+
+/// One endpoint of a point-to-point message transport (the "MPI process"
+/// handle the JACK2 core is written against).
+///
+/// Implementations must preserve MPI's non-overtaking guarantee: messages
+/// from the same source with the same tag are matched in send order.
+/// Endpoints are driven by exactly one thread (`Send`, not necessarily
+/// `Sync`), matching the single-threaded-per-rank usage JACK2 assumes.
+pub trait Transport: Send {
+    /// Send-request handle type returned by [`Transport::isend`].
+    type SendHandle: SendHandle;
+
+    /// This endpoint's rank.
+    fn rank(&self) -> Rank;
+
+    /// Number of ranks in the world.
+    fn world_size(&self) -> usize;
+
+    /// Relative compute speed of this endpoint's host (1.0 = nominal).
+    fn speed(&self) -> f64 {
+        1.0
+    }
+
+    /// The recycling pool feeding this endpoint's message buffers.
+    fn pool(&self) -> &BufferPool;
+
+    /// A pooled, zero-filled buffer of exactly `len` elements.
+    fn acquire(&self, len: usize) -> MsgBuf {
+        self.pool().acquire(len)
+    }
+
+    /// Non-blocking send (`MPI_Isend`): the payload is moved into the
+    /// transport; the handle completes once the message has arrived.
+    fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<Self::SendHandle>;
+
+    /// Pooled-copy send: stage `data` into a recycled buffer (single
+    /// copy pass, no zero-fill) and post it. This is the steady-state
+    /// iteration send path — after warm-up it performs no heap
+    /// allocation (unlike `isend(.., data.to_vec())`).
+    fn isend_copy(&mut self, dst: Rank, tag: Tag, data: &[f64]) -> Result<Self::SendHandle> {
+        let buf = self.pool().stage(data);
+        self.isend(dst, tag, buf)
+    }
+
+    /// Pooled send of `[header, payload...]` — the round-stamped control
+    /// message shape shared by the collectives and the snapshot protocol.
+    /// One staging pass, no steady-state allocation.
+    fn isend_headed(
+        &mut self,
+        dst: Rank,
+        tag: Tag,
+        header: f64,
+        payload: &[f64],
+    ) -> Result<Self::SendHandle> {
+        let buf = self.pool().stage_headed(header, payload);
+        self.isend(dst, tag, buf)
+    }
+
+    /// Immediate poll: take the oldest visible `(src, tag)` message, if any.
+    fn try_match(&mut self, src: Rank, tag: Tag) -> Option<MsgBuf>;
+
+    /// Blocking receive of the oldest `(src, tag)` message, with an
+    /// optional timeout.
+    fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf>;
+
+    /// Blocking multiplexed wait: the first visible message matching any
+    /// of `pairs` (`(src, tag)`), or `None` on timeout. Index is the
+    /// position in `pairs`.
+    fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)>;
+
+    /// Count of visible (deliverable now) messages from `src` with `tag`.
+    fn probe_count(&self, src: Rank, tag: Tag) -> usize;
+}

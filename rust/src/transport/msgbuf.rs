@@ -1,0 +1,193 @@
+//! [`MsgBuf`] — an owned message payload that recycles its own storage.
+//!
+//! The transport moves `MsgBuf`s end to end: a send path stages data into
+//! one (from the sender's [`BufferPool`]), the payload travels as-is, and
+//! the receive path hands it to the user. Wherever the buffer is finally
+//! dropped — after an address-swap delivery, a protocol drain, or a
+//! discarded message — its storage returns to the pool it came from, so
+//! the steady state allocates nothing.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+
+use super::pool::BufferPool;
+
+/// An owned `f64` message payload, optionally backed by a [`BufferPool`].
+///
+/// Dereferences to `[f64]`. Dropping a pooled buffer parks its storage
+/// back in the pool; a plain (`From<Vec<f64>>`) buffer frees normally.
+pub struct MsgBuf {
+    data: Vec<f64>,
+    pool: Option<BufferPool>,
+}
+
+impl MsgBuf {
+    /// Wrap a plain vector (no pool: dropping frees the storage).
+    pub fn from_vec(data: Vec<f64>) -> Self {
+        MsgBuf { data, pool: None }
+    }
+
+    pub(crate) fn pooled(data: Vec<f64>, pool: BufferPool) -> Self {
+        MsgBuf {
+            data,
+            pool: Some(pool),
+        }
+    }
+
+    /// Adopt `pool` as the recycling destination if the buffer has none
+    /// (raw `Vec` payloads are adopted by the receiving endpoint so they
+    /// still recycle; pooled payloads keep their origin pool, returning
+    /// the storage to the endpoint that allocated it).
+    pub fn attach_pool_if_absent(&mut self, pool: &BufferPool) {
+        if self.pool.is_none() {
+            self.pool = Some(pool.clone());
+        }
+    }
+
+    /// The pool this buffer recycles into, if any.
+    pub fn pool(&self) -> Option<&BufferPool> {
+        self.pool.as_ref()
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// The backing vector — used for O(1) address-swap delivery
+    /// ([`crate::jack::buffers::BufferSet::deliver`]).
+    pub fn vec_mut(&mut self) -> &mut Vec<f64> {
+        &mut self.data
+    }
+
+    /// Detach from the pool and take the raw vector (the storage leaves
+    /// the recycling cycle and is owned by the caller).
+    pub fn into_vec(mut self) -> Vec<f64> {
+        self.pool = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for MsgBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.release(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl Deref for MsgBuf {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+impl DerefMut for MsgBuf {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
+impl From<Vec<f64>> for MsgBuf {
+    fn from(data: Vec<f64>) -> Self {
+        MsgBuf::from_vec(data)
+    }
+}
+
+impl From<MsgBuf> for Vec<f64> {
+    fn from(buf: MsgBuf) -> Self {
+        buf.into_vec()
+    }
+}
+
+impl fmt::Debug for MsgBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MsgBuf")
+            .field("data", &self.data)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl PartialEq for MsgBuf {
+    fn eq(&self, other: &MsgBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl PartialEq<Vec<f64>> for MsgBuf {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self.data == *other
+    }
+}
+
+impl PartialEq<[f64]> for MsgBuf {
+    fn eq(&self, other: &[f64]) -> bool {
+        self.data == other
+    }
+}
+
+impl PartialEq<MsgBuf> for Vec<f64> {
+    fn eq(&self, other: &MsgBuf) -> bool {
+        *self == other.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_frees_without_pool() {
+        let b = MsgBuf::from_vec(vec![1.0, 2.0]);
+        assert_eq!(b, vec![1.0, 2.0]);
+        assert!(b.pool().is_none());
+        drop(b); // no pool: plain free, nothing to assert beyond no panic
+    }
+
+    #[test]
+    fn drop_recycles_into_pool() {
+        let pool = BufferPool::new();
+        let b = pool.acquire(8);
+        drop(b);
+        assert_eq!(pool.free_len(), 1);
+    }
+
+    #[test]
+    fn into_vec_detaches_from_pool() {
+        let pool = BufferPool::new();
+        let b = pool.acquire(8);
+        let v = b.into_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(pool.free_len(), 0, "detached storage must not recycle");
+    }
+
+    #[test]
+    fn attach_pool_if_absent_keeps_origin() {
+        let origin = BufferPool::new();
+        let other = BufferPool::new();
+        let mut b = origin.acquire(4);
+        b.attach_pool_if_absent(&other);
+        assert!(b.pool().unwrap().same_pool(&origin));
+        let mut raw = MsgBuf::from_vec(vec![0.0; 4]);
+        raw.attach_pool_if_absent(&other);
+        assert!(raw.pool().unwrap().same_pool(&other));
+        drop(raw);
+        assert_eq!(other.free_len(), 1);
+    }
+
+    #[test]
+    fn deref_and_mutation() {
+        let pool = BufferPool::new();
+        let mut b = pool.acquire(3);
+        b.copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(b[1], 2.0);
+        assert_eq!(b.as_slice(), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.len(), 3);
+    }
+}

@@ -1,0 +1,424 @@
+//! Lock-free recycled storage for message payloads.
+//!
+//! A [`BufferPool`] keeps a fixed array of atomic slots, each parking one
+//! retired `Vec<f64>` allocation. `acquire` swaps a buffer out and
+//! right-sizes it; `release` (called by [`MsgBuf`](super::MsgBuf) on
+//! drop) parks the allocation back. Every operation is a single atomic
+//! `swap` / `compare_exchange` on one slot — no locks and no ABA window,
+//! because a non-null pointer is owned exclusively from the moment it is
+//! swapped out until it is re-published.
+//!
+//! Parking is itself allocation-free: the slot stores the buffer's own
+//! raw pointer, with its capacity stashed in the buffer's first word
+//! (parked contents are dead), so the recycle cycle touches the global
+//! allocator **zero** times in steady state — no header boxes, no
+//! side tables.
+//!
+//! The fixed-slot + atomic-counter layout follows the atomic ordered-vec
+//! idiom from the related-work snippets rather than a linked Treiber
+//! stack: capacity is bounded by construction and the hot path is a short
+//! scan over cache-resident slots.
+//!
+//! Acquisition is **size-aware**: the scan returns the first parked
+//! buffer whose capacity fits the request; when nothing fits it falls
+//! back to the *largest* undersized candidate seen (which then regrows —
+//! counted as an allocation). Buffer capacities only ratchet upward
+//! (`Vec::resize` never shrinks capacity), so a workload with mixed
+//! message sizes — one endpoint pool carries both halo payloads and tiny
+//! protocol control messages — settles into a stable population of
+//! fitting buffers and stops allocating entirely
+//! (`tests/transport_pool.rs` enforces this).
+
+use std::fmt;
+use std::mem::ManuallyDrop;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::msgbuf::MsgBuf;
+
+/// Retired buffers a pool retains before dropping extras.
+const DEFAULT_SLOTS: usize = 64;
+
+/// Reconstitute a parked buffer from its published pointer.
+///
+/// # Safety
+/// `p` must be a pointer published by [`park_parts`]: the start of a live
+/// `Vec<f64>` allocation with its capacity stashed in the first word, to
+/// which the caller has gained exclusive ownership (by atomically
+/// swapping it out of a slot).
+unsafe fn unpark(p: *mut f64) -> Vec<f64> {
+    let cap = p.cast::<usize>().read();
+    // Length 0: parked contents are dead; acquire re-fills as needed.
+    Vec::from_raw_parts(p, 0, cap)
+}
+
+/// Decompose `v` (capacity ≥ 1) into a publishable raw pointer, stashing
+/// the capacity in the buffer's first word. The allocation's contents are
+/// dead once parked, and an `f64` allocation is aligned for `usize`.
+fn park_parts(v: Vec<f64>) -> *mut f64 {
+    debug_assert!(v.capacity() > 0, "cannot park an empty allocation");
+    let mut v = ManuallyDrop::new(v);
+    let cap = v.capacity();
+    let p = v.as_mut_ptr();
+    // SAFETY: capacity ≥ 1 keeps the first word in-bounds; the write
+    // invalidates only dead contents.
+    unsafe { p.cast::<usize>().write(cap) };
+    p
+}
+
+/// Monotonic pool counters (all `Relaxed`: read by tests and perf
+/// reports, never used for synchronization).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Fresh heap allocations performed by acquire — a pool miss, or a
+    /// recycled buffer whose capacity was too small and had to regrow.
+    pub allocations: u64,
+    /// Acquires satisfied from recycled storage without reallocating.
+    pub reuses: u64,
+    /// Buffers accepted back into the free list.
+    pub recycled: u64,
+    /// Buffers dropped on release because the free list was full.
+    pub dropped: u64,
+}
+
+struct PoolInner {
+    slots: Box<[AtomicPtr<f64>]>,
+    allocations: AtomicU64,
+    reuses: AtomicU64,
+    recycled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        for s in self.slots.iter() {
+            let p = s.swap(ptr::null_mut(), Ordering::Acquire);
+            if !p.is_null() {
+                // SAFETY: a non-null slot pointer was published by
+                // `park_parts`; the swap transferred ownership here.
+                drop(unsafe { unpark(p) });
+            }
+        }
+    }
+}
+
+/// Cheaply clonable handle onto a shared lock-free free list of message
+/// buffers. Clones share the same slots and counters.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BufferPool")
+            .field("free", &self.free_len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool::with_slots(DEFAULT_SLOTS)
+    }
+
+    /// Pool retaining at most `slots` retired buffers (min 1).
+    pub fn with_slots(slots: usize) -> Self {
+        let slots: Box<[AtomicPtr<f64>]> = (0..slots.max(1))
+            .map(|_| AtomicPtr::new(ptr::null_mut()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        BufferPool {
+            inner: Arc::new(PoolInner {
+                slots,
+                allocations: AtomicU64::new(0),
+                reuses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// True when both handles share the same underlying free list.
+    pub fn same_pool(&self, other: &BufferPool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// A recycled (or fresh) buffer of exactly `len` elements, zeroed.
+    pub fn acquire(&self, len: usize) -> MsgBuf {
+        let mut v = self.acquire_vec(len);
+        v.clear();
+        v.resize(len, 0.0);
+        MsgBuf::pooled(v, self.clone())
+    }
+
+    /// Stage a copy of `data` into a recycled buffer in a **single
+    /// pass** (no zero-fill before the copy): the pooled, allocation-free
+    /// equivalent of `data.to_vec()`. This is the hot-path primitive
+    /// behind `Transport::isend_copy`.
+    pub fn stage(&self, data: &[f64]) -> MsgBuf {
+        let mut v = self.acquire_vec(data.len());
+        v.clear(); // recycled buffers arrive empty; cheap guard either way
+        v.extend_from_slice(data);
+        MsgBuf::pooled(v, self.clone())
+    }
+
+    /// Like [`BufferPool::stage`] with a one-word protocol header
+    /// prepended: produces `[header, payload...]` in a single pass. Used
+    /// by round-stamped control messages (`Transport::isend_headed`).
+    pub fn stage_headed(&self, header: f64, payload: &[f64]) -> MsgBuf {
+        let mut v = self.acquire_vec(payload.len() + 1);
+        v.clear();
+        v.push(header);
+        v.extend_from_slice(payload);
+        MsgBuf::pooled(v, self.clone())
+    }
+
+    fn acquire_vec(&self, len: usize) -> Vec<f64> {
+        match self.take_free(len) {
+            Some(v) => {
+                if v.capacity() >= len {
+                    self.inner.reuses.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // the caller's resize will regrow: a real allocation
+                    self.inner.allocations.fetch_add(1, Ordering::Relaxed);
+                }
+                v
+            }
+            None => {
+                self.inner.allocations.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        }
+    }
+
+    /// Size-aware scan: the first parked buffer with capacity ≥ `len`, or
+    /// — when nothing fits — the *largest* undersized candidate (the
+    /// caller regrows it, ratcheting the pool's capacities upward).
+    /// Unsuitable buffers taken during the scan are re-parked; every slot
+    /// operation is one atomic swap, so ownership is always exclusive and
+    /// never blocks.
+    fn take_free(&self, len: usize) -> Option<Vec<f64>> {
+        let mut fallback: Option<Vec<f64>> = None;
+        for s in self.inner.slots.iter() {
+            let p = s.swap(ptr::null_mut(), Ordering::Acquire);
+            if p.is_null() {
+                continue;
+            }
+            // SAFETY: the swap gives us exclusive ownership of the
+            // pointer published by `park_parts`.
+            let v = unsafe { unpark(p) };
+            if v.capacity() >= len {
+                if let Some(f) = fallback.take() {
+                    self.repark(f);
+                }
+                return Some(v);
+            }
+            let keep = match &fallback {
+                None => true,
+                Some(f) => v.capacity() > f.capacity(),
+            };
+            if keep {
+                if let Some(f) = fallback.replace(v) {
+                    self.repark(f);
+                }
+            } else {
+                self.repark(v);
+            }
+        }
+        fallback
+    }
+
+    /// Publish a buffer into the first free slot. Returns false (and
+    /// drops the buffer) when the free list is full. Allocation-free:
+    /// the slot stores the buffer's own pointer.
+    fn park(&self, v: Vec<f64>) -> bool {
+        let p = park_parts(v);
+        for s in self.inner.slots.iter() {
+            if s.compare_exchange(ptr::null_mut(), p, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+        // SAFETY: p was produced by `park_parts` just above and never
+        // published to a slot, so ownership is still ours.
+        drop(unsafe { unpark(p) });
+        false
+    }
+
+    /// Park a buffer back without touching the recycle counters (used by
+    /// the size-aware scan for candidates it rejected).
+    fn repark(&self, v: Vec<f64>) {
+        if !self.park(v) {
+            // Free list refilled concurrently: the extra buffer was dropped.
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Park a retired allocation for reuse (zero-capacity vectors are
+    /// dropped; a full free list drops the buffer and counts it).
+    pub fn release(&self, v: Vec<f64>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        if self.park(v) {
+            self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocations: self.inner.allocations.load(Ordering::Relaxed),
+            reuses: self.inner.reuses.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently parked (approximate under concurrent access).
+    pub fn free_len(&self) -> usize {
+        self.inner
+            .slots
+            .iter()
+            .filter(|s| !s.load(Ordering::Relaxed).is_null())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_allocates_then_reuses() {
+        let pool = BufferPool::new();
+        let a = pool.acquire(16);
+        assert_eq!(pool.stats().allocations, 1);
+        assert_eq!(&*a, &[0.0; 16][..]);
+        drop(a); // recycles
+        assert_eq!(pool.stats().recycled, 1);
+        assert_eq!(pool.free_len(), 1);
+        let b = pool.acquire(16);
+        let s = pool.stats();
+        assert_eq!(s.allocations, 1, "second acquire must reuse");
+        assert_eq!(s.reuses, 1);
+        drop(b);
+    }
+
+    #[test]
+    fn acquire_zeroes_recycled_storage() {
+        let pool = BufferPool::new();
+        let mut a = pool.acquire(4);
+        a.copy_from_slice(&[9.0, 9.0, 9.0, 9.0]);
+        drop(a);
+        let b = pool.acquire(4);
+        assert_eq!(&*b, &[0.0; 4][..], "acquire must never expose stale data");
+    }
+
+    #[test]
+    fn capacity_ratchets_up_for_mixed_sizes() {
+        let pool = BufferPool::new();
+        drop(pool.acquire(128)); // park a big one
+        let small = pool.acquire(2); // reuses the 128-cap buffer
+        assert_eq!(small.len(), 2);
+        assert_eq!(pool.stats().reuses, 1);
+        drop(small);
+        let big = pool.acquire(100); // capacity retained: still no alloc
+        assert_eq!(big.len(), 100);
+        let s = pool.stats();
+        assert_eq!(s.allocations, 1);
+        assert_eq!(s.reuses, 2);
+    }
+
+    #[test]
+    fn size_aware_scan_prefers_fitting_buffer() {
+        let pool = BufferPool::new();
+        // Park a small and a big buffer (small lands in an earlier slot).
+        let big = pool.acquire(128);
+        drop(pool.acquire(2)); // small parked first
+        drop(big); // big parked second
+        assert_eq!(pool.free_len(), 2);
+        // A big request must skip the undersized slot and reuse the big
+        // buffer — no regrow, no allocation.
+        let got = pool.acquire(100);
+        assert_eq!(got.len(), 100);
+        let s = pool.stats();
+        assert_eq!(s.allocations, 2, "only the two initial acquires allocate");
+        assert_eq!(pool.free_len(), 1, "the small buffer stays parked");
+        drop(got);
+        // A small request reuses the small buffer without touching the big
+        // one's capacity.
+        let small = pool.acquire(1);
+        assert_eq!(small.len(), 1);
+        assert_eq!(pool.stats().allocations, 2);
+    }
+
+    #[test]
+    fn undersized_fallback_regrows_once_then_fits() {
+        let pool = BufferPool::new();
+        drop(pool.acquire(2)); // only an undersized buffer is parked
+        let big = pool.acquire(64); // fallback: regrow (counts as alloc)
+        assert_eq!(big.len(), 64);
+        assert_eq!(pool.stats().allocations, 2);
+        drop(big);
+        let again = pool.acquire(64); // ratcheted capacity now fits
+        let s = pool.stats();
+        assert_eq!(s.allocations, 2, "no further regrowth: {s:?}");
+        assert_eq!(again.len(), 64);
+    }
+
+    #[test]
+    fn full_pool_drops_extras() {
+        let pool = BufferPool::with_slots(2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.acquire(8)).collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!(s.recycled, 2);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(pool.free_len(), 2);
+    }
+
+    #[test]
+    fn stage_copies_in_one_pass_and_reuses() {
+        let pool = BufferPool::new();
+        drop(pool.acquire(8)); // park one buffer
+        let m = pool.stage(&[1.0, 2.0, 3.0]);
+        assert_eq!(m, vec![1.0, 2.0, 3.0]);
+        let s = pool.stats();
+        assert_eq!(s.allocations, 1, "stage must reuse the parked buffer");
+        assert_eq!(s.reuses, 1);
+        drop(m);
+        let h = pool.stage_headed(42.0, &[7.0, 8.0]);
+        assert_eq!(h, vec![42.0, 7.0, 8.0]);
+        assert_eq!(pool.stats().allocations, 1, "headed staging reuses too");
+    }
+
+    #[test]
+    fn release_ignores_empty_vectors() {
+        let pool = BufferPool::new();
+        pool.release(Vec::new());
+        assert_eq!(pool.free_len(), 0);
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn cross_thread_release_returns_to_origin() {
+        let pool = BufferPool::new();
+        let buf = pool.acquire(32);
+        let h = std::thread::spawn(move || drop(buf));
+        h.join().unwrap();
+        assert_eq!(pool.free_len(), 1, "buffer must come home across threads");
+    }
+}

@@ -1,0 +1,131 @@
+//! Offline stand-in for the `xla` PJRT binding crate.
+//!
+//! The build environment has no network and no vendored `xla` crate, so
+//! this module mirrors the exact API surface [`crate::runtime`] and
+//! [`crate::solver::xla_backend`] consume. Every entry point that would
+//! touch PJRT fails with a clear [`XlaUnavailable`] error; since
+//! [`PjRtClient::cpu`] is the first call on the XLA path, the failure
+//! surfaces immediately and `Backend::Xla` degrades to a descriptive
+//! runtime error while the native backend (and the whole test suite)
+//! remains fully functional.
+//!
+//! To enable the real three-layer path, vendor the `xla` crate and change
+//! the `use crate::xla_stub as xla;` alias in `runtime/mod.rs` and
+//! `solver/xla_backend.rs` to `use xla;`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error returned by every stubbed PJRT operation.
+pub struct XlaUnavailable;
+
+impl fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "XLA/PJRT support is not built in (offline xla_stub); use the \
+             native backend or vendor the `xla` crate (see rust/src/xla_stub.rs)"
+        )
+    }
+}
+
+impl fmt::Debug for XlaUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// Stubbed `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla_stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stubbed `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stubbed `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stubbed `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stubbed `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stubbed `xla::Literal` (host tensor).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().map(|_| ()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("xla_stub"), "{msg}");
+        assert!(msg.contains("native backend"), "{msg}");
+    }
+
+    #[test]
+    fn literal_surface_is_inert() {
+        let lit = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f64>().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}

@@ -4,9 +4,12 @@
 
 use jack2::graph::CommGraph;
 use jack2::jack::{JackComm, Mode};
-use jack2::simmpi::{NetworkModel, World, WorldConfig};
+use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
 
-fn pair() -> (JackComm, std::thread::JoinHandle<JackComm>) {
+fn pair() -> (
+    JackComm<Endpoint>,
+    std::thread::JoinHandle<JackComm<Endpoint>>,
+) {
     let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::uniform(2, 0.1));
     let (_w, mut eps) = World::new(cfg);
     let e1 = eps.pop().unwrap();

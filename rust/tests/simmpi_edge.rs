@@ -54,7 +54,8 @@ fn wait_any_wakes_on_late_arrival() {
     let (idx, data) = e0
         .wait_any(&[(1, 3)], Duration::from_secs(5))
         .expect("must arrive");
-    assert_eq!((idx, data), (0, vec![9.0]));
+    assert_eq!(idx, 0);
+    assert_eq!(data, vec![9.0]);
     // arrived ~5ms (sleep) + 100µs (latency); must be well before timeout
     assert!(t0.elapsed() < Duration::from_millis(500));
     h.join().unwrap();

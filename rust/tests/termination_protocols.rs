@@ -10,7 +10,8 @@ use jack2::jack::spanning_tree;
 use jack2::jack::termination::{PersistenceProtocol, TerminationProtocol};
 use jack2::jack::{AsyncConv, BufferSet, SnapshotProtocol};
 use jack2::metrics::{RankMetrics, Trace};
-use jack2::simmpi::{NetworkModel, World, WorldConfig};
+use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
+use jack2::transport::Transport;
 
 /// A deliberately simple distributed fixed-point problem:
 /// x_i ← (x_{i-1} + x_{i+1} + c_i) / 4 on a line of ranks (scalar per
@@ -18,7 +19,10 @@ use jack2::simmpi::{NetworkModel, World, WorldConfig};
 /// iterations converge from any interleaving.
 fn run_line_async(
     p: usize,
-    protocol_factory: impl Fn(usize, spanning_tree::SpanningTree) -> Box<dyn TerminationProtocol> + Send + Sync + 'static,
+    protocol_factory: impl Fn(usize, spanning_tree::SpanningTree) -> Box<dyn TerminationProtocol<Endpoint>>
+        + Send
+        + Sync
+        + 'static,
 ) -> Vec<(f64, u64, bool)> {
     let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(5, 0.3));
     let (_w, eps) = World::new(cfg);
@@ -77,7 +81,8 @@ fn run_line_async(
                         sb[0] = sol[0];
                     }
                     for (l, &dst) in g.send_neighbors().iter().enumerate() {
-                        ep.isend(dst, TAG_DATA, bufs.send[l].clone()).unwrap();
+                        // pooled staging: no allocation in steady state
+                        ep.isend_copy(dst, TAG_DATA, &bufs.send[l]).unwrap();
                     }
                     let lconv = res[0].abs() < 1e-8;
                     protocol.harvest_residual(&res);

@@ -1,0 +1,310 @@
+//! Buffer-pool invariants of the pooled zero-copy transport layer
+//! (ISSUE 1 tentpole): the steady-state iteration path allocates no new
+//! message buffers, recycled storage never leaks stale data across
+//! `(src, tag)` lanes, and MPI's non-overtaking order survives pooling.
+
+use std::time::Duration;
+
+use jack2::graph::CommGraph;
+use jack2::jack::messages::TAG_DATA;
+use jack2::jack::{AsyncComm, BufferSet, JackComm, SyncComm};
+use jack2::metrics::RankMetrics;
+use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
+use jack2::transport::Transport;
+
+fn instant_world(p: usize) -> (World, Vec<Endpoint>) {
+    World::new(WorldConfig::homogeneous(p).with_network(NetworkModel::instant()))
+}
+
+/// Two endpoints, symmetric single link, driven from one thread.
+fn pair() -> (World, Endpoint, Endpoint, CommGraph, CommGraph) {
+    let (w, mut eps) = instant_world(2);
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+    let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+    let g1 = CommGraph::symmetric(1, vec![0]).unwrap();
+    (w, e0, e1, g0, g1)
+}
+
+/// The sync exchange path (`SyncComm::send` → `SyncComm::recv`) performs
+/// zero new message-buffer allocations once the pools are warm.
+#[test]
+fn sync_exchange_is_allocation_free_after_warmup() {
+    let n = 256;
+    let (_w, mut e0, mut e1, g0, g1) = pair();
+    let mut bufs0 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut bufs1 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut sc0 = SyncComm::default();
+    let mut sc1 = SyncComm::default();
+    let mut m = RankMetrics::default();
+
+    let mut iterate = |e0: &mut Endpoint,
+                       e1: &mut Endpoint,
+                       bufs0: &mut BufferSet,
+                       bufs1: &mut BufferSet,
+                       sc0: &mut SyncComm<Endpoint>,
+                       sc1: &mut SyncComm<Endpoint>,
+                       m: &mut RankMetrics,
+                       it: usize| {
+        bufs0.send[0][0] = it as f64;
+        bufs1.send[0][0] = -(it as f64);
+        sc0.send(e0, &g0, bufs0, m).unwrap();
+        sc1.send(e1, &g1, bufs1, m).unwrap();
+        sc0.recv(e0, &g0, bufs0, m).unwrap();
+        sc1.recv(e1, &g1, bufs1, m).unwrap();
+        assert_eq!(bufs0.recv[0][0], -(it as f64));
+        assert_eq!(bufs1.recv[0][0], it as f64);
+    };
+
+    for it in 0..5 {
+        iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+    }
+    let warm0 = e0.pool().stats().allocations;
+    let warm1 = e1.pool().stats().allocations;
+    assert!(warm0 >= 1, "warm-up must have populated the pool");
+    for it in 5..105 {
+        iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+    }
+    let s0 = e0.pool().stats();
+    let s1 = e1.pool().stats();
+    assert_eq!(s0.allocations, warm0, "rank 0 allocated in steady state: {s0:?}");
+    assert_eq!(s1.allocations, warm1, "rank 1 allocated in steady state: {s1:?}");
+    assert!(s0.reuses >= 100, "sends must be pool-recycled: {s0:?}");
+}
+
+/// The async exchange path (Alg. 5 + Alg. 6) is equally allocation-free,
+/// including when busy channels discard sends.
+#[test]
+fn async_exchange_is_allocation_free_after_warmup() {
+    let n = 64;
+    let (_w, mut e0, mut e1, g0, g1) = pair();
+    let mut bufs0 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut bufs1 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut ac0: AsyncComm<Endpoint> = AsyncComm::new(1, 4);
+    let mut ac1: AsyncComm<Endpoint> = AsyncComm::new(1, 4);
+    let mut m = RankMetrics::default();
+
+    for it in 0..5 {
+        bufs0.send[0][0] = it as f64;
+        ac0.send(&mut e0, &g0, &bufs0, &mut m).unwrap();
+        ac1.send(&mut e1, &g1, &bufs1, &mut m).unwrap();
+        ac0.recv(&mut e0, &g0, &mut bufs0, &mut m).unwrap();
+        ac1.recv(&mut e1, &g1, &mut bufs1, &mut m).unwrap();
+    }
+    let warm0 = e0.pool().stats().allocations;
+    let warm1 = e1.pool().stats().allocations;
+    for it in 5..205 {
+        bufs0.send[0][0] = it as f64;
+        ac0.send(&mut e0, &g0, &bufs0, &mut m).unwrap();
+        ac1.send(&mut e1, &g1, &bufs1, &mut m).unwrap();
+        ac0.recv(&mut e0, &g0, &mut bufs0, &mut m).unwrap();
+        ac1.recv(&mut e1, &g1, &mut bufs1, &mut m).unwrap();
+    }
+    assert_eq!(e0.pool().stats().allocations, warm0);
+    assert_eq!(e1.pool().stats().allocations, warm1);
+    assert!(m.msgs_delivered > 0);
+}
+
+/// Recycled storage must never surface stale bytes: a shorter message
+/// staged into a longer recycled buffer carries exactly its own payload,
+/// and zeroed acquisition really zeroes.
+#[test]
+fn recycled_buffers_never_leak_stale_data() {
+    let (_w, mut e0, mut e1, _g0, _g1) = pair();
+
+    // Fill a pooled buffer with marker data on lane (0, tag 7)...
+    e0.isend_copy(1, 7, &[9.0, 9.0, 9.0, 9.0]).unwrap();
+    let got = Transport::try_match(&mut e1, 0, 7).unwrap();
+    assert_eq!(got, vec![9.0; 4]);
+    drop(got); // storage returns to e0's pool, still holding the 9s
+
+    // ...then send a *shorter* message on a different tag lane: the
+    // recycled allocation must carry only the new payload.
+    e0.isend_copy(1, 8, &[1.0, 2.0]).unwrap();
+    let got = Transport::try_match(&mut e1, 0, 8).unwrap();
+    assert_eq!(got.len(), 2, "stale tail must be truncated");
+    assert_eq!(got, vec![1.0, 2.0]);
+    drop(got);
+
+    // Zeroed acquisition of recycled storage exposes no marker bytes.
+    let zeroed = e0.pool().acquire(3);
+    assert_eq!(zeroed, vec![0.0; 3]);
+    let s = e0.pool().stats();
+    assert!(s.reuses >= 2, "the lanes must actually share the pool: {s:?}");
+}
+
+/// Non-overtaking per (src, tag) still holds when buffers are recycled
+/// mid-stream: sequence numbers arrive strictly in order, none lost.
+#[test]
+fn non_overtaking_order_holds_under_pooling() {
+    let (_w, mut e0, mut e1, _g0, _g1) = pair();
+    let total = 50usize;
+    let mut next = 0usize;
+    for i in 0..total {
+        e0.isend_copy(1, TAG_DATA, &[i as f64, (i * i) as f64]).unwrap();
+        // Drain in bursts so drained buffers recycle into e0's pool while
+        // later messages are still being staged from it.
+        if i % 5 == 4 {
+            while let Some(msg) = Transport::try_match(&mut e1, 0, TAG_DATA) {
+                assert_eq!(msg[0] as usize, next, "overtaking detected");
+                assert_eq!(msg[1] as usize, next * next, "payload corrupted");
+                next += 1;
+            }
+        }
+    }
+    while let Some(msg) = Transport::try_match(&mut e1, 0, TAG_DATA) {
+        assert_eq!(msg[0] as usize, next);
+        next += 1;
+    }
+    assert_eq!(next, total, "messages lost under pooling");
+}
+
+/// Full-stack check: the `JackComm` synchronous iteration loop (send +
+/// recv + distributed residual norm) allocates no message buffers after
+/// warm-up — the tentpole's acceptance criterion at the user-API level.
+///
+/// A world barrier between iterations keeps the two rank threads in
+/// lock-step so every iteration's acquire/release pattern is identical
+/// (the barrier itself moves zero-capacity payloads: no pool churn),
+/// making the zero-allocation assertion deterministic.
+#[test]
+fn jackcomm_sync_iteration_is_allocation_free_after_warmup() {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+    let (_w, eps) = World::new(cfg);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
+                let mut comm = JackComm::new(ep, graph).unwrap();
+                comm.init_buffers(&[8], &[8]).unwrap();
+                comm.init_residual(8, 0.0).unwrap();
+                comm.init_solution(8).unwrap();
+
+                let mut iterate = |comm: &mut JackComm<Endpoint>, it: usize| {
+                    {
+                        let v = comm.compute_view();
+                        v.send[0][0] = it as f64;
+                        v.res[0] = 1.0 / (it + 1) as f64;
+                    }
+                    comm.send().unwrap();
+                    comm.recv().unwrap();
+                    comm.update_residual().unwrap();
+                    jack2::simmpi::barrier(comm.endpoint_mut()).unwrap();
+                };
+
+                for it in 0..20 {
+                    iterate(&mut comm, it);
+                }
+                let warm = comm.endpoint().pool().stats().allocations;
+                for it in 20..120 {
+                    iterate(&mut comm, it);
+                }
+                let steady = comm.endpoint().pool().stats();
+                (warm, steady)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (warm, steady) = h.join().unwrap();
+        assert_eq!(
+            steady.allocations, warm,
+            "sync JackComm iteration allocated message buffers in steady state: {steady:?}"
+        );
+    }
+}
+
+/// Full-stack check for the asynchronous mode: with detection quiescent
+/// (no local convergence), the continuous send/recv path allocates no
+/// message buffers after warm-up, and send-discard stays a no-cost path.
+///
+/// The communicators are built on two threads (spanning-tree construction
+/// is a blocking collective) and then — since asynchronous mode never
+/// blocks — driven interleaved from one thread, so the send/drain balance
+/// is deterministic and the zero-allocation assertion cannot be upset by
+/// scheduler-induced mailbox pile-up.
+#[test]
+fn jackcomm_async_iteration_is_allocation_free_after_warmup() {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+    let (_w, eps) = World::new(cfg);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
+                let mut comm = JackComm::new(ep, graph).unwrap();
+                comm.init_buffers(&[8], &[8]).unwrap();
+                comm.init_residual(8, 0.0).unwrap();
+                comm.init_solution(8).unwrap();
+                comm.config_async(4, 1e-300).unwrap();
+                comm.switch_async().unwrap();
+                comm
+            })
+        })
+        .collect();
+    let mut comms: Vec<JackComm<Endpoint>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let mut iterate = |comms: &mut Vec<JackComm<Endpoint>>, it: usize| {
+        for comm in comms.iter_mut() {
+            comm.recv().unwrap();
+            {
+                let v = comm.compute_view();
+                v.send[0][0] = it as f64;
+                v.res[0] = 1.0; // never locally converged
+            }
+            comm.send().unwrap();
+            comm.set_local_convergence(false);
+            comm.update_residual().unwrap();
+        }
+    };
+
+    for it in 0..10 {
+        iterate(&mut comms, it);
+    }
+    let warm: Vec<u64> = comms
+        .iter()
+        .map(|c| c.endpoint().pool().stats().allocations)
+        .collect();
+    for it in 10..210 {
+        iterate(&mut comms, it);
+    }
+    for (c, warm) in comms.iter().zip(warm) {
+        let steady = c.endpoint().pool().stats();
+        assert_eq!(
+            steady.allocations, warm,
+            "async JackComm iteration allocated message buffers in steady state: {steady:?}"
+        );
+        assert!(steady.reuses > 0, "sends must run through the pool");
+    }
+}
+
+/// Pools are bounded: a flood of in-flight messages beyond the free-list
+/// capacity degrades to plain allocation, never unbounded growth.
+#[test]
+fn pool_capacity_is_bounded_under_flood() {
+    let (_w, mut e0, mut e1, _g0, _g1) = pair();
+    for i in 0..500 {
+        e0.isend_copy(1, 3, &[i as f64]).unwrap();
+    }
+    let mut drained = 0;
+    while Transport::try_match(&mut e1, 0, 3).is_some() {
+        drained += 1;
+    }
+    assert_eq!(drained, 500);
+    let s = e0.pool().stats();
+    assert_eq!(s.recycled + s.dropped, 500, "every buffer accounted for: {s:?}");
+    assert!(e0.pool().free_len() <= 64, "free list must stay bounded");
+    assert!(s.dropped > 0, "overflow must drop, not grow");
+}
+
+/// A blocking `Transport::recv` with a timeout still errors cleanly when
+/// nothing arrives (trait-level behaviour, exercised via the trait).
+#[test]
+fn trait_recv_times_out_cleanly() {
+    let (_w, mut e0, _e1, _g0, _g1) = pair();
+    let err = Transport::recv(&mut e0, 1, 99, Some(Duration::from_millis(10)));
+    assert!(err.is_err());
+}
