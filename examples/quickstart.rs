@@ -1,50 +1,88 @@
-//! Quickstart: the paper's Listings 5–6, verbatim, on a toy problem.
+//! Quickstart: the paper's Listings 5–6 on a toy problem, through the
+//! typed session API.
 //!
 //! Two ranks each own one half of a 1-D Poisson-like system and exchange
 //! a single boundary value per iteration. The *same* code runs classical
 //! or asynchronous iterations depending on one runtime flag — the
-//! library's headline feature.
+//! library's headline feature — and, being generic over the payload
+//! [`Scalar`] width, the same program also solves in `f32`.
+//!
+//! The Listing-5 init sequence is the typestate builder (misordering it
+//! does not compile), and the Listing-6 loop lives in the library:
+//! [`JackComm::iterate`] drives send/recv/lconv/update_residual, the
+//! closure below is only the compute phase.
 //!
 //! Run:   cargo run --example quickstart            (classical)
 //!        cargo run --example quickstart -- async   (asynchronous)
 
-use jack2::graph::CommGraph;
-use jack2::jack::JackComm;
-use jack2::simmpi::{Endpoint, World};
+use jack2::prelude::*;
+use jack2::simmpi::World;
 
-/// Per-rank program: exactly the paper's Listing 6 loop. (Written against
-/// the simulated-MPI backend here; swap the type parameter to run the
-/// same program over any other `jack2::transport::Transport`.)
-fn rank_program(comm: &mut JackComm<Endpoint>, async_mode: bool) -> (f64, u64) {
-    let rank = comm.rank();
-    // Each rank solves 4*x_i = c_i + neighbor for its scalar block (a
-    // strictly diagonally dominant 2-unknown system split across ranks).
-    let c = [5.0, 9.0][rank];
-    let threshold = 1e-10;
+/// Solve the 2-unknown system [4 -1; -1 4] x = [5 9] across two ranks,
+/// generic over the scalar width. (Written against the simulated-MPI
+/// backend here; the same program runs over any
+/// `jack2::transport::Transport`.)
+fn solve_pair<S: Scalar>(async_mode: bool, threshold: f64) -> Vec<(usize, S, u64, f64, u64)> {
+    let (_world, eps) = World::homogeneous(2);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
 
-    comm.send().unwrap();
-    let mut iters = 0u64;
-    while comm.residual_norm() >= threshold && !comm.terminated() && iters < 100_000 {
-        comm.recv().unwrap();
-        {
-            // compute phase: input recv + sol, output sol + send + res
-            let v = comm.compute_view();
-            let neighbor = v.recv[0][0];
-            let x_new = (c + neighbor) / 4.0;
-            v.res[0] = 4.0 * (x_new - v.sol[0]);
-            v.sol[0] = x_new;
-            v.send[0][0] = x_new;
-        }
-        comm.send().unwrap();
-        let lconv = comm.local_residual_norm() < threshold;
-        comm.set_local_convergence(lconv);
-        comm.update_residual().unwrap();
-        iters += 1;
-        if async_mode && comm.terminated() {
-            break;
-        }
-    }
-    (comm.solution()[0], iters)
+                // -- Listing 5: the typestate builder enforces the order
+                let session = JackComm::<_, S>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[1], &[1]) // one scalar per link
+                    .unwrap()
+                    .with_residual(1, NormKind::Max)
+                    .with_solution(1);
+                let mut comm = if async_mode {
+                    session
+                        .build_async(AsyncConfig {
+                            max_recv_requests: 4,
+                            threshold,
+                            send_discard: true,
+                        })
+                        .unwrap()
+                } else {
+                    session.build_sync()
+                };
+
+                // -- Listing 6, library-owned: each rank solves
+                //    4*x_i = c_i + neighbor (strictly diagonally dominant).
+                let c = S::from_f64([5.0, 9.0][rank]);
+                let four = S::from_f64(4.0);
+                let report = comm
+                    .iterate(
+                        &IterateOpts {
+                            threshold,
+                            max_iters: 100_000,
+                            ..IterateOpts::default()
+                        },
+                        |v| {
+                            let x_new = (c + v.recv[0][0]) / four;
+                            v.res[0] = four * (x_new - v.sol[0]);
+                            v.sol[0] = x_new;
+                            v.send[0][0] = x_new;
+                            StepOutcome::Continue
+                        },
+                    )
+                    .unwrap();
+                (
+                    rank,
+                    comm.solution()[0],
+                    report.iterations,
+                    comm.residual_norm(),
+                    comm.snapshots(),
+                )
+            })
+        })
+        .collect();
+    let mut out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    out.sort_by_key(|r| r.0);
+    out
 }
 
 fn main() {
@@ -54,37 +92,24 @@ fn main() {
         if async_mode { "asynchronous" } else { "classical" }
     );
 
-    // -- world + communication graph (Listing 1)
-    let (_world, eps) = World::homogeneous(2);
-    let handles: Vec<_> = eps
-        .into_iter()
-        .map(|ep| {
-            std::thread::spawn(move || {
-                let rank = ep.rank();
-                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
-
-                // -- Listing 5: initialize the JACK2 communicator
-                let mut comm = JackComm::new(ep, graph).unwrap();
-                comm.init_buffers(&[1], &[1]).unwrap(); // one scalar per link
-                comm.init_residual(1, 0.0).unwrap(); // max-norm
-                comm.init_solution(1).unwrap();
-                if async_mode {
-                    comm.config_async(4, 1e-10).unwrap();
-                    comm.switch_async().unwrap();
-                }
-
-                let (x, iters) = rank_program(&mut comm, async_mode);
-                (rank, x, iters, comm.residual_norm(), comm.snapshots())
-            })
-        })
-        .collect();
-
-    for h in handles {
-        let (rank, x, iters, norm, snaps) = h.join().unwrap();
-        println!(
-            "rank {rank}: x = {x:.10} after {iters} iters (residual {norm:.2e}, snapshots {snaps})"
-        );
+    for (name, rows) in [
+        ("f64", solve_pair::<f64>(async_mode, 1e-10)),
+        // same program, narrower payloads: f32 buffers over the f64 wire
+        ("f32", {
+            solve_pair::<f32>(async_mode, 1e-6)
+                .into_iter()
+                .map(|(r, x, i, n, s)| (r, x as f64, i, n, s))
+                .collect()
+        }),
+    ] {
+        println!("\npayload width {name}:");
+        for (rank, x, iters, norm, snaps) in rows {
+            println!(
+                "  rank {rank}: x = {x:.10} after {iters} iters \
+                 (residual {norm:.2e}, snapshots {snaps})"
+            );
+        }
     }
     // exact solution of [4 -1; -1 4][x0 x1] = [5 9]: x0 = 29/15, x1 = 41/15
-    println!("exact:  x0 = {:.10}, x1 = {:.10}", 29.0 / 15.0, 41.0 / 15.0);
+    println!("\nexact:  x0 = {:.10}, x1 = {:.10}", 29.0 / 15.0, 41.0 / 15.0);
 }

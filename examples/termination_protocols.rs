@@ -5,28 +5,31 @@
 //! comparing detection traffic, termination delay, and the quality of
 //! the reported residual.
 //!
+//! Both protocols run through the typed session API: the builder's
+//! [`JackBuilder::build_async_with`] plugs a custom
+//! [`TerminationProtocol`] behind the same [`JackComm::iterate`] loop the
+//! default snapshot detector uses — the compute phase is identical.
+//!
 //! Run: cargo run --release --example termination_protocols
 
 use std::time::{Duration, Instant};
 
-use jack2::graph::{grid3d_graphs, CommGraph};
-use jack2::jack::messages::TAG_DATA;
+use jack2::graph::grid3d_graphs;
 use jack2::jack::norm::NormKind;
-use jack2::jack::spanning_tree;
-use jack2::jack::termination::{PersistenceProtocol, TerminationProtocol};
-use jack2::jack::{AsyncConv, BufferSet, SnapshotProtocol};
-use jack2::metrics::{RankMetrics, Trace};
+use jack2::jack::spanning_tree::SpanningTree;
+use jack2::jack::termination::PersistenceProtocol;
+use jack2::jack::{AsyncConv, SnapshotProtocol};
+use jack2::prelude::*;
 use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
-use jack2::transport::Transport;
 
 /// Distributed fixed point x_i = (Σ_j x_j + c_i) / (deg+2) on a 2x2x1
 /// process grid; strictly contracting.
 fn run_with(
-    make: impl Fn(usize, spanning_tree::SpanningTree, usize) -> Box<dyn TerminationProtocol<Endpoint>>
+    make: impl Fn(SpanningTree, usize) -> Box<dyn TerminationProtocol<Endpoint, f64>>
         + Send
         + Sync
         + 'static,
-) -> (Duration, Vec<f64>, u64, &'static str) {
+) -> (Duration, Vec<f64>, u64) {
     let p = 4;
     let graphs = grid3d_graphs(2, 2, 1);
     let cfg = WorldConfig::homogeneous(p).with_network(NetworkModel::uniform(20, 0.3));
@@ -36,81 +39,67 @@ fn run_with(
     let handles: Vec<_> = eps
         .into_iter()
         .zip(graphs)
-        .map(|(mut ep, g): (_, CommGraph)| {
+        .map(|(ep, g)| {
             let make = make.clone();
             std::thread::spawn(move || {
                 let rank = ep.rank();
-                let tree = spanning_tree::build(
-                    &mut ep,
-                    &g.undirected_neighbors(),
-                    Duration::from_secs(10),
-                )
-                .unwrap();
+                let n_send = g.num_send();
                 let n_links = g.num_recv();
-                let mut protocol = make(rank, tree, n_links);
-                let mut bufs =
-                    BufferSet::new(&vec![1; g.num_send()], &vec![1; n_links]).unwrap();
-                let mut sol = vec![0.0f64];
-                let mut res = vec![f64::INFINITY];
-                let mut metrics = RankMetrics::default();
-                let mut trace = Trace::disabled();
+                let denom = (n_links + 2) as f64;
                 let c = 1.0 + rank as f64;
-                let denom = (g.num_recv() + 2) as f64;
-                let deadline = Instant::now() + Duration::from_secs(60);
 
-                while !protocol.terminated() && Instant::now() < deadline {
-                    if !protocol.freeze_recv() {
-                        let swapped = protocol.try_deliver(&mut bufs, &mut sol).unwrap();
-                        if !swapped {
-                            for (l, &src) in g.recv_neighbors().iter().enumerate() {
-                                while let Some(d) = ep.try_match(src, TAG_DATA) {
-                                    bufs.deliver(l, d).unwrap();
-                                }
+                // -- Listing 5, typed: buffers → residual → solution,
+                //    then plug the termination protocol of choice (which
+                //    carries its own convergence threshold).
+                let session = JackComm::<_, f64>::builder(ep, g)
+                    .unwrap()
+                    .with_buffers(&vec![1; n_send], &vec![1; n_links])
+                    .unwrap()
+                    .with_residual(1, NormKind::Max)
+                    .with_solution(1);
+                let protocol = make(session.tree().clone(), n_links);
+                let mut comm = session
+                    .build_async_with(protocol, 8, true)
+                    .unwrap();
+
+                // -- Listing 6, library-owned: only the compute phase.
+                let report = comm
+                    .iterate(
+                        &IterateOpts {
+                            threshold: 1e-9,
+                            max_iters: 20_000_000,
+                            ..IterateOpts::default()
+                        },
+                        |v| {
+                            let halo: f64 = v.recv.iter().map(|b| b[0]).sum();
+                            let x_new = (halo + c) / denom;
+                            v.res[0] = denom * (x_new - v.sol[0]);
+                            v.sol[0] = x_new;
+                            for sb in v.send.iter_mut() {
+                                sb[0] = x_new;
                             }
-                        }
-                    }
-                    let halo: f64 = bufs.recv.iter().map(|b| b[0]).sum();
-                    let x_new = (halo + c) / denom;
-                    res[0] = denom * (x_new - sol[0]);
-                    sol[0] = x_new;
-                    for sb in bufs.send.iter_mut() {
-                        sb[0] = sol[0];
-                    }
-                    for (l, &dst) in g.send_neighbors().iter().enumerate() {
-                        // pooled staging: no allocation in steady state
-                        ep.isend_copy(dst, TAG_DATA, &bufs.send[l]).unwrap();
-                    }
-                    let lconv = res[0].abs() < 1e-9;
-                    protocol.harvest_residual(&res);
-                    protocol
-                        .poll(&mut ep, &g, &bufs, &sol, lconv, &mut metrics, &mut trace)
-                        .unwrap();
-                }
-                assert!(protocol.terminated(), "rank {rank} did not terminate");
-                (sol[0], protocol.global_norm().unwrap(), protocol.name())
+                            StepOutcome::Continue
+                        },
+                    )
+                    .unwrap();
+                assert!(report.terminated, "rank {rank} did not terminate");
+                (comm.solution()[0], comm.residual_norm(), rank)
             })
         })
         .collect();
     let mut sols = Vec::new();
-    let mut name = "";
-    let mut norm = 0.0;
     for h in handles {
-        let (x, n, nm) = h.join().unwrap();
+        let (x, _norm, _rank) = h.join().unwrap();
         sols.push(x);
-        norm = n;
-        name = nm;
     }
     let wall = t0.elapsed();
     let msgs = world.metrics().msgs_sent;
-    println!(
-        "{name:<12} wall {wall:>10?}  reported norm {norm:.2e}  total msgs {msgs}  x = {sols:?}"
-    );
-    (wall, sols, msgs, name)
+    (wall, sols, msgs)
 }
 
 fn main() {
     println!("termination protocols on the same asynchronous relaxation (4 ranks):\n");
-    let (_, x_snap, _, _) = run_with(|_r, tree, n_links| {
+    let (snap_wall, x_snap, snap_msgs) = run_with(|tree, n_links| {
         Box::new(SnapshotProtocol(AsyncConv::new(
             NormKind::Max,
             1e-8,
@@ -118,9 +107,17 @@ fn main() {
             n_links,
         )))
     });
-    let (_, x_pers, _, _) = run_with(|_r, tree, _n_links| {
+    println!(
+        "{:<12} wall {snap_wall:>10?}  total msgs {snap_msgs}  x = {x_snap:?}",
+        "snapshot"
+    );
+    let (pers_wall, x_pers, pers_msgs) = run_with(|tree, _n_links| {
         Box::new(PersistenceProtocol::new(NormKind::Max, tree, 8))
     });
+    println!(
+        "{:<12} wall {pers_wall:>10?}  total msgs {pers_msgs}  x = {x_pers:?}",
+        "persistence"
+    );
 
     let max_diff = x_snap
         .iter()

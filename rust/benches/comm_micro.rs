@@ -23,7 +23,7 @@ fn bench_delivery(b: &Bencher) {
     for size in [64usize, 1024, 16 * 1024, 256 * 1024] {
         let n_msgs = 1000;
         // swap delivery
-        let mut bufs = BufferSet::new(&[size], &[size]).unwrap();
+        let mut bufs = BufferSet::<f64>::new(&[size], &[size]).unwrap();
         let mut pool: Vec<Vec<f64>> = (0..n_msgs).map(|i| vec![i as f64; size]).collect();
         let swap = b.run(&format!("swap {size}"), || {
             for _ in 0..n_msgs {

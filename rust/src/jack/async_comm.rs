@@ -25,6 +25,7 @@ use super::messages::TAG_DATA;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
+use crate::scalar::Scalar;
 use crate::transport::Transport;
 
 /// Non-blocking continuous exchange over any [`Transport`].
@@ -62,11 +63,11 @@ impl<T: Transport> AsyncComm<T> {
 
     /// Algorithm 6: post one send per idle outgoing channel; discard on
     /// busy channels (no staging, no allocation — the fast path).
-    pub fn send(
+    pub fn send<S: Scalar>(
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
+        bufs: &BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         for (l, &dst) in graph.send_neighbors().iter().enumerate() {
@@ -74,7 +75,7 @@ impl<T: Transport> AsyncComm<T> {
             if busy && self.discard {
                 metrics.sends_discarded += 1;
             } else {
-                self.send_reqs[l] = Some(ep.isend_copy(dst, TAG_DATA, &bufs.send[l])?);
+                self.send_reqs[l] = Some(ep.isend_scalars(dst, TAG_DATA, &bufs.send[l])?);
                 metrics.msgs_sent += 1;
             }
         }
@@ -82,23 +83,33 @@ impl<T: Transport> AsyncComm<T> {
     }
 
     /// Algorithm 5: drain up to `max_recv_requests` arrived messages per
-    /// incoming channel; the latest lands in the user buffer. Never blocks.
-    pub fn recv(
+    /// incoming channel; the latest lands in the user buffer. Never
+    /// blocks. Only the most recent arrival is delivered — superseded
+    /// messages recycle straight to their pool without touching the user
+    /// buffer, so narrow scalars (whose delivery is a copy-convert, not
+    /// an O(1) swap) pay one conversion per link per `Recv` regardless
+    /// of how many messages were drained.
+    pub fn recv<S: Scalar>(
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &mut BufferSet,
+        bufs: &mut BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+            let mut latest = None;
             for _ in 0..self.max_recv_requests {
                 match ep.try_match(src, TAG_DATA) {
                     Some(data) => {
-                        bufs.deliver(l, data)?;
+                        // overwriting drops (= recycles) the superseded one
+                        latest = Some(data);
                         metrics.msgs_delivered += 1;
                     }
                     None => break,
                 }
+            }
+            if let Some(data) = latest {
+                bufs.deliver(l, data)?;
             }
         }
         Ok(())
@@ -133,7 +144,7 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
-        let mut bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut bufs = BufferSet::<f64>::new(&[1], &[1]).unwrap();
         let mut comm = AsyncComm::new(1, 8);
         let mut m = RankMetrics::default();
 
@@ -156,7 +167,7 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
-        let mut bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let mut bufs = BufferSet::<f64>::new(&[1], &[1]).unwrap();
         let mut comm = AsyncComm::new(1, 2);
         let mut m = RankMetrics::default();
         for v in 1..=5 {
@@ -174,7 +185,7 @@ mod tests {
         let (_w, mut eps) = pair_world(50_000);
         let mut e0 = eps.remove(0);
         let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
-        let bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let bufs = BufferSet::<f64>::new(&[1], &[1]).unwrap();
         let mut comm = AsyncComm::new(1, 1);
         let mut m = RankMetrics::default();
         for _ in 0..5 {
@@ -196,7 +207,7 @@ mod tests {
         let (_w, mut eps) = pair_world(10_000_000);
         let mut e0 = eps.remove(0);
         let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
-        let bufs = BufferSet::new(&[1], &[1]).unwrap();
+        let bufs = BufferSet::<f64>::new(&[1], &[1]).unwrap();
         let mut comm = AsyncComm::new(1, 1);
         let mut m = RankMetrics::default();
         comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();

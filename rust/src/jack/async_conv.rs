@@ -58,6 +58,7 @@ use super::spanning_tree::SpanningTree;
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{Event, RankMetrics, Trace};
+use crate::scalar::Scalar;
 use crate::transport::Transport;
 
 /// Outcome of the latest completed detection round.
@@ -68,9 +69,10 @@ pub struct Verdict {
     pub terminated: bool,
 }
 
-/// Per-rank state machine of the snapshot-based termination protocol.
+/// Per-rank state machine of the snapshot-based termination protocol,
+/// generic over the payload [`Scalar`] width of the snapshot vector.
 #[derive(Debug)]
-pub struct AsyncConv {
+pub struct AsyncConv<S: Scalar = f64> {
     kind: NormKind,
     threshold: f64,
     tree: SpanningTree,
@@ -85,11 +87,11 @@ pub struct AsyncConv {
 
     // -- snapshot phase --
     ss_taken: bool,
-    ss_sol: Option<Vec<f64>>,
+    ss_sol: Option<Vec<S>>,
     /// Snapshot face per incoming link (indexed as in the comm graph).
-    ss_faces: Vec<Option<Vec<f64>>>,
+    ss_faces: Vec<Option<Vec<S>>>,
     /// Early faces for future rounds: (round, link) → face.
-    pending_faces: HashMap<(u64, usize), Vec<f64>>,
+    pending_faces: HashMap<(u64, usize), Vec<S>>,
     /// Snapshot swapped into user buffers; next compute evaluates f(x̂).
     swapped: bool,
     /// Residual of the snapshot vector harvested from the user's res_vec.
@@ -105,7 +107,7 @@ pub struct AsyncConv {
     pub verdict: Option<Verdict>,
 }
 
-impl AsyncConv {
+impl<S: Scalar> AsyncConv<S> {
     pub fn new(kind: NormKind, threshold: f64, tree: SpanningTree, num_recv_links: usize) -> Self {
         let n_children = tree.children.len();
         AsyncConv {
@@ -147,8 +149,8 @@ impl AsyncConv {
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
-        sol_vec: &[f64],
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
         lconv: bool,
         metrics: &mut RankMetrics,
         trace: &mut Trace,
@@ -228,8 +230,8 @@ impl AsyncConv {
     /// the caller must then freeze ordinary delivery for one iteration.
     pub fn try_deliver_snapshot(
         &mut self,
-        bufs: &mut BufferSet,
-        sol_vec: &mut Vec<f64>,
+        bufs: &mut BufferSet<S>,
+        sol_vec: &mut Vec<S>,
     ) -> Result<bool> {
         if self.terminated() || self.swapped || !self.ss_taken {
             return Ok(false);
@@ -251,7 +253,7 @@ impl AsyncConv {
         *sol_vec = ss_sol;
         for (l, face) in self.ss_faces.iter_mut().enumerate() {
             let face = face.take().expect("checked complete");
-            bufs.deliver(l, face)?;
+            bufs.install(l, face)?;
         }
         self.swapped = true;
         Ok(true)
@@ -260,7 +262,7 @@ impl AsyncConv {
     /// Harvest the residual of the snapshot vector from the user's
     /// residual block (call right after the compute that followed the
     /// snapshot swap).
-    pub fn harvest_residual(&mut self, res_vec: &[f64]) {
+    pub fn harvest_residual(&mut self, res_vec: &[S]) {
         if self.swapped && self.own_partial.is_none() {
             self.own_partial = Some(self.kind.partial(res_vec));
         }
@@ -277,8 +279,8 @@ impl AsyncConv {
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
-        sol_vec: &[f64],
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         dbg_ss!("rank {} takes snapshot, round {}", ep.rank(), self.round);
@@ -287,7 +289,7 @@ impl AsyncConv {
         for (l, &dst) in graph.send_neighbors().iter().enumerate() {
             // Snapshot messages ride the data path and must not
             // reintroduce allocations: pooled [round, face...] staging.
-            ep.isend_headed(dst, TAG_SNAPSHOT, self.round as f64, &bufs.send[l])?;
+            ep.isend_headed_scalars(dst, TAG_SNAPSHOT, self.round as f64, &bufs.send[l])?;
         }
         self.ss_taken = true;
         metrics.snapshots += 1;
@@ -321,7 +323,7 @@ impl AsyncConv {
         // Snapshot faces from incoming links.
         for (l, &src) in graph.recv_neighbors().iter().enumerate() {
             while let Some(msg) = ep.try_match(src, TAG_SNAPSHOT) {
-                let (r, face) = decode_snapshot(&msg);
+                let (r, face) = decode_snapshot::<S>(&msg);
                 dbg_ss!(
                     "rank {} <- src {}: ss face round {r}, own round {}",
                     ep.rank(),
@@ -424,7 +426,7 @@ mod tests {
     #[test]
     fn verdict_accessors() {
         let tree = SpanningTree::solo();
-        let mut c = AsyncConv::new(NormKind::Max, 1e-6, tree, 0);
+        let mut c = AsyncConv::<f64>::new(NormKind::Max, 1e-6, tree, 0);
         assert!(!c.terminated());
         assert_eq!(c.global_norm(), None);
         assert_eq!(c.round(), 1);
@@ -440,7 +442,7 @@ mod tests {
     #[test]
     fn freeze_logic() {
         let tree = SpanningTree::solo();
-        let mut c = AsyncConv::new(NormKind::Max, 1e-6, tree, 0);
+        let mut c = AsyncConv::<f64>::new(NormKind::Max, 1e-6, tree, 0);
         assert!(!c.freeze_recv());
         c.swapped = true;
         assert!(c.freeze_recv());

@@ -1,26 +1,31 @@
-//! Communication buffer management (the paper's Listing 2 + `JACKBuffer`).
+//! Communication buffer management (the paper's Listing 2 + `JACKBuffer`),
+//! generic over the payload [`Scalar`] width.
 //!
 //! One send buffer per outgoing link and one receive buffer per incoming
-//! link. Delivery is by **address swap**: arriving payloads are moved out
-//! of the transport and swapped into the user-visible slot in O(1) —
-//! never copied element-by-element (paper Algorithm 4, step 3). The
-//! displaced buffer is returned as a [`MsgBuf`]; dropping it recycles the
-//! allocation into the transport's [`crate::transport::BufferPool`], so
-//! the receive path allocates nothing in steady state.
+//! link. For `f64` payloads delivery is by **address swap**: arriving
+//! payloads are moved out of the transport and swapped into the
+//! user-visible slot in O(1) — never copied element-by-element (paper
+//! Algorithm 4, step 3). Narrower scalars (`f32`) copy-convert from the
+//! `f64` wire into the preallocated slot instead — still allocation-free.
+//! Either way the displaced/drained wire buffer is returned as a
+//! [`MsgBuf`]; dropping it recycles the allocation into the transport's
+//! [`crate::transport::BufferPool`], so the receive path allocates
+//! nothing in steady state for any width.
 
 use crate::error::{Error, Result};
+use crate::scalar::Scalar;
 use crate::transport::MsgBuf;
 
 /// Per-link send/receive buffers owned by the communicator.
 #[derive(Debug, Default)]
-pub struct BufferSet {
+pub struct BufferSet<S: Scalar = f64> {
     /// `send[l]`: written by the user's compute phase, read by `Send()`.
-    pub send: Vec<Vec<f64>>,
+    pub send: Vec<Vec<S>>,
     /// `recv[l]`: filled by `Recv()`, read by the user's compute phase.
-    pub recv: Vec<Vec<f64>>,
+    pub recv: Vec<Vec<S>>,
 }
 
-impl BufferSet {
+impl<S: Scalar> BufferSet<S> {
     /// Allocate buffers with the given per-link sizes (paper `sbuf_size`,
     /// `rbuf_size`), zero-initialized: before any message arrives, the
     /// halo reads as zero — the Dirichlet initial guess.
@@ -29,8 +34,8 @@ impl BufferSet {
             return Err(Error::Config("zero-sized communication buffer".into()));
         }
         Ok(BufferSet {
-            send: sbuf_sizes.iter().map(|&s| vec![0.0; s]).collect(),
-            recv: rbuf_sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            send: sbuf_sizes.iter().map(|&s| vec![S::ZERO; s]).collect(),
+            recv: rbuf_sizes.iter().map(|&s| vec![S::ZERO; s]).collect(),
         })
     }
 
@@ -42,11 +47,13 @@ impl BufferSet {
         self.recv.len()
     }
 
-    /// Address-swap delivery into receive slot `link` (O(1)).
+    /// Deliver an arrived wire payload into receive slot `link`: O(1)
+    /// address swap for `f64`, allocation-free copy-convert otherwise
+    /// (see [`Scalar::deliver`]).
     ///
-    /// Returns the *previous* buffer, wrapped so that dropping it recycles
-    /// the allocation into the message's pool (the transport reuses it
-    /// for future messages).
+    /// Returns the drained wire buffer; dropping it recycles the
+    /// allocation into the message's pool (the transport reuses it for
+    /// future messages).
     pub fn deliver(&mut self, link: usize, incoming: impl Into<MsgBuf>) -> Result<MsgBuf> {
         let mut incoming = incoming.into();
         let slot = self
@@ -60,8 +67,27 @@ impl BufferSet {
                 slot.len()
             )));
         }
-        std::mem::swap(slot, incoming.vec_mut());
+        S::deliver(slot, &mut incoming);
         Ok(incoming)
+    }
+
+    /// Install an already-decoded scalar face into receive slot `link`
+    /// (snapshot delivery, the paper's address exchange): O(1) swap of
+    /// same-width storage. Returns the displaced user buffer.
+    pub fn install(&mut self, link: usize, mut face: Vec<S>) -> Result<Vec<S>> {
+        let slot = self
+            .recv
+            .get_mut(link)
+            .ok_or_else(|| Error::Config(format!("recv link {link} out of range")))?;
+        if face.len() != slot.len() {
+            return Err(Error::Protocol(format!(
+                "face size {} != recv buffer size {} on link {link}",
+                face.len(),
+                slot.len()
+            )));
+        }
+        std::mem::swap(slot, &mut face);
+        Ok(face)
     }
 }
 
@@ -72,7 +98,7 @@ mod tests {
 
     #[test]
     fn allocates_zeroed() {
-        let b = BufferSet::new(&[3, 2], &[4]).unwrap();
+        let b = BufferSet::<f64>::new(&[3, 2], &[4]).unwrap();
         assert_eq!(b.num_send_links(), 2);
         assert_eq!(b.num_recv_links(), 1);
         assert_eq!(b.send[0], vec![0.0; 3]);
@@ -81,13 +107,13 @@ mod tests {
 
     #[test]
     fn rejects_zero_size() {
-        assert!(BufferSet::new(&[0], &[1]).is_err());
-        assert!(BufferSet::new(&[1], &[0]).is_err());
+        assert!(BufferSet::<f64>::new(&[0], &[1]).is_err());
+        assert!(BufferSet::<f64>::new(&[1], &[0]).is_err());
     }
 
     #[test]
     fn deliver_swaps_in_o1() {
-        let mut b = BufferSet::new(&[1], &[3]).unwrap();
+        let mut b = BufferSet::<f64>::new(&[1], &[3]).unwrap();
         let incoming = vec![1.0, 2.0, 3.0];
         let ptr_before = incoming.as_ptr();
         let old = b.deliver(0, incoming).unwrap();
@@ -97,16 +123,40 @@ mod tests {
     }
 
     #[test]
+    fn deliver_converts_into_f32_slot() {
+        let mut b = BufferSet::<f32>::new(&[1], &[3]).unwrap();
+        let slot_ptr = b.recv[0].as_ptr();
+        let old = b.deliver(0, vec![1.5, -2.0, 3.0]).unwrap();
+        assert_eq!(b.recv[0], vec![1.5f32, -2.0, 3.0]);
+        assert_eq!(b.recv[0].as_ptr(), slot_ptr, "converted in place");
+        // the wire buffer comes back intact for recycling
+        assert_eq!(old, vec![1.5f64, -2.0, 3.0]);
+    }
+
+    #[test]
     fn deliver_size_mismatch_fails() {
-        let mut b = BufferSet::new(&[1], &[3]).unwrap();
+        let mut b = BufferSet::<f64>::new(&[1], &[3]).unwrap();
         assert!(b.deliver(0, vec![1.0]).is_err());
         assert!(b.deliver(5, vec![1.0]).is_err());
     }
 
     #[test]
+    fn install_swaps_scalar_faces() {
+        let mut b = BufferSet::<f32>::new(&[1], &[2]).unwrap();
+        let face = vec![7.0f32, 8.0];
+        let face_ptr = face.as_ptr();
+        let displaced = b.install(0, face).unwrap();
+        assert_eq!(b.recv[0], vec![7.0f32, 8.0]);
+        assert_eq!(b.recv[0].as_ptr(), face_ptr, "O(1) swap");
+        assert_eq!(displaced, vec![0.0f32; 2]);
+        assert!(b.install(0, vec![1.0f32]).is_err(), "size mismatch");
+        assert!(b.install(9, vec![1.0f32, 2.0]).is_err(), "bad link");
+    }
+
+    #[test]
     fn displaced_buffer_recycles_into_pool() {
         let pool = BufferPool::new();
-        let mut b = BufferSet::new(&[1], &[2]).unwrap();
+        let mut b = BufferSet::<f64>::new(&[1], &[2]).unwrap();
         let mut incoming = pool.acquire(2);
         incoming.copy_from_slice(&[7.0, 8.0]);
         let displaced = b.deliver(0, incoming).unwrap();
@@ -114,6 +164,17 @@ mod tests {
         // the displaced user buffer inherits the message's pool
         assert!(displaced.pool().unwrap().same_pool(&pool));
         drop(displaced);
+        assert_eq!(pool.free_len(), 1);
+    }
+
+    #[test]
+    fn f32_deliver_recycles_wire_buffer() {
+        let pool = BufferPool::new();
+        let mut b = BufferSet::<f32>::new(&[1], &[2]).unwrap();
+        let incoming = pool.stage(&[1.0, 2.0]);
+        let wire = b.deliver(0, incoming).unwrap();
+        assert!(wire.pool().unwrap().same_pool(&pool));
+        drop(wire);
         assert_eq!(pool.free_len(), 1);
     }
 }

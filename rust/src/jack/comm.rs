@@ -1,46 +1,59 @@
 //! `JackComm` — the single front-end of the library (paper §3.2,
 //! Listings 5–6): one interface for both classical and asynchronous
-//! iterations, switchable at runtime.
+//! iterations, built through a typestate session builder.
 //!
-//! `JackComm<T>` is generic over the [`Transport`] backend; the paper
-//! builds on MPI, this crate ships the simulated substrate
-//! (`jack2::simmpi::Endpoint`) as its default backend, and any other
-//! implementation of the trait (real MPI binding, shared-memory ring)
-//! slots in without touching this module. Usage mirrors the paper
-//! exactly:
+//! `JackComm<T, S>` is generic over the [`Transport`] backend and the
+//! payload [`Scalar`] width. The paper builds on MPI; this crate ships
+//! the simulated substrate (`jack2::simmpi::Endpoint`) as its default
+//! backend, and any other implementation of the trait (real MPI binding,
+//! shared-memory ring) slots in without touching this module. Payloads
+//! default to `f64`; instantiating with `f32` halves the user-buffer
+//! footprint while the `f64` wire and norm accumulation keep thresholds
+//! meaningful.
 //!
-//! ```no_run
-//! # use jack2::jack::JackComm;
-//! # use jack2::graph::CommGraph;
-//! # use jack2::simmpi::World;
-//! # let (_w, mut eps) = World::homogeneous(1);
-//! # let ep = eps.pop().unwrap(); // any `Transport` backend endpoint
-//! # let graph = CommGraph::symmetric(0, vec![]).unwrap();
-//! # let (sbufs, rbufs, n, async_flag) = (vec![], vec![], 8, false);
-//! // -- initialize JACK2 communicator (Listing 5)
-//! let mut comm = JackComm::new(ep, graph).unwrap();
-//! comm.init_buffers(&sbufs, &rbufs).unwrap();
-//! comm.init_residual(n, 0.0).unwrap();
-//! comm.init_solution(n).unwrap();
-//! if async_flag {
-//!     comm.config_async(4, 1e-8).unwrap();
-//!     comm.switch_async().unwrap();
-//! }
-//! // -- iterate (Listing 6)
-//! comm.send().unwrap();
-//! while comm.residual_norm() >= 1e-8 {
-//!     comm.recv().unwrap();
-//!     {
-//!         let v = comm.compute_view();
-//!         // compute phase: reads v.recv + v.sol, writes v.sol, v.send, v.res
-//!     }
-//!     comm.send().unwrap();
-//!     let lconv = comm.local_residual_norm() < 1e-8;
-//!     comm.set_local_convergence(lconv);
-//!     comm.update_residual().unwrap();
-//! }
+//! The paper's Listing-5 init ordering is enforced *by the type system*:
+//! [`JackBuilder`] walks `Uninit → WithBuffers → WithResidual → Ready`,
+//! so "configure async before registering buffers" is not a runtime
+//! error — it does not compile. The Listing-6 loop is library-owned via
+//! [`JackComm::iterate`]; the user supplies only the compute phase.
+//!
 //! ```
+//! use jack2::prelude::*;
+//!
+//! // -- initialize (Listing 5): the typestate builder enforces the order
+//! let (_world, mut eps) = jack2::simmpi::World::homogeneous(1);
+//! let ep = eps.pop().unwrap();
+//! let graph = CommGraph::symmetric(0, vec![]).unwrap();
+//! let mut comm = JackComm::builder(ep, graph)
+//!     .unwrap()
+//!     .with_buffers(&[], &[]) // per-outgoing/incoming-link buffer sizes
+//!     .unwrap()
+//!     .with_residual(1, NormKind::Max)
+//!     .with_solution(1)
+//!     .build_sync(); // or .build_async(AsyncConfig::default())
+//!
+//! // -- iterate (Listing 6): send/recv/lconv/update_residual are driven
+//! //    by the library; the closure is the user compute phase.
+//! let opts = IterateOpts {
+//!     threshold: 1e-10,
+//!     ..IterateOpts::default()
+//! };
+//! comm.iterate(&opts, |v| {
+//!     let x_new = 5.0 / 4.0; // solve 4x = 5 by relaxation
+//!     v.res[0] = 4.0 * (x_new - v.sol[0]);
+//!     v.sol[0] = x_new;
+//!     StepOutcome::Continue
+//! })
+//! .unwrap();
+//! assert!((comm.solution()[0] - 1.25).abs() < 1e-12);
+//! ```
+//!
+//! The imperative Listing-5 methods (`init_buffers`, `init_residual`,
+//! `init_solution`, `config_async`, `switch_async`) remain as
+//! `#[deprecated]` shims that delegate to the same internals, so existing
+//! callers keep working while new code gets compile-time ordering.
 
+use std::marker::PhantomData;
 use std::time::{Duration, Instant};
 
 use super::async_comm::AsyncComm;
@@ -50,12 +63,14 @@ use super::norm::NormKind;
 use super::spanning_tree::{self, SpanningTree};
 use super::sync_comm::SyncComm;
 use super::sync_conv::SyncConv;
+use super::termination::{SnapshotProtocol, TerminationProtocol};
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
+use crate::scalar::Scalar;
 use crate::transport::Transport;
 
-/// Communication mode (switchable at runtime, paper feature (i)).
+/// Communication mode (paper feature (i): one interface, two modes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     Synchronous,
@@ -63,43 +78,236 @@ pub enum Mode {
 }
 
 /// Split-borrow view of all per-iteration data for the user compute phase.
-pub struct ComputeView<'a> {
+pub struct ComputeView<'a, S: Scalar = f64> {
     /// Per-incoming-link received halo data (paper `recv_buf`).
-    pub recv: &'a [Vec<f64>],
+    pub recv: &'a [Vec<S>],
     /// Per-outgoing-link boundary data to publish (paper `send_buf`).
-    pub send: &'a mut [Vec<f64>],
+    pub send: &'a mut [Vec<S>],
     /// Local solution block (paper `sol_vec_buf`).
-    pub sol: &'a mut Vec<f64>,
+    pub sol: &'a mut Vec<S>,
     /// Local residual block (paper `res_vec_buf`).
-    pub res: &'a mut Vec<f64>,
+    pub res: &'a mut Vec<S>,
 }
 
-/// The JACK2 communicator, generic over the [`Transport`] backend.
-pub struct JackComm<T: Transport> {
+/// Asynchronous-mode configuration (the paper's `ConfigAsync` +
+/// `SwitchAsync` folded into one value consumed by
+/// [`JackBuilder::build_async`]).
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Max message deliveries per channel per `Recv` (Alg. 5's
+    /// `max_numb_request`).
+    pub max_recv_requests: usize,
+    /// Residual threshold for the snapshot-based convergence detection —
+    /// the *global* verdict level. Use the same value as
+    /// [`IterateOpts::threshold`] (the local-convergence arming level):
+    /// the detector decides at this threshold regardless of how tightly
+    /// the loop arms `lconv`.
+    pub threshold: f64,
+    /// Discard sends on busy channels (Alg. 6; `false` is the E6
+    /// ablation: every send is queued, delivering ever-staler data).
+    pub send_discard: bool,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            max_recv_requests: 4,
+            threshold: 1e-6,
+            send_discard: true,
+        }
+    }
+}
+
+/// Options for the library-owned iteration loop ([`JackComm::iterate`]).
+#[derive(Debug, Clone)]
+pub struct IterateOpts {
+    /// Residual threshold: loop exit in synchronous mode, and the arming
+    /// level of the local-convergence flag in both modes. In asynchronous
+    /// mode the *termination* decision is made by the detector at its own
+    /// threshold ([`AsyncConfig::threshold`]) — keep the two equal unless
+    /// deliberately arming `lconv` tighter than the global verdict.
+    pub threshold: f64,
+    /// Safety valve: maximum iterations before giving up.
+    pub max_iters: u64,
+    /// Block on send completion each iteration (Algorithm 1's fully
+    /// dedicated communication phase; the trivial scheme). No-op in
+    /// asynchronous mode.
+    pub wait_sends: bool,
+    /// Run convergence detection (`UpdateResidual` each iteration).
+    /// Disabling is the E4 ablation: the loop runs to `max_iters` with
+    /// zero detection traffic.
+    pub detect: bool,
+}
+
+impl Default for IterateOpts {
+    fn default() -> Self {
+        IterateOpts {
+            threshold: 1e-6,
+            max_iters: u64::MAX,
+            wait_sends: false,
+            detect: true,
+        }
+    }
+}
+
+/// What the user compute phase tells the iteration loop.
+///
+/// `Stop` and `Abort` are **per-rank** decisions. In synchronous mode
+/// the loop's communication (blocking receives, the residual-norm
+/// reduction) is collective, so a rank that stops or aborts while its
+/// peers keep iterating leaves those peers blocked — exactly as an
+/// early `return` did from the hand-rolled Listing-6 loop. Use them for
+/// whole-job exits (every rank stops on the same iteration, e.g. on a
+/// deterministic condition or a fatal error that ends the run), not for
+/// per-rank flow control; the collective exit path is the `threshold` /
+/// termination-protocol condition, which all ranks observe together.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// Keep iterating until convergence / `max_iters`.
+    Continue,
+    /// Stop after this iteration (caller-side early exit; see the
+    /// synchronous-mode caveat above).
+    Stop,
+    /// Abort the loop with an error (e.g. a compute-backend failure).
+    Abort(Error),
+}
+
+/// Result of one [`JackComm::iterate`] run.
+#[derive(Debug, Clone)]
+pub struct IterateReport {
+    /// Iterations executed by this loop invocation.
+    pub iterations: u64,
+    /// Residual norm reported by the library at loop exit.
+    pub residual_norm: f64,
+    /// Asynchronous mode: the snapshot protocol decided termination.
+    pub terminated: bool,
+    /// The compute closure requested an early stop.
+    pub stopped: bool,
+}
+
+// ---------------------------------------------------------------------
+// Typestate builder (Listing 5 with the ordering in the types)
+// ---------------------------------------------------------------------
+
+/// Builder phase: communicator created, no buffers registered yet.
+#[derive(Debug)]
+pub struct Uninit;
+/// Builder phase: communication buffers registered.
+#[derive(Debug)]
+pub struct WithBuffers;
+/// Builder phase: residual vector and norm registered.
+#[derive(Debug)]
+pub struct WithResidual;
+/// Builder phase: solution vector registered — ready to build.
+#[derive(Debug)]
+pub struct Ready;
+
+/// Construct the default snapshot-based termination detector (shared by
+/// `build_async` and the deprecated `config_async` shim, so the typed
+/// and legacy paths build identical detectors).
+fn snapshot_protocol<T: Transport, S: Scalar>(
+    norm: NormKind,
+    threshold: f64,
+    tree: &SpanningTree,
+    num_recv_links: usize,
+) -> Box<dyn TerminationProtocol<T, S>> {
+    Box::new(SnapshotProtocol(AsyncConv::new(
+        norm,
+        threshold,
+        tree.clone(),
+        num_recv_links,
+    )))
+}
+
+/// Validate per-link buffer counts against the graph degrees (shared by
+/// the builder and the deprecated `init_buffers` shim, so the typed and
+/// legacy paths cannot drift).
+fn check_buffer_counts(graph: &CommGraph, sbuf_sizes: &[usize], rbuf_sizes: &[usize]) -> Result<()> {
+    if sbuf_sizes.len() != graph.num_send() || rbuf_sizes.len() != graph.num_recv() {
+        return Err(Error::Config(format!(
+            "buffer counts ({}, {}) do not match graph degrees ({}, {})",
+            sbuf_sizes.len(),
+            rbuf_sizes.len(),
+            graph.num_send(),
+            graph.num_recv()
+        )));
+    }
+    Ok(())
+}
+
+/// Typestate builder for [`JackComm`]: the paper's Listing-5 `Init`
+/// sequence with the ordering enforced at compile time.
+///
+/// `Uninit → WithBuffers → WithResidual → Ready`, then
+/// [`JackBuilder::build_sync`] or [`JackBuilder::build_async`]. Each
+/// transition consumes the builder, so calling a phase's method twice or
+/// out of order is a type error, not an `Error::Config`.
+pub struct JackBuilder<T: Transport, S: Scalar = f64, P = Uninit> {
     ep: T,
     graph: CommGraph,
     tree: SpanningTree,
-    bufs: BufferSet,
-    sol_vec: Vec<f64>,
-    res_vec: Vec<f64>,
+    bufs: BufferSet<S>,
+    res_len: usize,
+    sol_len: usize,
     norm_kind: NormKind,
-    res_norm: f64,
-    lconv: bool,
-    mode: Mode,
-    sync_comm: SyncComm<T>,
-    async_comm: Option<AsyncComm<T>>,
-    sync_conv: Option<SyncConv>,
-    async_conv: Option<AsyncConv>,
-    /// Counters for the experiment harnesses.
-    pub metrics: RankMetrics,
-    /// Optional protocol event trace.
-    pub trace: Trace,
+    _phase: PhantomData<P>,
 }
 
-impl<T: Transport> JackComm<T> {
-    /// Initialize with the communication graph (paper Listing 5, first
-    /// `Init`). Builds the spanning tree used by the convergence-detection
-    /// machinery — call concurrently on every rank.
+impl<T: Transport, S: Scalar, P> JackBuilder<T, S, P> {
+    /// The spanning tree built during [`JackBuilder::new`] (convergence
+    /// detection topology) — e.g. to construct a custom
+    /// [`TerminationProtocol`] for [`JackBuilder::build_async_with`].
+    pub fn tree(&self) -> &SpanningTree {
+        &self.tree
+    }
+
+    /// The communication graph this communicator is built over.
+    pub fn graph(&self) -> &CommGraph {
+        &self.graph
+    }
+
+    /// Move to the next phase (all state carries over).
+    fn phase<Q>(self) -> JackBuilder<T, S, Q> {
+        JackBuilder {
+            ep: self.ep,
+            graph: self.graph,
+            tree: self.tree,
+            bufs: self.bufs,
+            res_len: self.res_len,
+            sol_len: self.sol_len,
+            norm_kind: self.norm_kind,
+            _phase: PhantomData,
+        }
+    }
+
+    /// Assemble the communicator from the accumulated state.
+    fn finish(self) -> JackComm<T, S> {
+        let sync_conv = SyncConv::new(self.norm_kind, &self.tree);
+        JackComm {
+            ep: self.ep,
+            graph: self.graph,
+            tree: self.tree,
+            bufs: self.bufs,
+            sol_vec: vec![S::ZERO; self.sol_len],
+            res_vec: vec![S::ZERO; self.res_len],
+            norm_kind: self.norm_kind,
+            res_norm: f64::INFINITY,
+            lconv: false,
+            mode: Mode::Synchronous,
+            sync_comm: SyncComm::default(),
+            async_comm: None,
+            sync_conv: Some(sync_conv),
+            async_conv: None,
+            metrics: RankMetrics::default(),
+            trace: Trace::disabled(),
+        }
+    }
+}
+
+impl<T: Transport, S: Scalar> JackBuilder<T, S, Uninit> {
+    /// Start a session over `ep` with the given communication graph
+    /// (Listing 5, first `Init`). Builds the spanning tree used by the
+    /// convergence-detection machinery — call concurrently on every rank.
     pub fn new(mut ep: T, graph: CommGraph) -> Result<Self> {
         if graph.rank() != ep.rank() {
             return Err(Error::Config(format!(
@@ -113,60 +321,189 @@ impl<T: Transport> JackComm<T> {
             &graph.undirected_neighbors(),
             Duration::from_secs(30),
         )?;
-        Ok(JackComm {
+        Ok(JackBuilder {
             ep,
             graph,
             tree,
             bufs: BufferSet::default(),
-            sol_vec: Vec::new(),
-            res_vec: Vec::new(),
+            res_len: 0,
+            sol_len: 0,
             norm_kind: NormKind::Max,
-            res_norm: f64::INFINITY,
-            lconv: false,
-            mode: Mode::Synchronous,
-            sync_comm: SyncComm::default(),
-            async_comm: None,
-            sync_conv: None,
-            async_conv: None,
-            metrics: RankMetrics::default(),
-            trace: Trace::disabled(),
+            _phase: PhantomData,
         })
     }
 
-    /// Register communication buffers (Listing 5, second `Init`).
-    pub fn init_buffers(&mut self, sbuf_sizes: &[usize], rbuf_sizes: &[usize]) -> Result<()> {
-        if sbuf_sizes.len() != self.graph.num_send() || rbuf_sizes.len() != self.graph.num_recv() {
-            return Err(Error::Config(format!(
-                "buffer counts ({}, {}) do not match graph degrees ({}, {})",
-                sbuf_sizes.len(),
-                rbuf_sizes.len(),
-                self.graph.num_send(),
-                self.graph.num_recv()
-            )));
+    /// Register per-link communication buffers (Listing 5, second
+    /// `Init`). Counts must match the graph's out/in degrees.
+    pub fn with_buffers(
+        mut self,
+        sbuf_sizes: &[usize],
+        rbuf_sizes: &[usize],
+    ) -> Result<JackBuilder<T, S, WithBuffers>> {
+        check_buffer_counts(&self.graph, sbuf_sizes, rbuf_sizes)?;
+        self.bufs = BufferSet::new(sbuf_sizes, rbuf_sizes)?;
+        Ok(self.phase())
+    }
+}
+
+impl<T: Transport, S: Scalar> JackBuilder<T, S, WithBuffers> {
+    /// Register the residual vector size and norm (Listing 5, third
+    /// `Init`; see [`NormKind::from_norm_type`] for the paper's `float`
+    /// convention).
+    pub fn with_residual(mut self, res_vec_size: usize, norm: NormKind) -> JackBuilder<T, S, WithResidual> {
+        self.res_len = res_vec_size;
+        self.norm_kind = norm;
+        self.phase()
+    }
+}
+
+impl<T: Transport, S: Scalar> JackBuilder<T, S, WithResidual> {
+    /// Register the solution vector (part of the paper's `ConfigAsync`,
+    /// but useful in both modes: the solver drivers keep the iterate
+    /// here).
+    pub fn with_solution(mut self, sol_vec_size: usize) -> JackBuilder<T, S, Ready> {
+        self.sol_len = sol_vec_size;
+        self.phase()
+    }
+}
+
+impl<T: Transport, S: Scalar> JackBuilder<T, S, Ready> {
+    /// Build a communicator running classical (synchronous) iterations.
+    pub fn build_sync(self) -> JackComm<T, S> {
+        self.finish()
+    }
+
+    /// Build a communicator running asynchronous iterations with the
+    /// paper's snapshot-based convergence detection (the `ConfigAsync` +
+    /// `SwitchAsync` pair of Listing 5).
+    pub fn build_async(self, cfg: AsyncConfig) -> Result<JackComm<T, S>> {
+        if self.res_len == 0 || self.sol_len == 0 {
+            // An empty residual block has norm 0: lconv would arm
+            // immediately and the snapshot verdict would be meaningless.
+            // (Parity with the legacy config_async validation.)
+            return Err(Error::Config(
+                "async mode requires non-empty residual and solution vectors \
+                 (snapshot residual evaluation)"
+                    .into(),
+            ));
         }
+        if !self.tree.is_root() && self.graph.num_recv() == 0 {
+            return Err(Error::Config(
+                "async convergence detection requires every non-root rank to \
+                 have at least one incoming link (snapshot propagation)"
+                    .into(),
+            ));
+        }
+        let protocol = snapshot_protocol(
+            self.norm_kind,
+            cfg.threshold,
+            &self.tree,
+            self.graph.num_recv(),
+        );
+        self.build_async_with(protocol, cfg.max_recv_requests, cfg.send_discard)
+    }
+
+    /// Build an asynchronous communicator with a custom termination
+    /// detector (the pluggable-protocol extension point). Topology
+    /// requirements and the convergence threshold are the detector's own
+    /// (set when it was constructed), so unlike
+    /// [`JackBuilder::build_async`] this entry point takes the reception
+    /// and send-discard tunables directly rather than an [`AsyncConfig`]
+    /// whose `threshold` it would have to ignore.
+    pub fn build_async_with(
+        self,
+        protocol: Box<dyn TerminationProtocol<T, S>>,
+        max_recv_requests: usize,
+        send_discard: bool,
+    ) -> Result<JackComm<T, S>> {
+        let num_send = self.graph.num_send();
+        let mut comm = self.finish();
+        let mut async_comm = AsyncComm::new(num_send, max_recv_requests);
+        async_comm.discard = send_discard;
+        comm.async_comm = Some(async_comm);
+        comm.async_conv = Some(protocol);
+        comm.mode = Mode::Asynchronous;
+        Ok(comm)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The communicator
+// ---------------------------------------------------------------------
+
+/// The JACK2 communicator, generic over the [`Transport`] backend and
+/// the payload [`Scalar`] width.
+pub struct JackComm<T: Transport, S: Scalar = f64> {
+    ep: T,
+    graph: CommGraph,
+    tree: SpanningTree,
+    bufs: BufferSet<S>,
+    sol_vec: Vec<S>,
+    res_vec: Vec<S>,
+    norm_kind: NormKind,
+    res_norm: f64,
+    lconv: bool,
+    mode: Mode,
+    sync_comm: SyncComm<T>,
+    async_comm: Option<AsyncComm<T>>,
+    sync_conv: Option<SyncConv>,
+    async_conv: Option<Box<dyn TerminationProtocol<T, S>>>,
+    /// Counters for the experiment harnesses.
+    pub metrics: RankMetrics,
+    /// Optional protocol event trace.
+    pub trace: Trace,
+}
+
+impl<T: Transport, S: Scalar> JackComm<T, S> {
+    /// Open a typed session: returns the [`JackBuilder`] in its `Uninit`
+    /// phase (Listing 5, first `Init`). Call concurrently on every rank.
+    pub fn builder(ep: T, graph: CommGraph) -> Result<JackBuilder<T, S, Uninit>> {
+        JackBuilder::new(ep, graph)
+    }
+
+    /// Initialize with the communication graph.
+    #[deprecated(note = "use `JackComm::builder(ep, graph)` — the typestate \
+                         builder enforces the Listing-5 ordering at compile time")]
+    pub fn new(ep: T, graph: CommGraph) -> Result<Self> {
+        let mut comm = JackBuilder::<T, S, Uninit>::new(ep, graph)?.finish();
+        // Legacy semantics: the residual norm is configured by
+        // `init_residual`, and using it earlier is an ordering error (the
+        // builder path instead guarantees configuration by construction).
+        comm.sync_conv = None;
+        Ok(comm)
+    }
+
+    /// Register communication buffers (Listing 5, second `Init`).
+    #[deprecated(note = "use `JackBuilder::with_buffers` on the builder returned \
+                         by `JackComm::builder`")]
+    pub fn init_buffers(&mut self, sbuf_sizes: &[usize], rbuf_sizes: &[usize]) -> Result<()> {
+        check_buffer_counts(&self.graph, sbuf_sizes, rbuf_sizes)?;
         self.bufs = BufferSet::new(sbuf_sizes, rbuf_sizes)?;
         Ok(())
     }
 
     /// Register the residual vector and norm type (Listing 5, third
     /// `Init`; `norm_type`: 2 = Euclidean, < 1 = maximum norm).
+    #[deprecated(note = "use `JackBuilder::with_residual`")]
     pub fn init_residual(&mut self, res_vec_size: usize, norm_type: f32) -> Result<()> {
-        self.res_vec = vec![0.0; res_vec_size];
+        self.res_vec = vec![S::ZERO; res_vec_size];
         self.norm_kind = NormKind::from_norm_type(norm_type);
         self.sync_conv = Some(SyncConv::new(self.norm_kind, &self.tree));
         Ok(())
     }
 
-    /// Register the solution vector (part of the paper's `ConfigAsync`,
-    /// but useful in both modes: the solver drivers keep the iterate here).
+    /// Register the solution vector.
+    #[deprecated(note = "use `JackBuilder::with_solution`")]
     pub fn init_solution(&mut self, sol_vec_size: usize) -> Result<()> {
-        self.sol_vec = vec![0.0; sol_vec_size];
+        self.sol_vec = vec![S::ZERO; sol_vec_size];
         Ok(())
     }
 
     /// Configure asynchronous mode (paper `ConfigAsync`): snapshot-based
     /// convergence detection with the given residual `threshold`, and up
     /// to `max_recv_requests` message deliveries per channel per `Recv`.
+    #[deprecated(note = "use `JackBuilder::build_async(AsyncConfig { .. })` — \
+                         misordering is then unrepresentable")]
     pub fn config_async(&mut self, max_recv_requests: usize, threshold: f64) -> Result<()> {
         if self.bufs.num_recv_links() != self.graph.num_recv() {
             return Err(Error::Config("init_buffers must be called first".into()));
@@ -184,32 +521,35 @@ impl<T: Transport> JackComm<T> {
             ));
         }
         self.async_comm = Some(AsyncComm::new(self.graph.num_send(), max_recv_requests));
-        self.async_conv = Some(AsyncConv::new(
+        self.async_conv = Some(snapshot_protocol(
             self.norm_kind,
             threshold,
-            self.tree.clone(),
+            &self.tree,
             self.graph.num_recv(),
         ));
         Ok(())
     }
 
-    /// Toggle busy-channel send discarding (Alg. 6; default on). The
-    /// "tunable features for advanced experiments" of the paper's
-    /// conclusion — used by the E6 ablation.
-    pub fn set_send_discard(&mut self, discard: bool) -> Result<()> {
-        self.async_comm
-            .as_mut()
-            .ok_or_else(|| Error::Config("call config_async first".into()))?
-            .discard = discard;
-        Ok(())
-    }
-
     /// Switch to asynchronous iterations (paper `SwitchAsync`).
+    #[deprecated(note = "use `JackBuilder::build_async` — the built communicator \
+                         starts in the requested mode")]
     pub fn switch_async(&mut self) -> Result<()> {
         if self.async_comm.is_none() {
             return Err(Error::Config("call config_async before switch_async".into()));
         }
         self.mode = Mode::Asynchronous;
+        Ok(())
+    }
+
+    /// Toggle busy-channel send discarding (Alg. 6; default on). The
+    /// "tunable features for advanced experiments" of the paper's
+    /// conclusion — used by the E6 ablation. Prefer
+    /// [`AsyncConfig::send_discard`] at build time.
+    pub fn set_send_discard(&mut self, discard: bool) -> Result<()> {
+        self.async_comm
+            .as_mut()
+            .ok_or_else(|| Error::Config("communicator is not asynchronous".into()))?
+            .discard = discard;
         Ok(())
     }
 
@@ -229,6 +569,11 @@ impl<T: Transport> JackComm<T> {
         &self.tree
     }
 
+    /// The configured norm.
+    pub fn norm_kind(&self) -> NormKind {
+        self.norm_kind
+    }
+
     /// The underlying transport endpoint.
     pub fn endpoint(&self) -> &T {
         &self.ep
@@ -246,7 +591,7 @@ impl<T: Transport> JackComm<T> {
         self.res_norm
     }
 
-    /// Max-norm of the *local* residual block (for arming `lconv_flag`).
+    /// Norm of the *local* residual block (for arming `lconv_flag`).
     pub fn local_residual_norm(&self) -> f64 {
         self.norm_kind.eval(&self.res_vec)
     }
@@ -257,7 +602,7 @@ impl<T: Transport> JackComm<T> {
     }
 
     /// Asynchronous mode: true once global termination has been decided by
-    /// the snapshot protocol. (Synchronous mode always returns `false`;
+    /// the detection protocol. (Synchronous mode always returns `false`;
     /// the caller's loop condition on [`Self::residual_norm`] decides.)
     pub fn terminated(&self) -> bool {
         match self.mode {
@@ -275,7 +620,7 @@ impl<T: Transport> JackComm<T> {
     }
 
     /// Borrow all per-iteration data for the compute phase.
-    pub fn compute_view(&mut self) -> ComputeView<'_> {
+    pub fn compute_view(&mut self) -> ComputeView<'_, S> {
         let BufferSet { send, recv } = &mut self.bufs;
         ComputeView {
             recv,
@@ -286,18 +631,18 @@ impl<T: Transport> JackComm<T> {
     }
 
     /// Read-only access to the solution block.
-    pub fn solution(&self) -> &[f64] {
+    pub fn solution(&self) -> &[S] {
         &self.sol_vec
     }
 
     /// Mutable access to the solution block (initial guess setup).
-    pub fn solution_mut(&mut self) -> &mut Vec<f64> {
+    pub fn solution_mut(&mut self) -> &mut Vec<S> {
         &mut self.sol_vec
     }
 
     /// Re-arm the communicator for a new solve (next backward-Euler time
     /// step): resets the residual norm, the local-convergence flag and —
-    /// in asynchronous mode — reopens the terminated snapshot detector.
+    /// in asynchronous mode — reopens the terminated detector.
     /// Callers should place a world barrier between time steps.
     pub fn reset_for_new_solve(&mut self) -> Result<()> {
         self.res_norm = f64::INFINITY;
@@ -321,7 +666,7 @@ impl<T: Transport> JackComm<T> {
             Mode::Asynchronous => self
                 .async_comm
                 .as_mut()
-                .expect("switch_async checked")
+                .expect("async mode implies async_comm")
                 .send(&mut self.ep, &self.graph, &self.bufs, &mut self.metrics),
         };
         self.metrics.comm_time += t0.elapsed();
@@ -367,12 +712,12 @@ impl<T: Transport> JackComm<T> {
             trace,
             ..
         } = self;
-        let conv = async_conv.as_mut().expect("switch_async checked");
+        let conv = async_conv.as_mut().expect("async mode implies async_conv");
         // Advance the detection protocol first: it may complete a snapshot.
         conv.poll(ep, graph, bufs, sol_vec, *lconv, metrics, trace)?;
         // Deliver a completed snapshot (address swap) and freeze ordinary
         // delivery for the evaluation iteration.
-        if conv.try_deliver_snapshot(bufs, sol_vec)? {
+        if conv.try_deliver(bufs, sol_vec)? {
             return Ok(());
         }
         if conv.freeze_recv() {
@@ -380,7 +725,7 @@ impl<T: Transport> JackComm<T> {
         }
         async_comm
             .as_mut()
-            .expect("switch_async checked")
+            .expect("async mode implies async_comm")
             .recv(ep, graph, bufs, metrics)
     }
 
@@ -388,8 +733,8 @@ impl<T: Transport> JackComm<T> {
     ///
     /// Synchronous mode: blocking distributed norm of the residual vector
     /// (leader-election reduction on the spanning tree). Asynchronous
-    /// mode: advances the snapshot-based detection state machine; the
-    /// global norm becomes available when a detection round completes.
+    /// mode: advances the detection state machine; the global norm
+    /// becomes available when a detection round completes.
     pub fn update_residual(&mut self) -> Result<f64> {
         let t0 = Instant::now();
         self.metrics.iterations += 1;
@@ -414,7 +759,7 @@ impl<T: Transport> JackComm<T> {
                 self.res_norm = conv.update_residual(ep, res_vec, metrics)?;
             }
             Mode::Asynchronous => {
-                let conv = async_conv.as_mut().expect("switch_async checked");
+                let conv = async_conv.as_mut().expect("async mode implies async_conv");
                 conv.harvest_residual(res_vec);
                 conv.poll(ep, graph, bufs, sol_vec, *lconv, metrics, trace)?;
                 if let Some(n) = conv.global_norm() {
@@ -424,5 +769,96 @@ impl<T: Transport> JackComm<T> {
         }
         self.metrics.comm_time += t0.elapsed();
         Ok(self.res_norm)
+    }
+
+    /// The library-owned Listing-6 loop: encapsulates the
+    /// send / recv / compute / lconv / `UpdateResidual` cycle for both
+    /// modes, so callers supply only the compute phase.
+    ///
+    /// Per iteration the loop (1) receives (blocking per-link in
+    /// synchronous mode, non-blocking drain in asynchronous mode),
+    /// (2) runs `step` on the [`ComputeView`] (timed into
+    /// `metrics.compute_time`), (3) sends the published boundary data,
+    /// (4) arms the local-convergence flag from
+    /// [`Self::local_residual_norm`] `< opts.threshold` and advances
+    /// detection. Synchronous mode exits once the global residual norm
+    /// drops below `opts.threshold` and then drains the final in-flight
+    /// message per link so message counts balance across solves;
+    /// asynchronous mode exits when the termination protocol decides.
+    ///
+    /// Any boundary data for iteration 0 (e.g. the initial guess's faces)
+    /// should be written to the send buffers — via
+    /// [`Self::compute_view`] — before calling `iterate`: the loop posts
+    /// an initial `Send` before the first reception, exactly as
+    /// Listing 6 does.
+    pub fn iterate<F>(&mut self, opts: &IterateOpts, mut step: F) -> Result<IterateReport>
+    where
+        F: FnMut(ComputeView<'_, S>) -> StepOutcome,
+    {
+        self.send()?;
+        let mut iterations = 0u64;
+        let mut stopped = false;
+        loop {
+            let done = match self.mode {
+                Mode::Asynchronous => self.terminated(),
+                Mode::Synchronous => self.res_norm < opts.threshold,
+            };
+            if done || iterations >= opts.max_iters {
+                break;
+            }
+            self.recv()?;
+            let t0 = Instant::now();
+            let outcome = step(self.compute_view());
+            self.metrics.compute_time += t0.elapsed();
+            // An aborted compute phase must not publish its (possibly
+            // half-written) output or join the collective reduction: the
+            // error propagates before any communication, exactly as the
+            // hand-rolled loop's `compute(..)?` did.
+            let stop = match outcome {
+                StepOutcome::Continue => false,
+                StepOutcome::Stop => true,
+                StepOutcome::Abort(e) => return Err(e),
+            };
+            self.send()?;
+            if opts.wait_sends {
+                self.wait_sends();
+            }
+            if opts.detect {
+                let lconv = self.local_residual_norm() < opts.threshold;
+                self.set_local_convergence(lconv);
+                self.update_residual()?;
+            } else {
+                self.metrics.iterations += 1;
+            }
+            iterations += 1;
+            if stop {
+                // The stopping iteration completed its send and detection
+                // round, so the solve boundary looks exactly like a
+                // threshold exit (and the trailing drain below applies).
+                stopped = true;
+                break;
+            }
+            if self.mode == Mode::Asynchronous {
+                // Cooperative scheduling: asynchronous ranks never block,
+                // so on machines with fewer cores than ranks they must
+                // yield between iterations or the OS timeslices (~ms)
+                // dominate every protocol hop. A real cluster gives each
+                // rank its own core; this restores that assumption.
+                std::thread::yield_now();
+            }
+        }
+        if self.mode == Mode::Synchronous {
+            // Balance message counts across the solve boundary: the final
+            // send of each neighbour is still in flight. (Applies to the
+            // `Stop` exit too — its iteration completed the send, so the
+            // boundary state matches a threshold exit.)
+            self.recv()?;
+        }
+        Ok(IterateReport {
+            iterations,
+            residual_norm: self.res_norm,
+            terminated: self.terminated(),
+            stopped,
+        })
     }
 }

@@ -6,6 +6,7 @@
 //! encoded as leading f64 values (exactly representable: rounds and
 //! flags stay far below 2^53).
 
+use crate::scalar::Scalar;
 use crate::transport::Tag;
 
 /// Iteration data exchange (sync and async modes).
@@ -33,12 +34,13 @@ pub const TAG_NORM_SYNC: Tag = 0x70;
 pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
 
 /// Decode a snapshot face message (`[round, face...]`, as staged by
-/// `Transport::isend_headed`) into `(round, face)`. Accepts any payload
+/// `Transport::isend_headed_scalars`) into `(round, face)`, narrowing the
+/// `f64` wire words to the payload [`Scalar`] width. Accepts any payload
 /// view (a pooled [`crate::transport::MsgBuf`] derefs to `[f64]`), so
 /// the wire buffer can be recycled right after decoding.
-pub fn decode_snapshot(msg: &[f64]) -> (u64, Vec<f64>) {
+pub fn decode_snapshot<S: Scalar>(msg: &[f64]) -> (u64, Vec<S>) {
     let round = msg[0] as u64;
-    (round, msg[1..].to_vec())
+    (round, S::decode(&msg[1..]))
 }
 
 #[cfg(test)]
@@ -48,9 +50,13 @@ mod tests {
     #[test]
     fn snapshot_decode() {
         // Wire shape produced by `Transport::isend_headed(round, face)`.
-        let (r, f) = decode_snapshot(&[42.0, 1.5, -2.0]);
+        let (r, f) = decode_snapshot::<f64>(&[42.0, 1.5, -2.0]);
         assert_eq!(r, 42);
         assert_eq!(f, vec![1.5, -2.0]);
+        // the same wire words narrow cleanly to f32 payloads
+        let (r32, f32_face) = decode_snapshot::<f32>(&[42.0, 1.5, -2.0]);
+        assert_eq!(r32, 42);
+        assert_eq!(f32_face, vec![1.5f32, -2.0]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! | Paper class        | Module                                   |
 //! |--------------------|------------------------------------------|
-//! | `JACKComm`         | [`comm::JackComm`]                       |
+//! | `JACKComm`         | [`comm::JackComm`] (+ [`comm::JackBuilder`]) |
 //! | `JACKSyncComm`     | [`sync_comm::SyncComm`]                  |
 //! | `JACKAsyncComm`    | [`async_comm::AsyncComm`]                |
 //! | `JACKSyncConv`     | [`sync_conv::SyncConv`]                  |
@@ -16,6 +16,17 @@
 //!
 //! Plus [`termination`]: the pluggable-protocol extension point the paper
 //! lists among its contributions.
+//!
+//! Everything user-facing is generic over the payload
+//! [`crate::scalar::Scalar`] width (`f64` by default, `f32` supported
+//! end to end), and the session front-end is typed: [`comm::JackBuilder`]
+//! walks `Uninit → WithBuffers → WithResidual → Ready` so the paper's
+//! Listing-5 init ordering is a compile-time property, and
+//! [`comm::JackComm::iterate`] owns the Listing-6 loop.
+
+// Scoped lint gate (CI runs clippy with -D warnings crate-wide; this
+// keeps the public API surface clean even for local builds).
+#![deny(clippy::all)]
 
 pub mod async_comm;
 pub mod async_conv;
@@ -31,7 +42,10 @@ pub mod termination;
 pub use async_comm::AsyncComm;
 pub use async_conv::{AsyncConv, Verdict};
 pub use buffers::BufferSet;
-pub use comm::{ComputeView, JackComm, Mode};
+pub use comm::{
+    AsyncConfig, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode, Ready,
+    StepOutcome, Uninit, WithBuffers, WithResidual,
+};
 pub use norm::{NormKind, NormPending};
 pub use spanning_tree::SpanningTree;
 pub use sync_comm::SyncComm;

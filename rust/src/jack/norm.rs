@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use super::messages::{TAG_NORM_SYNC, TAG_NORM_SYNC_RESULT};
 use crate::error::{Error, Result};
+use crate::scalar::Scalar;
 use crate::transport::{Rank, Transport};
 
 /// Norm selector (the paper's `norm_type`: `2` → Euclidean, `< 1` → max).
@@ -45,11 +46,13 @@ impl NormKind {
         }
     }
 
-    /// Local partial aggregate of a block-component.
-    pub fn partial(&self, xs: &[f64]) -> f64 {
+    /// Local partial aggregate of a block-component. Generic over the
+    /// payload [`Scalar`] width; accumulation is always `f64`, so norms
+    /// and thresholds keep their meaning across widths.
+    pub fn partial<S: Scalar>(&self, xs: &[S]) -> f64 {
         match self {
-            NormKind::Max => xs.iter().fold(0.0, |m, x| m.max(x.abs())),
-            NormKind::Pow(q) => xs.iter().map(|x| x.abs().powf(*q)).sum(),
+            NormKind::Max => xs.iter().fold(0.0, |m, x| m.max(x.to_f64().abs())),
+            NormKind::Pow(q) => xs.iter().map(|x| x.to_f64().abs().powf(*q)).sum(),
         }
     }
 
@@ -70,7 +73,7 @@ impl NormKind {
     }
 
     /// Direct (single-host) norm of a full vector — test oracle.
-    pub fn eval(&self, xs: &[f64]) -> f64 {
+    pub fn eval<S: Scalar>(&self, xs: &[S]) -> f64 {
         self.finalize(self.partial(xs))
     }
 }
@@ -221,7 +224,17 @@ mod tests {
         assert_eq!(k.eval(&[1.0, -7.5, 2.0]), 7.5);
         assert_eq!(k.combine(3.0, 7.5), 7.5);
         assert_eq!(k.finalize(7.5), 7.5);
-        assert_eq!(k.partial(&[]), 0.0);
+        assert_eq!(k.partial::<f64>(&[]), 0.0);
+    }
+
+    #[test]
+    fn norms_agree_across_scalar_widths() {
+        let k = NormKind::Pow(2.0);
+        let wide = [3.0f64, -4.0];
+        let narrow = [3.0f32, -4.0];
+        assert!((k.eval(&wide) - k.eval(&narrow)).abs() < 1e-12);
+        let m = NormKind::Max;
+        assert_eq!(m.eval(&[1.0f32, -7.5, 2.0]), 7.5);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use super::messages::TAG_DATA;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
+use crate::scalar::Scalar;
 use crate::transport::Transport;
 
 /// Blocking per-iteration exchange over any [`Transport`].
@@ -42,18 +43,19 @@ impl<T: Transport> SyncComm<T> {
     }
 
     /// Send the current content of every send buffer to its neighbour
-    /// (pooled copy: no allocation in steady state).
-    pub fn send(
+    /// (pooled copy/widening: no allocation in steady state for any
+    /// [`Scalar`] width).
+    pub fn send<S: Scalar>(
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
+        bufs: &BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         self.last_sends.clear();
         for (l, &dst) in graph.send_neighbors().iter().enumerate() {
             self.last_sends
-                .push(ep.isend_copy(dst, TAG_DATA, &bufs.send[l])?);
+                .push(ep.isend_scalars(dst, TAG_DATA, &bufs.send[l])?);
             metrics.msgs_sent += 1;
         }
         Ok(())
@@ -69,11 +71,11 @@ impl<T: Transport> SyncComm<T> {
     }
 
     /// Blocking receive of one message per incoming link (Algorithm 4).
-    pub fn recv(
+    pub fn recv<S: Scalar>(
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &mut BufferSet,
+        bufs: &mut BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
         for (l, &src) in graph.recv_neighbors().iter().enumerate() {
@@ -106,7 +108,7 @@ mod tests {
                     let mut comm = SyncComm::default();
                     let sizes = vec![2usize; g.num_send()];
                     let rsizes = vec![2usize; g.num_recv()];
-                    let mut bufs = BufferSet::new(&sizes, &rsizes).unwrap();
+                    let mut bufs = BufferSet::<f64>::new(&sizes, &rsizes).unwrap();
                     let mut m = RankMetrics::default();
                     // 3 lockstep iterations: send rank*10 + iter
                     for it in 0..3 {

@@ -12,6 +12,7 @@ use super::norm::{saturation_norm, NormKind, NormPending};
 use super::spanning_tree::SpanningTree;
 use crate::error::Result;
 use crate::metrics::RankMetrics;
+use crate::scalar::Scalar;
 use crate::transport::{Rank, Transport};
 
 /// Blocking residual-norm evaluation, one round per iteration.
@@ -40,11 +41,12 @@ impl SyncConv {
     }
 
     /// Evaluate the global norm of the distributed residual vector whose
-    /// local block is `res_vec`. Blocks until every rank contributes.
-    pub fn update_residual<T: Transport>(
+    /// local block is `res_vec` (any [`Scalar`] width; partials and the
+    /// reduction run in `f64`). Blocks until every rank contributes.
+    pub fn update_residual<T: Transport, S: Scalar>(
         &mut self,
         ep: &mut T,
-        res_vec: &[f64],
+        res_vec: &[S],
         metrics: &mut RankMetrics,
     ) -> Result<f64> {
         self.round += 1;

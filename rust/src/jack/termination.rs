@@ -25,6 +25,7 @@ use super::spanning_tree::SpanningTree;
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
+use crate::scalar::Scalar;
 use crate::transport::{Tag, Transport};
 
 /// Tag namespace for the persistence protocol (disjoint from
@@ -34,10 +35,13 @@ const TAG_PERSIST_DOWN: Tag = 0x81;
 
 /// What an asynchronous termination detector must provide.
 ///
-/// Generic over the [`Transport`] backend at the trait level (not per
-/// method) so detectors stay object-safe: the solver drivers hold a
-/// `Box<dyn TerminationProtocol<T>>` for whatever backend they run on.
-pub trait TerminationProtocol<T: Transport> {
+/// Generic over the [`Transport`] backend and the payload [`Scalar`]
+/// width at the trait level (not per method) so detectors stay
+/// object-safe: [`crate::jack::JackComm`] and the solver drivers hold a
+/// `Box<dyn TerminationProtocol<T, S>>` for whatever backend and width
+/// they run on. `Send` is a supertrait so a communicator owning a boxed
+/// detector can still move to its rank thread.
+pub trait TerminationProtocol<T: Transport, S: Scalar = f64>: Send {
     /// Advance the detector. Called once per iteration with the user's
     /// current local-convergence flag.
     #[allow(clippy::too_many_arguments)]
@@ -45,8 +49,8 @@ pub trait TerminationProtocol<T: Transport> {
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
-        sol_vec: &[f64],
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
         lconv: bool,
         metrics: &mut RankMetrics,
         trace: &mut Trace,
@@ -54,13 +58,13 @@ pub trait TerminationProtocol<T: Transport> {
 
     /// Give the detector a chance to commandeer the user buffers (only
     /// the snapshot protocol uses this). Returns true if it did.
-    fn try_deliver(&mut self, bufs: &mut BufferSet, sol_vec: &mut Vec<f64>) -> Result<bool> {
+    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
         let _ = (bufs, sol_vec);
         Ok(false)
     }
 
     /// Feed the freshly computed residual block to the detector.
-    fn harvest_residual(&mut self, res_vec: &[f64]);
+    fn harvest_residual(&mut self, res_vec: &[S]);
 
     /// True while ordinary message delivery must be frozen.
     fn freeze_recv(&self) -> bool {
@@ -73,20 +77,25 @@ pub trait TerminationProtocol<T: Transport> {
     /// True once global termination has been decided.
     fn terminated(&self) -> bool;
 
+    /// Re-arm the detector after a terminated round (next time step).
+    /// Implementations whose state machine supports reopening override
+    /// this; the default is a no-op.
+    fn reopen(&mut self) {}
+
     /// Short name for reports.
     fn name(&self) -> &'static str;
 }
 
 /// The paper's snapshot-based protocol behind the trait.
-pub struct SnapshotProtocol(pub AsyncConv);
+pub struct SnapshotProtocol<S: Scalar = f64>(pub AsyncConv<S>);
 
-impl<T: Transport> TerminationProtocol<T> for SnapshotProtocol {
+impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for SnapshotProtocol<S> {
     fn poll(
         &mut self,
         ep: &mut T,
         graph: &CommGraph,
-        bufs: &BufferSet,
-        sol_vec: &[f64],
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
         lconv: bool,
         metrics: &mut RankMetrics,
         trace: &mut Trace,
@@ -94,11 +103,11 @@ impl<T: Transport> TerminationProtocol<T> for SnapshotProtocol {
         self.0.poll(ep, graph, bufs, sol_vec, lconv, metrics, trace)
     }
 
-    fn try_deliver(&mut self, bufs: &mut BufferSet, sol_vec: &mut Vec<f64>) -> Result<bool> {
+    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
         self.0.try_deliver_snapshot(bufs, sol_vec)
     }
 
-    fn harvest_residual(&mut self, res_vec: &[f64]) {
+    fn harvest_residual(&mut self, res_vec: &[S]) {
         self.0.harvest_residual(res_vec);
     }
 
@@ -112,6 +121,10 @@ impl<T: Transport> TerminationProtocol<T> for SnapshotProtocol {
 
     fn terminated(&self) -> bool {
         self.0.terminated()
+    }
+
+    fn reopen(&mut self) {
+        self.0.reopen();
     }
 
     fn name(&self) -> &'static str {
@@ -166,8 +179,17 @@ impl PersistenceProtocol {
     }
 
     /// Feed the freshly computed residual block to the detector.
-    pub fn harvest_residual(&mut self, res_vec: &[f64]) {
+    pub fn harvest_residual<S: Scalar>(&mut self, res_vec: &[S]) {
         self.last_partial = self.kind.partial(res_vec);
+    }
+
+    /// Re-arm after a terminated round (next time step): clear the
+    /// verdict and the streak, keep round numbers monotone.
+    pub fn reopen(&mut self) {
+        self.verdict = None;
+        self.streak = 0;
+        self.sent_report = false;
+        self.round += 1;
     }
 
     /// Advance the detector (see the trait docs).
@@ -251,13 +273,13 @@ impl PersistenceProtocol {
     }
 }
 
-impl<T: Transport> TerminationProtocol<T> for PersistenceProtocol {
+impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for PersistenceProtocol {
     fn poll(
         &mut self,
         ep: &mut T,
         _graph: &CommGraph,
-        _bufs: &BufferSet,
-        _sol_vec: &[f64],
+        _bufs: &BufferSet<S>,
+        _sol_vec: &[S],
         lconv: bool,
         _metrics: &mut RankMetrics,
         _trace: &mut Trace,
@@ -265,7 +287,7 @@ impl<T: Transport> TerminationProtocol<T> for PersistenceProtocol {
         PersistenceProtocol::poll(self, ep, lconv)
     }
 
-    fn harvest_residual(&mut self, res_vec: &[f64]) {
+    fn harvest_residual(&mut self, res_vec: &[S]) {
         PersistenceProtocol::harvest_residual(self, res_vec);
     }
 
@@ -275,6 +297,10 @@ impl<T: Transport> TerminationProtocol<T> for PersistenceProtocol {
 
     fn terminated(&self) -> bool {
         PersistenceProtocol::terminated(self)
+    }
+
+    fn reopen(&mut self) {
+        PersistenceProtocol::reopen(self);
     }
 
     fn name(&self) -> &'static str {

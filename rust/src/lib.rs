@@ -2,8 +2,28 @@
 //!
 //! A full reproduction of *"JACK2: a new high-level communication library
 //! for parallel iterative methods"* (Gbikpi-Benissan & Magoulès, 2022),
-//! built as a three-layer Rust + JAX/Pallas stack:
+//! built as a three-layer Rust + JAX/Pallas stack. The front door is the
+//! **typed session API** (see [`prelude`] and the example in
+//! [`jack::comm`]): a typestate builder that enforces the paper's
+//! Listing-5 init ordering at compile time, payloads generic over the
+//! [`scalar::Scalar`] width (`f64` default, `f32` end to end), and a
+//! library-owned Listing-6 loop ([`jack::JackComm::iterate`]) so user
+//! code supplies only the compute phase:
 //!
+//! ```text
+//! JackComm::builder(ep, graph)?          // Uninit
+//!     .with_buffers(&sbufs, &rbufs)?     // → WithBuffers
+//!     .with_residual(n, NormKind::Max)   // → WithResidual
+//!     .with_solution(n)                  // → Ready
+//!     .build_sync()                      // or .build_async(AsyncConfig)
+//!     .iterate(&opts, |view| { /* compute */ StepOutcome::Continue })
+//! ```
+//!
+//! Layer by layer:
+//!
+//! * **[`scalar`]** — the payload-width abstraction: `f32`/`f64` user
+//!   buffers over an `f64` wire, with staging/delivery kept
+//!   allocation-free for every width.
 //! * **[`transport`]** — the backend-agnostic message layer: the
 //!   [`transport::Transport`] trait (non-blocking sends, probing, pooled
 //!   buffers) that everything above the substrate is written against, and
@@ -17,19 +37,21 @@
 //!   reproducible on one host.
 //! * **[`graph`]** — logical communication graphs (explicit incoming and
 //!   outgoing link lists, exactly the paper's Listing 1).
-//! * **[`jack`]** — the JACK2 library proper: buffer management with
+//! * **[`jack`]** — the JACK2 library proper: the typed session front-end
+//!   ([`jack::JackBuilder`] / [`jack::JackComm`]), buffer management with
 //!   address-swap message delivery (Alg. 4), continuous asynchronous
 //!   reception with a configurable in-flight request count (Alg. 5),
 //!   busy-channel send discarding (Alg. 6), distributed spanning trees,
 //!   leader-election norm computation, the Savari–Bertsekas snapshot
-//!   protocol for asynchronous convergence detection (Algs. 7–9), and the
-//!   single [`jack::JackComm`] front-end of the paper's Listings 5–6.
+//!   protocol for asynchronous convergence detection (Algs. 7–9), and
+//!   pluggable termination protocols.
 //! * **[`problem`]** — the paper's evaluation workload: 3-D
 //!   convection–diffusion, finite differences, backward Euler, box
 //!   partitioning (Fig. 2).
 //! * **[`solver`]** — parallel iterative schemes: trivial (Alg. 1),
-//!   overlapping (Alg. 2) and asynchronous (Alg. 3) relaxation, with a
-//!   native Rust compute backend and an AOT-compiled XLA backend.
+//!   overlapping (Alg. 2) and asynchronous (Alg. 3) relaxation, written
+//!   on the session API's `iterate` loop, with a native Rust compute
+//!   backend and an AOT-compiled XLA backend.
 //! * **[`runtime`]** — PJRT executor loading the HLO artifacts produced by
 //!   `python/compile/aot.py` (Python is build-time only).
 //! * **[`metrics`]** — counters and event traces used by the experiment
@@ -45,8 +67,10 @@ pub mod graph;
 pub mod harness;
 pub mod jack;
 pub mod metrics;
+pub mod prelude;
 pub mod problem;
 pub mod runtime;
+pub mod scalar;
 pub mod simmpi;
 pub mod solver;
 pub mod transport;

@@ -1,0 +1,14 @@
+//! Convenience re-exports for the typed session API: everything a
+//! Listing-5/Listing-6 program needs in one `use jack2::prelude::*;`.
+//!
+//! See the module docs of [`crate::jack::comm`] for a complete,
+//! compiling example.
+
+pub use crate::error::{Error, Result};
+pub use crate::graph::CommGraph;
+pub use crate::jack::{
+    AsyncConfig, BufferSet, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode,
+    NormKind, StepOutcome, TerminationProtocol,
+};
+pub use crate::scalar::Scalar;
+pub use crate::transport::Transport;

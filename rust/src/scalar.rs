@@ -1,0 +1,194 @@
+//! The [`Scalar`] payload abstraction: which floating-point width the
+//! user-facing buffers (`BufferSet`, `ComputeView`, solution and residual
+//! blocks) carry.
+//!
+//! The wire format stays `f64` — every [`crate::transport::MsgBuf`] is an
+//! `f64` payload, protocol headers are exactly representable, and any
+//! narrower scalar widens losslessly — so transports and backends need no
+//! changes to carry `f32` (or future widths) end to end. What *is*
+//! scalar-specific is the boundary crossing, and this trait owns both
+//! directions of it:
+//!
+//! * **staging** ([`Scalar::stage`] / [`Scalar::stage_headed`]): copy a
+//!   scalar slice into recycled pool storage, widening on the fly. One
+//!   pass, zero steady-state allocations for every width — the `f64`
+//!   implementation specializes to the plain `memcpy` staging path.
+//! * **delivery** ([`Scalar::deliver`]): land an arrived wire payload in
+//!   a user buffer. `f64` keeps the paper's O(1) address swap (Alg. 4,
+//!   step 3); narrower scalars copy-convert element-wise into the
+//!   preallocated slot — still allocation-free, and the wire buffer is
+//!   recycled by the caller either way.
+//!
+//! Norm evaluation ([`crate::jack::NormKind`]) and the convergence
+//! protocols accumulate in `f64` regardless of the payload width, so
+//! thresholds and reported norms keep their meaning across widths.
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+use crate::transport::{BufferPool, MsgBuf};
+
+/// A floating-point payload scalar (`f32` or `f64`).
+///
+/// The arithmetic bounds let user compute phases be written once,
+/// generically over the width (see `examples/quickstart.rs`);
+/// [`Scalar::from_f64`] / [`Scalar::to_f64`] cross between the payload
+/// width and the `f64` wire/accumulation domain.
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+{
+    /// Width name for reports ("f32" / "f64").
+    const NAME: &'static str;
+    /// Additive identity (buffer zero-fill value).
+    const ZERO: Self;
+
+    /// Narrow from the `f64` wire/accumulation domain.
+    fn from_f64(v: f64) -> Self;
+
+    /// Widen to the `f64` wire/accumulation domain (lossless).
+    fn to_f64(self) -> f64;
+
+    /// Stage `data` onto the wire through recycled pool storage: the
+    /// scalar-generic equivalent of [`BufferPool::stage`]. Single pass,
+    /// no steady-state allocation.
+    fn stage(pool: &BufferPool, data: &[Self]) -> MsgBuf {
+        pool.stage_iter(data.len(), data.iter().map(|&x| x.to_f64()))
+    }
+
+    /// Stage `[header, data...]` (round-stamped protocol shape) through
+    /// recycled pool storage.
+    fn stage_headed(pool: &BufferPool, header: f64, data: &[Self]) -> MsgBuf {
+        pool.stage_headed_iter(header, data.len(), data.iter().map(|&x| x.to_f64()))
+    }
+
+    /// Land an arrived wire payload in an equal-length user slot. The
+    /// `f64` implementation swaps addresses in O(1); narrower widths
+    /// copy-convert into the preallocated slot. Neither allocates; the
+    /// caller recycles `incoming` by dropping it.
+    fn deliver(slot: &mut Vec<Self>, incoming: &mut MsgBuf) {
+        debug_assert_eq!(slot.len(), incoming.len());
+        for (d, &w) in slot.iter_mut().zip(incoming.iter()) {
+            *d = Self::from_f64(w);
+        }
+    }
+
+    /// Decode a wire slice into an owned scalar vector (snapshot-face
+    /// codec; allocates — used only on the rare snapshot path).
+    fn decode(wire: &[f64]) -> Vec<Self> {
+        wire.iter().map(|&w| Self::from_f64(w)).collect()
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    const ZERO: Self = 0.0;
+
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    fn stage(pool: &BufferPool, data: &[f64]) -> MsgBuf {
+        pool.stage(data)
+    }
+
+    fn stage_headed(pool: &BufferPool, header: f64, data: &[f64]) -> MsgBuf {
+        pool.stage_headed(header, data)
+    }
+
+    fn deliver(slot: &mut Vec<f64>, incoming: &mut MsgBuf) {
+        debug_assert_eq!(slot.len(), incoming.len());
+        std::mem::swap(slot, incoming.vec_mut());
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    const ZERO: Self = 0.0;
+
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_stage_is_identity() {
+        let pool = BufferPool::new();
+        let m = f64::stage(&pool, &[1.5, -2.0]);
+        assert_eq!(m, vec![1.5, -2.0]);
+        let h = f64::stage_headed(&pool, 7.0, &[1.0]);
+        assert_eq!(h, vec![7.0, 1.0]);
+    }
+
+    #[test]
+    fn f32_widens_on_stage_and_narrows_on_deliver() {
+        let pool = BufferPool::new();
+        let m = f32::stage(&pool, &[1.5f32, -2.25]);
+        assert_eq!(m, vec![1.5f64, -2.25]);
+        let wire = f32::stage_headed(&pool, 3.0, &[0.5f32]);
+        assert_eq!(wire, vec![3.0, 0.5]);
+
+        let mut slot = vec![0.0f32; 2];
+        let mut incoming = pool.stage(&[4.5, -1.0]);
+        f32::deliver(&mut slot, &mut incoming);
+        assert_eq!(slot, vec![4.5f32, -1.0]);
+        // the wire buffer keeps its storage (recycled by dropping)
+        assert_eq!(incoming.len(), 2);
+    }
+
+    #[test]
+    fn f64_deliver_swaps_addresses() {
+        let pool = BufferPool::new();
+        let mut slot = vec![0.0f64; 3];
+        let mut incoming = pool.stage(&[1.0, 2.0, 3.0]);
+        let wire_ptr = incoming.as_slice().as_ptr();
+        f64::deliver(&mut slot, &mut incoming);
+        assert_eq!(slot, vec![1.0, 2.0, 3.0]);
+        assert_eq!(slot.as_ptr(), wire_ptr, "O(1) swap, not a copy");
+    }
+
+    #[test]
+    fn staging_is_allocation_free_once_warm() {
+        let pool = BufferPool::new();
+        drop(f32::stage(&pool, &[1.0f32; 32])); // warm-up: parks one buffer
+        let warm = pool.stats().allocations;
+        for _ in 0..50 {
+            drop(f32::stage(&pool, &[2.0f32; 32]));
+            drop(f32::stage_headed(&pool, 1.0, &[3.0f32; 16]));
+        }
+        assert_eq!(pool.stats().allocations, warm, "{:?}", pool.stats());
+    }
+
+    #[test]
+    fn decode_round_trips() {
+        assert_eq!(f32::decode(&[1.5, -2.0]), vec![1.5f32, -2.0]);
+        assert_eq!(f64::decode(&[1.5]), vec![1.5f64]);
+        assert_eq!(<f32 as Scalar>::NAME, "f32");
+        assert_eq!(<f64 as Scalar>::NAME, "f64");
+    }
+}

@@ -12,7 +12,7 @@ use super::xla_backend::XlaBackend;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
-use crate::jack::JackComm;
+use crate::jack::{AsyncConfig, ComputeView, IterateOpts, JackComm, NormKind, StepOutcome};
 use crate::metrics::RankMetrics;
 use crate::problem::{extract_face, idx3, ConvDiff, Face, Partition3D, SubDomain};
 use crate::runtime::Engine;
@@ -251,22 +251,36 @@ fn run_rank<T: Transport>(
         vec![0.0; sub.dims.0 * sub.dims.1],
     ];
 
-    // -- Listing 5: initialize the JACK2 communicator --
-    let mut comm = JackComm::new(ep, graph)?;
-    comm.init_buffers(&buf_sizes, &buf_sizes)?;
-    comm.init_residual(vol, cfg.norm_type)?;
-    comm.init_solution(vol)?;
-    if cfg.scheme.is_async() {
-        comm.config_async(cfg.max_recv_requests, cfg.threshold)?;
-        comm.set_send_discard(cfg.send_discard)?;
-        comm.switch_async()?;
-    }
+    // -- Listing 5: the typed session builder (init ordering is a
+    //    compile-time property; async config is one value).
+    let session = JackComm::builder(ep, graph)?
+        .with_buffers(&buf_sizes, &buf_sizes)?
+        .with_residual(vol, NormKind::from_norm_type(cfg.norm_type))
+        .with_solution(vol);
+    let mut comm = if cfg.scheme.is_async() {
+        session.build_async(AsyncConfig {
+            max_recv_requests: cfg.max_recv_requests,
+            threshold: cfg.threshold,
+            send_discard: cfg.send_discard,
+        })?
+    } else {
+        session.build_sync()
+    };
 
     let speed = comm.endpoint().speed();
     let work_floor = Duration::from_micros(cfg.work_floor_us);
     let mut work_rng = crate::util::Rng64::new(cfg.seed ^ 0x5EED).fork(sub.rank as u64 + 1);
     let mut prev_sol = vec![0.0; vol];
     let mut steps = Vec::with_capacity(cfg.time_steps);
+
+    let opts = IterateOpts {
+        threshold: cfg.threshold,
+        max_iters: cfg.max_iters,
+        // Algorithm 1: the communication phase is fully dedicated.
+        wait_sends: cfg.scheme == Scheme::Trivial,
+        // E4 ablation: detection disabled, pure Alg. 3 loop.
+        detect: cfg.detect,
+    };
 
     for step in 0..cfg.time_steps {
         if step > 0 {
@@ -278,26 +292,17 @@ fn run_rank<T: Transport>(
         let iter_before = comm.metrics.iterations;
         let snaps_before = comm.metrics.snapshots;
 
-        // -- Listing 6: the iteration loop --
+        // -- Listing 6, library-owned: publish the initial faces, then
+        //    hand the compute phase to `iterate`.
         publish_faces(&mut comm, &sub, &faces)?;
-        comm.send()?;
-        let mut iters: u64 = 0;
-        loop {
-            let done = match cfg.scheme {
-                Scheme::Asynchronous => comm.terminated(),
-                _ => comm.residual_norm() < cfg.threshold,
-            };
-            if done || iters >= cfg.max_iters {
-                break;
-            }
-            comm.recv()?;
+        comm.iterate(&opts, |v| {
             let floor = if cfg.work_jitter > 0.0 {
                 work_floor.mul_f64(1.0 + work_rng.range_f64(0.0, cfg.work_jitter))
             } else {
                 work_floor
             };
-            compute_phase(
-                &mut comm,
+            match compute_phase(
+                v,
                 &mut backend,
                 &sub,
                 &faces,
@@ -308,35 +313,11 @@ fn run_rank<T: Transport>(
                 speed,
                 floor,
                 cfg.inner_sweeps,
-            )?;
-            comm.send()?;
-            if cfg.scheme == Scheme::Trivial {
-                // Algorithm 1: the communication phase is fully dedicated.
-                comm.wait_sends();
+            ) {
+                Ok(()) => StepOutcome::Continue,
+                Err(e) => StepOutcome::Abort(e),
             }
-            if cfg.detect {
-                let lconv = comm.local_residual_norm() < cfg.threshold;
-                comm.set_local_convergence(lconv);
-                comm.update_residual()?;
-            } else {
-                // E4 ablation: detection disabled, pure Alg. 3 loop.
-                comm.metrics.iterations += 1;
-            }
-            iters += 1;
-            if cfg.scheme.is_async() {
-                // Cooperative scheduling: asynchronous ranks never block,
-                // so on machines with fewer cores than ranks they must
-                // yield between iterations or the OS timeslices (~ms)
-                // dominate every protocol hop. A real cluster gives each
-                // rank its own core; this restores that assumption.
-                std::thread::yield_now();
-            }
-        }
-        if !cfg.scheme.is_async() {
-            // Balance message counts across the step boundary: the final
-            // send of each neighbour is still in flight.
-            comm.recv()?;
-        }
+        })?;
 
         steps.push(RankStep {
             iterations: comm.metrics.iterations - iter_before,
@@ -349,7 +330,6 @@ fn run_rank<T: Transport>(
             barrier(comm.endpoint_mut())?;
             comm.reset_for_new_solve()?;
         }
-        let _ = iters;
     }
 
     // prev_sol holds U^{t_{n-1}} of the final step (zeros for a single
@@ -376,10 +356,12 @@ fn publish_faces<T: Transport>(
     Ok(())
 }
 
-/// One compute phase: sweep + publish boundary faces + heterogeneity spin.
+/// One compute phase: sweep + publish boundary faces + heterogeneity
+/// spin. Runs inside [`JackComm::iterate`]'s closure, so the whole phase
+/// (sweep and emulated workload) lands in `metrics.compute_time`.
 #[allow(clippy::too_many_arguments)]
-fn compute_phase<T: Transport>(
-    comm: &mut JackComm<T>,
+fn compute_phase(
+    v: ComputeView<'_, f64>,
     backend: &mut Box<dyn ComputeBackend>,
     sub: &SubDomain,
     faces: &[(Face, usize)],
@@ -393,24 +375,20 @@ fn compute_phase<T: Transport>(
 ) -> Result<()> {
     let t0 = Instant::now();
     let dims = sub.dims;
-    {
-        let v = comm.compute_view();
-        let halo: [&[f64]; 6] = std::array::from_fn(|fi| {
-            face_link[fi]
-                .map(|l| v.recv[l].as_slice())
-                .unwrap_or(zero_faces[fi].as_slice())
-        });
-        if inner_sweeps > 1 {
-            backend.sweep_k(v.sol, halo, rhs, coeffs, v.res, inner_sweeps)?;
-        } else {
-            backend.sweep(v.sol, halo, rhs, coeffs, v.res)?;
-        }
-        for (l, &(f, _)) in faces.iter().enumerate() {
-            extract_face(v.sol, dims, f, &mut v.send[l]);
-        }
+    let halo: [&[f64]; 6] = std::array::from_fn(|fi| {
+        face_link[fi]
+            .map(|l| v.recv[l].as_slice())
+            .unwrap_or(zero_faces[fi].as_slice())
+    });
+    if inner_sweeps > 1 {
+        backend.sweep_k(v.sol, halo, rhs, coeffs, v.res, inner_sweeps)?;
+    } else {
+        backend.sweep(v.sol, halo, rhs, coeffs, v.res)?;
+    }
+    for (l, &(f, _)) in faces.iter().enumerate() {
+        extract_face(v.sol, dims, f, &mut v.send[l]);
     }
     let elapsed = t0.elapsed();
-    comm.metrics.compute_time += elapsed;
     // Workload + heterogeneity emulation: the iteration's compute phase
     // is at least `work_floor` (modelling the paper's large subdomains)
     // and a rank at speed s takes 1/s times longer. Sleep (don't spin): a
@@ -418,9 +396,7 @@ fn compute_phase<T: Transport>(
     // may have fewer cores than ranks.
     let target = Duration::from_secs_f64(elapsed.max(work_floor).as_secs_f64() / speed);
     if target > elapsed {
-        let extra = target - elapsed;
-        std::thread::sleep(extra);
-        comm.metrics.compute_time += extra;
+        std::thread::sleep(target - elapsed);
     }
     Ok(())
 }

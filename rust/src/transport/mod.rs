@@ -43,6 +43,7 @@ use std::fmt;
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::scalar::Scalar;
 
 /// Rank index within a world (an "MPI rank").
 pub type Rank = usize;
@@ -118,6 +119,33 @@ pub trait Transport: Send {
         payload: &[f64],
     ) -> Result<Self::SendHandle> {
         let buf = self.pool().stage_headed(header, payload);
+        self.isend(dst, tag, buf)
+    }
+
+    /// Width-generic pooled send: stage a [`Scalar`] slice onto the `f64`
+    /// wire through recycled storage (one pass, no steady-state
+    /// allocation). For `f64` payloads this is exactly
+    /// [`Transport::isend_copy`]; narrower scalars widen on the fly.
+    fn isend_scalars<S: Scalar>(
+        &mut self,
+        dst: Rank,
+        tag: Tag,
+        data: &[S],
+    ) -> Result<Self::SendHandle> {
+        let buf = S::stage(self.pool(), data);
+        self.isend(dst, tag, buf)
+    }
+
+    /// Width-generic [`Transport::isend_headed`]: pooled
+    /// `[header, payload...]` staging of a [`Scalar`] slice.
+    fn isend_headed_scalars<S: Scalar>(
+        &mut self,
+        dst: Rank,
+        tag: Tag,
+        header: f64,
+        data: &[S],
+    ) -> Result<Self::SendHandle> {
+        let buf = S::stage_headed(self.pool(), header, data);
         self.isend(dst, tag, buf)
     }
 

@@ -182,6 +182,35 @@ impl BufferPool {
         MsgBuf::pooled(v, self.clone())
     }
 
+    /// Stage an arbitrary `f64` sequence of known length into recycled
+    /// storage — the width-generic staging primitive behind
+    /// [`crate::scalar::Scalar::stage`] (e.g. widening `f32` payloads
+    /// onto the wire). Same allocation profile as [`BufferPool::stage`]:
+    /// one pass, no steady-state allocation.
+    pub fn stage_iter(&self, len: usize, it: impl Iterator<Item = f64>) -> MsgBuf {
+        let mut v = self.acquire_vec(len);
+        v.clear();
+        v.extend(it);
+        debug_assert_eq!(v.len(), len, "stage_iter: iterator length mismatch");
+        MsgBuf::pooled(v, self.clone())
+    }
+
+    /// [`BufferPool::stage_iter`] with a one-word protocol header
+    /// prepended (the scalar-generic [`BufferPool::stage_headed`]).
+    pub fn stage_headed_iter(
+        &self,
+        header: f64,
+        len: usize,
+        it: impl Iterator<Item = f64>,
+    ) -> MsgBuf {
+        let mut v = self.acquire_vec(len + 1);
+        v.clear();
+        v.push(header);
+        v.extend(it);
+        debug_assert_eq!(v.len(), len + 1, "stage_headed_iter: iterator length mismatch");
+        MsgBuf::pooled(v, self.clone())
+    }
+
     fn acquire_vec(&self, len: usize) -> Vec<f64> {
         match self.take_free(len) {
             Some(v) => {

@@ -1,14 +1,18 @@
 //! Buffer-pool invariants of the pooled zero-copy transport layer
-//! (ISSUE 1 tentpole): the steady-state iteration path allocates no new
-//! message buffers, recycled storage never leaks stale data across
+//! (ISSUE 1 tentpole, extended to the generic `Scalar` path by ISSUE 2):
+//! the steady-state iteration path allocates no new message buffers for
+//! any payload width, recycled storage never leaks stale data across
 //! `(src, tag)` lanes, and MPI's non-overtaking order survives pooling.
 
 use std::time::Duration;
 
 use jack2::graph::CommGraph;
 use jack2::jack::messages::TAG_DATA;
-use jack2::jack::{AsyncComm, BufferSet, JackComm, SyncComm};
+use jack2::jack::{
+    AsyncComm, AsyncConfig, BufferSet, IterateOpts, JackComm, NormKind, StepOutcome, SyncComm,
+};
 use jack2::metrics::RankMetrics;
+use jack2::scalar::Scalar;
 use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
 use jack2::transport::Transport;
 
@@ -32,16 +36,16 @@ fn pair() -> (World, Endpoint, Endpoint, CommGraph, CommGraph) {
 fn sync_exchange_is_allocation_free_after_warmup() {
     let n = 256;
     let (_w, mut e0, mut e1, g0, g1) = pair();
-    let mut bufs0 = BufferSet::new(&[n], &[n]).unwrap();
-    let mut bufs1 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut bufs0 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
+    let mut bufs1 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
     let mut sc0 = SyncComm::default();
     let mut sc1 = SyncComm::default();
     let mut m = RankMetrics::default();
 
     let mut iterate = |e0: &mut Endpoint,
                        e1: &mut Endpoint,
-                       bufs0: &mut BufferSet,
-                       bufs1: &mut BufferSet,
+                       bufs0: &mut BufferSet<f64>,
+                       bufs1: &mut BufferSet<f64>,
                        sc0: &mut SyncComm<Endpoint>,
                        sc1: &mut SyncComm<Endpoint>,
                        m: &mut RankMetrics,
@@ -78,8 +82,8 @@ fn sync_exchange_is_allocation_free_after_warmup() {
 fn async_exchange_is_allocation_free_after_warmup() {
     let n = 64;
     let (_w, mut e0, mut e1, g0, g1) = pair();
-    let mut bufs0 = BufferSet::new(&[n], &[n]).unwrap();
-    let mut bufs1 = BufferSet::new(&[n], &[n]).unwrap();
+    let mut bufs0 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
+    let mut bufs1 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
     let mut ac0: AsyncComm<Endpoint> = AsyncComm::new(1, 4);
     let mut ac1: AsyncComm<Endpoint> = AsyncComm::new(1, 4);
     let mut m = RankMetrics::default();
@@ -159,16 +163,16 @@ fn non_overtaking_order_holds_under_pooling() {
     assert_eq!(next, total, "messages lost under pooling");
 }
 
-/// Full-stack check: the `JackComm` synchronous iteration loop (send +
-/// recv + distributed residual norm) allocates no message buffers after
-/// warm-up — the tentpole's acceptance criterion at the user-API level.
+/// Full-stack check, generic over the payload width: the `JackComm`
+/// synchronous iteration loop (send + recv + distributed residual norm)
+/// allocates no message buffers after warm-up — the tentpole's
+/// acceptance criterion at the user-API level, for `f64` and `f32`.
 ///
 /// A world barrier between iterations keeps the two rank threads in
 /// lock-step so every iteration's acquire/release pattern is identical
 /// (the barrier itself moves zero-capacity payloads: no pool churn),
 /// making the zero-allocation assertion deterministic.
-#[test]
-fn jackcomm_sync_iteration_is_allocation_free_after_warmup() {
+fn jackcomm_sync_allocation_free<S: Scalar>() {
     let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
     let (_w, eps) = World::new(cfg);
     let handles: Vec<_> = eps
@@ -177,16 +181,19 @@ fn jackcomm_sync_iteration_is_allocation_free_after_warmup() {
             std::thread::spawn(move || {
                 let rank = ep.rank();
                 let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
-                let mut comm = JackComm::new(ep, graph).unwrap();
-                comm.init_buffers(&[8], &[8]).unwrap();
-                comm.init_residual(8, 0.0).unwrap();
-                comm.init_solution(8).unwrap();
+                let mut comm = JackComm::<_, S>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[8], &[8])
+                    .unwrap()
+                    .with_residual(8, NormKind::Max)
+                    .with_solution(8)
+                    .build_sync();
 
-                let mut iterate = |comm: &mut JackComm<Endpoint>, it: usize| {
+                let mut iterate = |comm: &mut JackComm<Endpoint, S>, it: usize| {
                     {
                         let v = comm.compute_view();
-                        v.send[0][0] = it as f64;
-                        v.res[0] = 1.0 / (it + 1) as f64;
+                        v.send[0][0] = S::from_f64(it as f64);
+                        v.res[0] = S::from_f64(1.0 / (it + 1) as f64);
                     }
                     comm.send().unwrap();
                     comm.recv().unwrap();
@@ -210,22 +217,33 @@ fn jackcomm_sync_iteration_is_allocation_free_after_warmup() {
         let (warm, steady) = h.join().unwrap();
         assert_eq!(
             steady.allocations, warm,
-            "sync JackComm iteration allocated message buffers in steady state: {steady:?}"
+            "sync {} JackComm iteration allocated message buffers in steady state: {steady:?}",
+            S::NAME
         );
     }
 }
 
-/// Full-stack check for the asynchronous mode: with detection quiescent
-/// (no local convergence), the continuous send/recv path allocates no
-/// message buffers after warm-up, and send-discard stays a no-cost path.
+#[test]
+fn jackcomm_sync_iteration_is_allocation_free_after_warmup() {
+    jackcomm_sync_allocation_free::<f64>();
+}
+
+#[test]
+fn jackcomm_sync_iteration_is_allocation_free_after_warmup_f32() {
+    jackcomm_sync_allocation_free::<f32>();
+}
+
+/// Full-stack check for the asynchronous mode, generic over the payload
+/// width: with detection quiescent (no local convergence), the
+/// continuous send/recv path allocates no message buffers after warm-up,
+/// and send-discard stays a no-cost path.
 ///
 /// The communicators are built on two threads (spanning-tree construction
 /// is a blocking collective) and then — since asynchronous mode never
 /// blocks — driven interleaved from one thread, so the send/drain balance
 /// is deterministic and the zero-allocation assertion cannot be upset by
 /// scheduler-induced mailbox pile-up.
-#[test]
-fn jackcomm_async_iteration_is_allocation_free_after_warmup() {
+fn jackcomm_async_allocation_free<S: Scalar>() {
     let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
     let (_w, eps) = World::new(cfg);
     let handles: Vec<_> = eps
@@ -234,26 +252,31 @@ fn jackcomm_async_iteration_is_allocation_free_after_warmup() {
             std::thread::spawn(move || {
                 let rank = ep.rank();
                 let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
-                let mut comm = JackComm::new(ep, graph).unwrap();
-                comm.init_buffers(&[8], &[8]).unwrap();
-                comm.init_residual(8, 0.0).unwrap();
-                comm.init_solution(8).unwrap();
-                comm.config_async(4, 1e-300).unwrap();
-                comm.switch_async().unwrap();
-                comm
+                JackComm::<_, S>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[8], &[8])
+                    .unwrap()
+                    .with_residual(8, NormKind::Max)
+                    .with_solution(8)
+                    .build_async(AsyncConfig {
+                        max_recv_requests: 4,
+                        threshold: 1e-300,
+                        send_discard: true,
+                    })
+                    .unwrap()
             })
         })
         .collect();
-    let mut comms: Vec<JackComm<Endpoint>> =
+    let mut comms: Vec<JackComm<Endpoint, S>> =
         handles.into_iter().map(|h| h.join().unwrap()).collect();
 
-    let mut iterate = |comms: &mut Vec<JackComm<Endpoint>>, it: usize| {
+    let mut iterate = |comms: &mut Vec<JackComm<Endpoint, S>>, it: usize| {
         for comm in comms.iter_mut() {
             comm.recv().unwrap();
             {
                 let v = comm.compute_view();
-                v.send[0][0] = it as f64;
-                v.res[0] = 1.0; // never locally converged
+                v.send[0][0] = S::from_f64(it as f64);
+                v.res[0] = S::from_f64(1.0); // never locally converged
             }
             comm.send().unwrap();
             comm.set_local_convergence(false);
@@ -275,10 +298,87 @@ fn jackcomm_async_iteration_is_allocation_free_after_warmup() {
         let steady = c.endpoint().pool().stats();
         assert_eq!(
             steady.allocations, warm,
-            "async JackComm iteration allocated message buffers in steady state: {steady:?}"
+            "async {} JackComm iteration allocated message buffers in steady state: {steady:?}",
+            S::NAME
         );
         assert!(steady.reuses > 0, "sends must run through the pool");
     }
+}
+
+#[test]
+fn jackcomm_async_iteration_is_allocation_free_after_warmup() {
+    jackcomm_async_allocation_free::<f64>();
+}
+
+#[test]
+fn jackcomm_async_iteration_is_allocation_free_after_warmup_f32() {
+    jackcomm_async_allocation_free::<f32>();
+}
+
+/// The library-owned `iterate` loop itself stays on the pooled path: a
+/// fixed-length synchronous run through `JackComm::iterate` performs no
+/// steady-state message-buffer allocations for either payload width.
+fn iterate_loop_allocation_free<S: Scalar>() {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+    let (_w, eps) = World::new(cfg);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
+                let mut comm = JackComm::<_, S>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[8], &[8])
+                    .unwrap()
+                    .with_residual(8, NormKind::Max)
+                    .with_solution(8)
+                    .build_sync();
+                // warm-up run
+                let opts = IterateOpts {
+                    threshold: 0.0,
+                    max_iters: 20,
+                    ..IterateOpts::default()
+                };
+                comm.iterate(&opts, |v| {
+                    v.res[0] = S::from_f64(1.0);
+                    StepOutcome::Continue
+                })
+                .unwrap();
+                let warm = comm.endpoint().pool().stats().allocations;
+                // steady-state run
+                let opts = IterateOpts {
+                    threshold: 0.0,
+                    max_iters: 100,
+                    ..IterateOpts::default()
+                };
+                comm.iterate(&opts, |v| {
+                    v.res[0] = S::from_f64(1.0);
+                    StepOutcome::Continue
+                })
+                .unwrap();
+                (warm, comm.endpoint().pool().stats())
+            })
+        })
+        .collect();
+    for h in handles {
+        let (warm, steady) = h.join().unwrap();
+        assert_eq!(
+            steady.allocations, warm,
+            "{} iterate loop allocated in steady state: {steady:?}",
+            S::NAME
+        );
+    }
+}
+
+#[test]
+fn iterate_loop_is_allocation_free_f64() {
+    iterate_loop_allocation_free::<f64>();
+}
+
+#[test]
+fn iterate_loop_is_allocation_free_f32() {
+    iterate_loop_allocation_free::<f32>();
 }
 
 /// Pools are bounded: a flood of in-flight messages beyond the free-list
