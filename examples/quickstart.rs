@@ -4,26 +4,33 @@
 //! Two ranks each own one half of a 1-D Poisson-like system and exchange
 //! a single boundary value per iteration. The *same* code runs classical
 //! or asynchronous iterations depending on one runtime flag — the
-//! library's headline feature — and, being generic over the payload
-//! [`Scalar`] width, the same program also solves in `f32`.
+//! library's headline feature — and, being generic over both the payload
+//! [`Scalar`] width and the [`Transport`] backend, the same program also
+//! solves in `f32` and over either message substrate: the simulated MPI
+//! world (`sim`, the default) or the real shared-memory ring backend
+//! (`shm`). Nothing below `main` names a backend.
 //!
 //! The Listing-5 init sequence is the typestate builder (misordering it
 //! does not compile), and the Listing-6 loop lives in the library:
 //! [`JackComm::iterate`] drives send/recv/lconv/update_residual, the
 //! closure below is only the compute phase.
 //!
-//! Run:   cargo run --example quickstart            (classical)
-//!        cargo run --example quickstart -- async   (asynchronous)
+//! Run:   cargo run --example quickstart                      (classical, sim)
+//!        cargo run --example quickstart -- async             (asynchronous)
+//!        cargo run --example quickstart -- --transport shm   (shared memory)
+//!        cargo run --example quickstart -- async --transport shm
 
 use jack2::prelude::*;
 use jack2::simmpi::World;
+use jack2::transport::ShmWorld;
 
 /// Solve the 2-unknown system [4 -1; -1 4] x = [5 9] across two ranks,
-/// generic over the scalar width. (Written against the simulated-MPI
-/// backend here; the same program runs over any
-/// `jack2::transport::Transport`.)
-fn solve_pair<S: Scalar>(async_mode: bool, threshold: f64) -> Vec<(usize, S, u64, f64, u64)> {
-    let (_world, eps) = World::homogeneous(2);
+/// generic over the scalar width *and* the transport backend.
+fn solve_pair<S: Scalar, T: Transport + 'static>(
+    eps: Vec<T>,
+    async_mode: bool,
+    threshold: f64,
+) -> Vec<(usize, S, u64, f64, u64)> {
     let handles: Vec<_> = eps
         .into_iter()
         .map(|ep| {
@@ -85,18 +92,44 @@ fn solve_pair<S: Scalar>(async_mode: bool, threshold: f64) -> Vec<(usize, S, u64
     out
 }
 
+/// Build a 2-rank world on the selected backend and solve — the only
+/// place a concrete transport is named.
+fn run_width<S: Scalar>(
+    use_shm: bool,
+    async_mode: bool,
+    threshold: f64,
+) -> Vec<(usize, S, u64, f64, u64)> {
+    if use_shm {
+        let (_world, eps) = ShmWorld::homogeneous(2);
+        solve_pair::<S, _>(eps, async_mode, threshold)
+    } else {
+        let (_world, eps) = World::homogeneous(2);
+        solve_pair::<S, _>(eps, async_mode, threshold)
+    }
+}
+
 fn main() {
-    let async_mode = std::env::args().any(|a| a == "async");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let async_mode = args.iter().any(|a| a == "async");
+    let use_shm = args.iter().any(|a| a == "shm" || a == "--transport=shm")
+        || args
+            .windows(2)
+            .any(|w| w[0] == "--transport" && w[1] == "shm");
     println!(
-        "quickstart: {} iterations on 2 ranks",
-        if async_mode { "asynchronous" } else { "classical" }
+        "quickstart: {} iterations on 2 ranks over the {} transport",
+        if async_mode { "asynchronous" } else { "classical" },
+        if use_shm {
+            "shared-memory ring"
+        } else {
+            "simulated-MPI"
+        }
     );
 
     for (name, rows) in [
-        ("f64", solve_pair::<f64>(async_mode, 1e-10)),
+        ("f64", run_width::<f64>(use_shm, async_mode, 1e-10)),
         // same program, narrower payloads: f32 buffers over the f64 wire
         ("f32", {
-            solve_pair::<f32>(async_mode, 1e-6)
+            run_width::<f32>(use_shm, async_mode, 1e-6)
                 .into_iter()
                 .map(|(r, x, i, n, s)| (r, x as f64, i, n, s))
                 .collect()

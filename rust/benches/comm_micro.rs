@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
 use jack2::simmpi::{NetworkModel, WorldConfig};
-use jack2::transport::Transport;
+use jack2::transport::{ShmWorld, Transport};
 use jack2::util::json::{self, Json};
 
 fn bench_delivery(b: &Bencher) {
@@ -131,6 +131,71 @@ fn bench_pooled_vs_clone(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Pooled round-trip (staged send → drain → recycle) timed identically
+/// over both shipped Transport backends, so the perf trajectory tracks
+/// simmpi *and* the shared-memory ring backend per PR. One JSON row per
+/// (backend, size).
+fn bench_backend_roundtrip(b: &Bencher) -> Vec<Json> {
+    println!("\nbackend comparison: pooled round-trip, simmpi vs shm rings");
+
+    fn roundtrip_ns<T: Transport>(
+        b: &Bencher,
+        label: &str,
+        e0: &mut T,
+        e1: &mut T,
+        size: usize,
+        n_msgs: usize,
+    ) -> f64 {
+        let payload = vec![1.25f64; size];
+        for _ in 0..4 {
+            e0.isend_copy(1, 2, &payload).unwrap();
+            drop(e1.try_match(0, 2).unwrap());
+        }
+        let st = b.run(label, || {
+            for _ in 0..n_msgs {
+                e0.isend_copy(1, 2, &payload).unwrap();
+                drop(e1.try_match(0, 2).unwrap());
+            }
+        });
+        st.mean().as_nanos() as f64 / n_msgs as f64
+    }
+
+    let mut t = Table::new(&["backend", "payload f64s", "ns / msg", "msgs/s"]);
+    let mut rows = Vec::new();
+    for size in [256usize, 4096, 64 * 1024] {
+        let n_msgs = 500;
+        for backend in ["simmpi", "shm"] {
+            let per_msg = if backend == "simmpi" {
+                let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+                let (_w, mut eps) = jack2::simmpi::World::new(cfg);
+                let mut e1 = eps.pop().unwrap();
+                let mut e0 = eps.pop().unwrap();
+                roundtrip_ns(b, &format!("sim {size}"), &mut e0, &mut e1, size, n_msgs)
+            } else {
+                let (_w, mut eps) = ShmWorld::homogeneous(2);
+                let mut e1 = eps.pop().unwrap();
+                let mut e0 = eps.pop().unwrap();
+                roundtrip_ns(b, &format!("shm {size}"), &mut e0, &mut e1, size, n_msgs)
+            };
+            let rate = 1e9 / per_msg.max(1.0);
+            t.row(&[
+                backend.to_string(),
+                size.to_string(),
+                format!("{per_msg:.0}"),
+                format!("{rate:.0}"),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("backend".into(), Json::Str(backend.into()));
+            row.insert("payload_f64s".into(), Json::Num(size as f64));
+            row.insert("ns_per_msg".into(), Json::Num(per_msg));
+            row.insert("msgs_per_sec".into(), Json::Num(rate));
+            rows.push(Json::Obj(row));
+        }
+    }
+    t.print();
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -182,6 +247,7 @@ fn main() {
     println!("comm_micro bench (E5 + pooled transport)");
     bench_delivery(&b);
     let pooled_rows = bench_pooled_vs_clone(&b);
+    let backend_rows = bench_backend_roundtrip(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -191,6 +257,7 @@ fn main() {
         Json::Str("cargo bench --bench comm_micro".into()),
     );
     doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
+    doc.insert("backend_roundtrip".into(), Json::Arr(backend_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

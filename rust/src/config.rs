@@ -65,6 +65,36 @@ impl Backend {
     }
 }
 
+/// Which message transport carries the halo exchange and the protocols.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Simulated MPI world (`simmpi`): network model, latency, jitter,
+    /// faults. The default — all network-shaped experiment knobs apply.
+    Sim,
+    /// Real shared-memory backend (`transport::shm`): bounded lock-free
+    /// SPSC ring per directed link. The network-model knobs
+    /// (`net_latency_us`, `net_jitter`, bandwidth, spikes) do not apply;
+    /// `rank_speed` heterogeneity still does.
+    Shm,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Shm => "shm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" | "simmpi" => Ok(TransportKind::Sim),
+            "shm" | "shared-memory" | "shared_memory" => Ok(TransportKind::Shm),
+            _ => Err(Error::Config(format!("unknown transport {s:?}"))),
+        }
+    }
+}
+
 /// Full description of one solve experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -86,6 +116,8 @@ pub struct ExperimentConfig {
     pub scheme: Scheme,
     /// Compute backend.
     pub backend: Backend,
+    /// Message transport (simulated MPI vs shared-memory rings).
+    pub transport: TransportKind,
     /// Max iterations per time step (safety valve).
     pub max_iters: u64,
     /// Network base latency in µs.
@@ -144,6 +176,7 @@ impl Default for ExperimentConfig {
             threshold: 1e-6,
             scheme: Scheme::Overlapping,
             backend: Backend::Native,
+            transport: TransportKind::Sim,
             max_iters: 200_000,
             net_latency_us: 20,
             net_jitter: 0.1,
@@ -195,6 +228,7 @@ impl ExperimentConfig {
         m.insert("threshold".into(), Json::Num(self.threshold));
         m.insert("scheme".into(), Json::Str(self.scheme.name().into()));
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
+        m.insert("transport".into(), Json::Str(self.transport.name().into()));
         m.insert("max_iters".into(), Json::Num(self.max_iters as f64));
         m.insert(
             "net_latency_us".into(),
@@ -270,6 +304,9 @@ impl ExperimentConfig {
         if let Some(s) = v.get("backend").and_then(|x| x.as_str()) {
             c.backend = Backend::parse(s)?;
         }
+        if let Some(s) = v.get("transport").and_then(|x| x.as_str()) {
+            c.transport = TransportKind::parse(s)?;
+        }
         if let Some(x) = v.get("max_iters").and_then(|x| x.as_f64()) {
             c.max_iters = x as u64;
         }
@@ -343,5 +380,20 @@ mod tests {
         assert_eq!(Scheme::parse("async").unwrap(), Scheme::Asynchronous);
         assert!(Scheme::parse("nope").is_err());
         assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+    }
+
+    #[test]
+    fn transport_kind_parses_and_roundtrips() {
+        assert_eq!(TransportKind::parse("sim").unwrap(), TransportKind::Sim);
+        assert_eq!(TransportKind::parse("simmpi").unwrap(), TransportKind::Sim);
+        assert_eq!(TransportKind::parse("shm").unwrap(), TransportKind::Shm);
+        assert!(TransportKind::parse("rdma").is_err());
+        let c = ExperimentConfig {
+            transport: TransportKind::Shm,
+            ..ExperimentConfig::default()
+        };
+        let s = json::write(&c.to_json());
+        let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(d.transport, TransportKind::Shm);
     }
 }

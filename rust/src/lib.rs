@@ -28,13 +28,19 @@
 //!   [`transport::Transport`] trait (non-blocking sends, probing, pooled
 //!   buffers) that everything above the substrate is written against, and
 //!   the recycling [`transport::BufferPool`] / [`transport::MsgBuf`] pair
-//!   that makes the steady-state iteration path allocation-free.
+//!   that makes the steady-state iteration path allocation-free. The
+//!   contract is executable: every backend passes the shared conformance
+//!   suite in `rust/tests/transport_conformance.rs`.
 //! * **[`simmpi`]** — the default [`transport::Transport`] backend. The
 //!   paper builds on MPI; we provide an in-process simulated MPI with
 //!   non-blocking point-to-point requests, a configurable network model
 //!   (latency, bandwidth, jitter, per-link scaling) and per-rank
 //!   compute-speed heterogeneity, so cluster-scale effects are
 //!   reproducible on one host.
+//! * **[`transport::shm`]** — the second backend: a real shared-memory
+//!   transport (one bounded lock-free SPSC ring per directed link,
+//!   backpressure surfaced through pending send handles), selectable end
+//!   to end via `ExperimentConfig::transport` / `--transport shm`.
 //! * **[`graph`]** — logical communication graphs (explicit incoming and
 //!   outgoing link lists, exactly the paper's Listing 1).
 //! * **[`jack`]** — the JACK2 library proper: the typed session front-end

@@ -4,7 +4,8 @@
 //!
 //! ```text
 //! repro solve      [--grid 2x2x2] [--n 16] [--scheme sync|async|trivial]
-//!                  [--backend native|xla] [--steps N] [--threshold 1e-6]
+//!                  [--backend native|xla] [--transport sim|shm]
+//!                  [--steps N] [--threshold 1e-6]
 //!                  [--latency-us 20] [--jitter 0.1] [--seed S]
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
 //! repro table1     [--backend native|xla] [--fast]          (E1)
@@ -21,7 +22,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use jack2::config::{Backend, ExperimentConfig, Scheme};
+use jack2::config::{Backend, ExperimentConfig, Scheme, TransportKind};
 use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
@@ -135,6 +136,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
     if let Some(b) = flags.get("backend") {
         cfg.backend = Backend::parse(b)?;
     }
+    if let Some(t) = flags.get("transport") {
+        cfg.transport = TransportKind::parse(t)?;
+    }
     cfg.time_steps = get(flags, "steps", cfg.time_steps)?;
     cfg.threshold = get(flags, "threshold", cfg.threshold)?;
     cfg.net_latency_us = get(flags, "latency-us", cfg.net_latency_us)?;
@@ -181,9 +185,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
     println!(
-        "solve: {} backend={} grid={:?} n={} -> {} steps",
+        "solve: {} backend={} transport={} grid={:?} n={} -> {} steps",
         cfg.scheme.name(),
         cfg.backend.name(),
+        cfg.transport.name(),
         cfg.process_grid,
         cfg.n,
         rep.steps.len()

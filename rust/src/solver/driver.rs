@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 use super::backend::ComputeBackend;
 use super::native::NativeBackend;
 use super::xla_backend::XlaBackend;
-use crate::config::{Backend, ExperimentConfig, Scheme};
+use crate::config::{Backend, ExperimentConfig, Scheme, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::jack::{AsyncConfig, ComputeView, IterateOpts, JackComm, NormKind, StepOutcome};
@@ -17,7 +17,7 @@ use crate::metrics::RankMetrics;
 use crate::problem::{extract_face, idx3, ConvDiff, Face, Partition3D, SubDomain};
 use crate::runtime::Engine;
 use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
-use crate::transport::Transport;
+use crate::transport::{ShmConfig, ShmWorld, Transport};
 
 /// Aggregated per-time-step results.
 #[derive(Debug, Clone)]
@@ -87,23 +87,6 @@ pub fn solve(cfg: &ExperimentConfig) -> Result<SolveReport> {
     let graphs = part.comm_graphs()?;
     let p = part.world_size();
 
-    let mut network = NetworkModel::uniform(cfg.net_latency_us, cfg.net_jitter);
-    network.per_byte = Duration::from_nanos(1);
-    if cfg.net_bandwidth > 0.0 {
-        network.bandwidth = Some(cfg.net_bandwidth);
-    }
-    if cfg.net_spike_every > 0 {
-        network.spike_every = cfg.net_spike_every;
-        network.spike = Duration::from_micros(cfg.net_spike_us);
-    }
-    let world_cfg = WorldConfig {
-        size: p,
-        network,
-        seed: cfg.seed,
-        rank_speed: cfg.rank_speed.clone(),
-    };
-    let (_world, eps) = World::new(world_cfg);
-
     // XLA backend: compile executables once on the main thread, clone the
     // handles into the rank threads (PJRT execution is thread-safe).
     let engine = match cfg.backend {
@@ -132,12 +115,10 @@ pub fn solve(cfg: &ExperimentConfig) -> Result<SolveReport> {
         }
     }
 
-    let t0 = Instant::now();
-    let mut handles = Vec::with_capacity(p);
-    for (ep, graph) in eps.into_iter().zip(graphs) {
-        let rank = ep.rank();
+    let mut backends: Vec<Box<dyn ComputeBackend>> = Vec::with_capacity(p);
+    for rank in 0..p {
         let sub = part.subdomain(rank);
-        let backend: Box<dyn ComputeBackend> = match cfg.backend {
+        backends.push(match cfg.backend {
             Backend::Native => Box::new(NativeBackend::new(sub.dims)),
             Backend::Xla => {
                 let (exe1, exe_k) = exe_cache.get(&sub.dims).expect("precompiled");
@@ -147,21 +128,42 @@ pub fn solve(cfg: &ExperimentConfig) -> Result<SolveReport> {
                 }
                 Box::new(be)
             }
-        };
-        let cfg = cfg.clone();
-        let problem = problem.clone();
-        let part = part.clone();
-        handles.push(std::thread::spawn(move || {
-            run_rank(ep, graph, sub, part, problem, cfg, backend)
-        }));
+        });
     }
 
-    let mut outcomes = Vec::with_capacity(p);
-    for h in handles {
-        outcomes.push(h.join().map_err(|_| {
-            Error::Protocol("rank thread panicked (see stderr)".into())
-        })??);
-    }
+    // Everything below the endpoint construction is generic over the
+    // `Transport`: the same per-rank solve runs on the simulated MPI
+    // world or on the shared-memory ring backend.
+    let t0 = Instant::now();
+    let outcomes = match cfg.transport {
+        TransportKind::Sim => {
+            let mut network = NetworkModel::uniform(cfg.net_latency_us, cfg.net_jitter);
+            network.per_byte = Duration::from_nanos(1);
+            if cfg.net_bandwidth > 0.0 {
+                network.bandwidth = Some(cfg.net_bandwidth);
+            }
+            if cfg.net_spike_every > 0 {
+                network.spike_every = cfg.net_spike_every;
+                network.spike = Duration::from_micros(cfg.net_spike_us);
+            }
+            let world_cfg = WorldConfig {
+                size: p,
+                network,
+                seed: cfg.seed,
+                rank_speed: cfg.rank_speed.clone(),
+            };
+            let (_world, eps) = World::new(world_cfg);
+            spawn_ranks(eps, graphs, &part, &problem, cfg, backends)?
+        }
+        TransportKind::Shm => {
+            // Real transport: no network model to configure — latency is
+            // whatever the hardware does. Heterogeneity still applies.
+            let shm_cfg =
+                ShmConfig::homogeneous(p).with_rank_speed(cfg.rank_speed.clone());
+            let (_world, eps) = ShmWorld::new(shm_cfg);
+            spawn_ranks(eps, graphs, &part, &problem, cfg, backends)?
+        }
+    };
     let total_wall = t0.elapsed();
 
     // Aggregate per-step stats (max over ranks).
@@ -217,6 +219,37 @@ pub fn assemble_global<'a>(
         }
     }
     out
+}
+
+/// Spawn one worker thread per rank and join their outcomes. Generic
+/// over the [`Transport`]: [`solve`] composes a concrete world, this
+/// function and everything it drives never name one.
+fn spawn_ranks<T: Transport + 'static>(
+    eps: Vec<T>,
+    graphs: Vec<CommGraph>,
+    part: &Partition3D,
+    problem: &ConvDiff,
+    cfg: &ExperimentConfig,
+    backends: Vec<Box<dyn ComputeBackend>>,
+) -> Result<Vec<RankOutcome>> {
+    let mut handles = Vec::with_capacity(eps.len());
+    for ((ep, graph), backend) in eps.into_iter().zip(graphs).zip(backends) {
+        let rank = ep.rank();
+        let sub = part.subdomain(rank);
+        let cfg = cfg.clone();
+        let problem = problem.clone();
+        let part = part.clone();
+        handles.push(std::thread::spawn(move || {
+            run_rank(ep, graph, sub, part, problem, cfg, backend)
+        }));
+    }
+    let mut outcomes = Vec::with_capacity(handles.len());
+    for h in handles {
+        outcomes.push(h.join().map_err(|_| {
+            Error::Protocol("rank thread panicked (see stderr)".into())
+        })??);
+    }
+    Ok(outcomes)
 }
 
 /// Per-rank worker: full time-stepped solve. Generic over the

@@ -20,24 +20,48 @@
 //!   allocations (see `tests/transport_pool.rs` for the enforced
 //!   invariant and `benches/comm_micro.rs` for the measured effect).
 //!
-//! ## Writing a new backend
+//! ## Adding a backend
 //!
 //! Implement [`Transport`] (and [`SendHandle`] for your send-request
-//! type). The contract mirrors the MPI subset JACK2 consumes:
+//! type), then instantiate the backend-parameterized **conformance
+//! suite** in `rust/tests/transport_conformance.rs` for it
+//! (`conformance_suite!(your_backend, YourBackend);` after implementing
+//! the suite's small `TestBackend` factory trait). The Transport
+//! contract is executable, not prose: a backend that passes the suite
+//! runs the whole stack — `jack`, the collectives, the solver driver,
+//! the examples — unchanged. The suite pins down the behaviours the
+//! JACK2 core relies on:
 //!
-//! * `isend` is non-blocking and *moves* the payload; the returned
-//!   [`SendHandle`] completes when the message has arrived.
-//! * delivery is non-overtaking per `(source, tag)` pair;
-//! * `try_match` / `recv` / `wait_any` surface arrived messages as
-//!   [`MsgBuf`]s whose storage, once dropped, is recycled — a backend
-//!   should route that storage back to the pool of the endpoint that
-//!   allocated it (or adopt it locally when the origin is unknown).
+//! * **non-overtaking delivery** per `(source, tag)` pair (messages with
+//!   *different* tags may overtake each other);
+//! * **moved payloads**: `isend` is non-blocking and moves the
+//!   [`MsgBuf`] — the receiver observes the sender's allocation, never a
+//!   copy; the returned [`SendHandle`] completes when the message has
+//!   arrived at the destination (a pending handle marks the channel busy
+//!   for Algorithm 6, and discarded sends must touch no pool storage);
+//! * **pooled receives**: `try_match` / `recv` / `wait_any` surface
+//!   arrived messages as [`MsgBuf`]s whose storage, once dropped, is
+//!   recycled to the pool of the endpoint that staged it (raw `Vec`
+//!   payloads are adopted by the receiver's pool instead);
+//! * **zero steady-state allocations** on the `isend_copy` /
+//!   `isend_scalars` staging paths once the pools are warm;
+//! * `wait_any` multiplexing, blocking `recv` timeouts, `probe_count`,
+//!   zero-size messages, and `f32` payload widening.
+//!
+//! Two implementations ship: [`crate::simmpi::Endpoint`] (the default —
+//! a simulated MPI world with a configurable network model) and
+//! [`shm::ShmEndpoint`] (a real shared-memory backend: one bounded
+//! lock-free SPSC ring per directed link, with backpressure surfaced
+//! through its send handles). Candidate next backends: a real MPI
+//! binding, RDMA.
 
 pub mod msgbuf;
 pub mod pool;
+pub mod shm;
 
 pub use msgbuf::MsgBuf;
 pub use pool::{BufferPool, PoolStats};
+pub use shm::{ShmConfig, ShmEndpoint, ShmSendHandle, ShmWorld};
 
 use std::fmt;
 use std::time::Duration;

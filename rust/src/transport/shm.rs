@@ -1,0 +1,983 @@
+//! # shm — real shared-memory [`Transport`] backend
+//!
+//! The second implementation of the [`Transport`] trait (ROADMAP: "a
+//! second `Transport` implementation to prove the trait is genuinely
+//! backend-agnostic"). Where [`crate::simmpi`] *simulates* an
+//! interconnect (mutex-guarded mailboxes plus a latency model), this
+//! module is an actual shared-memory transport: every directed link
+//! `(src → dst)` owns one bounded **lock-free SPSC ring buffer** with
+//! atomic head/tail counters and `Acquire`/`Release` ordering. The ring
+//! itself is the only message path and its pop side never takes a lock;
+//! the push side runs under a light per-link mutex (uncontended in
+//! steady state — it exists to serialize the sender with handle-driven
+//! overflow flushes), and senders additionally tap the receiver's
+//! arrival condvar to wake blocked waits.
+//!
+//! Design, link by link:
+//!
+//! * **Ring** ([`SpscRing`]): a fixed array of slots indexed by two
+//!   monotonic counters. The producer writes a slot, then publishes it
+//!   with a `Release` store of `tail`; the consumer observes it with an
+//!   `Acquire` load, reads the slot, then retires it with a `Release`
+//!   store of `head`. A slot is therefore owned by exactly one side at
+//!   any instant, with no locks and no ABA window.
+//! * **Backpressure**: capacity is bounded
+//!   ([`ShmConfig::ring_capacity`]). When a ring is full, `isend` does
+//!   not block and does not fail — the packet parks in a per-link
+//!   overflow queue and the returned [`ShmSendHandle`] stays *pending*
+//!   until the packet actually enters the ring. That pending handle is
+//!   exactly what Algorithm 6 reads as "channel busy", so the
+//!   send-discard fast path engages precisely when the bounded link is
+//!   congested (and, as everywhere else, a discarded send touches no
+//!   storage). The overflow queue is drained opportunistically by the
+//!   sender's next transport call, by [`SendHandle::wait`], and by the
+//!   receiver's own drains, so parked messages always make progress; a
+//!   light per-link mutex serializes those producer-side paths (the
+//!   ring's pop side never takes it).
+//! * **Pooling**: identical contract to `simmpi` — sends stage through
+//!   the sending endpoint's [`BufferPool`], payloads travel as moved
+//!   [`MsgBuf`]s (zero-copy: the receiver sees the sender's allocation),
+//!   and dropping a drained message returns the storage to the pool of
+//!   the endpoint that staged it. Raw `Vec` payloads are adopted by the
+//!   receiver's pool.
+//! * **Blocking waits**: each endpoint owns an arrival [`Condvar`];
+//!   producers signal it after publishing, so `recv`/`wait_any` sleep
+//!   between arrivals instead of spinning. The signal carries no data —
+//!   the rings remain the only message path.
+//!
+//! The backend is validated by the same backend-parameterized
+//! conformance suite as `simmpi` (`rust/tests/transport_conformance.rs`)
+//! and by the randomized interleaving stress tests in
+//! `rust/tests/transport_stress.rs`.
+
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::collections::VecDeque;
+use std::fmt;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{BufferPool, MsgBuf, Rank, SendHandle, Tag, Transport};
+use crate::error::{Error, Result};
+
+/// Default bounded capacity (packets) of each directed link's ring.
+const DEFAULT_RING_CAPACITY: usize = 256;
+
+/// One in-flight message.
+struct Packet {
+    tag: Tag,
+    data: MsgBuf,
+}
+
+// ---------------------------------------------------------------------
+// Lock-free bounded SPSC ring
+// ---------------------------------------------------------------------
+
+/// Bounded single-producer single-consumer ring buffer.
+///
+/// `head` and `tail` are *monotonic* packet counters (never wrapped);
+/// the slot of packet `n` is `n % capacity`. Invariant:
+/// `head <= tail <= head + capacity`. The producer side is driven under
+/// the owning [`Link`]'s `tx` mutex (which serializes the sender thread
+/// with handle-driven overflow flushes); the consumer side is driven
+/// only by the receiving endpoint's thread. Each side writes only its
+/// own counter, so every push/pop is one slot access plus one atomic
+/// store — no locks, no CAS loops.
+struct SpscRing {
+    slots: Box<[UnsafeCell<MaybeUninit<Packet>>]>,
+    /// Packets consumed so far (written by the consumer only).
+    head: AtomicU64,
+    /// Packets published so far (written by the producer side only).
+    tail: AtomicU64,
+}
+
+// SAFETY: the ring is shared between exactly one producer side (the
+// sender, serialized by `Link::tx`) and one consumer (the receiving
+// endpoint, which is `!Sync` and driven by a single thread). A slot is
+// written only while vacant (tail - head < capacity guarantees the
+// consumer has retired it) and read only after the producer's `Release`
+// publish, so no slot is ever accessed concurrently from both sides.
+unsafe impl Send for SpscRing {}
+unsafe impl Sync for SpscRing {}
+
+impl SpscRing {
+    fn new(capacity: usize) -> Self {
+        let slots: Box<[UnsafeCell<MaybeUninit<Packet>>]> = (0..capacity.max(1))
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        SpscRing {
+            slots,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: publish `p`, or hand it back if the ring is full.
+    /// Caller must hold the link's `tx` lock.
+    fn try_push(&self, p: Packet) -> std::result::Result<(), Packet> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail - head >= self.slots.len() as u64 {
+            return Err(p);
+        }
+        let idx = (tail % self.slots.len() as u64) as usize;
+        // SAFETY: tail - head < capacity, so the consumer has retired any
+        // previous occupant of this slot (its Release store of `head`
+        // happened-before our Acquire load above) and will not read it
+        // until the Release store of `tail` below publishes it.
+        unsafe { (*self.slots[idx].get()).write(p) };
+        self.tail.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: take the oldest published packet, if any.
+    fn try_pop(&self) -> Option<Packet> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let idx = (head % self.slots.len() as u64) as usize;
+        // SAFETY: head < tail, so the producer's Release store of `tail`
+        // published this slot and the Acquire load above makes its
+        // contents visible; the producer will not rewrite it until our
+        // Release store of `head` below retires it.
+        let p = unsafe { (*self.slots[idx].get()).assume_init_read() };
+        self.head.store(head + 1, Ordering::Release);
+        Some(p)
+    }
+}
+
+impl Drop for SpscRing {
+    fn drop(&mut self) {
+        // Exclusive access at drop: retire any packets still in flight so
+        // their MsgBuf storage frees (or recycles) normally.
+        while self.try_pop().is_some() {}
+    }
+}
+
+// ---------------------------------------------------------------------
+// Directed link: ring + overflow
+// ---------------------------------------------------------------------
+
+/// Producer-side mutable state of a link (guarded by [`Link::tx`]).
+struct LinkTx {
+    /// Packets that found the ring full, oldest first, awaiting space.
+    overflow: VecDeque<Packet>,
+    /// Sequence number assigned to the next accepted message. Messages
+    /// enter the ring strictly in sequence order, so message `s` has
+    /// been published exactly when `ring.tail > s`.
+    next_seq: u64,
+}
+
+/// One directed communication link (`src → dst`).
+struct Link {
+    ring: SpscRing,
+    tx: Mutex<LinkTx>,
+    /// Number of packets currently parked in `overflow` (read lock-free
+    /// by the receiver's drain to decide whether flushing is worth the
+    /// lock).
+    parked: AtomicU64,
+}
+
+impl Link {
+    fn new(ring_capacity: usize) -> Self {
+        Link {
+            ring: SpscRing::new(ring_capacity),
+            tx: Mutex::new(LinkTx {
+                overflow: VecDeque::new(),
+                next_seq: 0,
+            }),
+            parked: AtomicU64::new(0),
+        }
+    }
+
+    /// Move parked packets into the ring, preserving FIFO order. Caller
+    /// holds the `tx` lock. Returns how many packets were published.
+    fn flush(&self, tx: &mut LinkTx) -> usize {
+        let mut moved = 0;
+        while let Some(p) = tx.overflow.pop_front() {
+            match self.ring.try_push(p) {
+                Ok(()) => {
+                    self.parked.fetch_sub(1, Ordering::Release);
+                    moved += 1;
+                }
+                Err(p) => {
+                    tx.overflow.push_front(p);
+                    break;
+                }
+            }
+        }
+        moved
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arrival signalling (wakeups only; never carries data)
+// ---------------------------------------------------------------------
+
+/// Per-endpoint arrival notification: producers bump the counter after
+/// publishing into any ring destined to this endpoint; blocked receives
+/// sleep on the condvar instead of spinning. The counter lives inside
+/// the mutex so a bump between a receiver's drain and its wait can never
+/// be missed.
+#[derive(Default)]
+struct ArrivalSignal {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl ArrivalSignal {
+    fn current(&self) -> u64 {
+        *self.seq.lock().unwrap()
+    }
+
+    fn notify(&self) {
+        let mut s = self.seq.lock().unwrap();
+        *s += 1;
+        self.cv.notify_all();
+    }
+
+    /// Sleep until the counter moves past `since` or `timeout` elapses.
+    fn wait_for_change(&self, since: u64, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.seq.lock().unwrap();
+        while *s == since {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (g, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = g;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// World
+// ---------------------------------------------------------------------
+
+/// Global message counters (lock-free; reporting only).
+#[derive(Default)]
+struct Metrics {
+    msgs_sent: AtomicU64,
+    bytes_sent: AtomicU64,
+    msgs_delivered: AtomicU64,
+}
+
+/// Read-only snapshot of [`ShmWorld`] counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShmMetricsSnapshot {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_delivered: u64,
+}
+
+struct Shared {
+    size: usize,
+    /// `links[src * size + dst]`.
+    links: Box<[Arc<Link>]>,
+    /// Arrival signal of each destination rank.
+    signals: Box<[Arc<ArrivalSignal>]>,
+    metrics: Metrics,
+}
+
+impl Shared {
+    fn link(&self, src: Rank, dst: Rank) -> &Arc<Link> {
+        &self.links[src * self.size + dst]
+    }
+}
+
+/// Configuration of a shared-memory world.
+#[derive(Debug, Clone)]
+pub struct ShmConfig {
+    /// Number of ranks.
+    pub size: usize,
+    /// Bounded capacity (packets) of each directed link's ring. Sends
+    /// beyond it park in overflow and report a busy channel through
+    /// their [`ShmSendHandle`] until the receiver catches up.
+    pub ring_capacity: usize,
+    /// Relative compute speed of each rank (1.0 = nominal; empty =
+    /// homogeneous). Consumed by the solver drivers, exactly as
+    /// [`crate::simmpi::WorldConfig::rank_speed`].
+    pub rank_speed: Vec<f64>,
+}
+
+impl ShmConfig {
+    pub fn homogeneous(size: usize) -> Self {
+        ShmConfig {
+            size,
+            ring_capacity: DEFAULT_RING_CAPACITY,
+            rank_speed: Vec::new(),
+        }
+    }
+
+    pub fn with_ring_capacity(mut self, capacity: usize) -> Self {
+        self.ring_capacity = capacity.max(1);
+        self
+    }
+
+    pub fn with_rank_speed(mut self, speed: Vec<f64>) -> Self {
+        self.rank_speed = speed;
+        self
+    }
+
+    pub fn speed_of(&self, rank: Rank) -> f64 {
+        self.rank_speed.get(rank).copied().unwrap_or(1.0)
+    }
+}
+
+/// A shared-memory world. Create once, hand one [`ShmEndpoint`] to each
+/// rank thread (the same shape as [`crate::simmpi::World`]).
+pub struct ShmWorld {
+    shared: Arc<Shared>,
+    config: ShmConfig,
+}
+
+impl ShmWorld {
+    /// Build a world and its endpoints. `endpoints[i]` belongs to rank `i`.
+    pub fn new(config: ShmConfig) -> (ShmWorld, Vec<ShmEndpoint>) {
+        assert!(config.size > 0, "world size must be positive");
+        let size = config.size;
+        let links: Box<[Arc<Link>]> = (0..size * size)
+            .map(|_| Arc::new(Link::new(config.ring_capacity)))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let signals: Box<[Arc<ArrivalSignal>]> = (0..size)
+            .map(|_| Arc::new(ArrivalSignal::default()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let shared = Arc::new(Shared {
+            size,
+            links,
+            signals,
+            metrics: Metrics::default(),
+        });
+        let endpoints = (0..size)
+            .map(|rank| ShmEndpoint {
+                rank,
+                shared: shared.clone(),
+                speed: config.speed_of(rank),
+                pool: BufferPool::new(),
+                rx: RefCell::new((0..size).map(|_| VecDeque::new()).collect()),
+                rr: Cell::new(0),
+            })
+            .collect();
+        (ShmWorld { shared, config }, endpoints)
+    }
+
+    /// Convenience constructor for a homogeneous world with the default
+    /// ring capacity.
+    pub fn homogeneous(size: usize) -> (ShmWorld, Vec<ShmEndpoint>) {
+        ShmWorld::new(ShmConfig::homogeneous(size))
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    pub fn config(&self) -> &ShmConfig {
+        &self.config
+    }
+
+    /// Snapshot the global message counters.
+    pub fn metrics(&self) -> ShmMetricsSnapshot {
+        ShmMetricsSnapshot {
+            msgs_sent: self.shared.metrics.msgs_sent.load(Ordering::Relaxed),
+            bytes_sent: self.shared.metrics.bytes_sent.load(Ordering::Relaxed),
+            msgs_delivered: self.shared.metrics.msgs_delivered.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Send handle
+// ---------------------------------------------------------------------
+
+/// Completion handle for a shared-memory send.
+///
+/// The message is *complete* once it has entered the destination ring
+/// (the shared-memory analogue of "arrived at the destination mailbox").
+/// While the bounded ring is full the handle stays pending — the
+/// backpressure signal Algorithm 6 reads as a busy channel.
+pub struct ShmSendHandle {
+    link: Arc<Link>,
+    signal: Arc<ArrivalSignal>,
+    seq: u64,
+    bytes: usize,
+}
+
+impl ShmSendHandle {
+    fn published(&self) -> bool {
+        self.link.ring.tail.load(Ordering::Acquire) > self.seq
+    }
+}
+
+impl fmt::Debug for ShmSendHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShmSendHandle")
+            .field("seq", &self.seq)
+            .field("bytes", &self.bytes)
+            .field("published", &self.published())
+            .finish()
+    }
+}
+
+impl SendHandle for ShmSendHandle {
+    fn test(&self) -> bool {
+        self.published()
+    }
+
+    fn wait(&self) {
+        // Self-service flushing: the waiting thread pulls parked packets
+        // into the ring as the receiver frees space, so `wait` cannot
+        // deadlock on its own unflushed overflow. If the ring stays full
+        // the receiver is genuinely not consuming — block politely.
+        loop {
+            if self.published() {
+                return;
+            }
+            let moved = {
+                let mut tx = self.link.tx.lock().unwrap();
+                self.link.flush(&mut tx)
+            };
+            if moved > 0 {
+                self.signal.notify();
+                continue;
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+// ---------------------------------------------------------------------
+// Endpoint
+// ---------------------------------------------------------------------
+
+/// One rank's shared-memory endpoint.
+///
+/// `Send` but `!Sync` (interior receive lanes in a `RefCell`), matching
+/// the single-threaded-per-rank usage JACK2 assumes — move it into the
+/// rank's worker thread.
+///
+/// Like [`crate::simmpi::Endpoint`], each endpoint owns a
+/// [`BufferPool`]; pooled payloads keep it as their recycling
+/// destination across the wire, raw `Vec` payloads are adopted by the
+/// receiver's pool.
+pub struct ShmEndpoint {
+    rank: Rank,
+    shared: Arc<Shared>,
+    speed: f64,
+    pool: BufferPool,
+    /// Per-source FIFO lanes of dequeued-but-unmatched packets. The ring
+    /// is drained into these on every receive-side call, so tag matching
+    /// (and MPI's "different tags may overtake" rule) never blocks the
+    /// ring itself.
+    rx: RefCell<Vec<VecDeque<Packet>>>,
+    /// Round-robin start index for `wait_any` (fairness across pairs).
+    rr: Cell<usize>,
+}
+
+impl ShmEndpoint {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.shared.size
+    }
+
+    /// Relative compute speed of this rank (see [`ShmConfig::rank_speed`]).
+    pub fn speed(&self) -> f64 {
+        self.speed
+    }
+
+    /// This endpoint's message-buffer pool.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Adopt an arrived payload: raw `Vec` messages join this endpoint's
+    /// pool; pooled messages keep their origin pool.
+    fn adopt(&self, mut buf: MsgBuf) -> MsgBuf {
+        buf.attach_pool_if_absent(&self.pool);
+        buf
+    }
+
+    /// Pull everything currently deliverable from `src`'s ring (and any
+    /// parked overflow behind it) into the local lane.
+    fn drain(&self, src: Rank) {
+        let link = self.shared.link(src, self.rank);
+        let mut rx = self.rx.borrow_mut();
+        let lane = &mut rx[src];
+        loop {
+            while let Some(p) = link.ring.try_pop() {
+                lane.push_back(p);
+            }
+            // Ring drained; pull parked overflow through it so messages
+            // arrive even if the sender never calls into the transport
+            // again. `moved == 0` means a concurrent producer refilled
+            // the ring — it will notify, so breaking cannot strand a
+            // packet.
+            if link.parked.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            let moved = {
+                let mut tx = link.tx.lock().unwrap();
+                link.flush(&mut tx)
+            };
+            if moved == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Immediate poll shared by `try_match` / `recv` / `wait_any`.
+    fn poll_match(&self, src: Rank, tag: Tag) -> Option<MsgBuf> {
+        self.drain(src);
+        let mut rx = self.rx.borrow_mut();
+        let lane = &mut rx[src];
+        let i = lane.iter().position(|p| p.tag == tag)?;
+        let p = lane.remove(i).expect("index valid");
+        self.shared
+            .metrics
+            .msgs_delivered
+            .fetch_add(1, Ordering::Relaxed);
+        Some(self.adopt(p.data))
+    }
+
+    /// Non-blocking send: the payload moves into the destination ring
+    /// (or, when the bounded ring is full, parks in the link's overflow
+    /// queue — the returned handle then stays pending until space frees
+    /// up, which is the backpressure signal Algorithm 6 consumes).
+    pub fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<ShmSendHandle> {
+        let data = data.into();
+        if dst >= self.shared.size {
+            return Err(Error::Transport(format!(
+                "isend to rank {dst} out of range (world size {})",
+                self.shared.size
+            )));
+        }
+        let bytes = data.len() * std::mem::size_of::<f64>();
+        let link = self.shared.link(self.rank, dst).clone();
+        let seq = {
+            let mut tx = link.tx.lock().unwrap();
+            // Keep FIFO order: older parked packets go first.
+            link.flush(&mut tx);
+            let seq = tx.next_seq;
+            tx.next_seq += 1;
+            let packet = Packet { tag, data };
+            if tx.overflow.is_empty() {
+                if let Err(packet) = link.ring.try_push(packet) {
+                    tx.overflow.push_back(packet);
+                    link.parked.fetch_add(1, Ordering::Release);
+                }
+            } else {
+                tx.overflow.push_back(packet);
+                link.parked.fetch_add(1, Ordering::Release);
+            }
+            seq
+        };
+        self.shared.metrics.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .metrics
+            .bytes_sent
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        let signal = self.shared.signals[dst].clone();
+        signal.notify();
+        Ok(ShmSendHandle {
+            link,
+            signal,
+            seq,
+            bytes,
+        })
+    }
+
+    /// Immediate poll: take the oldest `(src, tag)` message, if any.
+    pub fn try_match(&self, src: Rank, tag: Tag) -> Option<MsgBuf> {
+        if src >= self.shared.size {
+            return None;
+        }
+        self.poll_match(src, tag)
+    }
+
+    /// Blocking receive of the oldest `(src, tag)` message, with an
+    /// optional timeout.
+    pub fn recv(&self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        if src >= self.shared.size {
+            return Err(Error::Transport(format!(
+                "recv from rank {src} out of range (world size {})",
+                self.shared.size
+            )));
+        }
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let signal = &self.shared.signals[self.rank];
+        loop {
+            // Read the arrival counter *before* polling: a publish after
+            // the poll bumps it past `observed`, so the wait below
+            // returns immediately instead of missing the wakeup.
+            let observed = signal.current();
+            if let Some(m) = self.poll_match(src, tag) {
+                return Ok(m);
+            }
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    return Err(Error::Transport(format!(
+                        "timeout waiting for (src={src}, tag={tag:#x}) at rank {}",
+                        self.rank
+                    )));
+                }
+            }
+            // The observed-counter protocol makes the condvar wakeup
+            // sufficient (every publish path notifies after bumping the
+            // counter); the coarse tick is belt-and-braces against a
+            // lost wakeup ever hanging a solve, not the wakeup
+            // mechanism — idle blocked ranks wake at ~20 Hz, not 200.
+            let tick = Duration::from_millis(50);
+            let wait = match deadline {
+                Some(dl) => dl.saturating_duration_since(Instant::now()).min(tick),
+                None => tick,
+            };
+            signal.wait_for_change(observed, wait.max(Duration::from_micros(1)));
+        }
+    }
+
+    /// Blocking multiplexed wait: the first available message matching
+    /// any of `pairs`, or `None` on timeout. Scans round-robin from the
+    /// pair after the previous hit, so concurrent busy lanes cannot
+    /// starve each other.
+    pub fn wait_any(&self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        if pairs.is_empty() {
+            return None;
+        }
+        let deadline = Instant::now() + timeout;
+        let signal = &self.shared.signals[self.rank];
+        loop {
+            let observed = signal.current();
+            let start = self.rr.get() % pairs.len();
+            for k in 0..pairs.len() {
+                let i = (start + k) % pairs.len();
+                let (src, tag) = pairs[i];
+                if src >= self.shared.size {
+                    continue;
+                }
+                if let Some(m) = self.poll_match(src, tag) {
+                    self.rr.set((i + 1) % pairs.len());
+                    return Some((i, m));
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            // Same coarse safety tick as `recv`: the notify protocol is
+            // the real wakeup path.
+            let wait = (deadline - now)
+                .min(Duration::from_millis(50))
+                .max(Duration::from_micros(1));
+            signal.wait_for_change(observed, wait);
+        }
+    }
+
+    /// Count of deliverable messages from `src` with `tag`.
+    pub fn probe_count(&self, src: Rank, tag: Tag) -> usize {
+        if src >= self.shared.size {
+            return 0;
+        }
+        self.drain(src);
+        let rx = self.rx.borrow();
+        rx[src].iter().filter(|p| p.tag == tag).count()
+    }
+
+    /// Bounded ring capacity of each outgoing link (diagnostics).
+    pub fn ring_capacity(&self) -> usize {
+        self.shared.link(self.rank, self.rank).ring.capacity()
+    }
+}
+
+impl Transport for ShmEndpoint {
+    type SendHandle = ShmSendHandle;
+
+    fn rank(&self) -> Rank {
+        ShmEndpoint::rank(self)
+    }
+
+    fn world_size(&self) -> usize {
+        ShmEndpoint::world_size(self)
+    }
+
+    fn speed(&self) -> f64 {
+        ShmEndpoint::speed(self)
+    }
+
+    fn pool(&self) -> &BufferPool {
+        ShmEndpoint::pool(self)
+    }
+
+    fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<ShmSendHandle> {
+        ShmEndpoint::isend(self, dst, tag, data)
+    }
+
+    fn try_match(&mut self, src: Rank, tag: Tag) -> Option<MsgBuf> {
+        ShmEndpoint::try_match(self, src, tag)
+    }
+
+    fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        ShmEndpoint::recv(self, src, tag, timeout)
+    }
+
+    fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        ShmEndpoint::wait_any(self, pairs, timeout)
+    }
+
+    fn probe_count(&self, src: Rank, tag: Tag) -> usize {
+        ShmEndpoint::probe_count(self, src, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            e1.isend(0, 7, vec![1.0, 2.0, 3.0]).unwrap();
+        });
+        let data = e0.recv(1, 7, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(data, vec![1.0, 2.0, 3.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tag_multiplexing_on_one_link() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 1, vec![1.0]).unwrap();
+        e1.isend(0, 2, vec![2.0]).unwrap();
+        e1.isend(0, 1, vec![3.0]).unwrap();
+        // tag 2 can be taken before the queued tag-1 messages
+        assert_eq!(e0.try_match(1, 2).unwrap(), vec![2.0]);
+        // tag 1 arrives in order
+        assert_eq!(e0.try_match(1, 1).unwrap(), vec![1.0]);
+        assert_eq!(e0.try_match(1, 1).unwrap(), vec![3.0]);
+        assert!(e0.try_match(1, 1).is_none());
+    }
+
+    #[test]
+    fn out_of_range_send_fails() {
+        let (_w, mut eps) = ShmWorld::homogeneous(1);
+        assert!(eps[0].isend(3, 0, Vec::<f64>::new()).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_errors() {
+        let (_w, eps) = ShmWorld::homogeneous(2);
+        let err = eps[0].recv(1, 1, Some(Duration::from_millis(10)));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn metrics_count_messages() {
+        let (w, mut eps) = ShmWorld::homogeneous(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 1, vec![0.0; 8]).unwrap();
+        assert_eq!(w.metrics().msgs_sent, 1);
+        assert_eq!(w.metrics().bytes_sent, 64);
+        let _ = e0.try_match(1, 1).unwrap();
+        assert_eq!(w.metrics().msgs_delivered, 1);
+    }
+
+    #[test]
+    fn pooled_send_storage_returns_to_sender_pool() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let buf = e0.pool().acquire(16);
+        e0.isend(1, 9, buf).unwrap();
+        assert_eq!(e0.pool().free_len(), 0, "buffer is in flight");
+        let got = e1.try_match(0, 9).unwrap();
+        assert!(
+            got.pool().unwrap().same_pool(e0.pool()),
+            "pooled payloads keep their origin pool"
+        );
+        drop(got);
+        assert_eq!(e0.pool().free_len(), 1, "drained storage returns home");
+    }
+
+    #[test]
+    fn raw_vec_payload_adopted_by_receiver_pool() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.isend(1, 9, vec![1.0, 2.0]).unwrap();
+        let got = e1.try_match(0, 9).unwrap();
+        assert!(got.pool().unwrap().same_pool(e1.pool()));
+        drop(got);
+        assert_eq!(e1.pool().free_len(), 1);
+        assert_eq!(e0.pool().free_len(), 0);
+    }
+
+    #[test]
+    fn zero_copy_payload_address_survives_the_wire() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let mut buf = e0.pool().acquire(4);
+        buf.copy_from_slice(&[4.0, 3.0, 2.0, 1.0]);
+        let ptr = buf.as_slice().as_ptr();
+        e0.isend(1, 11, buf).unwrap();
+        let got = e1.try_match(0, 11).unwrap();
+        assert_eq!(got, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(got.as_slice().as_ptr(), ptr, "moved, not copied");
+    }
+
+    #[test]
+    fn full_ring_parks_and_handle_reports_backpressure() {
+        let (_w, mut eps) = ShmWorld::new(ShmConfig::homogeneous(2).with_ring_capacity(2));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let handles: Vec<ShmSendHandle> = (0..5)
+            .map(|i| e0.isend(1, 7, vec![i as f64]).unwrap())
+            .collect();
+        assert!(handles[0].test() && handles[1].test(), "ring slots publish");
+        assert!(!handles[2].test(), "overflow stays pending");
+        assert!(!handles[4].test());
+        // Receiver-side drain pulls overflow through the ring in order
+        // and completes every handle.
+        for i in 0..5 {
+            let got = e1.try_match(0, 7).unwrap();
+            assert_eq!(got[0] as usize, i, "FIFO across the overflow boundary");
+        }
+        assert!(e1.try_match(0, 7).is_none());
+        for h in &handles {
+            assert!(h.test(), "all published after drain: {h:?}");
+        }
+    }
+
+    #[test]
+    fn wait_blocks_until_receiver_frees_space() {
+        let (_w, mut eps) = ShmWorld::new(ShmConfig::homogeneous(2).with_ring_capacity(1));
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.isend(1, 3, vec![1.0]).unwrap();
+        let pending = e0.isend(1, 3, vec![2.0]).unwrap();
+        assert!(!pending.test());
+        let drainer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            let a = e1.recv(0, 3, Some(Duration::from_secs(2))).unwrap();
+            let b = e1.recv(0, 3, Some(Duration::from_secs(2))).unwrap();
+            (a.to_vec(), b.to_vec())
+        });
+        pending.wait(); // completes once the receiver drains slot 0
+        assert!(pending.test());
+        let (a, b) = drainer.join().unwrap();
+        assert_eq!(a, vec![1.0]);
+        assert_eq!(b, vec![2.0]);
+    }
+
+    #[test]
+    fn probe_count_sees_queued_messages() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 3, vec![1.0]).unwrap();
+        e1.isend(0, 3, vec![2.0]).unwrap();
+        e1.isend(0, 4, vec![9.0]).unwrap();
+        assert_eq!(e0.probe_count(1, 3), 2);
+        assert_eq!(e0.probe_count(1, 4), 1);
+        let _ = e0.try_match(1, 3);
+        assert_eq!(e0.probe_count(1, 3), 1);
+    }
+
+    #[test]
+    fn zero_size_messages_flow() {
+        let (_w, mut eps) = ShmWorld::homogeneous(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.isend(0, 5, Vec::<f64>::new()).unwrap();
+        e1.isend_copy(0, 5, &[]).unwrap();
+        assert_eq!(e0.probe_count(1, 5), 2);
+        assert_eq!(e0.try_match(1, 5).unwrap().len(), 0);
+        assert_eq!(e0.try_match(1, 5).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn wait_any_round_robin_serves_both_sources() {
+        let (_w, mut eps) = ShmWorld::homogeneous(3);
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        for i in 0..4 {
+            e1.isend(0, 7, vec![1.0, i as f64]).unwrap();
+            e2.isend(0, 7, vec![2.0, i as f64]).unwrap();
+        }
+        let mut seen = [0usize; 3];
+        for _ in 0..8 {
+            let (idx, m) = e0
+                .wait_any(&[(1, 7), (2, 7)], Duration::from_secs(2))
+                .unwrap();
+            assert_eq!(m[0] as usize, [1, 2][idx]);
+            seen[m[0] as usize] += 1;
+        }
+        assert_eq!(seen[1], 4);
+        assert_eq!(seen[2], 4);
+        assert!(e0
+            .wait_any(&[(1, 7), (2, 7)], Duration::from_millis(10))
+            .is_none());
+    }
+
+    #[test]
+    fn self_send_works() {
+        let (_w, mut eps) = ShmWorld::homogeneous(1);
+        let mut e0 = eps.pop().unwrap();
+        e0.isend(0, 1, vec![5.0]).unwrap();
+        assert_eq!(e0.try_match(0, 1).unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn many_to_one_threaded_fifo() {
+        let (_w, mut eps) = ShmWorld::homogeneous(5);
+        let e0 = eps.remove(0);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut e| {
+                thread::spawn(move || {
+                    for i in 0..100 {
+                        e.isend(0, 42, vec![e.rank() as f64, i as f64]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut last = vec![-1.0; 5];
+        let mut count = 0;
+        for src in 1..5 {
+            while let Some(d) = e0.try_match(src, 42) {
+                assert_eq!(d[0] as usize, src);
+                assert!(d[1] > last[src]);
+                last[src] = d[1];
+                count += 1;
+            }
+        }
+        assert_eq!(count, 400);
+    }
+}

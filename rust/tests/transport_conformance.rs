@@ -1,0 +1,557 @@
+//! Backend-parameterized Transport conformance suite (ISSUE 3).
+//!
+//! The [`jack2::transport::Transport`] contract is executable: every
+//! check in this file is written once, generically over a
+//! [`TestBackend`] factory, and instantiated for **both** shipped
+//! backends — the simulated MPI world ([`jack2::simmpi::Endpoint`]) and
+//! the shared-memory ring backend
+//! ([`jack2::transport::shm::ShmEndpoint`]) — via the
+//! `conformance_suite!` macro at the bottom. A new backend earns its
+//! place by adding one `impl TestBackend` + one macro line and passing
+//! the same suite.
+//!
+//! Covered contract surface:
+//! * non-overtaking delivery per `(src, tag)` (tags may overtake);
+//! * moved-payload semantics (zero-copy: the receiver observes the
+//!   sender's allocation);
+//! * pooled-receive recycling (storage returns to the staging endpoint's
+//!   pool; raw `Vec` payloads are adopted by the receiver);
+//! * zero steady-state allocations on the staged send path;
+//! * `wait_any` multiplexing and non-starvation;
+//! * the Algorithm-6 send-discard fast path touching no pool storage
+//!   while the channel is congested;
+//! * blocking `recv` timeouts, `probe_count`, zero-size messages, `f32`
+//!   widening (`isend_scalars`);
+//! * the full stack: collectives and the quickstart solve (sync + async)
+//!   over the backend, with cross-backend result equality at the end.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use jack2::graph::CommGraph;
+use jack2::jack::messages::TAG_DATA;
+use jack2::jack::{AsyncComm, AsyncConfig, BufferSet, IterateOpts, JackComm, NormKind, StepOutcome};
+use jack2::metrics::RankMetrics;
+use jack2::simmpi::{allreduce, barrier, NetworkModel, ReduceOp, World, WorldConfig};
+use jack2::transport::{ShmConfig, ShmWorld, Transport};
+
+/// Factory for a backend under conformance test.
+trait TestBackend {
+    type Ep: Transport + 'static;
+    const NAME: &'static str;
+
+    /// A world whose messages become deliverable immediately (so the
+    /// suite can drive several endpoints from one thread).
+    fn world(p: usize) -> Vec<Self::Ep>;
+
+    /// A 2-rank world whose `0 → 1` channel congests: with the receiver
+    /// not draining, posted sends soon report a busy channel
+    /// (`SendHandle::test() == false`). simmpi congests via transit
+    /// latency; shm congests via its bounded ring.
+    fn congested_pair() -> Vec<Self::Ep>;
+}
+
+struct SimMpi;
+
+impl TestBackend for SimMpi {
+    type Ep = jack2::simmpi::Endpoint;
+    const NAME: &'static str = "simmpi";
+
+    fn world(p: usize) -> Vec<Self::Ep> {
+        World::new(WorldConfig::homogeneous(p).with_network(NetworkModel::instant())).1
+    }
+
+    fn congested_pair() -> Vec<Self::Ep> {
+        // 10 000 s transit: the first posted send stays in flight for the
+        // whole test on any runner.
+        World::new(WorldConfig::homogeneous(2).with_network(NetworkModel::uniform(10_000_000_000, 0.0)))
+            .1
+    }
+}
+
+struct Shm;
+
+impl TestBackend for Shm {
+    type Ep = jack2::transport::ShmEndpoint;
+    const NAME: &'static str = "shm";
+
+    fn world(p: usize) -> Vec<Self::Ep> {
+        ShmWorld::homogeneous(p).1
+    }
+
+    fn congested_pair() -> Vec<Self::Ep> {
+        // Capacity-1 rings: one message fits per link; anything beyond
+        // parks in overflow and reports backpressure through its handle.
+        ShmWorld::new(ShmConfig::homogeneous(2).with_ring_capacity(1)).1
+    }
+}
+
+/// Pop a 2-endpoint world into `(e0, e1)`.
+fn pair<B: TestBackend>() -> (B::Ep, B::Ep) {
+    let mut eps = B::world(2);
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+    (e0, e1)
+}
+
+// ---------------------------------------------------------------------
+// Generic conformance checks
+// ---------------------------------------------------------------------
+
+/// `isend` moves the payload: the receiver observes the *same
+/// allocation* the sender staged (the paper's address-exchange claim,
+/// §3.3), and dropping the drained message returns the storage to the
+/// pool of the endpoint that staged it.
+fn moved_payload_and_pool_return<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    let mut buf = e0.pool().acquire(8);
+    buf.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    let ptr = buf.as_slice().as_ptr();
+    e0.isend(1, 7, buf).unwrap();
+    assert_eq!(e0.pool().free_len(), 0, "{}: buffer is in flight", B::NAME);
+    let got = e1.recv(0, 7, Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    assert_eq!(
+        got.as_slice().as_ptr(),
+        ptr,
+        "{}: payload must move, not copy",
+        B::NAME
+    );
+    assert!(
+        got.pool().unwrap().same_pool(e0.pool()),
+        "{}: pooled payloads keep their origin pool",
+        B::NAME
+    );
+    drop(got);
+    assert_eq!(
+        e0.pool().free_len(),
+        1,
+        "{}: drained storage returns to the sender's pool",
+        B::NAME
+    );
+
+    // Raw Vec payloads are adopted by the receiver's pool instead.
+    e0.isend(1, 7, vec![9.0]).unwrap();
+    let got = e1.recv(0, 7, Some(Duration::from_secs(5))).unwrap();
+    assert!(got.pool().unwrap().same_pool(e1.pool()), "{}", B::NAME);
+    drop(got);
+    assert_eq!(e1.pool().free_len(), 1, "{}", B::NAME);
+}
+
+/// Messages from one source with one tag are matched strictly in send
+/// order, including while drained buffers recycle mid-stream; messages
+/// with *different* tags may overtake.
+fn non_overtaking_per_src_tag<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+
+    // Tag multiplexing: a later tag-2 message is matchable before the
+    // queued tag-1 messages.
+    e0.isend(1, 1, vec![1.0]).unwrap();
+    e0.isend(1, 2, vec![2.0]).unwrap();
+    e0.isend(1, 1, vec![3.0]).unwrap();
+    assert_eq!(
+        e1.recv(0, 2, Some(Duration::from_secs(5))).unwrap(),
+        vec![2.0],
+        "{}: tags multiplex independently",
+        B::NAME
+    );
+    assert_eq!(e1.try_match(0, 1).unwrap(), vec![1.0], "{}", B::NAME);
+    assert_eq!(e1.try_match(0, 1).unwrap(), vec![3.0], "{}", B::NAME);
+    assert!(e1.try_match(0, 1).is_none(), "{}", B::NAME);
+
+    // FIFO per (src, tag) under pooling: burst-drain so recycled buffers
+    // are re-staged while older messages are still queued.
+    let total = 50usize;
+    let mut next = 0usize;
+    for i in 0..total {
+        e0.isend_copy(1, TAG_DATA, &[i as f64, (i * i) as f64]).unwrap();
+        if i % 5 == 4 {
+            while let Some(msg) = e1.try_match(0, TAG_DATA) {
+                assert_eq!(msg[0] as usize, next, "{}: overtaking detected", B::NAME);
+                assert_eq!(msg[1] as usize, next * next, "{}: payload corrupted", B::NAME);
+                next += 1;
+            }
+        }
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while next < total {
+        if let Some(msg) = e1.try_match(0, TAG_DATA) {
+            assert_eq!(msg[0] as usize, next, "{}: overtaking detected", B::NAME);
+            next += 1;
+        } else {
+            assert!(std::time::Instant::now() < deadline, "{}: messages lost", B::NAME);
+            thread::yield_now();
+        }
+    }
+}
+
+/// The staged send path (`isend_copy`) performs zero heap allocations in
+/// steady state: recycled pool storage carries every message.
+fn zero_steady_state_allocations<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    let payload = [1.25f64; 64];
+    let mut roundtrip = |e0: &mut B::Ep, e1: &mut B::Ep| {
+        e0.isend_copy(1, 3, &payload).unwrap();
+        drop(e1.recv(0, 3, Some(Duration::from_secs(5))).unwrap());
+        e1.isend_copy(0, 3, &payload).unwrap();
+        drop(e0.recv(1, 3, Some(Duration::from_secs(5))).unwrap());
+    };
+    for _ in 0..5 {
+        roundtrip(&mut e0, &mut e1);
+    }
+    let warm0 = e0.pool().stats().allocations;
+    let warm1 = e1.pool().stats().allocations;
+    for _ in 0..100 {
+        roundtrip(&mut e0, &mut e1);
+    }
+    let s0 = e0.pool().stats();
+    let s1 = e1.pool().stats();
+    assert_eq!(s0.allocations, warm0, "{}: rank 0 allocated in steady state: {s0:?}", B::NAME);
+    assert_eq!(s1.allocations, warm1, "{}: rank 1 allocated in steady state: {s1:?}", B::NAME);
+    assert!(s0.reuses >= 100, "{}: sends must recycle: {s0:?}", B::NAME);
+}
+
+/// `wait_any` multiplexes several `(src, tag)` lanes: with two sources
+/// feeding one receiver, every message is eventually delivered through
+/// `wait_any` alone (no lane starves), each under its correct index, in
+/// per-source FIFO order.
+fn wait_any_multiplexes_without_starvation<B: TestBackend>() {
+    let mut eps = B::world(3);
+    let e2 = eps.pop().unwrap();
+    let e1 = eps.pop().unwrap();
+    let mut e0 = eps.pop().unwrap();
+    let k = 20usize;
+    let senders: Vec<_> = [e1, e2]
+        .into_iter()
+        .map(|mut e| {
+            thread::spawn(move || {
+                let me = e.rank() as f64;
+                for i in 0..20usize {
+                    e.isend_copy(0, 7, &[me, i as f64]).unwrap();
+                }
+            })
+        })
+        .collect();
+    let pairs = [(1usize, 7u64), (2usize, 7u64)];
+    let mut counts = [0usize; 3];
+    let mut last = [-1.0f64; 3];
+    for _ in 0..(2 * k) {
+        let (idx, m) = e0
+            .wait_any(&pairs, Duration::from_secs(10))
+            .expect("wait_any starved a lane");
+        let src = m[0] as usize;
+        assert_eq!(src, pairs[idx].0, "{}: wrong pair index", B::NAME);
+        assert!(m[1] > last[src], "{}: per-source FIFO violated", B::NAME);
+        last[src] = m[1];
+        counts[src] += 1;
+    }
+    assert_eq!(counts[1], k, "{}", B::NAME);
+    assert_eq!(counts[2], k, "{}", B::NAME);
+    // Drained: a further wait times out cleanly.
+    assert!(
+        e0.wait_any(&pairs, Duration::from_millis(20)).is_none(),
+        "{}",
+        B::NAME
+    );
+    for s in senders {
+        s.join().unwrap();
+    }
+}
+
+/// Algorithm 6 over a congested channel: while the previous send is
+/// still pending, every further `AsyncComm::send` is discarded and the
+/// discard path touches **no** pool storage.
+fn send_discard_touches_no_storage<B: TestBackend>() {
+    let mut eps = B::congested_pair();
+    let _e1 = eps.pop().unwrap(); // receiver never drains
+    let mut e0 = eps.pop().unwrap();
+    let g0 = CommGraph::symmetric(0, vec![1]).unwrap();
+    let bufs = BufferSet::<f64>::new(&[4], &[4]).unwrap();
+    let mut comm: AsyncComm<B::Ep> = AsyncComm::new(1, 1);
+    let mut m = RankMetrics::default();
+
+    let mut stats_at_last_post = e0.pool().stats();
+    let mut last_sent = 0;
+    for _ in 0..50 {
+        comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+        if m.msgs_sent != last_sent {
+            last_sent = m.msgs_sent;
+            stats_at_last_post = e0.pool().stats();
+        }
+    }
+    assert!(
+        m.msgs_sent <= 2,
+        "{}: the congested channel must go busy after at most 2 posts ({m:?})",
+        B::NAME
+    );
+    assert!(
+        m.sends_discarded >= 48,
+        "{}: busy-channel sends must be discarded ({m:?})",
+        B::NAME
+    );
+    assert_eq!(
+        e0.pool().stats(),
+        stats_at_last_post,
+        "{}: discarded sends must not acquire, allocate or recycle buffers",
+        B::NAME
+    );
+    assert_eq!(comm.busy_channels(), 1, "{}", B::NAME);
+}
+
+/// Blocking `recv` with a timeout errors cleanly when nothing arrives.
+fn recv_timeout_errors_cleanly<B: TestBackend>() {
+    let (mut e0, _e1) = pair::<B>();
+    let err = e0.recv(1, 99, Some(Duration::from_millis(20)));
+    assert!(err.is_err(), "{}", B::NAME);
+}
+
+/// Zero-size messages (the barrier/control shape) flow, probe and match.
+fn zero_size_messages_flow<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    e0.isend(1, 5, Vec::<f64>::new()).unwrap();
+    e0.isend_copy(1, 5, &[]).unwrap();
+    let first = e1.recv(0, 5, Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(first.len(), 0, "{}", B::NAME);
+    assert_eq!(e1.probe_count(0, 5), 1, "{}", B::NAME);
+    assert_eq!(
+        e1.recv(0, 5, Some(Duration::from_secs(5))).unwrap().len(),
+        0,
+        "{}",
+        B::NAME
+    );
+    assert_eq!(e1.probe_count(0, 5), 0, "{}", B::NAME);
+}
+
+/// `probe_count` reports deliverable messages without consuming them.
+fn probe_count_is_non_destructive<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    e0.isend_copy(1, 3, &[1.0]).unwrap();
+    e0.isend_copy(1, 3, &[2.0]).unwrap();
+    e0.isend_copy(1, 4, &[9.0]).unwrap();
+    // recv the tag-4 message first so all three have arrived for certain.
+    assert_eq!(
+        e1.recv(0, 4, Some(Duration::from_secs(5))).unwrap(),
+        vec![9.0],
+        "{}",
+        B::NAME
+    );
+    assert_eq!(e1.probe_count(0, 3), 2, "{}", B::NAME);
+    assert_eq!(e1.probe_count(0, 3), 2, "{}: probing must not consume", B::NAME);
+    assert_eq!(e1.try_match(0, 3).unwrap(), vec![1.0], "{}", B::NAME);
+    assert_eq!(e1.probe_count(0, 3), 1, "{}", B::NAME);
+}
+
+/// `isend_scalars` widens `f32` payloads onto the `f64` wire through the
+/// pool (and `f64` passes through unchanged).
+fn isend_scalars_widens_f32<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    e0.isend_scalars(1, 9, &[1.5f32, -2.25f32]).unwrap();
+    let got = e1.recv(0, 9, Some(Duration::from_secs(5))).unwrap();
+    assert_eq!(got, vec![1.5f64, -2.25f64], "{}", B::NAME);
+    e0.isend_scalars(1, 9, &[0.5f64]).unwrap();
+    assert_eq!(
+        e1.recv(0, 9, Some(Duration::from_secs(5))).unwrap(),
+        vec![0.5],
+        "{}",
+        B::NAME
+    );
+}
+
+/// The tree collectives — written against the bare trait — run unchanged.
+fn collectives_run_on_backend<B: TestBackend>() {
+    let eps = B::world(4);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut ep| {
+            thread::spawn(move || {
+                let sum = allreduce(&mut ep, &[ep.rank() as f64, 1.0], ReduceOp::Sum).unwrap();
+                barrier(&mut ep).unwrap();
+                sum
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), vec![6.0, 4.0], "{}", B::NAME);
+    }
+}
+
+/// Full-stack acceptance: the quickstart system [4 -1; -1 4] x = [5 9]
+/// through the typed session API over this backend. Returns
+/// `(solution, residual_norm)` per rank, sorted by rank.
+fn quickstart_solve_on<B: TestBackend>(async_mode: bool, threshold: f64) -> Vec<(f64, f64)> {
+    let eps = B::world(2);
+    let (tx, rx) = mpsc::channel();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            let tx = tx.clone();
+            thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
+                let session = JackComm::<_, f64>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[1], &[1])
+                    .unwrap()
+                    .with_residual(1, NormKind::Max)
+                    .with_solution(1);
+                let mut comm = if async_mode {
+                    session
+                        .build_async(AsyncConfig {
+                            max_recv_requests: 4,
+                            threshold,
+                            send_discard: true,
+                        })
+                        .unwrap()
+                } else {
+                    session.build_sync()
+                };
+                let c = [5.0, 9.0][rank];
+                comm.iterate(
+                    &IterateOpts {
+                        threshold,
+                        max_iters: 200_000,
+                        ..IterateOpts::default()
+                    },
+                    |v| {
+                        let x_new = (c + v.recv[0][0]) / 4.0;
+                        v.res[0] = 4.0 * (x_new - v.sol[0]);
+                        v.sol[0] = x_new;
+                        v.send[0][0] = x_new;
+                        StepOutcome::Continue
+                    },
+                )
+                .unwrap();
+                tx.send((rank, comm.solution()[0], comm.residual_norm()))
+                    .unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(tx);
+    let mut rows: Vec<(usize, f64, f64)> = rx.iter().collect();
+    rows.sort_by_key(|r| r.0);
+    rows.into_iter().map(|(_, x, n)| (x, n)).collect()
+}
+
+const X0: f64 = 29.0 / 15.0;
+const X1: f64 = 41.0 / 15.0;
+
+/// Per-backend acceptance: both modes converge to the exact solution.
+fn quickstart_converges<B: TestBackend>() {
+    for async_mode in [false, true] {
+        let threshold = 1e-10;
+        let rows = quickstart_solve_on::<B>(async_mode, threshold);
+        assert!(
+            (rows[0].0 - X0).abs() < 1e-8 && (rows[1].0 - X1).abs() < 1e-8,
+            "{} async={async_mode}: {rows:?}",
+            B::NAME
+        );
+        assert!(
+            rows.iter().all(|&(_, n)| n < threshold),
+            "{} async={async_mode}: residual above threshold: {rows:?}",
+            B::NAME
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Suite instantiation — one line per backend
+// ---------------------------------------------------------------------
+
+macro_rules! conformance_suite {
+    ($modname:ident, $backend:ty) => {
+        mod $modname {
+            use super::*;
+
+            #[test]
+            fn moved_payload_and_pool_return() {
+                super::moved_payload_and_pool_return::<$backend>();
+            }
+
+            #[test]
+            fn non_overtaking_per_src_tag() {
+                super::non_overtaking_per_src_tag::<$backend>();
+            }
+
+            #[test]
+            fn zero_steady_state_allocations() {
+                super::zero_steady_state_allocations::<$backend>();
+            }
+
+            #[test]
+            fn wait_any_multiplexes_without_starvation() {
+                super::wait_any_multiplexes_without_starvation::<$backend>();
+            }
+
+            #[test]
+            fn send_discard_touches_no_storage() {
+                super::send_discard_touches_no_storage::<$backend>();
+            }
+
+            #[test]
+            fn recv_timeout_errors_cleanly() {
+                super::recv_timeout_errors_cleanly::<$backend>();
+            }
+
+            #[test]
+            fn zero_size_messages_flow() {
+                super::zero_size_messages_flow::<$backend>();
+            }
+
+            #[test]
+            fn probe_count_is_non_destructive() {
+                super::probe_count_is_non_destructive::<$backend>();
+            }
+
+            #[test]
+            fn isend_scalars_widens_f32() {
+                super::isend_scalars_widens_f32::<$backend>();
+            }
+
+            #[test]
+            fn collectives_run_on_backend() {
+                super::collectives_run_on_backend::<$backend>();
+            }
+
+            #[test]
+            fn quickstart_converges() {
+                super::quickstart_converges::<$backend>();
+            }
+        }
+    };
+}
+
+conformance_suite!(simmpi_backend, SimMpi);
+conformance_suite!(shm_backend, Shm);
+
+// ---------------------------------------------------------------------
+// Cross-backend acceptance
+// ---------------------------------------------------------------------
+
+/// Synchronous iterations are deterministic lockstep: the quickstart
+/// example's residual trajectory is *identical* on both backends — same
+/// iterate sequence, same final residual norm, bit for bit.
+#[test]
+fn quickstart_sync_residuals_identical_across_backends() {
+    let sim = quickstart_solve_on::<SimMpi>(false, 1e-10);
+    let shm = quickstart_solve_on::<Shm>(false, 1e-10);
+    assert_eq!(sim, shm, "sync solve must not depend on the transport");
+}
+
+/// Asynchronous iterations are timing-dependent (iteration counts
+/// differ), but both backends must converge to the same fixed point at
+/// the same threshold.
+#[test]
+fn quickstart_async_converges_identically_across_backends() {
+    let threshold = 1e-10;
+    let sim = quickstart_solve_on::<SimMpi>(true, threshold);
+    let shm = quickstart_solve_on::<Shm>(true, threshold);
+    for (rows, name) in [(&sim, "sim"), (&shm, "shm")] {
+        assert!((rows[0].0 - X0).abs() < 1e-8, "{name}: {rows:?}");
+        assert!((rows[1].0 - X1).abs() < 1e-8, "{name}: {rows:?}");
+        assert!(rows.iter().all(|&(_, n)| n < threshold), "{name}: {rows:?}");
+    }
+}

@@ -1,15 +1,20 @@
-//! Typed session API (ISSUE 2 tentpole): the builder path and the
-//! deprecated imperative shims produce identical wire traffic, and the
-//! generic `Scalar` payload path solves the quickstart problem in `f32`
-//! to the same solution as `f64`.
+//! Typed session API (ISSUE 2 tentpole, extended by ISSUE 3): the
+//! builder path and the deprecated imperative shims produce identical
+//! wire traffic — now verified generically over the [`Transport`]
+//! backend (simulated MPI *and* the shared-memory ring transport) and
+//! over the payload [`Scalar`] width (`f64` and `f32`) — and the generic
+//! payload path solves the quickstart problem in `f32` to the same
+//! solution as `f64`.
 
 use jack2::prelude::*;
-use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
+use jack2::simmpi::{NetworkModel, World, WorldConfig};
+use jack2::transport::ShmWorld;
 
 /// The legacy imperative Listing-5 init sequence, kept alive through the
-/// deprecated shims (the equivalence subject of the shim test).
+/// deprecated shims (the equivalence subject of the shim test) — shims
+/// are transport- and width-generic exactly like the builder.
 #[allow(deprecated)]
-fn shim_init(ep: Endpoint, graph: CommGraph) -> JackComm<Endpoint> {
+fn shim_init<T: Transport, S: Scalar>(ep: T, graph: CommGraph) -> JackComm<T, S> {
     let mut c = JackComm::new(ep, graph).unwrap();
     c.init_buffers(&[1], &[1]).unwrap();
     c.init_residual(1, 0.0).unwrap(); // max-norm
@@ -18,7 +23,9 @@ fn shim_init(ep: Endpoint, graph: CommGraph) -> JackComm<Endpoint> {
 }
 
 /// Per-rank record of what came off the wire during a fixed-length
-/// synchronous exchange, plus the message counters.
+/// synchronous exchange, plus the message counters. Received payloads
+/// are recorded in the `f64` wire domain so traces compare across
+/// payload widths.
 #[derive(Debug, PartialEq)]
 struct WireTrace {
     rank: usize,
@@ -29,20 +36,23 @@ struct WireTrace {
     iterations: u64,
 }
 
-/// Run a deterministic 10-iteration synchronous exchange on 2 ranks.
-/// `use_shims` selects the deprecated imperative init path; otherwise the
-/// typestate builder is used. Everything after init is the same
-/// `iterate` call.
-fn drive_sync_exchange(use_shims: bool) -> Vec<WireTrace> {
-    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
-    let (_w, eps) = World::new(cfg);
+/// Run a deterministic 10-iteration synchronous exchange on 2 ranks of
+/// any backend. `use_shims` selects the deprecated imperative init path;
+/// otherwise the typestate builder is used. Everything after init is the
+/// same `iterate` call. (All payload values are small integers, exactly
+/// representable at every width, so the traces are width-independent.)
+fn drive_sync_exchange<T, S>(eps: Vec<T>, use_shims: bool) -> Vec<WireTrace>
+where
+    T: Transport + 'static,
+    S: Scalar,
+{
     let handles: Vec<_> = eps
         .into_iter()
         .map(|ep| {
             std::thread::spawn(move || {
                 let rank = ep.rank();
                 let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
-                let mut comm: JackComm<_, f64> = if use_shims {
+                let mut comm: JackComm<T, S> = if use_shims {
                     shim_init(ep, graph)
                 } else {
                     JackComm::builder(ep, graph)
@@ -62,9 +72,9 @@ fn drive_sync_exchange(use_shims: bool) -> Vec<WireTrace> {
                     ..IterateOpts::default()
                 };
                 comm.iterate(&opts, |v| {
-                    received.push(v.recv[0][0]);
-                    v.send[0][0] = rank as f64 * 1000.0 + it as f64;
-                    v.res[0] = 1.0;
+                    received.push(v.recv[0][0].to_f64());
+                    v.send[0][0] = S::from_f64(rank as f64 * 1000.0 + it as f64);
+                    v.res[0] = S::from_f64(1.0);
                     it += 1;
                     StepOutcome::Continue
                 })
@@ -85,16 +95,17 @@ fn drive_sync_exchange(use_shims: bool) -> Vec<WireTrace> {
     out
 }
 
-/// Satellite: the deprecated shims and the builder produce byte-for-byte
-/// identical wire traffic (same payload sequence, same message counts,
-/// same reduction count).
-#[test]
-fn shim_and_builder_paths_produce_identical_wire_traffic() {
-    let shim = drive_sync_exchange(true);
-    let built = drive_sync_exchange(false);
-    assert_eq!(shim, built);
-    // sanity: the exchange really moved data (initial zero + 9 payloads)
-    for t in &built {
+fn sim_pair() -> Vec<jack2::simmpi::Endpoint> {
+    let cfg = WorldConfig::homogeneous(2).with_network(NetworkModel::instant());
+    World::new(cfg).1
+}
+
+fn shm_pair() -> Vec<jack2::transport::ShmEndpoint> {
+    ShmWorld::homogeneous(2).1
+}
+
+fn assert_exchange_sanity(traces: &[WireTrace]) {
+    for t in traces {
         assert_eq!(t.received.len(), 10);
         assert_eq!(t.received[0], 0.0, "first recv sees the zero init");
         let peer = 1 - t.rank;
@@ -102,6 +113,53 @@ fn shim_and_builder_paths_produce_identical_wire_traffic() {
         assert_eq!(t.msgs_sent, 11, "initial send + 10 loop sends");
         assert_eq!(t.msgs_delivered, 11, "10 loop recvs + trailing drain");
     }
+}
+
+/// Satellite (ISSUE 2): the deprecated shims and the builder produce
+/// byte-for-byte identical wire traffic on the default backend.
+#[test]
+fn shim_and_builder_paths_produce_identical_wire_traffic() {
+    let shim = drive_sync_exchange::<_, f64>(sim_pair(), true);
+    let built = drive_sync_exchange::<_, f64>(sim_pair(), false);
+    assert_eq!(shim, built);
+    assert_exchange_sanity(&built);
+}
+
+/// Satellite (ISSUE 3): the same equivalence holds on the shared-memory
+/// backend — the shims are as backend-agnostic as the builder.
+#[test]
+fn shim_and_builder_paths_equivalent_on_shm() {
+    let shim = drive_sync_exchange::<_, f64>(shm_pair(), true);
+    let built = drive_sync_exchange::<_, f64>(shm_pair(), false);
+    assert_eq!(shim, built);
+    assert_exchange_sanity(&built);
+}
+
+/// Satellite (ISSUE 3): the equivalence also holds for `f32` payloads —
+/// on both backends — and, since every exchanged value is exactly
+/// representable, the `f32` traces equal the `f64` traces on the wire.
+#[test]
+fn shim_and_builder_paths_equivalent_for_f32_payloads() {
+    let shim = drive_sync_exchange::<_, f32>(sim_pair(), true);
+    let built = drive_sync_exchange::<_, f32>(sim_pair(), false);
+    assert_eq!(shim, built);
+    let shim_shm = drive_sync_exchange::<_, f32>(shm_pair(), true);
+    let built_shm = drive_sync_exchange::<_, f32>(shm_pair(), false);
+    assert_eq!(shim_shm, built_shm);
+    // f32 payloads put the same words on the f64 wire as f64 payloads.
+    let wide = drive_sync_exchange::<_, f64>(sim_pair(), false);
+    assert_eq!(built, wide);
+    assert_eq!(built_shm, wide);
+}
+
+/// Cross-backend: the deterministic synchronous exchange is transport
+/// invariant — simulated MPI and shared-memory rings carry identical
+/// traffic.
+#[test]
+fn wire_traffic_is_identical_across_backends() {
+    let sim = drive_sync_exchange::<_, f64>(sim_pair(), false);
+    let shm = drive_sync_exchange::<_, f64>(shm_pair(), false);
+    assert_eq!(sim, shm);
 }
 
 /// The quickstart system [4 -1; -1 4] x = [5 9] solved through the typed
