@@ -13,7 +13,8 @@
 
 use jack2::config::{Backend, ExperimentConfig, Scheme};
 use jack2::harness::{fmt_secs, Table};
-use jack2::solver::solve;
+use jack2::problem::ConvDiffProblem;
+use jack2::solver::SolverSession;
 
 fn main() {
     let backend = if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -46,7 +47,14 @@ fn main() {
             max_iters: 50_000,
             ..Default::default()
         };
-        let rep = solve(&cfg).expect("solve failed");
+        // The typed solver session: problem and width are explicit, the
+        // scheme/backend/transport ride in from the config.
+        let rep = SolverSession::<f64>::builder(&cfg)
+            .problem(ConvDiffProblem::from_config(&cfg).expect("problem setup"))
+            .build()
+            .expect("session build")
+            .run()
+            .expect("solve failed");
         for s in &rep.steps {
             table.row(&[
                 scheme.name().into(),

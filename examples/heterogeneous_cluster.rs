@@ -10,7 +10,7 @@
 
 use jack2::config::{Backend, ExperimentConfig, Scheme};
 use jack2::harness::{fmt_secs, Table};
-use jack2::solver::solve;
+use jack2::solver::solve_experiment;
 
 fn main() {
     println!(
@@ -41,7 +41,7 @@ fn main() {
                 max_iters: 400_000,
                 ..Default::default()
             };
-            let rep = solve(&cfg).expect("solve failed");
+            let rep = solve_experiment::<f64>(&cfg).expect("solve failed");
             assert!(rep.r_n < 1e-5, "verification failed: {}", rep.r_n);
             times.push(rep.steps[0].wall);
             iters.push(rep.iterations());

@@ -11,9 +11,12 @@
 
 use std::collections::BTreeMap;
 
+use jack2::config::{ExperimentConfig, Scheme};
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
+use jack2::scalar::Scalar;
 use jack2::simmpi::{NetworkModel, WorldConfig};
+use jack2::solver::solve_experiment;
 use jack2::transport::{ShmWorld, Transport};
 use jack2::util::json::{self, Json};
 
@@ -196,6 +199,57 @@ fn bench_backend_roundtrip(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Mixed-precision solver trajectory: the same convection–diffusion
+/// solve through `SolverSession` at f32 and f64 payload widths (native
+/// backend, sim transport, identical threshold so the work is
+/// comparable). One JSON row per width; CI fails if either goes missing.
+fn bench_solve_precision(b: &Bencher) -> Vec<Json> {
+    println!("\nsolver precision: f32 vs f64 convection-diffusion solve (SolverSession)");
+
+    fn one_width<S: Scalar>(b: &Bencher, cfg: &ExperimentConfig) -> (f64, u64, f64) {
+        let mut rep = None;
+        let st = b.run(&format!("solve {}", S::NAME), || {
+            rep = Some(solve_experiment::<S>(cfg).expect("solve failed"));
+        });
+        let rep = rep.expect("bencher runs the closure at least once");
+        (st.mean().as_nanos() as f64, rep.iterations(), rep.r_n)
+    }
+
+    let cfg = ExperimentConfig {
+        process_grid: (2, 2, 1),
+        n: 10,
+        scheme: Scheme::Overlapping,
+        // Width-appropriate shared target: reachable by both f32 and f64.
+        threshold: 1e-4,
+        net_latency_us: 5,
+        net_jitter: 0.1,
+        max_iters: 100_000,
+        ..Default::default()
+    };
+
+    let mut t = Table::new(&["precision", "time / solve", "iters", "r_n"]);
+    let mut rows = Vec::new();
+    for (name, (wall_ns, iters, r_n)) in [
+        ("f64", one_width::<f64>(b, &cfg)),
+        ("f32", one_width::<f32>(b, &cfg)),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}ms", wall_ns / 1e6),
+            iters.to_string(),
+            format!("{r_n:.1e}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("precision".into(), Json::Str(name.into()));
+        row.insert("wall_ns".into(), Json::Num(wall_ns));
+        row.insert("iterations".into(), Json::Num(iters as f64));
+        row.insert("r_n".into(), Json::Num(r_n));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -248,6 +302,7 @@ fn main() {
     bench_delivery(&b);
     let pooled_rows = bench_pooled_vs_clone(&b);
     let backend_rows = bench_backend_roundtrip(&b);
+    let precision_rows = bench_solve_precision(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -258,6 +313,7 @@ fn main() {
     );
     doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
     doc.insert("backend_roundtrip".into(), Json::Arr(backend_rows));
+    doc.insert("solve_precision".into(), Json::Arr(precision_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

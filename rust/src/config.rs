@@ -95,6 +95,35 @@ impl TransportKind {
     }
 }
 
+/// Payload scalar width for the solve (the `S: Scalar` instantiation of
+/// the session stack). The wire and all norm accumulation stay `f64`
+/// regardless; this selects the width of the user-facing solution,
+/// residual and halo buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Half-footprint payloads (`f32` buffers over the `f64` wire).
+    F32,
+    /// Full width (the default; matches the paper's runs).
+    F64,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "single" => Ok(Precision::F32),
+            "f64" | "double" => Ok(Precision::F64),
+            _ => Err(Error::Config(format!("unknown precision {s:?}"))),
+        }
+    }
+}
+
 /// Full description of one solve experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -118,6 +147,9 @@ pub struct ExperimentConfig {
     pub backend: Backend,
     /// Message transport (simulated MPI vs shared-memory rings).
     pub transport: TransportKind,
+    /// Payload scalar width (`f64` default; `f32` halves the user-buffer
+    /// footprint — the wire and norms stay `f64`).
+    pub precision: Precision,
     /// Max iterations per time step (safety valve).
     pub max_iters: u64,
     /// Network base latency in µs.
@@ -177,6 +209,7 @@ impl Default for ExperimentConfig {
             scheme: Scheme::Overlapping,
             backend: Backend::Native,
             transport: TransportKind::Sim,
+            precision: Precision::F64,
             max_iters: 200_000,
             net_latency_us: 20,
             net_jitter: 0.1,
@@ -229,6 +262,7 @@ impl ExperimentConfig {
         m.insert("scheme".into(), Json::Str(self.scheme.name().into()));
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
         m.insert("transport".into(), Json::Str(self.transport.name().into()));
+        m.insert("precision".into(), Json::Str(self.precision.name().into()));
         m.insert("max_iters".into(), Json::Num(self.max_iters as f64));
         m.insert(
             "net_latency_us".into(),
@@ -307,6 +341,9 @@ impl ExperimentConfig {
         if let Some(s) = v.get("transport").and_then(|x| x.as_str()) {
             c.transport = TransportKind::parse(s)?;
         }
+        if let Some(s) = v.get("precision").and_then(|x| x.as_str()) {
+            c.precision = Precision::parse(s)?;
+        }
         if let Some(x) = v.get("max_iters").and_then(|x| x.as_f64()) {
             c.max_iters = x as u64;
         }
@@ -380,6 +417,21 @@ mod tests {
         assert_eq!(Scheme::parse("async").unwrap(), Scheme::Asynchronous);
         assert!(Scheme::parse("nope").is_err());
         assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+    }
+
+    #[test]
+    fn precision_parses_and_roundtrips() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("double").unwrap(), Precision::F64);
+        assert!(Precision::parse("f16").is_err());
+        let c = ExperimentConfig {
+            precision: Precision::F32,
+            ..ExperimentConfig::default()
+        };
+        let s = json::write(&c.to_json());
+        let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(d.precision, Precision::F32);
+        assert_eq!(ExperimentConfig::default().precision, Precision::F64);
     }
 
     #[test]

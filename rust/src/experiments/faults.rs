@@ -11,7 +11,7 @@ use std::time::Duration;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::harness::{fmt_secs, Table};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 #[derive(Debug, Clone)]
 pub struct FaultRow {
@@ -45,8 +45,8 @@ pub fn run() -> Result<Vec<FaultRow>> {
     let mut rows = Vec::new();
     for spike_every in [0u64, 200, 50, 20] {
         let spike_us = if spike_every == 0 { 0 } else { 5_000 };
-        let sync = solve(&cfg(Scheme::Overlapping, spike_every, spike_us))?;
-        let asy = solve(&cfg(Scheme::Asynchronous, spike_every, spike_us))?;
+        let sync = solve_experiment::<f64>(&cfg(Scheme::Overlapping, spike_every, spike_us))?;
+        let asy = solve_experiment::<f64>(&cfg(Scheme::Asynchronous, spike_every, spike_us))?;
         rows.push(FaultRow {
             spike_every,
             spike_ms: spike_us / 1000,

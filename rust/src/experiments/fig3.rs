@@ -6,7 +6,7 @@
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::problem::{idx3, Partition3D};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 /// A center-line profile of the iterated solution.
 #[derive(Debug, Clone)]
@@ -46,7 +46,7 @@ pub fn run(n: usize, budget: u64) -> Result<(Profile, Profile, Vec<f64>)> {
     let part = Partition3D::cube(n, (4, 2, 2))?;
     let capture = |scheme: Scheme, iters: u64| -> Result<Profile> {
         let cfg = base_cfg(scheme, n, iters);
-        let rep = solve(&cfg)?;
+        let rep = solve_experiment::<f64>(&cfg)?;
         Ok(profile_of(scheme, &rep.solution, n, &part))
     };
     let sync = capture(Scheme::Overlapping, budget)?;
@@ -57,7 +57,7 @@ pub fn run(n: usize, budget: u64) -> Result<(Profile, Profile, Vec<f64>)> {
     ref_cfg.threshold = 1e-8;
     ref_cfg.net_latency_us = 5;
     ref_cfg.rank_speed = vec![];
-    let reference = solve(&ref_cfg)?;
+    let reference = solve_experiment::<f64>(&ref_cfg)?;
     let mid = n / 2;
     let line = (0..n)
         .map(|ix| reference.solution[idx3((n, n, n), ix, mid, mid)])

@@ -13,7 +13,7 @@ use std::time::Duration;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::harness::{fmt_secs, Table};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 #[derive(Debug, Clone)]
 pub struct OverheadRow {
@@ -45,13 +45,13 @@ fn cfg(n: usize) -> ExperimentConfig {
 /// Measure detection overhead at problem size `n`.
 pub fn run(n: usize) -> Result<OverheadRow> {
     let on_cfg = cfg(n);
-    let on = solve(&on_cfg)?;
+    let on = solve_experiment::<f64>(&on_cfg)?;
     let iterations = on.iterations();
 
     let mut off_cfg = cfg(n);
     off_cfg.detect = false;
     off_cfg.max_iters = iterations;
-    let off = solve(&off_cfg)?;
+    let off = solve_experiment::<f64>(&off_cfg)?;
 
     let (t_on, t_off) = (on.steps[0].wall, off.steps[0].wall);
     Ok(OverheadRow {
@@ -76,7 +76,7 @@ pub fn snapshot_frequency_sweep(n: usize) -> Result<Vec<(f64, u64, Duration)>> {
     for mult in [1.0, 2.0, 5.0] {
         let mut c = cfg(n);
         c.threshold = 1e-6 * mult;
-        let rep = solve(&c)?;
+        let rep = solve_experiment::<f64>(&c)?;
         out.push((c.threshold, rep.snapshots(), rep.steps[0].wall));
     }
     Ok(out)

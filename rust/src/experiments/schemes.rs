@@ -8,7 +8,7 @@ use std::time::Duration;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::harness::{fmt_secs, Table};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 #[derive(Debug, Clone)]
 pub struct SchemeRow {
@@ -34,7 +34,7 @@ pub fn run(latency_us: u64, slow_factor: f64) -> Result<Vec<SchemeRow>> {
             max_iters: 400_000,
             ..Default::default()
         };
-        let rep = solve(&cfg)?;
+        let rep = solve_experiment::<f64>(&cfg)?;
         out.push(SchemeRow {
             scheme,
             time: rep.steps[0].wall,

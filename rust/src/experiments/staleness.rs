@@ -7,7 +7,7 @@ use std::time::Duration;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::harness::{fmt_secs, Table};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 #[derive(Debug, Clone)]
 pub struct StalenessRow {
@@ -42,7 +42,7 @@ pub fn run() -> Result<(StalenessRow, StalenessRow)> {
     let mut rows = Vec::new();
     for discard in [true, false] {
         let c = cfg(discard);
-        let rep = solve(&c)?;
+        let rep = solve_experiment::<f64>(&c)?;
         let sent: u64 = rep.per_rank.iter().map(|m| m.msgs_sent).sum();
         let disc: u64 = rep.per_rank.iter().map(|m| m.sends_discarded).sum();
         rows.push(StalenessRow {

@@ -14,7 +14,7 @@ use std::time::Duration;
 use crate::config::{Backend, ExperimentConfig, Scheme};
 use crate::error::Result;
 use crate::harness::{fmt_secs, Table};
-use crate::solver::solve;
+use crate::solver::solve_experiment;
 
 /// One scale point of the sweep.
 #[derive(Debug, Clone)]
@@ -110,7 +110,7 @@ pub fn run(points: &[ScalePoint], backend: Backend, threshold: f64) -> Result<Ve
                 max_iters: 400_000,
                 ..Default::default()
             };
-            let rep = solve(&cfg)?;
+            let rep = solve_experiment::<f64>(&cfg)?;
             rows.push(Row {
                 p: cfg.world_size(),
                 n: pt.n,

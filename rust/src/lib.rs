@@ -51,13 +51,22 @@
 //!   leader-election norm computation, the Savari–Bertsekas snapshot
 //!   protocol for asynchronous convergence detection (Algs. 7–9), and
 //!   pluggable termination protocols.
-//! * **[`problem`]** — the paper's evaluation workload: 3-D
-//!   convection–diffusion, finite differences, backward Euler, box
-//!   partitioning (Fig. 2).
+//! * **[`problem`]** — the workload layer behind the width-generic
+//!   [`problem::Problem`] / [`problem::ProblemWorker`] trait pair
+//!   (partitioning, comm-graph derivation, halo extraction, local sweep
+//!   data, verification oracle — see the "Adding a problem" guide in the
+//!   module docs). Two implementors ship: the paper's 3-D
+//!   convection–diffusion workload ([`problem::ConvDiffProblem`], Fig. 2)
+//!   and a 1-D backward-Euler heat chain ([`problem::Jacobi1D`]).
 //! * **[`solver`]** — parallel iterative schemes: trivial (Alg. 1),
 //!   overlapping (Alg. 2) and asynchronous (Alg. 3) relaxation, written
-//!   on the session API's `iterate` loop, with a native Rust compute
-//!   backend and an AOT-compiled XLA backend.
+//!   on the session API's `iterate` loop. The front door is the typed
+//!   [`solver::SolverSession`] builder —
+//!   `SolverSession::<f32>::builder(&cfg).problem(p).build()?.run()?` —
+//!   problem-agnostic, transport-agnostic and payload-width-generic
+//!   (`repro solve --precision f32` runs true mixed precision), with a
+//!   width-generic native Rust compute backend and an AOT-compiled XLA
+//!   backend (f64-only, behind a clean capability error).
 //! * **[`runtime`]** — PJRT executor loading the HLO artifacts produced by
 //!   `python/compile/aot.py` (Python is build-time only).
 //! * **[`metrics`]** — counters and event traces used by the experiment

@@ -5,6 +5,7 @@
 //! ```text
 //! repro solve      [--grid 2x2x2] [--n 16] [--scheme sync|async|trivial]
 //!                  [--backend native|xla] [--transport sim|shm]
+//!                  [--precision f32|f64] [--problem convdiff|jacobi]
 //!                  [--steps N] [--threshold 1e-6]
 //!                  [--latency-us 20] [--jitter 0.1] [--seed S]
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
@@ -22,12 +23,13 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use jack2::config::{Backend, ExperimentConfig, Scheme, TransportKind};
+use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TransportKind};
 use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
-use jack2::problem::Partition3D;
-use jack2::solver::solve;
+use jack2::problem::{Jacobi1D, Partition3D};
+use jack2::scalar::Scalar;
+use jack2::solver::{solve_experiment, SolveReport, SolverSession};
 use jack2::util::json;
 use jack2::{Error, Result};
 
@@ -71,7 +73,10 @@ fn print_usage() {
     println!(
         "repro — JACK2 reproduction experiment launcher\n\n\
          subcommands:\n  \
-         solve      run one configured solve (see --grid/--n/--scheme/--backend)\n  \
+         solve      run one configured solve (--grid/--n/--scheme/--backend;\n             \
+                    --precision f32|f64 for mixed precision, --problem\n             \
+                    convdiff|jacobi for the workload; f32 clamps the default\n             \
+                    threshold to 1e-4 unless --threshold is given)\n  \
          table1     E1: Jacobi vs async sweep over world sizes (paper Table 1)\n  \
          fig3       E2: mid-convergence solution profiles + interface jumps\n  \
          partition  E3: print the box partition and communication graph\n  \
@@ -139,6 +144,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
     if let Some(t) = flags.get("transport") {
         cfg.transport = TransportKind::parse(t)?;
     }
+    if let Some(p) = flags.get("precision") {
+        cfg.precision = Precision::parse(p)?;
+    }
     cfg.time_steps = get(flags, "steps", cfg.time_steps)?;
     cfg.threshold = get(flags, "threshold", cfg.threshold)?;
     cfg.net_latency_us = get(flags, "latency-us", cfg.net_latency_us)?;
@@ -163,11 +171,55 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
 }
 
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
-    let rep = solve(&cfg)?;
+    let mut cfg = config_from_flags(flags)?;
+    if cfg.precision == Precision::F32 && !flags.contains_key("threshold") {
+        // f32 payloads bottom out near the width's rounding floor, so the
+        // f64 default target may be unreachable; keep the default
+        // convergence target width-appropriate (explicit --threshold wins).
+        cfg.threshold = cfg.threshold.max(1e-4);
+    }
+    let problem = flags.get("problem").map(String::as_str).unwrap_or("convdiff");
+    match (problem, cfg.precision) {
+        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_experiment::<f64>(&cfg)?),
+        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_experiment::<f32>(&cfg)?),
+        ("jacobi" | "jacobi1d", Precision::F64) => {
+            print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg)?)
+        }
+        ("jacobi" | "jacobi1d", Precision::F32) => {
+            print_solve(flags, &cfg, solve_jacobi::<f32>(&cfg)?)
+        }
+        (other, _) => Err(Error::Config(format!(
+            "unknown problem {other:?} (expected convdiff or jacobi)"
+        ))),
+    }
+}
+
+/// The second shipped workload through the same `SolverSession` path:
+/// `--n` interior points of the 1-D backward-Euler heat chain, split
+/// over the configured world size.
+fn solve_jacobi<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
+    SolverSession::<S>::builder(cfg)
+        .problem(Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?)
+        .build()?
+        .run()
+}
+
+fn print_solve<S: Scalar>(
+    flags: &HashMap<String, String>,
+    cfg: &ExperimentConfig,
+    rep: SolveReport<S>,
+) -> Result<()> {
     if flags.contains_key("json") {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("config".to_string(), cfg.to_json());
+        obj.insert(
+            "problem".to_string(),
+            json::Json::Str(rep.problem.to_string()),
+        );
+        obj.insert(
+            "precision".to_string(),
+            json::Json::Str(rep.precision.to_string()),
+        );
         obj.insert("r_n".to_string(), json::Json::Num(rep.r_n));
         obj.insert(
             "iterations".to_string(),
@@ -185,8 +237,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         return Ok(());
     }
     println!(
-        "solve: {} backend={} transport={} grid={:?} n={} -> {} steps",
+        "solve: {} problem={} precision={} backend={} transport={} grid={:?} n={} -> {} steps",
         cfg.scheme.name(),
+        rep.problem,
+        rep.precision,
         cfg.backend.name(),
         cfg.transport.name(),
         cfg.process_grid,

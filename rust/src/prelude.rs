@@ -1,14 +1,29 @@
-//! Convenience re-exports for the typed session API: everything a
+//! Convenience re-exports for the typed session APIs: everything a
 //! Listing-5/Listing-6 program needs in one `use jack2::prelude::*;`.
 //!
-//! See the module docs of [`crate::jack::comm`] for a complete,
-//! compiling example.
+//! Two session layers are exported: the communicator session
+//! ([`JackComm`] and its typestate builder — see the module docs of
+//! [`crate::jack::comm`] for a complete, compiling example) and the
+//! solver session ([`SolverSession`] — problem-agnostic, width-generic
+//! full solves; see [`crate::solver::session`]):
+//!
+//! ```text
+//! SolverSession::<f32>::builder(&cfg)
+//!     .problem(ConvDiffProblem::from_config(&cfg)?)
+//!     .build()?
+//!     .run()?   // -> SolveReport<f32>
+//! ```
 
+pub use crate::config::{Backend, ExperimentConfig, Precision, Scheme, TransportKind};
 pub use crate::error::{Error, Result};
 pub use crate::graph::CommGraph;
 pub use crate::jack::{
     AsyncConfig, BufferSet, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode,
     NormKind, StepOutcome, TerminationProtocol,
 };
+pub use crate::problem::{ConvDiffProblem, Jacobi1D, Problem, ProblemWorker};
 pub use crate::scalar::Scalar;
+pub use crate::solver::{
+    solve_experiment, ComputeBackend, SolveReport, SolverSession, SolverSessionBuilder, StepReport,
+};
 pub use crate::transport::Transport;

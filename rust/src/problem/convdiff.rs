@@ -19,7 +19,17 @@
 //! matches `python/compile/kernels/ref.py` exactly; the sequential
 //! operations here are the verification oracles for both backends.
 
-use super::{idx3, partition::SubDomain};
+use std::collections::HashMap;
+
+use super::partition::{assemble_blocks, SubDomain};
+use super::{extract_face, idx3, Face, Partition3D, Problem, ProblemWorker};
+use crate::config::{Backend, ExperimentConfig};
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::jack::ComputeView;
+use crate::runtime::Engine;
+use crate::scalar::Scalar;
+use crate::solver::{ComputeBackend, NativeBackend, XlaBackend};
 
 /// Problem definition (defaults = the paper's arbitrary values).
 #[derive(Debug, Clone, PartialEq)]
@@ -185,6 +195,260 @@ impl ConvDiff {
     }
 }
 
+// ---------------------------------------------------------------------
+// The Problem implementation
+// ---------------------------------------------------------------------
+
+/// The convection–diffusion workload as a [`Problem`]: owns the operator,
+/// the box partition *and* the stencil coefficients — computed once here
+/// at construction instead of being re-derived per call site and plumbed
+/// through the rank spawner.
+#[derive(Debug, Clone)]
+pub struct ConvDiffProblem {
+    op: ConvDiff,
+    part: Partition3D,
+    coeffs: [f64; 8],
+}
+
+impl ConvDiffProblem {
+    /// Partition `op` over a `grid` of ranks.
+    pub fn new(op: ConvDiff, grid: (usize, usize, usize)) -> Result<Self> {
+        let part = Partition3D::cube(op.n, grid)?;
+        let coeffs = op.coeffs();
+        Ok(ConvDiffProblem { op, part, coeffs })
+    }
+
+    /// The configured experiment's workload (honours `n`, `nu`, `a`,
+    /// `dt` and the process grid).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let op = ConvDiff {
+            n: cfg.n,
+            nu: cfg.nu,
+            a: cfg.a,
+            dt: cfg.dt,
+            omega: 1.0,
+        };
+        ConvDiffProblem::new(op, cfg.process_grid)
+    }
+
+    pub fn operator(&self) -> &ConvDiff {
+        &self.op
+    }
+
+    pub fn partition(&self) -> &Partition3D {
+        &self.part
+    }
+
+    /// The stencil coefficients (computed once at construction).
+    pub fn coeffs(&self) -> [f64; 8] {
+        self.coeffs
+    }
+}
+
+impl<S: Scalar> Problem<S> for ConvDiffProblem {
+    type Worker = ConvDiffWorker<S>;
+
+    fn name(&self) -> &'static str {
+        "convdiff3d"
+    }
+
+    fn world_size(&self) -> usize {
+        self.part.world_size()
+    }
+
+    fn global_len(&self) -> usize {
+        let n = self.part.n;
+        n.0 * n.1 * n.2
+    }
+
+    fn comm_graphs(&self) -> Result<Vec<CommGraph>> {
+        self.part.comm_graphs()
+    }
+
+    fn check_backend(&self, backend: Backend) -> Result<()> {
+        match backend {
+            Backend::Native => Ok(()),
+            Backend::Xla if S::is_f64() => Ok(()),
+            // Same error the backend itself would raise at sweep time, so
+            // the build-time and runtime messages cannot drift.
+            Backend::Xla => Err(crate::solver::xla_backend::width_error::<S>()),
+        }
+    }
+
+    fn workers(&self, backend: Backend, inner_sweeps: usize) -> Result<Vec<ConvDiffWorker<S>>> {
+        Problem::<S>::check_backend(self, backend)?;
+        let p = self.part.world_size();
+
+        // XLA backend: compile executables once on the main thread per
+        // distinct block shape (PJRT compilation is the expensive part;
+        // executables are cheap shared handles cloned into rank threads).
+        let engine = match backend {
+            Backend::Xla => Some(Engine::cpu("artifacts")?),
+            Backend::Native => None,
+        };
+        let mut exe_cache: HashMap<
+            (usize, usize, usize),
+            (crate::runtime::SweepExecutable, Option<crate::runtime::SweepExecutable>),
+        > = HashMap::new();
+        if let Some(engine) = engine.as_ref() {
+            for rank in 0..p {
+                let dims = self.part.subdomain(rank).dims;
+                if !exe_cache.contains_key(&dims) {
+                    let exe1 = engine.load_sweep(dims)?;
+                    let exe_k = if inner_sweeps > 1 {
+                        engine.load_sweep_k(dims, inner_sweeps).ok()
+                    } else {
+                        None
+                    };
+                    exe_cache.insert(dims, (exe1, exe_k));
+                }
+            }
+        }
+
+        let coeffs_s: [S; 8] = self.coeffs.map(S::from_f64);
+        (0..p)
+            .map(|rank| {
+                let sub = self.part.subdomain(rank);
+                let faces = self.part.face_neighbors(rank);
+                let link_sizes = self.part.buffer_sizes(rank);
+                let compute: Box<dyn ComputeBackend<S>> = match backend {
+                    Backend::Native => Box::new(NativeBackend::<S>::new(sub.dims)),
+                    Backend::Xla => {
+                        let (exe1, exe_k) = exe_cache.get(&sub.dims).expect("precompiled");
+                        let mut be = XlaBackend::new(exe1.clone());
+                        if let Some(exe_k) = exe_k {
+                            be = be.with_inner(inner_sweeps, exe_k.clone());
+                        }
+                        Box::new(be)
+                    }
+                };
+                let mut face_link: [Option<usize>; 6] = [None; 6];
+                for (l, &(f, _)) in faces.iter().enumerate() {
+                    face_link[f as usize] = Some(l);
+                }
+                let (nx, ny, nz) = sub.dims;
+                let zero_faces: [Vec<S>; 6] = [
+                    vec![S::ZERO; ny * nz],
+                    vec![S::ZERO; ny * nz],
+                    vec![S::ZERO; nx * nz],
+                    vec![S::ZERO; nx * nz],
+                    vec![S::ZERO; nx * ny],
+                    vec![S::ZERO; nx * ny],
+                ];
+                let vol = sub.volume();
+                Ok(ConvDiffWorker {
+                    op: self.op.clone(),
+                    sub,
+                    faces: faces.iter().map(|&(f, _)| f).collect(),
+                    face_link,
+                    zero_faces,
+                    coeffs: coeffs_s,
+                    rhs: vec![S::ZERO; vol],
+                    compute,
+                    link_sizes,
+                })
+            })
+            .collect()
+    }
+
+    fn assemble(&self, blocks: &[Vec<S>]) -> Vec<S> {
+        assemble_blocks(&self.part, blocks)
+    }
+
+    fn rhs_global(&self, prev: &[f64]) -> Vec<f64> {
+        self.op.rhs_global(prev)
+    }
+
+    fn residual_max_norm(&self, u: &[f64], b: &[f64]) -> f64 {
+        self.op.residual_max_norm(u, b)
+    }
+}
+
+/// One rank's convection–diffusion state: subdomain geometry, the
+/// width-narrowed stencil coefficients, the per-time-step RHS block and
+/// the pluggable [`ComputeBackend`] that evaluates the sweep.
+pub struct ConvDiffWorker<S: Scalar> {
+    op: ConvDiff,
+    sub: SubDomain,
+    /// Existing faces in link order.
+    faces: Vec<Face>,
+    /// Face -> link index (None on physical boundaries).
+    face_link: [Option<usize>; 6],
+    /// All-zero halo planes for physical boundaries.
+    zero_faces: [Vec<S>; 6],
+    coeffs: [S; 8],
+    rhs: Vec<S>,
+    compute: Box<dyn ComputeBackend<S>>,
+    link_sizes: Vec<usize>,
+}
+
+impl<S: Scalar> ProblemWorker<S> for ConvDiffWorker<S> {
+    fn rank(&self) -> usize {
+        self.sub.rank
+    }
+
+    fn local_len(&self) -> usize {
+        self.sub.volume()
+    }
+
+    fn link_sizes(&self) -> Vec<usize> {
+        self.link_sizes.clone()
+    }
+
+    fn begin_step(&mut self, prev: &[S]) -> Result<()> {
+        // The RHS block is rewritten in place below; let the backend drop
+        // any per-step marshalled caches keyed on its (stable) address.
+        self.compute.begin_step();
+        // B = U_prev/δt + s, evaluated in the f64 accumulation domain and
+        // narrowed once into the payload-width RHS block.
+        let (nx, ny, nz) = self.sub.dims;
+        debug_assert_eq!(prev.len(), nx * ny * nz);
+        let h = self.op.h();
+        for ix in 0..nx {
+            let x = (self.sub.lo.0 + ix + 1) as f64 * h;
+            for iy in 0..ny {
+                let y = (self.sub.lo.1 + iy + 1) as f64 * h;
+                for iz in 0..nz {
+                    let z = (self.sub.lo.2 + iz + 1) as f64 * h;
+                    let i = idx3(self.sub.dims, ix, iy, iz);
+                    self.rhs[i] =
+                        S::from_f64(prev[i].to_f64() / self.op.dt + self.op.source(x, y, z));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn publish(&mut self, v: ComputeView<'_, S>) -> Result<()> {
+        for (l, &f) in self.faces.iter().enumerate() {
+            extract_face(v.sol, self.sub.dims, f, &mut v.send[l]);
+        }
+        Ok(())
+    }
+
+    fn compute(&mut self, v: ComputeView<'_, S>, inner_sweeps: usize) -> Result<()> {
+        let dims = self.sub.dims;
+        let face_link = self.face_link; // [Option<usize>; 6] is Copy
+        let zero_faces: &[Vec<S>; 6] = &self.zero_faces;
+        let halo: [&[S]; 6] = std::array::from_fn(|fi| {
+            face_link[fi]
+                .map(|l| v.recv[l].as_slice())
+                .unwrap_or(zero_faces[fi].as_slice())
+        });
+        if inner_sweeps > 1 {
+            self.compute
+                .sweep_k(v.sol, halo, &self.rhs, &self.coeffs, v.res, inner_sweeps)?;
+        } else {
+            self.compute
+                .sweep(v.sol, halo, &self.rhs, &self.coeffs, v.res)?;
+        }
+        for (l, &f) in self.faces.iter().enumerate() {
+            extract_face(v.sol, dims, f, &mut v.send[l]);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,6 +503,39 @@ mod tests {
         for i in 0..64 {
             assert!((res[i] - c[0] * (u_new[i] - u[i])).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn problem_owns_coeffs_once() {
+        let prob = ConvDiffProblem::new(ConvDiff::paper(6, 0.01), (2, 1, 1)).unwrap();
+        assert_eq!(prob.coeffs(), prob.operator().coeffs());
+        assert_eq!(Problem::<f64>::world_size(&prob), 2);
+        assert_eq!(Problem::<f64>::global_len(&prob), 216);
+        assert_eq!(Problem::<f64>::comm_graphs(&prob).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn worker_rhs_matches_oracle_block() {
+        let prob = ConvDiffProblem::new(ConvDiff::paper(6, 0.01), (2, 1, 1)).unwrap();
+        let mut workers: Vec<ConvDiffWorker<f64>> =
+            prob.workers(Backend::Native, 1).unwrap();
+        for w in workers.iter_mut() {
+            let prev: Vec<f64> = (0..w.local_len()).map(|i| i as f64 * 0.01).collect();
+            w.begin_step(&prev).unwrap();
+            let want = prob.operator().rhs_block(&w.sub, &prev);
+            for i in 0..want.len() {
+                assert!((w.rhs[i] - want[i]).abs() < 1e-12, "rank {} rhs[{i}]", w.rank());
+            }
+        }
+    }
+
+    #[test]
+    fn xla_rejects_f32_with_capability_error() {
+        let prob = ConvDiffProblem::new(ConvDiff::paper(4, 0.01), (1, 1, 1)).unwrap();
+        let err = Problem::<f32>::check_backend(&prob, Backend::Xla).unwrap_err();
+        assert!(err.to_string().contains("f64-only"), "{err}");
+        assert!(Problem::<f64>::check_backend(&prob, Backend::Xla).is_ok());
+        assert!(Problem::<f32>::check_backend(&prob, Backend::Native).is_ok());
     }
 
     #[test]

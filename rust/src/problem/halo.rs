@@ -1,6 +1,9 @@
-//! Halo face extraction from row-major blocks.
+//! Halo face extraction from row-major blocks, generic over the payload
+//! [`Scalar`] width (pure copies — no arithmetic, so `f32` blocks stage
+//! faces exactly as `f64` ones do).
 
 use super::{idx3, Face};
+use crate::scalar::Scalar;
 
 /// Number of points on `face` of a block with the given dims.
 pub fn face_size(dims: (usize, usize, usize), face: Face) -> usize {
@@ -14,7 +17,7 @@ pub fn face_size(dims: (usize, usize, usize), face: Face) -> usize {
 
 /// Extract the boundary plane of `u` on `face` into `out` (row-major over
 /// the two remaining axes, matching the Python model's face layout).
-pub fn extract_face(u: &[f64], dims: (usize, usize, usize), face: Face, out: &mut [f64]) {
+pub fn extract_face<S: Scalar>(u: &[S], dims: (usize, usize, usize), face: Face, out: &mut [S]) {
     let (nx, ny, nz) = dims;
     debug_assert_eq!(u.len(), nx * ny * nz);
     debug_assert_eq!(out.len(), face_size(dims, face));
@@ -44,8 +47,8 @@ pub fn extract_face(u: &[f64], dims: (usize, usize, usize), face: Face, out: &mu
 }
 
 /// Convenience allocating variant.
-pub fn extract_face_vec(u: &[f64], dims: (usize, usize, usize), face: Face) -> Vec<f64> {
-    let mut out = vec![0.0; face_size(dims, face)];
+pub fn extract_face_vec<S: Scalar>(u: &[S], dims: (usize, usize, usize), face: Face) -> Vec<S> {
+    let mut out = vec![S::ZERO; face_size(dims, face)];
     extract_face(u, dims, face, &mut out);
     out
 }
@@ -105,5 +108,13 @@ mod tests {
                 assert_eq!(zp[ix * 3 + iy], u[idx3(dims, ix, iy, 3)]);
             }
         }
+    }
+
+    #[test]
+    fn f32_faces_extract_identically() {
+        let dims = (2, 3, 4);
+        let u: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let xm = extract_face_vec(&u, dims, Face::XM);
+        assert_eq!(xm, u[0..12].to_vec());
     }
 }

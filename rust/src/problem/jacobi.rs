@@ -1,0 +1,358 @@
+//! Second [`Problem`] implementor: 1-D backward-Euler heat equation on
+//! the unit interval, Jacobi-relaxed over a chain of ranks.
+//!
+//! ```text
+//! du/dt - u'' = s   on (0, 1), homogeneous Dirichlet boundary
+//! ```
+//!
+//! Backward Euler + central differences on `n` interior points (spacing
+//! h = 1/(n+1)) give, per time step, the tridiagonal system
+//!
+//! ```text
+//! (1/δt + 2/h²) u_i - (1/h²)(u_{i-1} + u_{i+1}) = u_prev_i/δt + s_i
+//! ```
+//!
+//! which is strictly diagonally dominant, so Jacobi converges. Each rank
+//! owns a contiguous block of the chain and exchanges a single boundary
+//! value with each neighbour per iteration — a deliberately different
+//! dimensionality, partitioning and halo shape from the convection–
+//! diffusion workload, proving the [`Problem`] trait abstracts the
+//! workload rather than renaming it. The sweep is written directly in
+//! the payload width `S` (no [`crate::solver::ComputeBackend`] needed):
+//! a problem chooses its own compute machinery.
+
+use super::{Problem, ProblemWorker};
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::jack::ComputeView;
+use crate::scalar::Scalar;
+
+/// Source term s(x): one definition shared by the global verification
+/// oracle ([`Jacobi1D::source`] → `rhs_global`) and the per-rank workers
+/// (`begin_step`), so the solve RHS and the oracle RHS cannot drift.
+fn source_term(x: f64) -> f64 {
+    1.0 + 4.0 * x * (1.0 - x)
+}
+
+/// Global description: `n` interior points over `ranks` chain ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Jacobi1D {
+    /// Interior grid points.
+    pub n: usize,
+    /// Time step δt.
+    pub dt: f64,
+    /// Number of ranks in the chain.
+    pub ranks: usize,
+}
+
+impl Jacobi1D {
+    pub fn new(n: usize, ranks: usize, dt: f64) -> Result<Self> {
+        if ranks == 0 || n < ranks {
+            return Err(Error::Config(format!(
+                "jacobi1d: need at least one point per rank (n={n}, ranks={ranks})"
+            )));
+        }
+        if dt <= 0.0 {
+            return Err(Error::Config(format!("jacobi1d: dt must be positive ({dt})")));
+        }
+        Ok(Jacobi1D { n, dt, ranks })
+    }
+
+    /// Grid spacing h = 1/(n+1).
+    pub fn h(&self) -> f64 {
+        1.0 / (self.n as f64 + 1.0)
+    }
+
+    /// Diagonal and off-diagonal coefficients `(c_d, c_o)`.
+    pub fn coeffs(&self) -> (f64, f64) {
+        let inv_h2 = 1.0 / (self.h() * self.h());
+        (1.0 / self.dt + 2.0 * inv_h2, inv_h2)
+    }
+
+    /// Source term s(x): a fixed smooth bump.
+    pub fn source(&self, x: f64) -> f64 {
+        source_term(x)
+    }
+
+    /// Contiguous block of `rank`: (offset, length).
+    pub fn block(&self, rank: usize) -> (usize, usize) {
+        let q = self.n / self.ranks;
+        let r = self.n % self.ranks;
+        let len = q + usize::from(rank < r);
+        let offset = rank * q + rank.min(r);
+        (offset, len)
+    }
+
+    /// Sequential `A u` on the full chain (verification oracle).
+    pub fn apply_global(&self, u: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(u.len(), self.n);
+        let (cd, co) = self.coeffs();
+        (0..self.n)
+            .map(|i| {
+                let left = if i > 0 { u[i - 1] } else { 0.0 };
+                let right = if i + 1 < self.n { u[i + 1] } else { 0.0 };
+                cd * u[i] - co * (left + right)
+            })
+            .collect()
+    }
+
+    /// One sequential global Jacobi sweep (oracle): returns (u_new, res).
+    pub fn sweep_seq(&self, u: &[f64], b: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (cd, co) = self.coeffs();
+        let mut u_new = vec![0.0; u.len()];
+        let mut res = vec![0.0; u.len()];
+        for i in 0..u.len() {
+            let left = if i > 0 { u[i - 1] } else { 0.0 };
+            let right = if i + 1 < u.len() { u[i + 1] } else { 0.0 };
+            let u_star = (b[i] + co * (left + right)) / cd;
+            res[i] = cd * (u_star - u[i]);
+            u_new[i] = u_star;
+        }
+        (u_new, res)
+    }
+}
+
+impl<S: Scalar> Problem<S> for Jacobi1D {
+    type Worker = JacobiWorker<S>;
+
+    fn name(&self) -> &'static str {
+        "jacobi1d"
+    }
+
+    fn world_size(&self) -> usize {
+        self.ranks
+    }
+
+    fn global_len(&self) -> usize {
+        self.n
+    }
+
+    fn comm_graphs(&self) -> Result<Vec<CommGraph>> {
+        (0..self.ranks)
+            .map(|r| {
+                let mut nb = Vec::new();
+                if r > 0 {
+                    nb.push(r - 1);
+                }
+                if r + 1 < self.ranks {
+                    nb.push(r + 1);
+                }
+                CommGraph::symmetric(r, nb)
+            })
+            .collect()
+    }
+
+    // check_backend: the default — native only, clean capability error
+    // for the XLA backend (its artifacts are 3-D stencil sweeps).
+
+    fn workers(
+        &self,
+        backend: crate::config::Backend,
+        _inner_sweeps: usize,
+    ) -> Result<Vec<JacobiWorker<S>>> {
+        Problem::<S>::check_backend(self, backend)?;
+        let (cd, co) = self.coeffs();
+        Ok((0..self.ranks)
+            .map(|rank| {
+                let (offset, len) = self.block(rank);
+                // Link order mirrors comm_graphs: left neighbour first.
+                let left_link = (rank > 0).then_some(0);
+                let right_link =
+                    (rank + 1 < self.ranks).then_some(usize::from(rank > 0));
+                JacobiWorker {
+                    rank,
+                    offset,
+                    len,
+                    dt: self.dt,
+                    h: self.h(),
+                    cd: S::from_f64(cd),
+                    co: S::from_f64(co),
+                    inv_cd: S::from_f64(1.0 / cd),
+                    rhs: vec![S::ZERO; len],
+                    scratch: vec![S::ZERO; len],
+                    left_link,
+                    right_link,
+                }
+            })
+            .collect())
+    }
+
+    fn assemble(&self, blocks: &[Vec<S>]) -> Vec<S> {
+        // Chain blocks are contiguous in rank order.
+        let mut out = Vec::with_capacity(self.n);
+        for b in blocks {
+            out.extend_from_slice(b);
+        }
+        debug_assert_eq!(out.len(), self.n);
+        out
+    }
+
+    fn rhs_global(&self, prev: &[f64]) -> Vec<f64> {
+        let h = self.h();
+        (0..self.n)
+            .map(|i| prev[i] / self.dt + self.source((i + 1) as f64 * h))
+            .collect()
+    }
+
+    fn residual_max_norm(&self, u: &[f64], b: &[f64]) -> f64 {
+        self.apply_global(u)
+            .iter()
+            .zip(b)
+            .fold(0.0f64, |m, (au, bi)| m.max((bi - au).abs()))
+    }
+}
+
+/// One rank's chain block. The sweep runs directly in the payload width.
+pub struct JacobiWorker<S: Scalar> {
+    rank: usize,
+    offset: usize,
+    len: usize,
+    dt: f64,
+    h: f64,
+    cd: S,
+    co: S,
+    inv_cd: S,
+    rhs: Vec<S>,
+    scratch: Vec<S>,
+    left_link: Option<usize>,
+    right_link: Option<usize>,
+}
+
+impl<S: Scalar> JacobiWorker<S> {
+    fn publish_boundary(&self, sol: &[S], send: &mut [Vec<S>]) {
+        if let Some(l) = self.left_link {
+            send[l][0] = sol[0];
+        }
+        if let Some(l) = self.right_link {
+            send[l][0] = sol[self.len - 1];
+        }
+    }
+}
+
+impl<S: Scalar> ProblemWorker<S> for JacobiWorker<S> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn local_len(&self) -> usize {
+        self.len
+    }
+
+    fn link_sizes(&self) -> Vec<usize> {
+        // One boundary value per neighbour.
+        vec![1; usize::from(self.left_link.is_some()) + usize::from(self.right_link.is_some())]
+    }
+
+    fn begin_step(&mut self, prev: &[S]) -> Result<()> {
+        debug_assert_eq!(prev.len(), self.len);
+        for i in 0..self.len {
+            let x = (self.offset + i + 1) as f64 * self.h;
+            self.rhs[i] = S::from_f64(prev[i].to_f64() / self.dt + source_term(x));
+        }
+        Ok(())
+    }
+
+    fn publish(&mut self, v: ComputeView<'_, S>) -> Result<()> {
+        self.publish_boundary(v.sol, v.send);
+        Ok(())
+    }
+
+    fn compute(&mut self, v: ComputeView<'_, S>, inner_sweeps: usize) -> Result<()> {
+        let left = self.left_link.map(|l| v.recv[l][0]).unwrap_or(S::ZERO);
+        let right = self.right_link.map(|l| v.recv[l][0]).unwrap_or(S::ZERO);
+        // Frozen-halo block relaxation, like the stencil backends' sweep_k.
+        for _ in 0..inner_sweeps.max(1) {
+            for i in 0..self.len {
+                let lv = if i == 0 { left } else { v.sol[i - 1] };
+                let rv = if i + 1 == self.len { right } else { v.sol[i + 1] };
+                let u_star = (self.rhs[i] + self.co * (lv + rv)) * self.inv_cd;
+                v.res[i] = self.cd * (u_star - v.sol[i]);
+                self.scratch[i] = u_star;
+            }
+            std::mem::swap(v.sol, &mut self.scratch);
+        }
+        self.publish_boundary(v.sol, v.send);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::graph::{is_connected, validate_world};
+
+    #[test]
+    fn blocks_tile_the_chain() {
+        for (n, p) in [(10, 3), (7, 7), (16, 4), (5, 2)] {
+            let j = Jacobi1D::new(n, p, 0.01).unwrap();
+            let mut next = 0;
+            for r in 0..p {
+                let (off, len) = j.block(r);
+                assert_eq!(off, next);
+                assert!(len >= n / p && len <= n / p + 1);
+                next = off + len;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn chain_graphs_valid_and_connected() {
+        let j = Jacobi1D::new(12, 4, 0.01).unwrap();
+        let g = Problem::<f64>::comm_graphs(&j).unwrap();
+        validate_world(&g).unwrap();
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn sequential_jacobi_converges() {
+        let j = Jacobi1D::new(24, 1, 0.01).unwrap();
+        let b = Problem::<f64>::rhs_global(&j, &vec![0.0; 24]);
+        let mut u = vec![0.0; 24];
+        let mut last = f64::INFINITY;
+        for _ in 0..500 {
+            let (un, res) = j.sweep_seq(&u, &b);
+            u = un;
+            last = res.iter().fold(0.0f64, |m, r| m.max(r.abs()));
+        }
+        assert!(last < 1e-10, "residual {last}");
+        assert!(Problem::<f64>::residual_max_norm(&j, &u, &b) < 1e-10);
+    }
+
+    #[test]
+    fn worker_sweep_matches_sequential_oracle() {
+        let j = Jacobi1D::new(9, 1, 0.01).unwrap();
+        let mut workers: Vec<JacobiWorker<f64>> = j.workers(Backend::Native, 1).unwrap();
+        let w = &mut workers[0];
+        let mut u: Vec<f64> = (0..9).map(|i| (i as f64 * 0.4).sin()).collect();
+        let prev = vec![0.25; 9];
+        w.begin_step(&prev).unwrap();
+        let b = Problem::<f64>::rhs_global(&j, &prev);
+        let (want_u, want_r) = j.sweep_seq(&u, &b);
+
+        let mut res = vec![0.0; 9];
+        let mut send: Vec<Vec<f64>> = vec![];
+        let recv: Vec<Vec<f64>> = vec![];
+        let view = ComputeView {
+            recv: &recv,
+            send: &mut send,
+            sol: &mut u,
+            res: &mut res,
+        };
+        w.compute(view, 1).unwrap();
+        for i in 0..9 {
+            assert!((u[i] - want_u[i]).abs() < 1e-13, "u[{i}]");
+            assert!((res[i] - want_r[i]).abs() < 1e-13, "res[{i}]");
+        }
+    }
+
+    #[test]
+    fn xla_backend_rejected_cleanly() {
+        let j = Jacobi1D::new(8, 2, 0.01).unwrap();
+        let err = Problem::<f64>::check_backend(&j, Backend::Xla).unwrap_err();
+        assert!(err.to_string().contains("no XLA compute path"), "{err}");
+        let err = Jacobi1D::new(2, 3, 0.01).unwrap_err();
+        assert!(err.to_string().contains("per rank"), "{err}");
+    }
+}

@@ -1,14 +1,148 @@
-//! The paper's evaluation workload: 3-D convection–diffusion on the unit
+//! Problem layer: what the solver iterates on.
+//!
+//! The paper's evaluation workload — 3-D convection–diffusion on the unit
 //! cube, finite differences + backward Euler, box-partitioned over the
-//! processes (paper §4.1, Fig. 2).
+//! processes (paper §4.1, Fig. 2) — lives in [`convdiff`]. But JACK2's
+//! whole point is *one* interface for parallel iterative methods, so the
+//! workload is behind the width-generic [`Problem`] / [`ProblemWorker`]
+//! trait pair: the solver session ([`crate::solver::SolverSession`])
+//! drives any implementor over any [`crate::transport::Transport`] at any
+//! [`Scalar`] width. [`jacobi::Jacobi1D`] is the second implementor —
+//! deliberately a different dimensionality, partitioning and halo shape,
+//! proving the trait is an abstraction and not a rename.
+//!
+//! # Adding a problem
+//!
+//! (Mirrors `transport`'s "Adding a backend" guide.) A problem is split
+//! into a **global** description and a **per-rank worker**:
+//!
+//! 1. Implement [`Problem<S>`] on the global description. It owns the
+//!    partitioning (how many ranks, which talk to which —
+//!    [`Problem::comm_graphs`]), builds every rank's worker up front on
+//!    the main thread ([`Problem::workers`] — do one-time setup such as
+//!    coefficient computation or AOT-artifact compilation *here*, once,
+//!    not per rank thread), and provides the sequential verification
+//!    oracle in the `f64` accumulation domain ([`Problem::rhs_global`],
+//!    [`Problem::residual_max_norm`]) plus block assembly
+//!    ([`Problem::assemble`]).
+//! 2. Implement [`ProblemWorker<S>`] on the per-rank state. It owns the
+//!    local geometry ([`ProblemWorker::local_len`],
+//!    [`ProblemWorker::link_sizes`] — link order must match the rank's
+//!    [`crate::graph::CommGraph`] link order), the per-time-step RHS
+//!    ([`ProblemWorker::begin_step`]), and the compute phase
+//!    ([`ProblemWorker::compute`]): consume the received halos from
+//!    [`ComputeView::recv`], relax `sol` in place, write the pointwise
+//!    residual into `res`, and publish the new boundary into `send`.
+//!    [`ProblemWorker::publish`] writes the iteration-0 boundary (the
+//!    initial guess's faces) before the loop starts.
+//! 3. If the problem supports a non-native compute backend, override
+//!    [`Problem::check_backend`]; the default accepts
+//!    [`Backend::Native`] only and rejects everything else with a clean
+//!    capability error at session build time.
+//! 4. Run it through the session conformance tests in
+//!    `rust/tests/solver_session.rs` — every problem should solve end to
+//!    end on both transports through the same `SolverSession` path.
+//!
+//! Nothing in the solver layer names a concrete problem: if your
+//! implementation compiles against these two traits, every scheme
+//! (Algorithms 1–3), transport backend and payload width works with it.
 
 pub mod convdiff;
 pub mod halo;
+pub mod jacobi;
 pub mod partition;
 
-pub use convdiff::ConvDiff;
+pub use convdiff::{ConvDiff, ConvDiffProblem};
 pub use halo::{extract_face, extract_face_vec, face_size};
-pub use partition::{Partition3D, SubDomain};
+pub use jacobi::Jacobi1D;
+pub use partition::{assemble_blocks, Partition3D, SubDomain};
+
+use crate::config::Backend;
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::jack::ComputeView;
+use crate::scalar::Scalar;
+
+/// A distributed fixed-point problem: how the global system splits over
+/// ranks, which ranks exchange halos, and what the sequential
+/// verification oracle is. The solver session is generic over this trait
+/// (plus [`ProblemWorker`]) — see the module docs for the implementation
+/// guide.
+pub trait Problem<S: Scalar> {
+    /// The per-rank state driven inside each rank thread.
+    type Worker: ProblemWorker<S>;
+
+    /// Display name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of ranks the problem partitions into.
+    fn world_size(&self) -> usize;
+
+    /// Length of the assembled global solution vector.
+    fn global_len(&self) -> usize;
+
+    /// Consistent per-rank communication graphs (index = rank). Link
+    /// order here fixes the buffer order everywhere downstream.
+    fn comm_graphs(&self) -> Result<Vec<CommGraph>>;
+
+    /// Can this problem execute its sweep on `backend` at width `S`?
+    /// Called at session build time so capability errors surface before
+    /// any rank spawns. The default accepts only the native backend.
+    fn check_backend(&self, backend: Backend) -> Result<()> {
+        match backend {
+            Backend::Native => Ok(()),
+            Backend::Xla => Err(Error::Config(format!(
+                "problem {:?} has no XLA compute path (use --backend native)",
+                self.name()
+            ))),
+        }
+    }
+
+    /// Build every rank's worker, in rank order, on the main thread.
+    /// One-time setup (coefficients, RHS machinery, AOT compilation)
+    /// happens here exactly once per solve.
+    fn workers(&self, backend: Backend, inner_sweeps: usize) -> Result<Vec<Self::Worker>>;
+
+    /// Assemble per-rank solution blocks (index = rank) into the global
+    /// vector, still at payload width.
+    fn assemble(&self, blocks: &[Vec<S>]) -> Vec<S>;
+
+    /// Verification oracle: the global RHS produced by the previous
+    /// time step's global solution (`f64` accumulation domain).
+    fn rhs_global(&self, prev: &[f64]) -> Vec<f64>;
+
+    /// Verification oracle: `‖b − A u‖∞` on the full grid — the paper's
+    /// reported `r_n`.
+    fn residual_max_norm(&self, u: &[f64], b: &[f64]) -> f64;
+}
+
+/// One rank's share of a [`Problem`]: local geometry, per-step RHS, and
+/// the compute phase run inside [`crate::jack::JackComm::iterate`].
+pub trait ProblemWorker<S: Scalar>: Send + 'static {
+    /// The rank this worker was built for.
+    fn rank(&self) -> usize;
+
+    /// Local block length (solution and residual vector size).
+    fn local_len(&self) -> usize;
+
+    /// Per-link halo buffer sizes, in the rank's graph link order
+    /// (send and recv sizes are equal: both sides exchange a face).
+    fn link_sizes(&self) -> Vec<usize>;
+
+    /// Start a time step: build the local RHS from the previous local
+    /// iterate (`prev` has [`Self::local_len`] entries).
+    fn begin_step(&mut self, prev: &[S]) -> Result<()>;
+
+    /// Write the current iterate's boundary into the send buffers —
+    /// called once before `iterate` so iteration 0 publishes the
+    /// initial guess's faces, exactly as Listing 6 does.
+    fn publish(&mut self, v: ComputeView<'_, S>) -> Result<()>;
+
+    /// One compute phase: consume the received halos, relax the local
+    /// block in place, fill the pointwise residual, and publish the new
+    /// boundary into the send buffers.
+    fn compute(&mut self, v: ComputeView<'_, S>, inner_sweeps: usize) -> Result<()>;
+}
 
 /// Face directions of a box subdomain, in the canonical link order used
 /// everywhere (send/recv buffer `l` ↔ the l-th *existing* face in this

@@ -2,9 +2,10 @@
 //! `n³` interior points is split over a `px × py × pz` process grid; each
 //! rank owns one box subdomain and talks to its face neighbours.
 
-use super::{halo::face_size, Face};
+use super::{halo::face_size, idx3, Face};
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
+use crate::scalar::Scalar;
 use crate::simmpi::Rank;
 
 /// Global partition description.
@@ -135,6 +136,26 @@ impl SubDomain {
     }
 }
 
+/// Assemble a global grid vector from per-rank blocks (index = rank),
+/// generic over the payload width.
+pub fn assemble_blocks<S: Scalar>(part: &Partition3D, blocks: &[Vec<S>]) -> Vec<S> {
+    let n = part.n;
+    let mut out = vec![S::ZERO; n.0 * n.1 * n.2];
+    for (rank, block) in blocks.iter().enumerate() {
+        let sub = part.subdomain(rank);
+        let (bx, by, bz) = sub.dims;
+        for ix in 0..bx {
+            for iy in 0..by {
+                for iz in 0..bz {
+                    out[idx3(n, sub.lo.0 + ix, sub.lo.1 + iy, sub.lo.2 + iz)] =
+                        block[idx3(sub.dims, ix, iy, iz)];
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +231,28 @@ mod tests {
         let p = Partition3D::new((4, 6, 8), (2, 1, 1)).unwrap();
         // rank 0: dims (2,6,8); only XP neighbour; face area = 6*8
         assert_eq!(p.buffer_sizes(0), vec![48]);
+    }
+
+    #[test]
+    fn assemble_blocks_tiles_back() {
+        let p = Partition3D::cube(4, (2, 1, 1)).unwrap();
+        let global: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let blocks: Vec<Vec<f64>> = (0..2)
+            .map(|r| {
+                let sub = p.subdomain(r);
+                let mut b = vec![0.0; sub.volume()];
+                for ix in 0..sub.dims.0 {
+                    for iy in 0..sub.dims.1 {
+                        for iz in 0..sub.dims.2 {
+                            b[idx3(sub.dims, ix, iy, iz)] =
+                                global[idx3((4, 4, 4), sub.lo.0 + ix, sub.lo.1 + iy, sub.lo.2 + iz)];
+                        }
+                    }
+                }
+                b
+            })
+            .collect();
+        assert_eq!(assemble_blocks(&p, &blocks), global);
     }
 
     #[test]

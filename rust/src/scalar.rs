@@ -91,6 +91,28 @@ pub trait Scalar:
     fn decode(wire: &[f64]) -> Vec<Self> {
         wire.iter().map(|&w| Self::from_f64(w)).collect()
     }
+
+    /// Width witness: `Some` iff `Self` is `f64`. Lets full-width-only
+    /// capabilities (e.g. the XLA compute backend, whose AOT artifacts
+    /// are compiled for `f64`) take the borrow through unchanged while
+    /// rejecting narrower scalars with a clean capability error instead
+    /// of a silent up-cast. The default (narrow) implementation returns
+    /// `None`.
+    fn f64_slice(s: &[Self]) -> Option<&[f64]> {
+        let _ = s;
+        None
+    }
+
+    /// Mutable-vector counterpart of [`Scalar::f64_slice`].
+    fn f64_vec_mut(v: &mut Vec<Self>) -> Option<&mut Vec<f64>> {
+        let _ = v;
+        None
+    }
+
+    /// `true` iff this width is `f64` (the full wire/accumulation width).
+    fn is_f64() -> bool {
+        Self::f64_slice(&[]).is_some()
+    }
 }
 
 impl Scalar for f64 {
@@ -116,6 +138,14 @@ impl Scalar for f64 {
     fn deliver(slot: &mut Vec<f64>, incoming: &mut MsgBuf) {
         debug_assert_eq!(slot.len(), incoming.len());
         std::mem::swap(slot, incoming.vec_mut());
+    }
+
+    fn f64_slice(s: &[f64]) -> Option<&[f64]> {
+        Some(s)
+    }
+
+    fn f64_vec_mut(v: &mut Vec<f64>) -> Option<&mut Vec<f64>> {
+        Some(v)
     }
 }
 
@@ -190,5 +220,18 @@ mod tests {
         assert_eq!(f64::decode(&[1.5]), vec![1.5f64]);
         assert_eq!(<f32 as Scalar>::NAME, "f32");
         assert_eq!(<f64 as Scalar>::NAME, "f64");
+    }
+
+    #[test]
+    fn width_witness_identifies_f64_only() {
+        assert!(<f64 as Scalar>::is_f64());
+        assert!(!<f32 as Scalar>::is_f64());
+        let d = [1.0f64, 2.0];
+        assert_eq!(f64::f64_slice(&d), Some(&d[..]));
+        assert_eq!(f32::f64_slice(&[1.0f32]), None);
+        let mut v = vec![3.0f64];
+        assert!(f64::f64_vec_mut(&mut v).is_some());
+        let mut w = vec![3.0f32];
+        assert!(f32::f64_vec_mut(&mut w).is_none());
     }
 }

@@ -1,25 +1,35 @@
-//! Compute backend abstraction: who evaluates the subdomain sweep.
+//! Compute backend abstraction: who evaluates the subdomain sweep, at
+//! which payload width.
 
 use crate::error::Result;
+use crate::scalar::Scalar;
 
-/// One subdomain's compute phase (the paper's `Compute(...)` in Listing 6).
+/// One subdomain's compute phase (the paper's `Compute(...)` in Listing 6)
+/// for a 3-D 7-point stencil, generic over the payload [`Scalar`] width.
 ///
 /// Implementations update `u` in place with the relaxed iterate and fill
 /// `res` with the pointwise residual `b − A u` (evaluated at the *input*
 /// iterate). `faces` are the six halo planes in [`crate::problem::Face`]
-/// order; physical-boundary faces are all-zero slices.
-pub trait ComputeBackend: Send {
+/// order; physical-boundary faces are all-zero slices. The coefficient
+/// layout is `[c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega]`.
+pub trait ComputeBackend<S: Scalar>: Send {
     /// Block dims this backend was built for.
     fn dims(&self) -> (usize, usize, usize);
+
+    /// A new time step is starting: inputs that were invariant within
+    /// the previous step (the RHS block) may now change, even in place
+    /// at the same address — backends caching marshalled forms of them
+    /// must invalidate here. Default: no-op.
+    fn begin_step(&mut self) {}
 
     /// One sweep: `u ← u + ω((b − Σc·halo)/c_d − u)`, `res ← b − A u`.
     fn sweep(
         &mut self,
-        u: &mut Vec<f64>,
-        faces: [&[f64]; 6],
-        rhs: &[f64],
-        coeffs: &[f64; 8],
-        res: &mut Vec<f64>,
+        u: &mut Vec<S>,
+        faces: [&[S]; 6],
+        rhs: &[S],
+        coeffs: &[S; 8],
+        res: &mut Vec<S>,
     ) -> Result<()>;
 
     /// `k` sweeps with *frozen* halo faces (block relaxation — the
@@ -28,11 +38,11 @@ pub trait ComputeBackend: Send {
     /// fused implementation (the XLA backend compiles a k-sweep artifact).
     fn sweep_k(
         &mut self,
-        u: &mut Vec<f64>,
-        faces: [&[f64]; 6],
-        rhs: &[f64],
-        coeffs: &[f64; 8],
-        res: &mut Vec<f64>,
+        u: &mut Vec<S>,
+        faces: [&[S]; 6],
+        rhs: &[S],
+        coeffs: &[S; 8],
+        res: &mut Vec<S>,
         k: usize,
     ) -> Result<()> {
         for _ in 0..k.max(1) {

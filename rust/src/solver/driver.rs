@@ -1,435 +1,20 @@
-//! Multi-rank solve driver: spawns one thread per rank (the simulated MPI
-//! processes), runs the configured iterative scheme over JACK2, steps the
-//! backward-Euler time loop, gathers the distributed solution, and
-//! verifies the final residual `r_n = ‖B − A Ũ‖∞` sequentially — the
-//! quantity the paper's Table 1 reports.
+//! Legacy entry point. The 150-line monolith that used to live here —
+//! XLA cache setup, transport selection, rank spawning and report
+//! aggregation welded to the convection–diffusion workload — is now the
+//! problem-agnostic, width-generic [`crate::solver::SolverSession`];
+//! only the deprecated one-call shim remains for existing callers.
 
-use std::time::{Duration, Instant};
+use super::session::{solve_experiment, SolveReport};
+use crate::config::ExperimentConfig;
+use crate::error::Result;
 
-use super::backend::ComputeBackend;
-use super::native::NativeBackend;
-use super::xla_backend::XlaBackend;
-use crate::config::{Backend, ExperimentConfig, Scheme, TransportKind};
-use crate::error::{Error, Result};
-use crate::graph::CommGraph;
-use crate::jack::{AsyncConfig, ComputeView, IterateOpts, JackComm, NormKind, StepOutcome};
-use crate::metrics::RankMetrics;
-use crate::problem::{extract_face, idx3, ConvDiff, Face, Partition3D, SubDomain};
-use crate::runtime::Engine;
-use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
-use crate::transport::{ShmConfig, ShmWorld, Transport};
-
-/// Aggregated per-time-step results.
-#[derive(Debug, Clone)]
-pub struct StepReport {
-    pub step: usize,
-    /// Slowest rank's wall-clock for this step.
-    pub wall: Duration,
-    /// Max local iteration count (equals the global count when
-    /// synchronous).
-    pub iterations: u64,
-    /// Residual norm reported by the library at termination.
-    pub reported_norm: f64,
-    /// Snapshot rounds executed during this step (async only).
-    pub snapshots: u64,
-}
-
-/// Outcome of a full solve.
-#[derive(Debug)]
-pub struct SolveReport {
-    pub scheme: Scheme,
-    pub backend: Backend,
-    pub total_wall: Duration,
-    pub steps: Vec<StepReport>,
-    /// Assembled global solution after the last time step.
-    pub solution: Vec<f64>,
-    /// Verified final residual `‖B − A Ũ‖∞` (paper's `r_n`).
-    pub r_n: f64,
-    pub per_rank: Vec<RankMetrics>,
-}
-
-impl SolveReport {
-    /// Final-step iteration count (Table 1 "# Iter.").
-    pub fn iterations(&self) -> u64 {
-        self.steps.last().map(|s| s.iterations).unwrap_or(0)
-    }
-
-    /// Final-step snapshot count (Table 1 "# Snaps.").
-    pub fn snapshots(&self) -> u64 {
-        self.steps.last().map(|s| s.snapshots).unwrap_or(0)
-    }
-
-    /// Total wall-clock across all steps (Table 1 "Time" is per step; use
-    /// `steps[i].wall`).
-    pub fn time(&self) -> Duration {
-        self.total_wall
-    }
-}
-
-struct RankStep {
-    iterations: u64,
-    wall: Duration,
-    reported_norm: f64,
-    snapshots: u64,
-}
-
-struct RankOutcome {
-    sol: Vec<f64>,
-    prev_sol: Vec<f64>,
-    metrics: RankMetrics,
-    steps: Vec<RankStep>,
-}
-
-/// Run the configured experiment end to end.
+/// Run the configured experiment end to end (f64 payloads, the paper's
+/// convection–diffusion workload).
+#[deprecated(
+    note = "use `SolverSession::<S>::builder(cfg).problem(..).build()?.run()` \
+            (or `solve_experiment::<S>` for the configured workload) — the \
+            session API is problem-agnostic and width-generic"
+)]
 pub fn solve(cfg: &ExperimentConfig) -> Result<SolveReport> {
-    let part = Partition3D::cube(cfg.n, cfg.process_grid)?;
-    let problem = ConvDiff::paper(cfg.n, cfg.dt);
-    let graphs = part.comm_graphs()?;
-    let p = part.world_size();
-
-    // XLA backend: compile executables once on the main thread, clone the
-    // handles into the rank threads (PJRT execution is thread-safe).
-    let engine = match cfg.backend {
-        Backend::Xla => Some(Engine::cpu("artifacts")?),
-        Backend::Native => None,
-    };
-
-    // Compile each distinct block shape once (PJRT compilation is the
-    // expensive part; executables are cheap shared handles).
-    let mut exe_cache: std::collections::HashMap<
-        (usize, usize, usize),
-        (crate::runtime::SweepExecutable, Option<crate::runtime::SweepExecutable>),
-    > = std::collections::HashMap::new();
-    if let Some(engine) = engine.as_ref() {
-        for rank in 0..p {
-            let dims = part.subdomain(rank).dims;
-            if !exe_cache.contains_key(&dims) {
-                let exe1 = engine.load_sweep(dims)?;
-                let exe_k = if cfg.inner_sweeps > 1 {
-                    engine.load_sweep_k(dims, cfg.inner_sweeps).ok()
-                } else {
-                    None
-                };
-                exe_cache.insert(dims, (exe1, exe_k));
-            }
-        }
-    }
-
-    let mut backends: Vec<Box<dyn ComputeBackend>> = Vec::with_capacity(p);
-    for rank in 0..p {
-        let sub = part.subdomain(rank);
-        backends.push(match cfg.backend {
-            Backend::Native => Box::new(NativeBackend::new(sub.dims)),
-            Backend::Xla => {
-                let (exe1, exe_k) = exe_cache.get(&sub.dims).expect("precompiled");
-                let mut be = XlaBackend::new(exe1.clone());
-                if let Some(exe_k) = exe_k {
-                    be = be.with_inner(cfg.inner_sweeps, exe_k.clone());
-                }
-                Box::new(be)
-            }
-        });
-    }
-
-    // Everything below the endpoint construction is generic over the
-    // `Transport`: the same per-rank solve runs on the simulated MPI
-    // world or on the shared-memory ring backend.
-    let t0 = Instant::now();
-    let outcomes = match cfg.transport {
-        TransportKind::Sim => {
-            let mut network = NetworkModel::uniform(cfg.net_latency_us, cfg.net_jitter);
-            network.per_byte = Duration::from_nanos(1);
-            if cfg.net_bandwidth > 0.0 {
-                network.bandwidth = Some(cfg.net_bandwidth);
-            }
-            if cfg.net_spike_every > 0 {
-                network.spike_every = cfg.net_spike_every;
-                network.spike = Duration::from_micros(cfg.net_spike_us);
-            }
-            let world_cfg = WorldConfig {
-                size: p,
-                network,
-                seed: cfg.seed,
-                rank_speed: cfg.rank_speed.clone(),
-            };
-            let (_world, eps) = World::new(world_cfg);
-            spawn_ranks(eps, graphs, &part, &problem, cfg, backends)?
-        }
-        TransportKind::Shm => {
-            // Real transport: no network model to configure — latency is
-            // whatever the hardware does. Heterogeneity still applies.
-            let shm_cfg =
-                ShmConfig::homogeneous(p).with_rank_speed(cfg.rank_speed.clone());
-            let (_world, eps) = ShmWorld::new(shm_cfg);
-            spawn_ranks(eps, graphs, &part, &problem, cfg, backends)?
-        }
-    };
-    let total_wall = t0.elapsed();
-
-    // Aggregate per-step stats (max over ranks).
-    let num_steps = outcomes[0].steps.len();
-    let steps: Vec<StepReport> = (0..num_steps)
-        .map(|s| StepReport {
-            step: s,
-            wall: outcomes.iter().map(|o| o.steps[s].wall).max().unwrap(),
-            iterations: outcomes
-                .iter()
-                .map(|o| o.steps[s].iterations)
-                .max()
-                .unwrap(),
-            reported_norm: outcomes[0].steps[s].reported_norm,
-            snapshots: outcomes.iter().map(|o| o.steps[s].snapshots).max().unwrap(),
-        })
-        .collect();
-
-    // Assemble and verify.
-    let solution = assemble_global(&part, outcomes.iter().map(|o| o.sol.as_slice()));
-    let prev = assemble_global(&part, outcomes.iter().map(|o| o.prev_sol.as_slice()));
-    let b_global = problem.rhs_global(&prev);
-    let r_n = problem.residual_max_norm(&solution, &b_global);
-
-    Ok(SolveReport {
-        scheme: cfg.scheme,
-        backend: cfg.backend,
-        total_wall,
-        steps,
-        solution,
-        r_n,
-        per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
-    })
-}
-
-/// Assemble a global grid vector from per-rank blocks.
-pub fn assemble_global<'a>(
-    part: &Partition3D,
-    blocks: impl Iterator<Item = &'a [f64]>,
-) -> Vec<f64> {
-    let n = part.n;
-    let mut out = vec![0.0; n.0 * n.1 * n.2];
-    for (rank, block) in blocks.enumerate() {
-        let sub = part.subdomain(rank);
-        let (bx, by, bz) = sub.dims;
-        for ix in 0..bx {
-            for iy in 0..by {
-                for iz in 0..bz {
-                    out[idx3(n, sub.lo.0 + ix, sub.lo.1 + iy, sub.lo.2 + iz)] =
-                        block[idx3(sub.dims, ix, iy, iz)];
-                }
-            }
-        }
-    }
-    out
-}
-
-/// Spawn one worker thread per rank and join their outcomes. Generic
-/// over the [`Transport`]: [`solve`] composes a concrete world, this
-/// function and everything it drives never name one.
-fn spawn_ranks<T: Transport + 'static>(
-    eps: Vec<T>,
-    graphs: Vec<CommGraph>,
-    part: &Partition3D,
-    problem: &ConvDiff,
-    cfg: &ExperimentConfig,
-    backends: Vec<Box<dyn ComputeBackend>>,
-) -> Result<Vec<RankOutcome>> {
-    let mut handles = Vec::with_capacity(eps.len());
-    for ((ep, graph), backend) in eps.into_iter().zip(graphs).zip(backends) {
-        let rank = ep.rank();
-        let sub = part.subdomain(rank);
-        let cfg = cfg.clone();
-        let problem = problem.clone();
-        let part = part.clone();
-        handles.push(std::thread::spawn(move || {
-            run_rank(ep, graph, sub, part, problem, cfg, backend)
-        }));
-    }
-    let mut outcomes = Vec::with_capacity(handles.len());
-    for h in handles {
-        outcomes.push(h.join().map_err(|_| {
-            Error::Protocol("rank thread panicked (see stderr)".into())
-        })??);
-    }
-    Ok(outcomes)
-}
-
-/// Per-rank worker: full time-stepped solve. Generic over the
-/// [`Transport`] backend — the driver composes a concrete world in
-/// [`solve`], but the per-rank solve logic never names it.
-#[allow(clippy::too_many_arguments)]
-fn run_rank<T: Transport>(
-    ep: T,
-    graph: CommGraph,
-    sub: SubDomain,
-    part: Partition3D,
-    problem: ConvDiff,
-    cfg: ExperimentConfig,
-    mut backend: Box<dyn ComputeBackend>,
-) -> Result<RankOutcome> {
-    let faces = part.face_neighbors(sub.rank);
-    let buf_sizes = part.buffer_sizes(sub.rank);
-    let vol = sub.volume();
-    let coeffs = problem.coeffs();
-
-    // Face -> link index map and zero faces for physical boundaries.
-    let mut face_link: [Option<usize>; 6] = [None; 6];
-    for (l, &(f, _)) in faces.iter().enumerate() {
-        face_link[f as usize] = Some(l);
-    }
-    let zero_faces: [Vec<f64>; 6] = [
-        vec![0.0; sub.dims.1 * sub.dims.2],
-        vec![0.0; sub.dims.1 * sub.dims.2],
-        vec![0.0; sub.dims.0 * sub.dims.2],
-        vec![0.0; sub.dims.0 * sub.dims.2],
-        vec![0.0; sub.dims.0 * sub.dims.1],
-        vec![0.0; sub.dims.0 * sub.dims.1],
-    ];
-
-    // -- Listing 5: the typed session builder (init ordering is a
-    //    compile-time property; async config is one value).
-    let session = JackComm::builder(ep, graph)?
-        .with_buffers(&buf_sizes, &buf_sizes)?
-        .with_residual(vol, NormKind::from_norm_type(cfg.norm_type))
-        .with_solution(vol);
-    let mut comm = if cfg.scheme.is_async() {
-        session.build_async(AsyncConfig {
-            max_recv_requests: cfg.max_recv_requests,
-            threshold: cfg.threshold,
-            send_discard: cfg.send_discard,
-        })?
-    } else {
-        session.build_sync()
-    };
-
-    let speed = comm.endpoint().speed();
-    let work_floor = Duration::from_micros(cfg.work_floor_us);
-    let mut work_rng = crate::util::Rng64::new(cfg.seed ^ 0x5EED).fork(sub.rank as u64 + 1);
-    let mut prev_sol = vec![0.0; vol];
-    let mut steps = Vec::with_capacity(cfg.time_steps);
-
-    let opts = IterateOpts {
-        threshold: cfg.threshold,
-        max_iters: cfg.max_iters,
-        // Algorithm 1: the communication phase is fully dedicated.
-        wait_sends: cfg.scheme == Scheme::Trivial,
-        // E4 ablation: detection disabled, pure Alg. 3 loop.
-        detect: cfg.detect,
-    };
-
-    for step in 0..cfg.time_steps {
-        if step > 0 {
-            // U^{t_{n-1}} := previous step's converged solution.
-            prev_sol.copy_from_slice(comm.solution());
-        }
-        let rhs = problem.rhs_block(&sub, &prev_sol);
-        let t_step = Instant::now();
-        let iter_before = comm.metrics.iterations;
-        let snaps_before = comm.metrics.snapshots;
-
-        // -- Listing 6, library-owned: publish the initial faces, then
-        //    hand the compute phase to `iterate`.
-        publish_faces(&mut comm, &sub, &faces)?;
-        comm.iterate(&opts, |v| {
-            let floor = if cfg.work_jitter > 0.0 {
-                work_floor.mul_f64(1.0 + work_rng.range_f64(0.0, cfg.work_jitter))
-            } else {
-                work_floor
-            };
-            match compute_phase(
-                v,
-                &mut backend,
-                &sub,
-                &faces,
-                &face_link,
-                &zero_faces,
-                &rhs,
-                &coeffs,
-                speed,
-                floor,
-                cfg.inner_sweeps,
-            ) {
-                Ok(()) => StepOutcome::Continue,
-                Err(e) => StepOutcome::Abort(e),
-            }
-        })?;
-
-        steps.push(RankStep {
-            iterations: comm.metrics.iterations - iter_before,
-            wall: t_step.elapsed(),
-            reported_norm: comm.residual_norm(),
-            snapshots: comm.metrics.snapshots - snaps_before,
-        });
-
-        if step + 1 < cfg.time_steps {
-            barrier(comm.endpoint_mut())?;
-            comm.reset_for_new_solve()?;
-        }
-    }
-
-    // prev_sol holds U^{t_{n-1}} of the final step (zeros for a single
-    // step), exactly what the r_n verification needs.
-    Ok(RankOutcome {
-        sol: comm.solution().to_vec(),
-        prev_sol,
-        metrics: comm.metrics.clone(),
-        steps,
-    })
-}
-
-/// Write the current solution's boundary planes into the send buffers.
-fn publish_faces<T: Transport>(
-    comm: &mut JackComm<T>,
-    sub: &SubDomain,
-    faces: &[(Face, usize)],
-) -> Result<()> {
-    let dims = sub.dims;
-    let v = comm.compute_view();
-    for (l, &(f, _)) in faces.iter().enumerate() {
-        extract_face(v.sol, dims, f, &mut v.send[l]);
-    }
-    Ok(())
-}
-
-/// One compute phase: sweep + publish boundary faces + heterogeneity
-/// spin. Runs inside [`JackComm::iterate`]'s closure, so the whole phase
-/// (sweep and emulated workload) lands in `metrics.compute_time`.
-#[allow(clippy::too_many_arguments)]
-fn compute_phase(
-    v: ComputeView<'_, f64>,
-    backend: &mut Box<dyn ComputeBackend>,
-    sub: &SubDomain,
-    faces: &[(Face, usize)],
-    face_link: &[Option<usize>; 6],
-    zero_faces: &[Vec<f64>; 6],
-    rhs: &[f64],
-    coeffs: &[f64; 8],
-    speed: f64,
-    work_floor: Duration,
-    inner_sweeps: usize,
-) -> Result<()> {
-    let t0 = Instant::now();
-    let dims = sub.dims;
-    let halo: [&[f64]; 6] = std::array::from_fn(|fi| {
-        face_link[fi]
-            .map(|l| v.recv[l].as_slice())
-            .unwrap_or(zero_faces[fi].as_slice())
-    });
-    if inner_sweeps > 1 {
-        backend.sweep_k(v.sol, halo, rhs, coeffs, v.res, inner_sweeps)?;
-    } else {
-        backend.sweep(v.sol, halo, rhs, coeffs, v.res)?;
-    }
-    for (l, &(f, _)) in faces.iter().enumerate() {
-        extract_face(v.sol, dims, f, &mut v.send[l]);
-    }
-    let elapsed = t0.elapsed();
-    // Workload + heterogeneity emulation: the iteration's compute phase
-    // is at least `work_floor` (modelling the paper's large subdomains)
-    // and a rank at speed s takes 1/s times longer. Sleep (don't spin): a
-    // slow *node* does not steal cycles from other nodes, and this host
-    // may have fewer cores than ranks.
-    let target = Duration::from_secs_f64(elapsed.max(work_floor).as_secs_f64() / speed);
-    if target > elapsed {
-        std::thread::sleep(target - elapsed);
-    }
-    Ok(())
+    solve_experiment::<f64>(cfg)
 }

@@ -1,12 +1,21 @@
 //! Parallel iterative solvers over JACK2: the paper's three schemes
-//! (Algorithms 1–3) with pluggable compute backends.
+//! (Algorithms 1–3) behind the typed [`SolverSession`] front-end —
+//! problem-agnostic (any [`crate::problem::Problem`] implementor),
+//! transport-agnostic (any [`crate::transport::Transport`]) and
+//! width-generic (any [`crate::scalar::Scalar`] payload), with pluggable
+//! stencil compute backends.
 
 pub mod backend;
 pub mod driver;
 pub mod native;
+pub mod session;
 pub mod xla_backend;
 
 pub use backend::ComputeBackend;
-pub use driver::{assemble_global, solve, SolveReport, StepReport};
+#[allow(deprecated)]
+pub use driver::solve;
 pub use native::NativeBackend;
+pub use session::{
+    solve_experiment, NoProblem, SolveReport, SolverSession, SolverSessionBuilder, StepReport,
+};
 pub use xla_backend::XlaBackend;

@@ -1,38 +1,41 @@
 //! Pure-Rust compute backend: the same 7-point weighted-Jacobi sweep the
 //! L1 Pallas kernel implements, used by the large parameter sweeps and as
-//! the cross-check for the XLA backend.
+//! the cross-check for the XLA backend. Generic over the payload
+//! [`Scalar`] width — an `f32` instantiation computes in `f32` end to
+//! end (true mixed precision, not an up-cast).
 
 use super::backend::ComputeBackend;
 use crate::error::{Error, Result};
 use crate::problem::idx3;
+use crate::scalar::Scalar;
 
-/// Allocation-free (after construction) native sweep.
-pub struct NativeBackend {
+/// Allocation-free (after construction) native sweep at width `S`.
+pub struct NativeBackend<S: Scalar = f64> {
     dims: (usize, usize, usize),
-    scratch: Vec<f64>,
+    scratch: Vec<S>,
 }
 
-impl NativeBackend {
+impl<S: Scalar> NativeBackend<S> {
     pub fn new(dims: (usize, usize, usize)) -> Self {
         NativeBackend {
             dims,
-            scratch: vec![0.0; dims.0 * dims.1 * dims.2],
+            scratch: vec![S::ZERO; dims.0 * dims.1 * dims.2],
         }
     }
 }
 
-impl ComputeBackend for NativeBackend {
+impl<S: Scalar> ComputeBackend<S> for NativeBackend<S> {
     fn dims(&self) -> (usize, usize, usize) {
         self.dims
     }
 
     fn sweep(
         &mut self,
-        u: &mut Vec<f64>,
-        faces: [&[f64]; 6],
-        rhs: &[f64],
-        coeffs: &[f64; 8],
-        res: &mut Vec<f64>,
+        u: &mut Vec<S>,
+        faces: [&[S]; 6],
+        rhs: &[S],
+        coeffs: &[S; 8],
+        res: &mut Vec<S>,
     ) -> Result<()> {
         let (nx, ny, nz) = self.dims;
         let vol = nx * ny * nz;
@@ -51,7 +54,7 @@ impl ComputeBackend for NativeBackend {
         debug_assert_eq!(zm.len(), nx * ny);
 
         let out = &mut self.scratch;
-        let inv_cd = 1.0 / c_d;
+        let inv_cd = S::from_f64(1.0) / c_d;
         for ix in 0..nx {
             for iy in 0..ny {
                 let row = idx3((nx, ny, nz), ix, iy, 0);
@@ -108,6 +111,43 @@ mod tests {
         for i in 0..u.len() {
             assert!((u[i] - want_u[i]).abs() < 1e-13, "u[{i}]");
             assert!((res[i] - want_r[i]).abs() < 1e-13, "res[{i}]");
+        }
+    }
+
+    /// The f32 instantiation computes the same sweep within f32 accuracy.
+    #[test]
+    fn f32_sweep_tracks_f64_within_width_tolerance() {
+        let n = 4;
+        let p = ConvDiff::paper(n, 0.01);
+        let dims = (n, n, n);
+        let vol = n * n * n;
+        let u64v: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.3).sin() * 0.1).collect();
+        let b64: Vec<f64> = (0..vol).map(|i| (i as f64 * 0.2).cos()).collect();
+        let c64 = p.coeffs();
+
+        let mut u_d = u64v.clone();
+        let mut res_d = vec![0.0; vol];
+        let z_d = vec![0.0f64; n * n];
+        let faces_d: [&[f64]; 6] = [&z_d, &z_d, &z_d, &z_d, &z_d, &z_d];
+        let mut be_d = NativeBackend::<f64>::new(dims);
+        be_d.sweep(&mut u_d, faces_d, &b64, &c64, &mut res_d).unwrap();
+
+        let mut u_s: Vec<f32> = u64v.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+        let c32: [f32; 8] = c64.map(|x| x as f32);
+        let z_s = vec![0.0f32; n * n];
+        let faces_s: [&[f32]; 6] = [&z_s, &z_s, &z_s, &z_s, &z_s, &z_s];
+        let mut res_s = vec![0.0f32; vol];
+        let mut be_s = NativeBackend::<f32>::new(dims);
+        be_s.sweep(&mut u_s, faces_s, &b32, &c32, &mut res_s).unwrap();
+
+        for i in 0..vol {
+            assert!(
+                (u_s[i] as f64 - u_d[i]).abs() < 1e-5,
+                "u[{i}]: f32 {} f64 {}",
+                u_s[i],
+                u_d[i]
+            );
         }
     }
 

@@ -1,0 +1,509 @@
+//! `SolverSession` — the typed front door of the solver layer.
+//!
+//! Mirrors the jack layer's typestate session (PR 2): where
+//! [`crate::jack::JackBuilder`] makes Listing-5 misordering a compile
+//! error, `SolverSession`'s builder makes "run a solve without a
+//! problem" unrepresentable —
+//!
+//! ```text
+//! SolverSession::<f32>::builder(&cfg)   // width chosen here
+//!     .problem(ConvDiffProblem::from_config(&cfg)?)   // NoProblem → P
+//!     .backend(Backend::Native)         // optional overrides
+//!     .transport(TransportKind::Shm)
+//!     .build()?                         // capability + topology checks
+//!     .run()?                           // -> SolveReport<f32>
+//! ```
+//!
+//! The session is generic over the payload [`Scalar`] width and the
+//! [`Problem`] implementor; nothing in this module names a concrete
+//! problem, transport or width. It replaces the old monolithic
+//! `solve(cfg)` (kept as a deprecated shim in [`super::driver`]), whose
+//! body interleaved XLA cache setup, transport selection, rank spawning
+//! and report aggregation — those concerns now live, respectively, in
+//! [`Problem::workers`], [`SolverSession::run`]'s transport match, the
+//! generic rank spawner, and the aggregation below.
+
+use std::marker::PhantomData;
+use std::time::{Duration, Instant};
+
+use crate::config::{Backend, ExperimentConfig, Scheme, TransportKind};
+use crate::error::{Error, Result};
+use crate::graph::{validate_world, CommGraph};
+use crate::jack::{AsyncConfig, IterateOpts, JackComm, NormKind, StepOutcome};
+use crate::metrics::RankMetrics;
+use crate::problem::{ConvDiffProblem, Problem, ProblemWorker};
+use crate::scalar::Scalar;
+use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
+use crate::transport::{ShmConfig, ShmWorld, Transport};
+
+/// Aggregated per-time-step results.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub step: usize,
+    /// Slowest rank's wall-clock for this step.
+    pub wall: Duration,
+    /// Max local iteration count (equals the global count when
+    /// synchronous).
+    pub iterations: u64,
+    /// Residual norm reported by the library at termination: the
+    /// largest finite value any rank observed (synchronous ranks agree
+    /// to within reduction-reassociation ulps — debug-asserted).
+    pub reported_norm: f64,
+    /// Snapshot rounds executed during this step (async only).
+    pub snapshots: u64,
+}
+
+/// Outcome of a full solve at payload width `S`.
+#[derive(Debug)]
+pub struct SolveReport<S: Scalar = f64> {
+    pub scheme: Scheme,
+    pub backend: Backend,
+    pub transport: TransportKind,
+    /// Payload width name (`S::NAME`).
+    pub precision: &'static str,
+    /// Problem name ([`Problem::name`]).
+    pub problem: &'static str,
+    pub total_wall: Duration,
+    pub steps: Vec<StepReport>,
+    /// Assembled global solution after the last time step, at payload
+    /// width.
+    pub solution: Vec<S>,
+    /// Verified final residual `‖B − A Ũ‖∞` (paper's `r_n`), evaluated
+    /// by the problem's sequential `f64` oracle.
+    pub r_n: f64,
+    pub per_rank: Vec<RankMetrics>,
+}
+
+impl<S: Scalar> SolveReport<S> {
+    /// Final-step iteration count (Table 1 "# Iter.").
+    pub fn iterations(&self) -> u64 {
+        self.steps.last().map(|s| s.iterations).unwrap_or(0)
+    }
+
+    /// Final-step snapshot count (Table 1 "# Snaps.").
+    pub fn snapshots(&self) -> u64 {
+        self.steps.last().map(|s| s.snapshots).unwrap_or(0)
+    }
+
+    /// Total wall-clock across all steps (Table 1 "Time" is per step; use
+    /// `steps[i].wall`).
+    pub fn time(&self) -> Duration {
+        self.total_wall
+    }
+
+    /// The global solution widened into the `f64` accumulation domain
+    /// (cross-width comparisons).
+    pub fn solution_f64(&self) -> Vec<f64> {
+        widen(&self.solution)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typestate builder
+// ---------------------------------------------------------------------
+
+/// Builder phase: no problem attached yet (running is unrepresentable).
+#[derive(Debug, Clone, Copy)]
+pub struct NoProblem;
+
+/// Typestate builder for [`SolverSession`]: `NoProblem → P`, then
+/// [`SolverSessionBuilder::build`]. Backend and transport default to the
+/// config's values and may be overridden in any phase.
+pub struct SolverSessionBuilder<S: Scalar, P> {
+    cfg: ExperimentConfig,
+    backend: Backend,
+    transport: TransportKind,
+    problem: P,
+    _scalar: PhantomData<S>,
+}
+
+impl<S: Scalar, P> SolverSessionBuilder<S, P> {
+    /// Override the compute backend (defaults to `cfg.backend`).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Override the message transport (defaults to `cfg.transport`).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+}
+
+impl<S: Scalar> SolverSessionBuilder<S, NoProblem> {
+    /// Attach the problem — the phase transition that makes
+    /// [`SolverSessionBuilder::build`] available.
+    pub fn problem<P: Problem<S>>(self, problem: P) -> SolverSessionBuilder<S, P> {
+        SolverSessionBuilder {
+            cfg: self.cfg,
+            backend: self.backend,
+            transport: self.transport,
+            problem,
+            _scalar: PhantomData,
+        }
+    }
+}
+
+impl<S: Scalar, P: Problem<S>> SolverSessionBuilder<S, P> {
+    /// Validate and seal the session: backend capability (at this width)
+    /// and communication-topology consistency are checked here, before
+    /// any rank spawns.
+    pub fn build(self) -> Result<SolverSession<S, P>> {
+        let p = self.problem.world_size();
+        if p == 0 {
+            return Err(Error::Config("problem partitions into zero ranks".into()));
+        }
+        self.problem.check_backend(self.backend)?;
+        let graphs = self.problem.comm_graphs()?;
+        if graphs.len() != p {
+            return Err(Error::Config(format!(
+                "problem emitted {} comm graphs for {p} ranks",
+                graphs.len()
+            )));
+        }
+        validate_world(&graphs)?;
+        Ok(SolverSession {
+            cfg: self.cfg,
+            backend: self.backend,
+            transport: self.transport,
+            problem: self.problem,
+            _scalar: PhantomData,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session
+// ---------------------------------------------------------------------
+
+/// A sealed, runnable solve: problem + backend + transport + width.
+/// Construct through [`SolverSession::builder`]; re-run freely (each
+/// [`SolverSession::run`] builds a fresh world and fresh workers).
+pub struct SolverSession<S: Scalar = f64, P = NoProblem> {
+    cfg: ExperimentConfig,
+    backend: Backend,
+    transport: TransportKind,
+    problem: P,
+    _scalar: PhantomData<S>,
+}
+
+impl<S: Scalar> SolverSession<S> {
+    /// Open a session builder at width `S` (e.g.
+    /// `SolverSession::<f32>::builder(&cfg)`); scheme and all iteration
+    /// tunables come from `cfg`, backend/transport default from it.
+    pub fn builder(cfg: &ExperimentConfig) -> SolverSessionBuilder<S, NoProblem> {
+        SolverSessionBuilder {
+            cfg: cfg.clone(),
+            backend: cfg.backend,
+            transport: cfg.transport,
+            problem: NoProblem,
+            _scalar: PhantomData,
+        }
+    }
+}
+
+impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
+    pub fn problem(&self) -> &P {
+        &self.problem
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn transport(&self) -> TransportKind {
+        self.transport
+    }
+
+    /// Run the full time-stepped solve: build per-rank workers (one-time
+    /// problem setup), compose the transport world, run one thread per
+    /// rank over the JACK2 session API, then assemble and verify against
+    /// the problem's sequential oracle.
+    pub fn run(&self) -> Result<SolveReport<S>> {
+        let p = self.problem.world_size();
+        let graphs = self.problem.comm_graphs()?;
+        let workers = self.problem.workers(self.backend, self.cfg.inner_sweeps)?;
+        if workers.len() != p {
+            return Err(Error::Config(format!(
+                "problem built {} workers for {p} ranks",
+                workers.len()
+            )));
+        }
+        let cfg = &self.cfg;
+
+        // Everything below the endpoint construction is generic over the
+        // `Transport`: the same per-rank solve runs on the simulated MPI
+        // world or on the shared-memory ring backend.
+        let t0 = Instant::now();
+        let outcomes = match self.transport {
+            TransportKind::Sim => {
+                let mut network = NetworkModel::uniform(cfg.net_latency_us, cfg.net_jitter);
+                network.per_byte = Duration::from_nanos(1);
+                if cfg.net_bandwidth > 0.0 {
+                    network.bandwidth = Some(cfg.net_bandwidth);
+                }
+                if cfg.net_spike_every > 0 {
+                    network.spike_every = cfg.net_spike_every;
+                    network.spike = Duration::from_micros(cfg.net_spike_us);
+                }
+                let world_cfg = WorldConfig {
+                    size: p,
+                    network,
+                    seed: cfg.seed,
+                    rank_speed: cfg.rank_speed.clone(),
+                };
+                let (_world, eps) = World::new(world_cfg);
+                spawn_ranks(eps, graphs, workers, cfg)?
+            }
+            TransportKind::Shm => {
+                // Real transport: no network model to configure — latency
+                // is whatever the hardware does. Heterogeneity still
+                // applies.
+                let shm_cfg = ShmConfig::homogeneous(p).with_rank_speed(cfg.rank_speed.clone());
+                let (_world, eps) = ShmWorld::new(shm_cfg);
+                spawn_ranks(eps, graphs, workers, cfg)?
+            }
+        };
+        let total_wall = t0.elapsed();
+
+        // Aggregate per-step stats: max over ranks. The reported norm is
+        // the largest *finite* value any rank observed — never rank 0's
+        // alone.
+        let num_steps = outcomes.first().map(|o| o.steps.len()).unwrap_or(0);
+        let steps: Vec<StepReport> = (0..num_steps)
+            .map(|s| {
+                let norms: Vec<f64> =
+                    outcomes.iter().map(|o| o.steps[s].reported_norm).collect();
+                if !cfg.scheme.is_async() {
+                    // Synchronous ranks all observe the elected reduction
+                    // result. Max-norm elections are exact; Pow-norm
+                    // elections may reassociate the additions across the
+                    // two elected ranks, so allow last-ulp slack.
+                    debug_assert!(
+                        norms.iter().all(|&x| {
+                            x == norms[0]
+                                || (x - norms[0]).abs()
+                                    <= 1e-12 * norms[0].abs().max(x.abs())
+                        }),
+                        "synchronous ranks disagree on the reported norm at step {s}: {norms:?}"
+                    );
+                }
+                let finite_max = norms
+                    .iter()
+                    .copied()
+                    .filter(|x| x.is_finite())
+                    .fold(f64::NEG_INFINITY, f64::max);
+                StepReport {
+                    step: s,
+                    wall: outcomes.iter().map(|o| o.steps[s].wall).max().unwrap(),
+                    iterations: outcomes
+                        .iter()
+                        .map(|o| o.steps[s].iterations)
+                        .max()
+                        .unwrap(),
+                    reported_norm: if finite_max.is_finite() {
+                        finite_max
+                    } else {
+                        f64::INFINITY
+                    },
+                    snapshots: outcomes.iter().map(|o| o.steps[s].snapshots).max().unwrap(),
+                }
+            })
+            .collect();
+
+        // Assemble and verify in the f64 accumulation domain.
+        let sol_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.sol.clone()).collect();
+        let prev_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.prev_sol.clone()).collect();
+        let solution = self.problem.assemble(&sol_blocks);
+        let prev = widen(&self.problem.assemble(&prev_blocks));
+        let b_global = self.problem.rhs_global(&prev);
+        let r_n = self.problem.residual_max_norm(&widen(&solution), &b_global);
+
+        Ok(SolveReport {
+            scheme: cfg.scheme,
+            backend: self.backend,
+            transport: self.transport,
+            precision: S::NAME,
+            problem: self.problem.name(),
+            total_wall,
+            steps,
+            solution,
+            r_n,
+            per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
+        })
+    }
+}
+
+/// One-call convenience used by the CLI, the experiment harnesses and
+/// the deprecated `solve` shim: the configured experiment's workload
+/// (the paper's convection–diffusion system) through a `SolverSession`
+/// at width `S`.
+pub fn solve_experiment<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
+    SolverSession::<S>::builder(cfg)
+        .problem(ConvDiffProblem::from_config(cfg)?)
+        .build()?
+        .run()
+}
+
+/// Widen a payload-width slice into the `f64` accumulation domain.
+fn widen<S: Scalar>(v: &[S]) -> Vec<f64> {
+    v.iter().map(|x| x.to_f64()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Per-rank execution (problem- and transport-agnostic)
+// ---------------------------------------------------------------------
+
+struct RankStep {
+    iterations: u64,
+    wall: Duration,
+    reported_norm: f64,
+    snapshots: u64,
+}
+
+struct RankOutcome<S> {
+    sol: Vec<S>,
+    prev_sol: Vec<S>,
+    metrics: RankMetrics,
+    steps: Vec<RankStep>,
+}
+
+/// Spawn one worker thread per rank and join their outcomes. Generic
+/// over the [`Transport`], the payload width and the problem's worker:
+/// [`SolverSession::run`] composes a concrete world, this function and
+/// everything it drives never name one.
+fn spawn_ranks<T, S, W>(
+    eps: Vec<T>,
+    graphs: Vec<CommGraph>,
+    workers: Vec<W>,
+    cfg: &ExperimentConfig,
+) -> Result<Vec<RankOutcome<S>>>
+where
+    T: Transport + 'static,
+    S: Scalar,
+    W: ProblemWorker<S>,
+{
+    let mut handles = Vec::with_capacity(eps.len());
+    for ((ep, graph), worker) in eps.into_iter().zip(graphs).zip(workers) {
+        debug_assert_eq!(ep.rank(), worker.rank(), "worker order must be rank order");
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || run_rank(ep, graph, worker, cfg)));
+    }
+    let mut outcomes = Vec::with_capacity(handles.len());
+    for h in handles {
+        outcomes.push(h.join().map_err(|_| {
+            Error::Protocol("rank thread panicked (see stderr)".into())
+        })??);
+    }
+    Ok(outcomes)
+}
+
+/// Per-rank worker thread: full time-stepped solve over the JACK2 typed
+/// session API. The problem's worker supplies geometry, RHS and the
+/// compute phase; this function owns only the scheme mechanics and the
+/// heterogeneity emulation.
+fn run_rank<T, S, W>(
+    ep: T,
+    graph: CommGraph,
+    mut worker: W,
+    cfg: ExperimentConfig,
+) -> Result<RankOutcome<S>>
+where
+    T: Transport,
+    S: Scalar,
+    W: ProblemWorker<S>,
+{
+    let link_sizes = worker.link_sizes();
+    let vol = worker.local_len();
+    let rank = worker.rank();
+
+    // -- Listing 5: the typed session builder (init ordering is a
+    //    compile-time property; async config is one value).
+    let session = JackComm::<_, S>::builder(ep, graph)?
+        .with_buffers(&link_sizes, &link_sizes)?
+        .with_residual(vol, NormKind::from_norm_type(cfg.norm_type))
+        .with_solution(vol);
+    let mut comm = if cfg.scheme.is_async() {
+        session.build_async(AsyncConfig {
+            max_recv_requests: cfg.max_recv_requests,
+            threshold: cfg.threshold,
+            send_discard: cfg.send_discard,
+        })?
+    } else {
+        session.build_sync()
+    };
+
+    let speed = comm.endpoint().speed();
+    let work_floor = Duration::from_micros(cfg.work_floor_us);
+    let mut work_rng = crate::util::Rng64::new(cfg.seed ^ 0x5EED).fork(rank as u64 + 1);
+    let mut prev_sol = vec![S::ZERO; vol];
+    let mut steps = Vec::with_capacity(cfg.time_steps);
+
+    let opts = IterateOpts {
+        threshold: cfg.threshold,
+        max_iters: cfg.max_iters,
+        // Algorithm 1: the communication phase is fully dedicated.
+        wait_sends: cfg.scheme == Scheme::Trivial,
+        // E4 ablation: detection disabled, pure Alg. 3 loop.
+        detect: cfg.detect,
+    };
+
+    for step in 0..cfg.time_steps {
+        if step > 0 {
+            // U^{t_{n-1}} := previous step's converged solution.
+            prev_sol.copy_from_slice(comm.solution());
+        }
+        worker.begin_step(&prev_sol)?;
+        let t_step = Instant::now();
+        let iter_before = comm.metrics.iterations;
+        let snaps_before = comm.metrics.snapshots;
+
+        // -- Listing 6, library-owned: publish the initial faces, then
+        //    hand the compute phase to `iterate`.
+        worker.publish(comm.compute_view())?;
+        comm.iterate(&opts, |v| {
+            let floor = if cfg.work_jitter > 0.0 {
+                work_floor.mul_f64(1.0 + work_rng.range_f64(0.0, cfg.work_jitter))
+            } else {
+                work_floor
+            };
+            let t0 = Instant::now();
+            if let Err(e) = worker.compute(v, cfg.inner_sweeps) {
+                return StepOutcome::Abort(e);
+            }
+            let elapsed = t0.elapsed();
+            // Workload + heterogeneity emulation: the iteration's compute
+            // phase is at least `floor` (modelling the paper's large
+            // subdomains) and a rank at speed s takes 1/s times longer.
+            // Sleep (don't spin): a slow *node* does not steal cycles from
+            // other nodes, and this host may have fewer cores than ranks.
+            let target = Duration::from_secs_f64(elapsed.max(floor).as_secs_f64() / speed);
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            StepOutcome::Continue
+        })?;
+
+        steps.push(RankStep {
+            iterations: comm.metrics.iterations - iter_before,
+            wall: t_step.elapsed(),
+            reported_norm: comm.residual_norm(),
+            snapshots: comm.metrics.snapshots - snaps_before,
+        });
+
+        if step + 1 < cfg.time_steps {
+            barrier(comm.endpoint_mut())?;
+            comm.reset_for_new_solve()?;
+        }
+    }
+
+    // prev_sol holds U^{t_{n-1}} of the final step (zeros for a single
+    // step), exactly what the r_n verification needs.
+    Ok(RankOutcome {
+        sol: comm.solution().to_vec(),
+        prev_sol,
+        metrics: comm.metrics.clone(),
+        steps,
+    })
+}

@@ -6,8 +6,9 @@
 //! reused; the hot loop uploads only the iterate and the six halo faces.
 
 use super::backend::ComputeBackend;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::SweepExecutable;
+use crate::scalar::Scalar;
 // Offline build: the PJRT binding is stubbed (see crate::xla_stub).
 use crate::xla_stub as xla;
 
@@ -46,9 +47,11 @@ impl XlaBackend {
         self
     }
 
-    /// Refresh the invariant-input literal caches (address-keyed: a new
-    /// Vec per time step / solve means a new address).
-    fn refresh_caches(&mut self, rhs: &[f64], coeffs: &[f64; 8]) -> Result<()> {
+    /// Refresh the invariant-input literal caches. Address-keyed, which
+    /// only detects *relocation* — in-place rewrites at a stable address
+    /// (the workers' per-step RHS) are invalidated by the
+    /// [`ComputeBackend::begin_step`] hook instead.
+    fn refresh_caches(&mut self, rhs: &[f64], coeffs: &[f64]) -> Result<()> {
         let rhs_key = (rhs.as_ptr(), rhs.len());
         if self.rhs_cache.as_ref().map(|c| c.key) != Some(rhs_key) {
             self.rhs_cache = Some(CachedLit {
@@ -60,26 +63,74 @@ impl XlaBackend {
         if self.coeffs_cache.as_ref().map(|c| c.key) != Some(coeffs_key) {
             self.coeffs_cache = Some(CachedLit {
                 key: coeffs_key,
-                lit: xla::Literal::vec1(coeffs.as_slice()),
+                lit: xla::Literal::vec1(coeffs),
             });
         }
         Ok(())
     }
 }
 
-impl ComputeBackend for XlaBackend {
+/// The f64-only capability error: the AOT artifacts are compiled for
+/// `f64`, so narrower payload widths are rejected cleanly rather than
+/// silently up-cast (use [`super::NativeBackend`] for mixed precision).
+/// Shared with [`crate::problem::ConvDiffProblem`]'s build-time check so
+/// the build-time and sweep-time messages cannot drift.
+pub(crate) fn width_error<S: Scalar>() -> Error {
+    Error::Config(format!(
+        "xla backend is f64-only: payload width {} is unsupported (the AOT \
+         artifacts are compiled for f64 — use the native backend for \
+         mixed-precision runs)",
+        S::NAME
+    ))
+}
+
+/// Borrow the full-width views of a sweep call, or fail with the
+/// capability error. The [`Scalar`] width witness makes this a no-op
+/// re-borrow for `f64` and an `Err` for every narrower width.
+#[allow(clippy::type_complexity)]
+fn full_width<'a, S: Scalar>(
+    u: &'a mut Vec<S>,
+    faces: [&'a [S]; 6],
+    rhs: &'a [S],
+    coeffs: &'a [S; 8],
+    res: &'a mut Vec<S>,
+) -> Result<(&'a mut Vec<f64>, [&'a [f64]; 6], &'a [f64], &'a [f64], &'a mut Vec<f64>)> {
+    let (Some(u), Some(res), Some(rhs), Some(coeffs)) = (
+        S::f64_vec_mut(u),
+        S::f64_vec_mut(res),
+        S::f64_slice(rhs),
+        S::f64_slice(coeffs.as_slice()),
+    ) else {
+        return Err(width_error::<S>());
+    };
+    let faces: [&[f64]; 6] =
+        std::array::from_fn(|i| S::f64_slice(faces[i]).expect("width checked above"));
+    Ok((u, faces, rhs, coeffs, res))
+}
+
+impl<S: Scalar> ComputeBackend<S> for XlaBackend {
     fn dims(&self) -> (usize, usize, usize) {
         self.exe.dims()
     }
 
+    fn begin_step(&mut self) {
+        // The RHS block changes per time step — possibly rewritten in
+        // place at the same address (the workers reuse their rhs Vec), so
+        // the address-keyed cache alone cannot detect it. The coefficient
+        // cache survives: coefficients are constant for the whole solve
+        // and live at a stable address in the worker.
+        self.rhs_cache = None;
+    }
+
     fn sweep(
         &mut self,
-        u: &mut Vec<f64>,
-        faces: [&[f64]; 6],
-        rhs: &[f64],
-        coeffs: &[f64; 8],
-        res: &mut Vec<f64>,
+        u: &mut Vec<S>,
+        faces: [&[S]; 6],
+        rhs: &[S],
+        coeffs: &[S; 8],
+        res: &mut Vec<S>,
     ) -> Result<()> {
+        let (u, faces, rhs, coeffs, res) = full_width::<S>(u, faces, rhs, coeffs, res)?;
         self.refresh_caches(rhs, coeffs)?;
         let (u_new, r) = self.exe.run_cached(
             u,
@@ -94,15 +145,16 @@ impl ComputeBackend for XlaBackend {
 
     fn sweep_k(
         &mut self,
-        u: &mut Vec<f64>,
-        faces: [&[f64]; 6],
-        rhs: &[f64],
-        coeffs: &[f64; 8],
-        res: &mut Vec<f64>,
+        u: &mut Vec<S>,
+        faces: [&[S]; 6],
+        rhs: &[S],
+        coeffs: &[S; 8],
+        res: &mut Vec<S>,
         k: usize,
     ) -> Result<()> {
         // Fused path: one PJRT call for all k sweeps.
         if self.exe_k.as_ref().is_some_and(|(ek, _)| *ek == k) {
+            let (u, faces, rhs, coeffs, res) = full_width::<S>(u, faces, rhs, coeffs, res)?;
             self.refresh_caches(rhs, coeffs)?;
             let exe = &self.exe_k.as_ref().expect("checked").1;
             let (u_new, r) = exe.run_cached(
@@ -116,7 +168,7 @@ impl ComputeBackend for XlaBackend {
             return Ok(());
         }
         for _ in 0..k.max(1) {
-            self.sweep(u, faces, rhs, coeffs, res)?;
+            ComputeBackend::<S>::sweep(self, u, faces, rhs, coeffs, res)?;
         }
         Ok(())
     }

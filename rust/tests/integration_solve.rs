@@ -3,7 +3,7 @@
 
 use jack2::config::{Backend, ExperimentConfig, Scheme};
 use jack2::problem::ConvDiff;
-use jack2::solver::solve;
+use jack2::solver::solve_experiment;
 
 fn base_cfg(scheme: Scheme, grid: (usize, usize, usize), n: usize) -> ExperimentConfig {
     ExperimentConfig {
@@ -23,7 +23,7 @@ fn base_cfg(scheme: Scheme, grid: (usize, usize, usize), n: usize) -> Experiment
 #[test]
 fn overlapping_sync_solve_2x2x2() {
     let cfg = base_cfg(Scheme::Overlapping, (2, 2, 2), 12);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(
         rep.r_n < 1e-5,
         "verified residual too large: {}",
@@ -39,14 +39,14 @@ fn overlapping_sync_solve_2x2x2() {
 #[test]
 fn trivial_sync_solve_2x1x1() {
     let cfg = base_cfg(Scheme::Trivial, (2, 1, 1), 8);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
 }
 
 #[test]
 fn async_solve_2x2x1() {
     let cfg = base_cfg(Scheme::Asynchronous, (2, 2, 1), 10);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "verified residual: {}", rep.r_n);
     assert!(
         rep.snapshots() >= 1,
@@ -59,7 +59,7 @@ fn async_solve_2x2x1() {
 #[test]
 fn async_solve_single_rank() {
     let cfg = base_cfg(Scheme::Asynchronous, (1, 1, 1), 6);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
     assert!(rep.snapshots() >= 1);
 }
@@ -67,8 +67,8 @@ fn async_solve_single_rank() {
 #[test]
 fn sync_and_async_agree_on_solution() {
     let n = 8;
-    let sync = solve(&base_cfg(Scheme::Overlapping, (2, 1, 1), n)).unwrap();
-    let asy = solve(&base_cfg(Scheme::Asynchronous, (2, 1, 1), n)).unwrap();
+    let sync = solve_experiment::<f64>(&base_cfg(Scheme::Overlapping, (2, 1, 1), n)).unwrap();
+    let asy = solve_experiment::<f64>(&base_cfg(Scheme::Asynchronous, (2, 1, 1), n)).unwrap();
     // Both converge to the same linear-system solution within thresholds.
     let max_diff = sync
         .solution
@@ -82,7 +82,7 @@ fn sync_and_async_agree_on_solution() {
 fn multi_time_step_solve() {
     let mut cfg = base_cfg(Scheme::Overlapping, (2, 1, 1), 8);
     cfg.time_steps = 3;
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert_eq!(rep.steps.len(), 3);
     assert!(rep.r_n < 1e-5, "final-step r_n = {}", rep.r_n);
     // the solution evolves between steps (source keeps pumping heat in)
@@ -93,7 +93,7 @@ fn multi_time_step_solve() {
 fn multi_time_step_async() {
     let mut cfg = base_cfg(Scheme::Asynchronous, (2, 1, 1), 8);
     cfg.time_steps = 2;
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert_eq!(rep.steps.len(), 2);
     assert!(rep.r_n < 1e-5, "final-step r_n = {}", rep.r_n);
     assert!(rep.steps.iter().all(|s| s.snapshots >= 1));
@@ -104,7 +104,7 @@ fn solution_matches_sequential_jacobi() {
     // Parallel overlapping solve vs a plain sequential Jacobi loop.
     let n = 8;
     let cfg = base_cfg(Scheme::Overlapping, (2, 2, 1), n);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
 
     let p = ConvDiff::paper(n, cfg.dt);
     let b = p.rhs_global(&vec![0.0; n * n * n]);
@@ -128,7 +128,7 @@ fn solution_matches_sequential_jacobi() {
 fn heterogeneous_ranks_still_converge_async() {
     let mut cfg = base_cfg(Scheme::Asynchronous, (2, 2, 1), 8);
     cfg.rank_speed = vec![1.0, 0.25, 1.0, 0.5]; // one very slow rank
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
 }
 
@@ -136,6 +136,6 @@ fn heterogeneous_ranks_still_converge_async() {
 fn uneven_partition_converges() {
     // n=7 over 2 ranks per axis: blocks of 4 and 3.
     let cfg = base_cfg(Scheme::Overlapping, (2, 2, 2), 7);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
 }

@@ -11,7 +11,7 @@ use jack2::graph::{random_connected, validate_world};
 use jack2::jack::norm::{saturation_norm, NormKind, NormPending};
 use jack2::jack::spanning_tree::{self, validate_tree};
 use jack2::simmpi::{NetworkModel, World, WorldConfig};
-use jack2::solver::solve;
+use jack2::solver::solve_experiment;
 use jack2::util::Rng64;
 
 /// Run `f` for `n` seeded cases, reporting the failing seed.
@@ -186,7 +186,7 @@ fn prop_async_solve_terminates_and_verifies() {
             max_iters: 200_000,
             ..Default::default()
         };
-        let rep = solve(&cfg).unwrap();
+        let rep = solve_experiment::<f64>(&cfg).unwrap();
         assert!(
             rep.steps[0].reported_norm < 1e-6,
             "snapshot norm {} >= threshold",
@@ -216,7 +216,7 @@ fn prop_sync_lockstep_iterations() {
             max_iters: 100_000,
             ..Default::default()
         };
-        let rep = solve(&cfg).unwrap();
+        let rep = solve_experiment::<f64>(&cfg).unwrap();
         let iters: Vec<u64> = rep.per_rank.iter().map(|m| m.iterations).collect();
         assert!(iters.iter().all(|&i| i == iters[0]), "{iters:?}");
         assert!(rep.r_n < 1e-5, "r_n {}", rep.r_n);

@@ -1,0 +1,227 @@
+//! `SolverSession` conformance: the width-generic, problem-agnostic
+//! solver front-end exercised across payload widths (f32/f64), problems
+//! (convection–diffusion, 1-D Jacobi chain), schemes (sync/async) and
+//! both shipped transports (simmpi, shm) — all through the *same*
+//! session path.
+
+use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TransportKind};
+use jack2::problem::{ConvDiffProblem, Jacobi1D, Problem};
+use jack2::solver::{solve_experiment, SolveReport, SolverSession};
+
+fn base_cfg(scheme: Scheme, transport: TransportKind, n: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        process_grid: (2, 2, 1),
+        n,
+        scheme,
+        transport,
+        backend: Backend::Native,
+        threshold: 1e-6,
+        time_steps: 1,
+        net_latency_us: 5,
+        net_jitter: 0.2,
+        max_iters: 100_000,
+        ..Default::default()
+    }
+}
+
+const TRANSPORTS: [TransportKind; 2] = [TransportKind::Sim, TransportKind::Shm];
+const SCHEMES: [Scheme; 2] = [Scheme::Overlapping, Scheme::Asynchronous];
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .fold(0.0f64, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Satellite: full convection–diffusion f32-vs-f64, both schemes × both
+/// transports, asserting the f32 solve lands within a width-appropriate
+/// tolerance of the f64 residual and solution.
+#[test]
+fn f32_convdiff_tracks_f64_across_schemes_and_transports() {
+    for transport in TRANSPORTS {
+        for scheme in SCHEMES {
+            let c64 = base_cfg(scheme, transport, 8);
+            let mut c32 = c64.clone();
+            // Width-appropriate target: f32 residual evaluation bottoms
+            // out near c_d * eps_f32 * |u|, above the f64 target.
+            c32.threshold = 1e-4;
+            c32.precision = Precision::F32;
+
+            let r64 = solve_experiment::<f64>(&c64).unwrap();
+            let r32 = solve_experiment::<f32>(&c32).unwrap();
+            let tag = format!("{scheme:?}/{transport:?}");
+
+            assert!(r64.r_n < 1e-5, "{tag}: f64 r_n {}", r64.r_n);
+            assert!(r32.r_n < 1e-3, "{tag}: f32 r_n {}", r32.r_n);
+            assert!(
+                (r32.r_n - r64.r_n).abs() < 1e-3,
+                "{tag}: residual gap {} vs {}",
+                r32.r_n,
+                r64.r_n
+            );
+            let diff = max_abs_diff(&r32.solution_f64(), &r64.solution_f64());
+            assert!(diff < 1e-3, "{tag}: solutions diverge by {diff}");
+
+            assert_eq!(r32.precision, "f32");
+            assert_eq!(r64.precision, "f64");
+            assert_eq!(r32.problem, "convdiff3d");
+            assert!(r32.steps[0].reported_norm < c32.threshold, "{tag}");
+            if scheme.is_async() {
+                assert!(r32.snapshots() >= 1, "{tag}");
+            }
+        }
+    }
+}
+
+/// Satellite: the second `Problem` implementor solves end to end through
+/// the same `SolverSession` path on both transports and both schemes,
+/// and matches its own sequential oracle.
+#[test]
+fn jacobi_chain_conformance_through_session() {
+    // Sequential reference: Jacobi on the global chain to convergence.
+    let reference = {
+        let j = Jacobi1D::new(24, 1, 0.01).unwrap();
+        let b = Problem::<f64>::rhs_global(&j, &vec![0.0; 24]);
+        let mut u = vec![0.0; 24];
+        for _ in 0..2000 {
+            let (un, _) = j.sweep_seq(&u, &b);
+            u = un;
+        }
+        u
+    };
+
+    for transport in TRANSPORTS {
+        for scheme in SCHEMES {
+            let cfg = base_cfg(scheme, transport, 8);
+            let prob = Jacobi1D::new(24, 4, 0.01).unwrap();
+            let rep: SolveReport<f64> = SolverSession::<f64>::builder(&cfg)
+                .problem(prob)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let tag = format!("{scheme:?}/{transport:?}");
+            assert_eq!(rep.problem, "jacobi1d", "{tag}");
+            assert_eq!(rep.solution.len(), 24, "{tag}");
+            assert!(rep.r_n < 1e-5, "{tag}: r_n {}", rep.r_n);
+            let diff = max_abs_diff(&rep.solution, &reference);
+            assert!(diff < 1e-4, "{tag}: vs sequential oracle {diff}");
+        }
+    }
+}
+
+/// The second problem also runs at f32 through the identical path.
+#[test]
+fn jacobi_chain_solves_at_f32() {
+    let mut cfg = base_cfg(Scheme::Overlapping, TransportKind::Shm, 8);
+    cfg.threshold = 1e-4;
+    let r32: SolveReport<f32> = SolverSession::<f32>::builder(&cfg)
+        .problem(Jacobi1D::new(16, 3, 0.01).unwrap())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let r64: SolveReport<f64> = SolverSession::<f64>::builder(&cfg)
+        .problem(Jacobi1D::new(16, 3, 0.01).unwrap())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(r32.r_n < 1e-3, "f32 r_n {}", r32.r_n);
+    let diff = max_abs_diff(&r32.solution_f64(), &r64.solution_f64());
+    assert!(diff < 1e-3, "f32 vs f64 jacobi: {diff}");
+}
+
+/// Multi-time-step second problem: `begin_step` rebuilds the RHS from
+/// the previous step's converged iterate.
+#[test]
+fn jacobi_multi_time_step() {
+    let mut cfg = base_cfg(Scheme::Overlapping, TransportKind::Sim, 8);
+    cfg.time_steps = 3;
+    let rep = SolverSession::<f64>::builder(&cfg)
+        .problem(Jacobi1D::new(12, 2, 0.01).unwrap())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.steps.len(), 3);
+    assert!(rep.r_n < 1e-5, "final-step r_n = {}", rep.r_n);
+    // the solution evolves between steps (source keeps pumping heat in)
+    assert!(rep.solution.iter().any(|&x| x.abs() > 1e-3));
+}
+
+/// Capability errors surface at `build()`, before any rank spawns, with
+/// actionable messages.
+#[test]
+fn backend_capability_errors_are_clean() {
+    let cfg = base_cfg(Scheme::Overlapping, TransportKind::Sim, 8);
+
+    // XLA at f32: width capability error.
+    let err = SolverSession::<f32>::builder(&cfg)
+        .problem(ConvDiffProblem::from_config(&cfg).unwrap())
+        .backend(Backend::Xla)
+        .build()
+        .err()
+        .expect("f32 + xla must be rejected");
+    assert!(err.to_string().contains("f64-only"), "{err}");
+
+    // Jacobi has no XLA path at any width.
+    let err = SolverSession::<f64>::builder(&cfg)
+        .problem(Jacobi1D::new(8, 2, 0.01).unwrap())
+        .backend(Backend::Xla)
+        .build()
+        .err()
+        .expect("jacobi + xla must be rejected");
+    assert!(err.to_string().contains("no XLA compute path"), "{err}");
+
+    // The same problems build fine on the native backend.
+    assert!(SolverSession::<f32>::builder(&cfg)
+        .problem(ConvDiffProblem::from_config(&cfg).unwrap())
+        .build()
+        .is_ok());
+}
+
+/// The deprecated one-call shim delegates to the session and stays
+/// result-identical (the synchronous scheme is deterministic).
+#[test]
+#[allow(deprecated)]
+fn deprecated_solve_shim_matches_session() {
+    let cfg = base_cfg(Scheme::Overlapping, TransportKind::Sim, 8);
+    let old = jack2::solver::solve(&cfg).unwrap();
+    let new = solve_experiment::<f64>(&cfg).unwrap();
+    assert_eq!(old.iterations(), new.iterations());
+    assert_eq!(old.solution.len(), new.solution.len());
+    let diff = max_abs_diff(&old.solution, &new.solution);
+    assert!(diff < 1e-15, "shim diverged from session: {diff}");
+    assert_eq!(old.r_n, new.r_n);
+}
+
+/// Satellite bugfix regression: the aggregated reported norm is the
+/// agreed cross-rank value, not rank 0's alone — in a converged sync
+/// solve every rank observed the same broadcast norm, and the report
+/// must carry a finite value below the threshold.
+#[test]
+fn reported_norm_is_cross_rank_agreed() {
+    for scheme in SCHEMES {
+        let cfg = base_cfg(scheme, TransportKind::Sim, 8);
+        let rep = solve_experiment::<f64>(&cfg).unwrap();
+        let n = rep.steps[0].reported_norm;
+        assert!(n.is_finite(), "{scheme:?}: reported norm {n}");
+        assert!(n < cfg.threshold, "{scheme:?}: reported norm {n}");
+    }
+}
+
+/// A session can be re-run: each run builds fresh workers and a fresh
+/// world (deterministic for the synchronous scheme).
+#[test]
+fn session_is_rerunnable() {
+    let cfg = base_cfg(Scheme::Overlapping, TransportKind::Sim, 8);
+    let session = SolverSession::<f64>::builder(&cfg)
+        .problem(ConvDiffProblem::from_config(&cfg).unwrap())
+        .build()
+        .unwrap();
+    let a = session.run().unwrap();
+    let b = session.run().unwrap();
+    assert_eq!(a.iterations(), b.iterations());
+    assert_eq!(max_abs_diff(&a.solution, &b.solution), 0.0);
+}

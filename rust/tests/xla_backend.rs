@@ -7,7 +7,7 @@
 use jack2::config::{Backend, ExperimentConfig, Scheme};
 use jack2::problem::ConvDiff;
 use jack2::runtime::Engine;
-use jack2::solver::{solve, ComputeBackend, NativeBackend, XlaBackend};
+use jack2::solver::{solve_experiment, ComputeBackend, NativeBackend, XlaBackend};
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
@@ -75,7 +75,7 @@ fn full_solve_sync_with_xla_backend() {
         return;
     }
     let cfg = xla_cfg(Scheme::Overlapping);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
 }
 
@@ -86,7 +86,7 @@ fn full_solve_async_with_xla_backend() {
         return;
     }
     let cfg = xla_cfg(Scheme::Asynchronous);
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
     assert!(rep.snapshots() >= 1);
 }
@@ -97,16 +97,41 @@ fn xla_and_native_solves_agree() {
         eprintln!("skipping: artifacts/ not built");
         return;
     }
-    let xla = solve(&xla_cfg(Scheme::Overlapping)).unwrap();
+    let xla = solve_experiment::<f64>(&xla_cfg(Scheme::Overlapping)).unwrap();
     let mut ncfg = xla_cfg(Scheme::Overlapping);
     ncfg.backend = Backend::Native;
-    let nat = solve(&ncfg).unwrap();
+    let nat = solve_experiment::<f64>(&ncfg).unwrap();
     let max_diff = xla
         .solution
         .iter()
         .zip(&nat.solution)
         .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
     assert!(max_diff < 1e-9, "xla vs native solution: {max_diff}");
+}
+
+/// Regression: the RHS block changes per time step but is rewritten *in
+/// place* by the worker, so the address-keyed literal cache alone cannot
+/// see it — the `begin_step` invalidation hook must. Without it, steps
+/// 2..n sweep against the step-1 RHS and diverge from the native run.
+#[test]
+fn multi_time_step_xla_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut cfg = xla_cfg(Scheme::Overlapping);
+    cfg.time_steps = 3;
+    let xla = solve_experiment::<f64>(&cfg).unwrap();
+    assert!(xla.r_n < 1e-5, "r_n = {}", xla.r_n);
+    let mut ncfg = cfg.clone();
+    ncfg.backend = Backend::Native;
+    let nat = solve_experiment::<f64>(&ncfg).unwrap();
+    let max_diff = xla
+        .solution
+        .iter()
+        .zip(&nat.solution)
+        .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+    assert!(max_diff < 1e-9, "xla vs native multi-step solution: {max_diff}");
 }
 
 #[test]
@@ -152,7 +177,7 @@ fn full_solve_with_fused_inner_sweeps() {
     let mut cfg = xla_cfg(Scheme::Overlapping);
     cfg.inner_sweeps = 4;
     cfg.threshold = 1e-7; // margin: frozen-halo residual underestimates
-    let rep = solve(&cfg).unwrap();
+    let rep = solve_experiment::<f64>(&cfg).unwrap();
     assert!(rep.r_n < 1e-5, "r_n = {}", rep.r_n);
     // block relaxation needs far fewer outer iterations
     assert!(rep.iterations() < 100, "iters = {}", rep.iterations());
