@@ -51,6 +51,7 @@ fn solve_pair<S: Scalar, T: Transport + 'static>(
                             max_recv_requests: 4,
                             threshold,
                             send_discard: true,
+                            ..AsyncConfig::default()
                         })
                         .unwrap()
                 } else {

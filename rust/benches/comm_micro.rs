@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 
-use jack2::config::{ExperimentConfig, Scheme};
+use jack2::config::{ExperimentConfig, Scheme, TerminationKind};
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
 use jack2::scalar::Scalar;
@@ -250,6 +250,65 @@ fn bench_solve_precision(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Detection-latency trajectory (ISSUE 5): the same asynchronous
+/// convection–diffusion solve through `SolverSession` once per shipped
+/// termination protocol, recording how many iterations and how much wall
+/// time each detector takes to call the same convergence. One JSON row
+/// per protocol; CI fails if any of the three goes missing.
+fn bench_termination_detection(b: &Bencher) -> Vec<Json> {
+    println!("\ntermination detection: latency per protocol (async solve, SolverSession)");
+
+    let base = ExperimentConfig {
+        process_grid: (2, 2, 1),
+        n: 8,
+        scheme: Scheme::Asynchronous,
+        threshold: 1e-5,
+        net_latency_us: 5,
+        net_jitter: 0.1,
+        max_iters: 500_000,
+        ..Default::default()
+    };
+
+    let mut t = Table::new(&["protocol", "time / solve", "iters", "rounds", "r_n"]);
+    let mut rows = Vec::new();
+    for kind in TerminationKind::ALL {
+        let cfg = ExperimentConfig {
+            termination: kind,
+            ..base.clone()
+        };
+        let mut rep = None;
+        let st = b.run(&format!("detect {}", kind.name()), || {
+            rep = Some(solve_experiment::<f64>(&cfg).expect("solve failed"));
+        });
+        let rep = rep.expect("bencher runs the closure at least once");
+        let wall_ns = st.mean().as_nanos() as f64;
+        // Protocol-agnostic round counter (snapshot verdict rounds,
+        // persistence probe rounds, recursive-doubling folds).
+        let rounds = rep
+            .per_rank
+            .iter()
+            .map(|m| m.detection_rounds)
+            .max()
+            .unwrap_or(0);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{:.2}ms", wall_ns / 1e6),
+            rep.iterations().to_string(),
+            rounds.to_string(),
+            format!("{:.1e}", rep.r_n),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("protocol".into(), Json::Str(kind.name().into()));
+        row.insert("wall_ns".into(), Json::Num(wall_ns));
+        row.insert("iterations".into(), Json::Num(rep.iterations() as f64));
+        row.insert("detection_rounds".into(), Json::Num(rounds as f64));
+        row.insert("r_n".into(), Json::Num(rep.r_n));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -303,6 +362,7 @@ fn main() {
     let pooled_rows = bench_pooled_vs_clone(&b);
     let backend_rows = bench_backend_roundtrip(&b);
     let precision_rows = bench_solve_precision(&b);
+    let termination_rows = bench_termination_detection(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -314,6 +374,7 @@ fn main() {
     doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
     doc.insert("backend_roundtrip".into(), Json::Arr(backend_rows));
     doc.insert("solve_precision".into(), Json::Arr(precision_rows));
+    doc.insert("termination_detection".into(), Json::Arr(termination_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

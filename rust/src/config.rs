@@ -5,6 +5,11 @@ use crate::util::json::Json;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
+// The termination-protocol selector is protocol-domain state and lives
+// with the detectors; it is re-exported here because it is part of the
+// serializable experiment description, exactly like the enums below.
+pub use crate::jack::termination::TerminationKind;
+
 /// Which parallel iterative scheme to run (paper Algorithms 1–3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
@@ -143,6 +148,10 @@ pub struct ExperimentConfig {
     pub threshold: f64,
     /// Iteration scheme.
     pub scheme: Scheme,
+    /// Termination-detection protocol for asynchronous iterations
+    /// (ignored by the synchronous schemes, whose loop exit is the
+    /// blocking residual reduction).
+    pub termination: TerminationKind,
     /// Compute backend.
     pub backend: Backend,
     /// Message transport (simulated MPI vs shared-memory rings).
@@ -207,6 +216,7 @@ impl Default for ExperimentConfig {
             time_steps: 1,
             threshold: 1e-6,
             scheme: Scheme::Overlapping,
+            termination: TerminationKind::Snapshot,
             backend: Backend::Native,
             transport: TransportKind::Sim,
             precision: Precision::F64,
@@ -260,6 +270,10 @@ impl ExperimentConfig {
         m.insert("time_steps".into(), Json::Num(self.time_steps as f64));
         m.insert("threshold".into(), Json::Num(self.threshold));
         m.insert("scheme".into(), Json::Str(self.scheme.name().into()));
+        m.insert(
+            "termination".into(),
+            Json::Str(self.termination.name().into()),
+        );
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
         m.insert("transport".into(), Json::Str(self.transport.name().into()));
         m.insert("precision".into(), Json::Str(self.precision.name().into()));
@@ -334,6 +348,9 @@ impl ExperimentConfig {
         }
         if let Some(s) = v.get("scheme").and_then(|x| x.as_str()) {
             c.scheme = Scheme::parse(s)?;
+        }
+        if let Some(s) = v.get("termination").and_then(|x| x.as_str()) {
+            c.termination = TerminationKind::parse(s)?;
         }
         if let Some(s) = v.get("backend").and_then(|x| x.as_str()) {
             c.backend = Backend::parse(s)?;
@@ -432,6 +449,32 @@ mod tests {
         let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
         assert_eq!(d.precision, Precision::F32);
         assert_eq!(ExperimentConfig::default().precision, Precision::F64);
+    }
+
+    #[test]
+    fn termination_kind_parses_and_roundtrips() {
+        assert_eq!(
+            TerminationKind::parse("snapshot").unwrap(),
+            TerminationKind::Snapshot
+        );
+        assert_eq!(
+            TerminationKind::parse("recursive-doubling").unwrap(),
+            TerminationKind::RecursiveDoubling
+        );
+        assert!(TerminationKind::parse("oracle").is_err());
+        for kind in TerminationKind::ALL {
+            let c = ExperimentConfig {
+                termination: kind,
+                ..ExperimentConfig::default()
+            };
+            let s = json::write(&c.to_json());
+            let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+            assert_eq!(d.termination, kind);
+        }
+        assert_eq!(
+            ExperimentConfig::default().termination,
+            TerminationKind::Snapshot
+        );
     }
 
     #[test]

@@ -57,13 +57,15 @@ use std::marker::PhantomData;
 use std::time::{Duration, Instant};
 
 use super::async_comm::AsyncComm;
-use super::async_conv::AsyncConv;
 use super::buffers::BufferSet;
 use super::norm::NormKind;
 use super::spanning_tree::{self, SpanningTree};
 use super::sync_comm::SyncComm;
 use super::sync_conv::SyncConv;
-use super::termination::{SnapshotProtocol, TerminationProtocol};
+use super::termination::{
+    AsyncConv, PersistenceProtocol, RecursiveDoublingProtocol, SnapshotProtocol, TerminationKind,
+    TerminationProtocol, DEFAULT_PERSISTENCE,
+};
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
@@ -106,6 +108,11 @@ pub struct AsyncConfig {
     /// Discard sends on busy channels (Alg. 6; `false` is the E6
     /// ablation: every send is queued, delivering ever-staler data).
     pub send_discard: bool,
+    /// Which convergence-detection protocol decides termination (the
+    /// paper's snapshot mechanism by default; see
+    /// [`super::termination`] for the alternatives and their
+    /// reliability trade-offs).
+    pub termination: TerminationKind,
 }
 
 impl Default for AsyncConfig {
@@ -114,6 +121,7 @@ impl Default for AsyncConfig {
             max_recv_requests: 4,
             threshold: 1e-6,
             send_discard: true,
+            termination: TerminationKind::Snapshot,
         }
     }
 }
@@ -374,32 +382,49 @@ impl<T: Transport, S: Scalar> JackBuilder<T, S, Ready> {
     }
 
     /// Build a communicator running asynchronous iterations with the
-    /// paper's snapshot-based convergence detection (the `ConfigAsync` +
-    /// `SwitchAsync` pair of Listing 5).
+    /// configured convergence-detection protocol
+    /// ([`AsyncConfig::termination`]; the paper's snapshot mechanism by
+    /// default — the `ConfigAsync` + `SwitchAsync` pair of Listing 5).
     pub fn build_async(self, cfg: AsyncConfig) -> Result<JackComm<T, S>> {
         if self.res_len == 0 || self.sol_len == 0 {
             // An empty residual block has norm 0: lconv would arm
-            // immediately and the snapshot verdict would be meaningless.
-            // (Parity with the legacy config_async validation.)
+            // immediately and any detector's verdict would be
+            // meaningless. (Parity with the legacy config_async
+            // validation.)
             return Err(Error::Config(
                 "async mode requires non-empty residual and solution vectors \
-                 (snapshot residual evaluation)"
+                 (termination-detection residual evaluation)"
                     .into(),
             ));
         }
-        if !self.tree.is_root() && self.graph.num_recv() == 0 {
-            return Err(Error::Config(
-                "async convergence detection requires every non-root rank to \
-                 have at least one incoming link (snapshot propagation)"
-                    .into(),
-            ));
-        }
-        let protocol = snapshot_protocol(
-            self.norm_kind,
-            cfg.threshold,
-            &self.tree,
-            self.graph.num_recv(),
-        );
+        let protocol: Box<dyn TerminationProtocol<T, S>> = match cfg.termination {
+            TerminationKind::Snapshot => {
+                if !self.tree.is_root() && self.graph.num_recv() == 0 {
+                    return Err(Error::Config(
+                        "snapshot convergence detection requires every non-root \
+                         rank to have at least one incoming link (snapshot \
+                         propagation)"
+                            .into(),
+                    ));
+                }
+                snapshot_protocol(
+                    self.norm_kind,
+                    cfg.threshold,
+                    &self.tree,
+                    self.graph.num_recv(),
+                )
+            }
+            TerminationKind::Persistence => Box::new(PersistenceProtocol::new(
+                self.norm_kind,
+                self.tree.clone(),
+                DEFAULT_PERSISTENCE,
+            )),
+            TerminationKind::RecursiveDoubling => Box::new(RecursiveDoublingProtocol::new(
+                self.norm_kind,
+                self.graph.rank(),
+                self.ep.world_size(),
+            )),
+        };
         self.build_async_with(protocol, cfg.max_recv_requests, cfg.send_discard)
     }
 

@@ -32,6 +32,10 @@ pub const TAG_TREE_READY: Tag = 0x63;
 pub const TAG_NORM_SYNC: Tag = 0x70;
 /// Blocking leader-election norm: result flood `[round, norm]`.
 pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
+/// Recursive-doubling termination stage exchange:
+/// `[round, stage, flag, partial]` (arXiv:1907.01201; see
+/// [`crate::jack::termination::recursive_doubling`]).
+pub const TAG_RD_EXCHANGE: Tag = 0x90;
 
 /// Decode a snapshot face message (`[round, face...]`, as staged by
 /// `Transport::isend_headed_scalars`) into `(round, face)`, narrowing the
@@ -73,6 +77,7 @@ mod tests {
             TAG_TREE_READY,
             TAG_NORM_SYNC,
             TAG_NORM_SYNC_RESULT,
+            TAG_RD_EXCHANGE,
         ];
         let mut s = tags.to_vec();
         s.sort_unstable();

@@ -8,14 +8,18 @@
 //! | `JACKSyncComm`     | [`sync_comm::SyncComm`]                  |
 //! | `JACKAsyncComm`    | [`async_comm::AsyncComm`]                |
 //! | `JACKSyncConv`     | [`sync_conv::SyncConv`]                  |
-//! | `JACKAsyncConv`    | [`async_conv::AsyncConv`]                |
+//! | `JACKAsyncConv`    | [`termination::async_conv::AsyncConv`]   |
 //! | `JACKNorm`         | [`norm`]                                 |
 //! | `JACKSpanningTree` | [`spanning_tree`]                        |
-//! | `JACKSnapshot`     | folded into [`async_conv`] (Algs. 7–9)   |
+//! | `JACKSnapshot`     | folded into [`termination::async_conv`] (Algs. 7–9) |
 //! | (buffer manager)   | [`buffers::BufferSet`]                   |
 //!
 //! Plus [`termination`]: the pluggable-protocol extension point the paper
-//! lists among its contributions.
+//! lists among its contributions, now a module tree of its own — the
+//! trait, the snapshot/persistence detectors and the recursive-doubling
+//! detector (arXiv:1907.01201), selectable end to end via
+//! [`termination::TerminationKind`]. See its module docs for the
+//! "Adding a termination protocol" guide.
 //!
 //! Everything user-facing is generic over the payload
 //! [`crate::scalar::Scalar`] width (`f64` by default, `f32` supported
@@ -29,7 +33,6 @@
 #![deny(clippy::all)]
 
 pub mod async_comm;
-pub mod async_conv;
 pub mod buffers;
 pub mod comm;
 pub mod messages;
@@ -39,8 +42,11 @@ pub mod sync_comm;
 pub mod sync_conv;
 pub mod termination;
 
+// Path stability: `jack::async_conv` predates the termination module
+// tree; the module now lives at `jack::termination::async_conv`.
+pub use termination::async_conv;
+
 pub use async_comm::AsyncComm;
-pub use async_conv::{AsyncConv, Verdict};
 pub use buffers::BufferSet;
 pub use comm::{
     AsyncConfig, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode, Ready,
@@ -50,4 +56,7 @@ pub use norm::{NormKind, NormPending};
 pub use spanning_tree::SpanningTree;
 pub use sync_comm::SyncComm;
 pub use sync_conv::SyncConv;
-pub use termination::{PersistenceProtocol, SnapshotProtocol, TerminationProtocol};
+pub use termination::{
+    AsyncConv, PersistenceProtocol, RecursiveDoublingProtocol, SnapshotProtocol, TerminationKind,
+    TerminationProtocol, Verdict,
+};

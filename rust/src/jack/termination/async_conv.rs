@@ -51,10 +51,12 @@ macro_rules! dbg_ss {
     };
 }
 
-use super::buffers::BufferSet;
-use super::messages::{decode_snapshot, TAG_CONV_NOTIFY, TAG_NORM_PARTIAL, TAG_SNAPSHOT, TAG_TERM};
-use super::norm::NormKind;
-use super::spanning_tree::SpanningTree;
+use crate::jack::buffers::BufferSet;
+use crate::jack::messages::{
+    decode_snapshot, TAG_CONV_NOTIFY, TAG_NORM_PARTIAL, TAG_SNAPSHOT, TAG_TERM,
+};
+use crate::jack::norm::NormKind;
+use crate::jack::spanning_tree::SpanningTree;
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{Event, RankMetrics, Trace};
@@ -207,7 +209,7 @@ impl<S: Scalar> AsyncConv<S> {
                     let norm = self.kind.finalize(acc);
                     let terminated = norm < self.threshold;
                     let flag = if terminated { 1.0 } else { 0.0 };
-                    for &c in &self.tree.children.clone() {
+                    for &c in &self.tree.children {
                         ep.isend_copy(c, TAG_TERM, &[self.round as f64, norm, flag])?;
                     }
                     self.finish_round(norm, terminated, trace);
@@ -302,8 +304,10 @@ impl<S: Scalar> AsyncConv<S> {
         graph: &CommGraph,
         trace: &mut Trace,
     ) -> Result<()> {
-        // Convergence notifications from children.
-        for (ci, &c) in self.tree.children.clone().iter().enumerate() {
+        // Convergence notifications from children. (Field-precise
+        // borrows: `tree` is only read while the per-child state
+        // mutates, so the drain path allocates nothing.)
+        for (ci, &c) in self.tree.children.iter().enumerate() {
             while let Some(msg) = ep.try_match(c, TAG_CONV_NOTIFY) {
                 let r = msg[0] as u64;
                 dbg_ss!("rank {} got notify round {r} from child {c}", ep.rank());
@@ -353,7 +357,7 @@ impl<S: Scalar> AsyncConv<S> {
                 let terminated = msg[2] != 0.0;
                 let flag = if terminated { 1.0 } else { 0.0 };
                 drop(msg); // recycle before fanning out
-                for &c in &self.tree.children.clone() {
+                for &c in &self.tree.children {
                     ep.isend_copy(c, TAG_TERM, &[r as f64, norm, flag])?;
                 }
                 self.finish_round(norm, terminated, trace);

@@ -1,0 +1,244 @@
+//! # termination — pluggable convergence-detection protocols
+//!
+//! The extension point of record for asynchronous termination detection
+//! (paper conclusion: "the possibility now to add various other
+//! termination protocols"), promoted to a module tree the same way
+//! [`crate::transport`] is the extension point for backends. A detector
+//! implements [`TerminationProtocol`] and earns its place by passing the
+//! **protocol-parameterized conformance suite** in
+//! `rust/tests/termination_conformance.rs` (one shared body per protocol
+//! and per transport backend, via the `termination_suite!` macro that
+//! mirrors the transport layer's `conformance_suite!`).
+//!
+//! Three detectors ship:
+//!
+//! | Protocol | Module | Character |
+//! |----------|--------|-----------|
+//! | [`SnapshotProtocol`] | [`snapshot`] (state machine in [`async_conv`]) | the paper's exact mechanism (Algs. 7–9): supervised on the spanning tree, evaluates a true global residual of a consistent snapshot vector |
+//! | [`PersistenceProtocol`] | [`persistence`] | decentralized heuristic (paper ref. [2]): global convergence when every rank's `lconv` streak persists for `m` probe rounds; residual is an estimate |
+//! | [`RecursiveDoublingProtocol`] | [`recursive_doubling`] | modified recursive doubling (arXiv:1907.01201): tree-free, symmetric — partial-convergence state is folded over log₂(p) partner exchanges per round; two consecutive all-converged rounds terminate |
+//!
+//! Selection is threaded end to end: [`TerminationKind`] (JSON
+//! round-tripped by [`crate::config::ExperimentConfig`]) →
+//! [`crate::jack::AsyncConfig::termination`] → the solver session builder
+//! → `repro solve --termination snapshot|persistence|recursive-doubling`.
+//!
+//! ## Adding a termination protocol
+//!
+//! Implement [`TerminationProtocol`] (only `poll`, `harvest_residual`,
+//! `global_norm`, `terminated` and `name` are mandatory — the delivery
+//! hooks `try_deliver`/`freeze_recv` and `reopen` have defaults) and plug
+//! it in through [`crate::jack::JackBuilder::build_async_with`]; then
+//! instantiate the termination conformance suite for it
+//! (`termination_suite!(your_protocol_backend, YourProto, Backend);`).
+//! The suite pins down the behaviours the solver loop relies on: no
+//! false detection under message delay/reordering and residual
+//! staleness, no missed detection, fresh detection after [`reopen`],
+//! and zero steady-state pool allocations.
+//!
+//! [`reopen`]: TerminationProtocol::reopen
+//!
+//! A minimal custom detector, end to end through the typed session API
+//! (it terminates unconditionally after the local flag has been armed a
+//! fixed number of polls — fine for a demo, unreliable in production):
+//!
+//! ```
+//! use jack2::prelude::*;
+//! use jack2::jack::BufferSet;
+//! use jack2::metrics::{RankMetrics, Trace};
+//!
+//! struct CountdownProtocol {
+//!     left: u32,
+//! }
+//!
+//! impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for CountdownProtocol {
+//!     fn poll(
+//!         &mut self,
+//!         _ep: &mut T,
+//!         _graph: &CommGraph,
+//!         _bufs: &BufferSet<S>,
+//!         _sol_vec: &[S],
+//!         lconv: bool,
+//!         _metrics: &mut RankMetrics,
+//!         _trace: &mut Trace,
+//!     ) -> Result<()> {
+//!         if lconv {
+//!             self.left = self.left.saturating_sub(1);
+//!         }
+//!         Ok(())
+//!     }
+//!     fn harvest_residual(&mut self, _res_vec: &[S]) {}
+//!     fn global_norm(&self) -> Option<f64> {
+//!         None
+//!     }
+//!     fn terminated(&self) -> bool {
+//!         self.left == 0
+//!     }
+//!     fn name(&self) -> &'static str {
+//!         "countdown"
+//!     }
+//! }
+//!
+//! let (_world, mut eps) = jack2::simmpi::World::homogeneous(1);
+//! let graph = CommGraph::symmetric(0, vec![]).unwrap();
+//! let mut comm = JackComm::<_, f64>::builder(eps.pop().unwrap(), graph)
+//!     .unwrap()
+//!     .with_buffers(&[], &[])
+//!     .unwrap()
+//!     .with_residual(1, NormKind::Max)
+//!     .with_solution(1)
+//!     .build_async_with(Box::new(CountdownProtocol { left: 3 }), 4, true)
+//!     .unwrap();
+//! let report = comm
+//!     .iterate(&IterateOpts::default(), |v| {
+//!         v.res[0] = 0.0; // locally converged from the first iteration
+//!         StepOutcome::Continue
+//!     })
+//!     .unwrap();
+//! assert!(report.terminated);
+//! ```
+
+pub mod async_conv;
+pub mod persistence;
+pub mod recursive_doubling;
+pub mod snapshot;
+
+pub use async_conv::{AsyncConv, Verdict};
+pub use persistence::PersistenceProtocol;
+pub use recursive_doubling::RecursiveDoublingProtocol;
+pub use snapshot::SnapshotProtocol;
+
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::metrics::{RankMetrics, Trace};
+use crate::scalar::Scalar;
+use crate::transport::Transport;
+
+use super::buffers::BufferSet;
+
+/// Default consecutive-round requirement for [`PersistenceProtocol`]
+/// when it is selected through [`TerminationKind`] (the paper's ref. [2]
+/// uses small single-digit persistence).
+pub const DEFAULT_PERSISTENCE: u32 = 4;
+
+/// Which termination detector an asynchronous solve runs. Serializable
+/// (see [`crate::config::ExperimentConfig`]) and parseable from the CLI
+/// (`repro solve --termination ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TerminationKind {
+    /// The paper's snapshot-based protocol ([`SnapshotProtocol`]).
+    #[default]
+    Snapshot,
+    /// Decentralized persistence heuristic ([`PersistenceProtocol`]).
+    Persistence,
+    /// Modified recursive doubling, arXiv:1907.01201
+    /// ([`RecursiveDoublingProtocol`]).
+    RecursiveDoubling,
+}
+
+impl TerminationKind {
+    /// All shipped protocols, in documentation order (bench sweeps and
+    /// the conformance matrix iterate this).
+    pub const ALL: [TerminationKind; 3] = [
+        TerminationKind::Snapshot,
+        TerminationKind::Persistence,
+        TerminationKind::RecursiveDoubling,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TerminationKind::Snapshot => "snapshot",
+            TerminationKind::Persistence => "persistence",
+            TerminationKind::RecursiveDoubling => "recursive-doubling",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "snapshot" | "snap" => Ok(TerminationKind::Snapshot),
+            "persistence" | "persist" => Ok(TerminationKind::Persistence),
+            "recursive-doubling" | "recursive_doubling" | "rd" => {
+                Ok(TerminationKind::RecursiveDoubling)
+            }
+            _ => Err(Error::Config(format!("unknown termination protocol {s:?}"))),
+        }
+    }
+}
+
+/// What an asynchronous termination detector must provide.
+///
+/// Generic over the [`Transport`] backend and the payload [`Scalar`]
+/// width at the trait level (not per method) so detectors stay
+/// object-safe: [`crate::jack::JackComm`] and the solver drivers hold a
+/// `Box<dyn TerminationProtocol<T, S>>` for whatever backend and width
+/// they run on. `Send` is a supertrait so a communicator owning a boxed
+/// detector can still move to its rank thread.
+pub trait TerminationProtocol<T: Transport, S: Scalar = f64>: Send {
+    /// Advance the detector. Called once per iteration with the user's
+    /// current local-convergence flag.
+    #[allow(clippy::too_many_arguments)]
+    fn poll(
+        &mut self,
+        ep: &mut T,
+        graph: &CommGraph,
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        trace: &mut Trace,
+    ) -> Result<()>;
+
+    /// Give the detector a chance to commandeer the user buffers (only
+    /// the snapshot protocol uses this). Returns true if it did.
+    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
+        let _ = (bufs, sol_vec);
+        Ok(false)
+    }
+
+    /// Feed the freshly computed residual block to the detector.
+    fn harvest_residual(&mut self, res_vec: &[S]);
+
+    /// True while ordinary message delivery must be frozen.
+    fn freeze_recv(&self) -> bool {
+        false
+    }
+
+    /// Detector's estimate of the global residual norm, if any.
+    fn global_norm(&self) -> Option<f64>;
+
+    /// True once global termination has been decided.
+    fn terminated(&self) -> bool;
+
+    /// Re-arm the detector after a terminated round (next time step).
+    /// Implementations whose state machine supports reopening override
+    /// this; the default is a no-op. Post-reopen verdicts must require a
+    /// fresh detection run (the conformance suite enforces this), and
+    /// implementations must tolerate in-flight messages from peers that
+    /// reopened earlier (round monotonicity — the shipped detectors
+    /// buffer ahead-of-round messages and drop stale ones). Drivers
+    /// conventionally place a world barrier between solves
+    /// ([`crate::jack::JackComm::reset_for_new_solve`] documents this),
+    /// but correctness must not depend on it.
+    fn reopen(&mut self) {}
+
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip_through_parse() {
+        for kind in TerminationKind::ALL {
+            assert_eq!(TerminationKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(
+            TerminationKind::parse("rd").unwrap(),
+            TerminationKind::RecursiveDoubling
+        );
+        assert!(TerminationKind::parse("leader-election").is_err());
+        assert_eq!(TerminationKind::default(), TerminationKind::Snapshot);
+    }
+}

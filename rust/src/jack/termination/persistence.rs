@@ -1,136 +1,28 @@
-//! Pluggable termination protocols (paper conclusion: "the possibility
-//! now to add various other termination protocols").
-//!
-//! [`TerminationProtocol`] abstracts what the asynchronous solver driver
-//! needs from a detector. Two implementations ship:
-//!
-//! * [`SnapshotProtocol`] — the paper's exact mechanism
-//!   ([`super::async_conv::AsyncConv`] behind the trait); supervised,
-//!   non-intrusive, and the only one that evaluates a true global
-//!   residual (paper §3.1).
-//! * [`PersistenceProtocol`] — a decentralized heuristic in the spirit of
-//!   Bahi–Contassot-Vivier–Couturier (paper ref. [2]): global convergence
-//!   is declared when every rank has observed local convergence for `m`
-//!   consecutive probe rounds. Cheaper, but can terminate prematurely on
-//!   non-monotone residuals — exactly the reliability gap the paper uses
-//!   to motivate the snapshot approach (see the `termination_protocols`
-//!   example and the detection-overhead bench).
+//! Decentralized persistence heuristic — global convergence is declared
+//! when every rank has observed local convergence for `m` consecutive
+//! probe rounds (in the spirit of Bahi–Contassot-Vivier–Couturier, the
+//! paper's ref. [2]). Cheaper than the snapshot protocol, but its norm is
+//! only an estimate and it can terminate prematurely on non-monotone
+//! residuals — exactly the reliability gap the paper uses to motivate
+//! the snapshot approach (see the `termination_protocols` example and
+//! the detection-overhead bench).
 
 use std::collections::HashMap;
 
-use super::async_conv::AsyncConv;
-use super::buffers::BufferSet;
-use super::norm::NormKind;
-use super::spanning_tree::SpanningTree;
+use super::TerminationProtocol;
 use crate::error::Result;
 use crate::graph::CommGraph;
+use crate::jack::buffers::BufferSet;
+use crate::jack::norm::NormKind;
+use crate::jack::spanning_tree::SpanningTree;
 use crate::metrics::{RankMetrics, Trace};
 use crate::scalar::Scalar;
 use crate::transport::{Tag, Transport};
 
 /// Tag namespace for the persistence protocol (disjoint from
-/// [`super::messages`] tags).
+/// [`crate::jack::messages`] tags).
 const TAG_PERSIST_UP: Tag = 0x80;
 const TAG_PERSIST_DOWN: Tag = 0x81;
-
-/// What an asynchronous termination detector must provide.
-///
-/// Generic over the [`Transport`] backend and the payload [`Scalar`]
-/// width at the trait level (not per method) so detectors stay
-/// object-safe: [`crate::jack::JackComm`] and the solver drivers hold a
-/// `Box<dyn TerminationProtocol<T, S>>` for whatever backend and width
-/// they run on. `Send` is a supertrait so a communicator owning a boxed
-/// detector can still move to its rank thread.
-pub trait TerminationProtocol<T: Transport, S: Scalar = f64>: Send {
-    /// Advance the detector. Called once per iteration with the user's
-    /// current local-convergence flag.
-    #[allow(clippy::too_many_arguments)]
-    fn poll(
-        &mut self,
-        ep: &mut T,
-        graph: &CommGraph,
-        bufs: &BufferSet<S>,
-        sol_vec: &[S],
-        lconv: bool,
-        metrics: &mut RankMetrics,
-        trace: &mut Trace,
-    ) -> Result<()>;
-
-    /// Give the detector a chance to commandeer the user buffers (only
-    /// the snapshot protocol uses this). Returns true if it did.
-    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
-        let _ = (bufs, sol_vec);
-        Ok(false)
-    }
-
-    /// Feed the freshly computed residual block to the detector.
-    fn harvest_residual(&mut self, res_vec: &[S]);
-
-    /// True while ordinary message delivery must be frozen.
-    fn freeze_recv(&self) -> bool {
-        false
-    }
-
-    /// Detector's estimate of the global residual norm, if any.
-    fn global_norm(&self) -> Option<f64>;
-
-    /// True once global termination has been decided.
-    fn terminated(&self) -> bool;
-
-    /// Re-arm the detector after a terminated round (next time step).
-    /// Implementations whose state machine supports reopening override
-    /// this; the default is a no-op.
-    fn reopen(&mut self) {}
-
-    /// Short name for reports.
-    fn name(&self) -> &'static str;
-}
-
-/// The paper's snapshot-based protocol behind the trait.
-pub struct SnapshotProtocol<S: Scalar = f64>(pub AsyncConv<S>);
-
-impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for SnapshotProtocol<S> {
-    fn poll(
-        &mut self,
-        ep: &mut T,
-        graph: &CommGraph,
-        bufs: &BufferSet<S>,
-        sol_vec: &[S],
-        lconv: bool,
-        metrics: &mut RankMetrics,
-        trace: &mut Trace,
-    ) -> Result<()> {
-        self.0.poll(ep, graph, bufs, sol_vec, lconv, metrics, trace)
-    }
-
-    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
-        self.0.try_deliver_snapshot(bufs, sol_vec)
-    }
-
-    fn harvest_residual(&mut self, res_vec: &[S]) {
-        self.0.harvest_residual(res_vec);
-    }
-
-    fn freeze_recv(&self) -> bool {
-        self.0.freeze_recv()
-    }
-
-    fn global_norm(&self) -> Option<f64> {
-        self.0.global_norm()
-    }
-
-    fn terminated(&self) -> bool {
-        self.0.terminated()
-    }
-
-    fn reopen(&mut self) {
-        self.0.reopen();
-    }
-
-    fn name(&self) -> &'static str {
-        "snapshot"
-    }
-}
 
 /// Decentralized persistence heuristic.
 ///
@@ -184,7 +76,10 @@ impl PersistenceProtocol {
     }
 
     /// Re-arm after a terminated round (next time step): clear the
-    /// verdict and the streak, keep round numbers monotone.
+    /// verdict **and the consecutive-under-threshold streak** (so a
+    /// post-reopen verdict requires a fresh run of `persistence` polls —
+    /// pinned by `persistence_reopen_requires_fresh_streak` below and by
+    /// the termination conformance suite), keep round numbers monotone.
     pub fn reopen(&mut self) {
         self.verdict = None;
         self.streak = 0;
@@ -193,19 +88,16 @@ impl PersistenceProtocol {
     }
 
     /// Advance the detector (see the trait docs).
-    pub fn poll<T: Transport>(
-        &mut self,
-        ep: &mut T,
-        lconv: bool,
-    ) -> Result<()> {
+    pub fn poll<T: Transport>(&mut self, ep: &mut T, lconv: bool) -> Result<()> {
         if self.terminated() {
             return Ok(());
         }
         self.streak = if lconv { self.streak + 1 } else { 0 };
 
-        // Collect child reports: [round, flag, partial]
-        let children = self.tree.children.clone();
-        for (ci, &c) in children.iter().enumerate() {
+        // Collect child reports: [round, flag, partial]. (Field-precise
+        // borrows: `tree` is only read while the report maps mutate, so
+        // the detection hot path allocates nothing.)
+        for (ci, &c) in self.tree.children.iter().enumerate() {
             while let Some(msg) = ep.try_match(c, TAG_PERSIST_UP) {
                 let r = msg[0] as u64;
                 if r >= self.round {
@@ -219,7 +111,7 @@ impl PersistenceProtocol {
                 let fwd = [msg[0], msg[1], msg[2]];
                 let (norm, term) = (fwd[1], fwd[2] != 0.0);
                 drop(msg); // recycle before fanning out
-                for &c in &children {
+                for &c in &self.tree.children {
                     ep.isend_copy(c, TAG_PERSIST_DOWN, &fwd)?;
                 }
                 self.verdict = Some((norm, term));
@@ -232,7 +124,7 @@ impl PersistenceProtocol {
         }
 
         // Report up once per round when all children reported this round.
-        let all_children: Option<Vec<(bool, f64)>> = (0..children.len())
+        let all_children: Option<Vec<(bool, f64)>> = (0..self.tree.children.len())
             .map(|ci| self.child_reports.get(&(self.round, ci)).copied())
             .collect();
         if !self.sent_report {
@@ -246,7 +138,7 @@ impl PersistenceProtocol {
                 if self.tree.is_root() {
                     let norm = self.kind.finalize(acc);
                     let term = flag;
-                    for &c in &children {
+                    for &c in &self.tree.children {
                         ep.isend_copy(
                             c,
                             TAG_PERSIST_DOWN,
@@ -281,10 +173,19 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for PersistenceProtocol 
         _bufs: &BufferSet<S>,
         _sol_vec: &[S],
         lconv: bool,
-        _metrics: &mut RankMetrics,
+        metrics: &mut RankMetrics,
         _trace: &mut Trace,
     ) -> Result<()> {
-        PersistenceProtocol::poll(self, ep, lconv)
+        // Completed probe rounds: resume verdicts advance `round`; the
+        // terminating round does not, so count the termination edge too.
+        let round_before = self.round;
+        let was_terminated = self.terminated();
+        PersistenceProtocol::poll(self, ep, lconv)?;
+        metrics.detection_rounds += self.round - round_before;
+        if self.terminated() && !was_terminated {
+            metrics.detection_rounds += 1;
+        }
+        Ok(())
     }
 
     fn harvest_residual(&mut self, res_vec: &[S]) {
@@ -340,5 +241,41 @@ mod tests {
         assert_eq!(p.global_norm(), Some(1e-9));
         let as_proto: &dyn TerminationProtocol<crate::simmpi::Endpoint> = &p;
         assert_eq!(as_proto.name(), "persistence");
+    }
+
+    /// ISSUE 5 satellite regression: a post-reopen verdict must require a
+    /// fresh run of `persistence` consecutive armed polls — the streak
+    /// accumulated before the previous verdict must not carry across
+    /// `reopen()`.
+    #[test]
+    fn persistence_reopen_requires_fresh_streak() {
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let mut p = PersistenceProtocol::new(NormKind::Max, SpanningTree::solo(), 3);
+        p.harvest_residual(&[1e-9]);
+        for _ in 0..3 {
+            p.poll(&mut ep, true).unwrap();
+        }
+        assert!(p.terminated());
+        let round_at_verdict = p.round;
+
+        p.reopen();
+        assert!(!p.terminated(), "reopen must clear the verdict");
+        assert!(p.round > round_at_verdict, "rounds stay monotone");
+
+        // Still locally converged — but the detector must demand a fresh
+        // streak of `persistence` polls before deciding again.
+        p.harvest_residual(&[2e-9]);
+        for i in 0..2 {
+            p.poll(&mut ep, true).unwrap();
+            assert!(
+                !p.terminated(),
+                "verdict after only {} post-reopen polls",
+                i + 1
+            );
+        }
+        p.poll(&mut ep, true).unwrap();
+        assert!(p.terminated(), "fresh streak complete, must re-terminate");
+        assert_eq!(p.global_norm(), Some(2e-9));
     }
 }

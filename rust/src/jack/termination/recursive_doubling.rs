@@ -1,0 +1,421 @@
+//! Modified recursive doubling convergence detection — after Zou &
+//! Magoulès, *Convergence Detection of Asynchronous Iterations based on
+//! Modified Recursive Doubling* (arXiv:1907.01201).
+//!
+//! Unlike the snapshot and persistence protocols, this detector is
+//! **tree-free and fully symmetric**: no spanning tree, no root, no
+//! convergecast/broadcast pair. Detection runs in back-to-back *rounds*;
+//! in each round every rank folds partial-convergence state with
+//! ⌈log₂ p⌉ partners:
+//!
+//! * **power-of-two worlds** use classic recursive doubling — at stage
+//!   `k` rank `i` exchanges with `i XOR 2^k` (a butterfly: each stage
+//!   pairs disjoint sub-cubes, so sum-norm partials are combined exactly
+//!   once);
+//! * **other world sizes** use the dissemination generalization — at
+//!   stage `k` rank `i` sends to `(i + 2^k) mod p` and folds the message
+//!   from `(i − 2^k) mod p`. Every rank's contribution still reaches
+//!   every other rank in ⌈log₂ p⌉ stages; wrapped ranges may fold a
+//!   contribution twice, which is exact for the max-norm and a
+//!   conservative over-estimate for sum norms (never a missed
+//!   contribution).
+//!
+//! The *modification* for asynchronous iterations is in what a rank
+//! contributes and when termination is declared:
+//!
+//! 1. A rank's round-`r` contribution is **latched** at round start:
+//!    `lconv` held at *every* poll since its round-`(r−1)` contribution.
+//!    Latching makes the round's global AND a well-defined value — every
+//!    rank folds the same p contributions, so all ranks reach the same
+//!    verdict for every round and terminate at the same round, with no
+//!    termination broadcast.
+//! 2. Termination requires **two consecutive all-converged rounds**.
+//!    A rank whose local residual spikes after its neighbours report
+//!    convergence breaks its held-window, contributes `false` to the
+//!    next round it latches, and thereby vetoes the pending verdict —
+//!    the no-false-detection property the termination conformance suite
+//!    seeds directly.
+//!
+//! Stage messages are 4-word pooled control messages
+//! (`[round, stage, flag, partial]` on [`TAG_RD_EXCHANGE`]) staged
+//! through the transport's recycling [`crate::transport::BufferPool`],
+//! so steady-state detection traffic performs no heap allocation.
+
+use std::collections::HashMap;
+
+use super::TerminationProtocol;
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::jack::buffers::BufferSet;
+use crate::jack::messages::TAG_RD_EXCHANGE;
+use crate::jack::norm::NormKind;
+use crate::metrics::{RankMetrics, Trace};
+use crate::scalar::Scalar;
+use crate::transport::{Rank, Transport};
+
+/// Per-rank state machine of the modified recursive-doubling detector.
+pub struct RecursiveDoublingProtocol {
+    kind: NormKind,
+    rank: Rank,
+    world: usize,
+    /// ⌈log₂ world⌉ partner exchanges per round (0 for a solo world).
+    stages: u32,
+    /// Current round (starts at 1; stays monotone across `reopen`).
+    round: u64,
+    /// Next stage awaiting its partner message within the current round.
+    stage: u32,
+    /// Whether this round's contribution has been latched (and stage 0
+    /// sent).
+    latched: bool,
+    /// `lconv` held at every poll since the previous round's latch.
+    held: bool,
+    /// Folded AND of contributions seen so far this round.
+    acc_flag: bool,
+    /// Folded norm partial for this round.
+    acc_partial: f64,
+    /// Previous completed round's global AND (termination needs two in a
+    /// row).
+    prev_all: bool,
+    /// Latest harvested local residual partial.
+    last_partial: f64,
+    /// Early partner messages: (round, stage) → (flag, partial).
+    pending: HashMap<(u64, u32), (bool, f64)>,
+    /// Latest completed-round outcome: (norm estimate, terminated).
+    verdict: Option<(f64, bool)>,
+    /// Completed rounds (reporting/benchmarks).
+    rounds_completed: u64,
+}
+
+impl RecursiveDoublingProtocol {
+    pub fn new(kind: NormKind, rank: Rank, world: usize) -> Self {
+        let stages = if world <= 1 {
+            0
+        } else {
+            usize::BITS - (world - 1).leading_zeros()
+        };
+        RecursiveDoublingProtocol {
+            kind,
+            rank,
+            world,
+            stages,
+            round: 1,
+            stage: 0,
+            latched: false,
+            held: true,
+            acc_flag: false,
+            acc_partial: f64::INFINITY,
+            prev_all: false,
+            last_partial: f64::INFINITY,
+            pending: HashMap::new(),
+            verdict: None,
+            rounds_completed: 0,
+        }
+    }
+
+    /// True once global termination has been decided.
+    pub fn terminated(&self) -> bool {
+        self.verdict.is_some_and(|(_, t)| t)
+    }
+
+    /// Latest completed round's norm estimate (folded latched partials —
+    /// exact for the max-norm; see the module docs for sum norms on
+    /// non-power-of-two worlds).
+    pub fn global_norm(&self) -> Option<f64> {
+        self.verdict.map(|(n, _)| n)
+    }
+
+    /// Detection rounds completed so far.
+    pub fn rounds_completed(&self) -> u64 {
+        self.rounds_completed
+    }
+
+    /// Feed the freshly computed residual block to the detector.
+    pub fn harvest_residual<S: Scalar>(&mut self, res_vec: &[S]) {
+        self.last_partial = self.kind.partial(res_vec);
+    }
+
+    /// Re-arm after a terminated round (next time step). Every rank
+    /// terminates at the same round and advances past it, so all ranks
+    /// resume on the same (monotone) round number; requiring two fresh
+    /// all-converged rounds restores the detection guarantee.
+    pub fn reopen(&mut self) {
+        self.verdict = None;
+        self.prev_all = false;
+        self.held = true;
+        self.latched = false;
+        self.stage = 0;
+        // `pending` is deliberately kept: entries at or beyond the
+        // current round are legitimate early messages from peers that
+        // reopened (and latched the next round) before this rank did —
+        // clearing them would deadlock a barrier-free driver. Stale
+        // rounds were already pruned at round completion, and every
+        // rank resets `prev_all`, so a post-reopen verdict still needs
+        // two fresh all-converged rounds.
+    }
+
+    /// Outgoing partner of stage `k` (see the module docs).
+    fn partner_out(&self, stage: u32) -> Rank {
+        let hop = 1usize << stage;
+        if self.world.is_power_of_two() {
+            self.rank ^ hop
+        } else {
+            (self.rank + hop) % self.world
+        }
+    }
+
+    /// Incoming partner of stage `k`.
+    fn partner_in(&self, stage: u32) -> Rank {
+        let hop = 1usize << stage;
+        if self.world.is_power_of_two() {
+            self.rank ^ hop
+        } else {
+            (self.rank + self.world - hop) % self.world
+        }
+    }
+
+    fn send_stage<T: Transport>(&mut self, ep: &mut T) -> Result<()> {
+        let dst = self.partner_out(self.stage);
+        ep.isend_copy(
+            dst,
+            TAG_RD_EXCHANGE,
+            &[
+                self.round as f64,
+                self.stage as f64,
+                if self.acc_flag { 1.0 } else { 0.0 },
+                self.acc_partial,
+            ],
+        )?;
+        Ok(())
+    }
+
+    /// Drain partner messages into the pending map (stale rounds are
+    /// dropped; a peer can run at most a couple of rounds ahead, so the
+    /// map stays small).
+    fn drain<T: Transport>(&mut self, ep: &mut T) {
+        for k in 0..self.stages {
+            let src = self.partner_in(k);
+            // Distinct stages have distinct incoming partners (2^k < p
+            // and hop differences stay below p), but stay defensive: a
+            // source already drained for an earlier stage is skipped.
+            if (0..k).any(|j| self.partner_in(j) == src) {
+                continue;
+            }
+            while let Some(msg) = ep.try_match(src, TAG_RD_EXCHANGE) {
+                let r = msg[0] as u64;
+                let s = msg[1] as u32;
+                if r >= self.round {
+                    self.pending.insert((r, s), (msg[2] != 0.0, msg[3]));
+                }
+            }
+        }
+    }
+
+    /// Advance the detector (see the trait docs). At most one round
+    /// completes per poll, so contributions stay freshly sampled.
+    pub fn poll<T: Transport>(&mut self, ep: &mut T, lconv: bool) -> Result<()> {
+        if self.terminated() {
+            return Ok(());
+        }
+        if self.world <= 1 {
+            // Solo world: a round degenerates to one poll; two
+            // consecutive armed polls terminate.
+            let all = lconv && self.held;
+            self.held = lconv;
+            let term = all && self.prev_all;
+            self.prev_all = all;
+            self.verdict = Some((self.kind.finalize(self.last_partial), term));
+            self.rounds_completed += 1;
+            self.round += 1;
+            return Ok(());
+        }
+
+        self.held &= lconv;
+        self.drain(ep);
+
+        loop {
+            if !self.latched {
+                // Latch this round's contribution: lconv held over the
+                // whole window since the previous latch.
+                self.acc_flag = self.held;
+                self.acc_partial = self.last_partial;
+                self.held = lconv;
+                self.latched = true;
+                self.stage = 0;
+                self.send_stage(ep)?;
+            }
+            let Some((flag, partial)) = self.pending.remove(&(self.round, self.stage)) else {
+                return Ok(());
+            };
+            self.acc_flag &= flag;
+            self.acc_partial = self.kind.combine(self.acc_partial, partial);
+            self.stage += 1;
+            if self.stage < self.stages {
+                self.send_stage(ep)?;
+                continue;
+            }
+            // Round complete: every rank folds the same latched
+            // contributions, so `all` (and hence the verdict) is
+            // identical on every rank — termination needs no broadcast.
+            let all = self.acc_flag;
+            let term = all && self.prev_all;
+            self.prev_all = all;
+            self.verdict = Some((self.kind.finalize(self.acc_partial), term));
+            self.rounds_completed += 1;
+            self.round += 1;
+            self.latched = false;
+            let round = self.round;
+            self.pending.retain(|(r, _), _| *r >= round);
+            return Ok(());
+        }
+    }
+}
+
+impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for RecursiveDoublingProtocol {
+    fn poll(
+        &mut self,
+        ep: &mut T,
+        _graph: &CommGraph,
+        _bufs: &BufferSet<S>,
+        _sol_vec: &[S],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        _trace: &mut Trace,
+    ) -> Result<()> {
+        let rounds_before = self.rounds_completed;
+        RecursiveDoublingProtocol::poll(self, ep, lconv)?;
+        metrics.detection_rounds += self.rounds_completed - rounds_before;
+        Ok(())
+    }
+
+    fn harvest_residual(&mut self, res_vec: &[S]) {
+        RecursiveDoublingProtocol::harvest_residual(self, res_vec);
+    }
+
+    fn global_norm(&self) -> Option<f64> {
+        RecursiveDoublingProtocol::global_norm(self)
+    }
+
+    fn terminated(&self) -> bool {
+        RecursiveDoublingProtocol::terminated(self)
+    }
+
+    fn reopen(&mut self) {
+        RecursiveDoublingProtocol::reopen(self);
+    }
+
+    fn name(&self) -> &'static str {
+        "recursive-doubling"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_counts_and_partners() {
+        // power of two: XOR butterfly, symmetric partners
+        let p = RecursiveDoublingProtocol::new(NormKind::Max, 3, 8);
+        assert_eq!(p.stages, 3);
+        assert_eq!(p.partner_out(0), 2);
+        assert_eq!(p.partner_in(0), 2);
+        assert_eq!(p.partner_out(2), 7);
+        // non power of two: dissemination partners
+        let p = RecursiveDoublingProtocol::new(NormKind::Max, 0, 5);
+        assert_eq!(p.stages, 3);
+        assert_eq!(p.partner_out(0), 1);
+        assert_eq!(p.partner_in(0), 4);
+        assert_eq!(p.partner_out(2), 4);
+        assert_eq!(p.partner_in(2), 1);
+        // solo
+        let p = RecursiveDoublingProtocol::new(NormKind::Max, 0, 1);
+        assert_eq!(p.stages, 0);
+    }
+
+    #[test]
+    fn solo_needs_two_consecutive_armed_rounds() {
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let mut p = RecursiveDoublingProtocol::new(NormKind::Max, 0, 1);
+        p.harvest_residual(&[1e-9f64]);
+        p.poll(&mut ep, true).unwrap();
+        assert!(!p.terminated(), "one armed round must not terminate");
+        // A disarmed poll vetoes the pending verdict; the next armed
+        // poll's window still contains the disarm, so re-termination
+        // takes two further clean windows beyond it.
+        p.poll(&mut ep, false).unwrap();
+        p.poll(&mut ep, true).unwrap();
+        assert!(!p.terminated(), "window containing the disarm cannot count");
+        p.poll(&mut ep, true).unwrap();
+        assert!(!p.terminated(), "veto must demand two fresh rounds");
+        p.poll(&mut ep, true).unwrap();
+        assert!(p.terminated());
+        assert_eq!(p.global_norm(), Some(1e-9));
+        assert!(p.rounds_completed() >= 5);
+    }
+
+    #[test]
+    fn solo_reopen_requires_fresh_rounds() {
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let mut p = RecursiveDoublingProtocol::new(NormKind::Max, 0, 1);
+        p.harvest_residual(&[1e-9f64]);
+        p.poll(&mut ep, true).unwrap();
+        p.poll(&mut ep, true).unwrap();
+        assert!(p.terminated());
+        p.reopen();
+        assert!(!p.terminated());
+        p.poll(&mut ep, true).unwrap();
+        assert!(!p.terminated(), "reopen must clear the round streak");
+        p.poll(&mut ep, true).unwrap();
+        assert!(p.terminated());
+        let as_proto: &dyn TerminationProtocol<crate::simmpi::Endpoint> = &p;
+        assert_eq!(as_proto.name(), "recursive-doubling");
+    }
+
+    /// Two ranks driven from one thread over an instant-delivery world:
+    /// the butterfly folds both contributions each round and both ranks
+    /// reach the same verdict at the same round.
+    #[test]
+    fn pair_agrees_on_round_verdicts() {
+        let cfg = crate::simmpi::WorldConfig::homogeneous(2)
+            .with_network(crate::simmpi::NetworkModel::instant());
+        let (_w, mut eps) = crate::simmpi::World::new(cfg);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let mut p0 = RecursiveDoublingProtocol::new(NormKind::Max, 0, 2);
+        let mut p1 = RecursiveDoublingProtocol::new(NormKind::Max, 1, 2);
+        p0.harvest_residual(&[1e-9f64]);
+        p1.harvest_residual(&[3e-9f64]);
+        // Round 1: both latch (held windows include protocol start).
+        for _ in 0..4 {
+            p0.poll(&mut e0, true).unwrap();
+            p1.poll(&mut e1, true).unwrap();
+        }
+        assert!(p0.terminated() && p1.terminated());
+        // Max-fold of both latched partials, identical on both ranks.
+        assert_eq!(p0.global_norm(), Some(3e-9));
+        assert_eq!(p1.global_norm(), Some(3e-9));
+        assert_eq!(p0.rounds_completed(), p1.rounds_completed());
+    }
+
+    /// One rank disarmed vetoes the verdict for everyone.
+    #[test]
+    fn pair_disarmed_rank_vetoes() {
+        let cfg = crate::simmpi::WorldConfig::homogeneous(2)
+            .with_network(crate::simmpi::NetworkModel::instant());
+        let (_w, mut eps) = crate::simmpi::World::new(cfg);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let mut p0 = RecursiveDoublingProtocol::new(NormKind::Max, 0, 2);
+        let mut p1 = RecursiveDoublingProtocol::new(NormKind::Max, 1, 2);
+        p0.harvest_residual(&[1e-9f64]);
+        p1.harvest_residual(&[0.5f64]);
+        for _ in 0..50 {
+            p0.poll(&mut e0, true).unwrap();
+            p1.poll(&mut e1, false).unwrap();
+        }
+        assert!(!p0.terminated());
+        assert!(!p1.terminated());
+    }
+}

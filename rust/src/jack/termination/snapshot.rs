@@ -1,0 +1,70 @@
+//! The paper's snapshot-based protocol behind the [`TerminationProtocol`]
+//! trait — a thin adapter over the [`AsyncConv`] state machine
+//! (Savari–Bertsekas snapshot, Algorithms 7–9; see
+//! [`super::async_conv`] for the protocol itself). Supervised,
+//! non-intrusive, and the only shipped detector that evaluates a true
+//! global residual of a consistent snapshot vector (paper §3.1).
+
+use super::async_conv::AsyncConv;
+use super::TerminationProtocol;
+use crate::error::Result;
+use crate::graph::CommGraph;
+use crate::jack::buffers::BufferSet;
+use crate::metrics::{RankMetrics, Trace};
+use crate::scalar::Scalar;
+use crate::transport::Transport;
+
+/// The paper's snapshot-based protocol behind the trait.
+pub struct SnapshotProtocol<S: Scalar = f64>(pub AsyncConv<S>);
+
+impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for SnapshotProtocol<S> {
+    fn poll(
+        &mut self,
+        ep: &mut T,
+        graph: &CommGraph,
+        bufs: &BufferSet<S>,
+        sol_vec: &[S],
+        lconv: bool,
+        metrics: &mut RankMetrics,
+        trace: &mut Trace,
+    ) -> Result<()> {
+        // Completed detection rounds: resumed rounds advance `round`; the
+        // terminating round does not, so count the termination edge too.
+        let round_before = self.0.round();
+        let was_terminated = self.0.terminated();
+        self.0.poll(ep, graph, bufs, sol_vec, lconv, metrics, trace)?;
+        metrics.detection_rounds += self.0.round() - round_before;
+        if self.0.terminated() && !was_terminated {
+            metrics.detection_rounds += 1;
+        }
+        Ok(())
+    }
+
+    fn try_deliver(&mut self, bufs: &mut BufferSet<S>, sol_vec: &mut Vec<S>) -> Result<bool> {
+        self.0.try_deliver_snapshot(bufs, sol_vec)
+    }
+
+    fn harvest_residual(&mut self, res_vec: &[S]) {
+        self.0.harvest_residual(res_vec);
+    }
+
+    fn freeze_recv(&self) -> bool {
+        self.0.freeze_recv()
+    }
+
+    fn global_norm(&self) -> Option<f64> {
+        self.0.global_norm()
+    }
+
+    fn terminated(&self) -> bool {
+        self.0.terminated()
+    }
+
+    fn reopen(&mut self) {
+        self.0.reopen();
+    }
+
+    fn name(&self) -> &'static str {
+        "snapshot"
+    }
+}

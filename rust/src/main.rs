@@ -6,6 +6,7 @@
 //! repro solve      [--grid 2x2x2] [--n 16] [--scheme sync|async|trivial]
 //!                  [--backend native|xla] [--transport sim|shm]
 //!                  [--precision f32|f64] [--problem convdiff|jacobi]
+//!                  [--termination snapshot|persistence|recursive-doubling]
 //!                  [--steps N] [--threshold 1e-6]
 //!                  [--latency-us 20] [--jitter 0.1] [--seed S]
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
@@ -23,7 +24,7 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TransportKind};
+use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TerminationKind, TransportKind};
 use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
@@ -75,8 +76,10 @@ fn print_usage() {
          subcommands:\n  \
          solve      run one configured solve (--grid/--n/--scheme/--backend;\n             \
                     --precision f32|f64 for mixed precision, --problem\n             \
-                    convdiff|jacobi for the workload; f32 clamps the default\n             \
-                    threshold to 1e-4 unless --threshold is given)\n  \
+                    convdiff|jacobi for the workload, --termination\n             \
+                    snapshot|persistence|recursive-doubling for the async\n             \
+                    detection protocol; f32 clamps the default threshold\n             \
+                    to 1e-4 unless --threshold is given)\n  \
          table1     E1: Jacobi vs async sweep over world sizes (paper Table 1)\n  \
          fig3       E2: mid-convergence solution profiles + interface jumps\n  \
          partition  E3: print the box partition and communication graph\n  \
@@ -146,6 +149,9 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
     }
     if let Some(p) = flags.get("precision") {
         cfg.precision = Precision::parse(p)?;
+    }
+    if let Some(t) = flags.get("termination") {
+        cfg.termination = TerminationKind::parse(t)?;
     }
     cfg.time_steps = get(flags, "steps", cfg.time_steps)?;
     cfg.threshold = get(flags, "threshold", cfg.threshold)?;
@@ -237,12 +243,17 @@ fn print_solve<S: Scalar>(
         return Ok(());
     }
     println!(
-        "solve: {} problem={} precision={} backend={} transport={} grid={:?} n={} -> {} steps",
+        "solve: {} problem={} precision={} backend={} transport={}{} grid={:?} n={} -> {} steps",
         cfg.scheme.name(),
         rep.problem,
         rep.precision,
         cfg.backend.name(),
         cfg.transport.name(),
+        if cfg.scheme.is_async() {
+            format!(" termination={}", cfg.termination.name())
+        } else {
+            String::new()
+        },
         cfg.process_grid,
         cfg.n,
         rep.steps.len()

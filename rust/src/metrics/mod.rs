@@ -15,6 +15,11 @@ pub struct RankMetrics {
     pub msgs_delivered: u64,
     /// Snapshot rounds this rank participated in (paper Table 1 "# Snaps.").
     pub snapshots: u64,
+    /// Completed termination-detection rounds (protocol-agnostic:
+    /// snapshot verdicts, persistence probe rounds, recursive-doubling
+    /// folding rounds) — the denominator of the detection-latency
+    /// trajectory in `BENCH_comm_micro.json`.
+    pub detection_rounds: u64,
     /// Residual-norm evaluations (tree reductions) performed.
     pub norm_reductions: u64,
     /// Wall-clock spent inside the compute phase.
@@ -31,6 +36,7 @@ impl RankMetrics {
         self.sends_discarded += o.sends_discarded;
         self.msgs_delivered += o.msgs_delivered;
         self.snapshots = self.snapshots.max(o.snapshots);
+        self.detection_rounds = self.detection_rounds.max(o.detection_rounds);
         self.norm_reductions += o.norm_reductions;
         self.compute_time += o.compute_time;
         self.comm_time += o.comm_time;

@@ -14,7 +14,9 @@
 //!     .run()?   // -> SolveReport<f32>
 //! ```
 
-pub use crate::config::{Backend, ExperimentConfig, Precision, Scheme, TransportKind};
+pub use crate::config::{
+    Backend, ExperimentConfig, Precision, Scheme, TerminationKind, TransportKind,
+};
 pub use crate::error::{Error, Result};
 pub use crate::graph::CommGraph;
 pub use crate::jack::{

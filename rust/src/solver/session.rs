@@ -26,7 +26,7 @@
 use std::marker::PhantomData;
 use std::time::{Duration, Instant};
 
-use crate::config::{Backend, ExperimentConfig, Scheme, TransportKind};
+use crate::config::{Backend, ExperimentConfig, Scheme, TerminationKind, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::{validate_world, CommGraph};
 use crate::jack::{AsyncConfig, IterateOpts, JackComm, NormKind, StepOutcome};
@@ -129,6 +129,14 @@ impl<S: Scalar, P> SolverSessionBuilder<S, P> {
         self.transport = transport;
         self
     }
+
+    /// Override the termination-detection protocol for asynchronous
+    /// schemes (defaults to `cfg.termination`; ignored by synchronous
+    /// schemes).
+    pub fn termination(mut self, termination: TerminationKind) -> Self {
+        self.cfg.termination = termination;
+        self
+    }
 }
 
 impl<S: Scalar> SolverSessionBuilder<S, NoProblem> {
@@ -214,6 +222,11 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
 
     pub fn transport(&self) -> TransportKind {
         self.transport
+    }
+
+    /// The termination protocol asynchronous runs will use.
+    pub fn termination(&self) -> TerminationKind {
+        self.cfg.termination
     }
 
     /// Run the full time-stepped solve: build per-rank workers (one-time
@@ -429,6 +442,7 @@ where
             max_recv_requests: cfg.max_recv_requests,
             threshold: cfg.threshold,
             send_discard: cfg.send_discard,
+            termination: cfg.termination,
         })?
     } else {
         session.build_sync()

@@ -118,6 +118,7 @@ fn built_modes_are_final_states() {
             max_recv_requests: 4,
             threshold: 1e-6,
             send_discard: false,
+            ..AsyncConfig::default()
         })
         .unwrap();
     assert_eq!(comm.mode(), Mode::Asynchronous);

@@ -1,0 +1,870 @@
+//! Protocol-parameterized termination conformance suite (ISSUE 5).
+//!
+//! The [`jack2::jack::termination::TerminationProtocol`] contract is
+//! executable: every check in this file is written once, generically
+//! over a [`ProtoSpec`] (which detector) and a [`TestBackend`] (which
+//! transport), and instantiated for the full protocol × backend matrix
+//! via the `termination_suite!` macro at the bottom — mirroring the
+//! transport layer's `conformance_suite!`. A new detector earns its
+//! place by adding one `impl ProtoSpec` + one macro line per backend and
+//! passing the same suite.
+//!
+//! Covered contract surface, per (protocol, backend):
+//! * **no false detection** under seeded message delay/reordering and
+//!   residual staleness — a rank whose local residual spikes right after
+//!   the others report convergence must veto the pending verdict;
+//! * **no missed detection** — eventual termination when every rank's
+//!   residual stays below threshold (run on a non-power-of-two world so
+//!   the recursive-doubling dissemination generalization is exercised);
+//! * **`reopen()`** — a second solve after a verdict requires a fresh
+//!   detection run and converges to the new fixed point;
+//! * **zero steady-state pool allocations** — detection traffic rides
+//!   recycled pool storage once warm.
+//!
+//! Plus, per backend (protocol-spanning):
+//! * cross-protocol agreement on the final quickstart residual;
+//! * the freeze/reopen race regression — data messages arriving while
+//!   the detector freezes delivery are neither dropped nor
+//!   double-counted (seeded via `util::rng`).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use jack2::graph::{line_graph, CommGraph};
+use jack2::jack::messages::TAG_DATA;
+use jack2::jack::norm::NormKind;
+use jack2::jack::spanning_tree::{self, SpanningTree};
+use jack2::jack::termination::{
+    PersistenceProtocol, RecursiveDoublingProtocol, SnapshotProtocol, TerminationProtocol,
+};
+use jack2::jack::{AsyncConv, BufferSet, IterateOpts, JackComm, StepOutcome};
+use jack2::metrics::{RankMetrics, Trace};
+use jack2::simmpi::{barrier, NetworkModel, World, WorldConfig};
+use jack2::transport::{ShmWorld, Transport};
+use jack2::util::Rng64;
+
+// ---------------------------------------------------------------------
+// Matrix axes: transport backends × termination protocols
+// ---------------------------------------------------------------------
+
+/// Factory for a transport backend under conformance test (`'static` so
+/// suite bodies can name the backend inside spawned rank threads).
+trait TestBackend: 'static {
+    type Ep: Transport + 'static;
+    const NAME: &'static str;
+
+    /// A world whose messages become deliverable immediately (so the
+    /// suite can drive several endpoints from one thread).
+    fn world(p: usize) -> Vec<Self::Ep>;
+
+    /// A world for free-running one-thread-per-rank runs, with seeded
+    /// message delay where the backend models a network (simmpi); the
+    /// shared-memory rings delay nothing themselves — the harness adds
+    /// seeded per-rank stagger on top for both backends.
+    fn threaded_world(p: usize, seed: u64) -> Vec<Self::Ep>;
+}
+
+struct SimMpi;
+
+impl TestBackend for SimMpi {
+    type Ep = jack2::simmpi::Endpoint;
+    const NAME: &'static str = "simmpi";
+
+    fn world(p: usize) -> Vec<Self::Ep> {
+        World::new(WorldConfig::homogeneous(p).with_network(NetworkModel::instant())).1
+    }
+
+    fn threaded_world(p: usize, seed: u64) -> Vec<Self::Ep> {
+        // Jittery latency: seeded delay and cross-link reordering.
+        World::new(
+            WorldConfig::homogeneous(p)
+                .with_network(NetworkModel::uniform(30, 0.5))
+                .with_seed(seed),
+        )
+        .1
+    }
+}
+
+struct Shm;
+
+impl TestBackend for Shm {
+    type Ep = jack2::transport::ShmEndpoint;
+    const NAME: &'static str = "shm";
+
+    fn world(p: usize) -> Vec<Self::Ep> {
+        ShmWorld::homogeneous(p).1
+    }
+
+    fn threaded_world(p: usize, _seed: u64) -> Vec<Self::Ep> {
+        ShmWorld::homogeneous(p).1
+    }
+}
+
+/// Factory for a termination protocol under conformance test (`'static`
+/// so suite bodies can name the spec inside spawned rank threads).
+trait ProtoSpec: 'static {
+    const NAME: &'static str;
+
+    /// The `lconv` value that keeps detection rounds busy without ever
+    /// terminating, for the steady-state allocation check (the snapshot
+    /// protocol needs armed ranks plus an unreachable threshold; the
+    /// flag-AND protocols need disarmed ranks).
+    const BUSY_LCONV: bool;
+
+    fn make<T: Transport>(
+        rank: usize,
+        world: usize,
+        tree: SpanningTree,
+        n_recv_links: usize,
+        threshold: f64,
+    ) -> Box<dyn TerminationProtocol<T, f64>>;
+}
+
+struct Snap;
+
+impl ProtoSpec for Snap {
+    const NAME: &'static str = "snapshot";
+    const BUSY_LCONV: bool = true;
+
+    fn make<T: Transport>(
+        _rank: usize,
+        _world: usize,
+        tree: SpanningTree,
+        n_recv_links: usize,
+        threshold: f64,
+    ) -> Box<dyn TerminationProtocol<T, f64>> {
+        Box::new(SnapshotProtocol(AsyncConv::new(
+            NormKind::Max,
+            threshold,
+            tree,
+            n_recv_links,
+        )))
+    }
+}
+
+struct Persist;
+
+impl ProtoSpec for Persist {
+    const NAME: &'static str = "persistence";
+    const BUSY_LCONV: bool = false;
+
+    fn make<T: Transport>(
+        _rank: usize,
+        _world: usize,
+        tree: SpanningTree,
+        _n_recv_links: usize,
+        _threshold: f64,
+    ) -> Box<dyn TerminationProtocol<T, f64>> {
+        Box::new(PersistenceProtocol::new(NormKind::Max, tree, 4))
+    }
+}
+
+struct RecDbl;
+
+impl ProtoSpec for RecDbl {
+    const NAME: &'static str = "recursive-doubling";
+    const BUSY_LCONV: bool = false;
+
+    fn make<T: Transport>(
+        rank: usize,
+        world: usize,
+        _tree: SpanningTree,
+        _n_recv_links: usize,
+        _threshold: f64,
+    ) -> Box<dyn TerminationProtocol<T, f64>> {
+        Box::new(RecursiveDoublingProtocol::new(NormKind::Max, rank, world))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared fixture: asynchronous relaxation on a line of ranks
+// ---------------------------------------------------------------------
+
+/// x_i ← (x_{i-1} + x_{i+1} + c_i) / 4 with zero boundary: strictly
+/// contracting, so asynchronous iterations converge from any
+/// interleaving. Sequential oracle for the fixed point:
+fn line_fixed_point(c: &[f64]) -> Vec<f64> {
+    let p = c.len();
+    let mut x = vec![0.0f64; p];
+    for _ in 0..20_000 {
+        let prev = x.clone();
+        for (i, xi) in x.iter_mut().enumerate() {
+            let left = if i > 0 { prev[i - 1] } else { 0.0 };
+            let right = if i + 1 < p { prev[i + 1] } else { 0.0 };
+            *xi = (left + right + c[i]) / 4.0;
+        }
+    }
+    x
+}
+
+fn phase1_constants(p: usize) -> Vec<f64> {
+    (0..p).map(|i| 1.0 + i as f64).collect()
+}
+
+fn phase2_constants(p: usize) -> Vec<f64> {
+    (0..p).map(|i| 3.0 + 2.0 * i as f64).collect()
+}
+
+const SPIKE_MAG: f64 = 1.0e3;
+const SPIKE_LEN: u64 = 1500;
+
+#[derive(Clone, Copy)]
+struct LineOpts {
+    p: usize,
+    seed: u64,
+    threshold: f64,
+    /// Staleness veto scenario: the last rank's residual spikes right
+    /// after it first arms (modelling late-arriving halo data
+    /// invalidating an almost-agreed convergence) and stays high for
+    /// [`SPIKE_LEN`] iterations. No verdict may land before the spike
+    /// resolves.
+    staleness_spike: bool,
+    /// Two-phase scenario: converge, barrier + `reopen()`, change the
+    /// constants, converge again to the new fixed point.
+    reopen: bool,
+}
+
+struct LineOutcome {
+    sol: f64,
+    terminated: bool,
+}
+
+/// One rank of the line relaxation, driving the raw protocol exactly as
+/// the library's Listing-6 loop does (receive-unless-frozen, compute,
+/// publish, harvest, poll).
+fn run_line_rank<P: ProtoSpec, T: Transport>(
+    mut ep: T,
+    g: CommGraph,
+    opts: LineOpts,
+    spike_state: Arc<AtomicU8>,
+    violation: Arc<AtomicBool>,
+) -> LineOutcome {
+    let rank = ep.rank();
+    let p = opts.p;
+    let tree =
+        spanning_tree::build(&mut ep, &g.undirected_neighbors(), Duration::from_secs(30)).unwrap();
+    let mut protocol = P::make::<T>(rank, p, tree, g.num_recv(), opts.threshold);
+    let mut bufs = BufferSet::<f64>::new(&vec![1; g.num_send()], &vec![1; g.num_recv()]).unwrap();
+    let mut sol = vec![0.0f64];
+    let mut res = vec![f64::INFINITY];
+    let mut metrics = RankMetrics::default();
+    let mut trace = Trace::disabled();
+    let mut rng = Rng64::new(opts.seed ^ 0x51AE).fork(rank as u64 + 1);
+    let spike_delay = rng.range_usize(0, 2) as u64;
+    let mut armed_seen = 0u64;
+    let mut spiked = 0u64;
+    let phase_consts = [phase1_constants(p), phase2_constants(p)];
+    let n_phases = if opts.reopen { 2 } else { 1 };
+    let deadline = Instant::now() + Duration::from_secs(120);
+
+    for (phase, consts) in phase_consts.iter().enumerate().take(n_phases) {
+        let c = consts[rank];
+        if phase > 0 {
+            barrier(&mut ep).unwrap();
+            protocol.reopen();
+            assert!(
+                !protocol.terminated(),
+                "{}({rank}): reopen must clear the verdict",
+                P::NAME
+            );
+        }
+        while !protocol.terminated() {
+            assert!(
+                Instant::now() < deadline,
+                "{}({rank}): no termination — missed detection",
+                P::NAME
+            );
+            // Receive (latest wins), unless frozen for a snapshot.
+            if !protocol.freeze_recv() {
+                let delivered = protocol.try_deliver(&mut bufs, &mut sol).unwrap();
+                if !delivered {
+                    for (l, &src) in g.recv_neighbors().iter().enumerate() {
+                        while let Some(d) = ep.try_match(src, TAG_DATA) {
+                            bufs.deliver(l, d).unwrap();
+                        }
+                    }
+                }
+            } else {
+                let _ = protocol.try_deliver(&mut bufs, &mut sol).unwrap();
+            }
+            // Compute x = (left + right + c) / 4.
+            let halo: f64 = bufs.recv.iter().map(|b| b[0]).sum();
+            let x_new = (halo + c) / 4.0;
+            res[0] = 4.0 * (x_new - sol[0]);
+            sol[0] = x_new;
+            // Staleness veto scenario (last rank only): at most
+            // 1 + spike_delay armed polls, then the residual spikes.
+            if opts.staleness_spike && rank == p - 1 {
+                match spike_state.load(Ordering::SeqCst) {
+                    0 => {
+                        if res[0].abs() < opts.threshold {
+                            if armed_seen > spike_delay {
+                                spike_state.store(1, Ordering::SeqCst);
+                                res[0] = SPIKE_MAG;
+                                spiked = 1;
+                            } else {
+                                armed_seen += 1;
+                            }
+                        }
+                    }
+                    1 => {
+                        if spiked < SPIKE_LEN {
+                            res[0] = SPIKE_MAG;
+                            spiked += 1;
+                        } else {
+                            spike_state.store(2, Ordering::SeqCst);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // Publish boundary data.
+            for sb in bufs.send.iter_mut() {
+                sb[0] = sol[0];
+            }
+            for (l, &dst) in g.send_neighbors().iter().enumerate() {
+                ep.isend_copy(dst, TAG_DATA, &bufs.send[l]).unwrap();
+            }
+            // Detection.
+            let lconv = res[0].abs() < opts.threshold;
+            protocol.harvest_residual(&res);
+            protocol
+                .poll(&mut ep, &g, &bufs, &sol, lconv, &mut metrics, &mut trace)
+                .unwrap();
+            if protocol.terminated() && spike_state.load(Ordering::SeqCst) < 2 {
+                violation.store(true, Ordering::SeqCst);
+            }
+            // Seeded stagger: delays and reorders cross-rank arrivals.
+            if rng.f64() < 0.25 {
+                thread::sleep(Duration::from_micros(rng.range_usize(1, 40) as u64));
+            }
+            thread::yield_now();
+        }
+    }
+    LineOutcome {
+        sol: sol[0],
+        terminated: protocol.terminated(),
+    }
+}
+
+/// Spawn the line world (one thread per rank) and join the outcomes,
+/// asserting the staleness invariant: no rank may observe a terminated
+/// verdict before the spiking rank's residual settles.
+fn run_line<P: ProtoSpec, B: TestBackend>(opts: LineOpts) -> Vec<LineOutcome> {
+    let eps = B::threaded_world(opts.p, opts.seed);
+    let graphs = line_graph(opts.p);
+    // Pre-seeded to "settled" when the scenario has no spike, so the
+    // violation check is inert.
+    let spike_state = Arc::new(AtomicU8::new(if opts.staleness_spike { 0 } else { 2 }));
+    let violation = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = eps
+        .into_iter()
+        .zip(graphs)
+        .map(|(ep, g)| {
+            let spike_state = spike_state.clone();
+            let violation = violation.clone();
+            thread::spawn(move || run_line_rank::<P, B::Ep>(ep, g, opts, spike_state, violation))
+        })
+        .collect();
+    let out: Vec<LineOutcome> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        !violation.load(Ordering::SeqCst),
+        "false detection: a verdict landed while the stale residual spike was live"
+    );
+    if opts.staleness_spike {
+        assert_eq!(
+            spike_state.load(Ordering::SeqCst),
+            2,
+            "scenario error: the spike never fired"
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Generic conformance checks
+// ---------------------------------------------------------------------
+
+/// No missed detection: when every rank's residual stays below the
+/// threshold, the protocol terminates and the converged solution matches
+/// the sequential oracle. p = 5 exercises the non-power-of-two
+/// (dissemination) path of recursive doubling.
+fn terminates_when_converged<P: ProtoSpec, B: TestBackend>() {
+    let p = 5;
+    let out = run_line::<P, B>(LineOpts {
+        p,
+        seed: 0xA11CE,
+        threshold: 1e-8,
+        staleness_spike: false,
+        reopen: false,
+    });
+    let oracle = line_fixed_point(&phase1_constants(p));
+    for (r, o) in out.iter().enumerate() {
+        assert!(o.terminated, "{} {}: rank {r} not terminated", P::NAME, B::NAME);
+        assert!(
+            (o.sol - oracle[r]).abs() < 1e-5,
+            "{} {}: rank {r} sol {} vs oracle {}",
+            P::NAME,
+            B::NAME,
+            o.sol,
+            oracle[r]
+        );
+    }
+}
+
+/// No false detection under seeded delay/reordering and residual
+/// staleness: the last rank's residual spikes right after it first arms
+/// and every protocol must hold its verdict until the spike resolves
+/// (the `violation` flag inside [`run_line`]).
+fn no_false_detection_under_staleness<P: ProtoSpec, B: TestBackend>() {
+    let p = 4;
+    let out = run_line::<P, B>(LineOpts {
+        p,
+        seed: 0xBADC0DE,
+        threshold: 1e-8,
+        staleness_spike: true,
+        reopen: false,
+    });
+    let oracle = line_fixed_point(&phase1_constants(p));
+    for (r, o) in out.iter().enumerate() {
+        assert!(o.terminated, "{} {}: rank {r} not terminated", P::NAME, B::NAME);
+        assert!(
+            (o.sol - oracle[r]).abs() < 1e-5,
+            "{} {}: rank {r} sol {} vs oracle {}",
+            P::NAME,
+            B::NAME,
+            o.sol,
+            oracle[r]
+        );
+    }
+}
+
+/// `reopen()` re-arms for a second solve: the verdict clears, detection
+/// runs fresh, and the second phase converges to the *new* fixed point.
+fn reopen_requires_fresh_detection<P: ProtoSpec, B: TestBackend>() {
+    let p = 4;
+    let out = run_line::<P, B>(LineOpts {
+        p,
+        seed: 0xD00D1E,
+        threshold: 1e-8,
+        staleness_spike: false,
+        reopen: true,
+    });
+    let oracle = line_fixed_point(&phase2_constants(p));
+    for (r, o) in out.iter().enumerate() {
+        assert!(o.terminated, "{} {}: rank {r} not terminated", P::NAME, B::NAME);
+        assert!(
+            (o.sol - oracle[r]).abs() < 1e-5,
+            "{} {}: rank {r} post-reopen sol {} vs oracle {}",
+            P::NAME,
+            B::NAME,
+            o.sol,
+            oracle[r]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero steady-state pool allocations (single-threaded, deterministic)
+// ---------------------------------------------------------------------
+
+struct AllocRig<T: Transport> {
+    eps: Vec<T>,
+    graphs: Vec<CommGraph>,
+    protocols: Vec<Box<dyn TerminationProtocol<T, f64>>>,
+    bufs: Vec<BufferSet<f64>>,
+    sols: Vec<Vec<f64>>,
+    res: Vec<Vec<f64>>,
+    metrics: Vec<RankMetrics>,
+    traces: Vec<Trace>,
+    busy_lconv: bool,
+}
+
+impl<T: Transport> AllocRig<T> {
+    /// One round-robin sweep: every rank runs one Listing-6-shaped
+    /// iteration (deliver, compute, publish, harvest, poll).
+    fn sweep(&mut self) {
+        for r in 0..self.eps.len() {
+            let ep = &mut self.eps[r];
+            let g = &self.graphs[r];
+            let protocol = &mut self.protocols[r];
+            let bufs = &mut self.bufs[r];
+            let sol = &mut self.sols[r];
+            let res = &mut self.res[r];
+            if !protocol.freeze_recv() {
+                if !protocol.try_deliver(bufs, sol).unwrap() {
+                    for (l, &src) in g.recv_neighbors().iter().enumerate() {
+                        while let Some(d) = ep.try_match(src, TAG_DATA) {
+                            bufs.deliver(l, d).unwrap();
+                        }
+                    }
+                }
+            } else {
+                let _ = protocol.try_deliver(bufs, sol).unwrap();
+            }
+            let halo: f64 = bufs.recv.iter().map(|b| b[0]).sum();
+            let x_new = (halo + 1.0 + r as f64) / 4.0;
+            res[0] = 4.0 * (x_new - sol[0]);
+            sol[0] = x_new;
+            for sb in bufs.send.iter_mut() {
+                sb[0] = sol[0];
+            }
+            for (l, &dst) in g.send_neighbors().iter().enumerate() {
+                ep.isend_copy(dst, TAG_DATA, &bufs.send[l]).unwrap();
+            }
+            protocol.harvest_residual(res);
+            protocol
+                .poll(
+                    ep,
+                    g,
+                    bufs,
+                    sol,
+                    self.busy_lconv,
+                    &mut self.metrics[r],
+                    &mut self.traces[r],
+                )
+                .unwrap();
+            assert!(!protocol.terminated(), "busy configuration must not terminate");
+        }
+    }
+}
+
+/// Steady-state detection traffic must ride recycled pool storage: after
+/// a warm-up window, further sweeps perform zero pool allocations on any
+/// rank. The busy configuration keeps every protocol exchanging — the
+/// snapshot protocol runs endless resume rounds against an unreachable
+/// threshold; the flag-AND protocols run endless disarmed rounds.
+fn zero_steady_state_pool_allocations<P: ProtoSpec, B: TestBackend>() {
+    let p = 4;
+    let graphs = line_graph(p);
+    // The line's spanning tree is known (the distributed build is
+    // blocking, so a single-threaded rig constructs the views directly).
+    let protocols: Vec<Box<dyn TerminationProtocol<B::Ep, f64>>> = (0..p)
+        .map(|r| {
+            let tree = SpanningTree {
+                parent: if r == 0 { None } else { Some(r - 1) },
+                children: if r + 1 < p { vec![r + 1] } else { vec![] },
+                depth: r as u64,
+            };
+            P::make::<B::Ep>(r, p, tree, graphs[r].num_recv(), -1.0)
+        })
+        .collect();
+    let bufs: Vec<BufferSet<f64>> = graphs
+        .iter()
+        .map(|g| BufferSet::new(&vec![1; g.num_send()], &vec![1; g.num_recv()]).unwrap())
+        .collect();
+    let mut rig = AllocRig {
+        eps: B::world(p),
+        graphs,
+        protocols,
+        bufs,
+        sols: vec![vec![0.5f64]; p],
+        res: vec![vec![0.25f64]; p],
+        metrics: vec![RankMetrics::default(); p],
+        traces: (0..p).map(|_| Trace::disabled()).collect(),
+        busy_lconv: P::BUSY_LCONV,
+    };
+    for _ in 0..500 {
+        rig.sweep();
+    }
+    let warm: Vec<u64> = rig.eps.iter().map(|e| e.pool().stats().allocations).collect();
+    let reuses_before: u64 = rig.eps.iter().map(|e| e.pool().stats().reuses).sum();
+    for _ in 0..700 {
+        rig.sweep();
+    }
+    for (r, e) in rig.eps.iter().enumerate() {
+        assert_eq!(
+            e.pool().stats().allocations,
+            warm[r],
+            "{} {}: rank {r} allocated in steady state: {:?}",
+            P::NAME,
+            B::NAME,
+            e.pool().stats()
+        );
+    }
+    let reuses_after: u64 = rig.eps.iter().map(|e| e.pool().stats().reuses).sum();
+    assert!(
+        reuses_after > reuses_before,
+        "{} {}: no pooled traffic flowed during the measurement window",
+        P::NAME,
+        B::NAME
+    );
+}
+
+// ---------------------------------------------------------------------
+// Suite instantiation — one line per (protocol, backend)
+// ---------------------------------------------------------------------
+
+macro_rules! termination_suite {
+    ($modname:ident, $proto:ty, $backend:ty) => {
+        mod $modname {
+            use super::*;
+
+            #[test]
+            fn terminates_when_converged() {
+                super::terminates_when_converged::<$proto, $backend>();
+            }
+
+            #[test]
+            fn no_false_detection_under_staleness() {
+                super::no_false_detection_under_staleness::<$proto, $backend>();
+            }
+
+            #[test]
+            fn reopen_requires_fresh_detection() {
+                super::reopen_requires_fresh_detection::<$proto, $backend>();
+            }
+
+            #[test]
+            fn zero_steady_state_pool_allocations() {
+                super::zero_steady_state_pool_allocations::<$proto, $backend>();
+            }
+        }
+    };
+}
+
+termination_suite!(snapshot_simmpi, Snap, SimMpi);
+termination_suite!(snapshot_shm, Snap, Shm);
+termination_suite!(persistence_simmpi, Persist, SimMpi);
+termination_suite!(persistence_shm, Persist, Shm);
+termination_suite!(recursive_doubling_simmpi, RecDbl, SimMpi);
+termination_suite!(recursive_doubling_shm, RecDbl, Shm);
+
+// ---------------------------------------------------------------------
+// Cross-protocol acceptance: agreement on the final quickstart residual
+// ---------------------------------------------------------------------
+
+const X0: f64 = 29.0 / 15.0;
+const X1: f64 = 41.0 / 15.0;
+
+/// The quickstart system [4 −1; −1 4] x = [5 9] through the typed
+/// session API, with the detector plugged via `build_async_with`.
+/// Returns `(solution, residual_norm)` sorted by rank.
+fn quickstart_solve_with<P: ProtoSpec, B: TestBackend>(threshold: f64) -> Vec<(f64, f64)> {
+    let eps = B::world(2);
+    let (tx, rx) = mpsc::channel();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            let tx = tx.clone();
+            thread::spawn(move || {
+                let rank = ep.rank();
+                let graph = CommGraph::symmetric(rank, vec![1 - rank]).unwrap();
+                let session = JackComm::<_, f64>::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[1], &[1])
+                    .unwrap()
+                    .with_residual(1, NormKind::Max)
+                    .with_solution(1);
+                let protocol = P::make::<B::Ep>(rank, 2, session.tree().clone(), 1, threshold);
+                let mut comm = session.build_async_with(protocol, 4, true).unwrap();
+                let c = [5.0, 9.0][rank];
+                comm.iterate(
+                    &IterateOpts {
+                        threshold,
+                        max_iters: 2_000_000,
+                        ..IterateOpts::default()
+                    },
+                    |v| {
+                        let x_new = (c + v.recv[0][0]) / 4.0;
+                        v.res[0] = 4.0 * (x_new - v.sol[0]);
+                        v.sol[0] = x_new;
+                        v.send[0][0] = x_new;
+                        StepOutcome::Continue
+                    },
+                )
+                .unwrap();
+                tx.send((rank, comm.solution()[0], comm.residual_norm()))
+                    .unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(tx);
+    let mut rows: Vec<(usize, f64, f64)> = rx.iter().collect();
+    rows.sort_by_key(|r| r.0);
+    rows.into_iter().map(|(_, x, n)| (x, n)).collect()
+}
+
+/// All three protocols terminate the same quickstart solve at the same
+/// fixed point, with final residuals below the arming threshold and
+/// solutions agreeing across protocols within tolerance.
+fn cross_protocol_quickstart_agreement<B: TestBackend>() {
+    let threshold = 1e-9;
+    let snap = quickstart_solve_with::<Snap, B>(threshold);
+    let pers = quickstart_solve_with::<Persist, B>(threshold);
+    let rd = quickstart_solve_with::<RecDbl, B>(threshold);
+    for (rows, name) in [(&snap, "snapshot"), (&pers, "persistence"), (&rd, "rd")] {
+        assert!(
+            (rows[0].0 - X0).abs() < 1e-7 && (rows[1].0 - X1).abs() < 1e-7,
+            "{} {name}: wrong fixed point: {rows:?}",
+            B::NAME
+        );
+        assert!(
+            rows.iter().all(|&(_, n)| n < 1e-8),
+            "{} {name}: residual above threshold: {rows:?}",
+            B::NAME
+        );
+    }
+    for r in 0..2 {
+        assert!(
+            (snap[r].0 - pers[r].0).abs() < 1e-7 && (snap[r].0 - rd[r].0).abs() < 1e-7,
+            "{}: protocols disagree at rank {r}: snap {snap:?} pers {pers:?} rd {rd:?}",
+            B::NAME
+        );
+    }
+}
+
+#[test]
+fn cross_protocol_quickstart_agreement_simmpi() {
+    cross_protocol_quickstart_agreement::<SimMpi>();
+}
+
+#[test]
+fn cross_protocol_quickstart_agreement_shm() {
+    cross_protocol_quickstart_agreement::<Shm>();
+}
+
+// ---------------------------------------------------------------------
+// Freeze/reopen race regression (ISSUE 5 satellite)
+// ---------------------------------------------------------------------
+
+/// Test-only detector whose only behaviour is an externally toggled
+/// delivery freeze — isolating the `recv`-path freeze contract from any
+/// particular protocol's state machine.
+struct FreezeGate {
+    frozen: Arc<AtomicBool>,
+}
+
+impl<T: Transport> TerminationProtocol<T, f64> for FreezeGate {
+    fn poll(
+        &mut self,
+        _ep: &mut T,
+        _graph: &CommGraph,
+        _bufs: &BufferSet<f64>,
+        _sol_vec: &[f64],
+        _lconv: bool,
+        _metrics: &mut RankMetrics,
+        _trace: &mut Trace,
+    ) -> jack2::Result<()> {
+        Ok(())
+    }
+
+    fn harvest_residual(&mut self, _res_vec: &[f64]) {}
+
+    fn freeze_recv(&self) -> bool {
+        self.frozen.load(Ordering::SeqCst)
+    }
+
+    fn global_norm(&self) -> Option<f64> {
+        None
+    }
+
+    fn terminated(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "freeze-gate"
+    }
+}
+
+/// A data message arriving while the detector has delivery frozen (the
+/// window between `freeze_recv()` arming and the snapshot round's
+/// resolution/`reopen()`) must be neither dropped nor double-counted:
+/// once the freeze lifts, the sequence resumes exactly where it left
+/// off. Seeded via `util::rng`; run under both transports.
+fn freeze_race_drops_no_messages<B: TestBackend>() {
+    let n = 64usize;
+    let mut eps = B::world(2);
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+
+    // Rank 1: participate in the spanning-tree build, then stream
+    // numbered messages with seeded pacing.
+    let sender = thread::spawn(move || {
+        let mut ep = e1;
+        let g = CommGraph::symmetric(1, vec![0]).unwrap();
+        spanning_tree::build(&mut ep, &g.undirected_neighbors(), Duration::from_secs(30)).unwrap();
+        let mut rng = Rng64::new(0x5EED_F00D);
+        for i in 1..=n {
+            ep.isend_copy(0, TAG_DATA, &[i as f64]).unwrap();
+            if rng.f64() < 0.3 {
+                thread::sleep(Duration::from_micros(rng.range_usize(1, 50) as u64));
+            }
+        }
+    });
+
+    let frozen = Arc::new(AtomicBool::new(false));
+    let graph = CommGraph::symmetric(0, vec![1]).unwrap();
+    let mut comm = JackComm::<_, f64>::builder(e0, graph)
+        .unwrap()
+        .with_buffers(&[1], &[1])
+        .unwrap()
+        .with_residual(1, NormKind::Max)
+        .with_solution(1)
+        // max_recv_requests = 1: at most one delivery per recv call, so
+        // every message is individually observable.
+        .build_async_with(
+            Box::new(FreezeGate {
+                frozen: frozen.clone(),
+            }),
+            1,
+            true,
+        )
+        .unwrap();
+
+    let mut rng = Rng64::new(0xF0CC_ED ^ 7);
+    let mut seen = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while seen < n {
+        assert!(
+            Instant::now() < deadline,
+            "{}: messages lost across freeze windows: saw {seen}/{n}",
+            B::NAME
+        );
+        if rng.f64() < 0.3 {
+            // Seeded freeze window: delivery must stall with the
+            // messages held back in the transport, not consumed.
+            frozen.store(true, Ordering::SeqCst);
+            let before = comm.compute_view().recv[0][0];
+            for _ in 0..rng.range_usize(1, 5) {
+                comm.recv().unwrap();
+                assert_eq!(
+                    comm.compute_view().recv[0][0],
+                    before,
+                    "{}: frozen recv delivered a message",
+                    B::NAME
+                );
+            }
+            frozen.store(false, Ordering::SeqCst);
+        }
+        comm.recv().unwrap();
+        let v = comm.compute_view().recv[0][0] as usize;
+        if v > seen {
+            assert_eq!(v, seen + 1, "{}: dropped or reordered message", B::NAME);
+            seen = v;
+        } else {
+            assert_eq!(v, seen, "{}: double-counted message", B::NAME);
+            thread::yield_now();
+        }
+    }
+    // Fully drained: one more recv leaves the final value in place.
+    comm.recv().unwrap();
+    assert_eq!(comm.compute_view().recv[0][0] as usize, n, "{}", B::NAME);
+    sender.join().unwrap();
+}
+
+#[test]
+fn freeze_race_drops_no_messages_simmpi() {
+    freeze_race_drops_no_messages::<SimMpi>();
+}
+
+#[test]
+fn freeze_race_drops_no_messages_shm() {
+    freeze_race_drops_no_messages::<Shm>();
+}

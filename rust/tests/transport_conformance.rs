@@ -401,6 +401,7 @@ fn quickstart_solve_on<B: TestBackend>(async_mode: bool, threshold: f64) -> Vec<
                             max_recv_requests: 4,
                             threshold,
                             send_discard: true,
+                            ..AsyncConfig::default()
                         })
                         .unwrap()
                 } else {

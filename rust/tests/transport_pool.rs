@@ -262,6 +262,7 @@ fn jackcomm_async_allocation_free<S: Scalar>() {
                         max_recv_requests: 4,
                         threshold: 1e-300,
                         send_discard: true,
+                        ..AsyncConfig::default()
                     })
                     .unwrap()
             })

@@ -184,6 +184,7 @@ fn quickstart_solve<S: Scalar>(async_mode: bool, threshold: f64) -> Vec<S> {
                             max_recv_requests: 4,
                             threshold,
                             send_discard: true,
+                            ..AsyncConfig::default()
                         })
                         .unwrap()
                 } else {
