@@ -6,18 +6,27 @@
 //!
 //! Micro-benchmarks: address-swap vs copy delivery across buffer sizes,
 //! pooled vs cloning send/recv round-trips, and raw simmpi point-to-point
-//! throughput. Emits `BENCH_comm_micro.json` so the perf trajectory is
-//! machine-readable across PRs.
+//! throughput — plus the ISSUE 6 hot-path series: SIMD stencil sweeps vs
+//! the scalar loop (`stencil_simd`), `WakeSignal` vs condvar signalling
+//! (`shm_wakeup`), and per-peer halo coalescing vs per-buffer messaging
+//! (`halo_coalesce`). Emits `BENCH_comm_micro.json` so the perf
+//! trajectory is machine-readable across PRs.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use jack2::config::{ExperimentConfig, Scheme, TerminationKind};
+use jack2::graph::builders::grid3d_torus_graphs;
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
+use jack2::jack::SyncComm;
+use jack2::metrics::RankMetrics;
 use jack2::scalar::Scalar;
+use jack2::simd::SimdLevel;
 use jack2::simmpi::{NetworkModel, WorldConfig};
-use jack2::solver::solve_experiment;
-use jack2::transport::{ShmWorld, Transport};
+use jack2::solver::{solve_experiment, ComputeBackend, NativeBackend};
+use jack2::transport::{ShmWorld, Transport, WakeSignal};
 use jack2::util::json::{self, Json};
 
 fn bench_delivery(b: &Bencher) {
@@ -309,6 +318,245 @@ fn bench_termination_detection(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// SIMD stencil sweep (ISSUE 6 tentpole a): the branchy scalar loop vs
+/// the vectorized row kernels, through `NativeBackend` at both payload
+/// widths. One JSON row per width; CI fails if a width goes missing or
+/// the detected level regresses below the scalar oracle.
+fn bench_stencil_simd(b: &Bencher) -> Vec<Json> {
+    println!("\nstencil sweep: branchy scalar loop vs SIMD row kernels (NativeBackend)");
+
+    fn sweep_ns<S: Scalar>(b: &Bencher, dims: (usize, usize, usize), level: SimdLevel) -> f64 {
+        let (nx, ny, nz) = dims;
+        let vol = nx * ny * nz;
+        let sweeps = 200;
+        let rhs: Vec<S> = (0..vol)
+            .map(|i| S::from_f64((i % 7) as f64 * 0.125 + 0.25))
+            .collect();
+        let face = |len: usize, v: f64| vec![S::from_f64(v); len];
+        let xm = face(ny * nz, 0.3);
+        let xp = face(ny * nz, 0.4);
+        let ym = face(nx * nz, 0.5);
+        let yp = face(nx * nz, 0.6);
+        let zm = face(nx * ny, 0.7);
+        let zp = face(nx * ny, 0.8);
+        // Diagonally dominant: the sweep contracts, values stay bounded
+        // however many samples the harness takes.
+        let coeffs: [S; 8] =
+            [8.0, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0, 1.0].map(S::from_f64);
+        let mut be = NativeBackend::<S>::with_simd(dims, level);
+        let mut u = vec![S::ZERO; vol];
+        let mut res = vec![S::ZERO; vol];
+        let st = b.run(&format!("stencil {} {}", S::NAME, level.name()), || {
+            for (i, v) in u.iter_mut().enumerate() {
+                *v = S::from_f64((i % 5) as f64 * 0.2);
+            }
+            for _ in 0..sweeps {
+                let faces: [&[S]; 6] = [&xm, &xp, &ym, &yp, &zm, &zp];
+                be.sweep(&mut u, faces, &rhs, &coeffs, &mut res).unwrap();
+            }
+            std::hint::black_box((&u, &res));
+        });
+        st.mean().as_nanos() as f64 / sweeps as f64
+    }
+
+    let dims = (24usize, 24, 24);
+    let detected = SimdLevel::detect();
+    let mut t = Table::new(&["width", "scalar / sweep", "simd / sweep", "speedup"]);
+    let mut rows = Vec::new();
+    for width in ["f64", "f32"] {
+        let (scalar_ns, simd_ns) = if width == "f64" {
+            (
+                sweep_ns::<f64>(b, dims, SimdLevel::Scalar),
+                sweep_ns::<f64>(b, dims, detected),
+            )
+        } else {
+            (
+                sweep_ns::<f32>(b, dims, SimdLevel::Scalar),
+                sweep_ns::<f32>(b, dims, detected),
+            )
+        };
+        let speedup = scalar_ns / simd_ns.max(1.0);
+        t.row(&[
+            width.to_string(),
+            format!("{scalar_ns:.0}ns"),
+            format!("{simd_ns:.0}ns"),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("width".into(), Json::Str(width.into()));
+        row.insert(
+            "cells".into(),
+            Json::Num((dims.0 * dims.1 * dims.2) as f64),
+        );
+        row.insert("simd_level".into(), Json::Str(detected.name().into()));
+        row.insert("scalar_ns_per_sweep".into(), Json::Num(scalar_ns));
+        row.insert("simd_ns_per_sweep".into(), Json::Num(simd_ns));
+        row.insert("speedup".into(), Json::Num(speedup));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!(
+        "target: f32 >= 1.5x over the scalar loop ({} dispatch; CI gates \
+         speedup >= 1.0 at both widths)",
+        detected.name()
+    );
+    rows
+}
+
+/// Shm wakeup latency (ISSUE 6 tentpole b): a `Mutex`+`Condvar`
+/// ping-pong — the signalling the shm rings used before — vs the
+/// [`WakeSignal`] park/unpark protocol that replaced it. One JSON row
+/// per mechanism; CI fails if either goes missing.
+fn bench_shm_wakeup(b: &Bencher) -> Vec<Json> {
+    println!("\nshm wakeup: Mutex+Condvar ping-pong vs WakeSignal park/unpark");
+    let rounds: u64 = 2_000;
+
+    struct CvChan {
+        m: Mutex<u64>,
+        cv: Condvar,
+    }
+    let cv_ns = {
+        let st = b.run("wakeup condvar", || {
+            let a = Arc::new(CvChan { m: Mutex::new(0), cv: Condvar::new() });
+            let bb = Arc::new(CvChan { m: Mutex::new(0), cv: Condvar::new() });
+            let (a2, b2) = (a.clone(), bb.clone());
+            let h = std::thread::spawn(move || {
+                for r in 1..=rounds {
+                    let mut g = a2.m.lock().unwrap();
+                    while *g < r {
+                        g = a2.cv.wait(g).unwrap();
+                    }
+                    drop(g);
+                    *b2.m.lock().unwrap() += 1;
+                    b2.cv.notify_one();
+                }
+            });
+            for r in 1..=rounds {
+                *a.m.lock().unwrap() += 1;
+                a.cv.notify_one();
+                let mut g = bb.m.lock().unwrap();
+                while *g < r {
+                    g = bb.cv.wait(g).unwrap();
+                }
+            }
+            h.join().unwrap();
+        });
+        st.mean().as_nanos() as f64 / rounds as f64
+    };
+
+    let ws_ns = {
+        let st = b.run("wakeup signal", || {
+            let a = Arc::new(WakeSignal::new());
+            let bb = Arc::new(WakeSignal::new());
+            let (a2, b2) = (a.clone(), bb.clone());
+            let h = std::thread::spawn(move || {
+                let mut seen = 0u64;
+                for _ in 0..rounds {
+                    while a2.current() == seen {
+                        a2.wait_for_change(seen, Duration::from_secs(10));
+                    }
+                    seen = a2.current();
+                    b2.notify();
+                }
+            });
+            let mut seen = 0u64;
+            for _ in 0..rounds {
+                a.notify();
+                while bb.current() == seen {
+                    bb.wait_for_change(seen, Duration::from_secs(10));
+                }
+                seen = bb.current();
+            }
+            h.join().unwrap();
+        });
+        st.mean().as_nanos() as f64 / rounds as f64
+    };
+
+    let mut t = Table::new(&["mechanism", "ns / roundtrip", "vs condvar"]);
+    let mut rows = Vec::new();
+    for (mechanism, ns) in [("condvar", cv_ns), ("wake_signal", ws_ns)] {
+        t.row(&[
+            mechanism.to_string(),
+            format!("{ns:.0}"),
+            format!("{:.2}x", cv_ns / ns.max(1.0)),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("mechanism".into(), Json::Str(mechanism.into()));
+        row.insert("ns_per_roundtrip".into(), Json::Num(ns));
+        row.insert("rounds".into(), Json::Num(rounds as f64));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!(
+        "steady-state notify is lock-free (no threshold gate: roundtrip \
+         latency is scheduler-dependent; trends are read across PRs)"
+    );
+    rows
+}
+
+/// Per-link halo coalescing (ISSUE 6 tentpole c): a 2×2×2 torus over
+/// the shm backend — every rank's 6 halo faces go to 3 distinct peers,
+/// so coalescing must send exactly half the wire messages of the
+/// per-buffer ablation. One JSON row per mode; CI fails if a mode goes
+/// missing or the message-reduction ratio drops below 2×.
+fn bench_halo_coalesce(b: &Bencher) -> Vec<Json> {
+    println!("\nhalo coalescing: one bundle per peer vs one message per link (2x2x2 torus, shm)");
+    let graphs = grid3d_torus_graphs(2, 2, 2);
+    let ranks = graphs.len();
+    let halo = 64usize; // f64s per face
+    let steps = 50usize;
+
+    let mut t = Table::new(&["mode", "wire msgs / step / rank", "us / step"]);
+    let mut rows = Vec::new();
+    for (mode, coalesce) in [("coalesced", true), ("per_buffer", false)] {
+        let mut sent_total = 0u64;
+        let st = b.run(&format!("halo {mode}"), || {
+            let (_w, eps) = ShmWorld::homogeneous(ranks);
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(r, mut ep)| {
+                    let g = graphs[r].clone();
+                    std::thread::spawn(move || {
+                        let sizes = vec![halo; g.num_send()];
+                        let mut bufs = BufferSet::<f64>::new(&sizes, &sizes).unwrap();
+                        let mut sc = SyncComm::default();
+                        sc.set_coalesce(coalesce);
+                        let mut m = RankMetrics::default();
+                        for it in 0..steps {
+                            for (l, sb) in bufs.send.iter_mut().enumerate() {
+                                sb[0] = (it * 10 + l) as f64;
+                            }
+                            sc.send(&mut ep, &g, &bufs, &mut m).unwrap();
+                            sc.recv(&mut ep, &g, &mut bufs, &mut m).unwrap();
+                        }
+                        m.msgs_sent
+                    })
+                })
+                .collect();
+            sent_total = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        });
+        let msgs_per_step = sent_total as f64 / (steps * ranks) as f64;
+        let step_us = st.mean().as_nanos() as f64 / steps as f64 / 1e3;
+        t.row(&[
+            mode.to_string(),
+            format!("{msgs_per_step:.0}"),
+            format!("{step_us:.1}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("mode".into(), Json::Str(mode.into()));
+        row.insert("ranks".into(), Json::Num(ranks as f64));
+        row.insert("halo_f64s".into(), Json::Num(halo as f64));
+        row.insert("steps".into(), Json::Num(steps as f64));
+        row.insert("msgs_per_step_per_rank".into(), Json::Num(msgs_per_step));
+        row.insert("ns_per_step".into(), Json::Num(step_us * 1e3));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!("target: coalescing halves the wire-message count (6 links -> 3 peers per rank)");
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -361,6 +609,9 @@ fn main() {
     bench_delivery(&b);
     let pooled_rows = bench_pooled_vs_clone(&b);
     let backend_rows = bench_backend_roundtrip(&b);
+    let stencil_rows = bench_stencil_simd(&b);
+    let wakeup_rows = bench_shm_wakeup(&b);
+    let coalesce_rows = bench_halo_coalesce(&b);
     let precision_rows = bench_solve_precision(&b);
     let termination_rows = bench_termination_detection(&b);
     let p2p_rows = bench_p2p_rate(&b);
@@ -373,6 +624,9 @@ fn main() {
     );
     doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
     doc.insert("backend_roundtrip".into(), Json::Arr(backend_rows));
+    doc.insert("stencil_simd".into(), Json::Arr(stencil_rows));
+    doc.insert("shm_wakeup".into(), Json::Arr(wakeup_rows));
+    doc.insert("halo_coalesce".into(), Json::Arr(coalesce_rows));
     doc.insert("solve_precision".into(), Json::Arr(precision_rows));
     doc.insert("termination_detection".into(), Json::Arr(termination_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));

@@ -85,6 +85,41 @@ pub fn grid3d_graphs(px: usize, py: usize, pz: usize) -> Vec<CommGraph> {
     out
 }
 
+/// Periodic 3-D torus adjacency: like [`grid3d_graphs`] but each axis
+/// wraps around, so every rank has a neighbour on all six faces (the
+/// densest regular comm pattern the box partition produces — the
+/// `halo_coalesce` bench's worst case for per-buffer messaging). An
+/// axis of extent 1 contributes no links (the wrap would be a
+/// self-loop); an axis of extent 2 reaches the *same* peer through both
+/// faces — two parallel links, paired by occurrence order (see
+/// [`CommGraph::new`]). Face order per rank matches [`grid3d_graphs`]:
+/// x−, x+, y−, y+, z−, z+.
+pub fn grid3d_torus_graphs(px: usize, py: usize, pz: usize) -> Vec<CommGraph> {
+    let idx = |i: usize, j: usize, k: usize| (i * py + j) * pz + k;
+    let mut out = Vec::with_capacity(px * py * pz);
+    for i in 0..px {
+        for j in 0..py {
+            for k in 0..pz {
+                let mut nb = Vec::new();
+                if px > 1 {
+                    nb.push(idx((i + px - 1) % px, j, k));
+                    nb.push(idx((i + 1) % px, j, k));
+                }
+                if py > 1 {
+                    nb.push(idx(i, (j + py - 1) % py, k));
+                    nb.push(idx(i, (j + 1) % py, k));
+                }
+                if pz > 1 {
+                    nb.push(idx(i, j, (k + pz - 1) % pz));
+                    nb.push(idx(i, j, (k + 1) % pz));
+                }
+                out.push(CommGraph::symmetric(idx(i, j, k), nb).expect("torus graph valid"));
+            }
+        }
+    }
+    out
+}
+
 /// Random connected symmetric graph: a random spanning tree plus extra
 /// edges with probability `extra_p`. Reproducible given `seed`.
 pub fn random_connected(p: usize, extra_p: f64, seed: u64) -> Vec<CommGraph> {
@@ -159,6 +194,33 @@ mod tests {
         // interior of y-axis: (0,1,0) has 1(x)+2(y)+1(z) = 4
         let idx = |i: usize, j: usize, k: usize| (i * 3 + j) * 2 + k;
         assert_eq!(g[idx(0, 1, 0)].num_send(), 4);
+    }
+
+    #[test]
+    fn torus_wraps_every_axis() {
+        // 2×2×2: each rank has 6 links to exactly 3 distinct peers (every
+        // axis has extent 2, so each is a parallel-link pair) — the shape
+        // that gives halo coalescing its 2× message reduction.
+        let g = grid3d_torus_graphs(2, 2, 2);
+        assert_eq!(g.len(), 8);
+        validate_world(&g).unwrap();
+        assert!(is_connected(&g));
+        for v in &g {
+            assert_eq!(v.num_send(), 6);
+            assert!(v.has_parallel_links());
+            assert_eq!(v.undirected_neighbors().len(), 3);
+        }
+        // 3×3×1: z contributes nothing, x/y wrap to 4 distinct peers.
+        let g = grid3d_torus_graphs(3, 3, 1);
+        assert_eq!(g.len(), 9);
+        validate_world(&g).unwrap();
+        for v in &g {
+            assert_eq!(v.num_send(), 4);
+            assert!(!v.has_parallel_links());
+        }
+        // 1×1×1: no links at all.
+        let g = grid3d_torus_graphs(1, 1, 1);
+        assert_eq!(g[0].num_send(), 0);
     }
 
     #[test]

@@ -9,7 +9,9 @@
 
 pub mod builders;
 
-pub use builders::{complete_graph, grid3d_graphs, line_graph, random_connected, ring_graph};
+pub use builders::{
+    complete_graph, grid3d_graphs, grid3d_torus_graphs, line_graph, random_connected, ring_graph,
+};
 
 use crate::simmpi::Rank;
 use crate::{Error, Result};
@@ -26,14 +28,18 @@ pub struct CommGraph {
 
 impl CommGraph {
     /// Build and validate a per-rank graph view.
+    ///
+    /// A peer may appear on *multiple* links (parallel links — e.g. a
+    /// periodic torus axis of extent 2 reaches the same rank through
+    /// both faces); each occurrence is a distinct link with its own
+    /// buffers. Links are paired with the peer by occurrence order: this
+    /// rank's k-th link to peer `j` matches `j`'s k-th link back. Only
+    /// self-loops are rejected.
     pub fn new(rank: Rank, send_neighbors: Vec<Rank>, recv_neighbors: Vec<Rank>) -> Result<Self> {
         for &n in send_neighbors.iter().chain(&recv_neighbors) {
             if n == rank {
                 return Err(Error::Config(format!("rank {rank}: self-loop neighbor")));
             }
-        }
-        if has_dup(&send_neighbors) || has_dup(&recv_neighbors) {
-            return Err(Error::Config(format!("rank {rank}: duplicate neighbor")));
         }
         Ok(CommGraph {
             rank,
@@ -69,14 +75,24 @@ impl CommGraph {
         self.recv_neighbors.len()
     }
 
-    /// Index of `rank` in the outgoing link list.
+    /// Index of `rank` in the outgoing link list (first occurrence, for
+    /// graphs with parallel links).
     pub fn send_link_of(&self, rank: Rank) -> Option<usize> {
         self.send_neighbors.iter().position(|&r| r == rank)
     }
 
-    /// Index of `rank` in the incoming link list.
+    /// Index of `rank` in the incoming link list (first occurrence, for
+    /// graphs with parallel links).
     pub fn recv_link_of(&self, rank: Rank) -> Option<usize> {
         self.recv_neighbors.iter().position(|&r| r == rank)
+    }
+
+    /// True if any peer appears on more than one link in either
+    /// direction. Per-link tags and coalesced framing handle this; the
+    /// snapshot termination protocol does not (its per-face messages
+    /// would alias per `(src, tag)`), so it rejects such graphs.
+    pub fn has_parallel_links(&self) -> bool {
+        has_dup(&self.send_neighbors) || has_dup(&self.recv_neighbors)
     }
 
     /// Neighbours in the *undirected* closure (union of both directions,
@@ -101,8 +117,17 @@ fn has_dup(v: &[Rank]) -> bool {
     s.windows(2).any(|w| w[0] == w[1])
 }
 
+/// Count of `rank` occurrences in a link list (parallel links count
+/// each occurrence).
+fn count_of(list: &[Rank], rank: Rank) -> usize {
+    list.iter().filter(|&&r| r == rank).count()
+}
+
 /// Validate that a set of per-rank views is globally consistent: for every
 /// outgoing link i→j, rank j lists an incoming link from i, and vice versa.
+/// With parallel links this is a *multiset* condition — i's number of
+/// outgoing links to j must equal j's number of incoming links from i, so
+/// occurrence-order pairing matches link for link.
 pub fn validate_world(graphs: &[CommGraph]) -> Result<()> {
     for g in graphs {
         if g.rank() >= graphs.len() {
@@ -112,9 +137,11 @@ pub fn validate_world(graphs: &[CommGraph]) -> Result<()> {
             let peer = graphs
                 .get(j)
                 .ok_or_else(|| Error::Config(format!("neighbor {j} out of range")))?;
-            if peer.recv_link_of(g.rank()).is_none() {
+            let out = count_of(g.send_neighbors(), j);
+            let back = count_of(peer.recv_neighbors(), g.rank());
+            if out != back {
                 return Err(Error::Config(format!(
-                    "link {}→{j} not mirrored as incoming at {j}",
+                    "{out} links {}→{j} vs {back} mirrored as incoming at {j}",
                     g.rank()
                 )));
             }
@@ -123,9 +150,11 @@ pub fn validate_world(graphs: &[CommGraph]) -> Result<()> {
             let peer = graphs
                 .get(j)
                 .ok_or_else(|| Error::Config(format!("neighbor {j} out of range")))?;
-            if peer.send_link_of(g.rank()).is_none() {
+            let inc = count_of(g.recv_neighbors(), j);
+            let fwd = count_of(peer.send_neighbors(), g.rank());
+            if inc != fwd {
                 return Err(Error::Config(format!(
-                    "link {j}→{} not mirrored as outgoing at {j}",
+                    "{inc} links {j}→{} vs {fwd} mirrored as outgoing at {j}",
                     g.rank()
                 )));
             }
@@ -160,10 +189,25 @@ mod tests {
     use super::*;
 
     #[test]
-    fn rejects_self_loop_and_dups() {
+    fn rejects_self_loop_accepts_parallel_links() {
         assert!(CommGraph::new(0, vec![0], vec![]).is_err());
-        assert!(CommGraph::new(0, vec![1, 1], vec![]).is_err());
-        assert!(CommGraph::new(0, vec![1], vec![2, 2]).is_err());
+        assert!(CommGraph::new(0, vec![1, 0], vec![]).is_err());
+        // Parallel links (same peer, two links) are legal and flagged.
+        let g = CommGraph::new(0, vec![1, 1], vec![2, 2]).unwrap();
+        assert!(g.has_parallel_links());
+        assert_eq!(g.num_send(), 2);
+        assert_eq!(g.send_link_of(1), Some(0), "first occurrence");
+        assert!(!CommGraph::new(0, vec![1], vec![2]).unwrap().has_parallel_links());
+    }
+
+    #[test]
+    fn validate_requires_matching_multiplicity() {
+        // 0 has two links to 1, but 1 mirrors only one back.
+        let g0 = CommGraph::new(0, vec![1, 1], vec![1, 1]).unwrap();
+        let g1_bad = CommGraph::new(1, vec![0], vec![0]).unwrap();
+        assert!(validate_world(&[g0.clone(), g1_bad]).is_err());
+        let g1_ok = CommGraph::new(1, vec![0, 0], vec![0, 0]).unwrap();
+        validate_world(&[g0, g1_ok]).unwrap();
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //!   on that channel has completed; otherwise the attempt is **discarded**
 //!   (the channel is busy — queueing would only deliver ever-staler data).
 //!
+//! A "channel" here is a **peer**, not a link: links sharing a
+//! destination are coalesced through a [`CoalescePlan`] into one
+//! length-prefixed bundle per peer per step (see [`super::coalesce`]),
+//! and Algorithm 6's busy test / discard applies to the whole bundle.
+//! Single-link peers keep the historical per-link wire format, so on
+//! graphs without parallel links nothing changes.
+//! [`AsyncComm::set_coalesce`]`(false)` restores one channel per link
+//! (on occurrence-indexed subtags) as the measured ablation.
+//!
 //! Both paths run through the transport's buffer pool: posted sends stage
 //! the user buffer via [`Transport::isend_copy`] into recycled storage,
 //! drained receives are address-swapped and their displaced buffer
@@ -21,7 +30,8 @@
 use std::fmt;
 
 use super::buffers::BufferSet;
-use super::messages::TAG_DATA;
+use super::coalesce::{stage_packed, CoalescePlan};
+use super::messages::{TAG_DATA, TAG_DATA_PACKED};
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
@@ -30,7 +40,9 @@ use crate::transport::Transport;
 
 /// Non-blocking continuous exchange over any [`Transport`].
 pub struct AsyncComm<T: Transport> {
-    /// In-flight send request per outgoing link (None = channel idle).
+    /// In-flight send request per outgoing channel (None = channel idle).
+    /// One slot per peer group when coalescing, per link otherwise;
+    /// sized when the plan is first derived.
     send_reqs: Vec<Option<T::SendHandle>>,
     /// Max messages drained per channel per `Recv` call (Alg. 5's
     /// `max_numb_request`).
@@ -39,15 +51,20 @@ pub struct AsyncComm<T: Transport> {
     /// mode: every send is queued regardless (§3.3's counter-performance
     /// scenario), measured by the `send_discard` bench.
     pub discard: bool,
+    /// Coalesce links per peer (default). `false` = per-buffer ablation.
+    coalesce: bool,
+    /// Peer grouping, derived lazily from the graph on first use.
+    plan: Option<CoalescePlan>,
 }
 
 impl<T: Transport> fmt::Debug for AsyncComm<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("AsyncComm")
-            .field("send_links", &self.send_reqs.len())
+            .field("send_channels", &self.send_reqs.len())
             .field("busy_channels", &self.busy_channels())
             .field("max_recv_requests", &self.max_recv_requests)
             .field("discard", &self.discard)
+            .field("coalesce", &self.coalesce)
             .finish()
     }
 }
@@ -58,11 +75,43 @@ impl<T: Transport> AsyncComm<T> {
             send_reqs: (0..num_send_links).map(|_| None).collect(),
             max_recv_requests: max_recv_requests.max(1),
             discard: true,
+            coalesce: true,
+            plan: None,
         }
     }
 
+    /// Toggle per-peer coalescing (both sides of a link must agree).
+    /// Clears any in-flight channel state: call before traffic starts.
+    pub fn set_coalesce(&mut self, on: bool) {
+        if self.coalesce != on {
+            self.coalesce = on;
+            self.plan = None;
+        }
+    }
+
+    pub fn coalesce(&self) -> bool {
+        self.coalesce
+    }
+
+    /// Derive the plan on first use and size the channel slots to match
+    /// (per peer group when coalescing, per link otherwise).
+    fn ensure_plan(&mut self, graph: &CommGraph) {
+        if self.plan.is_some() {
+            return;
+        }
+        let plan = CoalescePlan::new(graph);
+        let channels = if self.coalesce {
+            plan.send_groups().len()
+        } else {
+            graph.num_send()
+        };
+        self.send_reqs = (0..channels).map(|_| None).collect();
+        self.plan = Some(plan);
+    }
+
     /// Algorithm 6: post one send per idle outgoing channel; discard on
-    /// busy channels (no staging, no allocation — the fast path).
+    /// busy channels (no staging, no allocation — the fast path). A
+    /// channel is a peer group: a busy peer drops this step's *bundle*.
     pub fn send<S: Scalar>(
         &mut self,
         ep: &mut T,
@@ -70,24 +119,52 @@ impl<T: Transport> AsyncComm<T> {
         bufs: &BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
-        for (l, &dst) in graph.send_neighbors().iter().enumerate() {
-            let busy = self.send_reqs[l].as_ref().is_some_and(|r| !r.test());
-            if busy && self.discard {
-                metrics.sends_discarded += 1;
-            } else {
-                self.send_reqs[l] = Some(ep.isend_scalars(dst, TAG_DATA, &bufs.send[l])?);
-                metrics.msgs_sent += 1;
+        self.ensure_plan(graph);
+        let Self {
+            send_reqs,
+            discard,
+            coalesce,
+            plan,
+            ..
+        } = self;
+        let plan = plan.as_ref().expect("plan built above");
+        if *coalesce {
+            for (gi, g) in plan.send_groups().iter().enumerate() {
+                let busy = send_reqs[gi].as_ref().is_some_and(|r| !r.test());
+                if busy && *discard {
+                    metrics.sends_discarded += 1;
+                } else {
+                    let h = if let [l] = g.links[..] {
+                        ep.isend_scalars(g.peer, TAG_DATA, &bufs.send[l])?
+                    } else {
+                        let msg = stage_packed(ep.pool(), &g.links, &bufs.send);
+                        ep.isend(g.peer, TAG_DATA_PACKED, msg)?
+                    };
+                    send_reqs[gi] = Some(h);
+                    metrics.msgs_sent += 1;
+                }
+            }
+        } else {
+            for (l, &dst) in graph.send_neighbors().iter().enumerate() {
+                let busy = send_reqs[l].as_ref().is_some_and(|r| !r.test());
+                if busy && *discard {
+                    metrics.sends_discarded += 1;
+                } else {
+                    send_reqs[l] =
+                        Some(ep.isend_scalars(dst, plan.send_subtag(l), &bufs.send[l])?);
+                    metrics.msgs_sent += 1;
+                }
             }
         }
         Ok(())
     }
 
     /// Algorithm 5: drain up to `max_recv_requests` arrived messages per
-    /// incoming channel; the latest lands in the user buffer. Never
+    /// incoming channel; the latest lands in the user buffer(s). Never
     /// blocks. Only the most recent arrival is delivered — superseded
     /// messages recycle straight to their pool without touching the user
     /// buffer, so narrow scalars (whose delivery is a copy-convert, not
-    /// an O(1) swap) pay one conversion per link per `Recv` regardless
+    /// an O(1) swap) pay one conversion per channel per `Recv` regardless
     /// of how many messages were drained.
     pub fn recv<S: Scalar>(
         &mut self,
@@ -96,20 +173,51 @@ impl<T: Transport> AsyncComm<T> {
         bufs: &mut BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
-        for (l, &src) in graph.recv_neighbors().iter().enumerate() {
-            let mut latest = None;
-            for _ in 0..self.max_recv_requests {
-                match ep.try_match(src, TAG_DATA) {
-                    Some(data) => {
-                        // overwriting drops (= recycles) the superseded one
-                        latest = Some(data);
-                        metrics.msgs_delivered += 1;
+        self.ensure_plan(graph);
+        let max = self.max_recv_requests;
+        let plan = self.plan.as_ref().expect("plan built above");
+        if self.coalesce {
+            for g in plan.recv_groups() {
+                let tag = if g.links.len() == 1 {
+                    TAG_DATA
+                } else {
+                    TAG_DATA_PACKED
+                };
+                let mut latest = None;
+                for _ in 0..max {
+                    match ep.try_match(g.peer, tag) {
+                        Some(data) => {
+                            // overwriting drops (= recycles) the superseded one
+                            latest = Some(data);
+                            metrics.msgs_delivered += 1;
+                        }
+                        None => break,
                     }
-                    None => break,
+                }
+                if let Some(data) = latest {
+                    if let [l] = g.links[..] {
+                        bufs.deliver(l, data)?;
+                    } else {
+                        bufs.deliver_packed(&g.links, data)?;
+                    }
                 }
             }
-            if let Some(data) = latest {
-                bufs.deliver(l, data)?;
+        } else {
+            for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+                let tag = plan.recv_subtag(l);
+                let mut latest = None;
+                for _ in 0..max {
+                    match ep.try_match(src, tag) {
+                        Some(data) => {
+                            latest = Some(data);
+                            metrics.msgs_delivered += 1;
+                        }
+                        None => break,
+                    }
+                }
+                if let Some(data) = latest {
+                    bufs.deliver(l, data)?;
+                }
             }
         }
         Ok(())
@@ -221,5 +329,47 @@ mod tests {
             stats_after_post,
             "discarded sends must not acquire, allocate or recycle buffers"
         );
+    }
+
+    #[test]
+    fn parallel_links_share_one_channel_when_coalesced() {
+        // Two links to the same peer, 10 s latency: coalesced they are
+        // one channel (one bundle posted, later steps discard once per
+        // step); uncoalesced they are two.
+        for coalesce in [true, false] {
+            let (_w, mut eps) = pair_world(10_000_000);
+            let mut e0 = eps.remove(0);
+            let g0 = CommGraph::new(0, vec![1, 1], vec![1, 1]).unwrap();
+            let bufs = BufferSet::<f64>::new(&[1, 2], &[1, 2]).unwrap();
+            let mut comm = AsyncComm::new(2, 1);
+            comm.set_coalesce(coalesce);
+            let mut m = RankMetrics::default();
+            comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+            comm.send(&mut e0, &g0, &bufs, &mut m).unwrap();
+            let want = if coalesce { 1 } else { 2 };
+            assert_eq!(m.msgs_sent, want, "coalesce={coalesce}");
+            assert_eq!(m.sends_discarded, want);
+            assert_eq!(comm.busy_channels(), want);
+        }
+    }
+
+    #[test]
+    fn coalesced_recv_keeps_latest_bundle() {
+        let (_w, mut eps) = pair_world(0);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let g0 = CommGraph::new(0, vec![1, 1], vec![1, 1]).unwrap();
+        let mut bufs = BufferSet::<f64>::new(&[1, 2], &[1, 2]).unwrap();
+        let mut comm = AsyncComm::new(2, 8);
+        let mut m = RankMetrics::default();
+        // two bundles arrive between receives: the latest fills both slots
+        for v in [1.0, 2.0] {
+            e1.isend(0, TAG_DATA_PACKED, vec![1.0, v, 2.0, 10.0 + v, 20.0 + v])
+                .unwrap();
+        }
+        comm.recv(&mut e0, &g0, &mut bufs, &mut m).unwrap();
+        assert_eq!(bufs.recv[0], vec![2.0]);
+        assert_eq!(bufs.recv[1], vec![12.0, 22.0]);
+        assert_eq!(m.msgs_delivered, 2, "both bundles drained from the wire");
     }
 }

@@ -71,6 +71,60 @@ impl<S: Scalar> BufferSet<S> {
         Ok(incoming)
     }
 
+    /// Deliver a coalesced bundle (`[len0, payload0..., len1,
+    /// payload1...]`, wire format of
+    /// [`crate::jack::messages::TAG_DATA_PACKED`]) into the receive
+    /// slots listed in `links`, in order. Sub-buffers copy-narrow into
+    /// the preallocated slots — the bundle is one shared wire buffer, so
+    /// unlike [`BufferSet::deliver`] there is no per-link allocation to
+    /// swap, but the path stays allocation-free for every width.
+    ///
+    /// Returns the drained wire buffer for recycling. Any framing
+    /// violation (length prefix disagreeing with the slot size,
+    /// truncated bundle, trailing words) is a protocol error.
+    pub fn deliver_packed(&mut self, links: &[usize], incoming: impl Into<MsgBuf>) -> Result<MsgBuf> {
+        let incoming = incoming.into();
+        let msg: &[f64] = &incoming;
+        let mut pos = 0usize;
+        for &link in links {
+            let slot = self
+                .recv
+                .get_mut(link)
+                .ok_or_else(|| Error::Config(format!("recv link {link} out of range")))?;
+            let len = *msg.get(pos).ok_or_else(|| {
+                Error::Protocol(format!(
+                    "packed bundle truncated: missing length prefix for link {link} at word {pos}"
+                ))
+            })? as usize;
+            if len != slot.len() {
+                return Err(Error::Protocol(format!(
+                    "packed sub-buffer size {len} != recv buffer size {} on link {link}",
+                    slot.len()
+                )));
+            }
+            pos += 1;
+            let sub = msg.get(pos..pos + len).ok_or_else(|| {
+                Error::Protocol(format!(
+                    "packed bundle truncated: link {link} payload needs {len} words at {pos}, \
+                     message has {}",
+                    msg.len()
+                ))
+            })?;
+            for (dst, &w) in slot.iter_mut().zip(sub) {
+                *dst = S::from_f64(w);
+            }
+            pos += len;
+        }
+        if pos != msg.len() {
+            return Err(Error::Protocol(format!(
+                "packed bundle has {} trailing words after {} links",
+                msg.len() - pos,
+                links.len()
+            )));
+        }
+        Ok(incoming)
+    }
+
     /// Install an already-decoded scalar face into receive slot `link`
     /// (snapshot delivery, the paper's address exchange): O(1) swap of
     /// same-width storage. Returns the displaced user buffer.
@@ -138,6 +192,55 @@ mod tests {
         let mut b = BufferSet::<f64>::new(&[1], &[3]).unwrap();
         assert!(b.deliver(0, vec![1.0]).is_err());
         assert!(b.deliver(5, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn deliver_packed_unpacks_in_link_order() {
+        let mut b = BufferSet::<f64>::new(&[1], &[2, 3]).unwrap();
+        // Bundle for links [1, 0]: len 3 + payload, then len 2 + payload.
+        let wire = vec![3.0, 10.0, 11.0, 12.0, 2.0, 20.0, 21.0];
+        let drained = b.deliver_packed(&[1, 0], wire).unwrap();
+        assert_eq!(b.recv[1], vec![10.0, 11.0, 12.0]);
+        assert_eq!(b.recv[0], vec![20.0, 21.0]);
+        assert_eq!(drained.len(), 7, "wire buffer handed back intact");
+    }
+
+    #[test]
+    fn deliver_packed_narrows_to_f32() {
+        let mut b = BufferSet::<f32>::new(&[1], &[2]).unwrap();
+        let slot_ptr = b.recv[0].as_ptr();
+        b.deliver_packed(&[0], vec![2.0, 1.5, -2.0]).unwrap();
+        assert_eq!(b.recv[0], vec![1.5f32, -2.0]);
+        assert_eq!(b.recv[0].as_ptr(), slot_ptr, "converted in place");
+    }
+
+    #[test]
+    fn deliver_packed_rejects_bad_framing() {
+        let mut b = BufferSet::<f64>::new(&[1], &[2, 2]).unwrap();
+        // wrong length prefix
+        assert!(b.deliver_packed(&[0], vec![3.0, 1.0, 2.0, 3.0]).is_err());
+        // truncated payload
+        assert!(b.deliver_packed(&[0], vec![2.0, 1.0]).is_err());
+        // missing second sub-buffer
+        assert!(b.deliver_packed(&[0, 1], vec![2.0, 1.0, 2.0]).is_err());
+        // trailing words
+        assert!(b
+            .deliver_packed(&[0], vec![2.0, 1.0, 2.0, 9.0])
+            .is_err());
+        // bad link index
+        assert!(b.deliver_packed(&[7], vec![2.0, 1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn deliver_packed_recycles_wire_buffer() {
+        let pool = BufferPool::new();
+        let mut b = BufferSet::<f64>::new(&[1], &[2]).unwrap();
+        let wire = pool.stage(&[2.0, 5.0, 6.0]);
+        let drained = b.deliver_packed(&[0], wire).unwrap();
+        assert_eq!(b.recv[0], vec![5.0, 6.0]);
+        assert!(drained.pool().unwrap().same_pool(&pool));
+        drop(drained);
+        assert_eq!(pool.free_len(), 1);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Per-destination halo coalescing (ISSUE 6 tentpole c).
+//!
+//! The comm layers historically posted **one wire message per link per
+//! step** — on a 3-D box partition that is up to six messages to at most
+//! six peers, but on denser graphs (periodic tori, overlap schemes with
+//! edge/corner exchanges) several links target the *same* peer and each
+//! pays its own per-message overhead. [`CoalescePlan`] groups a rank's
+//! links by peer so [`crate::jack::SyncComm`] / [`crate::jack::AsyncComm`]
+//! can pack every halo buffer bound for one rank into **one pooled
+//! message per peer per step**:
+//!
+//! * A group with a single link keeps the historical wire format —
+//!   plain [`messages::TAG_DATA`], O(1) address-swap delivery — so on
+//!   graphs without parallel links coalescing is a bit-for-bit no-op.
+//! * A group with ≥ 2 links sends one [`messages::TAG_DATA_PACKED`]
+//!   bundle, length-prefixed per sub-buffer
+//!   (`[len0, payload0..., len1, payload1...]`, staged allocation-free
+//!   by [`stage_packed`], unpacked by
+//!   [`crate::jack::BufferSet::deliver_packed`]).
+//!
+//! Both sides derive the same plan from their own [`CommGraph`] view:
+//! groups are in first-appearance order and links within a group keep
+//! link order, so the sender's k-th sub-buffer lands in the receiver's
+//! k-th grouped slot (the multiset mirror condition checked by
+//! [`crate::graph::validate_world`] guarantees the counts agree).
+//! Non-overtaking per `(src, tag)` then orders whole bundles exactly as
+//! it ordered individual messages, and Algorithm 6's send-discard works
+//! per group: a busy peer drops the *bundle*, touching no storage.
+//!
+//! The per-buffer ablation path (coalescing off) sends each link on
+//! [`messages::data_subtag`]`(k)` — `k` the link's index within its peer
+//! group — so parallel links cannot alias per `(src, tag)` even
+//! uncoalesced. Measured by the `halo_coalesce` series of
+//! `benches/comm_micro.rs` (message-count ratio gated ≥ 2 in CI on the
+//! 2×2×2 torus).
+
+use crate::graph::CommGraph;
+use crate::jack::messages;
+use crate::scalar::Scalar;
+use crate::transport::{BufferPool, MsgBuf, Rank, Tag};
+
+/// One peer's link group: the wire unit of coalesced exchange.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkGroup {
+    /// The peer rank this group exchanges with.
+    pub peer: Rank,
+    /// Link indices bound for `peer`, in link order.
+    pub links: Vec<usize>,
+}
+
+/// Links grouped by peer, for one rank's graph view (module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalescePlan {
+    send: Vec<LinkGroup>,
+    recv: Vec<LinkGroup>,
+    /// Per send link: its index within its peer group (subtag `k`).
+    send_k: Vec<usize>,
+    /// Per recv link: its index within its peer group (subtag `k`).
+    recv_k: Vec<usize>,
+}
+
+fn group(neighbors: &[Rank]) -> (Vec<LinkGroup>, Vec<usize>) {
+    let mut groups: Vec<LinkGroup> = Vec::new();
+    let mut k = Vec::with_capacity(neighbors.len());
+    for (l, &peer) in neighbors.iter().enumerate() {
+        match groups.iter_mut().find(|g| g.peer == peer) {
+            Some(g) => {
+                k.push(g.links.len());
+                g.links.push(l);
+            }
+            None => {
+                k.push(0);
+                groups.push(LinkGroup {
+                    peer,
+                    links: vec![l],
+                });
+            }
+        }
+    }
+    (groups, k)
+}
+
+impl CoalescePlan {
+    /// Derive the plan from a rank's graph view. Deterministic: groups
+    /// in first-appearance order, links within a group in link order.
+    pub fn new(graph: &CommGraph) -> Self {
+        let (send, send_k) = group(graph.send_neighbors());
+        let (recv, recv_k) = group(graph.recv_neighbors());
+        CoalescePlan {
+            send,
+            recv,
+            send_k,
+            recv_k,
+        }
+    }
+
+    /// Outgoing groups: one wire message each per step when coalescing.
+    pub fn send_groups(&self) -> &[LinkGroup] {
+        &self.send
+    }
+
+    /// Incoming groups, mirroring the peers' outgoing plans.
+    pub fn recv_groups(&self) -> &[LinkGroup] {
+        &self.recv
+    }
+
+    /// Plain-data tag of send link `l` in per-buffer mode
+    /// ([`messages::data_subtag`] of its within-group index).
+    pub fn send_subtag(&self, l: usize) -> Tag {
+        messages::data_subtag(self.send_k[l])
+    }
+
+    /// Plain-data tag of recv link `l` in per-buffer mode.
+    pub fn recv_subtag(&self, l: usize) -> Tag {
+        messages::data_subtag(self.recv_k[l])
+    }
+
+    /// True when every group holds one link — coalesced and per-buffer
+    /// wire traffic are then identical (message for message).
+    pub fn is_trivial(&self) -> bool {
+        self.send.iter().all(|g| g.links.len() == 1) && self.recv.iter().all(|g| g.links.len() == 1)
+    }
+}
+
+/// Stage one coalesced bundle for a group: `[len, payload...]` per link
+/// in group order, through the pool's recycling staging path — a single
+/// pass, no steady-state allocation, any payload width widening to the
+/// `f64` wire on the fly.
+pub fn stage_packed<S: Scalar>(pool: &BufferPool, links: &[usize], bufs: &[Vec<S>]) -> MsgBuf {
+    let total: usize = links.iter().map(|&l| bufs[l].len() + 1).sum();
+    pool.stage_iter(
+        total,
+        links.iter().flat_map(|&l| {
+            std::iter::once(bufs[l].len() as f64).chain(bufs[l].iter().map(|s| s.to_f64()))
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jack::messages::TAG_DATA;
+
+    #[test]
+    fn groups_by_peer_in_first_appearance_order() {
+        // Links: 0→3, 1→1, 2→3, 3→1, 4→2 (parallel links to 3 and 1).
+        let g = CommGraph::new(0, vec![3, 1, 3, 1, 2], vec![3, 1, 3, 1, 2]).unwrap();
+        let plan = CoalescePlan::new(&g);
+        assert_eq!(plan.send_groups().len(), 3);
+        assert_eq!(plan.send_groups()[0].peer, 3);
+        assert_eq!(plan.send_groups()[0].links, vec![0, 2]);
+        assert_eq!(plan.send_groups()[1].peer, 1);
+        assert_eq!(plan.send_groups()[1].links, vec![1, 3]);
+        assert_eq!(plan.send_groups()[2].links, vec![4]);
+        assert!(!plan.is_trivial());
+        // Subtags: within-group occurrence index.
+        assert_eq!(plan.send_subtag(0), TAG_DATA);
+        assert_eq!(plan.send_subtag(2), messages::data_subtag(1));
+        assert_eq!(plan.send_subtag(4), TAG_DATA);
+        assert_eq!(plan.recv_subtag(3), messages::data_subtag(1));
+    }
+
+    #[test]
+    fn simple_graphs_are_trivial() {
+        let g = CommGraph::symmetric(1, vec![0, 2]).unwrap();
+        let plan = CoalescePlan::new(&g);
+        assert!(plan.is_trivial());
+        assert_eq!(plan.send_groups().len(), 2);
+        for (l, grp) in plan.send_groups().iter().enumerate() {
+            assert_eq!(grp.links, vec![l]);
+            assert_eq!(plan.send_subtag(l), TAG_DATA);
+        }
+    }
+
+    #[test]
+    fn stage_packed_frames_in_group_order() {
+        let pool = BufferPool::new();
+        let bufs = vec![vec![1.0f64, 2.0], vec![7.0], vec![4.0, 5.0, 6.0]];
+        let msg = stage_packed(&pool, &[2, 0], &bufs);
+        assert_eq!(&*msg, &[3.0, 4.0, 5.0, 6.0, 2.0, 1.0, 2.0][..]);
+        // Round-trips through BufferSet::deliver_packed.
+        let mut bs = crate::jack::BufferSet::<f64>::new(&[1], &[2, 1, 3]).unwrap();
+        bs.deliver_packed(&[2, 0], msg).unwrap();
+        assert_eq!(bs.recv[2], vec![4.0, 5.0, 6.0]);
+        assert_eq!(bs.recv[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn stage_packed_widens_f32() {
+        let pool = BufferPool::new();
+        let bufs = vec![vec![1.5f32, -2.0]];
+        let msg = stage_packed(&pool, &[0], &bufs);
+        assert_eq!(&*msg, &[2.0, 1.5, -2.0][..]);
+    }
+
+    #[test]
+    fn stage_packed_recycles() {
+        let pool = BufferPool::new();
+        let bufs = vec![vec![1.0f64, 2.0]];
+        drop(stage_packed(&pool, &[0], &bufs));
+        let stats0 = pool.stats();
+        drop(stage_packed(&pool, &[0], &bufs));
+        let stats1 = pool.stats();
+        assert_eq!(stats1.allocations, stats0.allocations, "warm path reuses");
+        assert_eq!(stats1.reuses, stats0.reuses + 1);
+    }
+}

@@ -108,6 +108,11 @@ pub struct AsyncConfig {
     /// Discard sends on busy channels (Alg. 6; `false` is the E6
     /// ablation: every send is queued, delivering ever-staler data).
     pub send_discard: bool,
+    /// Coalesce all halo buffers bound for one peer into a single wire
+    /// message per step (see [`super::coalesce`]; a no-op on graphs
+    /// without parallel links). `false` is the per-buffer ablation
+    /// measured by the `halo_coalesce` bench.
+    pub coalesce: bool,
     /// Which convergence-detection protocol decides termination (the
     /// paper's snapshot mechanism by default; see
     /// [`super::termination`] for the alternatives and their
@@ -121,6 +126,7 @@ impl Default for AsyncConfig {
             max_recv_requests: 4,
             threshold: 1e-6,
             send_discard: true,
+            coalesce: true,
             termination: TerminationKind::Snapshot,
         }
     }
@@ -399,6 +405,20 @@ impl<T: Transport, S: Scalar> JackBuilder<T, S, Ready> {
         }
         let protocol: Box<dyn TerminationProtocol<T, S>> = match cfg.termination {
             TerminationKind::Snapshot => {
+                if self.graph.has_parallel_links() {
+                    // Snapshot rounds replace data messages with
+                    // round-stamped TAG_SNAPSHOT sends posted per *link*;
+                    // parallel links would alias per (src, tag) and
+                    // interleave rounds. The other detectors never touch
+                    // the data tags, so they are safe on multigraphs.
+                    return Err(Error::Config(
+                        "snapshot convergence detection does not support \
+                         parallel links (snapshot-marked faces alias per \
+                         (src, tag)); use TerminationKind::Persistence or \
+                         TerminationKind::RecursiveDoubling on multigraphs"
+                            .into(),
+                    ));
+                }
                 if !self.tree.is_root() && self.graph.num_recv() == 0 {
                     return Err(Error::Config(
                         "snapshot convergence detection requires every non-root \
@@ -425,7 +445,9 @@ impl<T: Transport, S: Scalar> JackBuilder<T, S, Ready> {
                 self.ep.world_size(),
             )),
         };
-        self.build_async_with(protocol, cfg.max_recv_requests, cfg.send_discard)
+        let mut comm = self.build_async_with(protocol, cfg.max_recv_requests, cfg.send_discard)?;
+        comm.set_coalesce(cfg.coalesce);
+        Ok(comm)
     }
 
     /// Build an asynchronous communicator with a custom termination
@@ -545,6 +567,13 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
                     .into(),
             ));
         }
+        if self.graph.has_parallel_links() {
+            return Err(Error::Config(
+                "snapshot convergence detection does not support parallel \
+                 links (snapshot-marked faces alias per (src, tag))"
+                    .into(),
+            ));
+        }
         self.async_comm = Some(AsyncComm::new(self.graph.num_send(), max_recv_requests));
         self.async_conv = Some(snapshot_protocol(
             self.norm_kind,
@@ -576,6 +605,18 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
             .ok_or_else(|| Error::Config("communicator is not asynchronous".into()))?
             .discard = discard;
         Ok(())
+    }
+
+    /// Toggle per-peer halo coalescing (default on; a wire no-op on
+    /// graphs without parallel links — see [`super::coalesce`]). Both
+    /// sides of a link must agree, so toggle on every rank before any
+    /// data traffic. `false` is the per-buffer ablation measured by the
+    /// `halo_coalesce` bench.
+    pub fn set_coalesce(&mut self, on: bool) {
+        self.sync_comm.set_coalesce(on);
+        if let Some(ac) = self.async_comm.as_mut() {
+            ac.set_coalesce(on);
+        }
     }
 
     pub fn mode(&self) -> Mode {

@@ -11,6 +11,11 @@ use crate::transport::Tag;
 
 /// Iteration data exchange (sync and async modes).
 pub const TAG_DATA: Tag = 0x10;
+/// Coalesced iteration data: *all* halo buffers bound for one peer in a
+/// single length-prefixed bundle `[len0, payload0..., len1, payload1...]`,
+/// sub-buffers in link order (see [`crate::jack::coalesce`]). One wire
+/// message per peer per step instead of one per link.
+pub const TAG_DATA_PACKED: Tag = 0x11;
 /// Snapshot-marked data message (Algs. 7–9): `[round, face...]`.
 pub const TAG_SNAPSHOT: Tag = 0x20;
 /// Local-convergence notification, child → tree parent: `[round]`.
@@ -36,6 +41,17 @@ pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
 /// `[round, stage, flag, partial]` (arXiv:1907.01201; see
 /// [`crate::jack::termination::recursive_doubling`]).
 pub const TAG_RD_EXCHANGE: Tag = 0x90;
+
+/// Per-parallel-link plain-data tag: the k-th link a rank has to the
+/// *same* peer sends on a distinct tag so the streams cannot alias per
+/// `(src, tag)`. `k` is the link's index *within its peer group* (the
+/// k-th occurrence of that peer in the link list), not the global link
+/// index, and both sides derive it from occurrence order — so it agrees
+/// end to end. `k = 0` is plain [`TAG_DATA`]: on graphs without parallel
+/// links this is the historical wire format, bit for bit.
+pub fn data_subtag(k: usize) -> Tag {
+    TAG_DATA | ((k as Tag) << 32)
+}
 
 /// Decode a snapshot face message (`[round, face...]`, as staged by
 /// `Transport::isend_headed_scalars`) into `(round, face)`, narrowing the
@@ -67,6 +83,7 @@ mod tests {
     fn tags_are_distinct() {
         let tags = [
             TAG_DATA,
+            TAG_DATA_PACKED,
             TAG_SNAPSHOT,
             TAG_CONV_NOTIFY,
             TAG_NORM_PARTIAL,
@@ -83,5 +100,20 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), tags.len());
+    }
+
+    #[test]
+    fn data_subtags_nest_above_the_tag_space() {
+        assert_eq!(data_subtag(0), TAG_DATA, "k = 0 is the historical tag");
+        let subs: Vec<Tag> = (0..4).map(data_subtag).collect();
+        let mut s = subs.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), subs.len(), "distinct per parallel-link index");
+        // No subtag collides with a base protocol tag (k > 0 sets bits
+        // above bit 32; base tags live below 0x100).
+        for &t in &subs[1..] {
+            assert!(t > 0xFF, "{t:#x}");
+        }
     }
 }

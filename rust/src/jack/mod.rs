@@ -34,6 +34,7 @@
 
 pub mod async_comm;
 pub mod buffers;
+pub mod coalesce;
 pub mod comm;
 pub mod messages;
 pub mod norm;
@@ -48,6 +49,7 @@ pub use termination::async_conv;
 
 pub use async_comm::AsyncComm;
 pub use buffers::BufferSet;
+pub use coalesce::{CoalescePlan, LinkGroup};
 pub use comm::{
     AsyncConfig, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode, Ready,
     StepOutcome, Uninit, WithBuffers, WithResidual,

@@ -3,16 +3,27 @@
 //! `Recv` delivers exactly one pending message from **each** incoming
 //! neighbour and does not return until all have arrived (paper Algorithm
 //! 4); delivery is by address swap via [`super::buffers::BufferSet`].
-//! `Send` posts one message per outgoing link, staged through the
-//! transport's buffer pool ([`Transport::isend_copy`]): after warm-up the
-//! send path performs zero heap allocations. Under the overlapping scheme
+//! `Send` posts one message per outgoing **peer** (not per link): links
+//! sharing a destination are coalesced through a [`CoalescePlan`] into a
+//! single length-prefixed bundle per step (see [`super::coalesce`]),
+//! while single-link peers keep the plain per-link wire format — so on
+//! graphs without parallel links the traffic is unchanged. All sends
+//! stage through the transport's buffer pool: after warm-up the send
+//! path performs zero heap allocations. Under the overlapping scheme
 //! (Algorithm 2) the reception is effectively posted from the iteration
 //! start because the transport buffers arrivals continuously.
+//!
+//! [`SyncComm::set_coalesce`]`(false)` is the per-buffer ablation mode:
+//! one message per link on occurrence-indexed subtags
+//! ([`super::messages::data_subtag`]), measured against coalescing by
+//! the `halo_coalesce` bench series. Metrics count **wire** messages,
+//! so the two modes are directly comparable.
 
 use std::time::Duration;
 
 use super::buffers::BufferSet;
-use super::messages::TAG_DATA;
+use super::coalesce::{stage_packed, CoalescePlan};
+use super::messages::{TAG_DATA, TAG_DATA_PACKED};
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
@@ -26,6 +37,10 @@ pub struct SyncComm<T: Transport> {
     /// Requests of the most recent `send` (kept so the trivial scheme,
     /// Algorithm 1, can wait for send completion too).
     last_sends: Vec<T::SendHandle>,
+    /// Coalesce links per peer (default). `false` = per-buffer ablation.
+    coalesce: bool,
+    /// Peer grouping, derived lazily from the graph on first use.
+    plan: Option<CoalescePlan>,
 }
 
 impl<T: Transport> Default for SyncComm<T> {
@@ -33,6 +48,8 @@ impl<T: Transport> Default for SyncComm<T> {
         SyncComm {
             recv_timeout: None,
             last_sends: Vec::new(),
+            coalesce: true,
+            plan: None,
         }
     }
 }
@@ -42,9 +59,19 @@ impl<T: Transport> SyncComm<T> {
         self.recv_timeout.unwrap_or(Duration::from_secs(60))
     }
 
-    /// Send the current content of every send buffer to its neighbour
-    /// (pooled copy/widening: no allocation in steady state for any
-    /// [`Scalar`] width).
+    /// Toggle per-peer coalescing (both sides of a link must agree).
+    pub fn set_coalesce(&mut self, on: bool) {
+        self.coalesce = on;
+    }
+
+    pub fn coalesce(&self) -> bool {
+        self.coalesce
+    }
+
+    /// Send the current content of every send buffer (pooled
+    /// copy/widening: no allocation in steady state for any [`Scalar`]
+    /// width) — one wire message per peer when coalescing, per link in
+    /// ablation mode.
     pub fn send<S: Scalar>(
         &mut self,
         ep: &mut T,
@@ -52,11 +79,33 @@ impl<T: Transport> SyncComm<T> {
         bufs: &BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
-        self.last_sends.clear();
-        for (l, &dst) in graph.send_neighbors().iter().enumerate() {
-            self.last_sends
-                .push(ep.isend_scalars(dst, TAG_DATA, &bufs.send[l])?);
-            metrics.msgs_sent += 1;
+        if self.plan.is_none() {
+            self.plan = Some(CoalescePlan::new(graph));
+        }
+        let Self {
+            last_sends,
+            plan,
+            coalesce,
+            ..
+        } = self;
+        let plan = plan.as_ref().expect("plan built above");
+        last_sends.clear();
+        if *coalesce {
+            for g in plan.send_groups() {
+                let h = if let [l] = g.links[..] {
+                    ep.isend_scalars(g.peer, TAG_DATA, &bufs.send[l])?
+                } else {
+                    let msg = stage_packed(ep.pool(), &g.links, &bufs.send);
+                    ep.isend(g.peer, TAG_DATA_PACKED, msg)?
+                };
+                last_sends.push(h);
+                metrics.msgs_sent += 1;
+            }
+        } else {
+            for (l, &dst) in graph.send_neighbors().iter().enumerate() {
+                last_sends.push(ep.isend_scalars(dst, plan.send_subtag(l), &bufs.send[l])?);
+                metrics.msgs_sent += 1;
+            }
         }
         Ok(())
     }
@@ -70,7 +119,9 @@ impl<T: Transport> SyncComm<T> {
         }
     }
 
-    /// Blocking receive of one message per incoming link (Algorithm 4).
+    /// Blocking receive of one message per incoming peer — each either a
+    /// plain per-link payload (address-swapped, Algorithm 4) or a
+    /// coalesced bundle unpacked into its group's slots.
     pub fn recv<S: Scalar>(
         &mut self,
         ep: &mut T,
@@ -78,10 +129,28 @@ impl<T: Transport> SyncComm<T> {
         bufs: &mut BufferSet<S>,
         metrics: &mut RankMetrics,
     ) -> Result<()> {
-        for (l, &src) in graph.recv_neighbors().iter().enumerate() {
-            let data = ep.recv(src, TAG_DATA, Some(self.timeout()))?;
-            bufs.deliver(l, data)?;
-            metrics.msgs_delivered += 1;
+        if self.plan.is_none() {
+            self.plan = Some(CoalescePlan::new(graph));
+        }
+        let timeout = self.timeout();
+        let plan = self.plan.as_ref().expect("plan built above");
+        if self.coalesce {
+            for g in plan.recv_groups() {
+                if let [l] = g.links[..] {
+                    let data = ep.recv(g.peer, TAG_DATA, Some(timeout))?;
+                    bufs.deliver(l, data)?;
+                } else {
+                    let data = ep.recv(g.peer, TAG_DATA_PACKED, Some(timeout))?;
+                    bufs.deliver_packed(&g.links, data)?;
+                }
+                metrics.msgs_delivered += 1;
+            }
+        } else {
+            for (l, &src) in graph.recv_neighbors().iter().enumerate() {
+                let data = ep.recv(src, plan.recv_subtag(l), Some(timeout))?;
+                bufs.deliver(l, data)?;
+                metrics.msgs_delivered += 1;
+            }
         }
         Ok(())
     }
@@ -132,6 +201,48 @@ mod tests {
             let m = h.join().unwrap();
             assert_eq!(m.msgs_sent, 6); // 2 neighbours x 3 iters
             assert_eq!(m.msgs_delivered, 6);
+        }
+    }
+
+    /// Parallel links to one peer: coalescing sends one bundle per step
+    /// and delivers the same buffer contents as per-buffer mode.
+    #[test]
+    fn parallel_links_coalesce_to_one_message_per_peer() {
+        for coalesce in [true, false] {
+            let graphs = [
+                CommGraph::new(0, vec![1, 1], vec![1, 1]).unwrap(),
+                CommGraph::new(1, vec![0, 0], vec![0, 0]).unwrap(),
+            ];
+            let (_w, eps) =
+                World::new(WorldConfig::homogeneous(2).with_network(NetworkModel::instant()));
+            let handles: Vec<_> = eps
+                .into_iter()
+                .zip(graphs)
+                .map(|(mut ep, g)| {
+                    thread::spawn(move || {
+                        let mut comm = SyncComm::default();
+                        comm.set_coalesce(coalesce);
+                        let mut bufs = BufferSet::<f64>::new(&[2, 3], &[2, 3]).unwrap();
+                        let mut m = RankMetrics::default();
+                        let r = ep.rank() as f64;
+                        bufs.send[0].copy_from_slice(&[10.0 + r, 11.0 + r]);
+                        bufs.send[1].copy_from_slice(&[20.0 + r, 21.0 + r, 22.0 + r]);
+                        comm.send(&mut ep, &g, &bufs, &mut m).unwrap();
+                        comm.recv(&mut ep, &g, &mut bufs, &mut m).unwrap();
+                        (m, bufs.recv.clone())
+                    })
+                })
+                .collect();
+            for (rank, h) in handles.into_iter().enumerate() {
+                let (m, recv) = h.join().unwrap();
+                let want_wire = if coalesce { 1 } else { 2 };
+                assert_eq!(m.msgs_sent, want_wire, "coalesce={coalesce}");
+                assert_eq!(m.msgs_delivered, want_wire);
+                // Link k carries the peer's link-k buffer either way.
+                let peer = 1.0 - rank as f64;
+                assert_eq!(recv[0], vec![10.0 + peer, 11.0 + peer]);
+                assert_eq!(recv[1], vec![20.0 + peer, 21.0 + peer, 22.0 + peer]);
+            }
         }
     }
 }

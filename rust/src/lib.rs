@@ -72,6 +72,26 @@
 //! * **[`metrics`]** — counters and event traces used by the experiment
 //!   harnesses in `rust/benches/` and `examples/`.
 //!
+//! # Hot path
+//!
+//! The per-iteration floor — the thing the paper's "low overhead" claim
+//! lives or dies on — is set by three paths, each optimized, measured by
+//! a dedicated `BENCH_comm_micro.json` series, and regression-gated in
+//! CI (same pattern as the original pooled-vs-clone gate):
+//!
+//! | path | optimization | bench series |
+//! |------|--------------|--------------|
+//! | stencil sweep | [`simd`]: branchless row kernels with runtime `SimdLevel` dispatch (portable autovectorization + AVX2), scalar loop kept as oracle | `stencil_simd` |
+//! | shm arrival signalling | [`transport::wake::WakeSignal`]: atomic seqcount + parked-thread wake replaces `Mutex`+`Condvar` on every `recv`/`wait_any`/ring push | `shm_wakeup` |
+//! | halo exchange | [`jack::coalesce::CoalescePlan`]: all buffers bound for the same peer ride one length-prefixed pooled message per step | `halo_coalesce` |
+//!
+//! To add a future hot-path optimization behind the same gate: emit a
+//! before/after series from `benches/comm_micro.rs` (both variants
+//! measured in the *same* process so the comparison is fair), then
+//! extend the bench-JSON gate in `.github/workflows/ci.yml` to require
+//! the series and bound its regression. A series that CI does not
+//! require is a demo, not an optimization.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -86,6 +106,7 @@ pub mod prelude;
 pub mod problem;
 pub mod runtime;
 pub mod scalar;
+pub mod simd;
 pub mod simmpi;
 pub mod solver;
 pub mod transport;

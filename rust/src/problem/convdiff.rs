@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 
 use super::partition::{assemble_blocks, SubDomain};
-use super::{extract_face, idx3, Face, Partition3D, Problem, ProblemWorker};
+use super::{extract_face, for_each_cell, Face, Partition3D, Problem, ProblemWorker};
 use crate::config::{Backend, ExperimentConfig};
 use crate::error::Result;
 use crate::graph::CommGraph;
@@ -91,19 +91,10 @@ impl ConvDiff {
     pub fn rhs_block(&self, sub: &SubDomain, u_prev: &[f64]) -> Vec<f64> {
         let (nx, ny, nz) = sub.dims;
         debug_assert_eq!(u_prev.len(), nx * ny * nz);
-        let h = self.h();
         let mut rhs = vec![0.0; u_prev.len()];
-        for ix in 0..nx {
-            let x = (sub.lo.0 + ix + 1) as f64 * h;
-            for iy in 0..ny {
-                let y = (sub.lo.1 + iy + 1) as f64 * h;
-                for iz in 0..nz {
-                    let z = (sub.lo.2 + iz + 1) as f64 * h;
-                    let i = idx3(sub.dims, ix, iy, iz);
-                    rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
-                }
-            }
-        }
+        for_each_cell(sub.dims, sub.lo, self.h(), |i, _, (x, y, z)| {
+            rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
+        });
         rhs
     }
 
@@ -113,55 +104,41 @@ impl ConvDiff {
         debug_assert_eq!(u.len(), n * n * n);
         let c = self.coeffs();
         let dims = (n, n, n);
+        // Neighbour strides in the row-major `idx3` layout.
+        let (sx, sy, sz) = (n * n, n, 1usize);
         let mut out = vec![0.0; u.len()];
-        for ix in 0..n {
-            for iy in 0..n {
-                for iz in 0..n {
-                    let mut acc = c[0] * u[idx3(dims, ix, iy, iz)];
-                    if ix > 0 {
-                        acc += c[1] * u[idx3(dims, ix - 1, iy, iz)];
-                    }
-                    if ix + 1 < n {
-                        acc += c[2] * u[idx3(dims, ix + 1, iy, iz)];
-                    }
-                    if iy > 0 {
-                        acc += c[3] * u[idx3(dims, ix, iy - 1, iz)];
-                    }
-                    if iy + 1 < n {
-                        acc += c[4] * u[idx3(dims, ix, iy + 1, iz)];
-                    }
-                    if iz > 0 {
-                        acc += c[5] * u[idx3(dims, ix, iy, iz - 1)];
-                    }
-                    if iz + 1 < n {
-                        acc += c[6] * u[idx3(dims, ix, iy, iz + 1)];
-                    }
-                    out[idx3(dims, ix, iy, iz)] = acc;
-                }
+        for_each_cell(dims, (0, 0, 0), self.h(), |i, (ix, iy, iz), _| {
+            let mut acc = c[0] * u[i];
+            if ix > 0 {
+                acc += c[1] * u[i - sx];
             }
-        }
+            if ix + 1 < n {
+                acc += c[2] * u[i + sx];
+            }
+            if iy > 0 {
+                acc += c[3] * u[i - sy];
+            }
+            if iy + 1 < n {
+                acc += c[4] * u[i + sy];
+            }
+            if iz > 0 {
+                acc += c[5] * u[i - sz];
+            }
+            if iz + 1 < n {
+                acc += c[6] * u[i + sz];
+            }
+            out[i] = acc;
+        });
         out
     }
 
     /// Global RHS for a previous-step solution (verification oracle).
     pub fn rhs_global(&self, u_prev: &[f64]) -> Vec<f64> {
         let n = self.n;
-        let h = self.h();
-        let dims = (n, n, n);
         let mut rhs = vec![0.0; n * n * n];
-        for ix in 0..n {
-            for iy in 0..n {
-                for iz in 0..n {
-                    let (x, y, z) = (
-                        (ix + 1) as f64 * h,
-                        (iy + 1) as f64 * h,
-                        (iz + 1) as f64 * h,
-                    );
-                    let i = idx3(dims, ix, iy, iz);
-                    rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
-                }
-            }
-        }
+        for_each_cell((n, n, n), (0, 0, 0), self.h(), |i, _, (x, y, z)| {
+            rhs[i] = u_prev[i] / self.dt + self.source(x, y, z);
+        });
         rhs
     }
 
@@ -403,19 +380,10 @@ impl<S: Scalar> ProblemWorker<S> for ConvDiffWorker<S> {
         // narrowed once into the payload-width RHS block.
         let (nx, ny, nz) = self.sub.dims;
         debug_assert_eq!(prev.len(), nx * ny * nz);
-        let h = self.op.h();
-        for ix in 0..nx {
-            let x = (self.sub.lo.0 + ix + 1) as f64 * h;
-            for iy in 0..ny {
-                let y = (self.sub.lo.1 + iy + 1) as f64 * h;
-                for iz in 0..nz {
-                    let z = (self.sub.lo.2 + iz + 1) as f64 * h;
-                    let i = idx3(self.sub.dims, ix, iy, iz);
-                    self.rhs[i] =
-                        S::from_f64(prev[i].to_f64() / self.op.dt + self.op.source(x, y, z));
-                }
-            }
-        }
+        let (op, rhs) = (&self.op, &mut self.rhs);
+        for_each_cell(self.sub.dims, self.sub.lo, op.h(), |i, _, (x, y, z)| {
+            rhs[i] = S::from_f64(prev[i].to_f64() / op.dt + op.source(x, y, z));
+        });
         Ok(())
     }
 
@@ -452,7 +420,7 @@ impl<S: Scalar> ProblemWorker<S> for ConvDiffWorker<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::problem::Partition3D;
+    use crate::problem::{idx3, Partition3D};
 
     #[test]
     fn coeffs_match_paper_construction() {

@@ -26,6 +26,7 @@ use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::jack::ComputeView;
 use crate::scalar::Scalar;
+use crate::simd::{self, SimdLevel};
 
 /// Source term s(x): one definition shared by the global verification
 /// oracle ([`Jacobi1D::source`] → `rhs_global`) and the per-rank workers
@@ -172,6 +173,7 @@ impl<S: Scalar> Problem<S> for Jacobi1D {
                     scratch: vec![S::ZERO; len],
                     left_link,
                     right_link,
+                    simd: SimdLevel::detect(),
                 }
             })
             .collect())
@@ -216,9 +218,17 @@ pub struct JacobiWorker<S: Scalar> {
     scratch: Vec<S>,
     left_link: Option<usize>,
     right_link: Option<usize>,
+    simd: SimdLevel,
 }
 
 impl<S: Scalar> JacobiWorker<S> {
+    /// Pin the sweep kernel (`SimdLevel::Scalar` keeps the branchy
+    /// reference loop below as the oracle; the default is
+    /// [`SimdLevel::detect`]). Used by equivalence tests and benches.
+    pub fn set_simd(&mut self, level: SimdLevel) {
+        self.simd = level.effective();
+    }
+
     fn publish_boundary(&self, sol: &[S], send: &mut [Vec<S>]) {
         if let Some(l) = self.left_link {
             send[l][0] = sol[0];
@@ -262,12 +272,29 @@ impl<S: Scalar> ProblemWorker<S> for JacobiWorker<S> {
         let right = self.right_link.map(|l| v.recv[l][0]).unwrap_or(S::ZERO);
         // Frozen-halo block relaxation, like the stencil backends' sweep_k.
         for _ in 0..inner_sweeps.max(1) {
-            for i in 0..self.len {
-                let lv = if i == 0 { left } else { v.sol[i - 1] };
-                let rv = if i + 1 == self.len { right } else { v.sol[i + 1] };
-                let u_star = (self.rhs[i] + self.co * (lv + rv)) * self.inv_cd;
-                v.res[i] = self.cd * (u_star - v.sol[i]);
-                self.scratch[i] = u_star;
+            match self.simd {
+                SimdLevel::Scalar => {
+                    // Reference loop: branch on the boundary per point.
+                    for i in 0..self.len {
+                        let lv = if i == 0 { left } else { v.sol[i - 1] };
+                        let rv = if i + 1 == self.len { right } else { v.sol[i + 1] };
+                        let u_star = (self.rhs[i] + self.co * (lv + rv)) * self.inv_cd;
+                        v.res[i] = self.cd * (u_star - v.sol[i]);
+                        self.scratch[i] = u_star;
+                    }
+                }
+                level => simd::chain_sweep(
+                    level,
+                    v.sol.as_slice(),
+                    left,
+                    right,
+                    &self.rhs,
+                    self.cd,
+                    self.co,
+                    self.inv_cd,
+                    self.scratch.as_mut_slice(),
+                    v.res.as_mut_slice(),
+                ),
             }
             std::mem::swap(v.sol, &mut self.scratch);
         }

@@ -192,6 +192,35 @@ pub fn idx3(dims: (usize, usize, usize), ix: usize, iy: usize, iz: usize) -> usi
     (ix * dims.1 + iy) * dims.2 + iz
 }
 
+/// Visit every cell of a block in [`idx3`] (row-major) order, handing the
+/// callback the linear index, the local grid coordinates and the physical
+/// coordinates `x = (lo + i + 1)·h` per axis. This is the single source
+/// of truth for the block layout: the per-rank RHS builders, the global
+/// oracles and the sweep kernels all linearize through it, so the SIMD
+/// kernels cannot drift from the layout the oracles verify against.
+#[inline]
+pub fn for_each_cell(
+    dims: (usize, usize, usize),
+    lo: (usize, usize, usize),
+    h: f64,
+    mut f: impl FnMut(usize, (usize, usize, usize), (f64, f64, f64)),
+) {
+    let (nx, ny, nz) = dims;
+    let mut i = 0usize;
+    for ix in 0..nx {
+        let x = (lo.0 + ix + 1) as f64 * h;
+        for iy in 0..ny {
+            let y = (lo.1 + iy + 1) as f64 * h;
+            for iz in 0..nz {
+                let z = (lo.2 + iz + 1) as f64 * h;
+                debug_assert_eq!(i, idx3(dims, ix, iy, iz));
+                f(i, (ix, iy, iz), (x, y, z));
+                i += 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +244,22 @@ mod tests {
         assert_eq!(idx3(dims, 0, 1, 0), 4);
         assert_eq!(idx3(dims, 1, 0, 0), 12);
         assert_eq!(idx3(dims, 1, 2, 3), 23);
+    }
+
+    #[test]
+    fn for_each_cell_agrees_with_idx3() {
+        let dims = (2, 3, 4);
+        let lo = (5, 0, 7);
+        let h = 0.125;
+        let mut seen = 0usize;
+        for_each_cell(dims, lo, h, |i, (ix, iy, iz), (x, y, z)| {
+            assert_eq!(i, idx3(dims, ix, iy, iz));
+            assert_eq!(i, seen, "row-major visit order");
+            assert_eq!(x, (lo.0 + ix + 1) as f64 * h);
+            assert_eq!(y, (lo.1 + iy + 1) as f64 * h);
+            assert_eq!(z, (lo.2 + iz + 1) as f64 * h);
+            seen += 1;
+        });
+        assert_eq!(seen, 24);
     }
 }

@@ -1,0 +1,458 @@
+//! Runtime SIMD dispatch for the stencil hot path (ISSUE 6 tentpole a).
+//!
+//! The per-iteration floor of every solve is the sweep kernel, and the
+//! reference kernels ([`crate::solver::NativeBackend`]'s 7-point stencil,
+//! [`crate::problem::Jacobi1D`]'s chain sweep) branch on the halo
+//! boundary at *every* grid point, which defeats vectorization. This
+//! module holds the vector-friendly rewrites and the dispatch machinery:
+//!
+//! * **Kernel shape.** Each (ix, iy) row of a block is swept as three
+//!   z-regions — the `iz = 0` boundary cell, the branchless interior
+//!   `1..nz-1`, and the `iz = nz-1` boundary cell. In the interior every
+//!   neighbour value comes from a contiguous equal-length slice (the x/y
+//!   neighbours are whole adjacent rows or halo-face rows; the z
+//!   neighbours are the row itself shifted by ±1), so the loop body is
+//!   pure independent element-wise arithmetic that LLVM autovectorizes
+//!   at whatever lane width the target allows — 2×f64/4×f32 at the
+//!   x86-64 SSE2 baseline, 4×f64/8×f32 under AVX2.
+//! * **Dispatch.** [`SimdLevel`] selects the kernel once per backend
+//!   construction: `Scalar` keeps the branchy reference loop (the
+//!   oracle the equivalence tests compare against), `Portable` runs the
+//!   row kernels compiled for the baseline target, and `Avx2` runs the
+//!   *same* generic kernels monomorphized inside a
+//!   `#[target_feature(enable = "avx2")]` entry point (the pulp-style
+//!   idiom: a thin unsafe wrapper re-compiles the `#[inline(always)]`
+//!   body with wider lanes). [`SimdLevel::detect`] caches the runtime
+//!   CPUID probe; [`SimdLevel::effective`] clamps a requested level to
+//!   what the host supports, so `Avx2` can never be entered unchecked.
+//! * **Exactness.** FMA is deliberately *not* enabled: Rust never
+//!   contracts `a * b + c` on its own, so the vector kernels perform the
+//!   exact IEEE operation sequence of the scalar reference per element —
+//!   `f64` results are bitwise identical across all three levels
+//!   (enforced by `rust/tests/simd_sweep.rs`), and remainder lanes and
+//!   halo-boundary rows take the same expressions as the interior.
+//!
+//! Measured by the `stencil_simd` series of `benches/comm_micro.rs`
+//! (gated ≥ 1.0× in CI); see the "hot path" notes in `lib.rs`.
+
+use std::sync::OnceLock;
+
+use crate::scalar::Scalar;
+
+/// Which sweep kernel a compute backend runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Branchy per-point reference loop — the verification oracle.
+    Scalar,
+    /// Branchless row kernels at the baseline target (autovectorized).
+    Portable,
+    /// The row kernels monomorphized under `#[target_feature(avx2)]`.
+    Avx2,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+impl SimdLevel {
+    /// The best level this host supports (cached CPUID probe): `Avx2`
+    /// where available, otherwise `Portable`. Never returns `Scalar` —
+    /// the reference loop is an oracle, not a deployment target.
+    pub fn detect() -> SimdLevel {
+        static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if avx2_supported() {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Portable
+            }
+        })
+    }
+
+    /// Clamp a requested level to what this host can actually execute
+    /// (`Avx2` degrades to `Portable` when the CPU lacks it). Dispatch
+    /// goes through this, so an over-eager request is safe, not UB.
+    pub fn effective(self) -> SimdLevel {
+        match self {
+            SimdLevel::Avx2 if !avx2_supported() => SimdLevel::Portable,
+            l => l,
+        }
+    }
+
+    /// Report name ("scalar" / "portable" / "avx2").
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Portable => "portable",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 7-point stencil block sweep (NativeBackend / ConvDiff)
+// ---------------------------------------------------------------------
+
+/// One row of the weighted-Jacobi stencil sweep. All neighbour slices
+/// have the row's length; the z-boundary cells use the halo scalars.
+/// The expression order matches the scalar reference exactly (bitwise
+/// `f64` equality depends on it).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn stencil_row<S: Scalar>(
+    u: &[S],
+    vxm: &[S],
+    vxp: &[S],
+    vym: &[S],
+    vyp: &[S],
+    zm: S,
+    zp: S,
+    rhs: &[S],
+    out: &mut [S],
+    res: &mut [S],
+    c: &[S; 8],
+    inv_cd: S,
+) {
+    let nz = u.len();
+    debug_assert!(
+        vxm.len() == nz
+            && vxp.len() == nz
+            && vym.len() == nz
+            && vyp.len() == nz
+            && rhs.len() == nz
+            && out.len() == nz
+            && res.len() == nz
+    );
+    if nz == 0 {
+        return;
+    }
+    let [c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega] = *c;
+    // iz = 0: z-minus neighbour is the halo plane.
+    {
+        let vzm = zm;
+        let vzp = if nz > 1 { u[1] } else { zp };
+        let neigh = c_xm * vxm[0] + c_xp * vxp[0] + c_ym * vym[0] + c_yp * vyp[0] + c_zm * vzm
+            + c_zp * vzp;
+        let u_star = (rhs[0] - neigh) * inv_cd;
+        let d = u_star - u[0];
+        res[0] = c_d * d;
+        out[0] = u[0] + omega * d;
+    }
+    // Branchless interior: every operand is a contiguous slice element.
+    for iz in 1..nz.saturating_sub(1) {
+        let vzm = u[iz - 1];
+        let vzp = u[iz + 1];
+        let neigh = c_xm * vxm[iz] + c_xp * vxp[iz] + c_ym * vym[iz] + c_yp * vyp[iz] + c_zm * vzm
+            + c_zp * vzp;
+        let u_star = (rhs[iz] - neigh) * inv_cd;
+        let d = u_star - u[iz];
+        res[iz] = c_d * d;
+        out[iz] = u[iz] + omega * d;
+    }
+    // iz = nz-1: z-plus neighbour is the halo plane.
+    if nz > 1 {
+        let l = nz - 1;
+        let vzm = u[l - 1];
+        let vzp = zp;
+        let neigh = c_xm * vxm[l] + c_xp * vxp[l] + c_ym * vym[l] + c_yp * vyp[l] + c_zm * vzm
+            + c_zp * vzp;
+        let u_star = (rhs[l] - neigh) * inv_cd;
+        let d = u_star - u[l];
+        res[l] = c_d * d;
+        out[l] = u[l] + omega * d;
+    }
+}
+
+/// Full-block row-decomposed sweep: `out ← u + ω((rhs − Σc·n)/c_d − u)`,
+/// `res ← c_d·((rhs − Σc·n)/c_d − u)`. Faces are the six halo planes in
+/// [`crate::problem::Face`] order, sized `ny·nz`/`nx·nz`/`nx·ny` per
+/// axis pair, exactly as [`crate::solver::NativeBackend`] receives them.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn stencil_block<S: Scalar>(
+    dims: (usize, usize, usize),
+    u: &[S],
+    faces: [&[S]; 6],
+    rhs: &[S],
+    coeffs: &[S; 8],
+    out: &mut [S],
+    res: &mut [S],
+) {
+    let (nx, ny, nz) = dims;
+    debug_assert_eq!(u.len(), nx * ny * nz);
+    let (xm, xp, ym, yp, zm, zp) = (faces[0], faces[1], faces[2], faces[3], faces[4], faces[5]);
+    let inv_cd = S::from_f64(1.0) / coeffs[0];
+    let sx = ny * nz;
+    for ix in 0..nx {
+        for iy in 0..ny {
+            let base = (ix * ny + iy) * nz;
+            let u_row = &u[base..base + nz];
+            let vxm = if ix > 0 {
+                &u[base - sx..base - sx + nz]
+            } else {
+                &xm[iy * nz..iy * nz + nz]
+            };
+            let vxp = if ix + 1 < nx {
+                &u[base + sx..base + sx + nz]
+            } else {
+                &xp[iy * nz..iy * nz + nz]
+            };
+            let vym = if iy > 0 {
+                &u[base - nz..base]
+            } else {
+                &ym[ix * nz..ix * nz + nz]
+            };
+            let vyp = if iy + 1 < ny {
+                &u[base + nz..base + 2 * nz]
+            } else {
+                &yp[ix * nz..ix * nz + nz]
+            };
+            stencil_row(
+                u_row,
+                vxm,
+                vxp,
+                vym,
+                vyp,
+                zm[ix * ny + iy],
+                zp[ix * ny + iy],
+                &rhs[base..base + nz],
+                &mut out[base..base + nz],
+                &mut res[base..base + nz],
+                coeffs,
+                inv_cd,
+            );
+        }
+    }
+}
+
+/// `stencil_block` monomorphized with AVX2 codegen enabled. Plain
+/// re-entry into the `#[inline(always)]` body: the attribute recompiles
+/// it (and everything it inlines) with 256-bit lanes available.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// ([`SimdLevel::effective`] does).
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn stencil_block_avx2<S: Scalar>(
+    dims: (usize, usize, usize),
+    u: &[S],
+    faces: [&[S]; 6],
+    rhs: &[S],
+    coeffs: &[S; 8],
+    out: &mut [S],
+    res: &mut [S],
+) {
+    stencil_block(dims, u, faces, rhs, coeffs, out, res);
+}
+
+/// Dispatch one stencil block sweep at `level` (`Scalar` callers keep
+/// their own reference loop; here it runs the portable kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn stencil_sweep<S: Scalar>(
+    level: SimdLevel,
+    dims: (usize, usize, usize),
+    u: &[S],
+    faces: [&[S]; 6],
+    rhs: &[S],
+    coeffs: &[S; 8],
+    out: &mut [S],
+    res: &mut [S],
+) {
+    match level.effective() {
+        SimdLevel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `effective()` only yields Avx2 after runtime
+            // detection confirmed the feature.
+            unsafe {
+                stencil_block_avx2(dims, u, faces, rhs, coeffs, out, res)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            stencil_block(dims, u, faces, rhs, coeffs, out, res);
+        }
+        _ => stencil_block(dims, u, faces, rhs, coeffs, out, res),
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1-D chain sweep (Jacobi1D)
+// ---------------------------------------------------------------------
+
+/// One frozen-halo chain sweep: `out[i] = (rhs[i] + c_o·(u[i−1] +
+/// u[i+1]))/c_d`, `res[i] = c_d·(out[i] − u[i])`, with `left`/`right`
+/// standing in for the halo values at the block ends. Same three-region
+/// split (and the same expression order) as the stencil rows.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn chain_cells<S: Scalar>(
+    u: &[S],
+    left: S,
+    right: S,
+    rhs: &[S],
+    cd: S,
+    co: S,
+    inv_cd: S,
+    out: &mut [S],
+    res: &mut [S],
+) {
+    let n = u.len();
+    debug_assert!(rhs.len() == n && out.len() == n && res.len() == n);
+    if n == 0 {
+        return;
+    }
+    {
+        let lv = left;
+        let rv = if n > 1 { u[1] } else { right };
+        let u_star = (rhs[0] + co * (lv + rv)) * inv_cd;
+        res[0] = cd * (u_star - u[0]);
+        out[0] = u_star;
+    }
+    for i in 1..n.saturating_sub(1) {
+        let u_star = (rhs[i] + co * (u[i - 1] + u[i + 1])) * inv_cd;
+        res[i] = cd * (u_star - u[i]);
+        out[i] = u_star;
+    }
+    if n > 1 {
+        let l = n - 1;
+        let u_star = (rhs[l] + co * (u[l - 1] + right)) * inv_cd;
+        res[l] = cd * (u_star - u[l]);
+        out[l] = u_star;
+    }
+}
+
+/// `chain_cells` under AVX2 codegen — see [`stencil_block_avx2`].
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn chain_cells_avx2<S: Scalar>(
+    u: &[S],
+    left: S,
+    right: S,
+    rhs: &[S],
+    cd: S,
+    co: S,
+    inv_cd: S,
+    out: &mut [S],
+    res: &mut [S],
+) {
+    chain_cells(u, left, right, rhs, cd, co, inv_cd, out, res);
+}
+
+/// Dispatch one chain sweep at `level`.
+#[allow(clippy::too_many_arguments)]
+pub fn chain_sweep<S: Scalar>(
+    level: SimdLevel,
+    u: &[S],
+    left: S,
+    right: S,
+    rhs: &[S],
+    cd: S,
+    co: S,
+    inv_cd: S,
+    out: &mut [S],
+    res: &mut [S],
+) {
+    match level.effective() {
+        SimdLevel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `effective()` only yields Avx2 after runtime
+            // detection confirmed the feature.
+            unsafe {
+                chain_cells_avx2(u, left, right, rhs, cd, co, inv_cd, out, res)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            chain_cells(u, left, right, rhs, cd, co, inv_cd, out, res);
+        }
+        _ => chain_cells(u, left, right, rhs, cd, co, inv_cd, out, res),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_deployable_and_stable() {
+        let l = SimdLevel::detect();
+        assert_ne!(l, SimdLevel::Scalar, "detect never picks the oracle");
+        assert_eq!(l, SimdLevel::detect(), "cached probe is stable");
+        assert_eq!(l.effective(), l, "detected level must be executable");
+    }
+
+    #[test]
+    fn effective_clamps_only_unsupported_avx2() {
+        assert_eq!(SimdLevel::Scalar.effective(), SimdLevel::Scalar);
+        assert_eq!(SimdLevel::Portable.effective(), SimdLevel::Portable);
+        let eff = SimdLevel::Avx2.effective();
+        assert!(eff == SimdLevel::Avx2 || eff == SimdLevel::Portable);
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let names = [
+            SimdLevel::Scalar.name(),
+            SimdLevel::Portable.name(),
+            SimdLevel::Avx2.name(),
+        ];
+        assert_eq!(names, ["scalar", "portable", "avx2"]);
+    }
+
+    /// A 1×1×1 block is all boundary: every neighbour comes from a halo
+    /// plane and both kernels must agree with the hand computation.
+    #[test]
+    fn single_cell_block_uses_all_halos() {
+        let coeffs = [8.0f64, -1.0, -1.0, -1.0, -1.0, -1.0, -1.0, 1.0];
+        let faces_v: Vec<Vec<f64>> = (0..6).map(|f| vec![(f + 1) as f64]).collect();
+        let faces: [&[f64]; 6] = std::array::from_fn(|f| faces_v[f].as_slice());
+        let u = [2.0f64];
+        let rhs = [10.0f64];
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let mut out = [0.0f64];
+            let mut res = [0.0f64];
+            stencil_sweep(level, (1, 1, 1), &u, faces, &rhs, &coeffs, &mut out, &mut res);
+            // neigh = -(1+2+3+4+5+6) = -21; u* = (10+21)/8 = 3.875
+            assert_eq!(out[0], 3.875, "{level:?}");
+            assert_eq!(res[0], 8.0 * (3.875 - 2.0), "{level:?}");
+        }
+    }
+
+    /// Chain ends: n = 1 uses both halo scalars; n = 2 has no interior.
+    #[test]
+    fn chain_end_cells_use_halos() {
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let mut out = [0.0f64];
+            let mut res = [0.0f64];
+            chain_cells(&[1.0], 3.0, 5.0, &[4.0], 2.0, 1.0, 0.5, &mut out, &mut res);
+            // u* = (4 + 1·(3+5)) / 2 = 6
+            assert_eq!(out[0], 6.0, "{level:?}");
+            assert_eq!(res[0], 2.0 * (6.0 - 1.0), "{level:?}");
+
+            let mut out2 = [0.0f64; 2];
+            let mut res2 = [0.0f64; 2];
+            chain_sweep(
+                level,
+                &[1.0, 2.0],
+                3.0,
+                5.0,
+                &[4.0, 4.0],
+                2.0,
+                1.0,
+                0.5,
+                &mut out2,
+                &mut res2,
+            );
+            assert_eq!(out2[0], (4.0 + (3.0 + 2.0)) * 0.5, "{level:?}");
+            assert_eq!(out2[1], (4.0 + (1.0 + 5.0)) * 0.5, "{level:?}");
+        }
+    }
+}

@@ -3,24 +3,48 @@
 //! the cross-check for the XLA backend. Generic over the payload
 //! [`Scalar`] width — an `f32` instantiation computes in `f32` end to
 //! end (true mixed precision, not an up-cast).
+//!
+//! The sweep dispatches through [`SimdLevel`] (see [`crate::simd`]): by
+//! default it runs the branchless vector-friendly row kernels at the best
+//! level the host supports; [`NativeBackend::with_simd`] pins a level —
+//! `SimdLevel::Scalar` keeps the original branchy per-point loop, which
+//! stays in this file as the verification oracle. All levels produce
+//! bitwise-identical `f64` results (the kernels share one expression
+//! order and FMA contraction is never enabled).
 
 use super::backend::ComputeBackend;
 use crate::error::{Error, Result};
 use crate::problem::idx3;
 use crate::scalar::Scalar;
+use crate::simd::{self, SimdLevel};
 
 /// Allocation-free (after construction) native sweep at width `S`.
 pub struct NativeBackend<S: Scalar = f64> {
     dims: (usize, usize, usize),
     scratch: Vec<S>,
+    simd: SimdLevel,
 }
 
 impl<S: Scalar> NativeBackend<S> {
+    /// Backend at the best SIMD level the host supports.
     pub fn new(dims: (usize, usize, usize)) -> Self {
+        Self::with_simd(dims, SimdLevel::detect())
+    }
+
+    /// Backend pinned to a specific kernel (clamped to what the host can
+    /// run). Used by the equivalence tests and the `stencil_simd` bench;
+    /// production paths go through [`NativeBackend::new`].
+    pub fn with_simd(dims: (usize, usize, usize), level: SimdLevel) -> Self {
         NativeBackend {
             dims,
             scratch: vec![S::ZERO; dims.0 * dims.1 * dims.2],
+            simd: level.effective(),
         }
+    }
+
+    /// The kernel this backend actually runs.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
     }
 }
 
@@ -47,37 +71,43 @@ impl<S: Scalar> ComputeBackend<S> for NativeBackend<S> {
                 res.len()
             )));
         }
-        let [c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega] = *coeffs;
         let (xm, xp, ym, yp, zm, zp) = (faces[0], faces[1], faces[2], faces[3], faces[4], faces[5]);
         debug_assert_eq!(xm.len(), ny * nz);
         debug_assert_eq!(ym.len(), nx * nz);
         debug_assert_eq!(zm.len(), nx * ny);
 
         let out = &mut self.scratch;
-        let inv_cd = S::from_f64(1.0) / c_d;
-        for ix in 0..nx {
-            for iy in 0..ny {
-                let row = idx3((nx, ny, nz), ix, iy, 0);
-                for iz in 0..nz {
-                    let i = row + iz;
-                    let vxm = if ix > 0 { u[i - ny * nz] } else { xm[iy * nz + iz] };
-                    let vxp = if ix + 1 < nx { u[i + ny * nz] } else { xp[iy * nz + iz] };
-                    let vym = if iy > 0 { u[i - nz] } else { ym[ix * nz + iz] };
-                    let vyp = if iy + 1 < ny { u[i + nz] } else { yp[ix * nz + iz] };
-                    let vzm = if iz > 0 { u[i - 1] } else { zm[ix * ny + iy] };
-                    let vzp = if iz + 1 < nz { u[i + 1] } else { zp[ix * ny + iy] };
-                    let neigh = c_xm * vxm
-                        + c_xp * vxp
-                        + c_ym * vym
-                        + c_yp * vyp
-                        + c_zm * vzm
-                        + c_zp * vzp;
-                    let u_star = (rhs[i] - neigh) * inv_cd;
-                    let d = u_star - u[i];
-                    res[i] = c_d * d;
-                    out[i] = u[i] + omega * d;
+        match self.simd {
+            SimdLevel::Scalar => {
+                // Reference loop: branch on the halo boundary per point.
+                let [c_d, c_xm, c_xp, c_ym, c_yp, c_zm, c_zp, omega] = *coeffs;
+                let inv_cd = S::from_f64(1.0) / c_d;
+                for ix in 0..nx {
+                    for iy in 0..ny {
+                        let row = idx3((nx, ny, nz), ix, iy, 0);
+                        for iz in 0..nz {
+                            let i = row + iz;
+                            let vxm = if ix > 0 { u[i - ny * nz] } else { xm[iy * nz + iz] };
+                            let vxp = if ix + 1 < nx { u[i + ny * nz] } else { xp[iy * nz + iz] };
+                            let vym = if iy > 0 { u[i - nz] } else { ym[ix * nz + iz] };
+                            let vyp = if iy + 1 < ny { u[i + nz] } else { yp[ix * nz + iz] };
+                            let vzm = if iz > 0 { u[i - 1] } else { zm[ix * ny + iy] };
+                            let vzp = if iz + 1 < nz { u[i + 1] } else { zp[ix * ny + iy] };
+                            let neigh = c_xm * vxm
+                                + c_xp * vxp
+                                + c_ym * vym
+                                + c_yp * vyp
+                                + c_zm * vzm
+                                + c_zp * vzp;
+                            let u_star = (rhs[i] - neigh) * inv_cd;
+                            let d = u_star - u[i];
+                            res[i] = c_d * d;
+                            out[i] = u[i] + omega * d;
+                        }
+                    }
                 }
             }
+            level => simd::stencil_sweep(level, self.dims, u, faces, rhs, coeffs, out, res),
         }
         std::mem::swap(u, out);
         Ok(())

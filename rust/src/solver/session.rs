@@ -443,6 +443,7 @@ where
             threshold: cfg.threshold,
             send_discard: cfg.send_discard,
             termination: cfg.termination,
+            ..AsyncConfig::default()
         })?
     } else {
         session.build_sync()

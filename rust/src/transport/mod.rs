@@ -51,17 +51,20 @@
 //! Two implementations ship: [`crate::simmpi::Endpoint`] (the default —
 //! a simulated MPI world with a configurable network model) and
 //! [`shm::ShmEndpoint`] (a real shared-memory backend: one bounded
-//! lock-free SPSC ring per directed link, with backpressure surfaced
+//! lock-free SPSC ring per directed link, arrival wakeups through the
+//! atomic [`wake::WakeSignal`] parking primitive, backpressure surfaced
 //! through its send handles). Candidate next backends: a real MPI
 //! binding, RDMA.
 
 pub mod msgbuf;
 pub mod pool;
 pub mod shm;
+pub mod wake;
 
 pub use msgbuf::MsgBuf;
 pub use pool::{BufferPool, PoolStats};
 pub use shm::{ShmConfig, ShmEndpoint, ShmSendHandle, ShmWorld};
+pub use wake::WakeSignal;
 
 use std::fmt;
 use std::time::Duration;

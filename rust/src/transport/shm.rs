@@ -11,7 +11,8 @@
 //! the push side runs under a light per-link mutex (uncontended in
 //! steady state — it exists to serialize the sender with handle-driven
 //! overflow flushes), and senders additionally tap the receiver's
-//! arrival condvar to wake blocked waits.
+//! atomic [`WakeSignal`] to wake blocked waits — lock-free unless a
+//! waiter is actually parked.
 //!
 //! Design, link by link:
 //!
@@ -40,10 +41,14 @@
 //!   and dropping a drained message returns the storage to the pool of
 //!   the endpoint that staged it. Raw `Vec` payloads are adopted by the
 //!   receiver's pool.
-//! * **Blocking waits**: each endpoint owns an arrival [`Condvar`];
-//!   producers signal it after publishing, so `recv`/`wait_any` sleep
-//!   between arrivals instead of spinning. The signal carries no data —
-//!   the rings remain the only message path.
+//! * **Blocking waits**: each endpoint owns an arrival
+//!   [`WakeSignal`] — an atomic wait/wake parking primitive
+//!   (futex-style event counter; see [`super::wake`]). Producers bump
+//!   it after publishing with a single atomic RMW (no lock unless a
+//!   waiter is parked), receive-side polls read it with a single atomic
+//!   load, and `recv`/`wait_any` park between arrivals instead of
+//!   spinning. The signal carries no data — the rings remain the only
+//!   message path.
 //!
 //! The backend is validated by the same backend-parameterized
 //! conformance suite as `simmpi` (`rust/tests/transport_conformance.rs`)
@@ -55,9 +60,10 @@ use std::collections::VecDeque;
 use std::fmt;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::wake::WakeSignal;
 use super::{BufferPool, MsgBuf, Rank, SendHandle, Tag, Transport};
 use crate::error::{Error, Result};
 
@@ -218,46 +224,13 @@ impl Link {
     }
 }
 
-// ---------------------------------------------------------------------
-// Arrival signalling (wakeups only; never carries data)
-// ---------------------------------------------------------------------
-
-/// Per-endpoint arrival notification: producers bump the counter after
-/// publishing into any ring destined to this endpoint; blocked receives
-/// sleep on the condvar instead of spinning. The counter lives inside
-/// the mutex so a bump between a receiver's drain and its wait can never
-/// be missed.
-#[derive(Default)]
-struct ArrivalSignal {
-    seq: Mutex<u64>,
-    cv: Condvar,
-}
-
-impl ArrivalSignal {
-    fn current(&self) -> u64 {
-        *self.seq.lock().unwrap()
-    }
-
-    fn notify(&self) {
-        let mut s = self.seq.lock().unwrap();
-        *s += 1;
-        self.cv.notify_all();
-    }
-
-    /// Sleep until the counter moves past `since` or `timeout` elapses.
-    fn wait_for_change(&self, since: u64, timeout: Duration) {
-        let deadline = Instant::now() + timeout;
-        let mut s = self.seq.lock().unwrap();
-        while *s == since {
-            let now = Instant::now();
-            if now >= deadline {
-                return;
-            }
-            let (g, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
-            s = g;
-        }
-    }
-}
+// Arrival signalling is the per-endpoint [`WakeSignal`] (see
+// `super::wake`): producers bump its atomic counter after publishing
+// into any ring destined to an endpoint, and that endpoint's blocked
+// receives park against it instead of spinning. The observed-counter
+// protocol (read `current()` before polling, wait only past that value)
+// makes a bump between a receiver's drain and its wait impossible to
+// miss without any lock around the counter.
 
 // ---------------------------------------------------------------------
 // World
@@ -284,7 +257,7 @@ struct Shared {
     /// `links[src * size + dst]`.
     links: Box<[Arc<Link>]>,
     /// Arrival signal of each destination rank.
-    signals: Box<[Arc<ArrivalSignal>]>,
+    signals: Box<[Arc<WakeSignal>]>,
     metrics: Metrics,
 }
 
@@ -349,8 +322,8 @@ impl ShmWorld {
             .map(|_| Arc::new(Link::new(config.ring_capacity)))
             .collect::<Vec<_>>()
             .into_boxed_slice();
-        let signals: Box<[Arc<ArrivalSignal>]> = (0..size)
-            .map(|_| Arc::new(ArrivalSignal::default()))
+        let signals: Box<[Arc<WakeSignal>]> = (0..size)
+            .map(|_| Arc::new(WakeSignal::new()))
             .collect::<Vec<_>>()
             .into_boxed_slice();
         let shared = Arc::new(Shared {
@@ -408,7 +381,7 @@ impl ShmWorld {
 /// backpressure signal Algorithm 6 reads as a busy channel.
 pub struct ShmSendHandle {
     link: Arc<Link>,
-    signal: Arc<ArrivalSignal>,
+    signal: Arc<WakeSignal>,
     seq: u64,
     bytes: usize,
 }
@@ -638,10 +611,11 @@ impl ShmEndpoint {
                     )));
                 }
             }
-            // The observed-counter protocol makes the condvar wakeup
+            // The observed-counter protocol makes the atomic wakeup
             // sufficient (every publish path notifies after bumping the
-            // counter); the coarse tick is belt-and-braces against a
-            // lost wakeup ever hanging a solve, not the wakeup
+            // counter, and `WakeSignal` cannot lose a notify that races
+            // with parking); the coarse tick is belt-and-braces against
+            // a lost wakeup ever hanging a solve, not the wakeup
             // mechanism — idle blocked ranks wake at ~20 Hz, not 200.
             let tick = Duration::from_millis(50);
             let wait = match deadline {

@@ -1,0 +1,228 @@
+//! Atomic wait/wake parking primitive (ISSUE 6 tentpole b).
+//!
+//! [`WakeSignal`] replaces the shm backend's original `Mutex`+`Condvar`
+//! arrival signalling. The futex-style contract: an event counter that
+//! producers bump and a consumer can sleep against, where the *hot*
+//! paths are pure atomics —
+//!
+//! * [`WakeSignal::current`] (every `recv`/`wait_any` poll) is one
+//!   `Acquire` load;
+//! * [`WakeSignal::notify`] (every ring push) is one `SeqCst`
+//!   `fetch_add` plus one `SeqCst` load of the parked flag — the
+//!   notifier only touches the waiter mutex when a waiter is actually
+//!   parked, so steady-state signalling acquires no lock at all,
+//!   exactly where the condvar version paid a lock/unlock per message.
+//!
+//! Only the slow path — a consumer that found nothing and is about to
+//! sleep — takes the mutex, to register its [`std::thread::Thread`]
+//! handle for [`std::thread::Thread::unpark`]. Linux's real futex
+//! syscall is not reachable from `std` without an external crate (and
+//! this crate deliberately has no dependencies), so the park/unpark
+//! token — which *is* futex-backed on Linux — provides the same
+//! one-syscall sleep/wake with a userspace fast path.
+//!
+//! Lost-wakeup freedom is the usual Dekker/store-load argument, on
+//! `SeqCst` so the two flags have a single total order:
+//!
+//! * waiter: store `parked = true` → load `seq` (sleep only if
+//!   unchanged)
+//! * notifier: bump `seq` → load `parked` (unpark only if true)
+//!
+//! Either the waiter's `seq` load observes the bump (it returns instead
+//! of sleeping), or the bump came later in the total order than the
+//! load — but then the waiter's earlier `parked = true` store is
+//! visible to the notifier's `parked` load, so the notifier unparks.
+//! The unpark token survives even if it lands *before* the park call,
+//! so there is no window where a wakeup can vanish. A spurious or stale
+//! unpark at worst makes one `park_timeout` return early; callers
+//! re-check their own predicate in a loop regardless.
+//!
+//! One signal supports many concurrent notifiers but **at most one
+//! parked waiter at a time** — the shm transport upholds this
+//! structurally (the signal belongs to the destination endpoint, which
+//! is `!Sync` and polled by its single rank thread). Measured by the
+//! `shm_wakeup` series of `benches/comm_micro.rs`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::thread::Thread;
+use std::time::{Duration, Instant};
+
+/// Event counter with atomic fast paths and parked-thread wakeup; see
+/// the module docs for the protocol.
+#[derive(Default)]
+pub struct WakeSignal {
+    /// Monotonic event count. Bumped by [`WakeSignal::notify`].
+    seq: AtomicU64,
+    /// True while a waiter is registered and may be parked.
+    parked: AtomicBool,
+    /// The registered waiter's handle (slow path only).
+    waiter: Mutex<Option<Thread>>,
+}
+
+impl WakeSignal {
+    pub fn new() -> Self {
+        WakeSignal::default()
+    }
+
+    /// The current event count — one `Acquire` load, no lock. Read this
+    /// *before* polling whatever state the signal guards, then pass it
+    /// to [`WakeSignal::wait_for_change`]: an event published after the
+    /// poll moves the counter past the observed value, so the wait
+    /// returns immediately instead of missing the wakeup.
+    #[inline]
+    pub fn current(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Publish one event: bump the counter and wake the parked waiter
+    /// if there is one. Lock-free unless a waiter is actually parked.
+    #[inline]
+    pub fn notify(&self) {
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        if self.parked.load(Ordering::SeqCst) {
+            // Clone rather than take: the waiter clears its own
+            // registration, and further notifies must keep finding it
+            // while it loops re-checking its predicate.
+            let waiter = self.waiter.lock().unwrap().clone();
+            if let Some(t) = waiter {
+                t.unpark();
+            }
+        }
+    }
+
+    /// Sleep until the counter moves past `since` or `timeout` elapses.
+    /// Returns immediately if it already has. At most one thread may
+    /// wait on a signal at a time (see module docs).
+    pub fn wait_for_change(&self, since: u64, timeout: Duration) {
+        if self.seq.load(Ordering::SeqCst) != since {
+            return;
+        }
+        let deadline = Instant::now() + timeout;
+        *self.waiter.lock().unwrap() = Some(std::thread::current());
+        self.parked.store(true, Ordering::SeqCst);
+        // Dekker re-check: a notify racing with the registration above
+        // either bumped `seq` before this load (we return without
+        // sleeping) or observes `parked == true` and unparks us.
+        while self.seq.load(Ordering::SeqCst) == since {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            std::thread::park_timeout(deadline - now);
+        }
+        self.parked.store(false, Ordering::SeqCst);
+        self.waiter.lock().unwrap().take();
+    }
+}
+
+impl std::fmt::Debug for WakeSignal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WakeSignal")
+            .field("seq", &self.seq.load(Ordering::Relaxed))
+            .field("parked", &self.parked.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn notify_before_wait_returns_immediately() {
+        let s = WakeSignal::new();
+        let observed = s.current();
+        s.notify();
+        let t0 = Instant::now();
+        s.wait_for_change(observed, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1), "no sleep taken");
+        assert_eq!(s.current(), observed + 1);
+    }
+
+    #[test]
+    fn wait_times_out_when_nothing_happens() {
+        let s = WakeSignal::new();
+        let t0 = Instant::now();
+        s.wait_for_change(s.current(), Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert!(!s.parked.load(Ordering::SeqCst), "waiter deregistered");
+    }
+
+    #[test]
+    fn notify_wakes_a_parked_waiter() {
+        let s = Arc::new(WakeSignal::new());
+        let observed = s.current();
+        let s2 = s.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            s2.notify();
+        });
+        let t0 = Instant::now();
+        s.wait_for_change(observed, Duration::from_secs(10));
+        let waited = t0.elapsed();
+        assert!(waited < Duration::from_secs(5), "woken, not timed out");
+        assert_eq!(s.current(), observed + 1);
+        h.join().unwrap();
+    }
+
+    /// Hammer the Dekker protocol: a consumer counts to N strictly by
+    /// observed counter changes while a producer notifies N times with
+    /// no pacing. Any lost wakeup stalls the consumer past its generous
+    /// per-step timeout and fails the count.
+    #[test]
+    fn ping_pong_stress_loses_no_wakeups() {
+        const N: u64 = 20_000;
+        let s = Arc::new(WakeSignal::new());
+        let s2 = s.clone();
+        let producer = thread::spawn(move || {
+            for _ in 0..N {
+                s2.notify();
+            }
+        });
+        let mut observed = 0u64;
+        let t0 = Instant::now();
+        while observed < N {
+            s.wait_for_change(observed, Duration::from_millis(100));
+            let now = s.current();
+            assert!(now >= observed, "counter is monotonic");
+            if now == observed {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(20),
+                    "stalled at {observed}/{N}"
+                );
+            }
+            observed = now;
+        }
+        producer.join().unwrap();
+        assert_eq!(s.current(), N);
+    }
+
+    /// Many producers, one consumer — the shm world's actual shape.
+    #[test]
+    fn multiple_notifiers_one_waiter() {
+        const PER: u64 = 2_000;
+        let s = Arc::new(WakeSignal::new());
+        let producers: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                thread::spawn(move || {
+                    for _ in 0..PER {
+                        s.notify();
+                    }
+                })
+            })
+            .collect();
+        let mut observed = 0u64;
+        while observed < 4 * PER {
+            s.wait_for_change(observed, Duration::from_millis(100));
+            observed = s.current();
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(s.current(), 4 * PER);
+    }
+}

@@ -1,0 +1,218 @@
+//! SIMD-vs-scalar equivalence (ISSUE 6 tentpole a, satellite tests).
+//!
+//! The vectorized row kernels in `jack2::simd` must be *drop-in*
+//! replacements for the branchy reference loops: bitwise-identical `f64`
+//! results at every [`SimdLevel`] (the kernels share one expression
+//! order and FMA contraction is never enabled), `f32` within width
+//! tolerance of the `f64` sweep, across odd/degenerate block shapes
+//! where the remainder and halo handling does all the work — for both
+//! the 7-point stencil ([`NativeBackend`]) and the 1-D chain
+//! ([`Jacobi1D`] workers).
+
+use jack2::config::Backend;
+use jack2::jack::ComputeView;
+use jack2::problem::{Jacobi1D, Problem, ProblemWorker};
+use jack2::scalar::Scalar;
+use jack2::simd::{self, SimdLevel};
+use jack2::solver::{ComputeBackend, NativeBackend};
+
+/// Deterministic non-trivial test data (no RNG dependency).
+fn wave(i: usize, scale: f64, phase: f64) -> f64 {
+    ((i as f64) * scale + phase).sin() * 0.5 + 0.125
+}
+
+/// Asymmetric coefficients so every one of the six halo faces is
+/// distinguishable in the output (a symmetric stencil would mask
+/// swapped-face bugs).
+const COEFFS: [f64; 8] = [6.1, -1.0, -1.1, -0.9, -1.05, -0.95, -1.02, 0.8];
+
+/// Run one stencil sweep at the given level and return `(u, res)`.
+fn stencil_at<S: Scalar>(
+    level: SimdLevel,
+    dims: (usize, usize, usize),
+) -> (Vec<S>, Vec<S>) {
+    let (nx, ny, nz) = dims;
+    let vol = nx * ny * nz;
+    let mut u: Vec<S> = (0..vol).map(|i| S::from_f64(wave(i, 0.7, 0.1))).collect();
+    let rhs: Vec<S> = (0..vol).map(|i| S::from_f64(wave(i, 0.3, 0.7))).collect();
+    // Non-zero, face-distinct halos: boundary handling must read them.
+    let face = |len: usize, phase: f64| -> Vec<S> {
+        (0..len).map(|i| S::from_f64(wave(i, 0.9, phase))).collect()
+    };
+    let xm = face(ny * nz, 1.0);
+    let xp = face(ny * nz, 2.0);
+    let ym = face(nx * nz, 3.0);
+    let yp = face(nx * nz, 4.0);
+    let zm = face(nx * ny, 5.0);
+    let zp = face(nx * ny, 6.0);
+    let faces: [&[S]; 6] = [&xm, &xp, &ym, &yp, &zm, &zp];
+    let coeffs: [S; 8] = COEFFS.map(S::from_f64);
+    let mut res = vec![S::ZERO; vol];
+    let mut be = NativeBackend::<S>::with_simd(dims, level);
+    assert_eq!(be.simd_level(), level.effective());
+    be.sweep(&mut u, faces, &rhs, &coeffs, &mut res).unwrap();
+    (u, res)
+}
+
+/// Block shapes chosen so remainder/boundary handling dominates:
+/// single-cell, single-z-layer (nz == 1: the zp==zm degenerate row),
+/// odd extents that never fill a SIMD register evenly, and a bulk cube.
+const SHAPES: [(usize, usize, usize); 6] =
+    [(1, 1, 1), (5, 3, 7), (3, 1, 2), (2, 5, 1), (7, 2, 3), (4, 4, 4)];
+
+/// Tentpole a acceptance: every SIMD level reproduces the scalar oracle
+/// **bitwise** for f64 — boundary, remainder and interior alike.
+#[test]
+fn stencil_f64_bitwise_identical_across_levels() {
+    for dims in SHAPES {
+        let (u_ref, r_ref) = stencil_at::<f64>(SimdLevel::Scalar, dims);
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let (u, r) = stencil_at::<f64>(level, dims);
+            for i in 0..u.len() {
+                assert_eq!(
+                    u[i].to_bits(),
+                    u_ref[i].to_bits(),
+                    "{dims:?} {level:?} u[{i}]: {} vs {}",
+                    u[i],
+                    u_ref[i]
+                );
+                assert_eq!(r[i].to_bits(), r_ref[i].to_bits(), "{dims:?} {level:?} res[{i}]");
+            }
+        }
+    }
+}
+
+/// f32 sweeps agree bitwise across levels too (same expression order at
+/// every level), and track the f64 sweep within width tolerance.
+#[test]
+fn stencil_f32_levels_agree_and_track_f64() {
+    for dims in SHAPES {
+        let (u64_ref, _) = stencil_at::<f64>(SimdLevel::Scalar, dims);
+        let (u_ref, r_ref) = stencil_at::<f32>(SimdLevel::Scalar, dims);
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let (u, r) = stencil_at::<f32>(level, dims);
+            for i in 0..u.len() {
+                assert_eq!(u[i].to_bits(), u_ref[i].to_bits(), "{dims:?} {level:?} u[{i}]");
+                assert_eq!(r[i].to_bits(), r_ref[i].to_bits(), "{dims:?} {level:?} res[{i}]");
+            }
+        }
+        for i in 0..u_ref.len() {
+            assert!(
+                (u_ref[i] as f64 - u64_ref[i]).abs() < 1e-4,
+                "{dims:?} u[{i}]: f32 {} vs f64 {}",
+                u_ref[i],
+                u64_ref[i]
+            );
+        }
+    }
+}
+
+/// The raw chain kernel: every level matches a hand-rolled scalar loop
+/// bitwise for f64, across lengths 1..=9 (n == 1 uses both halos at
+/// once; small odd n is pure remainder).
+#[test]
+fn chain_kernel_bitwise_matches_scalar_reference() {
+    for n in 1..=9usize {
+        let u: Vec<f64> = (0..n).map(|i| wave(i, 0.5, 0.2)).collect();
+        let rhs: Vec<f64> = (0..n).map(|i| wave(i, 0.4, 0.9)).collect();
+        let (left, right) = (0.37, -0.21);
+        let (cd, co) = (4.25, 1.0);
+        let inv_cd = 1.0 / cd;
+        // Reference: the branchy loop from the Jacobi worker.
+        let mut out_ref = vec![0.0f64; n];
+        let mut res_ref = vec![0.0f64; n];
+        for i in 0..n {
+            let lv = if i == 0 { left } else { u[i - 1] };
+            let rv = if i + 1 == n { right } else { u[i + 1] };
+            let u_star = (rhs[i] + co * (lv + rv)) * inv_cd;
+            res_ref[i] = cd * (u_star - u[i]);
+            out_ref[i] = u_star;
+        }
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let mut out = vec![0.0f64; n];
+            let mut res = vec![0.0f64; n];
+            simd::chain_sweep(level, &u, left, right, &rhs, cd, co, inv_cd, &mut out, &mut res);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), out_ref[i].to_bits(), "n={n} {level:?} out[{i}]");
+                assert_eq!(res[i].to_bits(), res_ref[i].to_bits(), "n={n} {level:?} res[{i}]");
+            }
+        }
+    }
+}
+
+/// End to end through the [`Jacobi1D`] workers: a worker pinned to each
+/// SIMD level produces bitwise-identical solution and residual blocks to
+/// the scalar-pinned worker, for every block length the decomposition
+/// produces (including length-1 blocks on rank counts close to n).
+#[test]
+fn jacobi_workers_agree_across_levels() {
+    for (n, ranks) in [(9usize, 3usize), (7, 3), (5, 4), (3, 3)] {
+        let p = Jacobi1D::new(n, ranks, 0.05).unwrap();
+        let prev_global: Vec<f64> = (0..n).map(|i| wave(i, 0.6, 0.4)).collect();
+
+        let run = |level: SimdLevel| -> Vec<(Vec<f64>, Vec<f64>)> {
+            let mut workers = Problem::<f64>::workers(&p, Backend::Native, 1).unwrap();
+            workers
+                .iter_mut()
+                .map(|w| {
+                    w.set_simd(level);
+                    let len = w.local_len();
+                    let links = w.link_sizes().len();
+                    let (off, _) = p.block(w.rank());
+                    let prev = &prev_global[off..off + len];
+                    w.begin_step(prev).unwrap();
+                    let mut sol = prev.to_vec();
+                    let mut res = vec![0.0f64; len];
+                    // Halos: neighbour boundary values of the previous state.
+                    let recv: Vec<Vec<f64>> = (0..links)
+                        .map(|l| {
+                            // link order: left neighbour first (if any)
+                            let left_exists = off > 0;
+                            let v = if left_exists && l == 0 {
+                                prev_global[off - 1]
+                            } else {
+                                prev_global[off + len] // right neighbour's first cell
+                            };
+                            vec![v]
+                        })
+                        .collect();
+                    let mut send: Vec<Vec<f64>> = (0..links).map(|_| vec![0.0]).collect();
+                    let view = ComputeView {
+                        recv: &recv,
+                        send: &mut send,
+                        sol: &mut sol,
+                        res: &mut res,
+                    };
+                    w.compute(view, 1).unwrap();
+                    (sol, res)
+                })
+                .collect()
+        };
+
+        let scalar = run(SimdLevel::Scalar);
+        for level in [SimdLevel::Portable, SimdLevel::Avx2] {
+            let fast = run(level);
+            for (r, (s, f)) in scalar.iter().zip(fast.iter()).enumerate() {
+                for i in 0..s.0.len() {
+                    assert_eq!(
+                        f.0[i].to_bits(),
+                        s.0[i].to_bits(),
+                        "n={n} ranks={ranks} rank {r} {level:?} sol[{i}]"
+                    );
+                    assert_eq!(f.1[i].to_bits(), s.1[i].to_bits(), "rank {r} res[{i}]");
+                }
+            }
+        }
+    }
+}
+
+/// `detect` is deployable everywhere (never the scalar oracle) and
+/// `effective` only ever clamps unsupported AVX2.
+#[test]
+fn detect_and_effective_are_safe_defaults() {
+    let d = SimdLevel::detect();
+    assert_ne!(d, SimdLevel::Scalar);
+    assert_eq!(d.effective(), d, "detected level must be runnable");
+    assert_eq!(SimdLevel::Scalar.effective(), SimdLevel::Scalar);
+    assert_eq!(SimdLevel::Portable.effective(), SimdLevel::Portable);
+}

@@ -30,7 +30,8 @@ use std::thread;
 use std::time::Duration;
 
 use jack2::graph::CommGraph;
-use jack2::jack::messages::TAG_DATA;
+use jack2::jack::coalesce::stage_packed;
+use jack2::jack::messages::{TAG_DATA, TAG_DATA_PACKED};
 use jack2::jack::{AsyncComm, AsyncConfig, BufferSet, IterateOpts, JackComm, NormKind, StepOutcome};
 use jack2::metrics::RankMetrics;
 use jack2::simmpi::{allreduce, barrier, NetworkModel, ReduceOp, World, WorldConfig};
@@ -184,6 +185,65 @@ fn non_overtaking_per_src_tag<B: TestBackend>() {
             thread::yield_now();
         }
     }
+}
+
+/// Coalesced halo bundles (ISSUE 6 tentpole c) ride the same
+/// non-overtaking `(src, tag)` lane as every other message: a stream of
+/// `TAG_DATA_PACKED` bundles staged by `stage_packed` arrives strictly
+/// in send order with framing intact, unpacks cleanly through
+/// `BufferSet::deliver_packed` while drained wire buffers recycle
+/// mid-stream, and never bleeds into the plain `TAG_DATA` lane.
+fn coalesced_bundles_preserve_framing_and_order<B: TestBackend>() {
+    let (mut e0, mut e1) = pair::<B>();
+    let mut bufs = BufferSet::<f64>::new(&[1], &[2, 3]).unwrap();
+    let total = 30usize;
+    let mut next = 0usize;
+    let mut check = |bufs: &BufferSet<f64>, step: usize| {
+        assert_eq!(bufs.recv[0], vec![step as f64, step as f64 + 0.5], "{}", B::NAME);
+        assert_eq!(
+            bufs.recv[1],
+            vec![100.0 + step as f64, 200.0 + step as f64, 300.0 + step as f64],
+            "{}",
+            B::NAME
+        );
+    };
+    // One plain TAG_DATA message up front: the packed lane must not
+    // consume or reorder it.
+    e0.isend_copy(1, TAG_DATA, &[7.0]).unwrap();
+    for i in 0..total {
+        let payload = vec![
+            vec![i as f64, i as f64 + 0.5],
+            vec![100.0 + i as f64, 200.0 + i as f64, 300.0 + i as f64],
+        ];
+        let msg = stage_packed(e0.pool(), &[0, 1], &payload);
+        e0.isend(1, TAG_DATA_PACKED, msg).unwrap();
+        // Burst-drain so drained bundles recycle into e0's pool while
+        // later bundles are still being staged from it.
+        if i % 5 == 4 {
+            while let Some(m) = e1.try_match(0, TAG_DATA_PACKED) {
+                bufs.deliver_packed(&[0, 1], m).unwrap();
+                check(&bufs, next);
+                next += 1;
+            }
+        }
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while next < total {
+        if let Some(m) = e1.try_match(0, TAG_DATA_PACKED) {
+            bufs.deliver_packed(&[0, 1], m).unwrap();
+            check(&bufs, next);
+            next += 1;
+        } else {
+            assert!(std::time::Instant::now() < deadline, "{}: bundles lost", B::NAME);
+            thread::yield_now();
+        }
+    }
+    assert_eq!(
+        e1.recv(0, TAG_DATA, Some(Duration::from_secs(5))).unwrap(),
+        vec![7.0],
+        "{}: plain lane intact",
+        B::NAME
+    );
 }
 
 /// The staged send path (`isend_copy`) performs zero heap allocations in
@@ -475,6 +535,11 @@ macro_rules! conformance_suite {
             #[test]
             fn non_overtaking_per_src_tag() {
                 super::non_overtaking_per_src_tag::<$backend>();
+            }
+
+            #[test]
+            fn coalesced_bundles_preserve_framing_and_order() {
+                super::coalesced_bundles_preserve_framing_and_order::<$backend>();
             }
 
             #[test]

@@ -76,6 +76,77 @@ fn sync_exchange_is_allocation_free_after_warmup() {
     assert!(s0.reuses >= 100, "sends must be pool-recycled: {s0:?}");
 }
 
+/// Coalesced halo exchange (ISSUE 6 tentpole c): on a parallel-link
+/// graph the bundle staging (`stage_packed` → `pool.stage_iter`) and
+/// the bundle unpack (`deliver_packed`, copy-narrow into preallocated
+/// slots) are as allocation-free in steady state as the plain per-link
+/// path — and so is the per-buffer ablation mode.
+#[test]
+fn coalesced_sync_exchange_is_allocation_free_after_warmup() {
+    for coalesce in [true, false] {
+        let (_w, mut e0, mut e1) = {
+            let (w, mut eps) = instant_world(2);
+            let e1 = eps.pop().unwrap();
+            let e0 = eps.pop().unwrap();
+            (w, e0, e1)
+        };
+        // Two parallel links each way, different buffer sizes.
+        let g0 = CommGraph::new(0, vec![1, 1], vec![1, 1]).unwrap();
+        let g1 = CommGraph::new(1, vec![0, 0], vec![0, 0]).unwrap();
+        let mut bufs0 = BufferSet::<f64>::new(&[48, 16], &[48, 16]).unwrap();
+        let mut bufs1 = BufferSet::<f64>::new(&[48, 16], &[48, 16]).unwrap();
+        let mut sc0 = SyncComm::default();
+        let mut sc1 = SyncComm::default();
+        sc0.set_coalesce(coalesce);
+        sc1.set_coalesce(coalesce);
+        let mut m = RankMetrics::default();
+
+        let mut iterate = |e0: &mut Endpoint,
+                           e1: &mut Endpoint,
+                           bufs0: &mut BufferSet<f64>,
+                           bufs1: &mut BufferSet<f64>,
+                           sc0: &mut SyncComm<Endpoint>,
+                           sc1: &mut SyncComm<Endpoint>,
+                           m: &mut RankMetrics,
+                           it: usize| {
+            bufs0.send[0][0] = it as f64;
+            bufs0.send[1][0] = it as f64 + 0.5;
+            bufs1.send[0][0] = -(it as f64);
+            sc0.send(e0, &g0, bufs0, m).unwrap();
+            sc1.send(e1, &g1, bufs1, m).unwrap();
+            sc0.recv(e0, &g0, bufs0, m).unwrap();
+            sc1.recv(e1, &g1, bufs1, m).unwrap();
+            assert_eq!(bufs0.recv[0][0], -(it as f64));
+            assert_eq!(bufs1.recv[0][0], it as f64);
+            assert_eq!(bufs1.recv[1][0], it as f64 + 0.5);
+        };
+
+        for it in 0..5 {
+            iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+        }
+        let warm0 = e0.pool().stats().allocations;
+        let warm1 = e1.pool().stats().allocations;
+        for it in 5..105 {
+            iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+        }
+        let s0 = e0.pool().stats();
+        let s1 = e1.pool().stats();
+        assert_eq!(
+            s0.allocations, warm0,
+            "coalesce={coalesce}: rank 0 allocated in steady state: {s0:?}"
+        );
+        assert_eq!(
+            s1.allocations, warm1,
+            "coalesce={coalesce}: rank 1 allocated in steady state: {s1:?}"
+        );
+        assert!(s0.reuses >= 100, "coalesce={coalesce}: sends must recycle: {s0:?}");
+        // Wire accounting: one bundle per peer per step vs one per link.
+        let per_rank_steps = 105;
+        let want = if coalesce { per_rank_steps } else { 2 * per_rank_steps };
+        assert_eq!(m.msgs_sent, 2 * want, "both ranks' sends counted");
+    }
+}
+
 /// The async exchange path (Alg. 5 + Alg. 6) is equally allocation-free,
 /// including when busy channels discard sends.
 #[test]

@@ -162,6 +162,94 @@ fn wire_traffic_is_identical_across_backends() {
     assert_eq!(sim, shm);
 }
 
+/// Run a deterministic 5-iteration synchronous exchange on a 2-rank
+/// graph with **two parallel links** per direction (buffer sizes 2 and
+/// 3), with per-peer halo coalescing on or off (ISSUE 6 tentpole c).
+/// Each iteration records every received word and publishes distinct
+/// per-link payloads.
+fn drive_parallel_link_exchange<T, S>(eps: Vec<T>, coalesce: bool) -> Vec<WireTrace>
+where
+    T: Transport + 'static,
+    S: Scalar,
+{
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let rank = ep.rank();
+                let peer = 1 - rank;
+                let graph = CommGraph::new(rank, vec![peer, peer], vec![peer, peer]).unwrap();
+                let mut comm: JackComm<T, S> = JackComm::builder(ep, graph)
+                    .unwrap()
+                    .with_buffers(&[2, 3], &[2, 3])
+                    .unwrap()
+                    .with_residual(1, NormKind::Max)
+                    .with_solution(1)
+                    .build_sync();
+                comm.set_coalesce(coalesce);
+
+                let mut received = Vec::new();
+                let mut it = 0u64;
+                let opts = IterateOpts {
+                    threshold: 0.0, // never converges: run to max_iters
+                    max_iters: 5,
+                    ..IterateOpts::default()
+                };
+                comm.iterate(&opts, |v| {
+                    for rb in v.recv.iter() {
+                        received.extend(rb.iter().map(|x| x.to_f64()));
+                    }
+                    for (l, sb) in v.send.iter_mut().enumerate() {
+                        for (j, w) in sb.iter_mut().enumerate() {
+                            *w = S::from_f64((rank * 1000 + l * 100 + j * 10) as f64 + it as f64);
+                        }
+                    }
+                    v.res[0] = S::from_f64(1.0);
+                    it += 1;
+                    StepOutcome::Continue
+                })
+                .unwrap();
+                WireTrace {
+                    rank,
+                    received,
+                    msgs_sent: comm.metrics.msgs_sent,
+                    msgs_delivered: comm.metrics.msgs_delivered,
+                    norm_reductions: comm.metrics.norm_reductions,
+                    iterations: comm.metrics.iterations,
+                }
+            })
+        })
+        .collect();
+    let mut out: Vec<WireTrace> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    out.sort_by_key(|t| t.rank);
+    out
+}
+
+/// Tentpole c (ISSUE 6): on a parallel-link graph, coalescing halves the
+/// wire message count while every delivered payload word is identical to
+/// per-buffer mode — on both backends, and identically across backends.
+#[test]
+fn coalesced_and_per_buffer_modes_deliver_identical_payloads() {
+    let sim_co = drive_parallel_link_exchange::<_, f64>(sim_pair(), true);
+    let sim_pb = drive_parallel_link_exchange::<_, f64>(sim_pair(), false);
+    let shm_co = drive_parallel_link_exchange::<_, f64>(shm_pair(), true);
+    let shm_pb = drive_parallel_link_exchange::<_, f64>(shm_pair(), false);
+    for (co, pb) in [(&sim_co, &sim_pb), (&shm_co, &shm_pb)] {
+        for (c, p) in co.iter().zip(pb.iter()) {
+            assert_eq!(c.received, p.received, "payloads must not depend on coalescing");
+            assert!(!c.received.is_empty());
+            // 6 sends (initial + 5 loop), 6 recvs (5 loop + trailing
+            // drain): one wire message per peer coalesced, two per-buffer.
+            assert_eq!(c.msgs_sent, 6, "coalesced: one bundle per step");
+            assert_eq!(p.msgs_sent, 12, "per-buffer: one message per link");
+            assert_eq!(c.msgs_delivered, 6);
+            assert_eq!(p.msgs_delivered, 12);
+        }
+    }
+    assert_eq!(sim_co, shm_co, "transport invariant");
+    assert_eq!(sim_pb, shm_pb, "transport invariant");
+}
+
 /// The quickstart system [4 -1; -1 4] x = [5 9] solved through the typed
 /// session API, generic over the payload width.
 fn quickstart_solve<S: Scalar>(async_mode: bool, threshold: f64) -> Vec<S> {
