@@ -9,12 +9,15 @@
 //! throughput — plus the ISSUE 6 hot-path series: SIMD stencil sweeps vs
 //! the scalar loop (`stencil_simd`), `WakeSignal` vs condvar signalling
 //! (`shm_wakeup`), and per-peer halo coalescing vs per-buffer messaging
-//! (`halo_coalesce`). Emits `BENCH_comm_micro.json` so the perf
-//! trajectory is machine-readable across PRs.
+//! (`halo_coalesce`) — and the ISSUE 7 solve-service series
+//! (`service_throughput`): jobs/sec and queue-to-done latency for a
+//! seeded open-loop load through `SolveService`. Emits
+//! `BENCH_comm_micro.json` so the perf trajectory is machine-readable
+//! across PRs.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use jack2::config::{ExperimentConfig, Scheme, TerminationKind};
 use jack2::graph::builders::grid3d_torus_graphs;
@@ -24,6 +27,7 @@ use jack2::jack::SyncComm;
 use jack2::metrics::RankMetrics;
 use jack2::scalar::Scalar;
 use jack2::simd::SimdLevel;
+use jack2::service::{Admission, JobOutcome, LoadGen, ServiceConfig, SolveService};
 use jack2::simmpi::{NetworkModel, WorldConfig};
 use jack2::solver::{solve_experiment, ComputeBackend, NativeBackend};
 use jack2::transport::{ShmWorld, Transport, WakeSignal};
@@ -557,6 +561,105 @@ fn bench_halo_coalesce(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Solve-service throughput (ISSUE 7): a seeded open-loop load — the
+/// same mixed job stream `repro submit` replays — pushed through a
+/// [`SolveService`] at two worker-pool widths. Reports jobs/sec plus
+/// p50/p99 queue-to-done latency (`queue_wait + wall` per job). One
+/// JSON row per pool width; CI fails if either goes missing.
+fn bench_service_throughput(b: &Bencher) -> Vec<Json> {
+    println!("\nsolve service: open-loop mixed load, jobs/sec + queue-to-done latency");
+    let fast = std::env::var("REPRO_BENCH_FAST").as_deref() == Ok("1");
+    let jobs = if fast { 12usize } else { 48 };
+    let rate_hz = 600.0;
+
+    fn pctl(sorted: &[Duration], p: f64) -> Duration {
+        if sorted.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx]
+    }
+
+    let mut t = Table::new(&[
+        "workers", "jobs", "done", "shed", "jobs/s", "p50 q→done", "p99 q→done",
+    ]);
+    let mut rows = Vec::new();
+    for workers in [2usize, 4] {
+        let mut sample = None;
+        b.run(&format!("service w{workers}"), || {
+            let svc = SolveService::start(ServiceConfig {
+                workers,
+                queue_capacity: jobs,
+                registry_capacity: 0,
+            });
+            let start = Instant::now();
+            let mut tickets = Vec::with_capacity(jobs);
+            let mut shed = 0u64;
+            // Open loop: arrivals fire on the generator's clock whether or
+            // not the pool has caught up — queueing is part of the measure.
+            for arrival in LoadGen::new(7, rate_hz).take(jobs) {
+                if let Some(wait) = arrival.at.checked_sub(start.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                match svc.submit(arrival.spec) {
+                    Admission::Accepted(tk) => tickets.push(tk),
+                    Admission::Rejected(_) => shed += 1,
+                }
+            }
+            let mut completed = 0u64;
+            let mut lats = Vec::with_capacity(tickets.len());
+            for tk in &tickets {
+                if let Some(rep) = svc.collect(tk, Duration::from_secs(600)) {
+                    if matches!(rep.outcome, JobOutcome::Converged) {
+                        completed += 1;
+                    }
+                    lats.push(rep.queue_wait + rep.wall);
+                }
+            }
+            let elapsed = start.elapsed();
+            drop(svc); // joins the worker pool
+            lats.sort();
+            sample = Some((completed, shed, elapsed, lats));
+        });
+        let (completed, shed, elapsed, lats) = sample.expect("bencher runs the closure");
+
+        let jobs_per_sec = completed as f64 / elapsed.as_secs_f64().max(1e-9);
+        let p50 = pctl(&lats, 0.50);
+        let p99 = pctl(&lats, 0.99);
+        t.row(&[
+            workers.to_string(),
+            jobs.to_string(),
+            completed.to_string(),
+            shed.to_string(),
+            format!("{jobs_per_sec:.0}"),
+            format!("{:.2}ms", p50.as_secs_f64() * 1e3),
+            format!("{:.2}ms", p99.as_secs_f64() * 1e3),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("workers".into(), Json::Num(workers as f64));
+        row.insert("jobs".into(), Json::Num(jobs as f64));
+        row.insert("completed".into(), Json::Num(completed as f64));
+        row.insert("rejected".into(), Json::Num(shed as f64));
+        row.insert("rate_hz".into(), Json::Num(rate_hz));
+        row.insert("jobs_per_sec".into(), Json::Num(jobs_per_sec));
+        row.insert(
+            "p50_latency_ns".into(),
+            Json::Num(p50.as_nanos() as f64),
+        );
+        row.insert(
+            "p99_latency_ns".into(),
+            Json::Num(p99.as_nanos() as f64),
+        );
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!(
+        "latency = queue_wait + wall per job (queue-to-done); doubling the \
+         pool should cut p99 under open-loop pressure"
+    );
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -614,6 +717,7 @@ fn main() {
     let coalesce_rows = bench_halo_coalesce(&b);
     let precision_rows = bench_solve_precision(&b);
     let termination_rows = bench_termination_detection(&b);
+    let service_rows = bench_service_throughput(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -629,6 +733,7 @@ fn main() {
     doc.insert("halo_coalesce".into(), Json::Arr(coalesce_rows));
     doc.insert("solve_precision".into(), Json::Arr(precision_rows));
     doc.insert("termination_detection".into(), Json::Arr(termination_rows));
+    doc.insert("service_throughput".into(), Json::Arr(service_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

@@ -67,6 +67,12 @@
 //!   (`repro solve --precision f32` runs true mixed precision), with a
 //!   width-generic native Rust compute backend and an AOT-compiled XLA
 //!   backend (f64-only, behind a clean capability error).
+//! * **[`service`]** — the multi-tenant solve service: a long-lived
+//!   [`service::SolveService`] runtime that admits JSON job specs from
+//!   many tenants (bounded queue, explicit shedding), schedules them
+//!   onto a pool of worker worlds whose per-rank [`transport::BufferPool`]s
+//!   persist across jobs, and reports per-job outcomes plus per-tenant
+//!   [`metrics::TenantMetrics`]. Front door: `repro serve`.
 //! * **[`runtime`]** — PJRT executor loading the HLO artifacts produced by
 //!   `python/compile/aot.py` (Python is build-time only).
 //! * **[`metrics`]** — counters and event traces used by the experiment
@@ -106,6 +112,7 @@ pub mod prelude;
 pub mod problem;
 pub mod runtime;
 pub mod scalar;
+pub mod service;
 pub mod simd;
 pub mod simmpi;
 pub mod solver;

@@ -10,6 +10,11 @@
 //!                  [--steps N] [--threshold 1e-6]
 //!                  [--latency-us 20] [--jitter 0.1] [--seed S]
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
+//! repro serve      [--workers 2] [--queue 64] [--listen 127.0.0.1:7070]
+//!                  [--once]   (multi-tenant solve service; NDJSON job
+//!                  specs in, NDJSON reports + tenant summary out)
+//! repro submit     [--count 16] [--workers 2] [--rate 200] [--seed 1]
+//!                  (seeded open-loop load against an in-process service)
 //! repro table1     [--backend native|xla] [--fast]          (E1)
 //! repro fig3       [--n 24] [--budget 60] [--out fig3.csv]  (E2)
 //! repro partition  [--grid 4x2x2] [--n 16]                  (E3)
@@ -22,22 +27,32 @@
 //! clap is unavailable — see Cargo.toml.)
 
 use std::collections::HashMap;
+use std::io::{BufRead, Write};
 use std::process::ExitCode;
+use std::time::Duration;
 
 use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TerminationKind, TransportKind};
 use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
+use jack2::metrics::TenantMetrics;
 use jack2::problem::{Jacobi1D, Partition3D};
 use jack2::scalar::Scalar;
+use jack2::service::{
+    Admission, JobOutcome, JobSpec, LoadGen, RejectReason, ServiceConfig, SolveService,
+};
 use jack2::solver::{solve_experiment, SolveReport, SolverSession};
 use jack2::util::json;
 use jack2::{Error, Result};
 
+/// Exit code for a run that completed but did not meet its convergence
+/// target (distinct from 1 = usage/runtime error).
+const EXIT_UNCONVERGED: u8 = 2;
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match run(&args) {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e}");
             ExitCode::FAILURE
@@ -45,24 +60,27 @@ fn main() -> ExitCode {
     }
 }
 
-fn run(args: &[String]) -> Result<()> {
+fn run(args: &[String]) -> Result<ExitCode> {
     let Some(cmd) = args.first() else {
         print_usage();
-        return Ok(());
+        return Ok(ExitCode::SUCCESS);
     };
     let flags = parse_flags(&args[1..])?;
+    let ok = |r: Result<()>| r.map(|()| ExitCode::SUCCESS);
     match cmd.as_str() {
         "solve" => cmd_solve(&flags),
-        "table1" => cmd_table1(&flags),
-        "fig3" => cmd_fig3(&flags),
-        "partition" => cmd_partition(&flags),
-        "overhead" => cmd_overhead(),
-        "staleness" => cmd_staleness(),
-        "schemes" => cmd_schemes(&flags),
-        "faults" => cmd_faults(),
+        "serve" => cmd_serve(&flags),
+        "submit" => cmd_submit(&flags),
+        "table1" => ok(cmd_table1(&flags)),
+        "fig3" => ok(cmd_fig3(&flags)),
+        "partition" => ok(cmd_partition(&flags)),
+        "overhead" => ok(cmd_overhead()),
+        "staleness" => ok(cmd_staleness()),
+        "schemes" => ok(cmd_schemes(&flags)),
+        "faults" => ok(cmd_faults()),
         "help" | "--help" | "-h" => {
             print_usage();
-            Ok(())
+            Ok(ExitCode::SUCCESS)
         }
         other => Err(Error::Config(format!(
             "unknown subcommand {other:?}; run `repro help`"
@@ -79,7 +97,16 @@ fn print_usage() {
                     convdiff|jacobi for the workload, --termination\n             \
                     snapshot|persistence|recursive-doubling for the async\n             \
                     detection protocol; f32 clamps the default threshold\n             \
-                    to 1e-4 unless --threshold is given)\n  \
+                    to 1e-4 unless --threshold is given; exits 2 when the\n             \
+                    solve does not converge within --max-iters)\n  \
+         serve      multi-tenant solve service: newline-delimited JSON job\n             \
+                    specs on stdin (or --listen HOST:PORT; --once for a\n             \
+                    single connection), NDJSON reports + per-tenant summary\n             \
+                    out; --workers/--queue bound the worker pool and the\n             \
+                    admission queue; exits 2 on any unconverged/failed/\n             \
+                    rejected job\n  \
+         submit     seeded open-loop load generator against an in-process\n             \
+                    service (--count/--rate/--seed/--workers)\n  \
          table1     E1: Jacobi vs async sweep over world sizes (paper Table 1)\n  \
          fig3       E2: mid-convergence solution profiles + interface jumps\n  \
          partition  E3: print the box partition and communication graph\n  \
@@ -176,7 +203,7 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
     Ok(cfg)
 }
 
-fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
+fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     let mut cfg = config_from_flags(flags)?;
     if cfg.precision == Precision::F32 && !flags.contains_key("threshold") {
         // f32 payloads bottom out near the width's rounding floor, so the
@@ -185,18 +212,29 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.threshold = cfg.threshold.max(1e-4);
     }
     let problem = flags.get("problem").map(String::as_str).unwrap_or("convdiff");
-    match (problem, cfg.precision) {
-        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_experiment::<f64>(&cfg)?),
-        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_experiment::<f32>(&cfg)?),
+    let converged = match (problem, cfg.precision) {
+        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_experiment::<f64>(&cfg)?)?,
+        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_experiment::<f32>(&cfg)?)?,
         ("jacobi" | "jacobi1d", Precision::F64) => {
-            print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg)?)
+            print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg)?)?
         }
         ("jacobi" | "jacobi1d", Precision::F32) => {
-            print_solve(flags, &cfg, solve_jacobi::<f32>(&cfg)?)
+            print_solve(flags, &cfg, solve_jacobi::<f32>(&cfg)?)?
         }
-        (other, _) => Err(Error::Config(format!(
-            "unknown problem {other:?} (expected convdiff or jacobi)"
-        ))),
+        (other, _) => {
+            return Err(Error::Config(format!(
+                "unknown problem {other:?} (expected convdiff or jacobi)"
+            )))
+        }
+    };
+    if converged {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        eprintln!(
+            "solve did not converge within max_iters = {} (threshold {:.1e})",
+            cfg.max_iters, cfg.threshold
+        );
+        Ok(ExitCode::from(EXIT_UNCONVERGED))
     }
 }
 
@@ -210,11 +248,13 @@ fn solve_jacobi<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
         .run()
 }
 
+/// Print the report (human or `--json`) and return its converged flag
+/// (the `repro solve` exit-code signal).
 fn print_solve<S: Scalar>(
     flags: &HashMap<String, String>,
     cfg: &ExperimentConfig,
     rep: SolveReport<S>,
-) -> Result<()> {
+) -> Result<bool> {
     if flags.contains_key("json") {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("config".to_string(), cfg.to_json());
@@ -227,6 +267,7 @@ fn print_solve<S: Scalar>(
             json::Json::Str(rep.precision.to_string()),
         );
         obj.insert("r_n".to_string(), json::Json::Num(rep.r_n));
+        obj.insert("converged".to_string(), json::Json::Bool(rep.converged));
         obj.insert(
             "iterations".to_string(),
             json::Json::Num(rep.iterations() as f64),
@@ -240,7 +281,7 @@ fn print_solve<S: Scalar>(
             json::Json::Num(rep.total_wall.as_secs_f64()),
         );
         println!("{}", json::write(&json::Json::Obj(obj)));
-        return Ok(());
+        return Ok(rep.converged);
     }
     println!(
         "solve: {} problem={} precision={} backend={} transport={}{} grid={:?} n={} -> {} steps",
@@ -269,11 +310,228 @@ fn print_solve<S: Scalar>(
         );
     }
     println!(
-        "verified r_n = {:.3e} | total {}",
+        "verified r_n = {:.3e} | total {} | {}",
         rep.r_n,
-        fmt_secs(rep.total_wall)
+        fmt_secs(rep.total_wall),
+        if rep.converged {
+            "converged"
+        } else {
+            "NOT converged"
+        }
     );
-    Ok(())
+    Ok(rep.converged)
+}
+
+/// `repro serve` — the solve service's front door: newline-delimited
+/// [`JobSpec`] JSON in (stdin, or one TCP connection at a time with
+/// `--listen`), NDJSON [`jack2::service::JobReport`]s + a per-tenant
+/// summary object out. Exit code 2 when any job was rejected, failed,
+/// or did not converge.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
+    let svc = start_service(flags)?;
+    let all_ok = match flags.get("listen") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr.as_str())
+                .map_err(|e| Error::Config(format!("cannot listen on {addr}: {e}")))?;
+            eprintln!("repro serve: listening on {addr}");
+            let once = flags.contains_key("once");
+            let mut all_ok = true;
+            for conn in listener.incoming() {
+                let stream = conn?;
+                let reader = std::io::BufReader::new(stream.try_clone()?);
+                let mut writer = std::io::BufWriter::new(stream);
+                all_ok &= serve_stream(&svc, reader, &mut writer)?;
+                if once {
+                    break;
+                }
+            }
+            all_ok
+        }
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            serve_stream(&svc, stdin.lock(), &mut stdout.lock())?
+        }
+    };
+    let tenants = svc.shutdown();
+    println!("{}", json::write(&tenants_json(&tenants)));
+    Ok(if all_ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(EXIT_UNCONVERGED)
+    })
+}
+
+/// `repro submit` — deterministic open-loop smoke load against an
+/// in-process service: `--count` jobs from the seeded generator at
+/// `--rate` jobs/sec, drained and summarized. Exit code 2 if any job
+/// failed outright.
+fn cmd_submit(flags: &HashMap<String, String>) -> Result<ExitCode> {
+    let svc = start_service(flags)?;
+    let count = get(flags, "count", 16usize)?;
+    let rate = get(flags, "rate", 200.0f64)?;
+    let seed = get(flags, "seed", 1u64)?;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for arrival in LoadGen::new(seed, rate).take(count) {
+        if let Some(pause) = arrival.at.checked_sub(t0.elapsed()) {
+            std::thread::sleep(pause);
+        }
+        match svc.submit(arrival.spec) {
+            Admission::Accepted(t) => tickets.push(t),
+            Admission::Rejected(_) => rejected += 1,
+        }
+    }
+    let mut failed = 0usize;
+    for t in &tickets {
+        match svc.collect(t, Duration::from_secs(600)) {
+            Some(rep) => {
+                if matches!(rep.outcome, JobOutcome::Failed(_)) {
+                    failed += 1;
+                    eprintln!("job {} failed: {}", rep.job_id, json::write(&rep.to_json()));
+                }
+            }
+            None => failed += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    let done = tickets.len();
+    let tenants = svc.shutdown();
+    println!(
+        "submit: {done}/{count} jobs completed ({rejected} shed, {failed} failed) \
+         in {} — {:.1} jobs/sec",
+        fmt_secs(wall),
+        done as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    for (tenant, m) in &tenants {
+        println!(
+            "  {tenant:<22} submitted {:>3} rejected {:>2} converged {:>3} \
+             | mean queue {:>9} max {:>9} | mean wall {:>9}",
+            m.submitted,
+            m.rejected,
+            m.converged,
+            fmt_secs(m.queue_wait / m.settled().max(1) as u32),
+            fmt_secs(m.max_queue_wait),
+            fmt_secs(m.wall / m.completed.max(1) as u32),
+        );
+    }
+    Ok(if failed == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(EXIT_UNCONVERGED)
+    })
+}
+
+fn start_service(flags: &HashMap<String, String>) -> Result<SolveService> {
+    let cfg = ServiceConfig {
+        workers: get(flags, "workers", 2usize)?.max(1),
+        queue_capacity: get(flags, "queue", 64usize)?.max(1),
+        registry_capacity: get(flags, "registry", 0usize)?,
+    };
+    Ok(SolveService::start(cfg))
+}
+
+/// Pump one NDJSON connection through the service: submit every line,
+/// then emit one report line per job in submission order. Returns false
+/// if anything was rejected, failed, or missed convergence.
+fn serve_stream<R: BufRead, W: Write>(
+    svc: &SolveService,
+    input: R,
+    out: &mut W,
+) -> Result<bool> {
+    let mut tickets = Vec::new();
+    let mut all_ok = true;
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match JobSpec::parse(line) {
+            Ok(spec) => match svc.submit(spec) {
+                Admission::Accepted(t) => tickets.push(t),
+                Admission::Rejected(reason) => {
+                    all_ok = false;
+                    writeln!(out, "{}", json::write(&reject_json(&reason)))?;
+                }
+            },
+            Err(e) => {
+                all_ok = false;
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("outcome".to_string(), json::Json::Str("rejected".into()));
+                m.insert("error".to_string(), json::Json::Str(e.to_string()));
+                writeln!(out, "{}", json::write(&json::Json::Obj(m)))?;
+            }
+        }
+    }
+    for t in &tickets {
+        match svc.collect(t, Duration::from_secs(600)) {
+            Some(rep) => {
+                all_ok &= rep.outcome == JobOutcome::Converged;
+                writeln!(out, "{}", json::write(&rep.to_json()))?;
+            }
+            None => {
+                all_ok = false;
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("job_id".to_string(), json::Json::Num(t.job_id as f64));
+                m.insert("outcome".to_string(), json::Json::Str("timeout".into()));
+                writeln!(out, "{}", json::write(&json::Json::Obj(m)))?;
+            }
+        }
+    }
+    out.flush()?;
+    Ok(all_ok)
+}
+
+fn reject_json(reason: &RejectReason) -> json::Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("outcome".to_string(), json::Json::Str("rejected".into()));
+    let (kind, detail) = match reason {
+        RejectReason::QueueFull { queued } => ("queue_full", format!("{queued} queued")),
+        RejectReason::ShuttingDown => ("shutting_down", String::new()),
+        RejectReason::Invalid(e) => ("invalid", e.clone()),
+    };
+    m.insert("reason".to_string(), json::Json::Str(kind.into()));
+    if !detail.is_empty() {
+        m.insert("detail".to_string(), json::Json::Str(detail));
+    }
+    json::Json::Obj(m)
+}
+
+fn tenants_json(tenants: &std::collections::BTreeMap<String, TenantMetrics>) -> json::Json {
+    let rows = tenants
+        .iter()
+        .map(|(tenant, m)| {
+            let mut r = std::collections::BTreeMap::new();
+            r.insert("submitted".to_string(), json::Json::Num(m.submitted as f64));
+            r.insert("rejected".to_string(), json::Json::Num(m.rejected as f64));
+            r.insert("completed".to_string(), json::Json::Num(m.completed as f64));
+            r.insert("converged".to_string(), json::Json::Num(m.converged as f64));
+            r.insert("cancelled".to_string(), json::Json::Num(m.cancelled as f64));
+            r.insert("failed".to_string(), json::Json::Num(m.failed as f64));
+            r.insert(
+                "iterations".to_string(),
+                json::Json::Num(m.iterations as f64),
+            );
+            r.insert(
+                "queue_wait_seconds".to_string(),
+                json::Json::Num(m.queue_wait.as_secs_f64()),
+            );
+            r.insert(
+                "max_queue_wait_seconds".to_string(),
+                json::Json::Num(m.max_queue_wait.as_secs_f64()),
+            );
+            r.insert(
+                "wall_seconds".to_string(),
+                json::Json::Num(m.wall.as_secs_f64()),
+            );
+            (tenant.clone(), json::Json::Obj(r))
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("tenants".to_string(), json::Json::Obj(rows));
+    json::Json::Obj(top)
 }
 
 fn cmd_table1(flags: &HashMap<String, String>) -> Result<()> {

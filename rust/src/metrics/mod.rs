@@ -43,6 +43,58 @@ impl RankMetrics {
     }
 }
 
+/// Per-tenant aggregation maintained by the solve service
+/// ([`crate::service::SolveService`]): one row per tenant id, updated at
+/// admission (submitted / rejected) and at job completion. Duration
+/// fields accumulate across jobs; `max_queue_wait` is the tenant's worst
+/// observed queue delay (the p100 of its queue-to-start latency).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantMetrics {
+    /// Jobs accepted into the queue.
+    pub submitted: u64,
+    /// Jobs shed at admission (queue full / shutting down).
+    pub rejected: u64,
+    /// Jobs that ran to a report (converged or max-iters).
+    pub completed: u64,
+    /// Completed jobs whose every time step met the threshold.
+    pub converged: u64,
+    /// Jobs cancelled while still queued.
+    pub cancelled: u64,
+    /// Jobs whose solve returned an error.
+    pub failed: u64,
+    /// Total iterations across completed jobs (final-step counts).
+    pub iterations: u64,
+    /// Total time jobs spent queued before a worker claimed them.
+    pub queue_wait: Duration,
+    /// Worst single-job queue wait.
+    pub max_queue_wait: Duration,
+    /// Total solve wall-clock across completed jobs.
+    pub wall: Duration,
+}
+
+impl TenantMetrics {
+    /// Merge another tenant row into this one (cross-service or
+    /// cross-window aggregation).
+    pub fn merge(&mut self, o: &TenantMetrics) {
+        self.submitted += o.submitted;
+        self.rejected += o.rejected;
+        self.completed += o.completed;
+        self.converged += o.converged;
+        self.cancelled += o.cancelled;
+        self.failed += o.failed;
+        self.iterations += o.iterations;
+        self.queue_wait += o.queue_wait;
+        self.max_queue_wait = self.max_queue_wait.max(o.max_queue_wait);
+        self.wall += o.wall;
+    }
+
+    /// Jobs that reached a terminal state (completed, cancelled or
+    /// failed) — the denominator for drain accounting.
+    pub fn settled(&self) -> u64 {
+        self.completed + self.cancelled + self.failed
+    }
+}
+
 /// A timestamped protocol event (only recorded when tracing is enabled).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
@@ -119,6 +171,32 @@ mod tests {
             t.record(Event::Resume);
         }
         assert_eq!(t.events().len(), 2);
+    }
+
+    #[test]
+    fn tenant_merge_accumulates_and_maxes() {
+        let mut a = TenantMetrics {
+            submitted: 3,
+            completed: 2,
+            converged: 2,
+            queue_wait: Duration::from_millis(10),
+            max_queue_wait: Duration::from_millis(7),
+            ..Default::default()
+        };
+        let b = TenantMetrics {
+            submitted: 1,
+            rejected: 1,
+            failed: 1,
+            queue_wait: Duration::from_millis(5),
+            max_queue_wait: Duration::from_millis(9),
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.submitted, 4);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.settled(), 3);
+        assert_eq!(a.queue_wait, Duration::from_millis(15));
+        assert_eq!(a.max_queue_wait, Duration::from_millis(9));
     }
 
     #[test]

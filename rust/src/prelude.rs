@@ -25,6 +25,10 @@ pub use crate::jack::{
 };
 pub use crate::problem::{ConvDiffProblem, Jacobi1D, Problem, ProblemWorker};
 pub use crate::scalar::Scalar;
+pub use crate::service::{
+    Admission, JobOutcome, JobReport, JobSpec, JobState, JobTicket, ProblemKind, RejectReason,
+    ServiceConfig, SolveService,
+};
 pub use crate::solver::{
     solve_experiment, ComputeBackend, SolveReport, SolverSession, SolverSessionBuilder, StepReport,
 };

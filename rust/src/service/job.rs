@@ -1,0 +1,386 @@
+//! Job specs and reports: the service's serializable request/response
+//! pair.
+//!
+//! A [`JobSpec`] is what a tenant submits — a workload selector plus a
+//! full [`ExperimentConfig`] — and a [`JobReport`] is what comes back:
+//! the terminal [`JobOutcome`] with the solve's headline numbers and the
+//! job's queueing telemetry. Both round-trip through the crate's
+//! hand-rolled JSON (`repro serve` speaks newline-delimited [`JobSpec`]
+//! JSON in and [`JobReport`] JSON out).
+//!
+//! [`execute`] is the single dispatch point from an untyped spec to the
+//! width- and problem-generic [`SolverSession`]: it monomorphizes over
+//! (problem × precision) exactly once, here, so the service scheduler
+//! never names a concrete problem or scalar width.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::config::{ExperimentConfig, Precision};
+use crate::error::{Error, Result};
+use crate::problem::{ConvDiffProblem, Jacobi1D, Problem};
+use crate::scalar::Scalar;
+use crate::solver::{SolveReport, SolverSession};
+use crate::transport::BufferPool;
+use crate::util::json::Json;
+
+/// Which shipped workload a job runs. Both go through the same
+/// [`SolverSession`] path; this enum exists only because job specs are
+/// data, not types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// The paper's 3-D convection–diffusion cube.
+    ConvDiff,
+    /// The 1-D backward-Euler heat chain.
+    Jacobi,
+}
+
+impl ProblemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProblemKind::ConvDiff => "convdiff",
+            ProblemKind::Jacobi => "jacobi",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "convdiff" | "convdiff3d" => Ok(ProblemKind::ConvDiff),
+            "jacobi" | "jacobi1d" => Ok(ProblemKind::Jacobi),
+            _ => Err(Error::Config(format!(
+                "unknown problem {s:?} (expected convdiff or jacobi)"
+            ))),
+        }
+    }
+}
+
+/// One tenant request: workload + experiment configuration.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Accounting key: per-tenant metrics aggregate under this id.
+    pub tenant: String,
+    /// The workload selector.
+    pub problem: ProblemKind,
+    /// Full solve configuration (scheme, width, transport, grid, …).
+    pub cfg: ExperimentConfig,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            tenant: "default".into(),
+            problem: ProblemKind::ConvDiff,
+            cfg: ExperimentConfig::default(),
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse a spec from its JSON object form:
+    ///
+    /// ```text
+    /// {"tenant":"team-a","problem":"jacobi","config":{...}}
+    /// ```
+    ///
+    /// `tenant` defaults to `"default"`, `problem` to `convdiff`, and the
+    /// `config` object (missing keys → [`ExperimentConfig`] defaults) may
+    /// be omitted entirely. For hand-written one-liners the config keys
+    /// may also sit at the top level instead of under `"config"`.
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        if !matches!(v, Json::Obj(_)) {
+            return Err(Error::Config("job spec must be a JSON object".into()));
+        }
+        let tenant = v
+            .get("tenant")
+            .and_then(|x| x.as_str())
+            .unwrap_or("default")
+            .to_string();
+        let problem = match v.get("problem").and_then(|x| x.as_str()) {
+            Some(s) => ProblemKind::parse(s)?,
+            None => ProblemKind::ConvDiff,
+        };
+        let cfg = match v.get("config") {
+            Some(c) => ExperimentConfig::from_json(c)?,
+            None => ExperimentConfig::from_json(v)?,
+        };
+        let spec = JobSpec {
+            tenant,
+            problem,
+            cfg,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse from NDJSON-line text (the `repro serve` wire form).
+    pub fn parse(line: &str) -> Result<JobSpec> {
+        JobSpec::from_json(&crate::util::json::parse(line)?)
+    }
+
+    /// Serialize to the canonical nested-`config` object form.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("tenant".into(), Json::Str(self.tenant.clone()));
+        m.insert("problem".into(), Json::Str(self.problem.name().into()));
+        m.insert("config".into(), self.cfg.to_json());
+        Json::Obj(m)
+    }
+
+    /// Admission-time validation: reject obviously unrunnable specs
+    /// before they cost a queue slot. Deep topology checks still happen
+    /// in [`SolverSession`]'s `build`.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenant.is_empty() {
+            return Err(Error::Config("tenant id must be non-empty".into()));
+        }
+        let p = self.cfg.world_size();
+        if p == 0 {
+            return Err(Error::Config("process grid has zero ranks".into()));
+        }
+        if self.cfg.n < 2 {
+            return Err(Error::Config(format!("n = {} is below 2", self.cfg.n)));
+        }
+        if self.cfg.time_steps == 0 {
+            return Err(Error::Config("time_steps must be at least 1".into()));
+        }
+        if self.cfg.max_iters == 0 {
+            return Err(Error::Config("max_iters must be at least 1".into()));
+        }
+        if !(self.cfg.threshold.is_finite() && self.cfg.threshold > 0.0) {
+            return Err(Error::Config(format!(
+                "threshold {} is not a positive finite value",
+                self.cfg.threshold
+            )));
+        }
+        if self.problem == ProblemKind::Jacobi && self.cfg.n < p {
+            return Err(Error::Config(format!(
+                "jacobi needs n >= world size ({} < {p})",
+                self.cfg.n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Terminal status of a job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutcome {
+    /// Every time step met the threshold.
+    Converged,
+    /// The solve finished but at least one step hit `max_iters`.
+    MaxIters,
+    /// Cancelled while still queued; the solve never ran.
+    Cancelled,
+    /// The solve returned an error.
+    Failed(String),
+}
+
+impl JobOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobOutcome::Converged => "converged",
+            JobOutcome::MaxIters => "max_iters",
+            JobOutcome::Cancelled => "cancelled",
+            JobOutcome::Failed(_) => "failed",
+        }
+    }
+}
+
+/// What the service hands back per job: outcome, solve headline numbers
+/// and queueing telemetry.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    /// Service-assigned submission sequence number.
+    pub job_id: u64,
+    /// The submitting tenant (copied from the spec).
+    pub tenant: String,
+    /// Workload name.
+    pub problem: &'static str,
+    /// Payload width name.
+    pub precision: &'static str,
+    /// Scheme name.
+    pub scheme: &'static str,
+    pub outcome: JobOutcome,
+    /// Final-step iteration count (0 when the job never ran).
+    pub iterations: u64,
+    /// Verified final residual `r_n` (NaN when the job never ran).
+    pub r_n: f64,
+    /// Time spent queued before a worker claimed the job.
+    pub queue_wait: Duration,
+    /// Solve wall-clock (zero when the job never ran).
+    pub wall: Duration,
+}
+
+impl JobReport {
+    /// Serialize for the `repro serve` NDJSON response stream.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("job_id".into(), Json::Num(self.job_id as f64));
+        m.insert("tenant".into(), Json::Str(self.tenant.clone()));
+        m.insert("problem".into(), Json::Str(self.problem.into()));
+        m.insert("precision".into(), Json::Str(self.precision.into()));
+        m.insert("scheme".into(), Json::Str(self.scheme.into()));
+        m.insert("outcome".into(), Json::Str(self.outcome.name().into()));
+        if let JobOutcome::Failed(e) = &self.outcome {
+            m.insert("error".into(), Json::Str(e.clone()));
+        }
+        m.insert("iterations".into(), Json::Num(self.iterations as f64));
+        m.insert(
+            "r_n".into(),
+            if self.r_n.is_finite() {
+                Json::Num(self.r_n)
+            } else {
+                Json::Null
+            },
+        );
+        m.insert(
+            "queue_wait_seconds".into(),
+            Json::Num(self.queue_wait.as_secs_f64()),
+        );
+        m.insert("wall_seconds".into(), Json::Num(self.wall.as_secs_f64()));
+        Json::Obj(m)
+    }
+}
+
+/// Headline numbers [`execute`] extracts from a [`SolveReport`] (the
+/// report itself is width-generic and cannot cross the untyped service
+/// boundary).
+#[derive(Debug, Clone)]
+pub struct ExecSummary {
+    pub converged: bool,
+    pub iterations: u64,
+    pub r_n: f64,
+    pub wall: Duration,
+}
+
+fn summarize<S: Scalar>(rep: SolveReport<S>) -> ExecSummary {
+    ExecSummary {
+        converged: rep.converged,
+        iterations: rep.iterations(),
+        r_n: rep.r_n,
+        wall: rep.total_wall,
+    }
+}
+
+fn run_session<S: Scalar, P: Problem<S>>(
+    cfg: &ExperimentConfig,
+    problem: P,
+    pools: Vec<BufferPool>,
+) -> Result<ExecSummary> {
+    Ok(summarize(
+        SolverSession::<S>::builder(cfg)
+            .problem(problem)
+            .pools(pools)
+            .build()?
+            .run()?,
+    ))
+}
+
+/// Run one job spec to completion on the calling thread. The (problem ×
+/// precision) monomorphization point: everything above this call is
+/// untyped data, everything below is the generic session stack. `pools`
+/// seeds the world's per-rank buffer pools (the worker-world reuse
+/// path); pass an empty vec for fresh pools.
+pub fn execute(spec: &JobSpec, pools: Vec<BufferPool>) -> Result<ExecSummary> {
+    let cfg = &spec.cfg;
+    match (spec.problem, cfg.precision) {
+        (ProblemKind::ConvDiff, Precision::F64) => {
+            run_session::<f64, _>(cfg, ConvDiffProblem::from_config(cfg)?, pools)
+        }
+        (ProblemKind::ConvDiff, Precision::F32) => {
+            run_session::<f32, _>(cfg, ConvDiffProblem::from_config(cfg)?, pools)
+        }
+        (ProblemKind::Jacobi, Precision::F64) => run_session::<f64, _>(
+            cfg,
+            Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?,
+            pools,
+        ),
+        (ProblemKind::Jacobi, Precision::F32) => run_session::<f32, _>(
+            cfg,
+            Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?,
+            pools,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn spec_roundtrips_json() {
+        let mut spec = JobSpec::default();
+        spec.tenant = "team-a".into();
+        spec.problem = ProblemKind::Jacobi;
+        spec.cfg.n = 24;
+        spec.cfg.precision = Precision::F32;
+        let line = json::write(&spec.to_json());
+        let back = JobSpec::parse(&line).unwrap();
+        assert_eq!(back.tenant, "team-a");
+        assert_eq!(back.problem, ProblemKind::Jacobi);
+        assert_eq!(back.cfg.n, 24);
+        assert_eq!(back.cfg.precision, Precision::F32);
+    }
+
+    #[test]
+    fn spec_accepts_flat_config_keys() {
+        let spec =
+            JobSpec::parse(r#"{"tenant":"t","problem":"jacobi","n":32,"scheme":"async"}"#).unwrap();
+        assert_eq!(spec.cfg.n, 32);
+        assert!(spec.cfg.scheme.is_async());
+    }
+
+    #[test]
+    fn spec_defaults_and_empty_object() {
+        let spec = JobSpec::parse("{}").unwrap();
+        assert_eq!(spec.tenant, "default");
+        assert_eq!(spec.problem, ProblemKind::ConvDiff);
+    }
+
+    #[test]
+    fn validation_rejects_unrunnable_specs() {
+        assert!(JobSpec::parse(r#"{"time_steps":0}"#).is_err());
+        assert!(JobSpec::parse(r#"{"threshold":-1.0}"#).is_err());
+        assert!(JobSpec::parse(r#"{"n":0}"#).is_err());
+        assert!(JobSpec::parse(r#"{"problem":"jacobi","n":4}"#).is_err(), "n < world size");
+        assert!(JobSpec::parse(r#"{"problem":"heat9000"}"#).is_err());
+        assert!(JobSpec::parse(r#"[1,2]"#).is_err(), "non-object spec");
+        assert!(JobSpec::parse("not json").is_err());
+    }
+
+    #[test]
+    fn report_json_carries_outcome_and_error() {
+        let rep = JobReport {
+            job_id: 7,
+            tenant: "t".into(),
+            problem: "convdiff",
+            precision: "f64",
+            scheme: "overlapping",
+            outcome: JobOutcome::Failed("boom".into()),
+            iterations: 0,
+            r_n: f64::NAN,
+            queue_wait: Duration::from_millis(2),
+            wall: Duration::ZERO,
+        };
+        let s = json::write(&rep.to_json());
+        assert!(s.contains(r#""outcome":"failed""#));
+        assert!(s.contains(r#""error":"boom""#));
+        assert!(s.contains(r#""r_n":null"#));
+        assert_eq!(JobOutcome::Converged.name(), "converged");
+        assert_eq!(JobOutcome::MaxIters.name(), "max_iters");
+    }
+
+    #[test]
+    fn execute_runs_a_tiny_jacobi_job() {
+        let mut spec = JobSpec::default();
+        spec.problem = ProblemKind::Jacobi;
+        spec.cfg.process_grid = (2, 1, 1);
+        spec.cfg.n = 16;
+        spec.cfg.threshold = 1e-8;
+        let s = execute(&spec, Vec::new()).unwrap();
+        assert!(s.converged);
+        assert!(s.iterations > 0);
+        assert!(s.r_n < 1e-6);
+    }
+}

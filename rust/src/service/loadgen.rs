@@ -1,0 +1,181 @@
+//! Open-loop seeded load generator.
+//!
+//! Drives the service the way a latency benchmark should be driven: the
+//! arrival process is **open-loop** — job `k` arrives at a Poisson
+//! (exponential inter-arrival) timestamp that does not depend on when
+//! earlier jobs finished — so queueing delay shows up in the measured
+//! latency instead of being hidden by a closed feedback loop. Everything
+//! is derived from one [`Rng64`] seed: the same seed yields the same
+//! arrival times and the same spec sequence, which is what makes the
+//! `service_throughput` bench series and the service stress test
+//! deterministic.
+
+use std::time::Duration;
+
+use crate::config::Precision;
+use crate::util::Rng64;
+
+use super::job::{JobSpec, ProblemKind};
+
+/// One generated arrival: submit `spec` once `at` has elapsed since the
+/// run started.
+#[derive(Debug, Clone)]
+pub struct LoadArrival {
+    /// Offset from the start of the run.
+    pub at: Duration,
+    pub spec: JobSpec,
+}
+
+/// Deterministic open-loop workload source. Iterates [`LoadArrival`]s
+/// forever; cap with `.take(n)`.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    rng: Rng64,
+    rate_hz: f64,
+    clock: f64,
+    next_id: u64,
+    mix: Vec<JobSpec>,
+}
+
+impl LoadGen {
+    /// Generator with the default 8-spec mix: {convdiff, jacobi} ×
+    /// {f32, f64} × {sync, async}, sized small enough that a worker world
+    /// turns a job around in milliseconds. `rate_hz` is the mean arrival
+    /// rate; arrivals are exponentially spaced.
+    pub fn new(seed: u64, rate_hz: f64) -> LoadGen {
+        LoadGen::with_mix(seed, rate_hz, default_mix())
+    }
+
+    /// Generator drawing uniformly (seeded) from a caller-supplied mix.
+    pub fn with_mix(seed: u64, rate_hz: f64, mix: Vec<JobSpec>) -> LoadGen {
+        assert!(rate_hz > 0.0, "arrival rate must be positive");
+        assert!(!mix.is_empty(), "spec mix must be non-empty");
+        LoadGen {
+            rng: Rng64::new(seed ^ 0x10AD_6E4E),
+            rate_hz,
+            clock: 0.0,
+            next_id: 0,
+            mix,
+        }
+    }
+
+    /// Number of arrivals generated so far.
+    pub fn generated(&self) -> u64 {
+        self.next_id
+    }
+}
+
+impl Iterator for LoadGen {
+    type Item = LoadArrival;
+
+    fn next(&mut self) -> Option<LoadArrival> {
+        // Exponential inter-arrival: -ln(1-u)/λ, u ∈ [0,1). `1-u` never
+        // hits zero, so the log is finite; the 1ns floor keeps arrival
+        // times strictly increasing after Duration quantization.
+        let u = self.rng.f64();
+        self.clock += (-(1.0 - u).ln() / self.rate_hz).max(1e-9);
+        let mut spec = self.mix[self.rng.range_usize(0, self.mix.len())].clone();
+        // Vary the solve seed per job so identical specs do not replay
+        // identical network jitter, while staying a pure function of the
+        // generator seed.
+        spec.cfg.seed ^= self.next_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.next_id += 1;
+        Some(LoadArrival {
+            at: Duration::from_secs_f64(self.clock),
+            spec,
+        })
+    }
+}
+
+/// The default mixed workload: every (problem × precision × scheme)
+/// combination at service-test scale (2-rank worlds, small grids, f32
+/// thresholds clamped to the width's floor).
+pub fn default_mix() -> Vec<JobSpec> {
+    let mut mix = Vec::new();
+    for &problem in &[ProblemKind::ConvDiff, ProblemKind::Jacobi] {
+        for &precision in &[Precision::F64, Precision::F32] {
+            for &asynchronous in &[false, true] {
+                let mut spec = JobSpec::default();
+                spec.tenant = format!(
+                    "{}-{}-{}",
+                    problem.name(),
+                    precision.name(),
+                    if asynchronous { "async" } else { "sync" }
+                );
+                spec.problem = problem;
+                spec.cfg.process_grid = (2, 1, 1);
+                spec.cfg.n = match problem {
+                    ProblemKind::ConvDiff => 8,
+                    ProblemKind::Jacobi => 32,
+                };
+                spec.cfg.precision = precision;
+                if asynchronous {
+                    spec.cfg.scheme = crate::config::Scheme::Asynchronous;
+                }
+                if precision == Precision::F32 {
+                    // Same width-appropriate clamp as `repro solve`.
+                    spec.cfg.threshold = spec.cfg.threshold.max(1e-4);
+                }
+                // Keep worlds snappy: low simulated latency, no jitter in
+                // the arrival-to-done path beyond the queue itself.
+                spec.cfg.net_latency_us = 1;
+                spec.cfg.net_jitter = 0.0;
+                debug_assert!(spec.validate().is_ok());
+                mix.push(spec);
+            }
+        }
+    }
+    mix
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_arrivals() {
+        let a: Vec<LoadArrival> = LoadGen::new(42, 50.0).take(32).collect();
+        let b: Vec<LoadArrival> = LoadGen::new(42, 50.0).take(32).collect();
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.spec.tenant, y.spec.tenant);
+            assert_eq!(x.spec.cfg.seed, y.spec.cfg.seed);
+        }
+        let c: Vec<LoadArrival> = LoadGen::new(43, 50.0).take(32).collect();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at != y.at),
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_scaled() {
+        let arr: Vec<LoadArrival> = LoadGen::new(7, 100.0).take(200).collect();
+        for w in arr.windows(2) {
+            assert!(w[1].at > w[0].at, "arrival times strictly increase");
+        }
+        // Mean inter-arrival ≈ 1/rate: with 200 samples the sample mean
+        // is within a factor of 2 with overwhelming probability.
+        let mean = arr.last().unwrap().at.as_secs_f64() / arr.len() as f64;
+        assert!(mean > 0.005 && mean < 0.02, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn default_mix_covers_all_combos() {
+        let mix = default_mix();
+        assert_eq!(mix.len(), 8);
+        for spec in &mix {
+            spec.validate().unwrap();
+        }
+        assert!(mix.iter().any(|s| s.problem == ProblemKind::Jacobi
+            && s.cfg.precision == Precision::F32
+            && s.cfg.scheme.is_async()));
+        // A long draw from the generator touches every mix entry.
+        let mut seen = std::collections::BTreeSet::new();
+        for a in LoadGen::new(1, 10.0).take(256) {
+            seen.insert(a.spec.tenant.clone());
+        }
+        assert_eq!(seen.len(), 8, "all mix entries drawn: {seen:?}");
+    }
+}

@@ -1,0 +1,622 @@
+//! Multi-tenant solve service: a long-lived runtime multiplexing
+//! concurrent sessions.
+//!
+//! Everything below the solver layer is built for *one* solve at a time:
+//! a [`crate::solver::SolverSession`] owns its world, runs to
+//! completion, and tears everything down. This module adds the missing
+//! operational layer — a [`SolveService`] that stays up, accepts solve
+//! jobs from many tenants, schedules them onto a bounded pool of worker
+//! worlds, and hands back per-job [`JobReport`]s plus per-tenant
+//! [`TenantMetrics`]. The `repro serve` subcommand is its front door.
+//!
+//! # Job-spec wire format
+//!
+//! One JSON object per job ([`JobSpec`]); `repro serve` reads them
+//! newline-delimited:
+//!
+//! ```text
+//! {"tenant":"team-a",            // accounting key   (default "default")
+//!  "problem":"convdiff",         // convdiff | jacobi (default convdiff)
+//!  "config":{                    // ExperimentConfig; missing keys → defaults
+//!    "process_grid":[2,1,1], "n":8, "scheme":"async",
+//!    "precision":"f32", "threshold":1e-4, ... }}
+//! ```
+//!
+//! For hand-written one-liners the config keys may sit at the top level
+//! instead of under `"config"` (`{"problem":"jacobi","n":32}`). Specs
+//! are validated at admission ([`JobSpec::validate`]); an unrunnable
+//! spec is rejected before it costs a queue slot.
+//!
+//! # Scheduling and shedding policy
+//!
+//! * **Admission** ([`SolveService::submit`]) is strict FIFO with
+//!   explicit shedding: a spec is rejected — never silently queued or
+//!   blocked — when the bounded queue is at capacity
+//!   ([`RejectReason::QueueFull`]), when the job table is out of slots,
+//!   when the spec fails validation, or when a drain has begun
+//!   ([`RejectReason::ShuttingDown`]). Accepted jobs get a [`JobTicket`]
+//!   whose generation-tagged handle goes stale once the report has been
+//!   collected — stale tickets cannot observe a recycled slot's new
+//!   occupant.
+//! * **Workers** are OS threads, each owning a lane of per-rank
+//!   [`BufferPool`]s. A worker pops the oldest queued job, claims it
+//!   through the lock-free [`JobRegistry`] (losing the claim means the
+//!   job was cancelled while queued — it settles as `Cancelled` without
+//!   running), seeds a fresh `SolverSession` with its pool lane, and
+//!   runs the solve on its own thread plus the session's rank threads.
+//!   Consecutive jobs on one worker therefore recycle the same message
+//!   buffers: steady-state job turnover performs no pool allocations
+//!   (`PoolStats::high_water` stays flat — enforced by
+//!   `tests/service.rs`).
+//! * **Cancellation** ([`SolveService::cancel`]) only aborts jobs still
+//!   in the queue: a running solve always completes (ranks would
+//!   otherwise tear mid-protocol). Cancelled jobs still settle through a
+//!   worker so every accepted job produces exactly one report.
+//! * **Shutdown** ([`SolveService::drain`] / [`SolveService::shutdown`])
+//!   flips admission off *inside* the queue lock — nothing can slip in
+//!   after the drain begins — then in-flight jobs run to completion and
+//!   the workers exit once the queue is empty.
+//!
+//! # Workload flow
+//!
+//! ```text
+//! tenant ──submit──▶ validate ─▶ registry.insert (QUEUED) ─▶ queue
+//!                        │ reject: invalid / queue full / shutting down
+//!                        ▼
+//!                    Rejected{...}
+//! worker ◀─pop─── queue    worker: claim (QUEUED→RUNNING)
+//!   │                        │ lost claim: cancelled while queued
+//!   ▼                        ▼
+//! SolverSession::run (pools seeded from the worker's lane)
+//!   │
+//!   ▼
+//! registry.finish (→DONE) ─▶ tenant metrics ─▶ done_cv wakeup
+//!                                  │
+//! tenant ◀─collect (take; slot recycled, generation bumped)
+//! ```
+//!
+//! The queue itself is a small mutex-guarded `VecDeque` (contended for
+//! nanoseconds per job); the *job table* — the structure tickets point
+//! into, polled and mutated from every thread — is the lock-free piece
+//! ([`registry`]).
+
+pub mod job;
+pub mod loadgen;
+pub mod registry;
+
+pub use job::{execute, ExecSummary, JobOutcome, JobReport, JobSpec, ProblemKind};
+pub use loadgen::{default_mix, LoadArrival, LoadGen};
+pub use registry::{JobHandle, JobRegistry, JobState};
+
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::metrics::TenantMetrics;
+use crate::transport::{BufferPool, PoolStats};
+
+/// Tunables for a [`SolveService`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker worlds running solves concurrently (min 1).
+    pub workers: usize,
+    /// Jobs the admission queue holds before shedding (min 1).
+    pub queue_capacity: usize,
+    /// Job-table slots (queued + running + completed-but-uncollected).
+    /// 0 derives a safe default from the other two.
+    pub registry_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 64,
+            registry_capacity: 0,
+        }
+    }
+}
+
+impl ServiceConfig {
+    fn resolved_registry_capacity(&self) -> usize {
+        if self.registry_capacity > 0 {
+            self.registry_capacity
+        } else {
+            // Queue + running jobs, plus as many uncollected reports
+            // again: a submit-then-collect-later caller never hits the
+            // table before the queue.
+            2 * self.queue_capacity.max(1) + self.workers.max(1)
+        }
+    }
+}
+
+/// Why a submission was shed at admission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue (or the job table) is at capacity; `queued` is
+    /// the queue depth observed at rejection.
+    QueueFull { queued: usize },
+    /// A drain or shutdown has begun; no further jobs are admitted.
+    ShuttingDown,
+    /// The spec failed [`JobSpec::validate`].
+    Invalid(String),
+}
+
+/// Admission verdict: a ticket, or an explicit shed.
+#[derive(Debug)]
+pub enum Admission {
+    Accepted(JobTicket),
+    Rejected(RejectReason),
+}
+
+impl Admission {
+    /// The ticket, if admitted.
+    pub fn ticket(self) -> Option<JobTicket> {
+        match self {
+            Admission::Accepted(t) => Some(t),
+            Admission::Rejected(_) => None,
+        }
+    }
+
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admission::Accepted(_))
+    }
+}
+
+/// Proof of admission: the key for [`SolveService::cancel`] /
+/// [`SolveService::collect`]. Cheap to clone; stale (all operations
+/// fail) once the job's report has been collected.
+#[derive(Debug, Clone)]
+pub struct JobTicket {
+    /// Service-assigned submission sequence number.
+    pub job_id: u64,
+    /// The submitting tenant (copied from the spec).
+    pub tenant: String,
+    handle: JobHandle,
+}
+
+impl JobTicket {
+    /// The underlying registry handle (matches [`SolveService::list`]).
+    pub fn handle(&self) -> JobHandle {
+        self.handle
+    }
+}
+
+struct QueuedJob {
+    handle: JobHandle,
+    job_id: u64,
+    spec: JobSpec,
+    submitted: Instant,
+}
+
+struct QueueState {
+    q: VecDeque<QueuedJob>,
+    /// Flipped under the queue lock by drain/shutdown so no submit can
+    /// interleave past the decision.
+    accepting: bool,
+}
+
+struct Shared {
+    registry: JobRegistry<JobReport>,
+    queue: Mutex<QueueState>,
+    work_cv: Condvar,
+    /// Settled-job counter; completions mutate it (and `inflight`) under
+    /// this lock so `done_cv` waits cannot miss a wakeup.
+    done: Mutex<u64>,
+    done_cv: Condvar,
+    /// Accepted jobs not yet settled (queued + running).
+    inflight: AtomicUsize,
+    next_id: AtomicU64,
+    tenants: Mutex<BTreeMap<String, TenantMetrics>>,
+    /// One pool lane per worker: `lanes[w][rank]` seeds rank `rank` of
+    /// every world worker `w` builds, so consecutive jobs recycle
+    /// buffers. A lane is only ever locked by its own worker (per job)
+    /// and by observability reads.
+    pool_lanes: Vec<Mutex<Vec<BufferPool>>>,
+}
+
+/// The long-lived runtime. See the module docs for the full policy.
+pub struct SolveService {
+    shared: Arc<Shared>,
+    queue_capacity: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SolveService {
+    /// Spawn the worker threads and start accepting jobs.
+    pub fn start(cfg: ServiceConfig) -> SolveService {
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            registry: JobRegistry::new(cfg.resolved_registry_capacity()),
+            queue: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                accepting: true,
+            }),
+            work_cv: Condvar::new(),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            inflight: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            tenants: Mutex::new(BTreeMap::new()),
+            pool_lanes: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("solve-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        SolveService {
+            shared,
+            queue_capacity: cfg.queue_capacity.max(1),
+            workers: handles,
+        }
+    }
+
+    /// Admit one job, or shed it with an explicit reason — never blocks
+    /// on a full queue.
+    pub fn submit(&self, spec: JobSpec) -> Admission {
+        if let Err(e) = spec.validate() {
+            self.count_rejected(&spec.tenant);
+            return Admission::Rejected(RejectReason::Invalid(e.to_string()));
+        }
+        let tenant = spec.tenant.clone();
+        let verdict = {
+            let mut st = self.shared.queue.lock().unwrap();
+            if !st.accepting {
+                Admission::Rejected(RejectReason::ShuttingDown)
+            } else if st.q.len() >= self.queue_capacity {
+                Admission::Rejected(RejectReason::QueueFull { queued: st.q.len() })
+            } else if let Some(handle) = self.shared.registry.insert() {
+                let job_id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+                st.q.push_back(QueuedJob {
+                    handle,
+                    job_id,
+                    spec,
+                    submitted: Instant::now(),
+                });
+                self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+                self.shared.work_cv.notify_one();
+                Admission::Accepted(JobTicket {
+                    job_id,
+                    tenant: tenant.clone(),
+                    handle,
+                })
+            } else {
+                // Job table exhausted (uncollected reports hold slots).
+                Admission::Rejected(RejectReason::QueueFull { queued: st.q.len() })
+            }
+        };
+        let mut t = self.shared.tenants.lock().unwrap();
+        let row = t.entry(tenant).or_default();
+        match verdict {
+            Admission::Accepted(_) => row.submitted += 1,
+            Admission::Rejected(_) => row.rejected += 1,
+        }
+        drop(t);
+        verdict
+    }
+
+    fn count_rejected(&self, tenant: &str) {
+        let mut t = self.shared.tenants.lock().unwrap();
+        t.entry(tenant.to_string()).or_default().rejected += 1;
+    }
+
+    /// Cancel a job still waiting in the queue. `false` once it is
+    /// running, settled, or the ticket is stale. A successful cancel
+    /// still yields a (`Cancelled`) report to collect.
+    pub fn cancel(&self, ticket: &JobTicket) -> bool {
+        self.shared.registry.cancel(ticket.handle)
+    }
+
+    /// Current state of a ticket's job (`None` once collected).
+    pub fn state(&self, ticket: &JobTicket) -> Option<JobState> {
+        self.shared.registry.state(ticket.handle)
+    }
+
+    /// Snapshot of every open job in the table.
+    pub fn list(&self) -> Vec<(JobHandle, JobState)> {
+        self.shared.registry.list()
+    }
+
+    /// Non-blocking collect: the report if the job has settled, else
+    /// `None` (also `None` for stale tickets).
+    pub fn try_collect(&self, ticket: &JobTicket) -> Option<JobReport> {
+        self.shared.registry.take(ticket.handle)
+    }
+
+    /// Blocking collect with a deadline. Exactly one concurrent caller
+    /// obtains the report; the slot is recycled on return.
+    pub fn collect(&self, ticket: &JobTicket, timeout: Duration) -> Option<JobReport> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(r) = self.shared.registry.take(ticket.handle) {
+                return Some(r);
+            }
+            self.shared.registry.state(ticket.handle)?; // stale: collected elsewhere
+            let settled = self.shared.done.lock().unwrap();
+            // Re-check under the lock: a settle between the take above
+            // and this acquire would otherwise be sleepable-past.
+            if let Some(r) = self.shared.registry.take(ticket.handle) {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            drop(
+                self.shared
+                    .done_cv
+                    .wait_timeout(settled, deadline - now)
+                    .unwrap()
+                    .0,
+            );
+        }
+    }
+
+    /// Stop admitting and wait (bounded) for every accepted job to
+    /// settle. Returns `true` when fully drained; the workers stay alive
+    /// either way until [`SolveService::shutdown`] / drop. Idempotent.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.accepting = false;
+        }
+        self.shared.work_cv.notify_all();
+        let deadline = Instant::now() + timeout;
+        let mut settled = self.shared.done.lock().unwrap();
+        while self.shared.inflight.load(Ordering::Acquire) > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            settled = self
+                .shared
+                .done_cv
+                .wait_timeout(settled, deadline - now)
+                .unwrap()
+                .0;
+        }
+        true
+    }
+
+    /// Graceful shutdown: drain in-flight jobs (unbounded), join the
+    /// workers, and return the final per-tenant metrics. Uncollected
+    /// reports should be collected *before* calling this.
+    pub fn shutdown(mut self) -> BTreeMap<String, TenantMetrics> {
+        self.stop_and_join();
+        self.tenant_metrics()
+    }
+
+    fn stop_and_join(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.accepting = false;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Per-tenant accounting snapshot.
+    pub fn tenant_metrics(&self) -> BTreeMap<String, TenantMetrics> {
+        self.shared.tenants.lock().unwrap().clone()
+    }
+
+    /// Aggregate of every tenant row.
+    pub fn total_metrics(&self) -> TenantMetrics {
+        let mut total = TenantMetrics::default();
+        for row in self.shared.tenants.lock().unwrap().values() {
+            total.merge(row);
+        }
+        total
+    }
+
+    /// Counter snapshots of one worker's per-rank pool lane (lane index
+    /// = worker index; one entry per rank the worker has ever hosted).
+    pub fn pool_stats(&self, worker: usize) -> Vec<PoolStats> {
+        self.shared
+            .pool_lanes
+            .get(worker)
+            .map(|lane| lane.lock().unwrap().iter().map(|p| p.stats()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.shared.pool_lanes.len()
+    }
+
+    /// Jobs currently waiting in the queue.
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().q.len()
+    }
+
+    /// Accepted jobs not yet settled (queued + running).
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for SolveService {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One worker thread: pop → claim → solve (pool lane seeded) → settle,
+/// until the queue is empty *and* admission is off.
+fn worker_loop(shared: &Shared, worker: usize) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = st.q.pop_front() {
+                    break Some(j);
+                }
+                if !st.accepting {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else { return };
+        let queue_wait = job.submitted.elapsed();
+
+        let mut report = JobReport {
+            job_id: job.job_id,
+            tenant: job.spec.tenant.clone(),
+            problem: job.spec.problem.name(),
+            precision: job.spec.cfg.precision.name(),
+            scheme: job.spec.cfg.scheme.name(),
+            outcome: JobOutcome::Cancelled,
+            iterations: 0,
+            r_n: f64::NAN,
+            queue_wait,
+            wall: Duration::ZERO,
+        };
+
+        if shared.registry.claim(job.handle) {
+            // Exclusive claim won: run the solve with this worker's pool
+            // lane so the world's per-rank pools persist across jobs.
+            let pools = lane_pools(shared, worker, job.spec.cfg.world_size());
+            let t0 = Instant::now();
+            let result = catch_unwind(AssertUnwindSafe(|| execute(&job.spec, pools)));
+            report.wall = t0.elapsed();
+            report.outcome = match result {
+                Ok(Ok(s)) => {
+                    report.iterations = s.iterations;
+                    report.r_n = s.r_n;
+                    if s.converged {
+                        JobOutcome::Converged
+                    } else {
+                        JobOutcome::MaxIters
+                    }
+                }
+                Ok(Err(e)) => JobOutcome::Failed(e.to_string()),
+                Err(_) => JobOutcome::Failed(
+                    Error::Protocol("solve panicked (see stderr)".into()).to_string(),
+                ),
+            };
+        }
+        // else: cancelled while queued — settle the Cancelled report so
+        // the submitter's collect() still completes.
+
+        settle(shared, &job, report);
+    }
+}
+
+/// Clone the worker's per-rank pool handles, growing the lane to `world`
+/// ranks on first use.
+fn lane_pools(shared: &Shared, worker: usize, world: usize) -> Vec<BufferPool> {
+    let mut lane = shared.pool_lanes[worker].lock().unwrap();
+    while lane.len() < world {
+        lane.push(BufferPool::new());
+    }
+    lane[..world].to_vec()
+}
+
+/// Publish the terminal report, update tenant accounting, and wake
+/// collectors/drainers. The inflight decrement happens under the done
+/// lock so a drain can never miss the last settle.
+fn settle(shared: &Shared, job: &QueuedJob, report: JobReport) {
+    let outcome = report.outcome.clone();
+    let iterations = report.iterations;
+    let queue_wait = report.queue_wait;
+    let wall = report.wall;
+    let published = shared.registry.finish(job.handle, report);
+    debug_assert!(published, "exactly one settle per job");
+
+    {
+        let mut t = shared.tenants.lock().unwrap();
+        let row = t.entry(job.spec.tenant.clone()).or_default();
+        match &outcome {
+            JobOutcome::Converged => {
+                row.completed += 1;
+                row.converged += 1;
+            }
+            JobOutcome::MaxIters => row.completed += 1,
+            JobOutcome::Cancelled => row.cancelled += 1,
+            JobOutcome::Failed(_) => row.failed += 1,
+        }
+        row.iterations += iterations;
+        row.queue_wait += queue_wait;
+        row.max_queue_wait = row.max_queue_wait.max(queue_wait);
+        row.wall += wall;
+    }
+
+    let mut settled = shared.done.lock().unwrap();
+    *settled += 1;
+    shared.inflight.fetch_sub(1, Ordering::AcqRel);
+    drop(settled);
+    shared.done_cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_jacobi() -> JobSpec {
+        let mut spec = JobSpec::default();
+        spec.tenant = "unit".into();
+        spec.problem = ProblemKind::Jacobi;
+        spec.cfg.process_grid = (2, 1, 1);
+        spec.cfg.n = 16;
+        spec.cfg.net_latency_us = 1;
+        spec.cfg.net_jitter = 0.0;
+        spec
+    }
+
+    #[test]
+    fn submit_collect_roundtrip() {
+        let svc = SolveService::start(ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        });
+        let ticket = svc.submit(tiny_jacobi()).ticket().expect("admitted");
+        let rep = svc
+            .collect(&ticket, Duration::from_secs(60))
+            .expect("settles");
+        assert_eq!(rep.outcome, JobOutcome::Converged);
+        assert_eq!(rep.job_id, ticket.job_id);
+        assert!(rep.iterations > 0);
+        // The slot is recycled: the ticket is stale everywhere.
+        assert!(svc.try_collect(&ticket).is_none());
+        assert!(svc.state(&ticket).is_none());
+        let m = svc.shutdown();
+        assert_eq!(m["unit"].submitted, 1);
+        assert_eq!(m["unit"].converged, 1);
+    }
+
+    #[test]
+    fn invalid_spec_is_shed_with_reason() {
+        let svc = SolveService::start(ServiceConfig::default());
+        let mut bad = tiny_jacobi();
+        bad.cfg.time_steps = 0;
+        match svc.submit(bad) {
+            Admission::Rejected(RejectReason::Invalid(m)) => {
+                assert!(m.contains("time_steps"), "{m}")
+            }
+            other => panic!("expected Invalid rejection, got {other:?}"),
+        }
+        assert_eq!(svc.tenant_metrics()["unit"].rejected, 1);
+    }
+
+    #[test]
+    fn submit_after_drain_is_shed() {
+        let svc = SolveService::start(ServiceConfig::default());
+        assert!(svc.drain(Duration::from_secs(10)));
+        match svc.submit(tiny_jacobi()) {
+            Admission::Rejected(RejectReason::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+    }
+}

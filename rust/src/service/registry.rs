@@ -1,0 +1,412 @@
+//! Lock-free, slot-stable job registry.
+//!
+//! The service needs to list and cancel in-flight jobs from arbitrary
+//! threads without a global lock, and handles must go stale the moment a
+//! slot is recycled. Following the atomic ordered-vec idiom from the
+//! related-work snippets (and the [`crate::transport::BufferPool`] slot
+//! layout), the registry is a fixed array of slots, each one word of
+//! atomic state:
+//!
+//! ```text
+//! tag = (generation << 3) | state      state ∈ {EMPTY, QUEUED, RUNNING,
+//!                                               DONE, CANCELLED}
+//! ```
+//!
+//! Every transition is a single `compare_exchange` on that word, so
+//! add/claim/cancel/free never block and never race: exactly one CAS
+//! winner moves a slot between states. A [`JobHandle`] carries the slot
+//! index *and* the generation it was issued under; freeing a slot bumps
+//! the generation, so stale handles fail every subsequent operation
+//! (no ABA — a recycled slot is unreachable through old handles).
+//!
+//! The completed record travels through an `AtomicPtr` beside the tag:
+//! the finishing worker publishes a boxed record *before* the
+//! `RUNNING/CANCELLED → DONE` transition (release ordering), and
+//! [`JobRegistry::take`] first wins a `DONE → TAKING` CAS — so exactly
+//! one concurrent taker gets exclusive right to the pointer — then
+//! claims the record and frees the slot. A taker that loses the CAS can
+//! never touch the pointer, so a recycled slot's next occupant is
+//! unreachable from slow takers of the old generation.
+
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+/// Slot lifecycle states (low 3 bits of the tag word).
+const EMPTY: u64 = 0;
+const QUEUED: u64 = 1;
+const RUNNING: u64 = 2;
+const DONE: u64 = 3;
+const CANCELLED: u64 = 4;
+/// Transient: a `take` won the slot and is extracting the record.
+const TAKING: u64 = 5;
+
+const STATE_BITS: u32 = 3;
+const STATE_MASK: u64 = (1 << STATE_BITS) - 1;
+
+#[inline]
+fn pack(generation: u64, state: u64) -> u64 {
+    (generation << STATE_BITS) | state
+}
+
+#[inline]
+fn state_of(tag: u64) -> u64 {
+    tag & STATE_MASK
+}
+
+#[inline]
+fn generation_of(tag: u64) -> u64 {
+    tag >> STATE_BITS
+}
+
+/// Observable state of a registered job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a worker.
+    Queued,
+    /// Claimed by a worker; the solve is running.
+    Running,
+    /// Terminal: a report is available for [`JobRegistry::take`].
+    Done,
+    /// Cancelled while queued; a worker will still publish a
+    /// `Cancelled`-outcome report (the state then becomes `Done`).
+    Cancelled,
+}
+
+/// Generation-tagged reference to a registry slot. Copyable and
+/// cross-thread; goes stale (every operation returns `false`/`None`)
+/// once the slot's record has been taken and the slot recycled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobHandle {
+    slot: usize,
+    generation: u64,
+}
+
+impl JobHandle {
+    /// Slot index (stable for the handle's lifetime).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Generation the handle was issued under.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+struct Slot<R> {
+    tag: AtomicU64,
+    record: AtomicPtr<R>,
+}
+
+/// Fixed-capacity, lock-free job table. `R` is the terminal record type
+/// published at completion (the service's `JobReport`).
+pub struct JobRegistry<R> {
+    slots: Box<[Slot<R>]>,
+}
+
+// The registry owns `R`s through raw pointers; sharing it across threads
+// moves those `R`s across threads, hence the explicit bounds.
+unsafe impl<R: Send> Send for JobRegistry<R> {}
+unsafe impl<R: Send> Sync for JobRegistry<R> {}
+
+impl<R: Send> JobRegistry<R> {
+    /// Registry with room for `capacity` simultaneously-open jobs
+    /// (queued + running + completed-but-uncollected). Min 1.
+    pub fn new(capacity: usize) -> Self {
+        let slots: Box<[Slot<R>]> = (0..capacity.max(1))
+            .map(|_| Slot {
+                tag: AtomicU64::new(pack(0, EMPTY)),
+                record: AtomicPtr::new(ptr::null_mut()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        JobRegistry { slots }
+    }
+
+    /// Total slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently not `EMPTY` (approximate under concurrency).
+    pub fn open_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| state_of(s.tag.load(Ordering::Relaxed)) != EMPTY)
+            .count()
+    }
+
+    /// Claim a free slot for a new queued job. `None` when the registry
+    /// is full (the caller surfaces this as admission shedding).
+    pub fn insert(&self) -> Option<JobHandle> {
+        for (i, s) in self.slots.iter().enumerate() {
+            let tag = s.tag.load(Ordering::Acquire);
+            if state_of(tag) != EMPTY {
+                continue;
+            }
+            let generation = generation_of(tag);
+            if s.tag
+                .compare_exchange(
+                    tag,
+                    pack(generation, QUEUED),
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                return Some(JobHandle { slot: i, generation });
+            }
+        }
+        None
+    }
+
+    #[inline]
+    fn cas_state(&self, h: JobHandle, from: u64, to: u64) -> bool {
+        let Some(s) = self.slots.get(h.slot) else {
+            return false;
+        };
+        s.tag
+            .compare_exchange(
+                pack(h.generation, from),
+                pack(h.generation, to),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Cancel a job that is still queued. Exactly one of `cancel` and
+    /// [`JobRegistry::claim`] wins for a given job; stale handles and
+    /// running/done jobs return `false`.
+    pub fn cancel(&self, h: JobHandle) -> bool {
+        self.cas_state(h, QUEUED, CANCELLED)
+    }
+
+    /// Worker-side: move a dequeued job to `Running`. `false` means the
+    /// job was cancelled while queued (the worker then publishes a
+    /// cancelled-outcome record instead of solving).
+    pub fn claim(&self, h: JobHandle) -> bool {
+        self.cas_state(h, QUEUED, RUNNING)
+    }
+
+    /// Worker-side: publish the terminal record and move the slot to
+    /// `Done`. Valid from `Running` (normal completion) and `Cancelled`
+    /// (the cancellation acknowledgement). Returns `false` — and drops
+    /// the record — on a stale handle.
+    pub fn finish(&self, h: JobHandle, record: R) -> bool {
+        let Some(s) = self.slots.get(h.slot) else {
+            return false;
+        };
+        // Stale handles bail before touching the pointer: the slot may
+        // already belong to a newer generation's job.
+        if generation_of(s.tag.load(Ordering::Acquire)) != h.generation {
+            return false;
+        }
+        let boxed = Box::into_raw(Box::new(record));
+        // Publish the record first; the state store below releases it.
+        let prev = s.record.swap(boxed, Ordering::AcqRel);
+        debug_assert!(prev.is_null(), "finish: record already published");
+        if !prev.is_null() {
+            // Defensive: never leak a displaced record.
+            drop(unsafe { Box::from_raw(prev) });
+        }
+        if self.cas_state(h, RUNNING, DONE) || self.cas_state(h, CANCELLED, DONE) {
+            return true;
+        }
+        // Stale handle (or protocol misuse): reclaim the record.
+        let p = s.record.swap(ptr::null_mut(), Ordering::AcqRel);
+        if p == boxed {
+            // SAFETY: we published `boxed` above and just swapped it back
+            // out, so ownership returned to us.
+            drop(unsafe { Box::from_raw(p) });
+        }
+        false
+    }
+
+    /// Current state of the job, or `None` for a stale handle.
+    pub fn state(&self, h: JobHandle) -> Option<JobState> {
+        let s = self.slots.get(h.slot)?;
+        let tag = s.tag.load(Ordering::Acquire);
+        if generation_of(tag) != h.generation {
+            return None;
+        }
+        match state_of(tag) {
+            QUEUED => Some(JobState::Queued),
+            RUNNING => Some(JobState::Running),
+            DONE => Some(JobState::Done),
+            CANCELLED => Some(JobState::Cancelled),
+            _ => None,
+        }
+    }
+
+    /// Take the completed record and recycle the slot (generation bump:
+    /// the handle — and any copy of it — is stale afterwards). `None`
+    /// when the job is not yet `Done`, when another taker won, or when
+    /// the handle is stale.
+    pub fn take(&self, h: JobHandle) -> Option<R> {
+        // Win the slot first: exactly one concurrent taker makes the
+        // DONE → TAKING transition and gains exclusive right to the
+        // record pointer. Losers (and stale handles) never touch it, so
+        // a slow taker cannot reach into the slot's next occupant.
+        if !self.cas_state(h, DONE, TAKING) {
+            return None;
+        }
+        let s = &self.slots[h.slot];
+        let p = s.record.swap(ptr::null_mut(), Ordering::AcqRel);
+        debug_assert!(!p.is_null(), "a DONE slot always carries a record");
+        // Free the slot last so no insert can land while the record
+        // pointer is still set. The generation bump invalidates every
+        // outstanding copy of the handle.
+        s.tag
+            .store(pack(h.generation + 1, EMPTY), Ordering::Release);
+        if p.is_null() {
+            return None;
+        }
+        // SAFETY: the TAKING claim transferred exclusive ownership of
+        // the record published by `finish`.
+        Some(*unsafe { Box::from_raw(p) })
+    }
+
+    /// Snapshot of all open jobs (handle + state). Lock-free; entries
+    /// observed mid-transition reflect one side of the transition.
+    pub fn list(&self) -> Vec<(JobHandle, JobState)> {
+        let mut out = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            let tag = s.tag.load(Ordering::Acquire);
+            let state = match state_of(tag) {
+                QUEUED => JobState::Queued,
+                RUNNING => JobState::Running,
+                DONE => JobState::Done,
+                CANCELLED => JobState::Cancelled,
+                _ => continue,
+            };
+            out.push((
+                JobHandle {
+                    slot: i,
+                    generation: generation_of(tag),
+                },
+                state,
+            ));
+        }
+        out
+    }
+}
+
+impl<R> Drop for JobRegistry<R> {
+    fn drop(&mut self) {
+        for s in self.slots.iter() {
+            let p = s.record.swap(ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: a non-null record pointer was published by
+                // `finish` and never taken; the swap transferred
+                // ownership here.
+                drop(unsafe { Box::from_raw(p) });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifecycle_queued_running_done_take() {
+        let reg = JobRegistry::<u32>::new(2);
+        let h = reg.insert().unwrap();
+        assert_eq!(reg.state(h), Some(JobState::Queued));
+        assert!(reg.claim(h));
+        assert_eq!(reg.state(h), Some(JobState::Running));
+        assert!(reg.finish(h, 42));
+        assert_eq!(reg.state(h), Some(JobState::Done));
+        assert_eq!(reg.take(h), Some(42));
+        // Slot recycled: the handle is stale in every operation.
+        assert_eq!(reg.state(h), None);
+        assert_eq!(reg.take(h), None);
+        assert!(!reg.cancel(h));
+        assert!(!reg.claim(h));
+        assert!(!reg.finish(h, 7), "stale finish must drop the record");
+    }
+
+    #[test]
+    fn cancel_beats_claim_exactly_once() {
+        let reg = JobRegistry::<u32>::new(1);
+        let h = reg.insert().unwrap();
+        assert!(reg.cancel(h));
+        assert!(!reg.claim(h), "claim after cancel must fail");
+        assert!(!reg.cancel(h), "double cancel must fail");
+        // The worker acknowledges the cancellation with a record.
+        assert!(reg.finish(h, 9));
+        assert_eq!(reg.take(h), Some(9));
+    }
+
+    #[test]
+    fn full_registry_rejects_inserts() {
+        let reg = JobRegistry::<u32>::new(2);
+        let a = reg.insert().unwrap();
+        let _b = reg.insert().unwrap();
+        assert!(reg.insert().is_none(), "capacity 2 is full");
+        assert_eq!(reg.open_count(), 2);
+        // Freeing one slot re-admits.
+        assert!(reg.claim(a));
+        assert!(reg.finish(a, 1));
+        assert_eq!(reg.take(a), Some(1));
+        assert!(reg.insert().is_some());
+    }
+
+    #[test]
+    fn recycled_slot_generation_rejects_old_handle() {
+        let reg = JobRegistry::<u32>::new(1);
+        let old = reg.insert().unwrap();
+        assert!(reg.claim(old));
+        assert!(reg.finish(old, 1));
+        assert_eq!(reg.take(old), Some(1));
+        let new = reg.insert().unwrap();
+        assert_eq!(new.slot(), old.slot(), "same slot reused");
+        assert_eq!(new.generation(), old.generation() + 1);
+        // The old handle must not touch the new occupant.
+        assert!(!reg.cancel(old));
+        assert_eq!(reg.state(old), None);
+        assert_eq!(reg.state(new), Some(JobState::Queued));
+    }
+
+    #[test]
+    fn list_reports_open_jobs() {
+        let reg = JobRegistry::<u32>::new(4);
+        let a = reg.insert().unwrap();
+        let b = reg.insert().unwrap();
+        reg.claim(a);
+        let l = reg.list();
+        assert_eq!(l.len(), 2);
+        assert!(l.contains(&(a, JobState::Running)));
+        assert!(l.contains(&(b, JobState::Queued)));
+    }
+
+    #[test]
+    fn concurrent_take_hands_record_to_exactly_one() {
+        for _ in 0..50 {
+            let reg = Arc::new(JobRegistry::<u64>::new(1));
+            let h = reg.insert().unwrap();
+            assert!(reg.claim(h));
+            assert!(reg.finish(h, 77));
+            let won = Arc::new(AtomicUsize::new(0));
+            let threads: Vec<_> = (0..4)
+                .map(|_| {
+                    let reg = reg.clone();
+                    let won = won.clone();
+                    std::thread::spawn(move || {
+                        if reg.take(h).is_some() {
+                            won.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().unwrap();
+            }
+            assert_eq!(won.load(Ordering::Relaxed), 1);
+        }
+    }
+}

@@ -24,6 +24,12 @@ pub struct WorldConfig {
     /// the solver drivers to emulate heterogeneous nodes; empty means
     /// homogeneous.
     pub rank_speed: Vec<f64>,
+    /// Pre-warmed per-rank message-buffer pools: `pools[i]` becomes rank
+    /// `i`'s [`BufferPool`] (missing entries get a fresh pool). Lets a
+    /// long-lived runtime (the solve service) carry recycled storage
+    /// across consecutive worlds so steady-state job turnover stays
+    /// allocation-free.
+    pub pools: Vec<BufferPool>,
 }
 
 impl WorldConfig {
@@ -33,6 +39,7 @@ impl WorldConfig {
             network: NetworkModel::default(),
             seed: 0xC0FFEE,
             rank_speed: Vec::new(),
+            pools: Vec::new(),
         }
     }
 
@@ -48,6 +55,12 @@ impl WorldConfig {
 
     pub fn with_rank_speed(mut self, speed: Vec<f64>) -> Self {
         self.rank_speed = speed;
+        self
+    }
+
+    /// Seed per-rank buffer pools (see [`WorldConfig::pools`]).
+    pub fn with_pools(mut self, pools: Vec<BufferPool>) -> Self {
+        self.pools = pools;
         self
     }
 
@@ -125,7 +138,7 @@ impl World {
                 shared: shared.clone(),
                 delay: LinkDelay::new(config.network.clone(), config.seed, rank, config.size),
                 speed: config.speed_of(rank),
-                pool: BufferPool::new(),
+                pool: config.pools.get(rank).cloned().unwrap_or_default(),
             })
             .collect();
         (World { shared, config }, endpoints)

@@ -34,7 +34,7 @@ use crate::metrics::RankMetrics;
 use crate::problem::{ConvDiffProblem, Problem, ProblemWorker};
 use crate::scalar::Scalar;
 use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
-use crate::transport::{ShmConfig, ShmWorld, Transport};
+use crate::transport::{BufferPool, ShmConfig, ShmWorld, Transport};
 
 /// Aggregated per-time-step results.
 #[derive(Debug, Clone)]
@@ -71,6 +71,11 @@ pub struct SolveReport<S: Scalar = f64> {
     /// Verified final residual `‖B − A Ũ‖∞` (paper's `r_n`), evaluated
     /// by the problem's sequential `f64` oracle.
     pub r_n: f64,
+    /// True when every time step terminated below the configured
+    /// threshold (`reported_norm ≤ threshold`); false means at least one
+    /// step hit `max_iters` first. `repro solve` exits nonzero on false,
+    /// and the solve service maps it to `JobOutcome::MaxIters`.
+    pub converged: bool,
     pub per_rank: Vec<RankMetrics>,
 }
 
@@ -113,6 +118,7 @@ pub struct SolverSessionBuilder<S: Scalar, P> {
     cfg: ExperimentConfig,
     backend: Backend,
     transport: TransportKind,
+    pools: Vec<BufferPool>,
     problem: P,
     _scalar: PhantomData<S>,
 }
@@ -137,6 +143,17 @@ impl<S: Scalar, P> SolverSessionBuilder<S, P> {
         self.cfg.termination = termination;
         self
     }
+
+    /// Seed per-rank message-buffer pools: `pools[i]` becomes rank `i`'s
+    /// [`BufferPool`] in the world this session builds (missing entries
+    /// get fresh pools). A long-lived caller — the solve service's worker
+    /// worlds — passes the same handles to consecutive sessions so
+    /// steady-state job turnover reuses recycled storage instead of
+    /// reallocating per job.
+    pub fn pools(mut self, pools: Vec<BufferPool>) -> Self {
+        self.pools = pools;
+        self
+    }
 }
 
 impl<S: Scalar> SolverSessionBuilder<S, NoProblem> {
@@ -147,6 +164,7 @@ impl<S: Scalar> SolverSessionBuilder<S, NoProblem> {
             cfg: self.cfg,
             backend: self.backend,
             transport: self.transport,
+            pools: self.pools,
             problem,
             _scalar: PhantomData,
         }
@@ -175,6 +193,7 @@ impl<S: Scalar, P: Problem<S>> SolverSessionBuilder<S, P> {
             cfg: self.cfg,
             backend: self.backend,
             transport: self.transport,
+            pools: self.pools,
             problem: self.problem,
             _scalar: PhantomData,
         })
@@ -192,6 +211,7 @@ pub struct SolverSession<S: Scalar = f64, P = NoProblem> {
     cfg: ExperimentConfig,
     backend: Backend,
     transport: TransportKind,
+    pools: Vec<BufferPool>,
     problem: P,
     _scalar: PhantomData<S>,
 }
@@ -205,6 +225,7 @@ impl<S: Scalar> SolverSession<S> {
             cfg: cfg.clone(),
             backend: cfg.backend,
             transport: cfg.transport,
+            pools: Vec::new(),
             problem: NoProblem,
             _scalar: PhantomData,
         }
@@ -265,6 +286,7 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
                     network,
                     seed: cfg.seed,
                     rank_speed: cfg.rank_speed.clone(),
+                    pools: self.pools.clone(),
                 };
                 let (_world, eps) = World::new(world_cfg);
                 spawn_ranks(eps, graphs, workers, cfg)?
@@ -273,7 +295,9 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
                 // Real transport: no network model to configure — latency
                 // is whatever the hardware does. Heterogeneity still
                 // applies.
-                let shm_cfg = ShmConfig::homogeneous(p).with_rank_speed(cfg.rank_speed.clone());
+                let shm_cfg = ShmConfig::homogeneous(p)
+                    .with_rank_speed(cfg.rank_speed.clone())
+                    .with_pools(self.pools.clone());
                 let (_world, eps) = ShmWorld::new(shm_cfg);
                 spawn_ranks(eps, graphs, workers, cfg)?
             }
@@ -333,6 +357,14 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
         let b_global = self.problem.rhs_global(&prev);
         let r_n = self.problem.residual_max_norm(&widen(&solution), &b_global);
 
+        // Converged = every step's library-reported norm met the target.
+        // A step that exhausted `max_iters` exits with its norm above the
+        // threshold (or non-finite), which is exactly what this detects.
+        let converged = !steps.is_empty()
+            && steps
+                .iter()
+                .all(|s| s.reported_norm.is_finite() && s.reported_norm <= cfg.threshold);
+
         Ok(SolveReport {
             scheme: cfg.scheme,
             backend: self.backend,
@@ -343,6 +375,7 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
             steps,
             solution,
             r_n,
+            converged,
             per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
         })
     }

@@ -32,7 +32,7 @@
 use std::fmt;
 use std::mem::ManuallyDrop;
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::msgbuf::MsgBuf;
@@ -80,6 +80,15 @@ pub struct PoolStats {
     pub recycled: u64,
     /// Buffers dropped on release because the free list was full.
     pub dropped: u64,
+    /// Buffers currently checked out: acquires minus releases. Negative
+    /// values are legal — a pool may adopt buffers it never handed out
+    /// (address-swap delivery releases the displaced *user* buffer here).
+    pub outstanding: i64,
+    /// High-water mark of [`PoolStats::outstanding`]: the most buffers
+    /// this pool ever had in flight at once. The solve-service test
+    /// suite bounds this across back-to-back jobs to prove worker worlds
+    /// reuse pooled storage instead of regrowing per job.
+    pub high_water: i64,
 }
 
 struct PoolInner {
@@ -88,6 +97,8 @@ struct PoolInner {
     reuses: AtomicU64,
     recycled: AtomicU64,
     dropped: AtomicU64,
+    outstanding: AtomicI64,
+    high_water: AtomicI64,
 }
 
 impl Drop for PoolInner {
@@ -143,6 +154,8 @@ impl BufferPool {
                 reuses: AtomicU64::new(0),
                 recycled: AtomicU64::new(0),
                 dropped: AtomicU64::new(0),
+                outstanding: AtomicI64::new(0),
+                high_water: AtomicI64::new(0),
             }),
         }
     }
@@ -212,7 +225,7 @@ impl BufferPool {
     }
 
     fn acquire_vec(&self, len: usize) -> Vec<f64> {
-        match self.take_free(len) {
+        let v = match self.take_free(len) {
             Some(v) => {
                 if v.capacity() >= len {
                     self.inner.reuses.fetch_add(1, Ordering::Relaxed);
@@ -226,7 +239,16 @@ impl BufferPool {
                 self.inner.allocations.fetch_add(1, Ordering::Relaxed);
                 Vec::with_capacity(len)
             }
+        };
+        // Count the checkout only when the buffer will come back through
+        // `release` — symmetric with release's zero-capacity early
+        // return (a zero-len miss hands out a capacity-0 vec that
+        // release ignores).
+        if len > 0 || v.capacity() > 0 {
+            let live = self.inner.outstanding.fetch_add(1, Ordering::Relaxed) + 1;
+            self.inner.high_water.fetch_max(live, Ordering::Relaxed);
         }
+        v
     }
 
     /// Size-aware scan: the first parked buffer with capacity ≥ `len`, or
@@ -299,6 +321,7 @@ impl BufferPool {
         if v.capacity() == 0 {
             return;
         }
+        self.inner.outstanding.fetch_sub(1, Ordering::Relaxed);
         if self.park(v) {
             self.inner.recycled.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -313,6 +336,8 @@ impl BufferPool {
             reuses: self.inner.reuses.load(Ordering::Relaxed),
             recycled: self.inner.recycled.load(Ordering::Relaxed),
             dropped: self.inner.dropped.load(Ordering::Relaxed),
+            outstanding: self.inner.outstanding.load(Ordering::Relaxed),
+            high_water: self.inner.high_water.load(Ordering::Relaxed),
         }
     }
 
@@ -440,6 +465,34 @@ mod tests {
         pool.release(Vec::new());
         assert_eq!(pool.free_len(), 0);
         assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn outstanding_and_high_water_track_checkouts() {
+        let pool = BufferPool::new();
+        let a = pool.acquire(8);
+        let b = pool.acquire(8);
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 2);
+        assert_eq!(s.high_water, 2);
+        drop(a);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 0);
+        assert_eq!(s.high_water, 2, "high-water mark is monotone");
+        drop(pool.acquire(8));
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 0);
+        assert_eq!(s.high_water, 2, "steady-state reuse stays under the mark");
+    }
+
+    #[test]
+    fn adopted_release_may_go_negative() {
+        let pool = BufferPool::new();
+        pool.release(vec![1.0; 4]); // adopted: never acquired from this pool
+        let s = pool.stats();
+        assert_eq!(s.outstanding, -1);
+        assert_eq!(s.high_water, 0);
     }
 
     #[test]

@@ -280,6 +280,12 @@ pub struct ShmConfig {
     /// homogeneous). Consumed by the solver drivers, exactly as
     /// [`crate::simmpi::WorldConfig::rank_speed`].
     pub rank_speed: Vec<f64>,
+    /// Pre-warmed per-rank buffer pools (`pools[i]` → rank `i`; missing
+    /// entries get a fresh pool), exactly as
+    /// [`crate::simmpi::WorldConfig::pools`]: the solve service threads
+    /// worker-owned pools through here so back-to-back jobs recycle the
+    /// same storage.
+    pub pools: Vec<BufferPool>,
 }
 
 impl ShmConfig {
@@ -288,6 +294,7 @@ impl ShmConfig {
             size,
             ring_capacity: DEFAULT_RING_CAPACITY,
             rank_speed: Vec::new(),
+            pools: Vec::new(),
         }
     }
 
@@ -298,6 +305,12 @@ impl ShmConfig {
 
     pub fn with_rank_speed(mut self, speed: Vec<f64>) -> Self {
         self.rank_speed = speed;
+        self
+    }
+
+    /// Seed per-rank buffer pools (see [`ShmConfig::pools`]).
+    pub fn with_pools(mut self, pools: Vec<BufferPool>) -> Self {
+        self.pools = pools;
         self
     }
 
@@ -337,7 +350,7 @@ impl ShmWorld {
                 rank,
                 shared: shared.clone(),
                 speed: config.speed_of(rank),
-                pool: BufferPool::new(),
+                pool: config.pools.get(rank).cloned().unwrap_or_default(),
                 rx: RefCell::new((0..size).map(|_| VecDeque::new()).collect()),
                 rr: Cell::new(0),
             })

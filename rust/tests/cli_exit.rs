@@ -1,0 +1,159 @@
+//! `repro` CLI contract tests: exit codes (0 converged / 2 unconverged
+//! or degraded service run / 1 usage error) and the `serve` NDJSON
+//! front door, driven through the real binary.
+
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+const QUICK_SOLVE: &[&str] = &[
+    "solve",
+    "--problem",
+    "jacobi",
+    "--grid",
+    "2x1x1",
+    "--n",
+    "16",
+    "--latency-us",
+    "1",
+    "--jitter",
+    "0",
+];
+
+#[test]
+fn solve_converged_exits_zero() {
+    let out = repro()
+        .args(QUICK_SOLVE)
+        .arg("--json")
+        .output()
+        .expect("run repro");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "status {:?}, stderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains(r#""converged":true"#), "{stdout}");
+}
+
+#[test]
+fn solve_unconverged_exits_two() {
+    let out = repro()
+        .args(QUICK_SOLVE)
+        .args(["--max-iters", "3", "--threshold", "1e-13", "--json"])
+        .output()
+        .expect("run repro");
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "3 iterations cannot reach 1e-13; stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains(r#""converged":false"#), "{stdout}");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("did not converge"),
+        "diagnostic goes to stderr"
+    );
+}
+
+#[test]
+fn usage_errors_exit_one() {
+    let bad_flag = repro()
+        .args(["solve", "--scheme", "bogus"])
+        .output()
+        .expect("run repro");
+    assert_eq!(bad_flag.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&bad_flag.stderr).contains("unknown scheme"));
+
+    let bad_cmd = repro().arg("frobnicate").output().expect("run repro");
+    assert_eq!(bad_cmd.status.code(), Some(1));
+}
+
+#[test]
+fn serve_runs_ndjson_jobs_from_stdin() {
+    let mut child = repro()
+        .args(["serve", "--workers", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(
+            stdin,
+            r#"{{"tenant":"a","problem":"jacobi","config":{{"process_grid":[2,1,1],"n":16,"net_latency_us":1,"net_jitter":0}}}}"#
+        )
+        .unwrap();
+        writeln!(
+            stdin,
+            r#"{{"tenant":"b","problem":"convdiff","config":{{"process_grid":[2,1,1],"n":8,"net_latency_us":1,"net_jitter":0}}}}"#
+        )
+        .unwrap();
+    }
+    drop(child.stdin.take()); // EOF starts the collect phase
+    let out = child.wait_with_output().expect("serve exits");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "status {:?}, stdout: {stdout}, stderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // One NDJSON report per job, in submission order, then the summary.
+    assert_eq!(stdout.matches(r#""outcome":"converged""#).count(), 2, "{stdout}");
+    assert!(stdout.contains(r#""tenant":"a""#), "{stdout}");
+    assert!(stdout.contains(r#""tenant":"b""#), "{stdout}");
+    assert!(stdout.contains(r#""tenants""#), "summary object: {stdout}");
+    assert!(stdout.contains(r#""converged":1"#), "{stdout}");
+}
+
+#[test]
+fn serve_flags_bad_specs_and_exits_two() {
+    let mut child = repro()
+        .args(["serve", "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        // A parse error, an invalid spec, and one good job.
+        writeln!(stdin, "this is not json").unwrap();
+        writeln!(stdin, r#"{{"problem":"jacobi","config":{{"time_steps":0}}}}"#).unwrap();
+        writeln!(
+            stdin,
+            r#"{{"problem":"jacobi","config":{{"process_grid":[2,1,1],"n":16,"net_latency_us":1}}}}"#
+        )
+        .unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().expect("serve exits");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(2), "bad input degrades the run: {stdout}");
+    assert_eq!(stdout.matches(r#""outcome":"rejected""#).count(), 2, "{stdout}");
+    assert_eq!(stdout.matches(r#""outcome":"converged""#).count(), 1, "{stdout}");
+}
+
+#[test]
+fn submit_smoke_runs_seeded_load() {
+    let out = repro()
+        .args(["submit", "--count", "6", "--workers", "2", "--rate", "500", "--seed", "3"])
+        .output()
+        .expect("run repro submit");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "status {:?}, stdout: {stdout}, stderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("6/6 jobs completed"), "{stdout}");
+    assert!(stdout.contains("jobs/sec"), "{stdout}");
+}

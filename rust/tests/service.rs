@@ -1,0 +1,430 @@
+//! Solve-service integration suite: admission/shedding, cancellation,
+//! concurrent submit/cancel races on the lock-free registry, pool reuse
+//! across back-to-back jobs, drain-on-shutdown, and the 64-job
+//! mixed-workload acceptance run compared against direct
+//! `SolverSession` results.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jack2::config::{Precision, Scheme};
+use jack2::service::{
+    default_mix, execute, Admission, JobOutcome, JobSpec, JobState, LoadGen, ProblemKind,
+    RejectReason, ServiceConfig, SolveService,
+};
+
+const COLLECT: Duration = Duration::from_secs(300);
+
+fn quick_jacobi() -> JobSpec {
+    let mut spec = JobSpec::default();
+    spec.tenant = "test".into();
+    spec.problem = ProblemKind::Jacobi;
+    spec.cfg.process_grid = (2, 1, 1);
+    spec.cfg.n = 16;
+    spec.cfg.net_latency_us = 1;
+    spec.cfg.net_jitter = 0.0;
+    spec
+}
+
+/// A job that holds its worker for a while: every iteration pays a
+/// work floor, and the threshold is unreachable within `max_iters`.
+fn slow_job(floor_us: u64, iters: u64) -> JobSpec {
+    let mut spec = quick_jacobi();
+    spec.tenant = "slow".into();
+    spec.cfg.work_floor_us = floor_us;
+    spec.cfg.threshold = 1e-13;
+    spec.cfg.max_iters = iters;
+    spec
+}
+
+fn wait_for_running(svc: &SolveService, t: &jack2::service::JobTicket) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while svc.state(t) == Some(JobState::Queued) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "job never left the queue"
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Tentpole acceptance: one service completes 64 queued mixed-spec jobs
+/// (both problems × both precisions × sync/async) on a worker pool far
+/// smaller than the job count, and every report matches a direct
+/// `SolverSession` run of the same spec — exactly for the deterministic
+/// synchronous jobs, to convergence for the asynchronous ones.
+#[test]
+fn sixty_four_mixed_jobs_match_direct_runs() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 4,
+        queue_capacity: 64,
+        registry_capacity: 0,
+    });
+
+    // Direct per-combo oracle for the synchronous specs (sync sim runs
+    // with zero jitter are deterministic, so every service job of a
+    // combo must reproduce its oracle bit-for-bit).
+    let mut oracle: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+    for spec in default_mix() {
+        if !spec.cfg.scheme.is_async() {
+            let s = execute(&spec, Vec::new()).unwrap();
+            assert!(s.converged, "oracle {} must converge", spec.tenant);
+            oracle.insert(spec.tenant.clone(), (s.iterations, s.r_n));
+        }
+    }
+
+    // 64 jobs from the seeded generator, submitted as fast as the queue
+    // admits (arrival times are irrelevant here; the bench honors them).
+    let arrivals: Vec<_> = LoadGen::new(11, 1000.0).take(64).collect();
+    let mut tickets = Vec::new();
+    for a in arrivals {
+        // The queue holds 64 and drains concurrently, so nothing sheds.
+        match svc.submit(a.spec) {
+            Admission::Accepted(t) => tickets.push(t),
+            Admission::Rejected(r) => panic!("unexpected shed: {r:?}"),
+        }
+    }
+    assert_eq!(tickets.len(), 64);
+
+    let mut settled = 0;
+    for t in &tickets {
+        let rep = svc.collect(t, COLLECT).expect("job settles");
+        assert_eq!(rep.outcome, JobOutcome::Converged, "{}", rep.tenant);
+        assert!(rep.iterations > 0);
+        assert!(rep.r_n.is_finite());
+        if let Some((iters, r_n)) = oracle.get(&rep.tenant) {
+            assert_eq!(rep.iterations, *iters, "{}: sync solves replay", rep.tenant);
+            let gap = (rep.r_n - r_n).abs();
+            assert!(
+                gap <= 1e-12 * r_n.abs().max(1.0),
+                "{}: r_n {} vs oracle {}",
+                rep.tenant,
+                rep.r_n,
+                r_n
+            );
+        } else {
+            // Async: nondeterministic iteration counts, but the verified
+            // residual must sit at the combo's convergence scale.
+            assert!(rep.r_n < 1e-2, "{}: async r_n {}", rep.tenant, rep.r_n);
+        }
+        settled += 1;
+    }
+    assert_eq!(settled, 64);
+
+    let tenants = svc.shutdown();
+    let total: u64 = tenants.values().map(|m| m.submitted).sum();
+    let converged: u64 = tenants.values().map(|m| m.converged).sum();
+    assert_eq!(total, 64);
+    assert_eq!(converged, 64);
+    assert_eq!(tenants.len(), 8, "one tenant row per mix combo");
+    for (tenant, m) in &tenants {
+        assert_eq!(m.rejected + m.cancelled + m.failed, 0, "{tenant}");
+        assert!(m.max_queue_wait >= Duration::ZERO);
+        assert!(m.iterations > 0, "{tenant}");
+    }
+}
+
+/// Satellite: a full queue sheds explicitly (`QueueFull` with the
+/// observed depth) instead of blocking, and the shed is visible in the
+/// tenant metrics.
+#[test]
+fn full_queue_sheds_submissions() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 1,
+        registry_capacity: 0,
+    });
+    // Occupy the single worker, then the single queue slot.
+    let running = svc.submit(slow_job(2_000, 200)).ticket().unwrap();
+    wait_for_running(&svc, &running);
+    let queued = svc.submit(quick_jacobi()).ticket().unwrap();
+    assert_eq!(svc.state(&queued), Some(JobState::Queued));
+
+    match svc.submit(quick_jacobi()) {
+        Admission::Rejected(RejectReason::QueueFull { queued }) => assert_eq!(queued, 1),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+
+    let slow_rep = svc.collect(&running, COLLECT).unwrap();
+    assert_eq!(slow_rep.outcome, JobOutcome::MaxIters, "threshold 1e-13 unreachable");
+    let quick_rep = svc.collect(&queued, COLLECT).unwrap();
+    assert_eq!(quick_rep.outcome, JobOutcome::Converged);
+    assert!(quick_rep.queue_wait > Duration::ZERO);
+
+    let m = svc.shutdown();
+    assert_eq!(m["test"].rejected, 1);
+    assert_eq!(m["test"].submitted, 1);
+    assert_eq!(m["slow"].completed, 1);
+}
+
+/// Satellite: cancelling a queued job settles it as `Cancelled` (the
+/// solve never runs), cancelling a running job fails, and the cancelled
+/// job still produces exactly one collectable report.
+#[test]
+fn cancel_queued_not_running() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 8,
+        registry_capacity: 0,
+    });
+    let running = svc.submit(slow_job(2_000, 150)).ticket().unwrap();
+    wait_for_running(&svc, &running);
+    let queued = svc.submit(quick_jacobi()).ticket().unwrap();
+
+    assert!(!svc.cancel(&running), "running jobs cannot be cancelled");
+    assert!(svc.cancel(&queued), "queued jobs can");
+    assert!(!svc.cancel(&queued), "second cancel fails");
+    assert_eq!(svc.state(&queued), Some(JobState::Cancelled));
+
+    let rep = svc.collect(&queued, COLLECT).expect("cancel still settles");
+    assert_eq!(rep.outcome, JobOutcome::Cancelled);
+    assert_eq!(rep.iterations, 0);
+    assert_eq!(rep.wall, Duration::ZERO);
+    assert!(svc.try_collect(&queued).is_none(), "one report per job");
+
+    svc.collect(&running, COLLECT).unwrap();
+    let m = svc.shutdown();
+    assert_eq!(m["test"].cancelled, 1);
+    assert_eq!(m["test"].completed, 0);
+}
+
+/// Satellite (registry races): hammer concurrent submit/cancel/collect
+/// from many threads. Every accepted job settles exactly once — no lost
+/// jobs, no double completions — and stale tickets observe nothing.
+#[test]
+fn concurrent_submit_cancel_loses_nothing() {
+    let svc = Arc::new(SolveService::start(ServiceConfig {
+        workers: 2,
+        queue_capacity: 256,
+        registry_capacity: 0,
+    }));
+    const THREADS: usize = 4;
+    const PER: usize = 8;
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|tid| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut outcomes = Vec::new();
+                for k in 0..PER {
+                    let mut spec = quick_jacobi();
+                    spec.tenant = format!("hammer-{tid}");
+                    let ticket = svc.submit(spec).ticket().expect("queue is large enough");
+                    // Race a cancel against the workers for every other
+                    // job; either side may win the QUEUED slot.
+                    let tried_cancel = k % 2 == 0 && svc.cancel(&ticket);
+                    let rep = svc.collect(&ticket, COLLECT).expect("settles exactly once");
+                    if tried_cancel {
+                        assert_eq!(rep.outcome, JobOutcome::Cancelled, "won cancels stick");
+                    } else {
+                        assert_eq!(rep.outcome, JobOutcome::Converged);
+                    }
+                    // The ticket is stale after collect: every operation
+                    // must now miss (the slot may already be recycled).
+                    assert!(svc.try_collect(&ticket).is_none());
+                    assert!(!svc.cancel(&ticket));
+                    outcomes.push(rep.outcome);
+                }
+                outcomes
+            })
+        })
+        .collect();
+
+    let mut cancelled = 0u64;
+    let mut converged = 0u64;
+    for h in handles {
+        for o in h.join().unwrap() {
+            match o {
+                JobOutcome::Cancelled => cancelled += 1,
+                JobOutcome::Converged => converged += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+    }
+    assert_eq!(cancelled + converged, (THREADS * PER) as u64);
+
+    let svc = Arc::try_unwrap(svc).ok().expect("all clones joined");
+    let m = svc.shutdown();
+    let settled: u64 = m.values().map(|t| t.settled()).sum();
+    let submitted: u64 = m.values().map(|t| t.submitted).sum();
+    assert_eq!(submitted, (THREADS * PER) as u64);
+    assert_eq!(settled, submitted, "every accepted job settled exactly once");
+    assert_eq!(m.values().map(|t| t.cancelled).sum::<u64>(), cancelled);
+}
+
+/// Satellite (BufferPool observability): back-to-back jobs on one worker
+/// world recycle pooled storage — after warmup, further identical jobs
+/// perform zero pool allocations and never raise the high-water mark.
+#[test]
+fn back_to_back_jobs_reuse_worker_pools() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 16,
+        registry_capacity: 0,
+    });
+    // Trivial scheme: fully blocking exchange, so the in-flight buffer
+    // population is identical from job to job.
+    let mut spec = quick_jacobi();
+    spec.cfg.scheme = Scheme::Trivial;
+
+    let run = |spec: &JobSpec| {
+        let t = svc.submit(spec.clone()).ticket().unwrap();
+        let rep = svc.collect(&t, COLLECT).unwrap();
+        assert_eq!(rep.outcome, JobOutcome::Converged);
+    };
+
+    // Warmup: populate the worker's per-rank pools and ratchet buffer
+    // capacities to this spec's working set.
+    run(&spec);
+    run(&spec);
+    let warm = svc.pool_stats(0);
+    assert_eq!(warm.len(), 2, "one pool per rank of the worker's world");
+    assert!(
+        warm.iter().map(|s| s.allocations).sum::<u64>() > 0,
+        "warmup jobs allocated the working set"
+    );
+    assert!(warm.iter().all(|s| s.outstanding == 0), "idle between jobs");
+
+    run(&spec);
+    run(&spec);
+    run(&spec);
+    let after = svc.pool_stats(0);
+    for (rank, (w, a)) in warm.iter().zip(&after).enumerate() {
+        assert_eq!(
+            a.allocations, w.allocations,
+            "rank {rank}: steady-state jobs must not allocate ({w:?} -> {a:?})"
+        );
+        assert_eq!(
+            a.high_water, w.high_water,
+            "rank {rank}: reuse must not raise the in-flight high-water mark"
+        );
+        assert!(a.reuses > w.reuses, "rank {rank}: reuse counter advances");
+    }
+    drop(svc);
+}
+
+/// Satellite: drain stops admission atomically, runs every accepted job
+/// to completion, and leaves all reports collectable.
+#[test]
+fn drain_settles_all_inflight_jobs() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 2,
+        queue_capacity: 32,
+        registry_capacity: 0,
+    });
+    let tickets: Vec<_> = (0..12)
+        .map(|_| svc.submit(quick_jacobi()).ticket().unwrap())
+        .collect();
+
+    assert!(svc.drain(COLLECT), "drain completes");
+    assert_eq!(svc.inflight(), 0);
+    assert_eq!(svc.queue_len(), 0);
+    match svc.submit(quick_jacobi()) {
+        Admission::Rejected(RejectReason::ShuttingDown) => {}
+        other => panic!("post-drain submit must shed: {other:?}"),
+    }
+
+    // Every report survived the drain and is still collectable.
+    for t in &tickets {
+        let rep = svc.try_collect(t).expect("drained job report available");
+        assert_eq!(rep.outcome, JobOutcome::Converged);
+    }
+    let m = svc.shutdown();
+    assert_eq!(m["test"].converged, 12);
+    assert_eq!(m["test"].rejected, 1);
+}
+
+/// Satellite (load generator): the seeded open-loop stress run is
+/// deterministic in its workload, keeps accounting exact under forced
+/// shedding, and settles every accepted job.
+#[test]
+fn loadgen_stress_accounts_for_every_job() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 2,
+        queue_capacity: 4, // deliberately tight: force shedding
+        registry_capacity: 0,
+    });
+    const JOBS: usize = 48;
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    // Open loop at a rate far above the service's capacity; the bounded
+    // queue must shed the overflow, never block or panic.
+    for a in LoadGen::new(99, 5_000.0).take(JOBS) {
+        match svc.submit(a.spec) {
+            Admission::Accepted(t) => accepted.push(t),
+            Admission::Rejected(RejectReason::QueueFull { .. }) => shed += 1,
+            Admission::Rejected(r) => panic!("unexpected reject {r:?}"),
+        }
+    }
+    assert_eq!(accepted.len() as u64 + shed, JOBS as u64);
+    assert!(shed > 0, "a 4-deep queue at 5k jobs/sec must shed");
+
+    for t in &accepted {
+        let rep = svc.collect(t, COLLECT).expect("accepted job settles");
+        assert_eq!(rep.outcome, JobOutcome::Converged, "{}", rep.tenant);
+    }
+    let m = svc.shutdown();
+    let submitted: u64 = m.values().map(|t| t.submitted).sum();
+    let rejected: u64 = m.values().map(|t| t.rejected).sum();
+    assert_eq!(submitted, accepted.len() as u64);
+    assert_eq!(rejected, shed);
+    assert_eq!(
+        m.values().map(|t| t.settled()).sum::<u64>(),
+        submitted,
+        "accepted = settled"
+    );
+}
+
+/// Failures surface as `Failed` reports with the error message, not as
+/// dead workers: the service keeps solving afterwards.
+#[test]
+fn failed_job_reports_error_and_service_survives() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 8,
+        registry_capacity: 0,
+    });
+    // Valid at admission, unbuildable at run time: the XLA backend
+    // rejects the jacobi problem with a capability error.
+    let mut bad = quick_jacobi();
+    bad.cfg.backend = jack2::config::Backend::Xla;
+    let t = svc.submit(bad).ticket().expect("admission cannot see this");
+    let rep = svc.collect(&t, COLLECT).unwrap();
+    match &rep.outcome {
+        JobOutcome::Failed(msg) => assert!(msg.contains("XLA") || msg.contains("backend"), "{msg}"),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+
+    // The worker that reported the failure is still alive.
+    let t2 = svc.submit(quick_jacobi()).ticket().unwrap();
+    let rep2 = svc.collect(&t2, COLLECT).unwrap();
+    assert_eq!(rep2.outcome, JobOutcome::Converged);
+    let m = svc.shutdown();
+    assert_eq!(m["test"].failed, 1);
+    assert_eq!(m["test"].converged, 1);
+}
+
+/// Mixed f32/f64 service jobs agree with direct sessions at their own
+/// width (spot check outside the big acceptance run, shm transport).
+#[test]
+fn shm_transport_jobs_run_through_the_service() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 2,
+        queue_capacity: 8,
+        registry_capacity: 0,
+    });
+    let mut spec = quick_jacobi();
+    spec.cfg.transport = jack2::config::TransportKind::Shm;
+    spec.cfg.precision = Precision::F32;
+    spec.cfg.threshold = 1e-4;
+    let direct = execute(&spec, Vec::new()).unwrap();
+    assert!(direct.converged);
+
+    let t = svc.submit(spec).ticket().unwrap();
+    let rep = svc.collect(&t, COLLECT).unwrap();
+    assert_eq!(rep.outcome, JobOutcome::Converged);
+    assert_eq!(rep.precision, "f32");
+    assert_eq!(rep.iterations, direct.iterations, "sync shm replays");
+    drop(svc);
+}
