@@ -6,9 +6,10 @@
 //! or asynchronous iterations depending on one runtime flag — the
 //! library's headline feature — and, being generic over both the payload
 //! [`Scalar`] width and the [`Transport`] backend, the same program also
-//! solves in `f32` and over either message substrate: the simulated MPI
-//! world (`sim`, the default) or the real shared-memory ring backend
-//! (`shm`). Nothing below `main` names a backend.
+//! solves in `f32` and over any message substrate: the simulated MPI
+//! world (`sim`, the default), the real shared-memory ring backend
+//! (`shm`), or the framed TCP-lane backend (`tcp`). Nothing below `main`
+//! names a backend.
 //!
 //! The Listing-5 init sequence is the typestate builder (misordering it
 //! does not compile), and the Listing-6 loop lives in the library:
@@ -18,11 +19,11 @@
 //! Run:   cargo run --example quickstart                      (classical, sim)
 //!        cargo run --example quickstart -- async             (asynchronous)
 //!        cargo run --example quickstart -- --transport shm   (shared memory)
-//!        cargo run --example quickstart -- async --transport shm
+//!        cargo run --example quickstart -- async --transport tcp
 
 use jack2::prelude::*;
 use jack2::simmpi::World;
-use jack2::transport::ShmWorld;
+use jack2::transport::{ShmWorld, TcpWorld};
 
 /// Solve the 2-unknown system [4 -1; -1 4] x = [5 9] across two ranks,
 /// generic over the scalar width *and* the transport backend.
@@ -96,41 +97,53 @@ fn solve_pair<S: Scalar, T: Transport + 'static>(
 /// Build a 2-rank world on the selected backend and solve — the only
 /// place a concrete transport is named.
 fn run_width<S: Scalar>(
-    use_shm: bool,
+    transport: &str,
     async_mode: bool,
     threshold: f64,
 ) -> Vec<(usize, S, u64, f64, u64)> {
-    if use_shm {
-        let (_world, eps) = ShmWorld::homogeneous(2);
-        solve_pair::<S, _>(eps, async_mode, threshold)
-    } else {
-        let (_world, eps) = World::homogeneous(2);
-        solve_pair::<S, _>(eps, async_mode, threshold)
+    match transport {
+        "shm" => {
+            let (_world, eps) = ShmWorld::homogeneous(2);
+            solve_pair::<S, _>(eps, async_mode, threshold)
+        }
+        "tcp" => {
+            let (_world, eps) = TcpWorld::homogeneous(2);
+            solve_pair::<S, _>(eps, async_mode, threshold)
+        }
+        _ => {
+            let (_world, eps) = World::homogeneous(2);
+            solve_pair::<S, _>(eps, async_mode, threshold)
+        }
     }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let async_mode = args.iter().any(|a| a == "async");
-    let use_shm = args.iter().any(|a| a == "shm" || a == "--transport=shm")
-        || args
-            .windows(2)
-            .any(|w| w[0] == "--transport" && w[1] == "shm");
+    let transport = args
+        .iter()
+        .find_map(|a| a.strip_prefix("--transport=").map(str::to_string))
+        .or_else(|| {
+            args.iter()
+                .find(|a| ["sim", "shm", "tcp"].contains(&a.as_str()))
+                .cloned()
+        })
+        .unwrap_or_else(|| "sim".to_string());
     println!(
         "quickstart: {} iterations on 2 ranks over the {} transport",
         if async_mode { "asynchronous" } else { "classical" },
-        if use_shm {
-            "shared-memory ring"
-        } else {
-            "simulated-MPI"
+        match transport.as_str() {
+            "shm" => "shared-memory ring",
+            "tcp" => "framed TCP-lane",
+            _ => "simulated-MPI",
         }
     );
 
     for (name, rows) in [
-        ("f64", run_width::<f64>(use_shm, async_mode, 1e-10)),
+        ("f64", run_width::<f64>(&transport, async_mode, 1e-10)),
         // same program, narrower payloads: f32 buffers over the f64 wire
         ("f32", {
-            run_width::<f32>(use_shm, async_mode, 1e-6)
+            run_width::<f32>(&transport, async_mode, 1e-6)
                 .into_iter()
                 .map(|(r, x, i, n, s)| (r, x as f64, i, n, s))
                 .collect()

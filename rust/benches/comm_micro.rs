@@ -9,13 +9,16 @@
 //! throughput — plus the ISSUE 6 hot-path series: SIMD stencil sweeps vs
 //! the scalar loop (`stencil_simd`), `WakeSignal` vs condvar signalling
 //! (`shm_wakeup`), and per-peer halo coalescing vs per-buffer messaging
-//! (`halo_coalesce`) — and the ISSUE 7 solve-service series
+//! (`halo_coalesce`) — the ISSUE 7 solve-service series
 //! (`service_throughput`): jobs/sec and queue-to-done latency for a
-//! seeded open-loop load through `SolveService`. Emits
-//! `BENCH_comm_micro.json` so the perf trajectory is machine-readable
-//! across PRs.
+//! seeded open-loop load through `SolveService` — and the ISSUE 8 wire
+//! series (`tcp_roundtrip`): the same pooled round-trip over real
+//! localhost sockets with the TCP backend's progress thread on the
+//! receive path. Emits `BENCH_comm_micro.json` so the perf trajectory
+//! is machine-readable across PRs.
 
 use std::collections::BTreeMap;
+use std::net::TcpListener;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -30,6 +33,7 @@ use jack2::simd::SimdLevel;
 use jack2::service::{Admission, JobOutcome, LoadGen, ServiceConfig, SolveService};
 use jack2::simmpi::{NetworkModel, WorldConfig};
 use jack2::solver::{solve_experiment, ComputeBackend, NativeBackend};
+use jack2::transport::tcp::{Rendezvous, TcpOpts, TcpWorld};
 use jack2::transport::{ShmWorld, Transport, WakeSignal};
 use jack2::util::json::{self, Json};
 
@@ -209,6 +213,61 @@ fn bench_backend_roundtrip(b: &Bencher) -> Vec<Json> {
         }
     }
     t.print();
+    rows
+}
+
+/// TCP wire round-trip (ISSUE 8): the pooled round-trip of
+/// `backend_roundtrip`, but over real localhost sockets — two joined
+/// ranks, length-prefixed framed streams, and the per-endpoint progress
+/// thread + `WakeSignal` park on the receive path. No threshold gate
+/// (loopback latency is kernel- and scheduler-dependent; trends are
+/// read across PRs); CI fails only if the series goes missing from
+/// `BENCH_comm_micro.json`. One JSON row per payload size.
+fn bench_tcp_roundtrip(b: &Bencher) -> Vec<Json> {
+    println!("\ntcp round-trip: pooled send/recv over localhost sockets (progress thread)");
+    let mut t = Table::new(&["payload f64s", "ns / msg", "msgs/s"]);
+    let mut rows = Vec::new();
+    for size in [256usize, 4096, 64 * 1024] {
+        let n_msgs = 200;
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+        let addr = listener.local_addr().expect("rendezvous addr").to_string();
+        let host = std::thread::spawn(move || {
+            Rendezvous::accept(&listener, 2)
+                .expect("both ranks register")
+                .broadcast(None)
+                .expect("broadcast the table")
+        });
+        let peer = addr.clone();
+        let join1 =
+            std::thread::spawn(move || TcpWorld::join(&peer, 1, TcpOpts::default()).unwrap());
+        let (mut e0, _c0) = TcpWorld::join(&addr, 0, TcpOpts::default()).expect("rank 0 joins");
+        let (e1, _c1) = join1.join().expect("rank 1 joins");
+        let _controls = host.join().expect("rendezvous host");
+
+        let payload = vec![1.25f64; size];
+        let deadline = Duration::from_secs(30);
+        for _ in 0..4 {
+            e0.isend_copy(1, 2, &payload).unwrap();
+            drop(e1.recv(0, 2, Some(deadline)).unwrap());
+        }
+        let st = b.run(&format!("tcp {size}"), || {
+            for _ in 0..n_msgs {
+                e0.isend_copy(1, 2, &payload).unwrap();
+                drop(e1.recv(0, 2, Some(deadline)).unwrap());
+            }
+        });
+        let per_msg = st.mean().as_nanos() as f64 / n_msgs as f64;
+        let rate = 1e9 / per_msg.max(1.0);
+        t.row(&[size.to_string(), format!("{per_msg:.0}"), format!("{rate:.0}")]);
+        let mut row = BTreeMap::new();
+        row.insert("backend".into(), Json::Str("tcp".into()));
+        row.insert("payload_f64s".into(), Json::Num(size as f64));
+        row.insert("ns_per_msg".into(), Json::Num(per_msg));
+        row.insert("msgs_per_sec".into(), Json::Num(rate));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!("real loopback sockets: framing + progress-thread wakeup are on the measured path");
     rows
 }
 
@@ -712,6 +771,7 @@ fn main() {
     bench_delivery(&b);
     let pooled_rows = bench_pooled_vs_clone(&b);
     let backend_rows = bench_backend_roundtrip(&b);
+    let tcp_rows = bench_tcp_roundtrip(&b);
     let stencil_rows = bench_stencil_simd(&b);
     let wakeup_rows = bench_shm_wakeup(&b);
     let coalesce_rows = bench_halo_coalesce(&b);
@@ -728,6 +788,7 @@ fn main() {
     );
     doc.insert("pooled_vs_clone".into(), Json::Arr(pooled_rows));
     doc.insert("backend_roundtrip".into(), Json::Arr(backend_rows));
+    doc.insert("tcp_roundtrip".into(), Json::Arr(tcp_rows));
     doc.insert("stencil_simd".into(), Json::Arr(stencil_rows));
     doc.insert("shm_wakeup".into(), Json::Arr(wakeup_rows));
     doc.insert("halo_coalesce".into(), Json::Arr(coalesce_rows));

@@ -81,6 +81,12 @@ pub enum TransportKind {
     /// (`net_latency_us`, `net_jitter`, bandwidth, spikes) do not apply;
     /// `rank_speed` heterogeneity still does.
     Shm,
+    /// Out-of-process socket backend (`transport::tcp`): length-prefixed
+    /// framed streams over localhost with a per-endpoint progress
+    /// thread. The solve spawns one `repro rank` subprocess per rank.
+    /// Like `shm`, the network-model knobs do not apply; `rank_speed`
+    /// heterogeneity still does.
+    Tcp,
 }
 
 impl TransportKind {
@@ -88,6 +94,7 @@ impl TransportKind {
         match self {
             TransportKind::Sim => "sim",
             TransportKind::Shm => "shm",
+            TransportKind::Tcp => "tcp",
         }
     }
 
@@ -95,6 +102,7 @@ impl TransportKind {
         match s {
             "sim" | "simmpi" => Ok(TransportKind::Sim),
             "shm" | "shared-memory" | "shared_memory" => Ok(TransportKind::Shm),
+            "tcp" | "socket" => Ok(TransportKind::Tcp),
             _ => Err(Error::Config(format!("unknown transport {s:?}"))),
         }
     }
@@ -482,13 +490,18 @@ mod tests {
         assert_eq!(TransportKind::parse("sim").unwrap(), TransportKind::Sim);
         assert_eq!(TransportKind::parse("simmpi").unwrap(), TransportKind::Sim);
         assert_eq!(TransportKind::parse("shm").unwrap(), TransportKind::Shm);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("socket").unwrap(), TransportKind::Tcp);
         assert!(TransportKind::parse("rdma").is_err());
-        let c = ExperimentConfig {
-            transport: TransportKind::Shm,
-            ..ExperimentConfig::default()
-        };
-        let s = json::write(&c.to_json());
-        let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
-        assert_eq!(d.transport, TransportKind::Shm);
+        for kind in [TransportKind::Shm, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(kind.name()).unwrap(), kind);
+            let c = ExperimentConfig {
+                transport: kind,
+                ..ExperimentConfig::default()
+            };
+            let s = json::write(&c.to_json());
+            let d = ExperimentConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+            assert_eq!(d.transport, kind);
+        }
     }
 }

@@ -41,6 +41,13 @@
 //!   transport (one bounded lock-free SPSC ring per directed link,
 //!   backpressure surfaced through pending send handles), selectable end
 //!   to end via `ExperimentConfig::transport` / `--transport shm`.
+//! * **[`transport::tcp`]** — the third backend, and the first that
+//!   crosses OS process boundaries: length-prefixed framed TCP streams
+//!   with a per-endpoint progress thread feeding arrivals through the
+//!   pooled `MsgBuf` machinery. Worlds form by rank-ordered rendezvous
+//!   ([`transport::tcp::TcpWorld::join`] + `repro rank` subprocesses);
+//!   `repro solve --transport tcp` runs one OS process per rank over
+//!   localhost ([`solver::distributed`]).
 //! * **[`graph`]** — logical communication graphs (explicit incoming and
 //!   outgoing link lists, exactly the paper's Listing 1).
 //! * **[`jack`]** — the JACK2 library proper: the typed session front-end

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! repro solve      [--grid 2x2x2] [--n 16] [--scheme sync|async|trivial]
-//!                  [--backend native|xla] [--transport sim|shm]
+//!                  [--backend native|xla] [--transport sim|shm|tcp]
 //!                  [--precision f32|f64] [--problem convdiff|jacobi]
 //!                  [--termination snapshot|persistence|recursive-doubling]
 //!                  [--steps N] [--threshold 1e-6]
@@ -13,6 +13,9 @@
 //! repro serve      [--workers 2] [--queue 64] [--listen 127.0.0.1:7070]
 //!                  [--once]   (multi-tenant solve service; NDJSON job
 //!                  specs in, NDJSON reports + tenant summary out)
+//! repro rank       --join HOST:PORT --rank N [--speed 1.0]
+//!                  (internal: one rank of a --transport tcp solve;
+//!                  spawned by the parent `repro solve` process)
 //! repro submit     [--count 16] [--workers 2] [--rate 200] [--seed 1]
 //!                  (seeded open-loop load against an in-process service)
 //! repro table1     [--backend native|xla] [--fast]          (E1)
@@ -36,12 +39,12 @@ use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
 use jack2::metrics::TenantMetrics;
-use jack2::problem::{Jacobi1D, Partition3D};
+use jack2::problem::{ConvDiffProblem, Jacobi1D, Partition3D};
 use jack2::scalar::Scalar;
 use jack2::service::{
     Admission, JobOutcome, JobSpec, LoadGen, RejectReason, ServiceConfig, SolveService,
 };
-use jack2::solver::{solve_experiment, SolveReport, SolverSession};
+use jack2::solver::{distributed, solve_experiment, SolveReport, SolverSession};
 use jack2::util::json;
 use jack2::{Error, Result};
 
@@ -71,6 +74,7 @@ fn run(args: &[String]) -> Result<ExitCode> {
         "solve" => cmd_solve(&flags),
         "serve" => cmd_serve(&flags),
         "submit" => cmd_submit(&flags),
+        "rank" => ok(cmd_rank(&flags)),
         "table1" => ok(cmd_table1(&flags)),
         "fig3" => ok(cmd_fig3(&flags)),
         "partition" => ok(cmd_partition(&flags)),
@@ -107,6 +111,8 @@ fn print_usage() {
                     rejected job\n  \
          submit     seeded open-loop load generator against an in-process\n             \
                     service (--count/--rate/--seed/--workers)\n  \
+         rank       internal: one rank of a --transport tcp solve\n             \
+                    (--join HOST:PORT --rank N; spawned by repro solve)\n  \
          table1     E1: Jacobi vs async sweep over world sizes (paper Table 1)\n  \
          fig3       E2: mid-convergence solution profiles + interface jumps\n  \
          partition  E3: print the box partition and communication graph\n  \
@@ -213,8 +219,8 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     }
     let problem = flags.get("problem").map(String::as_str).unwrap_or("convdiff");
     let converged = match (problem, cfg.precision) {
-        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_experiment::<f64>(&cfg)?)?,
-        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_experiment::<f32>(&cfg)?)?,
+        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_convdiff::<f64>(&cfg)?)?,
+        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_convdiff::<f32>(&cfg)?)?,
         ("jacobi" | "jacobi1d", Precision::F64) => {
             print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg)?)?
         }
@@ -238,14 +244,43 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     }
 }
 
+/// The paper's workload. `--transport tcp` solves take the genuinely
+/// multi-process path (one `repro rank` subprocess per rank over
+/// localhost sockets); everything else runs rank threads in-process.
+fn solve_convdiff<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
+    if cfg.transport == TransportKind::Tcp {
+        distributed::solve_spawned(cfg, &ConvDiffProblem::from_config(cfg)?)
+    } else {
+        solve_experiment::<S>(cfg)
+    }
+}
+
 /// The second shipped workload through the same `SolverSession` path:
 /// `--n` interior points of the 1-D backward-Euler heat chain, split
 /// over the configured world size.
 fn solve_jacobi<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
-    SolverSession::<S>::builder(cfg)
-        .problem(Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?)
-        .build()?
-        .run()
+    let problem = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?;
+    if cfg.transport == TransportKind::Tcp {
+        distributed::solve_spawned(cfg, &problem)
+    } else {
+        SolverSession::<S>::builder(cfg).problem(problem).build()?.run()
+    }
+}
+
+/// `repro rank` — one rank of a `--transport tcp` solve. Internal: the
+/// parent `repro solve` process spawns these; errors land on stderr
+/// with exit code 1, which is what the fault-injection tests observe.
+fn cmd_rank(flags: &HashMap<String, String>) -> Result<()> {
+    let join = flags
+        .get("join")
+        .ok_or_else(|| Error::Config("rank: --join HOST:PORT is required".into()))?;
+    let rank: usize = flags
+        .get("rank")
+        .ok_or_else(|| Error::Config("rank: --rank N is required".into()))?
+        .parse()
+        .map_err(|_| Error::Config("rank: --rank must be an integer".into()))?;
+    let speed = get(flags, "speed", 1.0f64)?;
+    distributed::run_rank_process(join, rank, speed)
 }
 
 /// Print the report (human or `--json`) and return its converged flag
@@ -333,14 +368,31 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
         Some(addr) => {
             let listener = std::net::TcpListener::bind(addr.as_str())
                 .map_err(|e| Error::Config(format!("cannot listen on {addr}: {e}")))?;
-            eprintln!("repro serve: listening on {addr}");
+            // Report the *bound* address: `--listen 127.0.0.1:0` gets a
+            // kernel-assigned port and callers need to learn it.
+            let bound = listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| addr.clone());
+            eprintln!("repro serve: listening on {bound}");
             let once = flags.contains_key("once");
             let mut all_ok = true;
             for conn in listener.incoming() {
-                let stream = conn?;
-                let reader = std::io::BufReader::new(stream.try_clone()?);
-                let mut writer = std::io::BufWriter::new(stream);
-                all_ok &= serve_stream(&svc, reader, &mut writer)?;
+                // One bad connection (accept failure, garbage bytes,
+                // invalid UTF-8) must not take the service down: report
+                // it and keep listening.
+                let served = conn.map_err(Error::from).and_then(|stream| {
+                    let reader = std::io::BufReader::new(stream.try_clone()?);
+                    let mut writer = std::io::BufWriter::new(stream);
+                    serve_stream(&svc, reader, &mut writer)
+                });
+                match served {
+                    Ok(ok) => all_ok &= ok,
+                    Err(e) => {
+                        all_ok = false;
+                        eprintln!("repro serve: connection error: {e}");
+                    }
+                }
                 if once {
                     break;
                 }

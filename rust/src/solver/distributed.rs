@@ -1,0 +1,501 @@
+//! Cross-process solve driver for the TCP transport.
+//!
+//! `repro solve --transport tcp` does not run its ranks as threads: the
+//! parent process binds a rendezvous listener on localhost, spawns one
+//! `repro rank --join ADDR --rank i` subprocess per rank, and the
+//! subprocesses build a genuine out-of-process [`TcpWorld`] between
+//! themselves. The rendezvous control streams then double as the job
+//! channel:
+//!
+//! ```text
+//! parent                                child (rank i)
+//! ──────                                ──────────────
+//! bind 127.0.0.1:0                      spawn
+//! spawn ranks 0..P  ───────────────►    TcpWorld::join(addr, i)
+//! Rendezvous::accept / broadcast  ◄──►  (register, read table, mesh up)
+//! write job line    ───────────────►    read job line
+//!                                       rebuild problem from config
+//!                                       run_rank(...)  (the same per-rank
+//!                                       solve the in-process worlds run)
+//! read report line  ◄───────────────    write report line, exit 0
+//! aggregate_report(...)
+//! ```
+//!
+//! Both lines are single-line JSON. The job line carries the full
+//! [`ExperimentConfig`] plus the problem name and payload width; the
+//! report line carries the child's [`RankOutcome`] — solution blocks,
+//! per-step stats and [`RankMetrics`]. Numbers ride `f64` JSON, which
+//! [`crate::util::json`] prints in shortest-roundtrip form, so the
+//! parent reassembles *bit-identical* solution vectors and the
+//! aggregated report matches what an in-process world would produce
+//! (the acceptance check diffs it against the simulated-MPI sync
+//! solve). Non-finite values are not representable in JSON; they are
+//! encoded as `null` and decoded as `+inf`, which the convergence
+//! logic treats identically (any non-finite norm means "not
+//! converged").
+//!
+//! A dead child surfaces as EOF on its control stream (descriptive
+//! error, never a hang); a child that dies before the world meshes is
+//! caught by the liveness poll racing [`Rendezvous::accept`].
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::error::{Error, Result};
+use crate::metrics::RankMetrics;
+use crate::problem::{ConvDiffProblem, Jacobi1D, Problem};
+use crate::scalar::Scalar;
+use crate::transport::tcp::{read_line, write_line, Rendezvous, TcpEndpoint, TcpOpts, TcpWorld};
+use crate::util::json::{self, Json};
+
+use super::session::{aggregate_report, run_rank, RankOutcome, RankStep, SolveReport};
+
+/// Backstop for each rank's report line so a wedged child cannot hang
+/// the driver forever (a *dead* child surfaces much sooner, as EOF).
+const REPORT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Budget for all ranks to dial back into the rendezvous listener.
+const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------
+// Parent: spawn ranks, dispatch the job, aggregate the reports
+// ---------------------------------------------------------------------
+
+/// Run the configured solve with one OS process per rank over the TCP
+/// transport and aggregate the per-rank reports exactly as
+/// [`super::SolverSession::run`] does for in-process worlds.
+pub fn solve_spawned<S: Scalar, P: Problem<S>>(
+    cfg: &ExperimentConfig,
+    problem: &P,
+) -> Result<SolveReport<S>> {
+    let p = problem.world_size();
+    if p == 0 {
+        return Err(Error::Config("cannot solve a zero-rank problem".into()));
+    }
+    problem.check_backend(cfg.backend)?;
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::Config(format!("cannot locate the repro binary: {e}")))?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+
+    let t0 = Instant::now();
+    let mut children: Vec<Child> = Vec::with_capacity(p);
+    let result = drive::<S, P>(cfg, problem, listener, &addr, &exe, &mut children);
+    match result {
+        Ok(outcomes) => {
+            let total_wall = t0.elapsed();
+            reap(&mut children)?;
+            Ok(aggregate_report(
+                cfg,
+                problem,
+                cfg.backend,
+                TransportKind::Tcp,
+                outcomes,
+                total_wall,
+            ))
+        }
+        Err(e) => {
+            for c in &mut children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            Err(e)
+        }
+    }
+}
+
+/// The fallible middle of [`solve_spawned`]: everything between "bind"
+/// and "all reports read". Spawned children are pushed into `children`
+/// as they start so the caller can clean up on any error.
+fn drive<S: Scalar, P: Problem<S>>(
+    cfg: &ExperimentConfig,
+    problem: &P,
+    listener: TcpListener,
+    addr: &str,
+    exe: &std::path::Path,
+    children: &mut Vec<Child>,
+) -> Result<Vec<RankOutcome<S>>> {
+    let p = problem.world_size();
+    for rank in 0..p {
+        let speed = cfg.rank_speed.get(rank).copied().unwrap_or(1.0);
+        let child = Command::new(exe)
+            .arg("rank")
+            .arg("--join")
+            .arg(addr)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--speed")
+            .arg(format!("{speed}"))
+            .stdin(Stdio::null())
+            // Reports travel on the control stream; stderr is inherited
+            // so rank failures land in the parent's stderr.
+            .stdout(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::Config(format!("cannot spawn rank {rank}: {e}")))?;
+        children.push(child);
+    }
+
+    // Accept on a helper thread and race it against a child-liveness
+    // poll: a rank that dies before registering must produce an error,
+    // not a parent blocked in accept() forever. (On that error path the
+    // helper thread leaks, parked in accept — the process is about to
+    // exit with the error, so that is acceptable.)
+    let rendezvous = {
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(Rendezvous::accept(&listener, p));
+        });
+        let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+        loop {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(r) => break r?,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Transport("rendezvous thread died".into()));
+                }
+            }
+            for (rank, c) in children.iter_mut().enumerate() {
+                if let Ok(Some(status)) = c.try_wait() {
+                    return Err(Error::Transport(format!(
+                        "rank {rank} exited during rendezvous ({status})"
+                    )));
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Transport(format!(
+                    "rendezvous timed out: not all {p} ranks dialed back within {}s",
+                    RENDEZVOUS_TIMEOUT.as_secs()
+                )));
+            }
+        }
+    };
+
+    let controls = rendezvous.broadcast(None)?;
+    let job = job_line::<S>(cfg, problem.name());
+    for (rank, c) in controls.iter().enumerate() {
+        write_line(c, &job)
+            .map_err(|e| Error::Transport(format!("job dispatch to rank {rank}: {e}")))?;
+    }
+
+    let mut outcomes = Vec::with_capacity(p);
+    for (rank, c) in controls.iter().enumerate() {
+        c.set_read_timeout(Some(REPORT_TIMEOUT))?;
+        let line = read_line(c)
+            .map_err(|e| Error::Transport(format!("rank {rank} died before reporting: {e}")))?;
+        outcomes.push(decode_outcome::<S>(&line, rank)?);
+    }
+    Ok(outcomes)
+}
+
+/// Join every child and fail on any nonzero exit (a rank that reported
+/// fine but crashed on the way out still counts as a failed solve).
+fn reap(children: &mut [Child]) -> Result<()> {
+    for (rank, c) in children.iter_mut().enumerate() {
+        let status = c
+            .wait()
+            .map_err(|e| Error::Transport(format!("waiting for rank {rank}: {e}")))?;
+        if !status.success() {
+            return Err(Error::Transport(format!(
+                "rank {rank} exited with {status} after reporting"
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Child: join the world, run one rank, report back
+// ---------------------------------------------------------------------
+
+/// `repro rank` entry point: join the world at `join`, read the job
+/// line, run this rank's share of the solve, write the report line.
+/// Any error propagates to the CLI's standard stderr-and-exit-1 path —
+/// which is exactly the observable the fault-injection tests pin.
+pub fn run_rank_process(join: &str, rank: usize, speed: f64) -> Result<()> {
+    let opts = TcpOpts {
+        speed,
+        ..TcpOpts::default()
+    };
+    let (ep, control) = TcpWorld::join(join, rank, opts)?;
+    let line = read_line(&control)
+        .map_err(|e| Error::Transport(format!("rank {rank}: reading job line: {e}")))?;
+    let job = json::parse(&line)
+        .map_err(|e| Error::Config(format!("rank {rank}: bad job line {line:?}: {e}")))?;
+    let cfg = ExperimentConfig::from_json(
+        job.get("config")
+            .ok_or_else(|| Error::Config(format!("rank {rank}: job line has no config")))?,
+    )?;
+    let problem = job.get("problem").and_then(Json::as_str).unwrap_or("");
+    let precision = job.get("precision").and_then(Json::as_str).unwrap_or("");
+    match (problem, precision) {
+        ("convdiff3d", "f64") => {
+            child_solve::<f64, _>(ep, &control, &ConvDiffProblem::from_config(&cfg)?, &cfg, rank)
+        }
+        ("convdiff3d", "f32") => {
+            child_solve::<f32, _>(ep, &control, &ConvDiffProblem::from_config(&cfg)?, &cfg, rank)
+        }
+        ("jacobi1d", "f64") => {
+            let p = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?;
+            child_solve::<f64, _>(ep, &control, &p, &cfg, rank)
+        }
+        ("jacobi1d", "f32") => {
+            let p = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?;
+            child_solve::<f32, _>(ep, &control, &p, &cfg, rank)
+        }
+        (p, w) => Err(Error::Config(format!(
+            "rank {rank}: unknown job problem={p:?} precision={w:?}"
+        ))),
+    }
+}
+
+fn child_solve<S: Scalar, P: Problem<S>>(
+    ep: TcpEndpoint,
+    control: &TcpStream,
+    problem: &P,
+    cfg: &ExperimentConfig,
+    rank: usize,
+) -> Result<()> {
+    let p = problem.world_size();
+    if rank >= p || ep.world_size() != p {
+        return Err(Error::Config(format!(
+            "rank {rank}: world size mismatch (problem wants {p} ranks, world has {})",
+            ep.world_size()
+        )));
+    }
+    problem.check_backend(cfg.backend)?;
+    let graph = problem.comm_graphs()?.swap_remove(rank);
+    // `workers` builds the whole world's workers (one-time setup is
+    // defined on the main thread); each process keeps only its own.
+    let worker = problem
+        .workers(cfg.backend, cfg.inner_sweeps)?
+        .into_iter()
+        .nth(rank)
+        .ok_or_else(|| Error::Config(format!("rank {rank}: problem built no worker")))?;
+    let outcome = run_rank::<_, S, _>(ep, graph, worker, cfg.clone())?;
+    write_line(control, &encode_outcome(rank, &outcome))
+        .map_err(|e| Error::Transport(format!("rank {rank}: writing report line: {e}")))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Report protocol (single-line JSON per rank)
+// ---------------------------------------------------------------------
+
+/// Non-finite `f64`s are not valid JSON; encode them as `null`.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Inverse of [`num_or_null`]: anything non-numeric decodes as `+inf`
+/// (the convergence logic only distinguishes finite from non-finite).
+fn f64_or_inf(v: Option<&Json>) -> f64 {
+    v.and_then(Json::as_f64).unwrap_or(f64::INFINITY)
+}
+
+fn u64_field(v: Option<&Json>) -> u64 {
+    v.and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn secs_field(v: Option<&Json>) -> Duration {
+    let s = v.and_then(Json::as_f64).unwrap_or(0.0);
+    if s.is_finite() {
+        Duration::from_secs_f64(s.max(0.0))
+    } else {
+        Duration::ZERO
+    }
+}
+
+fn job_line<S: Scalar>(cfg: &ExperimentConfig, problem: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("config".to_string(), cfg.to_json());
+    m.insert("problem".to_string(), Json::Str(problem.to_string()));
+    m.insert("precision".to_string(), Json::Str(S::NAME.to_string()));
+    json::write(&Json::Obj(m))
+}
+
+fn scalar_arr<S: Scalar>(v: &[S]) -> Json {
+    Json::Arr(v.iter().map(|x| num_or_null(x.to_f64())).collect())
+}
+
+fn encode_outcome<S: Scalar>(rank: usize, o: &RankOutcome<S>) -> String {
+    let steps = o
+        .steps
+        .iter()
+        .map(|s| {
+            let mut m = BTreeMap::new();
+            m.insert("iterations".to_string(), Json::Num(s.iterations as f64));
+            m.insert("wall_seconds".to_string(), Json::Num(s.wall.as_secs_f64()));
+            m.insert("reported_norm".to_string(), num_or_null(s.reported_norm));
+            m.insert("snapshots".to_string(), Json::Num(s.snapshots as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mt = &o.metrics;
+    let mut metrics = BTreeMap::new();
+    for (key, v) in [
+        ("iterations", mt.iterations),
+        ("msgs_sent", mt.msgs_sent),
+        ("sends_discarded", mt.sends_discarded),
+        ("msgs_delivered", mt.msgs_delivered),
+        ("snapshots", mt.snapshots),
+        ("detection_rounds", mt.detection_rounds),
+        ("norm_reductions", mt.norm_reductions),
+    ] {
+        metrics.insert(key.to_string(), Json::Num(v as f64));
+    }
+    metrics.insert(
+        "compute_time_seconds".to_string(),
+        Json::Num(mt.compute_time.as_secs_f64()),
+    );
+    metrics.insert(
+        "comm_time_seconds".to_string(),
+        Json::Num(mt.comm_time.as_secs_f64()),
+    );
+
+    let mut m = BTreeMap::new();
+    m.insert("rank".to_string(), Json::Num(rank as f64));
+    m.insert("sol".to_string(), scalar_arr(&o.sol));
+    m.insert("prev_sol".to_string(), scalar_arr(&o.prev_sol));
+    m.insert("steps".to_string(), Json::Arr(steps));
+    m.insert("metrics".to_string(), Json::Obj(metrics));
+    json::write(&Json::Obj(m))
+}
+
+fn decode_scalars<S: Scalar>(v: Option<&Json>) -> Result<Vec<S>> {
+    let arr = v
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config("report line: missing solution array".into()))?;
+    Ok(arr
+        .iter()
+        .map(|x| S::from_f64(x.as_f64().unwrap_or(f64::INFINITY)))
+        .collect())
+}
+
+fn decode_outcome<S: Scalar>(line: &str, expect_rank: usize) -> Result<RankOutcome<S>> {
+    let v = json::parse(line)
+        .map_err(|e| Error::Config(format!("rank {expect_rank}: bad report line: {e}")))?;
+    let rank = v.get("rank").and_then(Json::as_usize);
+    if rank != Some(expect_rank) {
+        return Err(Error::Protocol(format!(
+            "report rank mismatch: expected {expect_rank}, got {rank:?}"
+        )));
+    }
+    let steps = v
+        .get("steps")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config(format!("rank {expect_rank}: report has no steps")))?
+        .iter()
+        .map(|s| RankStep {
+            iterations: u64_field(s.get("iterations")),
+            wall: secs_field(s.get("wall_seconds")),
+            reported_norm: f64_or_inf(s.get("reported_norm")),
+            snapshots: u64_field(s.get("snapshots")),
+        })
+        .collect();
+    let m = v
+        .get("metrics")
+        .ok_or_else(|| Error::Config(format!("rank {expect_rank}: report has no metrics")))?;
+    let metrics = RankMetrics {
+        iterations: u64_field(m.get("iterations")),
+        msgs_sent: u64_field(m.get("msgs_sent")),
+        sends_discarded: u64_field(m.get("sends_discarded")),
+        msgs_delivered: u64_field(m.get("msgs_delivered")),
+        snapshots: u64_field(m.get("snapshots")),
+        detection_rounds: u64_field(m.get("detection_rounds")),
+        norm_reductions: u64_field(m.get("norm_reductions")),
+        compute_time: secs_field(m.get("compute_time_seconds")),
+        comm_time: secs_field(m.get("comm_time_seconds")),
+    };
+    Ok(RankOutcome {
+        sol: decode_scalars(v.get("sol"))?,
+        prev_sol: decode_scalars(v.get("prev_sol"))?,
+        metrics,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_outcome() -> RankOutcome<f64> {
+        RankOutcome {
+            sol: vec![1.0, -0.125, 0.1 + 0.2],
+            prev_sol: vec![0.5, f64::INFINITY],
+            metrics: RankMetrics {
+                iterations: 42,
+                msgs_sent: 7,
+                sends_discarded: 1,
+                msgs_delivered: 6,
+                snapshots: 3,
+                detection_rounds: 2,
+                norm_reductions: 5,
+                compute_time: Duration::from_micros(1234),
+                comm_time: Duration::from_micros(567),
+            },
+            steps: vec![
+                RankStep {
+                    iterations: 21,
+                    wall: Duration::from_millis(3),
+                    reported_norm: 1.25e-7,
+                    snapshots: 2,
+                },
+                RankStep {
+                    iterations: 21,
+                    wall: Duration::from_millis(2),
+                    reported_norm: f64::NAN,
+                    snapshots: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_line_roundtrips_bit_exactly() {
+        let o = sample_outcome();
+        let line = encode_outcome(3, &o);
+        let back: RankOutcome<f64> = decode_outcome(&line, 3).unwrap();
+        // Finite payloads round-trip bit-for-bit (shortest-roundtrip
+        // JSON numbers); non-finite collapses to +inf by design.
+        assert_eq!(back.sol, o.sol);
+        assert_eq!(back.prev_sol[0], 0.5);
+        assert_eq!(back.prev_sol[1], f64::INFINITY);
+        assert_eq!(back.metrics, o.metrics);
+        assert_eq!(back.steps.len(), 2);
+        assert_eq!(back.steps[0].iterations, 21);
+        assert_eq!(back.steps[0].wall, o.steps[0].wall);
+        assert_eq!(back.steps[0].reported_norm, 1.25e-7);
+        assert_eq!(back.steps[1].reported_norm, f64::INFINITY);
+    }
+
+    #[test]
+    fn report_line_rank_mismatch_is_rejected() {
+        let line = encode_outcome(1, &sample_outcome());
+        let err = decode_outcome::<f64>(&line, 0).unwrap_err().to_string();
+        assert!(err.contains("rank mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn job_line_roundtrips_config() {
+        let cfg = ExperimentConfig {
+            threshold: 3.5e-9,
+            seed: 99,
+            ..ExperimentConfig::default()
+        };
+        let line = job_line::<f32>(&cfg, "jacobi1d");
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("problem").and_then(Json::as_str), Some("jacobi1d"));
+        assert_eq!(v.get("precision").and_then(Json::as_str), Some("f32"));
+        let back = ExperimentConfig::from_json(v.get("config").unwrap()).unwrap();
+        assert_eq!(back.threshold, 3.5e-9);
+        assert_eq!(back.seed, 99);
+    }
+}

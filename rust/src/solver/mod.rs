@@ -6,6 +6,7 @@
 //! stencil compute backends.
 
 pub mod backend;
+pub mod distributed;
 pub mod driver;
 pub mod native;
 pub mod session;

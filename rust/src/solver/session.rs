@@ -34,7 +34,7 @@ use crate::metrics::RankMetrics;
 use crate::problem::{ConvDiffProblem, Problem, ProblemWorker};
 use crate::scalar::Scalar;
 use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
-use crate::transport::{BufferPool, ShmConfig, ShmWorld, Transport};
+use crate::transport::{BufferPool, ShmConfig, ShmWorld, TcpConfig, TcpWorld, Transport};
 
 /// Aggregated per-time-step results.
 #[derive(Debug, Clone)]
@@ -301,83 +301,114 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
                 let (_world, eps) = ShmWorld::new(shm_cfg);
                 spawn_ranks(eps, graphs, workers, cfg)?
             }
+            TransportKind::Tcp => {
+                // In-process TCP-backend world: same lane/backpressure
+                // machinery as the wire path, direct delivery. The CLI's
+                // genuinely multi-process path (`repro rank` subprocesses
+                // over localhost) lives in [`super::distributed`].
+                let tcp_cfg = TcpConfig::homogeneous(p)
+                    .with_rank_speed(cfg.rank_speed.clone())
+                    .with_pools(self.pools.clone());
+                let (_world, eps) = TcpWorld::new(tcp_cfg);
+                spawn_ranks(eps, graphs, workers, cfg)?
+            }
         };
         let total_wall = t0.elapsed();
 
-        // Aggregate per-step stats: max over ranks. The reported norm is
-        // the largest *finite* value any rank observed — never rank 0's
-        // alone.
-        let num_steps = outcomes.first().map(|o| o.steps.len()).unwrap_or(0);
-        let steps: Vec<StepReport> = (0..num_steps)
-            .map(|s| {
-                let norms: Vec<f64> =
-                    outcomes.iter().map(|o| o.steps[s].reported_norm).collect();
-                if !cfg.scheme.is_async() {
-                    // Synchronous ranks all observe the elected reduction
-                    // result. Max-norm elections are exact; Pow-norm
-                    // elections may reassociate the additions across the
-                    // two elected ranks, so allow last-ulp slack.
-                    debug_assert!(
-                        norms.iter().all(|&x| {
-                            x == norms[0]
-                                || (x - norms[0]).abs()
-                                    <= 1e-12 * norms[0].abs().max(x.abs())
-                        }),
-                        "synchronous ranks disagree on the reported norm at step {s}: {norms:?}"
-                    );
-                }
-                let finite_max = norms
-                    .iter()
-                    .copied()
-                    .filter(|x| x.is_finite())
-                    .fold(f64::NEG_INFINITY, f64::max);
-                StepReport {
-                    step: s,
-                    wall: outcomes.iter().map(|o| o.steps[s].wall).max().unwrap(),
-                    iterations: outcomes
-                        .iter()
-                        .map(|o| o.steps[s].iterations)
-                        .max()
-                        .unwrap(),
-                    reported_norm: if finite_max.is_finite() {
-                        finite_max
-                    } else {
-                        f64::INFINITY
-                    },
-                    snapshots: outcomes.iter().map(|o| o.steps[s].snapshots).max().unwrap(),
-                }
-            })
-            .collect();
-
-        // Assemble and verify in the f64 accumulation domain.
-        let sol_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.sol.clone()).collect();
-        let prev_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.prev_sol.clone()).collect();
-        let solution = self.problem.assemble(&sol_blocks);
-        let prev = widen(&self.problem.assemble(&prev_blocks));
-        let b_global = self.problem.rhs_global(&prev);
-        let r_n = self.problem.residual_max_norm(&widen(&solution), &b_global);
-
-        // Converged = every step's library-reported norm met the target.
-        // A step that exhausted `max_iters` exits with its norm above the
-        // threshold (or non-finite), which is exactly what this detects.
-        let converged = !steps.is_empty()
-            && steps
-                .iter()
-                .all(|s| s.reported_norm.is_finite() && s.reported_norm <= cfg.threshold);
-
-        Ok(SolveReport {
-            scheme: cfg.scheme,
-            backend: self.backend,
-            transport: self.transport,
-            precision: S::NAME,
-            problem: self.problem.name(),
+        Ok(aggregate_report(
+            cfg,
+            &self.problem,
+            self.backend,
+            self.transport,
+            outcomes,
             total_wall,
-            steps,
-            solution,
-            r_n,
-            converged,
-            per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
+        ))
+    }
+}
+
+/// Aggregate joined rank outcomes into a [`SolveReport`]: per-step
+/// max-over-ranks stats (the reported norm is the largest *finite*
+/// value any rank observed — never rank 0's alone), global assembly,
+/// and the sequential-oracle `r_n` verification. Shared by
+/// [`SolverSession::run`] (in-process worlds) and the cross-process
+/// driver in [`super::distributed`], so both paths produce
+/// bit-identical reports from identical outcomes.
+pub(crate) fn aggregate_report<S: Scalar, P: Problem<S>>(
+    cfg: &ExperimentConfig,
+    problem: &P,
+    backend: Backend,
+    transport: TransportKind,
+    outcomes: Vec<RankOutcome<S>>,
+    total_wall: Duration,
+) -> SolveReport<S> {
+    let num_steps = outcomes.first().map(|o| o.steps.len()).unwrap_or(0);
+    let steps: Vec<StepReport> = (0..num_steps)
+        .map(|s| {
+            let norms: Vec<f64> = outcomes.iter().map(|o| o.steps[s].reported_norm).collect();
+            if !cfg.scheme.is_async() {
+                // Synchronous ranks all observe the elected reduction
+                // result. Max-norm elections are exact; Pow-norm
+                // elections may reassociate the additions across the
+                // two elected ranks, so allow last-ulp slack.
+                debug_assert!(
+                    norms.iter().all(|&x| {
+                        x == norms[0]
+                            || (x - norms[0]).abs() <= 1e-12 * norms[0].abs().max(x.abs())
+                    }),
+                    "synchronous ranks disagree on the reported norm at step {s}: {norms:?}"
+                );
+            }
+            let finite_max = norms
+                .iter()
+                .copied()
+                .filter(|x| x.is_finite())
+                .fold(f64::NEG_INFINITY, f64::max);
+            StepReport {
+                step: s,
+                wall: outcomes.iter().map(|o| o.steps[s].wall).max().unwrap(),
+                iterations: outcomes
+                    .iter()
+                    .map(|o| o.steps[s].iterations)
+                    .max()
+                    .unwrap(),
+                reported_norm: if finite_max.is_finite() {
+                    finite_max
+                } else {
+                    f64::INFINITY
+                },
+                snapshots: outcomes.iter().map(|o| o.steps[s].snapshots).max().unwrap(),
+            }
         })
+        .collect();
+
+    // Assemble and verify in the f64 accumulation domain.
+    let sol_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.sol.clone()).collect();
+    let prev_blocks: Vec<Vec<S>> = outcomes.iter().map(|o| o.prev_sol.clone()).collect();
+    let solution = problem.assemble(&sol_blocks);
+    let prev = widen(&problem.assemble(&prev_blocks));
+    let b_global = problem.rhs_global(&prev);
+    let r_n = problem.residual_max_norm(&widen(&solution), &b_global);
+
+    // Converged = every step's library-reported norm met the target.
+    // A step that exhausted `max_iters` exits with its norm above the
+    // threshold (or non-finite), which is exactly what this detects.
+    let converged = !steps.is_empty()
+        && steps
+            .iter()
+            .all(|s| s.reported_norm.is_finite() && s.reported_norm <= cfg.threshold);
+
+    SolveReport {
+        scheme: cfg.scheme,
+        backend,
+        transport,
+        precision: S::NAME,
+        problem: problem.name(),
+        total_wall,
+        steps,
+        solution,
+        r_n,
+        converged,
+        per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
     }
 }
 
@@ -401,18 +432,18 @@ fn widen<S: Scalar>(v: &[S]) -> Vec<f64> {
 // Per-rank execution (problem- and transport-agnostic)
 // ---------------------------------------------------------------------
 
-struct RankStep {
-    iterations: u64,
-    wall: Duration,
-    reported_norm: f64,
-    snapshots: u64,
+pub(crate) struct RankStep {
+    pub(crate) iterations: u64,
+    pub(crate) wall: Duration,
+    pub(crate) reported_norm: f64,
+    pub(crate) snapshots: u64,
 }
 
-struct RankOutcome<S> {
-    sol: Vec<S>,
-    prev_sol: Vec<S>,
-    metrics: RankMetrics,
-    steps: Vec<RankStep>,
+pub(crate) struct RankOutcome<S> {
+    pub(crate) sol: Vec<S>,
+    pub(crate) prev_sol: Vec<S>,
+    pub(crate) metrics: RankMetrics,
+    pub(crate) steps: Vec<RankStep>,
 }
 
 /// Spawn one worker thread per rank and join their outcomes. Generic
@@ -449,7 +480,7 @@ where
 /// session API. The problem's worker supplies geometry, RHS and the
 /// compute phase; this function owns only the scheme mechanics and the
 /// heterogeneity emulation.
-fn run_rank<T, S, W>(
+pub(crate) fn run_rank<T, S, W>(
     ep: T,
     graph: CommGraph,
     mut worker: W,

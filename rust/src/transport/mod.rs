@@ -48,22 +48,57 @@
 //! * `wait_any` multiplexing, blocking `recv` timeouts, `probe_count`,
 //!   zero-size messages, and `f32` payload widening.
 //!
-//! Two implementations ship: [`crate::simmpi::Endpoint`] (the default —
-//! a simulated MPI world with a configurable network model) and
+//! ### Wire framing (for backends that serialize)
+//!
+//! A backend that leaves the process (like [`tcp`]) has to turn moved
+//! `MsgBuf`s into bytes. The conventions the tcp backend establishes —
+//! follow them unless you have a reason not to:
+//!
+//! * **Length-prefixed frames, fixed header.** Every frame opens with
+//!   four little-endian `u64`s `[kind, tag, seq, len]` (32 bytes); a
+//!   `DATA` frame is followed by exactly `len * 8` bytes of `f64` LE
+//!   payload. Fixed-size headers make partial-read reassembly a pure
+//!   byte-count decision — no scanning, no escapes — which is what
+//!   lets a stream survive arbitrarily torn writes (see the chunking
+//!   proxy in `rust/tests/transport_stress.rs`).
+//! * **Validate `seq` receiver-side.** The per-link frame counter must
+//!   match exactly; a gap or repeat means a torn or duplicated frame
+//!   and must kill the link with a descriptive error, never deliver.
+//! * **Cumulative ACKs complete handles.** "Arrived at destination"
+//!   (the [`SendHandle`] contract) is reported back as a single
+//!   monotone counter, so one ACK frame settles any number of sends
+//!   and a lost ACK is repaired by the next one.
+//! * **Progress-thread ownership.** Exactly one thread (per endpoint)
+//!   touches the sockets; the rank thread exchanges packets with it
+//!   through bounded queues and two [`WakeSignal`]s — one direction
+//!   each, so each signal keeps its single-parked-waiter contract.
+//!   Receiver-driven backpressure falls out naturally: when a lane is
+//!   full the progress thread stops *parsing* (bytes pool in the
+//!   kernel buffers) and the stalled ACK counter keeps the sender's
+//!   handles pending.
+//!
+//! Three implementations ship: [`crate::simmpi::Endpoint`] (the default
+//! — a simulated MPI world with a configurable network model),
 //! [`shm::ShmEndpoint`] (a real shared-memory backend: one bounded
 //! lock-free SPSC ring per directed link, arrival wakeups through the
 //! atomic [`wake::WakeSignal`] parking primitive, backpressure surfaced
-//! through its send handles). Candidate next backends: a real MPI
-//! binding, RDMA.
+//! through its send handles) and [`tcp::TcpEndpoint`] (an
+//! out-of-process socket backend: length-prefixed framed streams, a
+//! per-endpoint progress thread, rendezvous-based world construction —
+//! see [`tcp`]). Candidate next backends: a real MPI binding, RDMA.
 
 pub mod msgbuf;
 pub mod pool;
 pub mod shm;
+pub mod tcp;
 pub mod wake;
 
 pub use msgbuf::MsgBuf;
 pub use pool::{BufferPool, PoolStats};
 pub use shm::{ShmConfig, ShmEndpoint, ShmSendHandle, ShmWorld};
+pub use tcp::{
+    Rendezvous, TcpConfig, TcpEndpoint, TcpMetricsSnapshot, TcpOpts, TcpSendHandle, TcpWorld,
+};
 pub use wake::WakeSignal;
 
 use std::fmt;

@@ -2,8 +2,10 @@
 //! or degraded service run / 1 usage error) and the `serve` NDJSON
 //! front door, driven through the real binary.
 
-use std::io::Write;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
 use std::process::{Command, Stdio};
+use std::time::Duration;
 
 fn repro() -> Command {
     Command::new(env!("CARGO_BIN_EXE_repro"))
@@ -139,6 +141,89 @@ fn serve_flags_bad_specs_and_exits_two() {
     assert_eq!(out.status.code(), Some(2), "bad input degrades the run: {stdout}");
     assert_eq!(stdout.matches(r#""outcome":"rejected""#).count(), 2, "{stdout}");
     assert_eq!(stdout.matches(r#""outcome":"converged""#).count(), 1, "{stdout}");
+}
+
+/// ISSUE 8 acceptance: `--transport tcp` runs the solve as one OS
+/// process per rank over localhost sockets, and a synchronous solve is
+/// deterministic lockstep — its verified residual and iteration count
+/// must match the simulated-MPI transport bit for bit.
+#[test]
+fn solve_tcp_multiprocess_matches_sim_sync_bit_for_bit() {
+    let run = |transport: &str| {
+        let out = repro()
+            .args(QUICK_SOLVE)
+            .args(["--scheme", "sync", "--transport", transport, "--json"])
+            .output()
+            .expect("run repro solve");
+        assert!(
+            out.status.success(),
+            "{transport}: status {:?}, stderr: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        jack2::util::json::parse(String::from_utf8_lossy(&out.stdout).trim()).expect("json report")
+    };
+    let sim = run("sim");
+    let tcp = run("tcp");
+    for key in ["r_n", "iterations"] {
+        let a = sim.get(key).and_then(|v| v.as_f64()).expect(key);
+        let b = tcp.get(key).and_then(|v| v.as_f64()).expect(key);
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "sync {key} must not depend on the transport: sim={a} tcp={b}"
+        );
+    }
+    assert_eq!(tcp.get("converged"), sim.get("converged"));
+}
+
+/// A connection that delivers garbage bytes (not even UTF-8) must be
+/// dropped with an error report line on stderr — and the service must
+/// stay up: the next, valid connection is served normally.
+#[test]
+fn serve_listen_survives_garbage_connection() {
+    let mut child = repro()
+        .args(["serve", "--workers", "1", "--listen", "127.0.0.1:0"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve --listen");
+    // The service reports the *bound* address (port 0 is kernel-assigned).
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let mut line = String::new();
+    stderr.read_line(&mut line).expect("startup line");
+    assert!(line.contains("listening on"), "{line}");
+    let addr = line.rsplit(' ').next().unwrap().trim().to_string();
+
+    // Connection 1: invalid UTF-8 garbage. Expect an error report line,
+    // not a dead service.
+    {
+        let mut s = TcpStream::connect(&addr).expect("dial service");
+        s.write_all(&[0xff, 0xfe, b'{', 0x80, 0x00, b'\n']).unwrap();
+    }
+    let mut err_line = String::new();
+    stderr.read_line(&mut err_line).expect("error report line");
+    assert!(
+        err_line.contains("connection error"),
+        "garbage must be reported: {err_line}"
+    );
+
+    // Connection 2: a valid job — served end to end.
+    let mut s = TcpStream::connect(&addr).expect("service must still be up");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    writeln!(
+        s,
+        r#"{{"problem":"jacobi","config":{{"process_grid":[2,1,1],"n":16,"net_latency_us":1,"net_jitter":0}}}}"#
+    )
+    .unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut reply = String::new();
+    s.read_to_string(&mut reply).expect("read the job report");
+    assert!(reply.contains(r#""outcome":"converged""#), "{reply}");
+
+    child.kill().expect("stop the service");
+    let _ = child.wait();
 }
 
 #[test]

@@ -2,10 +2,14 @@
 //!
 //! The [`jack2::transport::Transport`] contract is executable: every
 //! check in this file is written once, generically over a
-//! [`TestBackend`] factory, and instantiated for **both** shipped
-//! backends — the simulated MPI world ([`jack2::simmpi::Endpoint`]) and
+//! [`TestBackend`] factory, and instantiated for **all three** shipped
+//! backends — the simulated MPI world ([`jack2::simmpi::Endpoint`]),
 //! the shared-memory ring backend
-//! ([`jack2::transport::shm::ShmEndpoint`]) — via the
+//! ([`jack2::transport::shm::ShmEndpoint`]) and the TCP backend
+//! ([`jack2::transport::tcp::TcpEndpoint`], in its in-process
+//! local-world construction; its socket path is covered by the unit
+//! tests in `transport/tcp.rs`, `tests/transport_faults.rs` and the
+//! chunking proxy in `tests/transport_stress.rs`) — via the
 //! `conformance_suite!` macro at the bottom. A new backend earns its
 //! place by adding one `impl TestBackend` + one macro line and passing
 //! the same suite.
@@ -35,7 +39,7 @@ use jack2::jack::messages::{TAG_DATA, TAG_DATA_PACKED};
 use jack2::jack::{AsyncComm, AsyncConfig, BufferSet, IterateOpts, JackComm, NormKind, StepOutcome};
 use jack2::metrics::RankMetrics;
 use jack2::simmpi::{allreduce, barrier, NetworkModel, ReduceOp, World, WorldConfig};
-use jack2::transport::{ShmConfig, ShmWorld, Transport};
+use jack2::transport::{SendHandle, ShmConfig, ShmWorld, TcpConfig, TcpWorld, Transport};
 
 /// Factory for a backend under conformance test.
 trait TestBackend {
@@ -85,6 +89,24 @@ impl TestBackend for Shm {
         // Capacity-1 rings: one message fits per link; anything beyond
         // parks in overflow and reports backpressure through its handle.
         ShmWorld::new(ShmConfig::homogeneous(2).with_ring_capacity(1)).1
+    }
+}
+
+struct Tcp;
+
+impl TestBackend for Tcp {
+    type Ep = jack2::transport::TcpEndpoint;
+    const NAME: &'static str = "tcp";
+
+    fn world(p: usize) -> Vec<Self::Ep> {
+        TcpWorld::homogeneous(p).1
+    }
+
+    fn congested_pair() -> Vec<Self::Ep> {
+        // Capacity-1 receive lanes: one message flushes per link;
+        // anything beyond parks in the out queue and reports
+        // backpressure through its handle.
+        TcpWorld::new(TcpConfig::homogeneous(2).with_lane_capacity(1)).1
     }
 }
 
@@ -366,6 +388,44 @@ fn recv_timeout_errors_cleanly<B: TestBackend>() {
     assert!(err.is_err(), "{}", B::NAME);
 }
 
+/// A `recv` deadline must keep firing while the endpoint's *own* sends
+/// are parked on a congested channel: backpressure on the send side
+/// must never wedge the receive side, and the timed-out receive must
+/// not complete (or drop) the parked sends as a side effect.
+fn recv_timeout_expires_while_send_parked<B: TestBackend>() {
+    let mut eps = B::congested_pair();
+    let _e1 = eps.pop().unwrap(); // receiver never drains
+    let mut e0 = eps.pop().unwrap();
+    let handles: Vec<_> = (0..3)
+        .map(|i| e0.isend_copy(1, 7, &[i as f64]).unwrap())
+        .collect();
+    assert!(
+        !handles[2].test(),
+        "{}: the channel must be congested before the recv",
+        B::NAME
+    );
+    let timeout = Duration::from_millis(50);
+    let t0 = std::time::Instant::now();
+    let err = e0.recv(1, 99, Some(timeout));
+    let elapsed = t0.elapsed();
+    assert!(err.is_err(), "{}: nothing was sent to rank 0", B::NAME);
+    assert!(
+        elapsed >= timeout,
+        "{}: recv returned before its deadline ({elapsed:?})",
+        B::NAME
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "{}: recv wedged behind parked sends ({elapsed:?})",
+        B::NAME
+    );
+    assert!(
+        !handles[2].test(),
+        "{}: a timed-out recv must not complete parked sends",
+        B::NAME
+    );
+}
+
 /// Zero-size messages (the barrier/control shape) flow, probe and match.
 fn zero_size_messages_flow<B: TestBackend>() {
     let (mut e0, mut e1) = pair::<B>();
@@ -563,6 +623,11 @@ macro_rules! conformance_suite {
             }
 
             #[test]
+            fn recv_timeout_expires_while_send_parked() {
+                super::recv_timeout_expires_while_send_parked::<$backend>();
+            }
+
+            #[test]
             fn zero_size_messages_flow() {
                 super::zero_size_messages_flow::<$backend>();
             }
@@ -592,6 +657,7 @@ macro_rules! conformance_suite {
 
 conformance_suite!(simmpi_backend, SimMpi);
 conformance_suite!(shm_backend, Shm);
+conformance_suite!(tcp_backend, Tcp);
 
 // ---------------------------------------------------------------------
 // Cross-backend acceptance
@@ -604,7 +670,9 @@ conformance_suite!(shm_backend, Shm);
 fn quickstart_sync_residuals_identical_across_backends() {
     let sim = quickstart_solve_on::<SimMpi>(false, 1e-10);
     let shm = quickstart_solve_on::<Shm>(false, 1e-10);
+    let tcp = quickstart_solve_on::<Tcp>(false, 1e-10);
     assert_eq!(sim, shm, "sync solve must not depend on the transport");
+    assert_eq!(sim, tcp, "sync solve must not depend on the transport");
 }
 
 /// Asynchronous iterations are timing-dependent (iteration counts
@@ -615,7 +683,8 @@ fn quickstart_async_converges_identically_across_backends() {
     let threshold = 1e-10;
     let sim = quickstart_solve_on::<SimMpi>(true, threshold);
     let shm = quickstart_solve_on::<Shm>(true, threshold);
-    for (rows, name) in [(&sim, "sim"), (&shm, "shm")] {
+    let tcp = quickstart_solve_on::<Tcp>(true, threshold);
+    for (rows, name) in [(&sim, "sim"), (&shm, "shm"), (&tcp, "tcp")] {
         assert!((rows[0].0 - X0).abs() < 1e-8, "{name}: {rows:?}");
         assert!((rows[1].0 - X1).abs() < 1e-8, "{name}: {rows:?}");
         assert!(rows.iter().all(|&(_, n)| n < threshold), "{name}: {rows:?}");

@@ -1,0 +1,175 @@
+//! Fault injection against the TCP transport (ISSUE 8 satellite).
+//!
+//! The conformance suite proves the happy path; this file proves the
+//! failure modes the out-of-process backend introduces — and that every
+//! one of them surfaces as a *descriptive error in bounded time*, never
+//! a hang:
+//!
+//! * a peer process killed mid-solve (the surviving rank's `repro rank`
+//!   process exits nonzero with a transport error on stderr);
+//! * a receive deadline on a half-open connection (the peer is alive
+//!   and connected but silent — the deadline still fires);
+//! * a world whose rendezvous point refuses connections (construction
+//!   fails cleanly instead of retrying forever).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use jack2::config::{ExperimentConfig, Scheme};
+use jack2::transport::tcp::{write_line, Rendezvous, TcpOpts, TcpWorld};
+use jack2::util::json::{self, Json};
+
+/// Poll a child's exit with a deadline (libtest has no per-test
+/// timeout; a hang must fail the assertion, not wedge CI).
+fn wait_timeout(child: &mut Child, limit: Duration) -> Option<std::process::ExitStatus> {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return Some(status);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// A rank subprocess of the real binary, reporting into `addr`.
+fn spawn_rank(addr: &str, rank: usize) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["rank", "--join", addr, "--rank", &rank.to_string()])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro rank")
+}
+
+/// Killing one rank process mid-solve must surface on the surviving
+/// rank as a nonzero exit with a descriptive transport error naming the
+/// dead peer — within seconds, not a hang on a silent socket.
+#[test]
+fn killed_peer_surfaces_transport_error_not_a_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut r0 = spawn_rank(&addr, 0);
+    let mut r1 = spawn_rank(&addr, 1);
+    let rendezvous = Rendezvous::accept(&listener, 2).expect("both ranks register");
+    let controls = rendezvous.broadcast(None).expect("broadcast the table");
+
+    // An effectively endless blocking-exchange solve: the threshold is
+    // unreachable, so rank 0 is guaranteed to be mid-iteration (parked
+    // on rank 1's halo) whenever the kill lands.
+    let cfg = ExperimentConfig {
+        process_grid: (2, 1, 1),
+        n: 32,
+        scheme: Scheme::Trivial,
+        threshold: 1e-300,
+        max_iters: 50_000_000,
+        time_steps: 1,
+        ..ExperimentConfig::default()
+    };
+    let mut job = BTreeMap::new();
+    job.insert("config".to_string(), cfg.to_json());
+    job.insert("problem".to_string(), Json::Str("jacobi1d".to_string()));
+    job.insert("precision".to_string(), Json::Str("f64".to_string()));
+    let line = json::write(&Json::Obj(job));
+    for c in &controls {
+        write_line(c, &line).expect("dispatch job");
+    }
+
+    thread::sleep(Duration::from_millis(200)); // let the solve spin up
+    r1.kill().expect("kill rank 1");
+    let _ = r1.wait();
+
+    let status = wait_timeout(&mut r0, Duration::from_secs(20)).unwrap_or_else(|| {
+        let _ = r0.kill();
+        panic!("rank 0 hung after its peer was killed");
+    });
+    assert!(
+        !status.success(),
+        "rank 0 must fail once its peer is gone, got {status}"
+    );
+    let mut stderr = String::new();
+    r0.stderr
+        .take()
+        .unwrap()
+        .read_to_string(&mut stderr)
+        .unwrap();
+    assert!(
+        stderr.contains("transport error"),
+        "rank 0 stderr must carry a transport error, got: {stderr}"
+    );
+    assert!(
+        stderr.contains("rank 1"),
+        "the error must name the dead peer, got: {stderr}"
+    );
+}
+
+/// A half-open link — the peer meshed up and stays connected, but never
+/// sends — must not defeat `recv` deadlines: the timeout fires on the
+/// wall clock and reports a timeout, not a connection fault.
+#[test]
+fn recv_deadline_respected_on_half_open_link() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accept = thread::spawn(move || {
+        Rendezvous::accept(&listener, 2)
+            .expect("accept")
+            .broadcast(None)
+            .expect("broadcast")
+    });
+    let peer_addr = addr.clone();
+    let j1 = thread::spawn(move || TcpWorld::join(&peer_addr, 1, TcpOpts::default()).unwrap());
+    let (e0, _c0) = TcpWorld::join(&addr, 0, TcpOpts::default()).unwrap();
+    let (_e1, _c1) = j1.join().unwrap(); // keep rank 1 alive but silent
+    let _controls = accept.join().unwrap();
+
+    let timeout = Duration::from_millis(150);
+    let t0 = Instant::now();
+    let err = e0.recv(1, 42, Some(timeout));
+    let elapsed = t0.elapsed();
+    assert!(err.is_err(), "nothing was sent");
+    let msg = err.unwrap_err().to_string();
+    assert!(msg.contains("timeout"), "want a timeout error, got: {msg}");
+    assert!(
+        elapsed >= timeout,
+        "recv returned before its deadline ({elapsed:?})"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "recv overshot its deadline on a half-open link ({elapsed:?})"
+    );
+}
+
+/// Joining a world whose rendezvous listener is gone must fail fast and
+/// cleanly — a descriptive construction error, not a retry loop.
+#[test]
+fn refused_rendezvous_fails_construction_cleanly() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // nobody is listening on that port any more
+
+    let opts = TcpOpts {
+        connect_timeout: Duration::from_secs(2),
+        join_timeout: Duration::from_secs(4),
+        ..TcpOpts::default()
+    };
+    let t0 = Instant::now();
+    let err = TcpWorld::join(&addr, 0, opts);
+    let elapsed = t0.elapsed();
+    assert!(err.is_err(), "join of a dead rendezvous must fail");
+    let msg = err.err().unwrap().to_string();
+    assert!(
+        msg.contains("rendezvous"),
+        "the error must point at the rendezvous, got: {msg}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "construction failure must be prompt ({elapsed:?})"
+    );
+}

@@ -3,12 +3,18 @@
 //! multi-threaded churn, and the shared-memory SPSC rings under
 //! concurrent producer/consumer schedules — no lost, duplicated or torn
 //! messages, including the zero-size-message and
-//! largest-undersized-fallback edge cases. All schedules are seeded via
-//! [`jack2::util::Rng64`], so failures reproduce.
+//! largest-undersized-fallback edge cases. Extended (ISSUE 8) with a
+//! seeded byte-chunking proxy between joined TCP endpoints, proving the
+//! wire framing reassembles arbitrarily torn stream writes. All
+//! schedules are seeded via [`jack2::util::Rng64`], so failures
+//! reproduce.
 
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use jack2::transport::tcp::{Rendezvous, TcpOpts, TcpWorld};
 use jack2::transport::{BufferPool, SendHandle, ShmConfig, ShmWorld, Transport};
 use jack2::util::Rng64;
 
@@ -248,6 +254,166 @@ fn shm_many_to_one_concurrent_fifo_under_overflow() {
         .wait_any(&pairs, Duration::from_millis(20))
         .is_none(), "duplicated messages");
     for p in producers {
+        p.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP framing under a byte-chunking proxy
+// ---------------------------------------------------------------------
+
+/// Forward `from` → `to`, re-slicing the stream into seeded 1–7 byte
+/// writes with occasional jitter: every 32-byte frame header and every
+/// payload crosses the wire torn. On EOF, propagate it.
+fn pump_chunked(mut from: TcpStream, mut to: TcpStream, seed: u64) {
+    let mut rng = Rng64::new(seed);
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let mut off = 0;
+        while off < n {
+            let k = rng.range_usize(1, 8).min(n - off);
+            if to.write_all(&buf[off..off + k]).is_err() {
+                return;
+            }
+            off += k;
+            if rng.bool(0.05) {
+                thread::sleep(Duration::from_micros(rng.range_usize(1, 40) as u64));
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Write);
+}
+
+/// Accept `conns` inbound data connections, dial `target` for each, and
+/// mangle both directions (data frames one way, ACK frames the other).
+fn run_proxy(listener: TcpListener, target: &str, conns: usize, seed: u64) {
+    let mut pumps = Vec::new();
+    for i in 0..conns {
+        let (client, _) = listener.accept().expect("proxy accept");
+        let server = TcpStream::connect(target).expect("proxy dial");
+        let c2 = client.try_clone().expect("clone client");
+        let s2 = server.try_clone().expect("clone server");
+        pumps.push(thread::spawn(move || {
+            pump_chunked(client, server, seed ^ ((i as u64) << 1))
+        }));
+        pumps.push(thread::spawn(move || {
+            pump_chunked(s2, c2, seed ^ (((i as u64) << 1) | 1))
+        }));
+    }
+    for p in pumps {
+        p.join().unwrap();
+    }
+}
+
+/// Two joined TCP endpoints exchanging the seeded stream of the shm
+/// test — but with every directed link routed through a proxy that
+/// re-chunks the byte stream at random 1–7 byte boundaries. The framed
+/// protocol must reassemble every message exactly once, in per-tag
+/// order, payload intact: torn writes may never surface as torn, lost
+/// or duplicated messages.
+#[test]
+fn tcp_framing_survives_chunked_writes_no_loss_no_duplication_no_tearing() {
+    const N: usize = 1200;
+    const SEED: u64 = 0x7C9_1A7;
+    let msgs = expected_stream(SEED, N);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Host thread: collect registrations, then stand up one chunking
+    // proxy in front of each rank's real data listener and broadcast
+    // the *proxy* addresses as the world's address table.
+    let host = thread::spawn(move || {
+        let rv = Rendezvous::accept(&listener, 2).expect("rendezvous");
+        let mut proxy_addrs = Vec::new();
+        let mut proxies = Vec::new();
+        for (r, target) in rv.addrs().into_iter().enumerate() {
+            let pl = TcpListener::bind("127.0.0.1:0").unwrap();
+            proxy_addrs.push(pl.local_addr().unwrap().to_string());
+            // 2-rank world: each rank receives exactly one inbound dial.
+            proxies.push(thread::spawn(move || {
+                run_proxy(pl, &target, 1, SEED ^ 0xBEEF ^ ((r as u64) << 8))
+            }));
+        }
+        let controls = rv.broadcast(Some(&proxy_addrs)).expect("broadcast");
+        (controls, proxies)
+    });
+
+    let opts = TcpOpts {
+        lane_capacity: 32, // small enough that wire backpressure engages
+        ..TcpOpts::default()
+    };
+    let o1 = opts.clone();
+    let a1 = addr.clone();
+    let j1 = thread::spawn(move || TcpWorld::join(&a1, 1, o1).unwrap());
+    let (e0, _c0) = TcpWorld::join(&addr, 0, opts).unwrap();
+    let (mut e1, _c1) = j1.join().unwrap();
+    let (_controls, proxies) = host.join().unwrap();
+
+    let producer_msgs = msgs.clone();
+    let producer = thread::spawn(move || {
+        let mut sched = Rng64::new(SEED ^ 0xABCD);
+        let mut last_handle = None;
+        for (tag, payload) in producer_msgs {
+            let h = if sched.bool(0.5) {
+                e1.isend_copy(0, tag, &payload).unwrap()
+            } else {
+                e1.isend(0, tag, payload).unwrap()
+            };
+            last_handle = Some(h);
+            if sched.bool(0.02) {
+                thread::sleep(Duration::from_micros(sched.range_usize(1, 50) as u64));
+            }
+        }
+        // The chunked ACK stream must still complete the final handle.
+        let h = last_handle.expect("stream is non-empty");
+        h.wait();
+        assert!(h.test());
+        e1 // keep the endpoint alive until the consumer is done
+    });
+
+    let mut expect_sized: std::collections::VecDeque<Vec<f64>> = msgs
+        .iter()
+        .filter(|(t, _)| *t == 1)
+        .map(|(_, p)| p.clone())
+        .collect();
+    let mut empties_due = msgs.iter().filter(|(t, _)| *t == 2).count();
+
+    let mut received = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while received < N {
+        assert!(Instant::now() < deadline, "stream stalled at {received}/{N}");
+        let Some((idx, m)) = e0.wait_any(&[(1, 1), (1, 2)], Duration::from_secs(10)) else {
+            continue;
+        };
+        match idx {
+            0 => {
+                let want = expect_sized
+                    .pop_front()
+                    .expect("more sized messages than sent: duplication");
+                assert_eq!(*m, want[..], "lost, reordered or torn payload");
+            }
+            _ => {
+                assert_eq!(m.len(), 0);
+                assert!(empties_due > 0, "duplicated zero-size message");
+                empties_due -= 1;
+            }
+        }
+        received += 1;
+    }
+    assert!(expect_sized.is_empty(), "sized messages lost");
+    assert_eq!(empties_due, 0, "zero-size messages lost");
+    assert!(e0.try_match(1, 1).is_none() && e0.try_match(1, 2).is_none());
+
+    let e1 = producer.join().unwrap();
+    // Closing both worlds tears down the proxied streams; the proxy
+    // pumps then see EOF and unwind.
+    drop(e0);
+    drop(e1);
+    for p in proxies {
         p.join().unwrap();
     }
 }
