@@ -14,8 +14,11 @@
 //! seeded open-loop load through `SolveService` — and the ISSUE 8 wire
 //! series (`tcp_roundtrip`): the same pooled round-trip over real
 //! localhost sockets with the TCP backend's progress thread on the
-//! receive path. Emits `BENCH_comm_micro.json` so the perf trajectory
-//! is machine-readable across PRs.
+//! receive path — and the ISSUE 9 observability series
+//! (`trace_overhead`): the event recorder's instrumentation-point cost
+//! with tracing compiled in but disabled (CI-gated ≤ 1.05× of bare
+//! code) and enabled. Emits `BENCH_comm_micro.json` so the perf
+//! trajectory is machine-readable across PRs.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
@@ -28,6 +31,7 @@ use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
 use jack2::jack::SyncComm;
 use jack2::metrics::RankMetrics;
+use jack2::obs::{self, EventKind};
 use jack2::scalar::Scalar;
 use jack2::simd::SimdLevel;
 use jack2::service::{Admission, JobOutcome, LoadGen, ServiceConfig, SolveService};
@@ -719,6 +723,74 @@ fn bench_service_throughput(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Trace-point overhead (ISSUE 9): the same ~µs compute kernel driven
+/// bare, with the recorder's instrumentation points compiled in but
+/// disabled, and with recording enabled. The instrumentation density
+/// (one span + two instants per iteration) mirrors the real solve loop.
+/// CI gates disabled/baseline ≤ 1.05× — the observability subsystem's
+/// "off means off" contract; the enabled ratio is reported for trend
+/// reading, not gated (it stays allocation-free but pays a clock read
+/// and a ring store per event).
+fn bench_trace_overhead(b: &Bencher) -> Vec<Json> {
+    println!("\ntrace overhead: recorder off vs on around a ~1us compute kernel");
+    let iters = 2_000usize;
+
+    fn work(u: &mut [f64]) {
+        for v in u.iter_mut() {
+            *v = *v * 0.999 + 0.001;
+        }
+        std::hint::black_box(&u[0]);
+    }
+
+    let mut u = vec![1.0f64; 2_000];
+
+    obs::reset(); // recording off, registry empty
+    let base = b.run("trace baseline", || {
+        for _ in 0..iters {
+            work(&mut u);
+        }
+    });
+    let disabled = b.run("trace disabled", || {
+        for _ in 0..iters {
+            let _s = obs::span(EventKind::Compute, 0, 0);
+            work(&mut u);
+            obs::instant(EventKind::Isend, 1, 64);
+            obs::instant(EventKind::Residual, 0, 0);
+        }
+    });
+    obs::set_enabled(true);
+    obs::set_lane(0, "bench-trace-overhead");
+    // One-time lane setup (the ring allocation) before measurement.
+    obs::instant(EventKind::Isend, 0, 0);
+    let enabled = b.run("trace enabled", || {
+        for _ in 0..iters {
+            let _s = obs::span(EventKind::Compute, 0, 0);
+            work(&mut u);
+            obs::instant(EventKind::Isend, 1, 64);
+            obs::instant(EventKind::Residual, 0, 0);
+        }
+    });
+    obs::set_enabled(false);
+    obs::reset();
+
+    let base_ns = base.mean().as_nanos() as f64 / iters as f64;
+    let mut t = Table::new(&["mode", "ns / iter", "vs baseline"]);
+    let mut rows = Vec::new();
+    for (mode, st) in [("baseline", base), ("disabled", disabled), ("enabled", enabled)] {
+        let ns = st.mean().as_nanos() as f64 / iters as f64;
+        let ratio = ns / base_ns.max(1.0);
+        t.row(&[mode.to_string(), format!("{ns:.0}"), format!("{ratio:.3}x")]);
+        let mut row = BTreeMap::new();
+        row.insert("mode".into(), Json::Str(mode.into()));
+        row.insert("ns_per_iter".into(), Json::Num(ns));
+        row.insert("ratio_vs_baseline".into(), Json::Num(ratio));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!("target: disabled <= 1.05x baseline (CI-gated); enabled is trend-only");
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -778,6 +850,7 @@ fn main() {
     let precision_rows = bench_solve_precision(&b);
     let termination_rows = bench_termination_detection(&b);
     let service_rows = bench_service_throughput(&b);
+    let trace_rows = bench_trace_overhead(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -795,6 +868,7 @@ fn main() {
     doc.insert("solve_precision".into(), Json::Arr(precision_rows));
     doc.insert("termination_detection".into(), Json::Arr(termination_rows));
     doc.insert("service_throughput".into(), Json::Arr(service_rows));
+    doc.insert("trace_overhead".into(), Json::Arr(trace_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

@@ -211,6 +211,11 @@ pub struct ExperimentConfig {
     /// loop runs exactly `max_iters` iterations with zero detection
     /// traffic, isolating the detection overhead.
     pub detect: bool,
+    /// Record observability events ([`crate::obs`]) during the solve.
+    /// Carried in the config so TCP rank subprocesses inherit the
+    /// setting; off by default (disabled recording costs one atomic
+    /// load per instrumentation point).
+    pub trace: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -243,6 +248,7 @@ impl Default for ExperimentConfig {
             work_jitter: 0.0,
             send_discard: true,
             detect: true,
+            trace: false,
         }
     }
 }
@@ -315,6 +321,7 @@ impl ExperimentConfig {
         m.insert("work_jitter".into(), Json::Num(self.work_jitter));
         m.insert("send_discard".into(), Json::Bool(self.send_discard));
         m.insert("detect".into(), Json::Bool(self.detect));
+        m.insert("trace".into(), Json::Bool(self.trace));
         Json::Obj(m)
     }
 
@@ -413,6 +420,9 @@ impl ExperimentConfig {
         }
         if let Some(Json::Bool(b)) = v.get("detect") {
             c.detect = *b;
+        }
+        if let Some(Json::Bool(b)) = v.get("trace") {
+            c.trace = *b;
         }
         Ok(c)
     }

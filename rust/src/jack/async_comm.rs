@@ -35,6 +35,7 @@ use super::messages::{TAG_DATA, TAG_DATA_PACKED};
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
+use crate::obs::{self, EventKind};
 use crate::scalar::Scalar;
 use crate::transport::Transport;
 
@@ -133,10 +134,12 @@ impl<T: Transport> AsyncComm<T> {
                 let busy = send_reqs[gi].as_ref().is_some_and(|r| !r.test());
                 if busy && *discard {
                     metrics.sends_discarded += 1;
+                    obs::instant(EventKind::SendDiscard, g.peer as u64, 0);
                 } else {
                     let h = if let [l] = g.links[..] {
                         ep.isend_scalars(g.peer, TAG_DATA, &bufs.send[l])?
                     } else {
+                        obs::instant(EventKind::Pack, g.peer as u64, g.links.len() as u64);
                         let msg = stage_packed(ep.pool(), &g.links, &bufs.send);
                         ep.isend(g.peer, TAG_DATA_PACKED, msg)?
                     };
@@ -149,6 +152,7 @@ impl<T: Transport> AsyncComm<T> {
                 let busy = send_reqs[l].as_ref().is_some_and(|r| !r.test());
                 if busy && *discard {
                     metrics.sends_discarded += 1;
+                    obs::instant(EventKind::SendDiscard, dst as u64, 0);
                 } else {
                     send_reqs[l] =
                         Some(ep.isend_scalars(dst, plan.send_subtag(l), &bufs.send[l])?);
@@ -198,6 +202,7 @@ impl<T: Transport> AsyncComm<T> {
                     if let [l] = g.links[..] {
                         bufs.deliver(l, data)?;
                     } else {
+                        obs::instant(EventKind::Unpack, g.peer as u64, g.links.len() as u64);
                         bufs.deliver_packed(&g.links, data)?;
                     }
                 }

@@ -69,6 +69,7 @@ use super::termination::{
 use crate::error::{Error, Result};
 use crate::graph::CommGraph;
 use crate::metrics::{RankMetrics, Trace};
+use crate::obs::{self, EventKind};
 use crate::scalar::Scalar;
 use crate::transport::Transport;
 
@@ -723,6 +724,7 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
 
     /// `Send()` of Listing 6.
     pub fn send(&mut self) -> Result<()> {
+        let _obs = obs::span(EventKind::HaloSend, self.metrics.iterations, 0);
         let t0 = Instant::now();
         let out = match self.mode {
             Mode::Synchronous => {
@@ -753,6 +755,7 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
     /// `Recv()` of Listing 6. Synchronous mode blocks for one message per
     /// incoming link; asynchronous mode never blocks.
     pub fn recv(&mut self) -> Result<()> {
+        let _obs = obs::span(EventKind::HaloRecv, self.metrics.iterations, 0);
         let t0 = Instant::now();
         let out = match self.mode {
             Mode::Synchronous => {
@@ -802,6 +805,7 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
     /// mode: advances the detection state machine; the global norm
     /// becomes available when a detection round completes.
     pub fn update_residual(&mut self) -> Result<f64> {
+        let _obs = obs::span(EventKind::Residual, self.metrics.iterations, 0);
         let t0 = Instant::now();
         self.metrics.iterations += 1;
         let Self {
@@ -873,9 +877,11 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
                 break;
             }
             self.recv()?;
+            let obs_compute = obs::span(EventKind::Compute, iterations, 0);
             let t0 = Instant::now();
             let outcome = step(self.compute_view());
             self.metrics.compute_time += t0.elapsed();
+            drop(obs_compute);
             // An aborted compute phase must not publish its (possibly
             // half-written) output or join the collective reduction: the
             // error propagates before any communication, exactly as the

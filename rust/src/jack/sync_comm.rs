@@ -27,6 +27,7 @@ use super::messages::{TAG_DATA, TAG_DATA_PACKED};
 use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::metrics::RankMetrics;
+use crate::obs::{self, EventKind};
 use crate::scalar::Scalar;
 use crate::transport::Transport;
 
@@ -95,6 +96,7 @@ impl<T: Transport> SyncComm<T> {
                 let h = if let [l] = g.links[..] {
                     ep.isend_scalars(g.peer, TAG_DATA, &bufs.send[l])?
                 } else {
+                    obs::instant(EventKind::Pack, g.peer as u64, g.links.len() as u64);
                     let msg = stage_packed(ep.pool(), &g.links, &bufs.send);
                     ep.isend(g.peer, TAG_DATA_PACKED, msg)?
                 };
@@ -141,6 +143,7 @@ impl<T: Transport> SyncComm<T> {
                     bufs.deliver(l, data)?;
                 } else {
                     let data = ep.recv(g.peer, TAG_DATA_PACKED, Some(timeout))?;
+                    obs::instant(EventKind::Unpack, g.peer as u64, g.links.len() as u64);
                     bufs.deliver_packed(&g.links, data)?;
                 }
                 metrics.msgs_delivered += 1;

@@ -16,6 +16,7 @@ use crate::jack::buffers::BufferSet;
 use crate::jack::norm::NormKind;
 use crate::jack::spanning_tree::SpanningTree;
 use crate::metrics::{RankMetrics, Trace};
+use crate::obs;
 use crate::scalar::Scalar;
 use crate::transport::{Tag, Transport};
 
@@ -182,8 +183,13 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for PersistenceProtocol 
         let was_terminated = self.terminated();
         PersistenceProtocol::poll(self, ep, lconv)?;
         metrics.detection_rounds += self.round - round_before;
+        if self.round > round_before {
+            obs::instant(obs::EventKind::DetectRound, self.round, 0);
+        }
         if self.terminated() && !was_terminated {
             metrics.detection_rounds += 1;
+            let norm = PersistenceProtocol::global_norm(self).unwrap_or(0.0);
+            obs::instant(obs::EventKind::DetectVerdict, norm.to_bits(), 1);
         }
         Ok(())
     }

@@ -50,6 +50,7 @@ use crate::jack::buffers::BufferSet;
 use crate::jack::messages::TAG_RD_EXCHANGE;
 use crate::jack::norm::NormKind;
 use crate::metrics::{RankMetrics, Trace};
+use crate::obs;
 use crate::scalar::Scalar;
 use crate::transport::{Rank, Transport};
 
@@ -282,8 +283,16 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for RecursiveDoublingPro
         _trace: &mut Trace,
     ) -> Result<()> {
         let rounds_before = self.rounds_completed;
+        let was_terminated = RecursiveDoublingProtocol::terminated(self);
         RecursiveDoublingProtocol::poll(self, ep, lconv)?;
         metrics.detection_rounds += self.rounds_completed - rounds_before;
+        if self.rounds_completed > rounds_before {
+            obs::instant(obs::EventKind::DetectRound, self.rounds_completed, 0);
+        }
+        if RecursiveDoublingProtocol::terminated(self) && !was_terminated {
+            let norm = RecursiveDoublingProtocol::global_norm(self).unwrap_or(0.0);
+            obs::instant(obs::EventKind::DetectVerdict, norm.to_bits(), 1);
+        }
         Ok(())
     }
 

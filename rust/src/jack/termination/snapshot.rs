@@ -11,6 +11,7 @@ use crate::error::Result;
 use crate::graph::CommGraph;
 use crate::jack::buffers::BufferSet;
 use crate::metrics::{RankMetrics, Trace};
+use crate::obs;
 use crate::scalar::Scalar;
 use crate::transport::Transport;
 
@@ -34,8 +35,13 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for SnapshotProtocol<S> 
         let was_terminated = self.0.terminated();
         self.0.poll(ep, graph, bufs, sol_vec, lconv, metrics, trace)?;
         metrics.detection_rounds += self.0.round() - round_before;
+        if self.0.round() > round_before {
+            obs::instant(obs::EventKind::DetectRound, self.0.round(), 0);
+        }
         if self.0.terminated() && !was_terminated {
             metrics.detection_rounds += 1;
+            let norm = self.0.global_norm().unwrap_or(0.0);
+            obs::instant(obs::EventKind::DetectVerdict, norm.to_bits(), 1);
         }
         Ok(())
     }

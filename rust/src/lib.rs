@@ -84,6 +84,14 @@
 //!   `python/compile/aot.py` (Python is build-time only).
 //! * **[`metrics`]** — counters and event traces used by the experiment
 //!   harnesses in `rust/benches/` and `examples/`.
+//! * **[`obs`]** — the observability subsystem: lock-free per-thread
+//!   event rings fed by instrumentation in every layer above, a
+//!   pluggable [`obs::Sink`] trait, a Chrome-trace JSON exporter
+//!   (`repro solve --trace out.json`) and the live service stats
+//!   exposition behind `repro serve` (`{"stats":true}` NDJSON queries,
+//!   `--stats-addr` Prometheus text). Off by default behind an atomic
+//!   fast path; the `trace_overhead` bench series gates the disabled
+//!   cost in CI.
 //!
 //! # Hot path
 //!
@@ -115,6 +123,7 @@ pub mod graph;
 pub mod harness;
 pub mod jack;
 pub mod metrics;
+pub mod obs;
 pub mod prelude;
 pub mod problem;
 pub mod runtime;

@@ -10,9 +10,15 @@
 //!                  [--steps N] [--threshold 1e-6]
 //!                  [--latency-us 20] [--jitter 0.1] [--seed S]
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
+//!                  [--trace out.json]  (Chrome-trace export of the
+//!                  cross-layer event recorder; open in about:tracing)
 //! repro serve      [--workers 2] [--queue 64] [--listen 127.0.0.1:7070]
-//!                  [--once]   (multi-tenant solve service; NDJSON job
-//!                  specs in, NDJSON reports + tenant summary out)
+//!                  [--once] [--stats-addr 127.0.0.1:9090]
+//!                  (multi-tenant solve service; NDJSON job specs in,
+//!                  NDJSON reports + tenant summary out; a
+//!                  {"stats":true} input line answers with live service
+//!                  stats; --stats-addr serves Prometheus text over HTTP;
+//!                  stdin mode drains cleanly on SIGINT/SIGTERM)
 //! repro rank       --join HOST:PORT --rank N [--speed 1.0]
 //!                  (internal: one rank of a --transport tcp solve;
 //!                  spawned by the parent `repro solve` process)
@@ -32,6 +38,8 @@
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::process::ExitCode;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use jack2::config::{Backend, ExperimentConfig, Precision, Scheme, TerminationKind, TransportKind};
@@ -39,13 +47,14 @@ use jack2::experiments::{faults, fig3, overhead, schemes, staleness, table1};
 use jack2::graph::validate_world;
 use jack2::harness::fmt_secs;
 use jack2::metrics::TenantMetrics;
+use jack2::obs::chrome::chrome_trace_json;
 use jack2::problem::{ConvDiffProblem, Jacobi1D, Partition3D};
 use jack2::scalar::Scalar;
 use jack2::service::{
-    Admission, JobOutcome, JobSpec, LoadGen, RejectReason, ServiceConfig, SolveService,
+    Admission, JobOutcome, JobSpec, JobTicket, LoadGen, RejectReason, ServiceConfig, SolveService,
 };
 use jack2::solver::{distributed, solve_experiment, SolveReport, SolverSession};
-use jack2::util::json;
+use jack2::util::{json, signal};
 use jack2::{Error, Result};
 
 /// Exit code for a run that completed but did not meet its convergence
@@ -102,13 +111,16 @@ fn print_usage() {
                     snapshot|persistence|recursive-doubling for the async\n             \
                     detection protocol; f32 clamps the default threshold\n             \
                     to 1e-4 unless --threshold is given; exits 2 when the\n             \
-                    solve does not converge within --max-iters)\n  \
+                    solve does not converge within --max-iters;\n             \
+                    --trace out.json writes a Chrome trace of the run)\n  \
          serve      multi-tenant solve service: newline-delimited JSON job\n             \
                     specs on stdin (or --listen HOST:PORT; --once for a\n             \
                     single connection), NDJSON reports + per-tenant summary\n             \
                     out; --workers/--queue bound the worker pool and the\n             \
-                    admission queue; exits 2 on any unconverged/failed/\n             \
-                    rejected job\n  \
+                    admission queue; a {{\"stats\":true}} line answers with\n             \
+                    live stats and --stats-addr HOST:PORT serves Prometheus\n             \
+                    text; stdin mode drains cleanly on SIGINT/SIGTERM;\n             \
+                    exits 2 on any unconverged/failed/rejected job\n  \
          submit     seeded open-loop load generator against an in-process\n             \
                     service (--count/--rate/--seed/--workers)\n  \
          rank       internal: one rank of a --transport tcp solve\n             \
@@ -211,6 +223,11 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig
 
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     let mut cfg = config_from_flags(flags)?;
+    // --trace PATH turns the cross-layer event recorder on; the path is
+    // consumed by print_solve once the report (with its drained lanes)
+    // is back. The flag rides the config so TCP rank subprocesses
+    // inherit it and ship their lanes home in the report line.
+    cfg.trace = flags.contains_key("trace");
     if cfg.precision == Precision::F32 && !flags.contains_key("threshold") {
         // f32 payloads bottom out near the width's rounding floor, so the
         // f64 default target may be unreachable; keep the default
@@ -290,6 +307,14 @@ fn print_solve<S: Scalar>(
     cfg: &ExperimentConfig,
     rep: SolveReport<S>,
 ) -> Result<bool> {
+    if let Some(path) = flags.get("trace") {
+        std::fs::write(path, json::write(&chrome_trace_json(&rep.trace)))?;
+        eprintln!(
+            "wrote Chrome trace ({} lanes, {} events) to {path}",
+            rep.trace.len(),
+            rep.trace.iter().map(|l| l.events.len()).sum::<usize>()
+        );
+    }
     if flags.contains_key("json") {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("config".to_string(), cfg.to_json());
@@ -363,7 +388,11 @@ fn print_solve<S: Scalar>(
 /// summary object out. Exit code 2 when any job was rejected, failed,
 /// or did not converge.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
-    let svc = start_service(flags)?;
+    let svc = Arc::new(start_service(flags)?);
+    let stats_srv = match flags.get("stats-addr") {
+        Some(addr) => Some(spawn_stats_listener(addr, Arc::clone(&svc))?),
+        None => None,
+    };
     let all_ok = match flags.get("listen") {
         Some(addr) => {
             let listener = std::net::TcpListener::bind(addr.as_str())
@@ -400,11 +429,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
             all_ok
         }
         None => {
-            let stdin = std::io::stdin();
             let stdout = std::io::stdout();
-            serve_stream(&svc, stdin.lock(), &mut stdout.lock())?
+            serve_stdin(&svc, &mut stdout.lock())?
         }
     };
+    if let Some(srv) = stats_srv {
+        srv.stop();
+    }
+    let svc = Arc::try_unwrap(svc)
+        .map_err(|_| Error::Config("stats listener still holds the service".into()))?;
     let tenants = svc.shutdown();
     println!("{}", json::write(&tenants_json(&tenants)));
     Ok(if all_ok {
@@ -412,6 +445,56 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     } else {
         ExitCode::from(EXIT_UNCONVERGED)
     })
+}
+
+/// Handle for the `--stats-addr` exposition thread ([`spawn_stats_listener`]).
+struct StatsServer {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl StatsServer {
+    fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = self.thread.join();
+    }
+}
+
+/// Bind `addr` and answer every connection with a minimal HTTP response
+/// carrying the live [`jack2::obs::stats::ServiceStats`] in Prometheus
+/// text format — scrapeable with `curl` or an actual Prometheus server.
+/// The listener is non-blocking so the thread can notice the stop flag.
+fn spawn_stats_listener(addr: &str, svc: Arc<SolveService>) -> Result<StatsServer> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| Error::Config(format!("cannot bind stats endpoint {addr}: {e}")))?;
+    let bound = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.to_string());
+    eprintln!("repro serve: stats on {bound}");
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let thread = std::thread::spawn(move || {
+        while !stop_flag.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((mut conn, _)) => {
+                    // The request line is never read: whatever the peer
+                    // asked for, the answer is the current stats dump.
+                    let body = svc.stats().to_prometheus();
+                    let _ = write!(
+                        conn,
+                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                         Content-Length: {}\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    });
+    Ok(StatsServer { stop, thread })
 }
 
 /// `repro submit` — deterministic open-loop smoke load against an
@@ -496,28 +579,100 @@ fn serve_stream<R: BufRead, W: Write>(
     let mut all_ok = true;
     for line in input.lines() {
         let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        match JobSpec::parse(line) {
-            Ok(spec) => match svc.submit(spec) {
-                Admission::Accepted(t) => tickets.push(t),
-                Admission::Rejected(reason) => {
-                    all_ok = false;
-                    writeln!(out, "{}", json::write(&reject_json(&reason)))?;
-                }
-            },
-            Err(e) => {
-                all_ok = false;
-                let mut m = std::collections::BTreeMap::new();
-                m.insert("outcome".to_string(), json::Json::Str("rejected".into()));
-                m.insert("error".to_string(), json::Json::Str(e.to_string()));
-                writeln!(out, "{}", json::write(&json::Json::Obj(m)))?;
+        all_ok &= handle_line(svc, &line, &mut tickets, out)?;
+    }
+    all_ok &= drain_tickets(svc, &tickets, out)?;
+    out.flush()?;
+    Ok(all_ok)
+}
+
+/// The stdin front end: the same NDJSON protocol as `--listen`, plus a
+/// SIGINT/SIGTERM latch — on a signal the loop stops reading new specs,
+/// drains every already-accepted job, and the caller still prints the
+/// tenant summary. Stdin is pumped by a helper thread because a blocked
+/// `read` is restarted after the handler runs (BSD `signal` semantics)
+/// and would never observe the latch; the channel poll below does.
+fn serve_stdin<W: Write>(svc: &SolveService, out: &mut W) -> Result<bool> {
+    signal::install();
+    let (tx, rx) = mpsc::channel::<std::io::Result<String>>();
+    std::thread::spawn(move || {
+        for line in std::io::stdin().lock().lines() {
+            let eof = line.is_err();
+            if tx.send(line).is_err() || eof {
+                break;
             }
         }
+    });
+    let mut tickets = Vec::new();
+    let mut all_ok = true;
+    loop {
+        if signal::triggered() {
+            eprintln!(
+                "repro serve: signal received; draining {} accepted job(s)",
+                tickets.len()
+            );
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(line) => all_ok &= handle_line(svc, &line?, &mut tickets, out)?,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
     }
-    for t in &tickets {
+    all_ok &= drain_tickets(svc, &tickets, out)?;
+    out.flush()?;
+    Ok(all_ok)
+}
+
+/// Handle one input line: a `{"stats":true}` query is answered in place
+/// with the live service stats object; anything else is a job spec to
+/// submit. Returns false when the line was rejected or unparseable.
+fn handle_line<W: Write>(
+    svc: &SolveService,
+    line: &str,
+    tickets: &mut Vec<JobTicket>,
+    out: &mut W,
+) -> Result<bool> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(true);
+    }
+    if let Ok(v) = json::parse(line) {
+        if matches!(v.get("stats"), Some(json::Json::Bool(true))) {
+            writeln!(out, "{}", json::write(&svc.stats().to_json()))?;
+            out.flush()?;
+            return Ok(true);
+        }
+    }
+    match JobSpec::parse(line) {
+        Ok(spec) => match svc.submit(spec) {
+            Admission::Accepted(t) => {
+                tickets.push(t);
+                Ok(true)
+            }
+            Admission::Rejected(reason) => {
+                writeln!(out, "{}", json::write(&reject_json(&reason)))?;
+                Ok(false)
+            }
+        },
+        Err(e) => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("outcome".to_string(), json::Json::Str("rejected".into()));
+            m.insert("error".to_string(), json::Json::Str(e.to_string()));
+            writeln!(out, "{}", json::write(&json::Json::Obj(m)))?;
+            Ok(false)
+        }
+    }
+}
+
+/// Emit one report line per accepted job, in submission order.
+fn drain_tickets<W: Write>(
+    svc: &SolveService,
+    tickets: &[JobTicket],
+    out: &mut W,
+) -> Result<bool> {
+    let mut all_ok = true;
+    for t in tickets {
         match svc.collect(t, Duration::from_secs(600)) {
             Some(rep) => {
                 all_ok &= rep.outcome == JobOutcome::Converged;
@@ -532,7 +687,6 @@ fn serve_stream<R: BufRead, W: Write>(
             }
         }
     }
-    out.flush()?;
     Ok(all_ok)
 }
 

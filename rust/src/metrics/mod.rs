@@ -1,6 +1,15 @@
 //! Per-rank counters and event traces for the experiment harnesses.
+//!
+//! The event-trace types ([`Trace`], [`Event`]) moved to the
+//! observability subsystem ([`crate::obs`]) and are re-exported here so
+//! the termination-protocol signatures keep compiling unchanged. The
+//! ring-backed replacement keeps the **most recent** `cap` events (the
+//! old bounded trace silently kept the first `cap`) and exposes the
+//! loss through [`Trace::dropped`].
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+pub use crate::obs::{ProtocolEvent as Event, Trace};
 
 /// Counters accumulated by one rank during a solve.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -30,6 +39,23 @@ pub struct RankMetrics {
 
 impl RankMetrics {
     /// Merge counters from another rank (for whole-world aggregation).
+    ///
+    /// The aggregation is deliberately **mixed**, and sinks that reuse
+    /// it (the service stats exposition, the experiment tables) rely on
+    /// the distinction:
+    ///
+    /// * **Summed** — genuinely per-rank work, where the world total is
+    ///   the sum of rank contributions: `iterations`, `msgs_sent`,
+    ///   `sends_discarded`, `msgs_delivered`, `norm_reductions`,
+    ///   `compute_time`, `comm_time`.
+    /// * **Maxed** — world-global protocol rounds that every rank
+    ///   participates in and counts once each: `snapshots` and
+    ///   `detection_rounds`. Summing them would multiply one logical
+    ///   round by the world size; `max` keeps the merged value equal to
+    ///   the round count of the furthest-progressed rank (they agree at
+    ///   quiescence).
+    ///
+    /// Pinned by the `merge_sums_work_but_maxes_rounds` unit test.
     pub fn merge(&mut self, o: &RankMetrics) {
         self.iterations += o.iterations;
         self.msgs_sent += o.msgs_sent;
@@ -95,64 +121,6 @@ impl TenantMetrics {
     }
 }
 
-/// A timestamped protocol event (only recorded when tracing is enabled).
-#[derive(Debug, Clone, PartialEq)]
-pub enum Event {
-    IterationDone { k: u64 },
-    LocalConvergence { armed: bool },
-    SnapshotTriggered,
-    SnapshotLocalTaken,
-    SnapshotComplete { norm: f64 },
-    GlobalConvergence { norm: f64 },
-    Resume,
-}
-
-/// Bounded in-memory event trace.
-#[derive(Debug)]
-pub struct Trace {
-    start: Instant,
-    events: Vec<(Duration, Event)>,
-    enabled: bool,
-    cap: usize,
-}
-
-impl Default for Trace {
-    fn default() -> Self {
-        Trace::disabled()
-    }
-}
-
-impl Trace {
-    pub fn enabled(cap: usize) -> Self {
-        Trace {
-            start: Instant::now(),
-            events: Vec::new(),
-            enabled: true,
-            cap,
-        }
-    }
-
-    pub fn disabled() -> Self {
-        Trace {
-            start: Instant::now(),
-            events: Vec::new(),
-            enabled: false,
-            cap: 0,
-        }
-    }
-
-    #[inline]
-    pub fn record(&mut self, e: Event) {
-        if self.enabled && self.events.len() < self.cap {
-            self.events.push((self.start.elapsed(), e));
-        }
-    }
-
-    pub fn events(&self) -> &[(Duration, Event)] {
-        &self.events
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,15 +130,22 @@ mod tests {
         let mut t = Trace::disabled();
         t.record(Event::SnapshotTriggered);
         assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
     }
 
     #[test]
-    fn enabled_trace_caps() {
+    fn enabled_trace_keeps_most_recent_and_reports_dropped() {
         let mut t = Trace::enabled(2);
-        for _ in 0..5 {
-            t.record(Event::Resume);
+        for k in 0..5 {
+            t.record(Event::IterationDone { k });
         }
-        assert_eq!(t.events().len(), 2);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        // overwrite-oldest: the survivors are the *last* two records,
+        // not the first two (the old Trace's silent-truncation bug)
+        assert_eq!(evs[0].1, Event::IterationDone { k: 3 });
+        assert_eq!(evs[1].1, Event::IterationDone { k: 4 });
+        assert_eq!(t.dropped(), 3);
     }
 
     #[test]
@@ -215,5 +190,46 @@ mod tests {
         assert_eq!(a.iterations, 5);
         assert_eq!(a.snapshots, 4);
         assert_eq!(a.msgs_sent, 5);
+    }
+
+    /// Pins the mixed merge contract documented on [`RankMetrics::merge`]:
+    /// per-rank work sums, world-global protocol rounds take the max.
+    #[test]
+    fn merge_sums_work_but_maxes_rounds() {
+        let mut a = RankMetrics {
+            iterations: 10,
+            msgs_sent: 4,
+            sends_discarded: 1,
+            msgs_delivered: 3,
+            snapshots: 6,
+            detection_rounds: 9,
+            norm_reductions: 2,
+            compute_time: Duration::from_millis(30),
+            comm_time: Duration::from_millis(5),
+        };
+        let b = RankMetrics {
+            iterations: 12,
+            msgs_sent: 6,
+            sends_discarded: 2,
+            msgs_delivered: 5,
+            snapshots: 5,
+            detection_rounds: 11,
+            norm_reductions: 3,
+            compute_time: Duration::from_millis(40),
+            comm_time: Duration::from_millis(7),
+        };
+        a.merge(&b);
+        // summed: per-rank work
+        assert_eq!(a.iterations, 22);
+        assert_eq!(a.msgs_sent, 10);
+        assert_eq!(a.sends_discarded, 3);
+        assert_eq!(a.msgs_delivered, 8);
+        assert_eq!(a.norm_reductions, 5);
+        assert_eq!(a.compute_time, Duration::from_millis(70));
+        assert_eq!(a.comm_time, Duration::from_millis(12));
+        // maxed: one logical round counted once per rank must not
+        // multiply by world size
+        assert_eq!(a.snapshots, 6);
+        assert_eq!(a.detection_rounds, 11);
     }
 }

@@ -1,0 +1,179 @@
+//! Chrome-trace JSON exporter ([Trace Event Format]) — the sink behind
+//! `repro solve --trace out.json`. The emitted file is an array of
+//! trace events loadable in Perfetto or `chrome://tracing`: one process
+//! group per `pid` (solver rank), one timeline row per lane (the rank's
+//! session thread plus, under TCP, its `tcp-progress-{rank}` thread),
+//! so wire drains visibly overlap compute spans.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use super::event::{EventKind, LaneSnapshot};
+use super::Sink;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn meta(name: &str, pid: u32, tid: u32, value: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(name.into()));
+    m.insert("ph".into(), Json::Str("M".into()));
+    m.insert("pid".into(), Json::Num(pid as f64));
+    m.insert("tid".into(), Json::Num(tid as f64));
+    let mut args = BTreeMap::new();
+    args.insert("name".into(), Json::Str(value.into()));
+    m.insert("args".into(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Kind-aware payload rendering: norm-carrying events decode their
+/// `f64::to_bits` word, everything else shows the raw words.
+fn args_for(kind: EventKind, a: u64, b: u64) -> Json {
+    let mut args = BTreeMap::new();
+    match kind {
+        EventKind::SnapshotComplete | EventKind::GlobalConvergence | EventKind::DetectVerdict => {
+            args.insert("norm".into(), Json::Num(f64::from_bits(a)));
+            if kind == EventKind::DetectVerdict {
+                args.insert("terminated".into(), Json::Bool(b != 0));
+            }
+        }
+        _ => {
+            args.insert("a".into(), Json::Num(a as f64));
+            args.insert("b".into(), Json::Num(b as f64));
+        }
+    }
+    Json::Obj(args)
+}
+
+/// Render drained lanes as a Chrome-trace event array. Lanes sharing a
+/// `pid` become threads of one process; thread ids follow lane order.
+pub fn chrome_trace_json(lanes: &[LaneSnapshot]) -> Json {
+    let mut out = Vec::new();
+    let mut next_tid: BTreeMap<u32, u32> = BTreeMap::new();
+    let mut process_named: BTreeMap<u32, bool> = BTreeMap::new();
+    for lane in lanes {
+        let tid = {
+            let t = next_tid.entry(lane.pid).or_insert(0);
+            let tid = *t;
+            *t += 1;
+            tid
+        };
+        if !process_named.get(&lane.pid).copied().unwrap_or(false) {
+            // Rank lanes register before their progress threads, so the
+            // first lane of each pid names the process group.
+            out.push(meta("process_name", lane.pid, tid, &format!("rank {}", lane.pid)));
+            process_named.insert(lane.pid, true);
+        }
+        out.push(meta("thread_name", lane.pid, tid, &lane.name));
+        for e in &lane.events {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(e.kind.name().into()));
+            m.insert("pid".into(), Json::Num(lane.pid as f64));
+            m.insert("tid".into(), Json::Num(tid as f64));
+            m.insert("ts".into(), Json::Num(e.t_us as f64));
+            if e.span {
+                m.insert("ph".into(), Json::Str("X".into()));
+                m.insert("dur".into(), Json::Num(e.dur_us as f64));
+            } else {
+                m.insert("ph".into(), Json::Str("i".into()));
+                m.insert("s".into(), Json::Str("t".into()));
+            }
+            m.insert("args".into(), args_for(e.kind, e.a, e.b));
+            out.push(Json::Obj(m));
+        }
+    }
+    Json::Arr(out)
+}
+
+/// File-writing sink: each [`Sink::consume`] call rewrites `path` with
+/// the full trace (drains are cumulative snapshots, not deltas).
+pub struct ChromeTraceSink {
+    path: PathBuf,
+}
+
+impl ChromeTraceSink {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        ChromeTraceSink { path: path.into() }
+    }
+}
+
+impl Sink for ChromeTraceSink {
+    fn consume(&mut self, lanes: &[LaneSnapshot]) -> Result<()> {
+        let doc = crate::util::json::write(&chrome_trace_json(lanes));
+        std::fs::write(&self.path, doc).map_err(Error::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Event;
+
+    #[test]
+    fn lanes_become_pid_tid_rows_with_metadata() {
+        let lanes = vec![
+            LaneSnapshot {
+                pid: 0,
+                name: "rank-0".into(),
+                events: vec![Event {
+                    t_us: 10,
+                    dur_us: 5,
+                    span: true,
+                    kind: EventKind::Compute,
+                    a: 1,
+                    b: 0,
+                }],
+                dropped: 0,
+            },
+            LaneSnapshot {
+                pid: 0,
+                name: "tcp-progress-0".into(),
+                events: vec![Event::instant(12, EventKind::WireDrain, 2, 0)],
+                dropped: 0,
+            },
+        ];
+        let doc = chrome_trace_json(&lanes);
+        let arr = doc.as_arr().unwrap();
+        // 1 process_name + 2 thread_name + 2 events
+        assert_eq!(arr.len(), 5);
+        let spans: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("dur").unwrap().as_f64().unwrap(), 5.0);
+        // the two lanes share pid 0 but get distinct tids
+        let tids: Vec<f64> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn norm_events_decode_bits() {
+        let lanes = vec![LaneSnapshot {
+            pid: 1,
+            name: "rank-1".into(),
+            events: vec![Event::instant(
+                3,
+                EventKind::GlobalConvergence,
+                f64::to_bits(1e-7),
+                0,
+            )],
+            dropped: 0,
+        }];
+        let doc = chrome_trace_json(&lanes);
+        let ev = doc
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("global_convergence"))
+            .unwrap()
+            .clone();
+        let norm = ev.get("args").unwrap().get("norm").unwrap().as_f64().unwrap();
+        assert!((norm - 1e-7).abs() < 1e-20);
+    }
+}

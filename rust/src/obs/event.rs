@@ -1,0 +1,313 @@
+//! The compact event vocabulary shared by every instrumented layer.
+//!
+//! An [`Event`] is a fixed-size record (timestamp, optional duration, a
+//! kind tag and two `u64` payload words) so the ring can store it in four
+//! atomic words without ever allocating. Richer payloads (residual norms)
+//! ride the words via `f64::to_bits`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// What an [`Event`] describes. One flat `u8` tag spanning every layer:
+/// transport, jack session, termination protocols and the solve service —
+/// a single vocabulary so one trace shows the whole stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    // --- transport ---
+    /// Non-blocking send posted (`a` = destination rank, `b` = bytes).
+    Isend = 0,
+    /// Blocking receive (`a` = source rank); span.
+    Recv = 1,
+    /// Multi-channel arrival wait (`a` = channels watched); span.
+    WaitAny = 2,
+    /// Alg.-6 busy-channel send discard (`a` = peer rank).
+    SendDiscard = 3,
+    /// TCP progress thread pumped bytes on the wire (`a` = connections
+    /// that made progress this pass).
+    WireDrain = 4,
+    /// `WakeSignal` slow path: thread parked awaiting a change; span.
+    Park = 5,
+    /// `WakeSignal` woke a parked waiter.
+    Unpark = 6,
+    // --- jack session ---
+    /// User compute phase of one iteration (`a` = local iteration); span.
+    Compute = 7,
+    /// Halo send phase (all outgoing links); span.
+    HaloSend = 8,
+    /// Halo receive phase (all incoming links); span.
+    HaloRecv = 9,
+    /// Residual update / convergence detection phase; span.
+    Residual = 10,
+    /// Coalesced bundle packed for one peer (`a` = peer, `b` = links).
+    Pack = 11,
+    /// Coalesced bundle unpacked from one peer (`a` = peer, `b` = links).
+    Unpack = 12,
+    // --- termination protocols ---
+    /// A detection round completed (`a` = round).
+    DetectRound = 13,
+    /// A detection verdict was reached (`a` = norm bits, `b` = 1 if
+    /// terminated).
+    DetectVerdict = 14,
+    // --- service ---
+    /// Job admission decision (`a` = job id, `b` = 1 accepted / 0 shed).
+    JobAdmit = 15,
+    /// Job entered the queue (`a` = job id, `b` = queue depth after).
+    JobQueue = 16,
+    /// Worker claimed a job (`a` = job id, `b` = queue wait µs).
+    JobClaim = 17,
+    /// Job execution on a worker (`a` = job id); span.
+    JobRun = 18,
+    /// Job settled (`a` = job id, `b` = outcome code).
+    JobSettle = 19,
+    // --- protocol trace events (the legacy `metrics::Event` vocabulary) ---
+    /// One solver iteration finished (`a` = k).
+    IterationDone = 20,
+    /// Local convergence flag armed / disarmed (`a` = armed).
+    LocalConvergence = 21,
+    /// Snapshot phase triggered by the root (Alg. 7).
+    SnapshotTriggered = 22,
+    /// Non-root local snapshot taken (Alg. 8).
+    SnapshotLocalTaken = 23,
+    /// Snapshot residual assembled (`a` = norm bits).
+    SnapshotComplete = 24,
+    /// Global convergence decided (`a` = norm bits).
+    GlobalConvergence = 25,
+    /// Solve resumed after a negative verdict.
+    Resume = 26,
+}
+
+impl EventKind {
+    /// Stable lowercase name used by the Chrome exporter and the stats
+    /// text. Also the wire name in serialized lane snapshots.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Isend => "isend",
+            EventKind::Recv => "recv",
+            EventKind::WaitAny => "wait_any",
+            EventKind::SendDiscard => "send_discard",
+            EventKind::WireDrain => "wire_drain",
+            EventKind::Park => "park",
+            EventKind::Unpark => "unpark",
+            EventKind::Compute => "compute",
+            EventKind::HaloSend => "halo_send",
+            EventKind::HaloRecv => "halo_recv",
+            EventKind::Residual => "residual",
+            EventKind::Pack => "pack",
+            EventKind::Unpack => "unpack",
+            EventKind::DetectRound => "detect_round",
+            EventKind::DetectVerdict => "detect_verdict",
+            EventKind::JobAdmit => "job_admit",
+            EventKind::JobQueue => "job_queue",
+            EventKind::JobClaim => "job_claim",
+            EventKind::JobRun => "job_run",
+            EventKind::JobSettle => "job_settle",
+            EventKind::IterationDone => "iteration_done",
+            EventKind::LocalConvergence => "local_convergence",
+            EventKind::SnapshotTriggered => "snapshot_triggered",
+            EventKind::SnapshotLocalTaken => "snapshot_local_taken",
+            EventKind::SnapshotComplete => "snapshot_complete",
+            EventKind::GlobalConvergence => "global_convergence",
+            EventKind::Resume => "resume",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => EventKind::Isend,
+            1 => EventKind::Recv,
+            2 => EventKind::WaitAny,
+            3 => EventKind::SendDiscard,
+            4 => EventKind::WireDrain,
+            5 => EventKind::Park,
+            6 => EventKind::Unpark,
+            7 => EventKind::Compute,
+            8 => EventKind::HaloSend,
+            9 => EventKind::HaloRecv,
+            10 => EventKind::Residual,
+            11 => EventKind::Pack,
+            12 => EventKind::Unpack,
+            13 => EventKind::DetectRound,
+            14 => EventKind::DetectVerdict,
+            15 => EventKind::JobAdmit,
+            16 => EventKind::JobQueue,
+            17 => EventKind::JobClaim,
+            18 => EventKind::JobRun,
+            19 => EventKind::JobSettle,
+            20 => EventKind::IterationDone,
+            21 => EventKind::LocalConvergence,
+            22 => EventKind::SnapshotTriggered,
+            23 => EventKind::SnapshotLocalTaken,
+            24 => EventKind::SnapshotComplete,
+            25 => EventKind::GlobalConvergence,
+            26 => EventKind::Resume,
+            _ => return None,
+        })
+    }
+}
+
+/// One fixed-size trace record. `t_us` is microseconds since the
+/// recorder epoch (process-local); spans carry `dur_us`, instants leave
+/// it zero with `span == false`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Start time, µs since the recorder epoch.
+    pub t_us: u64,
+    /// Duration in µs (spans only).
+    pub dur_us: u32,
+    /// Whether this records an interval (`true`) or a point (`false`).
+    pub span: bool,
+    pub kind: EventKind,
+    /// First payload word (kind-specific; see [`EventKind`] docs).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+}
+
+impl Event {
+    pub fn instant(t_us: u64, kind: EventKind, a: u64, b: u64) -> Self {
+        Event {
+            t_us,
+            dur_us: 0,
+            span: false,
+            kind,
+            a,
+            b,
+        }
+    }
+}
+
+/// The protocol-level trace vocabulary (formerly `metrics::Event`,
+/// re-exported from there for compatibility). These are the events the
+/// termination protocols record through [`super::Trace`]; each maps onto
+/// one compact [`EventKind`] so the bounded trace and the global ring
+/// share storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProtocolEvent {
+    IterationDone { k: u64 },
+    LocalConvergence { armed: bool },
+    SnapshotTriggered,
+    SnapshotLocalTaken,
+    SnapshotComplete { norm: f64 },
+    GlobalConvergence { norm: f64 },
+    Resume,
+}
+
+impl ProtocolEvent {
+    /// Compact encoding: (kind, payload a, payload b).
+    pub fn encode(&self) -> (EventKind, u64, u64) {
+        match *self {
+            ProtocolEvent::IterationDone { k } => (EventKind::IterationDone, k, 0),
+            ProtocolEvent::LocalConvergence { armed } => {
+                (EventKind::LocalConvergence, armed as u64, 0)
+            }
+            ProtocolEvent::SnapshotTriggered => (EventKind::SnapshotTriggered, 0, 0),
+            ProtocolEvent::SnapshotLocalTaken => (EventKind::SnapshotLocalTaken, 0, 0),
+            ProtocolEvent::SnapshotComplete { norm } => {
+                (EventKind::SnapshotComplete, norm.to_bits(), 0)
+            }
+            ProtocolEvent::GlobalConvergence { norm } => {
+                (EventKind::GlobalConvergence, norm.to_bits(), 0)
+            }
+            ProtocolEvent::Resume => (EventKind::Resume, 0, 0),
+        }
+    }
+
+    /// Inverse of [`Self::encode`]; `None` for non-protocol kinds.
+    pub fn decode(kind: EventKind, a: u64, _b: u64) -> Option<Self> {
+        Some(match kind {
+            EventKind::IterationDone => ProtocolEvent::IterationDone { k: a },
+            EventKind::LocalConvergence => ProtocolEvent::LocalConvergence { armed: a != 0 },
+            EventKind::SnapshotTriggered => ProtocolEvent::SnapshotTriggered,
+            EventKind::SnapshotLocalTaken => ProtocolEvent::SnapshotLocalTaken,
+            EventKind::SnapshotComplete => ProtocolEvent::SnapshotComplete {
+                norm: f64::from_bits(a),
+            },
+            EventKind::GlobalConvergence => ProtocolEvent::GlobalConvergence {
+                norm: f64::from_bits(a),
+            },
+            EventKind::Resume => ProtocolEvent::Resume,
+            _ => return None,
+        })
+    }
+}
+
+/// A drained copy of one lane (one producer thread's ring) — the unit
+/// the [`super::Sink`] trait consumes and the unit shipped across the
+/// process boundary by the distributed TCP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneSnapshot {
+    /// Logical process id for grouping (rank for solver lanes, worker
+    /// index for service lanes).
+    pub pid: u32,
+    /// Lane name (`rank-0`, `tcp-progress-1`, `svc-worker-0`, …).
+    pub name: String,
+    /// Events oldest-first (at most the ring capacity; older ones were
+    /// overwritten and show up in `dropped`).
+    pub events: Vec<Event>,
+    /// Events lost to overwrite-oldest since the lane was created.
+    pub dropped: u64,
+}
+
+impl LaneSnapshot {
+    /// Serialize for the distributed solve's report line. Payload words
+    /// are encoded as decimal strings: they may carry `f64::to_bits`
+    /// values that do not survive a JSON `f64` round-trip.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("pid".into(), Json::Num(self.pid as f64));
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("dropped".into(), Json::Num(self.dropped as f64));
+        m.insert(
+            "events".into(),
+            Json::Arr(
+                self.events
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            Json::Num(e.t_us as f64),
+                            Json::Num(e.dur_us as f64),
+                            Json::Num(e.span as u64 as f64),
+                            Json::Num(e.kind as u8 as f64),
+                            Json::Str(e.a.to_string()),
+                            Json::Str(e.b.to_string()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Self::to_json`]; unknown kinds are skipped so newer
+    /// writers degrade gracefully against older readers.
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let pid = v.get("pid")?.as_usize()? as u32;
+        let name = v.get("name")?.as_str()?.to_string();
+        let dropped = v.get("dropped")?.as_f64()? as u64;
+        let mut events = Vec::new();
+        for e in v.get("events")?.as_arr()? {
+            let f = e.as_arr()?;
+            if f.len() != 6 {
+                return None;
+            }
+            let Some(kind) = EventKind::from_u8(f[3].as_f64()? as u8) else {
+                continue;
+            };
+            events.push(Event {
+                t_us: f[0].as_f64()? as u64,
+                dur_us: f[1].as_f64()? as u32,
+                span: f[2].as_f64()? != 0.0,
+                kind,
+                a: f[4].as_str()?.parse().ok()?,
+                b: f[5].as_str()?.parse().ok()?,
+            });
+        }
+        Some(LaneSnapshot {
+            pid,
+            name,
+            events,
+            dropped,
+        })
+    }
+}

@@ -1,0 +1,363 @@
+//! # obs — cross-layer observability: event rings, spans, sinks
+//!
+//! The paper's headline claim is *low-overhead* communication; this
+//! module is how the repo makes that claim inspectable per event rather
+//! than only through aggregate [`crate::metrics::RankMetrics`] counters.
+//! Every layer is instrumented with a compact [`Event`] vocabulary
+//! ([`EventKind`]): transport (`isend` / `recv` / `wait_any`, Alg.-6
+//! send discards, the TCP progress thread's wire drains, `WakeSignal`
+//! park/unpark), the jack session loop (compute / halo send / halo recv
+//! / residual phases, coalesced-bundle pack/unpack), the termination
+//! protocols (round / verdict milestones) and the solve service (job
+//! admission → queue → claim → run → settle).
+//!
+//! ## Architecture
+//!
+//! ```text
+//! instrumented code ──instant()/span()──▶ per-thread EventRing (lane)
+//!                                             │ lock-free SPSC,
+//!                                             │ overwrite-oldest,
+//!                                             │ exact drop counter
+//!                        drain() ────────────▶ Vec<LaneSnapshot>
+//!                                             │
+//!                              Sink::consume ─┴─▶ chrome::ChromeTraceSink
+//!                                                 stats::ServiceStats
+//! ```
+//!
+//! * **Recording is off by default.** [`instant`] and [`span`] cost one
+//!   relaxed atomic load and a branch when disabled — no thread-local
+//!   access, no clock read, no allocation. The `trace_overhead` series
+//!   in `BENCH_comm_micro.json` gates this at ≤ 1.05× of uninstrumented
+//!   code, and `rust/tests/transport_pool.rs` additionally proves the
+//!   *enabled* steady state performs zero allocations.
+//! * **One lane per producer thread.** The first enabled emission on a
+//!   thread allocates its fixed-capacity [`ring::EventRing`] and
+//!   registers it (that one-time setup is the only allocation; steady
+//!   state is allocation-free, the same discipline
+//!   [`crate::transport::BufferPool`] enforces on message buffers).
+//!   Threads name their lane with [`set_lane`] — solver ranks are
+//!   `rank-{r}`, TCP progress threads `tcp-progress-{r}`, service
+//!   workers `svc-worker-{w}`.
+//! * **Overflow is explicit.** Rings overwrite the oldest event and
+//!   count the loss ([`LaneSnapshot::dropped`]); nothing is silently
+//!   truncated. The bounded per-solve [`Trace`] (successor of the old
+//!   `metrics::Trace`) shares this storage and semantics.
+//!
+//! ## Adding a trace sink
+//!
+//! A sink is anything that consumes drained lanes — the same
+//! extension-point pattern as the transport backends and termination
+//! protocols. Implement [`Sink`] and feed it [`drain`]'s snapshots (or
+//! lanes decoded from a distributed solve report). The shipped sinks
+//! are [`chrome::ChromeTraceSink`] (Chrome-trace JSON for Perfetto /
+//! `chrome://tracing`, written by `repro solve --trace out.json`) and
+//! the service stats exposition ([`stats::ServiceStats`], served by
+//! `repro serve` as NDJSON and Prometheus text).
+//!
+//! ```
+//! use jack2::obs::{Event, EventKind, LaneSnapshot, Sink};
+//! use std::collections::BTreeMap;
+//!
+//! /// A sink that tallies events per kind — the "hello world" of sinks.
+//! #[derive(Default)]
+//! struct KindHistogram {
+//!     counts: BTreeMap<&'static str, u64>,
+//! }
+//!
+//! impl Sink for KindHistogram {
+//!     fn consume(&mut self, lanes: &[LaneSnapshot]) -> jack2::Result<()> {
+//!         for lane in lanes {
+//!             for e in &lane.events {
+//!                 *self.counts.entry(e.kind.name()).or_insert(0) += 1;
+//!             }
+//!         }
+//!         Ok(())
+//!     }
+//! }
+//!
+//! let lane = LaneSnapshot {
+//!     pid: 0,
+//!     name: "rank-0".into(),
+//!     events: vec![
+//!         Event::instant(10, EventKind::Isend, 1, 64),
+//!         Event::instant(20, EventKind::Isend, 2, 64),
+//!         Event::instant(30, EventKind::SendDiscard, 1, 0),
+//!     ],
+//!     dropped: 0,
+//! };
+//! let mut sink = KindHistogram::default();
+//! sink.consume(&[lane]).unwrap();
+//! assert_eq!(sink.counts["isend"], 2);
+//! assert_eq!(sink.counts["send_discard"], 1);
+//! ```
+//!
+//! Checklist for a real sink (mirroring the transport guide):
+//!
+//! 1. Keep `consume` allocation-light — it may run while a solve is
+//!    still active (the live stats endpoint does).
+//! 2. Treat lane snapshots as advisory unless the producers have
+//!    quiesced (see [`ring::EventRing::snapshot`]).
+//! 3. Surface `dropped` counts instead of hiding them — a sink that
+//!    renders an incomplete trace as complete is worse than none.
+
+pub mod chrome;
+pub mod event;
+pub mod ring;
+pub mod stats;
+mod trace;
+
+pub use event::{Event, EventKind, LaneSnapshot, ProtocolEvent};
+pub use ring::EventRing;
+pub use trace::Trace;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Consumes drained lanes — see the module-level sink guide.
+pub trait Sink {
+    fn consume(&mut self, lanes: &[LaneSnapshot]) -> crate::Result<()>;
+}
+
+/// Events retained per lane before overwrite-oldest kicks in.
+pub const DEFAULT_LANE_CAP: usize = 16384;
+
+/// The disabled fast path: everything below checks this first.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped by [`reset`] so threads re-register their lane lazily.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+/// Timestamp origin, set at first enable (process-local).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+struct Lane {
+    pid: u32,
+    name: String,
+    ring: Arc<EventRing>,
+}
+
+static REGISTRY: Mutex<Vec<Lane>> = Mutex::new(Vec::new());
+
+struct LaneCell {
+    pid: u32,
+    name: Option<String>,
+    gen: u64,
+    ring: Option<Arc<EventRing>>,
+}
+
+thread_local! {
+    static LANE: RefCell<LaneCell> = const {
+        RefCell::new(LaneCell { pid: 0, name: None, gen: u64::MAX, ring: None })
+    };
+}
+
+/// Turn global recording on or off. The epoch is pinned at the first
+/// enable; [`reset`] starts a fresh trace.
+pub fn set_enabled(on: bool) {
+    if on {
+        EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Whether recording is on — one relaxed load, the cost every
+/// instrumentation point pays when tracing is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Disable recording and discard every registered lane. Threads that
+/// already created a lane re-register on their next enabled emission.
+pub fn reset() {
+    ENABLED.store(false, Ordering::Release);
+    GENERATION.fetch_add(1, Ordering::Relaxed);
+    REGISTRY.lock().unwrap().clear();
+}
+
+/// Name the calling thread's lane (`pid` groups lanes in the Chrome
+/// export: rank for solver threads, worker index for the service).
+/// Idempotent for an unchanged identity; a new identity starts a new
+/// lane on the next emission.
+pub fn set_lane(pid: u32, name: &str) {
+    let _ = LANE.try_with(|cell| {
+        let mut c = cell.borrow_mut();
+        if c.pid == pid && c.name.as_deref() == Some(name) {
+            return;
+        }
+        c.pid = pid;
+        c.name = Some(name.to_string());
+        c.ring = None;
+    });
+}
+
+fn now_us() -> u64 {
+    EPOCH
+        .get()
+        .map(|e| e.elapsed().as_micros() as u64)
+        .unwrap_or(0)
+}
+
+fn emit(kind: EventKind, span: bool, t_us: u64, dur_us: u32, a: u64, b: u64) {
+    let _ = LANE.try_with(|cell| {
+        let mut c = cell.borrow_mut();
+        let gen = GENERATION.load(Ordering::Relaxed);
+        if c.gen != gen || c.ring.is_none() {
+            // One-time lane setup (per thread, per reset generation) —
+            // the only allocating path in the recorder.
+            let ring = Arc::new(EventRing::new(DEFAULT_LANE_CAP));
+            let name = c.name.clone().unwrap_or_else(|| {
+                std::thread::current()
+                    .name()
+                    .unwrap_or("anon")
+                    .to_string()
+            });
+            REGISTRY.lock().unwrap().push(Lane {
+                pid: c.pid,
+                name,
+                ring: Arc::clone(&ring),
+            });
+            c.ring = Some(ring);
+            c.gen = gen;
+        }
+        c.ring.as_ref().expect("lane ring just ensured").push(&Event {
+            t_us,
+            dur_us,
+            span,
+            kind,
+            a,
+            b,
+        });
+    });
+}
+
+/// Record a point event on the calling thread's lane. Near-free when
+/// recording is disabled (one relaxed load and a branch).
+#[inline]
+pub fn instant(kind: EventKind, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    emit(kind, false, now_us(), 0, a, b);
+}
+
+/// Open an interval; the event is recorded when the guard drops.
+/// Near-free when recording is disabled.
+#[inline]
+pub fn span(kind: EventKind, a: u64, b: u64) -> SpanGuard {
+    SpanGuard {
+        t0: enabled().then(now_us),
+        kind,
+        a,
+        b,
+    }
+}
+
+/// RAII interval recorder returned by [`span`].
+#[must_use = "the span is recorded when the guard drops"]
+pub struct SpanGuard {
+    t0: Option<u64>,
+    kind: EventKind,
+    a: u64,
+    b: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            if enabled() {
+                let dur = now_us().saturating_sub(t0);
+                emit(self.kind, true, t0, dur.min(u32::MAX as u64) as u32, self.a, self.b);
+            }
+        }
+    }
+}
+
+/// Snapshot every registered lane (rings are not cleared). Exact once
+/// producers have quiesced — the exporters' read point.
+pub fn drain() -> Vec<LaneSnapshot> {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|l| LaneSnapshot {
+            pid: l.pid,
+            name: l.name.clone(),
+            events: l.ring.snapshot(),
+            dropped: l.ring.dropped(),
+        })
+        .collect()
+}
+
+/// Total events lost to overwrite-oldest across all lanes — surfaced by
+/// the service stats exposition.
+pub fn dropped_total() -> u64 {
+    REGISTRY.lock().unwrap().iter().map(|l| l.ring.dropped()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global; tests touching it serialize here
+    // (unit tests in this binary run on a shared thread pool).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        instant(EventKind::Isend, 1, 2);
+        {
+            let _s = span(EventKind::Compute, 0, 0);
+        }
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_records_on_named_lane() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        set_enabled(true);
+        set_lane(7, "rank-7");
+        instant(EventKind::Isend, 3, 64);
+        {
+            let _s = span(EventKind::Compute, 1, 0);
+        }
+        let lanes = drain();
+        set_enabled(false);
+        let lane = lanes
+            .iter()
+            .find(|l| l.name == "rank-7")
+            .expect("lane registered");
+        assert_eq!(lane.pid, 7);
+        assert_eq!(lane.events.len(), 2);
+        assert_eq!(lane.events[0].kind, EventKind::Isend);
+        assert!(lane.events[1].span);
+        reset();
+    }
+
+    #[test]
+    fn lane_snapshot_json_roundtrip() {
+        let lane = LaneSnapshot {
+            pid: 2,
+            name: "tcp-progress-2".into(),
+            events: vec![
+                Event::instant(5, EventKind::WireDrain, 3, 0),
+                Event {
+                    t_us: 9,
+                    dur_us: 4,
+                    span: true,
+                    kind: EventKind::Recv,
+                    a: f64::to_bits(2.5e-9),
+                    b: 1,
+                },
+            ],
+            dropped: 11,
+        };
+        let s = crate::util::json::write(&lane.to_json());
+        let back =
+            LaneSnapshot::from_json(&crate::util::json::parse(&s).unwrap()).expect("decodes");
+        assert_eq!(back, lane);
+    }
+}

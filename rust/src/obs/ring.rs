@@ -1,0 +1,159 @@
+//! Lock-free single-producer event ring.
+//!
+//! Same discipline `transport_pool.rs` enforces on message buffers: all
+//! storage is allocated up front, the steady-state path never touches
+//! the allocator, and overflow is explicit (overwrite-oldest plus an
+//! exact drop counter) instead of silent.
+//!
+//! Each slot is four plain `AtomicU64` words — no `UnsafeCell`, so a
+//! reader racing the producer can at worst observe a torn *event* (words
+//! from two different records), never undefined behavior. Snapshots are
+//! therefore advisory while the producer runs and exact once it has
+//! quiesced, which is the only time the exporters read.
+
+use super::event::{Event, EventKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Words per slot: `[t_us, kind|span|dur, a, b]`.
+const WORDS: usize = 4;
+
+/// Fixed-capacity overwrite-oldest event ring. Single producer (the
+/// owning thread pushes), any number of snapshot readers.
+#[derive(Debug)]
+pub struct EventRing {
+    slots: Box<[[AtomicU64; WORDS]]>,
+    /// Total events ever pushed; `head % cap` is the next write slot.
+    head: AtomicU64,
+}
+
+impl EventRing {
+    /// `cap` is clamped to at least 1 (a zero-capacity ring would have
+    /// nothing to overwrite).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        let slots = (0..cap)
+            .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        EventRing {
+            slots,
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Push one event, overwriting the oldest once full. Allocation-free;
+    /// single-producer only (concurrent pushes would interleave slots).
+    #[inline]
+    pub fn push(&self, e: &Event) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        let w1 = (e.kind as u8 as u64) | ((e.span as u64) << 8) | ((e.dur_us as u64) << 32);
+        slot[0].store(e.t_us, Ordering::Relaxed);
+        slot[1].store(w1, Ordering::Relaxed);
+        slot[2].store(e.a, Ordering::Relaxed);
+        slot[3].store(e.b, Ordering::Relaxed);
+        // Publish after the words: a reader that Acquires the new head
+        // sees the completed record (absent a concurrent overwrite).
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.head.load(Ordering::Acquire)).min(self.slots.len() as u64) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire) == 0
+    }
+
+    /// Events lost to overwrite-oldest since construction.
+    pub fn dropped(&self) -> u64 {
+        self.head
+            .load(Ordering::Acquire)
+            .saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Copy out the retained events, oldest first. Exact when the
+    /// producer is quiescent; advisory (possibly torn or missing the
+    /// newest records) while it runs.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for i in start..head {
+            let slot = &self.slots[(i % cap) as usize];
+            let t_us = slot[0].load(Ordering::Relaxed);
+            let w1 = slot[1].load(Ordering::Relaxed);
+            let a = slot[2].load(Ordering::Relaxed);
+            let b = slot[3].load(Ordering::Relaxed);
+            let Some(kind) = EventKind::from_u8((w1 & 0xFF) as u8) else {
+                continue;
+            };
+            out.push(Event {
+                t_us,
+                dur_us: (w1 >> 32) as u32,
+                span: (w1 >> 8) & 1 == 1,
+                kind,
+                a,
+                b,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, a: u64) -> Event {
+        Event::instant(t, EventKind::Isend, a, 0)
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let r = EventRing::new(4);
+        assert!(r.is_empty());
+        for i in 0..4 {
+            r.push(&ev(i, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 0);
+        r.push(&ev(4, 4));
+        r.push(&ev(5, 5));
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.iter().map(|e| e.t_us).collect::<Vec<_>>(), [2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn roundtrips_all_fields() {
+        let r = EventRing::new(2);
+        let e = Event {
+            t_us: 123_456,
+            dur_us: 789,
+            span: true,
+            kind: EventKind::Compute,
+            a: f64::to_bits(1.5e-7),
+            b: u64::MAX,
+        };
+        r.push(&e);
+        assert_eq!(r.snapshot(), vec![e]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps() {
+        let r = EventRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(&ev(1, 0));
+        r.push(&ev(2, 0));
+        assert_eq!(r.snapshot().len(), 1);
+        assert_eq!(r.dropped(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Live service stats exposition — the second shipped sink.
+//!
+//! [`ServiceStats`] is a point-in-time snapshot of a running
+//! [`crate::service::SolveService`] (queue depth, in-flight jobs,
+//! per-tenant [`TenantMetrics`], buffer-pool high-water, recorder drop
+//! counts). `repro serve` answers a `{"stats":true}` NDJSON query with
+//! [`ServiceStats::to_json`] and serves [`ServiceStats::to_prometheus`]
+//! on `--stats-addr` for scrape-style consumers.
+
+use crate::metrics::TenantMetrics;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Point-in-time stats snapshot of a live solve service.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Jobs accepted but not yet claimed by a worker.
+    pub queue_depth: usize,
+    /// Jobs currently executing on workers.
+    pub inflight: usize,
+    /// Worker-world count.
+    pub workers: usize,
+    /// Max `PoolStats::high_water` across all worker pool lanes — the
+    /// service's steady-state buffer footprint ceiling.
+    pub pool_high_water: i64,
+    /// Events lost to ring overwrite across all recorder lanes.
+    pub events_dropped: u64,
+    /// Per-tenant aggregation (see [`TenantMetrics`]).
+    pub tenants: BTreeMap<String, TenantMetrics>,
+}
+
+fn tenant_json(t: &TenantMetrics) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("submitted".into(), Json::Num(t.submitted as f64));
+    m.insert("rejected".into(), Json::Num(t.rejected as f64));
+    m.insert("completed".into(), Json::Num(t.completed as f64));
+    m.insert("converged".into(), Json::Num(t.converged as f64));
+    m.insert("cancelled".into(), Json::Num(t.cancelled as f64));
+    m.insert("failed".into(), Json::Num(t.failed as f64));
+    m.insert("iterations".into(), Json::Num(t.iterations as f64));
+    m.insert(
+        "queue_wait_ms".into(),
+        Json::Num(t.queue_wait.as_secs_f64() * 1e3),
+    );
+    m.insert(
+        "max_queue_wait_ms".into(),
+        Json::Num(t.max_queue_wait.as_secs_f64() * 1e3),
+    );
+    m.insert("wall_ms".into(), Json::Num(t.wall.as_secs_f64() * 1e3));
+    Json::Obj(m)
+}
+
+impl ServiceStats {
+    /// NDJSON shape answered to a `{"stats":true}` query line.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("stats".into(), Json::Bool(true));
+        m.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        m.insert("inflight".into(), Json::Num(self.inflight as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert(
+            "pool_high_water".into(),
+            Json::Num(self.pool_high_water as f64),
+        );
+        m.insert(
+            "events_dropped".into(),
+            Json::Num(self.events_dropped as f64),
+        );
+        m.insert(
+            "tenants".into(),
+            Json::Obj(
+                self.tenants
+                    .iter()
+                    .map(|(k, v)| (k.clone(), tenant_json(v)))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Prometheus text exposition (format 0.0.4) served on
+    /// `--stats-addr`. Gauge for live depths, counters for tenant
+    /// totals, one `tenant` label per row.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# TYPE jack2_queue_depth gauge");
+        let _ = writeln!(s, "jack2_queue_depth {}", self.queue_depth);
+        let _ = writeln!(s, "# TYPE jack2_inflight gauge");
+        let _ = writeln!(s, "jack2_inflight {}", self.inflight);
+        let _ = writeln!(s, "# TYPE jack2_workers gauge");
+        let _ = writeln!(s, "jack2_workers {}", self.workers);
+        let _ = writeln!(s, "# TYPE jack2_pool_high_water gauge");
+        let _ = writeln!(s, "jack2_pool_high_water {}", self.pool_high_water);
+        let _ = writeln!(s, "# TYPE jack2_trace_events_dropped counter");
+        let _ = writeln!(s, "jack2_trace_events_dropped {}", self.events_dropped);
+        let counters: [(&str, fn(&TenantMetrics) -> u64); 7] = [
+            ("submitted", |t| t.submitted),
+            ("rejected", |t| t.rejected),
+            ("completed", |t| t.completed),
+            ("converged", |t| t.converged),
+            ("cancelled", |t| t.cancelled),
+            ("failed", |t| t.failed),
+            ("iterations", |t| t.iterations),
+        ];
+        for (name, counter) in counters {
+            let _ = writeln!(s, "# TYPE jack2_tenant_{name} counter");
+            for (tenant, t) in &self.tenants {
+                let _ = writeln!(
+                    s,
+                    "jack2_tenant_{name}{{tenant=\"{tenant}\"}} {}",
+                    counter(t)
+                );
+            }
+        }
+        let _ = writeln!(s, "# TYPE jack2_tenant_queue_wait_seconds counter");
+        for (tenant, t) in &self.tenants {
+            let _ = writeln!(
+                s,
+                "jack2_tenant_queue_wait_seconds{{tenant=\"{tenant}\"}} {}",
+                t.queue_wait.as_secs_f64()
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample() -> ServiceStats {
+        let mut tenants = BTreeMap::new();
+        tenants.insert(
+            "acme".to_string(),
+            TenantMetrics {
+                submitted: 4,
+                completed: 3,
+                converged: 3,
+                failed: 1,
+                iterations: 120,
+                queue_wait: Duration::from_millis(250),
+                max_queue_wait: Duration::from_millis(100),
+                ..Default::default()
+            },
+        );
+        ServiceStats {
+            queue_depth: 2,
+            inflight: 1,
+            workers: 2,
+            pool_high_water: 7,
+            events_dropped: 5,
+            tenants,
+        }
+    }
+
+    #[test]
+    fn json_shape_matches_query_contract() {
+        let j = sample().to_json();
+        assert_eq!(j.get("stats"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("queue_depth").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("pool_high_water").unwrap().as_f64().unwrap(), 7.0);
+        let acme = j.get("tenants").unwrap().get("acme").unwrap();
+        assert_eq!(acme.get("submitted").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(acme.get("queue_wait_ms").unwrap().as_f64().unwrap(), 250.0);
+        // round-trips through the writer/parser
+        let s = crate::util::json::write(&j);
+        assert_eq!(crate::util::json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn prometheus_text_has_typed_series() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE jack2_queue_depth gauge"));
+        assert!(text.contains("jack2_queue_depth 2"));
+        assert!(text.contains("jack2_tenant_submitted{tenant=\"acme\"} 4"));
+        assert!(text.contains("jack2_trace_events_dropped 5"));
+        assert!(text.contains("jack2_tenant_queue_wait_seconds{tenant=\"acme\"} 0.25"));
+    }
+}

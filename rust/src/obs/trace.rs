@@ -1,0 +1,118 @@
+//! Bounded per-solve protocol trace, backed by the same ring storage as
+//! the global recorder. This is the successor of the old
+//! `metrics::Trace` (still re-exported from there): it keeps the **most
+//! recent** `cap` events instead of silently truncating to the first
+//! `cap`, and the loss is observable through [`Trace::dropped`].
+
+use super::event::{Event, ProtocolEvent};
+use super::ring::EventRing;
+use std::time::{Duration, Instant};
+
+/// Bounded in-memory protocol-event trace. Owned by one solve session
+/// (`&mut` discipline); recording also mirrors the event into the global
+/// recorder ([`super::instant`]) so enabled cross-layer traces include
+/// the protocol milestones — a no-op costing one relaxed atomic load
+/// when global tracing is off.
+#[derive(Debug)]
+pub struct Trace {
+    ring: Option<EventRing>,
+    start: Instant,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::disabled()
+    }
+}
+
+impl Trace {
+    /// A trace retaining the most recent `cap` events (`cap == 0`
+    /// behaves like [`Trace::disabled`]).
+    pub fn enabled(cap: usize) -> Self {
+        Trace {
+            ring: (cap > 0).then(|| EventRing::new(cap)),
+            start: Instant::now(),
+        }
+    }
+
+    /// A trace that records nothing (the steady-state default).
+    pub fn disabled() -> Self {
+        Trace {
+            ring: None,
+            start: Instant::now(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    #[inline]
+    pub fn record(&mut self, e: ProtocolEvent) {
+        let (kind, a, b) = e.encode();
+        super::instant(kind, a, b);
+        if let Some(r) = &self.ring {
+            let t_us = self.start.elapsed().as_micros() as u64;
+            r.push(&Event::instant(t_us, kind, a, b));
+        }
+    }
+
+    /// The retained events, oldest first. When more than `cap` events
+    /// were recorded these are the most recent ones; see
+    /// [`Trace::dropped`] for how many were displaced.
+    pub fn events(&self) -> Vec<(Duration, ProtocolEvent)> {
+        let Some(r) = &self.ring else {
+            return Vec::new();
+        };
+        r.snapshot()
+            .into_iter()
+            .filter_map(|e| {
+                ProtocolEvent::decode(e.kind, e.a, e.b)
+                    .map(|p| (Duration::from_micros(e.t_us), p))
+            })
+            .collect()
+    }
+
+    /// Events displaced by overwrite-oldest (0 until the trace is full).
+    pub fn dropped(&self) -> u64 {
+        self.ring.as_ref().map_or(0, |r| r.dropped())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_most_recent_and_counts_dropped() {
+        let mut t = Trace::enabled(2);
+        for k in 0..5 {
+            t.record(ProtocolEvent::IterationDone { k });
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].1, ProtocolEvent::IterationDone { k: 3 });
+        assert_eq!(evs[1].1, ProtocolEvent::IterationDone { k: 4 });
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn norm_payload_is_bit_exact() {
+        let mut t = Trace::enabled(8);
+        let norm = 3.141592653589793e-11;
+        t.record(ProtocolEvent::GlobalConvergence { norm });
+        assert_eq!(
+            t.events()[0].1,
+            ProtocolEvent::GlobalConvergence { norm }
+        );
+    }
+
+    #[test]
+    fn zero_cap_records_nothing() {
+        let mut t = Trace::enabled(0);
+        t.record(ProtocolEvent::Resume);
+        assert!(!t.is_enabled());
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+}

@@ -97,6 +97,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::Error;
 use crate::metrics::TenantMetrics;
+use crate::obs::{self, stats::ServiceStats, EventKind};
 use crate::transport::{BufferPool, PoolStats};
 
 /// Tunables for a [`SolveService`].
@@ -282,6 +283,7 @@ impl SolveService {
                     spec,
                     submitted: Instant::now(),
                 });
+                obs::instant(EventKind::JobQueue, job_id, st.q.len() as u64);
                 self.shared.inflight.fetch_add(1, Ordering::AcqRel);
                 self.shared.work_cv.notify_one();
                 Admission::Accepted(JobTicket {
@@ -296,9 +298,15 @@ impl SolveService {
         };
         let mut t = self.shared.tenants.lock().unwrap();
         let row = t.entry(tenant).or_default();
-        match verdict {
-            Admission::Accepted(_) => row.submitted += 1,
-            Admission::Rejected(_) => row.rejected += 1,
+        match &verdict {
+            Admission::Accepted(ticket) => {
+                obs::instant(EventKind::JobAdmit, ticket.job_id, 1);
+                row.submitted += 1;
+            }
+            Admission::Rejected(_) => {
+                obs::instant(EventKind::JobAdmit, 0, 0);
+                row.rejected += 1;
+            }
         }
         drop(t);
         verdict
@@ -444,6 +452,25 @@ impl SolveService {
     pub fn inflight(&self) -> usize {
         self.shared.inflight.load(Ordering::Acquire)
     }
+
+    /// Point-in-time stats snapshot for the live exposition sinks
+    /// (`repro serve`'s `{"stats":true}` query and `--stats-addr`).
+    pub fn stats(&self) -> ServiceStats {
+        let mut high = 0i64;
+        for w in 0..self.worker_count() {
+            for p in self.pool_stats(w) {
+                high = high.max(p.high_water);
+            }
+        }
+        ServiceStats {
+            queue_depth: self.queue_len(),
+            inflight: self.inflight(),
+            workers: self.worker_count(),
+            pool_high_water: high,
+            events_dropped: obs::dropped_total(),
+            tenants: self.tenant_metrics(),
+        }
+    }
 }
 
 impl Drop for SolveService {
@@ -455,6 +482,7 @@ impl Drop for SolveService {
 /// One worker thread: pop → claim → solve (pool lane seeded) → settle,
 /// until the queue is empty *and* admission is off.
 fn worker_loop(shared: &Shared, worker: usize) {
+    obs::set_lane(worker as u32, &format!("svc-worker-{worker}"));
     loop {
         let job = {
             let mut st = shared.queue.lock().unwrap();
@@ -470,6 +498,11 @@ fn worker_loop(shared: &Shared, worker: usize) {
         };
         let Some(job) = job else { return };
         let queue_wait = job.submitted.elapsed();
+        obs::instant(
+            EventKind::JobClaim,
+            job.job_id,
+            queue_wait.as_micros() as u64,
+        );
 
         let mut report = JobReport {
             job_id: job.job_id,
@@ -488,9 +521,11 @@ fn worker_loop(shared: &Shared, worker: usize) {
             // Exclusive claim won: run the solve with this worker's pool
             // lane so the world's per-rank pools persist across jobs.
             let pools = lane_pools(shared, worker, job.spec.cfg.world_size());
+            let run = obs::span(EventKind::JobRun, job.job_id, 0);
             let t0 = Instant::now();
             let result = catch_unwind(AssertUnwindSafe(|| execute(&job.spec, pools)));
             report.wall = t0.elapsed();
+            drop(run);
             report.outcome = match result {
                 Ok(Ok(s)) => {
                     report.iterations = s.iterations;
@@ -528,6 +563,13 @@ fn lane_pools(shared: &Shared, worker: usize, world: usize) -> Vec<BufferPool> {
 /// collectors/drainers. The inflight decrement happens under the done
 /// lock so a drain can never miss the last settle.
 fn settle(shared: &Shared, job: &QueuedJob, report: JobReport) {
+    let outcome_code = match &report.outcome {
+        JobOutcome::Converged => 0,
+        JobOutcome::MaxIters => 1,
+        JobOutcome::Cancelled => 2,
+        JobOutcome::Failed(_) => 3,
+    };
+    obs::instant(EventKind::JobSettle, job.job_id, outcome_code);
     let outcome = report.outcome.clone();
     let iterations = report.iterations;
     let queue_wait = report.queue_wait;

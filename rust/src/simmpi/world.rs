@@ -9,6 +9,7 @@ use super::network::{LinkDelay, NetworkModel};
 use super::request::{sleep_until, RecvRequest, SendRequest};
 use super::{Rank, Tag};
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::transport::{BufferPool, MsgBuf, Transport};
 
 /// Configuration of a simulated world.
@@ -450,6 +451,7 @@ impl Transport for Endpoint {
     }
 
     fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<SendRequest> {
+        obs::instant(obs::EventKind::Isend, dst as u64, tag);
         Endpoint::isend(self, dst, tag, data)
     }
 
@@ -458,11 +460,13 @@ impl Transport for Endpoint {
     }
 
     fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        let _obs = obs::span(obs::EventKind::Recv, src as u64, tag);
         let mut req = self.irecv(src, tag);
         self.wait_recv(&mut req, timeout)
     }
 
     fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        let _obs = obs::span(obs::EventKind::WaitAny, pairs.len() as u64, 0);
         Endpoint::wait_any(self, pairs, timeout)
     }
 

@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 use crate::config::{ExperimentConfig, TransportKind};
 use crate::error::{Error, Result};
 use crate::metrics::RankMetrics;
+use crate::obs::{self, LaneSnapshot};
 use crate::problem::{ConvDiffProblem, Jacobi1D, Problem};
 use crate::scalar::Scalar;
 use crate::transport::tcp::{read_line, write_line, Rendezvous, TcpEndpoint, TcpOpts, TcpWorld};
@@ -60,6 +61,13 @@ const REPORT_TIMEOUT: Duration = Duration::from_secs(600);
 
 /// Budget for all ranks to dial back into the rendezvous listener.
 const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Cap on events shipped per lane in a child's report line. The control
+/// stream is read byte-at-a-time (see [`read_line`]); unbounded lanes
+/// would stretch the line to megabytes. The newest events are kept and
+/// the excess is accounted in the lane's `dropped` counter — never
+/// silently truncated.
+const TRACE_SHIP_CAP: usize = 2048;
 
 // ---------------------------------------------------------------------
 // Parent: spawn ranks, dispatch the job, aggregate the reports
@@ -275,10 +283,36 @@ fn child_solve<S: Scalar, P: Problem<S>>(
         .into_iter()
         .nth(rank)
         .ok_or_else(|| Error::Config(format!("rank {rank}: problem built no worker")))?;
-    let outcome = run_rank::<_, S, _>(ep, graph, worker, cfg.clone())?;
+    if cfg.trace {
+        obs::reset();
+        obs::set_enabled(true);
+    }
+    let mut outcome = run_rank::<_, S, _>(ep, graph, worker, cfg.clone())?;
+    if cfg.trace {
+        // The endpoint (and its progress thread) is gone once run_rank
+        // returns, so this process's lanes are quiescent and exact.
+        obs::set_enabled(false);
+        outcome.trace = shipped_lanes();
+    }
     write_line(control, &encode_outcome(rank, &outcome))
         .map_err(|e| Error::Transport(format!("rank {rank}: writing report line: {e}")))?;
     Ok(())
+}
+
+/// Drain this process's recorder lanes, keeping only the newest
+/// [`TRACE_SHIP_CAP`] events per lane (excess moves into `dropped`).
+fn shipped_lanes() -> Vec<LaneSnapshot> {
+    obs::drain()
+        .into_iter()
+        .map(|mut l| {
+            if l.events.len() > TRACE_SHIP_CAP {
+                let cut = l.events.len() - TRACE_SHIP_CAP;
+                l.events.drain(..cut);
+                l.dropped += cut as u64;
+            }
+            l
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -366,6 +400,12 @@ fn encode_outcome<S: Scalar>(rank: usize, o: &RankOutcome<S>) -> String {
     m.insert("prev_sol".to_string(), scalar_arr(&o.prev_sol));
     m.insert("steps".to_string(), Json::Arr(steps));
     m.insert("metrics".to_string(), Json::Obj(metrics));
+    if !o.trace.is_empty() {
+        m.insert(
+            "trace".to_string(),
+            Json::Arr(o.trace.iter().map(LaneSnapshot::to_json).collect()),
+        );
+    }
     json::write(&Json::Obj(m))
 }
 
@@ -414,11 +454,17 @@ fn decode_outcome<S: Scalar>(line: &str, expect_rank: usize) -> Result<RankOutco
         compute_time: secs_field(m.get("compute_time_seconds")),
         comm_time: secs_field(m.get("comm_time_seconds")),
     };
+    let trace = v
+        .get("trace")
+        .and_then(Json::as_arr)
+        .map(|arr| arr.iter().filter_map(LaneSnapshot::from_json).collect())
+        .unwrap_or_default();
     Ok(RankOutcome {
         sol: decode_scalars(v.get("sol"))?,
         prev_sol: decode_scalars(v.get("prev_sol"))?,
         metrics,
         steps,
+        trace,
     })
 }
 
@@ -455,6 +501,17 @@ mod tests {
                     snapshots: 1,
                 },
             ],
+            trace: vec![LaneSnapshot {
+                pid: 3,
+                name: "rank-3".into(),
+                events: vec![crate::obs::Event::instant(
+                    17,
+                    crate::obs::EventKind::Isend,
+                    1,
+                    64,
+                )],
+                dropped: 2,
+            }],
         }
     }
 
@@ -474,6 +531,7 @@ mod tests {
         assert_eq!(back.steps[0].wall, o.steps[0].wall);
         assert_eq!(back.steps[0].reported_norm, 1.25e-7);
         assert_eq!(back.steps[1].reported_norm, f64::INFINITY);
+        assert_eq!(back.trace, o.trace);
     }
 
     #[test]

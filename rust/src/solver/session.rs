@@ -31,6 +31,7 @@ use crate::error::{Error, Result};
 use crate::graph::{validate_world, CommGraph};
 use crate::jack::{AsyncConfig, IterateOpts, JackComm, NormKind, StepOutcome};
 use crate::metrics::RankMetrics;
+use crate::obs::{self, LaneSnapshot};
 use crate::problem::{ConvDiffProblem, Problem, ProblemWorker};
 use crate::scalar::Scalar;
 use crate::simmpi::{barrier, NetworkModel, World, WorldConfig};
@@ -77,6 +78,10 @@ pub struct SolveReport<S: Scalar = f64> {
     /// and the solve service maps it to `JobOutcome::MaxIters`.
     pub converged: bool,
     pub per_rank: Vec<RankMetrics>,
+    /// Drained observability lanes (`cfg.trace` runs only; empty
+    /// otherwise). One entry per producer thread — rank sessions, TCP
+    /// progress threads — ready for [`crate::obs::chrome`] export.
+    pub trace: Vec<LaneSnapshot>,
 }
 
 impl<S: Scalar> SolveReport<S> {
@@ -266,6 +271,13 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
         }
         let cfg = &self.cfg;
 
+        if cfg.trace {
+            // Fresh trace per run: drop lanes of earlier solves so the
+            // export holds exactly this solve's events.
+            obs::reset();
+            obs::set_enabled(true);
+        }
+
         // Everything below the endpoint construction is generic over the
         // `Transport`: the same per-rank solve runs on the simulated MPI
         // world or on the shared-memory ring backend.
@@ -315,14 +327,21 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
         };
         let total_wall = t0.elapsed();
 
-        Ok(aggregate_report(
+        let mut report = aggregate_report(
             cfg,
             &self.problem,
             self.backend,
             self.transport,
             outcomes,
             total_wall,
-        ))
+        );
+        if cfg.trace {
+            // Producers (rank threads, progress threads) have joined, so
+            // the snapshot is exact.
+            obs::set_enabled(false);
+            report.trace = obs::drain();
+        }
+        Ok(report)
     }
 }
 
@@ -397,7 +416,7 @@ pub(crate) fn aggregate_report<S: Scalar, P: Problem<S>>(
             .iter()
             .all(|s| s.reported_norm.is_finite() && s.reported_norm <= cfg.threshold);
 
-    SolveReport {
+    let mut report = SolveReport {
         scheme: cfg.scheme,
         backend,
         transport,
@@ -408,8 +427,14 @@ pub(crate) fn aggregate_report<S: Scalar, P: Problem<S>>(
         solution,
         r_n,
         converged,
-        per_rank: outcomes.into_iter().map(|o| o.metrics).collect(),
+        per_rank: Vec::new(),
+        trace: Vec::new(),
+    };
+    for o in outcomes {
+        report.per_rank.push(o.metrics);
+        report.trace.extend(o.trace);
     }
+    report
 }
 
 /// One-call convenience used by the CLI, the experiment harnesses and
@@ -444,6 +469,11 @@ pub(crate) struct RankOutcome<S> {
     pub(crate) prev_sol: Vec<S>,
     pub(crate) metrics: RankMetrics,
     pub(crate) steps: Vec<RankStep>,
+    /// Observability lanes this rank drained in its own process.
+    /// Empty for in-process worlds (all threads share one recorder, so
+    /// [`SolverSession::run`] drains globally instead); the TCP rank
+    /// subprocesses fill it so their lanes survive the process boundary.
+    pub(crate) trace: Vec<LaneSnapshot>,
 }
 
 /// Spawn one worker thread per rank and join their outcomes. Generic
@@ -494,6 +524,7 @@ where
     let link_sizes = worker.link_sizes();
     let vol = worker.local_len();
     let rank = worker.rank();
+    obs::set_lane(rank as u32, &format!("rank-{rank}"));
 
     // -- Listing 5: the typed session builder (init ordering is a
     //    compile-time property; async config is one value).
@@ -584,5 +615,6 @@ where
         prev_sol,
         metrics: comm.metrics.clone(),
         steps,
+        trace: Vec::new(),
     })
 }

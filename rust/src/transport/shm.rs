@@ -66,6 +66,7 @@ use std::time::{Duration, Instant};
 use super::wake::WakeSignal;
 use super::{BufferPool, MsgBuf, Rank, SendHandle, Tag, Transport};
 use crate::error::{Error, Result};
+use crate::obs;
 
 /// Default bounded capacity (packets) of each directed link's ring.
 const DEFAULT_RING_CAPACITY: usize = 256;
@@ -712,6 +713,7 @@ impl Transport for ShmEndpoint {
     }
 
     fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<ShmSendHandle> {
+        obs::instant(obs::EventKind::Isend, dst as u64, tag);
         ShmEndpoint::isend(self, dst, tag, data)
     }
 
@@ -720,10 +722,12 @@ impl Transport for ShmEndpoint {
     }
 
     fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        let _obs = obs::span(obs::EventKind::Recv, src as u64, tag);
         ShmEndpoint::recv(self, src, tag, timeout)
     }
 
     fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        let _obs = obs::span(obs::EventKind::WaitAny, pairs.len() as u64, 0);
         ShmEndpoint::wait_any(self, pairs, timeout)
     }
 

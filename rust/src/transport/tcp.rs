@@ -79,6 +79,7 @@ use std::time::{Duration, Instant};
 use super::wake::WakeSignal;
 use super::{BufferPool, MsgBuf, Rank, SendHandle, Tag, Transport};
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::util::json::{self, Json};
 
 /// Default bounded capacity (packets) of each receive lane.
@@ -807,6 +808,7 @@ impl Transport for TcpEndpoint {
     }
 
     fn isend(&mut self, dst: Rank, tag: Tag, data: impl Into<MsgBuf>) -> Result<TcpSendHandle> {
+        obs::instant(obs::EventKind::Isend, dst as u64, tag);
         TcpEndpoint::isend(self, dst, tag, data)
     }
 
@@ -815,10 +817,12 @@ impl Transport for TcpEndpoint {
     }
 
     fn recv(&mut self, src: Rank, tag: Tag, timeout: Option<Duration>) -> Result<MsgBuf> {
+        let _obs = obs::span(obs::EventKind::Recv, src as u64, tag);
         TcpEndpoint::recv(self, src, tag, timeout)
     }
 
     fn wait_any(&mut self, pairs: &[(Rank, Tag)], timeout: Duration) -> Option<(usize, MsgBuf)> {
+        let _obs = obs::span(obs::EventKind::WaitAny, pairs.len() as u64, 0);
         TcpEndpoint::wait_any(self, pairs, timeout)
     }
 
@@ -1108,6 +1112,7 @@ impl InConn {
 /// The per-endpoint progress thread: pumps every connection until
 /// shutdown, marking links/lanes dead as their sockets fail.
 fn progress_loop(
+    rank: Rank,
     signal: Arc<WakeSignal>,
     shutdown: Arc<AtomicBool>,
     rx: Arc<RxState>,
@@ -1115,14 +1120,17 @@ fn progress_loop(
     mut outs: Vec<OutConn>,
     mut ins: Vec<InConn>,
 ) {
+    obs::set_lane(rank as u32, &format!("tcp-progress-{rank}"));
     let mut idle_spins = 0u32;
     let mut grace: Option<Instant> = None;
     loop {
         let observed = signal.current();
         let mut progressed = false;
+        let mut live_out = 0u64;
         outs.retain_mut(|c| match c.pump() {
             Ok(p) => {
                 progressed |= p;
+                live_out += p as u64;
                 true
             }
             Err(msg) => {
@@ -1132,9 +1140,11 @@ fn progress_loop(
                 false
             }
         });
+        let mut live_in = 0u64;
         ins.retain_mut(|c| match c.pump(&rx, &pool) {
             Ok(p) => {
                 progressed |= p;
+                live_in += p as u64;
                 true
             }
             Err(msg) => {
@@ -1142,6 +1152,11 @@ fn progress_loop(
                 false
             }
         });
+        if progressed {
+            // One drain event per productive pump pass, not per frame:
+            // a/b carry how many send/recv connections moved bytes.
+            obs::instant(obs::EventKind::WireDrain, live_out, live_in);
+        }
         if shutdown.load(Ordering::Acquire) {
             let deadline = *grace.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
             if outs.iter().all(OutConn::idle) || Instant::now() >= deadline {
@@ -1537,7 +1552,7 @@ impl TcpWorld {
                 let shutdown = shutdown.clone();
                 let rx = rx.clone();
                 let pool = pool.clone();
-                move || progress_loop(signal, shutdown, rx, pool, outs, ins)
+                move || progress_loop(rank, signal, shutdown, rx, pool, outs, ins)
             })
             .map_err(|e| {
                 Error::Transport(format!("rank {rank}: progress thread spawn failed: {e}"))

@@ -48,6 +48,8 @@ use std::sync::Mutex;
 use std::thread::Thread;
 use std::time::{Duration, Instant};
 
+use crate::obs;
+
 /// Event counter with atomic fast paths and parked-thread wakeup; see
 /// the module docs for the protocol.
 #[derive(Default)]
@@ -81,6 +83,7 @@ impl WakeSignal {
     pub fn notify(&self) {
         self.seq.fetch_add(1, Ordering::SeqCst);
         if self.parked.load(Ordering::SeqCst) {
+            obs::instant(obs::EventKind::Unpark, 0, 0);
             // Clone rather than take: the waiter clears its own
             // registration, and further notifies must keep finding it
             // while it loops re-checking its predicate.
@@ -99,6 +102,7 @@ impl WakeSignal {
             return;
         }
         let deadline = Instant::now() + timeout;
+        let _obs = obs::span(obs::EventKind::Park, since, 0);
         *self.waiter.lock().unwrap() = Some(std::thread::current());
         self.parked.store(true, Ordering::SeqCst);
         // Dekker re-check: a notify racing with the registration above

@@ -3,5 +3,6 @@
 
 pub mod json;
 pub mod rng;
+pub mod signal;
 
 pub use rng::Rng64;

@@ -1,0 +1,53 @@
+//! SIGINT/SIGTERM latch with no external crates.
+//!
+//! `repro serve` wants to drain in-flight jobs and still print its
+//! tenant summary when the operator hits Ctrl-C or the supervisor sends
+//! SIGTERM. The offline build environment has no `signal-hook`/`ctrlc`,
+//! so this module declares libc's `signal(2)` directly (libc is always
+//! linked on the targets we build for) and flips a process-global
+//! [`AtomicBool`] from the handler — a store is async-signal-safe, and
+//! the serve loop polls [`triggered`] between lines.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+extern "C" fn latch(_signum: i32) {
+    TRIGGERED.store(true, Ordering::SeqCst);
+}
+
+/// Install the latch for SIGINT and SIGTERM. Idempotent; later signals
+/// of either kind only re-set the flag (the process is never killed
+/// mid-drain by a repeat Ctrl-C — the default disposition is replaced).
+pub fn install() {
+    let h = latch as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGINT, h);
+        signal(SIGTERM, h);
+    }
+}
+
+/// True once any latched signal has been delivered.
+pub fn triggered() -> bool {
+    TRIGGERED.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latch_flips_the_flag() {
+        assert!(!triggered());
+        install();
+        latch(SIGTERM);
+        assert!(triggered());
+    }
+}

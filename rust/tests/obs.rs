@@ -1,0 +1,218 @@
+//! Observability subsystem (ISSUE 9): the lock-free event recorder
+//! under multi-thread producers, the Chrome-trace export schema, and
+//! the `repro serve` stats/signal front-end behaviour end to end.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::process::{Command, Stdio};
+use std::sync::Mutex;
+
+use jack2::obs::{self, chrome::chrome_trace_json, EventKind};
+use jack2::util::json::{self, Json};
+
+/// The recorder is process-global; tests that touch it serialize here
+/// so the subprocess-driven tests below can run in parallel with them.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Four producer threads each overflow their lane: every lane retains
+/// exactly the newest `DEFAULT_LANE_CAP` events and reports the exact
+/// overflow in `dropped` — overwrite-oldest, never silent truncation.
+#[test]
+fn ring_overwrites_oldest_and_counts_drops_across_threads() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs::reset();
+    obs::set_enabled(true);
+    let overflow = 100usize;
+    let total = obs::DEFAULT_LANE_CAP + overflow;
+    let threads: Vec<_> = (0..4u32)
+        .map(|t| {
+            std::thread::spawn(move || {
+                obs::set_lane(t, &format!("producer-{t}"));
+                for i in 0..total {
+                    obs::instant(EventKind::Isend, t as u64, i as u64);
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    obs::set_enabled(false);
+    let lanes = obs::drain();
+    let mine: Vec<_> = lanes
+        .iter()
+        .filter(|l| l.name.starts_with("producer-"))
+        .collect();
+    assert_eq!(mine.len(), 4, "one lane per producer thread");
+    for l in &mine {
+        assert_eq!(l.events.len(), obs::DEFAULT_LANE_CAP, "lane {} full", l.name);
+        assert_eq!(l.dropped, overflow as u64, "lane {} drop count", l.name);
+        // Overwrite-oldest: the survivors are exactly the newest cap.
+        let min_b = l.events.iter().map(|e| e.b).min().unwrap();
+        let max_b = l.events.iter().map(|e| e.b).max().unwrap();
+        assert_eq!(min_b, overflow as u64, "lane {}", l.name);
+        assert_eq!(max_b, (total - 1) as u64, "lane {}", l.name);
+    }
+    assert!(obs::dropped_total() >= 4 * overflow as u64);
+    obs::reset();
+}
+
+/// A small recorded session exports as schema-valid Chrome trace JSON:
+/// every element has ph/pid/tid, spans carry dur, metadata names the
+/// lane, and norm-carrying events decode their bits payload.
+#[test]
+fn chrome_export_of_a_recorded_session_is_schema_valid() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs::reset();
+    obs::set_enabled(true);
+    obs::set_lane(0, "rank-0");
+    obs::instant(EventKind::Isend, 1, 64);
+    {
+        let _s = obs::span(EventKind::Compute, 3, 0);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    obs::instant(EventKind::DetectVerdict, f64::to_bits(1.5e-8), 1);
+    obs::set_enabled(false);
+    let lanes = obs::drain();
+    obs::reset();
+
+    let text = json::write(&chrome_trace_json(&lanes));
+    let back = json::parse(&text).expect("exported trace must parse");
+    let arr = back.as_arr().expect("top level is a traceEvents array");
+    assert!(!arr.is_empty());
+    for ev in arr {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("every event has ph");
+        assert!(matches!(ph, "M" | "X" | "i"), "unexpected phase {ph}");
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        if ph != "M" {
+            assert!(ev.get("ts").is_some(), "timed events carry ts");
+        }
+        if ph == "X" {
+            assert!(ev.get("dur").is_some(), "complete events carry dur");
+        }
+    }
+    assert!(
+        arr.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("thread_name")
+                && e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    == Some("rank-0")
+        }),
+        "lane metadata present"
+    );
+    let verdict = arr
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("detect_verdict"))
+        .expect("verdict event exported");
+    let norm = verdict
+        .get("args")
+        .and_then(|a| a.get("norm"))
+        .and_then(Json::as_f64)
+        .expect("verdict norm decoded from bits");
+    assert!((norm - 1.5e-8).abs() < 1e-20, "norm = {norm}");
+    assert_eq!(
+        verdict.get("args").and_then(|a| a.get("terminated")),
+        Some(&Json::Bool(true))
+    );
+}
+
+fn spawn_serve() -> std::process::Child {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn repro serve")
+}
+
+/// `{"stats":true}` on stdin is answered in place with the live stats
+/// object; EOF then drains to the tenant summary and a clean exit.
+#[test]
+fn serve_answers_stats_query_over_stdin() {
+    let mut child = spawn_serve();
+    let mut stdin = child.stdin.take().unwrap();
+    let mut out = BufReader::new(child.stdout.take().unwrap());
+    writeln!(stdin, "{{\"stats\":true}}").unwrap();
+    stdin.flush().unwrap();
+    let mut line = String::new();
+    out.read_line(&mut line).unwrap();
+    let v = json::parse(&line).expect("stats reply is one JSON line");
+    assert_eq!(v.get("stats"), Some(&Json::Bool(true)));
+    assert_eq!(v.get("workers").and_then(Json::as_f64), Some(1.0));
+    assert!(v.get("queue_depth").is_some());
+    assert!(v.get("inflight").is_some());
+    assert!(v.get("events_dropped").is_some());
+    assert!(v.get("tenants").is_some());
+    drop(stdin); // EOF -> drain -> tenant summary -> exit 0
+    let mut rest = String::new();
+    out.read_to_string(&mut rest).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "clean exit, got {status:?}");
+    let last = rest.lines().last().expect("tenant summary printed");
+    assert!(json::parse(last).unwrap().get("tenants").is_some());
+}
+
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+const SIGTERM: i32 = 15;
+
+/// SIGTERM with stdin still open: the serve loop stops reading, drains,
+/// prints the tenant summary and exits 0 — never a hard kill.
+#[test]
+fn serve_stdin_drains_cleanly_on_sigterm() {
+    let mut child = spawn_serve();
+    let mut stdin = child.stdin.take().unwrap();
+    let mut out = BufReader::new(child.stdout.take().unwrap());
+    // A stats round-trip proves the serve loop (and its signal latch)
+    // is live before the signal is delivered.
+    writeln!(stdin, "{{\"stats\":true}}").unwrap();
+    stdin.flush().unwrap();
+    let mut line = String::new();
+    out.read_line(&mut line).unwrap();
+    assert!(json::parse(&line).is_ok());
+    let rc = unsafe { kill(child.id() as i32, SIGTERM) };
+    assert_eq!(rc, 0, "kill(2) failed");
+    // stdin is intentionally kept open: only the latch can end the loop.
+    let mut rest = String::new();
+    out.read_to_string(&mut rest).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "exit after SIGTERM must be clean: {status:?}");
+    let last = rest.lines().last().expect("tenant summary printed");
+    assert!(json::parse(last).unwrap().get("tenants").is_some());
+    drop(stdin);
+}
+
+/// `repro solve --trace` writes a parseable Chrome trace with one named
+/// lane per rank (the in-process shm variant of the acceptance check;
+/// CI additionally runs the TCP variant and looks for progress lanes).
+#[test]
+fn solve_trace_flag_writes_chrome_trace_with_rank_lanes() {
+    let path = std::env::temp_dir().join(format!("jack2-trace-{}.json", std::process::id()));
+    let status = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "solve", "--problem", "jacobi", "--n", "32", "--grid", "2x1x1", "--steps", "1",
+            "--transport", "shm", "--scheme", "async", "--json", "--trace",
+        ])
+        .arg(&path)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "traced solve failed: {status:?}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let doc = json::parse(&text).expect("trace file must be valid JSON");
+    let arr = doc.as_arr().expect("traceEvents array");
+    let thread_names: Vec<&str> = arr
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .collect();
+    assert!(thread_names.contains(&"rank-0"), "lanes: {thread_names:?}");
+    assert!(thread_names.contains(&"rank-1"), "lanes: {thread_names:?}");
+    assert!(
+        arr.iter()
+            .any(|e| matches!(e.get("ph").and_then(Json::as_str), Some("X" | "i"))),
+        "traced solve must record events"
+    );
+}

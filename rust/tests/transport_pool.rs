@@ -4,6 +4,8 @@
 //! any payload width, recycled storage never leaks stale data across
 //! `(src, tag)` lanes, and MPI's non-overtaking order survives pooling.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::time::Duration;
 
 use jack2::graph::CommGraph;
@@ -15,6 +17,33 @@ use jack2::metrics::RankMetrics;
 use jack2::scalar::Scalar;
 use jack2::simmpi::{Endpoint, NetworkModel, World, WorldConfig};
 use jack2::transport::Transport;
+
+/// Counting allocator for the enabled-tracing test below: the counter is
+/// thread-local so concurrently running tests in this binary cannot
+/// perturb the measurement, and const-initialized TLS keeps the `alloc`
+/// hook itself from allocating (no lazy-init recursion).
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
 
 fn instant_world(p: usize) -> (World, Vec<Endpoint>) {
     World::new(WorldConfig::homogeneous(p).with_network(NetworkModel::instant()))
@@ -470,6 +499,67 @@ fn pool_capacity_is_bounded_under_flood() {
     assert_eq!(s.recycled + s.dropped, 500, "every buffer accounted for: {s:?}");
     assert!(e0.pool().free_len() <= 64, "free list must stay bounded");
     assert!(s.dropped > 0, "overflow must drop, not grow");
+}
+
+/// With the cross-layer event recorder *enabled*, the warm sync
+/// exchange path still performs zero allocations per iteration — every
+/// event lands in the thread's pre-sized ring (`jack2::obs`), so
+/// tracing can stay on in production runs without touching the
+/// allocator. Measured with the thread-local counting allocator above:
+/// the whole pair is driven from this one thread, so any allocation on
+/// the instrumented path would land in this thread's counter.
+#[test]
+fn enabled_tracing_is_allocation_free_in_steady_state() {
+    let n = 256;
+    let (_w, mut e0, mut e1, g0, g1) = pair();
+    let mut bufs0 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
+    let mut bufs1 = BufferSet::<f64>::new(&[n], &[n]).unwrap();
+    let mut sc0 = SyncComm::default();
+    let mut sc1 = SyncComm::default();
+    let mut m = RankMetrics::default();
+
+    jack2::obs::set_enabled(true);
+    jack2::obs::set_lane(0, "transport-pool-test");
+    let mut iterate = |e0: &mut Endpoint,
+                       e1: &mut Endpoint,
+                       bufs0: &mut BufferSet<f64>,
+                       bufs1: &mut BufferSet<f64>,
+                       sc0: &mut SyncComm<Endpoint>,
+                       sc1: &mut SyncComm<Endpoint>,
+                       m: &mut RankMetrics,
+                       it: usize| {
+        bufs0.send[0][0] = it as f64;
+        bufs1.send[0][0] = -(it as f64);
+        sc0.send(e0, &g0, bufs0, m).unwrap();
+        sc1.send(e1, &g1, bufs1, m).unwrap();
+        sc0.recv(e0, &g0, bufs0, m).unwrap();
+        sc1.recv(e1, &g1, bufs1, m).unwrap();
+        assert_eq!(bufs0.recv[0][0], -(it as f64));
+        assert_eq!(bufs1.recv[0][0], it as f64);
+    };
+
+    // Warm-up fills the buffer pools and performs the one-time lane
+    // setup (the ring allocation) for this thread.
+    for it in 0..10 {
+        iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+    }
+    let before = thread_allocs();
+    for it in 10..110 {
+        iterate(&mut e0, &mut e1, &mut bufs0, &mut bufs1, &mut sc0, &mut sc1, &mut m, it);
+    }
+    let delta = thread_allocs() - before;
+    jack2::obs::set_enabled(false);
+    assert_eq!(
+        delta, 0,
+        "tracing-enabled steady state performed {delta} allocations"
+    );
+    // The events really were recorded, not skipped.
+    let lanes = jack2::obs::drain();
+    let lane = lanes
+        .iter()
+        .find(|l| l.name == "transport-pool-test")
+        .expect("this thread's lane must be registered");
+    assert!(lane.events.len() >= 100, "events recorded: {}", lane.events.len());
 }
 
 /// A blocking `Transport::recv` with a timeout still errors cleanly when
