@@ -17,26 +17,33 @@
 //! receive path — and the ISSUE 9 observability series
 //! (`trace_overhead`): the event recorder's instrumentation-point cost
 //! with tracing compiled in but disabled (CI-gated ≤ 1.05× of bare
-//! code) and enabled. Emits `BENCH_comm_micro.json` so the perf
-//! trajectory is machine-readable across PRs.
+//! code) and enabled — and the ISSUE 10 steering series
+//! (`steer_reconverge`): wall time and iteration count for an
+//! asynchronous solve reconfigured mid-flight (threshold tighten, RHS
+//! rescale) vs the unsteered baseline, CI-gated on every variant
+//! re-converging. Emits `BENCH_comm_micro.json` so the perf trajectory
+//! is machine-readable across PRs.
 
 use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use jack2::config::{ExperimentConfig, Scheme, TerminationKind};
+use jack2::config::{ExperimentConfig, Scheme, TerminationKind, TransportKind};
 use jack2::graph::builders::grid3d_torus_graphs;
 use jack2::harness::{Bencher, Table};
 use jack2::jack::buffers::BufferSet;
-use jack2::jack::SyncComm;
+use jack2::jack::{SteerCommand, SyncComm};
 use jack2::metrics::RankMetrics;
 use jack2::obs::{self, EventKind};
+use jack2::problem::Jacobi1D;
 use jack2::scalar::Scalar;
 use jack2::simd::SimdLevel;
 use jack2::service::{Admission, JobOutcome, LoadGen, ServiceConfig, SolveService};
 use jack2::simmpi::{NetworkModel, WorldConfig};
-use jack2::solver::{solve_experiment, ComputeBackend, NativeBackend};
+use jack2::solver::{
+    solve_experiment, ComputeBackend, NativeBackend, SolverSession, SteerAction, SteerScript,
+};
 use jack2::transport::tcp::{Rendezvous, TcpOpts, TcpWorld};
 use jack2::transport::{ShmWorld, Transport, WakeSignal};
 use jack2::util::json::{self, Json};
@@ -791,6 +798,89 @@ fn bench_trace_overhead(b: &Bencher) -> Vec<Json> {
     rows
 }
 
+/// Steered-solve reconvergence (ISSUE 10): the 3-rank asynchronous
+/// chain solve unsteered, with a mid-flight threshold tighten, and with
+/// a mid-flight RHS rescale — wall time and iterations to (re)converge.
+/// CI gates that every variant converges and that every steered variant
+/// actually opened a steering epoch; latency itself is trend-only
+/// (scheduler-dependent). One JSON row per script.
+fn bench_steer_reconverge(b: &Bencher) -> Vec<Json> {
+    println!("\nsteered solve: reconvergence after a mid-flight reconfiguration (3-rank async chain)");
+    let cfg = ExperimentConfig {
+        process_grid: (3, 1, 1),
+        n: 36,
+        scheme: Scheme::Asynchronous,
+        transport: TransportKind::Sim,
+        threshold: 1e-6,
+        max_iters: 500_000,
+        net_latency_us: 2,
+        net_jitter: 0.1,
+        seed: 0x57EE_BEEF,
+        ..Default::default()
+    };
+    let scripts: [(&str, SteerScript); 3] = [
+        ("baseline", SteerScript::default()),
+        (
+            "tighten",
+            SteerScript::new(vec![SteerAction {
+                after_root_iters: 5,
+                command: SteerCommand::SetThreshold(1e-8),
+            }]),
+        ),
+        (
+            "rhs_scale",
+            SteerScript::new(vec![SteerAction {
+                after_root_iters: 5,
+                command: SteerCommand::ScaleRhs(2.0),
+            }]),
+        ),
+    ];
+
+    let mut t = Table::new(&["script", "time / solve", "iters", "epochs", "r_n"]);
+    let mut rows = Vec::new();
+    for (name, script) in scripts {
+        let mut rep = None;
+        let st = b.run(&format!("steer {name}"), || {
+            let problem =
+                Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt).expect("steer bench problem");
+            let session = SolverSession::<f64>::builder(&cfg)
+                .problem(problem)
+                .build()
+                .expect("steer bench session");
+            rep = Some(session.run_steered(&script).expect("steered solve"));
+        });
+        let rep = rep.expect("bencher runs the closure at least once");
+        let wall_ns = st.mean().as_nanos() as f64;
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}ms", wall_ns / 1e6),
+            rep.report.iterations().to_string(),
+            rep.epochs.to_string(),
+            format!("{:.1e}", rep.report.r_n),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("script".into(), Json::Str(name.into()));
+        row.insert("wall_ns".into(), Json::Num(wall_ns));
+        row.insert(
+            "iterations".into(),
+            Json::Num(rep.report.iterations() as f64),
+        );
+        row.insert("epochs".into(), Json::Num(rep.epochs as f64));
+        row.insert("r_n".into(), Json::Num(rep.report.r_n));
+        row.insert(
+            "converged".into(),
+            Json::Num(if rep.report.converged { 1.0 } else { 0.0 }),
+        );
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+    println!(
+        "target: every script re-converges; steered scripts open >= 1 epoch \
+         (CI-gated); latency is trend-only"
+    );
+    rows
+}
+
 fn bench_p2p_rate(b: &Bencher) -> Vec<Json> {
     println!("\nsimmpi point-to-point throughput (zero-latency model)");
     let mut t = Table::new(&["payload f64s", "msgs/s", "MB/s"]);
@@ -851,6 +941,7 @@ fn main() {
     let termination_rows = bench_termination_detection(&b);
     let service_rows = bench_service_throughput(&b);
     let trace_rows = bench_trace_overhead(&b);
+    let steer_rows = bench_steer_reconverge(&b);
     let p2p_rows = bench_p2p_rate(&b);
 
     let mut doc = BTreeMap::new();
@@ -869,6 +960,7 @@ fn main() {
     doc.insert("termination_detection".into(), Json::Arr(termination_rows));
     doc.insert("service_throughput".into(), Json::Arr(service_rows));
     doc.insert("trace_overhead".into(), Json::Arr(trace_rows));
+    doc.insert("steer_reconverge".into(), Json::Arr(steer_rows));
     doc.insert("p2p_throughput".into(), Json::Arr(p2p_rows));
     let out = "BENCH_comm_micro.json";
     match std::fs::write(out, json::write(&Json::Obj(doc))) {

@@ -5,12 +5,26 @@
 //! spike) stall the synchronous scheme — every rank waits for the spiked
 //! message every time — while asynchronous iterations simply keep
 //! computing with the data they have.
+//!
+//! The second experiment here ([`rank_loss`]) probes the failure mode
+//! the termination detectors must never get wrong: a rank that stops
+//! participating *mid-detection*. A silent rank means the global
+//! convergence condition can no longer be established — so the only
+//! correct behaviours are "no verdict" (survivors run to their
+//! iteration bound) and "bounded exit" (nobody blocks on the dead
+//! peer). A protocol that declares termination anyway has manufactured
+//! a false verdict from a partial world.
 
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::config::{Backend, ExperimentConfig, Scheme};
-use crate::error::Result;
+use crate::config::{Backend, ExperimentConfig, Scheme, TerminationKind};
+use crate::error::{Error, Result};
 use crate::harness::{fmt_secs, Table};
+use crate::jack::{AsyncConfig, IterateOpts, JackComm, NormKind, StepOutcome, StepState};
+use crate::problem::{Jacobi1D, Problem, ProblemWorker};
+use crate::simmpi::{NetworkModel, World, WorldConfig};
 use crate::solver::solve_experiment;
 
 #[derive(Debug, Clone)]
@@ -57,6 +71,161 @@ pub fn run() -> Result<Vec<FaultRow>> {
         });
     }
     Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Rank loss mid-detection
+// ---------------------------------------------------------------------
+
+/// How each termination protocol behaved with a rank dead mid-detection.
+#[derive(Debug, Clone)]
+pub struct RankLossRow {
+    pub termination: TerminationKind,
+    /// Termination verdicts observed by surviving ranks. A silent rank
+    /// makes global convergence undecidable, so anything nonzero is a
+    /// false verdict.
+    pub false_verdicts: u64,
+    /// Iterations completed by each surviving rank; all must equal the
+    /// iteration bound (they neither stopped early nor hung).
+    pub survivor_iters: Vec<u64>,
+    /// Iterations the victim completed before going silent.
+    pub victim_iters: u64,
+    pub wall: Duration,
+}
+
+/// World size for the rank-loss probe.
+const LOSS_RANKS: usize = 3;
+/// The victim stops iterating (but keeps its endpoint alive, like a
+/// wedged-not-crashed process) after this many iterations — early
+/// enough that every protocol is still mid-detection.
+const LOSS_DEATH_ITER: u64 = 25;
+/// Survivors' iteration bound: they must reach it, not hang before it.
+pub const LOSS_MAX_ITERS: u64 = 3_000;
+
+/// Run the seeded rank-loss probe for every termination protocol.
+pub fn rank_loss() -> Result<Vec<RankLossRow>> {
+    TerminationKind::ALL
+        .iter()
+        .map(|&t| rank_loss_one(t, 0xDEAD_5EED))
+        .collect()
+}
+
+/// One protocol: a 3-rank asynchronous Jacobi solve over the simulated
+/// network in which rank 1 goes silent after [`LOSS_DEATH_ITER`]
+/// iterations, before anyone has converged. The survivors must run out
+/// their full iteration budget with zero termination verdicts.
+pub fn rank_loss_one(termination: TerminationKind, seed: u64) -> Result<RankLossRow> {
+    const VICTIM: usize = 1;
+    let problem = Jacobi1D::new(48, LOSS_RANKS, 0.01)?;
+    let graphs = problem.comm_graphs()?;
+    let workers = problem.workers(Backend::Native, 1)?;
+    let mut network = NetworkModel::uniform(5, 0.1);
+    network.per_byte = Duration::from_nanos(1);
+    let (_world, eps) = World::new(WorldConfig {
+        size: LOSS_RANKS,
+        network,
+        seed,
+        rank_speed: Vec::new(),
+        pools: Vec::new(),
+    });
+
+    // Every thread parks after its loop until all three are done, so no
+    // endpoint is dropped while a survivor still routes through it.
+    let finished = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(LOSS_RANKS);
+    for ((ep, graph), mut worker) in eps.into_iter().zip(graphs).zip(workers) {
+        let finished = finished.clone();
+        handles.push(std::thread::spawn(move || -> Result<(u64, u64)> {
+            let rank = worker.rank();
+            let link_sizes = worker.link_sizes();
+            let vol = worker.local_len();
+            let mut comm = JackComm::<_, f64>::builder(ep, graph)?
+                .with_buffers(&link_sizes, &link_sizes)?
+                .with_residual(vol, NormKind::Max)
+                .with_solution(vol)
+                .build_async(AsyncConfig {
+                    termination,
+                    threshold: 1e-7,
+                    ..AsyncConfig::default()
+                })?;
+            worker.begin_step(&vec![0.0; vol])?;
+            worker.publish(comm.compute_view())?;
+            comm.send()?;
+            let opts = IterateOpts {
+                threshold: 1e-7,
+                max_iters: LOSS_MAX_ITERS,
+                wait_sends: false,
+                detect: true,
+            };
+            let mut iters = 0u64;
+            let mut verdicts = 0u64;
+            while iters < LOSS_MAX_ITERS {
+                if rank == VICTIM && iters >= LOSS_DEATH_ITER {
+                    break;
+                }
+                let state = comm.iterate_step(&opts, |v| {
+                    if let Err(e) = worker.compute(v, 1) {
+                        return StepOutcome::Abort(e);
+                    }
+                    StepOutcome::Continue
+                })?;
+                iters += 1;
+                if state == StepState::Done {
+                    verdicts += 1;
+                    break;
+                }
+            }
+            finished.fetch_add(1, Ordering::AcqRel);
+            while finished.load(Ordering::Acquire) < LOSS_RANKS {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Ok((iters, verdicts))
+        }));
+    }
+
+    let mut survivor_iters = Vec::new();
+    let mut victim_iters = 0;
+    let mut false_verdicts = 0;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (iters, verdicts) = h
+            .join()
+            .map_err(|_| Error::Protocol("rank-loss thread panicked (see stderr)".into()))??;
+        if rank == VICTIM {
+            victim_iters = iters;
+        } else {
+            survivor_iters.push(iters);
+            false_verdicts += verdicts;
+        }
+    }
+    Ok(RankLossRow {
+        termination,
+        false_verdicts,
+        survivor_iters,
+        victim_iters,
+        wall: t0.elapsed(),
+    })
+}
+
+pub fn print_rank_loss(rows: &[RankLossRow]) {
+    println!("\nE9b — rank loss mid-detection ({LOSS_RANKS} ranks, victim dies at iter {LOSS_DEATH_ITER})");
+    let mut t = Table::new(&[
+        "termination", "false verdicts", "survivor iters", "victim iters", "wall",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.termination.name().into(),
+            format!("{}", r.false_verdicts),
+            r.survivor_iters
+                .iter()
+                .map(|i| i.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{}", r.victim_iters),
+            fmt_secs(r.wall),
+        ]);
+    }
+    t.print();
 }
 
 pub fn print(rows: &[FaultRow]) {

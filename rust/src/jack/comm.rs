@@ -60,6 +60,7 @@ use super::async_comm::AsyncComm;
 use super::buffers::BufferSet;
 use super::norm::NormKind;
 use super::spanning_tree::{self, SpanningTree};
+use super::steer::{SteerCommand, SteerHandle, TAG_STEER};
 use super::sync_comm::SyncComm;
 use super::sync_conv::SyncConv;
 use super::termination::{
@@ -185,6 +186,26 @@ pub enum StepOutcome {
     Stop,
     /// Abort the loop with an error (e.g. a compute-backend failure).
     Abort(Error),
+}
+
+/// What one [`JackComm::iterate_step`] call decided — the steered
+/// runner's per-iteration verdict, folding the termination protocol's
+/// state together with the live-steering control plane
+/// ([`super::steer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepState {
+    /// Keep iterating.
+    Continue,
+    /// The termination detector decided global convergence (or the
+    /// compute closure returned [`StepOutcome::Stop`]).
+    Done,
+    /// A [`SteerCommand::Cancel`] was applied: exit cooperatively,
+    /// keeping the current iterate.
+    Cancelled,
+    /// A [`SteerCommand::Kill`] named this rank as victim: park the
+    /// partition for the designee ([`SteerHandle::park_handoff`]) and
+    /// stop driving this communicator.
+    Handoff,
 }
 
 /// Result of one [`JackComm::iterate`] run.
@@ -313,6 +334,7 @@ impl<T: Transport, S: Scalar, P> JackBuilder<T, S, P> {
             async_comm: None,
             sync_conv: Some(sync_conv),
             async_conv: None,
+            steer: None,
             metrics: RankMetrics::default(),
             trace: Trace::disabled(),
         }
@@ -479,6 +501,24 @@ impl<T: Transport, S: Scalar> JackBuilder<T, S, Ready> {
 // The communicator
 // ---------------------------------------------------------------------
 
+/// Per-communicator live-steering state (attached via
+/// [`JackComm::attach_steer`]). The hub is shared with the driver; the
+/// rest is this rank's local view of the control plane.
+struct SteerState {
+    hub: SteerHandle,
+    /// Last steering epoch applied on this rank.
+    epoch: u64,
+    /// Commands applied since the last [`JackComm::take_steer_events`]
+    /// drain (the runner consumes these to act on `ScaleRhs`).
+    events: Vec<SteerCommand>,
+    cancelled: bool,
+    /// `Some(designee)` once a `Kill` named this rank as victim.
+    handoff: Option<usize>,
+    /// Live threshold from the last `SetThreshold`, overriding
+    /// [`IterateOpts::threshold`] for `lconv` arming.
+    threshold_override: Option<f64>,
+}
+
 /// The JACK2 communicator, generic over the [`Transport`] backend and
 /// the payload [`Scalar`] width.
 pub struct JackComm<T: Transport, S: Scalar = f64> {
@@ -496,6 +536,7 @@ pub struct JackComm<T: Transport, S: Scalar = f64> {
     async_comm: Option<AsyncComm<T>>,
     sync_conv: Option<SyncConv>,
     async_conv: Option<Box<dyn TerminationProtocol<T, S>>>,
+    steer: Option<SteerState>,
     /// Counters for the experiment harnesses.
     pub metrics: RankMetrics,
     /// Optional protocol event trace.
@@ -722,6 +763,225 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
         Ok(())
     }
 
+    // -----------------------------------------------------------------
+    // Live steering (see `jack::steer` for the control-plane design)
+    // -----------------------------------------------------------------
+
+    /// Attach a live-steering control plane to this communicator.
+    ///
+    /// Asynchronous mode only: steering reconfigures ranks at *their own*
+    /// iterate boundaries, which a synchronous solve's collective
+    /// receives and norm reductions would deadlock against. Call on every
+    /// rank of the solve with clones of the same [`SteerHandle`]; rank 0
+    /// (the spanning-tree root) drains the driver's commands and
+    /// broadcasts them down the tree, everyone else receives and
+    /// forwards.
+    pub fn attach_steer(&mut self, hub: SteerHandle) -> Result<()> {
+        if self.mode != Mode::Asynchronous {
+            return Err(Error::Config(
+                "live steering requires asynchronous mode (a synchronous \
+                 solve's collective recv/reduce would block across the \
+                 reconfiguration boundary)"
+                    .into(),
+            ));
+        }
+        self.steer = Some(SteerState {
+            hub,
+            epoch: 0,
+            events: Vec::new(),
+            cancelled: false,
+            handoff: None,
+            threshold_override: None,
+        });
+        Ok(())
+    }
+
+    /// Drain and apply pending steering commands at an iterate boundary.
+    ///
+    /// Root: pops driver-posted commands from the hub, stamps each with a
+    /// fresh epoch and broadcasts `[epoch, opcode, arg0, arg1]` to its
+    /// spanning-tree children on [`TAG_STEER`]. Non-root: receives from
+    /// the parent, forwards to children, applies. Applying a command
+    /// fences the termination detector at `epoch << 32`
+    /// ([`SteerCommand::fence_round`]) and resets the residual norm and
+    /// `lconv` — the convergence problem changed, so detection restarts.
+    /// No-op when no control plane is attached.
+    pub fn poll_steer(&mut self) -> Result<()> {
+        let Self {
+            ep,
+            tree,
+            steer,
+            async_conv,
+            res_norm,
+            lconv,
+            ..
+        } = self;
+        let Some(st) = steer.as_mut() else {
+            return Ok(());
+        };
+        let conv = async_conv.as_mut().expect("steering implies async mode");
+        let my_rank = ep.rank();
+        if tree.is_root() {
+            while let Some(cmd) = st.hub.pop() {
+                let epoch = st.hub.next_epoch();
+                let wire = cmd.encode(epoch);
+                for &c in &tree.children {
+                    ep.isend_copy(c, TAG_STEER, &wire)?;
+                }
+                Self::apply_steer(st, conv.as_mut(), res_norm, lconv, epoch, cmd, my_rank);
+            }
+        } else if let Some(p) = tree.parent {
+            while let Some(msg) = ep.try_match(p, TAG_STEER) {
+                let (epoch, cmd) = SteerCommand::decode(&msg)?;
+                drop(msg); // recycle before fanning out
+                let wire = cmd.encode(epoch);
+                for &c in &tree.children {
+                    ep.isend_copy(c, TAG_STEER, &wire)?;
+                }
+                Self::apply_steer(st, conv.as_mut(), res_norm, lconv, epoch, cmd, my_rank);
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_steer(
+        st: &mut SteerState,
+        conv: &mut dyn TerminationProtocol<T, S>,
+        res_norm: &mut f64,
+        lconv: &mut bool,
+        epoch: u64,
+        cmd: SteerCommand,
+        my_rank: usize,
+    ) {
+        st.epoch = epoch;
+        conv.fence(SteerCommand::fence_round(epoch));
+        *res_norm = f64::INFINITY;
+        *lconv = false;
+        match cmd {
+            SteerCommand::SetThreshold(t) => {
+                st.threshold_override = Some(t);
+                conv.set_threshold(t);
+            }
+            SteerCommand::ScaleRhs(_) => {} // the runner rescales the worker
+            SteerCommand::Cancel => st.cancelled = true,
+            SteerCommand::Kill { victim, designee } => {
+                if victim == my_rank {
+                    st.handoff = Some(designee);
+                    obs::instant(EventKind::Handoff, victim as u64, designee as u64);
+                }
+            }
+        }
+        st.events.push(cmd);
+        obs::instant(EventKind::SteerApply, cmd.opcode(), epoch);
+    }
+
+    /// Drain the commands applied on this rank since the last call (the
+    /// steered runner acts on `ScaleRhs` here, rescaling its worker's
+    /// right-hand side before the next compute).
+    pub fn take_steer_events(&mut self) -> Vec<SteerCommand> {
+        self.steer
+            .as_mut()
+            .map(|s| std::mem::take(&mut s.events))
+            .unwrap_or_default()
+    }
+
+    /// True once a [`SteerCommand::Cancel`] has been applied on this rank.
+    pub fn steer_cancelled(&self) -> bool {
+        self.steer.as_ref().is_some_and(|s| s.cancelled)
+    }
+
+    /// `Some(designee)` once a [`SteerCommand::Kill`] named this rank as
+    /// victim.
+    pub fn steer_handoff(&self) -> Option<usize> {
+        self.steer.as_ref().and_then(|s| s.handoff)
+    }
+
+    /// The live threshold from the last [`SteerCommand::SetThreshold`]
+    /// applied on this rank, if any (overrides
+    /// [`IterateOpts::threshold`]).
+    pub fn steer_threshold(&self) -> Option<f64> {
+        self.steer.as_ref().and_then(|s| s.threshold_override)
+    }
+
+    /// Last steering epoch applied on this rank (0 before any command).
+    pub fn steer_epoch(&self) -> u64 {
+        self.steer.as_ref().map_or(0, |s| s.epoch)
+    }
+
+    /// Clear the handoff marker after a designee adopts this partition —
+    /// the communicator resumes iterating under its new owner thread.
+    pub fn steer_adopt(&mut self) {
+        if let Some(st) = self.steer.as_mut() {
+            st.handoff = None;
+        }
+    }
+
+    /// One asynchronous iteration under external loop control — the
+    /// steered runner's building block (one recv / compute / send /
+    /// detect cycle; [`Self::iterate`] is this in a loop, minus
+    /// steering).
+    ///
+    /// The caller owns the loop so it can interleave several logical
+    /// ranks on one thread (partition handoff) and act on steering
+    /// events between iterations. Call [`Self::poll_steer`] and drain
+    /// [`Self::take_steer_events`] *before* each `iterate_step` so a
+    /// fenced detector never harvests a residual computed against the
+    /// pre-steer problem. As with [`Self::iterate`], write iteration-0
+    /// boundary data to the send buffers and post one [`Self::send`]
+    /// before the first call.
+    ///
+    /// Asynchronous mode only (steering and handoff both rely on
+    /// never-blocking communication).
+    pub fn iterate_step<F>(&mut self, opts: &IterateOpts, step: F) -> Result<StepState>
+    where
+        F: FnOnce(ComputeView<'_, S>) -> StepOutcome,
+    {
+        if self.mode != Mode::Asynchronous {
+            return Err(Error::Config(
+                "iterate_step requires asynchronous mode".into(),
+            ));
+        }
+        if self.steer_cancelled() {
+            return Ok(StepState::Cancelled);
+        }
+        if self.steer_handoff().is_some() {
+            return Ok(StepState::Handoff);
+        }
+        if self.terminated() {
+            return Ok(StepState::Done);
+        }
+        self.recv()?;
+        let obs_compute = obs::span(EventKind::Compute, self.metrics.iterations, 0);
+        let t0 = Instant::now();
+        let outcome = step(self.compute_view());
+        self.metrics.compute_time += t0.elapsed();
+        drop(obs_compute);
+        let stop = match outcome {
+            StepOutcome::Continue => false,
+            StepOutcome::Stop => true,
+            StepOutcome::Abort(e) => return Err(e),
+        };
+        self.send()?;
+        if opts.detect {
+            let threshold = self.steer_threshold().unwrap_or(opts.threshold);
+            let lconv = self.local_residual_norm() < threshold;
+            self.set_local_convergence(lconv);
+            self.update_residual()?;
+        } else {
+            self.metrics.iterations += 1;
+        }
+        if self.tree.is_root() {
+            if let Some(st) = self.steer.as_ref() {
+                st.hub.bump_root_iters();
+            }
+        }
+        if stop || self.terminated() {
+            Ok(StepState::Done)
+        } else {
+            Ok(StepState::Continue)
+        }
+    }
+
     /// `Send()` of Listing 6.
     pub fn send(&mut self) -> Result<()> {
         let _obs = obs::span(EventKind::HaloSend, self.metrics.iterations, 0);
@@ -869,6 +1129,16 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
         let mut iterations = 0u64;
         let mut stopped = false;
         loop {
+            if self.steer.is_some() {
+                // Live-steering boundary: apply pending commands before
+                // deciding anything about this iteration (a fence resets
+                // the termination state the `done` check reads).
+                self.poll_steer()?;
+                if self.steer_cancelled() {
+                    stopped = true;
+                    break;
+                }
+            }
             let done = match self.mode {
                 Mode::Asynchronous => self.terminated(),
                 Mode::Synchronous => self.res_norm < opts.threshold,
@@ -896,11 +1166,17 @@ impl<T: Transport, S: Scalar> JackComm<T, S> {
                 self.wait_sends();
             }
             if opts.detect {
-                let lconv = self.local_residual_norm() < opts.threshold;
+                let threshold = self.steer_threshold().unwrap_or(opts.threshold);
+                let lconv = self.local_residual_norm() < threshold;
                 self.set_local_convergence(lconv);
                 self.update_residual()?;
             } else {
                 self.metrics.iterations += 1;
+            }
+            if self.tree.is_root() {
+                if let Some(st) = self.steer.as_ref() {
+                    st.hub.bump_root_iters();
+                }
             }
             iterations += 1;
             if stop {

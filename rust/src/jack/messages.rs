@@ -41,6 +41,9 @@ pub const TAG_NORM_SYNC_RESULT: Tag = 0x71;
 /// `[round, stage, flag, partial]` (arXiv:1907.01201; see
 /// [`crate::jack::termination::recursive_doubling`]).
 pub const TAG_RD_EXCHANGE: Tag = 0x90;
+/// Live-steering control broadcast, parent → children on the spanning
+/// tree: `[epoch, opcode, arg0, arg1]` (see [`crate::jack::steer`]).
+pub const TAG_STEER: Tag = 0xA0;
 
 /// Per-parallel-link plain-data tag: the k-th link a rank has to the
 /// *same* peer sends on a distinct tag so the streams cannot alias per
@@ -95,6 +98,7 @@ mod tests {
             TAG_NORM_SYNC,
             TAG_NORM_SYNC_RESULT,
             TAG_RD_EXCHANGE,
+            TAG_STEER,
         ];
         let mut s = tags.to_vec();
         s.sort_unstable();

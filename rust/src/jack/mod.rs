@@ -39,6 +39,7 @@ pub mod comm;
 pub mod messages;
 pub mod norm;
 pub mod spanning_tree;
+pub mod steer;
 pub mod sync_comm;
 pub mod sync_conv;
 pub mod termination;
@@ -52,10 +53,11 @@ pub use buffers::BufferSet;
 pub use coalesce::{CoalescePlan, LinkGroup};
 pub use comm::{
     AsyncConfig, ComputeView, IterateOpts, IterateReport, JackBuilder, JackComm, Mode, Ready,
-    StepOutcome, Uninit, WithBuffers, WithResidual,
+    StepOutcome, StepState, Uninit, WithBuffers, WithResidual,
 };
 pub use norm::{NormKind, NormPending};
 pub use spanning_tree::SpanningTree;
+pub use steer::{SteerCommand, SteerHandle};
 pub use sync_comm::SyncComm;
 pub use sync_conv::SyncConv;
 pub use termination::{

@@ -1,0 +1,327 @@
+//! Live steering of an in-flight solve — the control plane behind
+//! `repro serve`'s `{"steer":...}` verb and the solver's steered runner.
+//!
+//! A *steering command* reconfigures a running asynchronous solve at an
+//! iterate boundary: tighten (or relax) the convergence threshold,
+//! rescale the right-hand side, request cooperative cancellation, or
+//! hand a rank's partition off to a designated neighbour (rank-dropout
+//! tolerance). Commands ride the same [`crate::transport::Transport`]
+//! machinery as iteration data — pooled 4-word control messages on the
+//! reserved [`TAG_STEER`] tag, broadcast down the convergence-detection
+//! spanning tree by the root.
+//!
+//! ## Epoch fencing
+//!
+//! Every applied command opens a new **steering epoch**. The key
+//! difficulty is that each termination detector holds mid-flight round
+//! state (partials, snapshot faces, lockstep stages) that describes the
+//! *old* convergence problem; a threshold or RHS change must not let a
+//! stale round terminate the new one. Each epoch therefore *fences* the
+//! detector at the globally agreed round
+//!
+//! ```text
+//! F(epoch) = epoch << 32
+//! ```
+//!
+//! which every rank computes locally from the epoch stamped on the wire
+//! — no coordination round needed. `F` is strictly greater than any
+//! in-flight round (a solve completes far fewer than 2³² detection
+//! rounds per epoch), so the detectors' existing round-monotonicity
+//! machinery classifies every pre-fence control message as stale and
+//! every post-fence one as current; see
+//! [`TerminationProtocol::fence`](crate::jack::termination::TerminationProtocol::fence).
+//!
+//! ## The hub
+//!
+//! [`SteerHandle`] is the in-process rendezvous between a driver (the
+//! solve service, a test script, the NDJSON verb) and the rank running
+//! the spanning-tree root: the driver [`post`](SteerHandle::post)s
+//! commands, the root drains them at its next iterate boundary, stamps
+//! the epoch and broadcasts. The same hub carries the handoff mailbox
+//! used by the steered runner when a [`SteerCommand::Kill`] victim parks
+//! its partition for the designee to adopt.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use crate::jack::messages::TAG_STEER;
+use crate::error::{Error, Result};
+
+/// One live-steering command, applied at the next iterate boundary of
+/// every rank (root first, then down the spanning tree).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SteerCommand {
+    /// Change the convergence threshold: both the local-convergence
+    /// arming level and the detector's global verdict level.
+    SetThreshold(f64),
+    /// Multiply the problem's right-hand side by the factor (the solve
+    /// re-converges to the rescaled system's solution).
+    ScaleRhs(f64),
+    /// Cooperative cancellation: every rank exits its iterate loop at
+    /// the next boundary, keeping its current iterate.
+    Cancel,
+    /// Rank dropout: `victim` stops iterating and parks its partition in
+    /// the hub's handoff mailbox; `designee` adopts and interleaves it.
+    /// The victim must not be the spanning-tree root (rank 0), which
+    /// owns the steer broadcast itself.
+    Kill { victim: usize, designee: usize },
+}
+
+impl SteerCommand {
+    /// Wire opcode (word 1 of the 4-word control message).
+    pub fn opcode(&self) -> u64 {
+        match self {
+            SteerCommand::SetThreshold(_) => 1,
+            SteerCommand::ScaleRhs(_) => 2,
+            SteerCommand::Cancel => 3,
+            SteerCommand::Kill { .. } => 4,
+        }
+    }
+
+    /// Encode as the `[epoch, opcode, arg0, arg1]` wire words (exact:
+    /// epochs, opcodes and ranks stay far below 2^53; thresholds and
+    /// scale factors ride as themselves).
+    pub fn encode(&self, epoch: u64) -> [f64; 4] {
+        let (a0, a1) = match *self {
+            SteerCommand::SetThreshold(t) => (t, 0.0),
+            SteerCommand::ScaleRhs(k) => (k, 0.0),
+            SteerCommand::Cancel => (0.0, 0.0),
+            SteerCommand::Kill { victim, designee } => (victim as f64, designee as f64),
+        };
+        [epoch as f64, self.opcode() as f64, a0, a1]
+    }
+
+    /// Decode the wire words back into `(epoch, command)`.
+    pub fn decode(wire: &[f64]) -> Result<(u64, SteerCommand)> {
+        if wire.len() < 4 {
+            return Err(Error::Protocol(format!(
+                "steer message has {} words, want 4",
+                wire.len()
+            )));
+        }
+        let epoch = wire[0] as u64;
+        let cmd = match wire[1] as u64 {
+            1 => SteerCommand::SetThreshold(wire[2]),
+            2 => SteerCommand::ScaleRhs(wire[2]),
+            3 => SteerCommand::Cancel,
+            4 => SteerCommand::Kill {
+                victim: wire[2] as usize,
+                designee: wire[3] as usize,
+            },
+            op => return Err(Error::Protocol(format!("unknown steer opcode {op}"))),
+        };
+        Ok((epoch, cmd))
+    }
+
+    /// The fence round every detector jumps to when this command's epoch
+    /// is applied (see the module docs).
+    pub fn fence_round(epoch: u64) -> u64 {
+        epoch << 32
+    }
+}
+
+/// What the root has actually *applied* so far — the effective problem
+/// the steered solve is converging to. Commands are recorded when the
+/// root dequeues them (every dequeued command is broadcast and applied
+/// at that same boundary), so a posted-but-never-drained command — e.g.
+/// scripted after the solve already converged — does not distort how
+/// the final report is graded.
+#[derive(Default)]
+struct AppliedLog {
+    /// Last applied [`SteerCommand::SetThreshold`].
+    threshold: Option<f64>,
+    /// Product of all applied [`SteerCommand::ScaleRhs`] factors; `None`
+    /// until the first one lands (so the identity is distinguishable
+    /// from "scaled by exactly 1.0").
+    rhs_scale: Option<f64>,
+}
+
+/// Shared state behind a [`SteerHandle`].
+#[derive(Default)]
+struct SteerHub {
+    /// Driver-posted commands awaiting the root's next iterate boundary.
+    inbox: Mutex<VecDeque<SteerCommand>>,
+    /// Epochs opened so far (the root stamps `epoch + 1` per command).
+    epoch: AtomicU64,
+    /// Iterations completed by the spanning-tree root — the script
+    /// driver's clock for "after N iterations, steer".
+    root_iters: AtomicU64,
+    /// Commands the root has dequeued (and therefore applied).
+    applied: Mutex<AppliedLog>,
+    /// Parked partitions from [`SteerCommand::Kill`] victims, keyed by
+    /// designee rank. The payload is the steered runner's slot type,
+    /// opaque here (`Box<dyn Any>`) so the hub stays monomorphization-
+    /// free.
+    handoff: Mutex<Vec<(usize, Box<dyn Any + Send>)>>,
+}
+
+/// Cloneable driver/rank handle to one solve's steering control plane.
+///
+/// The driver side posts commands and reads the root-iteration clock;
+/// the library side (rank 0's [`crate::jack::JackComm`]) drains the
+/// inbox and stamps epochs. All methods are lock-cheap and none block.
+#[derive(Clone, Default)]
+pub struct SteerHandle(Arc<SteerHub>);
+
+impl SteerHandle {
+    /// A fresh control plane (one per steered solve).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue a command for the root's next iterate boundary.
+    pub fn post(&self, cmd: SteerCommand) {
+        self.0.inbox.lock().unwrap().push_back(cmd);
+        crate::obs::instant(crate::obs::EventKind::SteerPost, cmd.opcode(), 0);
+    }
+
+    /// Epochs opened so far (0 until the first command is applied).
+    pub fn epoch(&self) -> u64 {
+        self.0.epoch.load(Ordering::Acquire)
+    }
+
+    /// Iterations completed by the spanning-tree root.
+    pub fn root_iters(&self) -> u64 {
+        self.0.root_iters.load(Ordering::Acquire)
+    }
+
+    /// Pop the oldest queued command (root side). The root broadcasts
+    /// and applies every command it pops, so popping also records the
+    /// command in the applied log that grades the final report.
+    pub fn pop(&self) -> Option<SteerCommand> {
+        let cmd = self.0.inbox.lock().unwrap().pop_front();
+        if let Some(c) = cmd {
+            let mut log = self.0.applied.lock().unwrap();
+            match c {
+                SteerCommand::SetThreshold(t) => log.threshold = Some(t),
+                SteerCommand::ScaleRhs(f) => {
+                    log.rhs_scale = Some(log.rhs_scale.unwrap_or(1.0) * f)
+                }
+                SteerCommand::Cancel | SteerCommand::Kill { .. } => {}
+            }
+        }
+        cmd
+    }
+
+    /// The last *applied* threshold change, if any — the effective
+    /// convergence target of the steered solve.
+    pub fn applied_threshold(&self) -> Option<f64> {
+        self.0.applied.lock().unwrap().threshold
+    }
+
+    /// Product of all *applied* RHS scale factors (1.0 if none landed).
+    pub fn applied_rhs_scale(&self) -> f64 {
+        self.0.applied.lock().unwrap().rhs_scale.unwrap_or(1.0)
+    }
+
+    /// Open the next epoch and return its number (root side).
+    pub fn next_epoch(&self) -> u64 {
+        self.0.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Root-side iteration tick.
+    pub fn bump_root_iters(&self) {
+        self.0.root_iters.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Park a killed rank's partition for `designee` to adopt.
+    pub fn park_handoff(&self, designee: usize, slot: Box<dyn Any + Send>) {
+        self.0.handoff.lock().unwrap().push((designee, slot));
+    }
+
+    /// Claim every partition parked for `designee` (adoption order is
+    /// park order).
+    pub fn claim_handoffs(&self, designee: usize) -> Vec<Box<dyn Any + Send>> {
+        let mut parked = self.0.handoff.lock().unwrap();
+        let mut mine = Vec::new();
+        let mut rest = Vec::new();
+        for (d, slot) in parked.drain(..) {
+            if d == designee {
+                mine.push(slot);
+            } else {
+                rest.push((d, slot));
+            }
+        }
+        *parked = rest;
+        mine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commands_roundtrip_the_wire() {
+        let cmds = [
+            SteerCommand::SetThreshold(2.5e-9),
+            SteerCommand::ScaleRhs(0.75),
+            SteerCommand::Cancel,
+            SteerCommand::Kill {
+                victim: 3,
+                designee: 1,
+            },
+        ];
+        for (i, cmd) in cmds.iter().enumerate() {
+            let epoch = (i as u64) + 1;
+            let wire = cmd.encode(epoch);
+            let (e, back) = SteerCommand::decode(&wire).unwrap();
+            assert_eq!(e, epoch);
+            assert_eq!(back, *cmd);
+        }
+        assert!(SteerCommand::decode(&[1.0, 99.0, 0.0, 0.0]).is_err());
+        assert!(SteerCommand::decode(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn fence_rounds_dominate_in_epoch_rounds() {
+        // Any round a detector can reach within an epoch (< 2^32) is
+        // strictly below the next epoch's fence.
+        assert_eq!(SteerCommand::fence_round(1), 1 << 32);
+        assert!(SteerCommand::fence_round(1) > u32::MAX as u64);
+        assert!(SteerCommand::fence_round(2) > SteerCommand::fence_round(1) + u32::MAX as u64);
+    }
+
+    #[test]
+    fn hub_inbox_epochs_and_handoff() {
+        let h = SteerHandle::new();
+        assert_eq!(h.epoch(), 0);
+        assert!(h.pop().is_none());
+        h.post(SteerCommand::Cancel);
+        h.post(SteerCommand::ScaleRhs(2.0));
+        assert_eq!(h.pop(), Some(SteerCommand::Cancel));
+        assert_eq!(h.next_epoch(), 1);
+        assert_eq!(h.pop(), Some(SteerCommand::ScaleRhs(2.0)));
+        assert_eq!(h.next_epoch(), 2);
+        assert_eq!(h.epoch(), 2);
+        assert!(h.pop().is_none());
+
+        // The applied log tracks what was *popped*, not what was posted.
+        assert_eq!(h.applied_threshold(), None);
+        assert_eq!(h.applied_rhs_scale(), 2.0);
+        h.post(SteerCommand::SetThreshold(1e-9));
+        h.post(SteerCommand::ScaleRhs(0.5));
+        assert_eq!(h.applied_threshold(), None); // posted, not yet popped
+        h.pop();
+        h.pop();
+        assert_eq!(h.applied_threshold(), Some(1e-9));
+        assert_eq!(h.applied_rhs_scale(), 1.0);
+
+        h.bump_root_iters();
+        h.bump_root_iters();
+        assert_eq!(h.root_iters(), 2);
+
+        h.park_handoff(1, Box::new(42usize));
+        h.park_handoff(2, Box::new(7usize));
+        assert!(h.claim_handoffs(0).is_empty());
+        let mine = h.claim_handoffs(1);
+        assert_eq!(mine.len(), 1);
+        assert_eq!(*mine[0].downcast_ref::<usize>().unwrap(), 42);
+        // rank 2's parked slot survived rank 1's claim
+        let other = h.claim_handoffs(2);
+        assert_eq!(other.len(), 1);
+        assert_eq!(*other[0].downcast_ref::<usize>().unwrap(), 7);
+    }
+}

@@ -103,6 +103,10 @@ pub struct AsyncConv<S: Scalar = f64> {
     /// Norm partial per child for the current round.
     child_partial: Vec<Option<f64>>,
     pending_partials: HashMap<(u64, usize), f64>,
+    /// Early verdicts for future rounds: round → (norm, terminated).
+    /// (Defensive: the convergecast cannot complete a round ahead of a
+    /// contributor, but steering fences make "ahead" cheap to tolerate.)
+    pending_verdicts: HashMap<u64, (f64, bool)>,
     sent_partial: bool,
 
     /// Latest completed-round outcome.
@@ -127,9 +131,16 @@ impl<S: Scalar> AsyncConv<S> {
             own_partial: None,
             child_partial: vec![None; n_children],
             pending_partials: HashMap::new(),
+            pending_verdicts: HashMap::new(),
             sent_partial: false,
             verdict: None,
         }
+    }
+
+    /// Adopt a new verdict threshold (live steering; only meaningful on
+    /// the root, which makes the decision, but harmless everywhere).
+    pub fn set_threshold(&mut self, threshold: f64) {
+        self.threshold = threshold;
     }
 
     pub fn terminated(&self) -> bool {
@@ -342,17 +353,13 @@ impl<S: Scalar> AsyncConv<S> {
                 // stale rounds dropped
             }
         }
-        // Verdict from the parent.
+        // Verdict from the parent. Forward down unconditionally (each
+        // descendant classifies by its own round), then apply only a
+        // current-round verdict: stale verdicts (this rank fenced past
+        // them — see `fence`) are dropped, ahead-of-round ones buffered.
         if let Some(p) = self.tree.parent {
             while let Some(msg) = ep.try_match(p, TAG_TERM) {
                 let r = msg[0] as u64;
-                if r != self.round {
-                    return Err(Error::Protocol(format!(
-                        "rank {}: verdict for round {r} while in round {}",
-                        ep.rank(),
-                        self.round
-                    )));
-                }
                 let norm = msg[1];
                 let terminated = msg[2] != 0.0;
                 let flag = if terminated { 1.0 } else { 0.0 };
@@ -360,11 +367,21 @@ impl<S: Scalar> AsyncConv<S> {
                 for &c in &self.tree.children {
                     ep.isend_copy(c, TAG_TERM, &[r as f64, norm, flag])?;
                 }
-                self.finish_round(norm, terminated, trace);
-                if terminated {
-                    return Ok(());
+                if r > self.round {
+                    self.pending_verdicts.insert(r, (norm, terminated));
+                } else if r == self.round {
+                    self.finish_round(norm, terminated, trace);
+                    if terminated {
+                        return Ok(());
+                    }
                 }
+                // r < self.round: stale — forwarded, dropped.
             }
+        }
+        // A buffered verdict may have become current (already forwarded
+        // when it arrived).
+        if let Some((norm, terminated)) = self.pending_verdicts.remove(&self.round) {
+            self.finish_round(norm, terminated, trace);
         }
         Ok(())
     }
@@ -376,6 +393,21 @@ impl<S: Scalar> AsyncConv<S> {
     pub fn reopen(&mut self) {
         debug_assert!(self.terminated(), "reopen is for terminated detectors");
         self.verdict = None;
+        self.reset_round_state();
+    }
+
+    /// Steering-epoch fence (see [`crate::jack::steer`]): abandon the
+    /// mid-flight round — its snapshot, partials and verdict describe
+    /// the pre-steer convergence problem — and resume detection at
+    /// `fence_round`. Unlike [`Self::reopen`], callable while not
+    /// terminated; every rank fences to the same round, so the
+    /// round-monotonicity machinery classifies all pre-fence control
+    /// traffic as stale.
+    pub fn fence(&mut self, fence_round: u64) {
+        self.verdict = None;
+        if fence_round > self.round {
+            self.round = fence_round - 1; // reset_round_state advances by 1
+        }
         self.reset_round_state();
     }
 
@@ -420,6 +452,7 @@ impl<S: Scalar> AsyncConv<S> {
         }
         self.pending_faces.retain(|(r, _), _| *r > round);
         self.pending_partials.retain(|(r, _), _| *r > round);
+        self.pending_verdicts.retain(|r, _| *r >= round);
     }
 }
 
@@ -441,6 +474,28 @@ mod tests {
         assert!(!c.terminated());
         c.finish_round(1e-9, true, &mut trace);
         assert!(c.terminated());
+    }
+
+    #[test]
+    fn fence_jumps_rounds_and_clears_mid_flight_state() {
+        let tree = SpanningTree::solo();
+        let mut c = AsyncConv::<f64>::new(NormKind::Max, 1e-6, tree, 0);
+        let mut trace = Trace::disabled();
+        c.finish_round(0.5, false, &mut trace);
+        assert_eq!(c.round(), 2);
+        // Fence while NOT terminated (mid-flight round abandoned).
+        c.ss_taken = true;
+        c.sent_notify = true;
+        c.fence(1 << 32);
+        assert_eq!(c.round(), 1 << 32);
+        assert!(!c.terminated());
+        assert!(!c.ss_taken && !c.sent_notify, "round state discarded");
+        // Fence past a terminated verdict reopens detection.
+        c.finish_round(1e-9, true, &mut trace);
+        assert!(c.terminated());
+        c.fence(2 << 32);
+        assert!(!c.terminated());
+        assert_eq!(c.round(), 2 << 32);
     }
 
     #[test]

@@ -221,6 +221,35 @@ pub trait TerminationProtocol<T: Transport, S: Scalar = f64>: Send {
     /// but correctness must not depend on it.
     fn reopen(&mut self) {}
 
+    /// Steering-epoch fence ([`crate::jack::steer`]): abandon any
+    /// mid-flight round — the convergence problem just changed under the
+    /// detector — and resume detection at round `fence_round`, a value
+    /// every rank computes identically from the steering epoch and that
+    /// strictly exceeds any round reachable within the previous epoch.
+    /// Unlike [`reopen`], the detector need not be terminated: partial
+    /// rounds are discarded, control messages from rounds below the
+    /// fence become stale (drop/forward, never apply), and a post-fence
+    /// verdict requires a fresh detection run. The default delegates to
+    /// `reopen`, which is correct for detectors without round state.
+    ///
+    /// [`reopen`]: TerminationProtocol::reopen
+    fn fence(&mut self, fence_round: u64) {
+        let _ = fence_round;
+        self.reopen();
+    }
+
+    /// Live threshold change ([`SteerCommand::SetThreshold`]): detectors
+    /// that decide the global verdict against their own threshold (the
+    /// snapshot protocol) adopt the new value here. Detectors whose
+    /// verdict is purely a fold of the ranks' `lconv` flags (persistence,
+    /// recursive doubling) need nothing — the iterate loop arms `lconv`
+    /// at the steered threshold — so the default is a no-op.
+    ///
+    /// [`SteerCommand::SetThreshold`]: crate::jack::steer::SteerCommand::SetThreshold
+    fn set_threshold(&mut self, threshold: f64) {
+        let _ = threshold;
+    }
+
     /// Short name for reports.
     fn name(&self) -> &'static str;
 }

@@ -41,6 +41,8 @@ pub struct PersistenceProtocol {
     streak: u32,
     round: u64,
     child_reports: HashMap<(u64, usize), (bool, f64)>,
+    /// Early parent verdicts for future rounds: round → (norm, flag).
+    pending_down: HashMap<u64, (f64, bool)>,
     sent_report: bool,
     last_partial: f64,
     verdict: Option<(f64, bool)>,
@@ -55,6 +57,7 @@ impl PersistenceProtocol {
             streak: 0,
             round: 1,
             child_reports: HashMap::new(),
+            pending_down: HashMap::new(),
             sent_report: false,
             last_partial: f64::INFINITY,
             verdict: None,
@@ -88,6 +91,21 @@ impl PersistenceProtocol {
         self.round += 1;
     }
 
+    /// Steering-epoch fence (see [`crate::jack::steer`]): abandon the
+    /// mid-flight probe round and resume at `fence_round` with a fresh
+    /// streak. Every rank fences to the same round, so reports and
+    /// verdicts from rounds below the fence are classified stale by the
+    /// existing round guards.
+    pub fn fence(&mut self, fence_round: u64) {
+        self.verdict = None;
+        self.streak = 0;
+        self.sent_report = false;
+        self.round = fence_round.max(self.round + 1);
+        let round = self.round;
+        self.child_reports.retain(|(r, _), _| *r >= round);
+        self.pending_down.retain(|r, _| *r >= round);
+    }
+
     /// Advance the detector (see the trait docs).
     pub fn poll<T: Transport>(&mut self, ep: &mut T, lconv: bool) -> Result<()> {
         if self.terminated() {
@@ -106,14 +124,25 @@ impl PersistenceProtocol {
                 }
             }
         }
-        // Verdict from parent: [round, norm, flag]
+        // Verdict from parent: [round, norm, flag]. Forward down
+        // unconditionally (descendants classify by their own round), but
+        // apply only a current-round verdict — a stale one (this rank
+        // fenced past it; see `fence`) applied blindly could falsely
+        // terminate the post-fence detection run.
         if let Some(p) = self.tree.parent {
             while let Some(msg) = ep.try_match(p, TAG_PERSIST_DOWN) {
                 let fwd = [msg[0], msg[1], msg[2]];
-                let (norm, term) = (fwd[1], fwd[2] != 0.0);
+                let (r, norm, term) = (fwd[0] as u64, fwd[1], fwd[2] != 0.0);
                 drop(msg); // recycle before fanning out
                 for &c in &self.tree.children {
                     ep.isend_copy(c, TAG_PERSIST_DOWN, &fwd)?;
+                }
+                if r > self.round {
+                    self.pending_down.insert(r, (norm, term));
+                    continue;
+                }
+                if r < self.round {
+                    continue; // stale: forwarded, dropped
                 }
                 self.verdict = Some((norm, term));
                 if term {
@@ -122,6 +151,16 @@ impl PersistenceProtocol {
                 self.round += 1;
                 self.sent_report = false;
             }
+        }
+        // A buffered verdict may have become current (already forwarded
+        // when it arrived).
+        if let Some((norm, term)) = self.pending_down.remove(&self.round) {
+            self.verdict = Some((norm, term));
+            if term {
+                return Ok(());
+            }
+            self.round += 1;
+            self.sent_report = false;
         }
 
         // Report up once per round when all children reported this round.
@@ -210,6 +249,10 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for PersistenceProtocol 
         PersistenceProtocol::reopen(self);
     }
 
+    fn fence(&mut self, fence_round: u64) {
+        PersistenceProtocol::fence(self, fence_round);
+    }
+
     fn name(&self) -> &'static str {
         "persistence"
     }
@@ -247,6 +290,31 @@ mod tests {
         assert_eq!(p.global_norm(), Some(1e-9));
         let as_proto: &dyn TerminationProtocol<crate::simmpi::Endpoint> = &p;
         assert_eq!(as_proto.name(), "persistence");
+    }
+
+    /// ISSUE 10: a fence must demand a fresh streak at the fence round,
+    /// and a stale pre-fence verdict must not re-terminate the detector.
+    #[test]
+    fn persistence_fence_requires_fresh_streak_and_drops_stale_verdicts() {
+        let (_w, mut eps) = crate::simmpi::World::homogeneous(1);
+        let mut ep = eps.pop().unwrap();
+        let mut p = PersistenceProtocol::new(NormKind::Max, SpanningTree::solo(), 3);
+        p.harvest_residual(&[1e-9]);
+        p.poll(&mut ep, true).unwrap();
+        p.poll(&mut ep, true).unwrap();
+        assert_eq!(p.streak, 2, "mid-flight streak");
+        p.fence(1 << 32);
+        assert_eq!(p.round, 1 << 32);
+        assert_eq!(p.streak, 0, "fence clears the streak");
+        assert!(!p.terminated());
+        // A fence past a terminated verdict reopens detection too.
+        for _ in 0..3 {
+            p.poll(&mut ep, true).unwrap();
+        }
+        assert!(p.terminated());
+        p.fence(2 << 32);
+        assert!(!p.terminated());
+        assert_eq!(p.round, 2 << 32);
     }
 
     /// ISSUE 5 satellite regression: a post-reopen verdict must require a

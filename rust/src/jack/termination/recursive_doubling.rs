@@ -154,6 +154,26 @@ impl RecursiveDoublingProtocol {
         // two fresh all-converged rounds.
     }
 
+    /// Steering-epoch fence (see [`crate::jack::steer`]): abandon the
+    /// mid-flight lockstep round and resume at `fence_round`. Every rank
+    /// computes the same fence round from the steering epoch, so the
+    /// lockstep invariant — all ranks exchange the same round numbers —
+    /// is preserved without any coordination; stage messages from
+    /// abandoned rounds fall below the fence and are dropped by the
+    /// existing staleness guard in `drain`.
+    pub fn fence(&mut self, fence_round: u64) {
+        self.verdict = None;
+        self.prev_all = false;
+        self.held = true;
+        self.latched = false;
+        self.stage = 0;
+        self.round = fence_round.max(self.round);
+        let round = self.round;
+        // Entries at or beyond the fence are early messages from peers
+        // that fenced (and latched) first; below it they are abandoned.
+        self.pending.retain(|(r, _), _| *r >= round);
+    }
+
     /// Outgoing partner of stage `k` (see the module docs).
     fn partner_out(&self, stage: u32) -> Rank {
         let hop = 1usize << stage;
@@ -312,6 +332,10 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for RecursiveDoublingPro
         RecursiveDoublingProtocol::reopen(self);
     }
 
+    fn fence(&mut self, fence_round: u64) {
+        RecursiveDoublingProtocol::fence(self, fence_round);
+    }
+
     fn name(&self) -> &'static str {
         "recursive-doubling"
     }
@@ -406,6 +430,37 @@ mod tests {
         assert_eq!(p0.global_norm(), Some(3e-9));
         assert_eq!(p1.global_norm(), Some(3e-9));
         assert_eq!(p0.rounds_completed(), p1.rounds_completed());
+    }
+
+    /// ISSUE 10: fencing mid-round on every rank preserves the lockstep
+    /// invariant — both ranks land on the same fence round, finish the
+    /// solve there, and a fence past a verdict reopens detection.
+    #[test]
+    fn pair_fences_to_common_round_and_redetects() {
+        let cfg = crate::simmpi::WorldConfig::homogeneous(2)
+            .with_network(crate::simmpi::NetworkModel::instant());
+        let (_w, mut eps) = crate::simmpi::World::new(cfg);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let mut p0 = RecursiveDoublingProtocol::new(NormKind::Max, 0, 2);
+        let mut p1 = RecursiveDoublingProtocol::new(NormKind::Max, 1, 2);
+        p0.harvest_residual(&[1e-9f64]);
+        p1.harvest_residual(&[3e-9f64]);
+        // Let rank 0 run ahead mid-round, then fence both (as a steer
+        // broadcast would) and drive to a fresh verdict.
+        p0.poll(&mut e0, true).unwrap();
+        let f = 1u64 << 32;
+        p0.fence(f);
+        p1.fence(f);
+        assert_eq!(p0.round, f);
+        assert_eq!(p1.round, f);
+        for _ in 0..6 {
+            p0.poll(&mut e0, true).unwrap();
+            p1.poll(&mut e1, true).unwrap();
+        }
+        assert!(p0.terminated() && p1.terminated());
+        assert_eq!(p0.global_norm(), p1.global_norm());
+        assert!(p0.round >= f && p1.round >= f);
     }
 
     /// One rank disarmed vetoes the verdict for everyone.

@@ -70,6 +70,14 @@ impl<T: Transport, S: Scalar> TerminationProtocol<T, S> for SnapshotProtocol<S> 
         self.0.reopen();
     }
 
+    fn fence(&mut self, fence_round: u64) {
+        self.0.fence(fence_round);
+    }
+
+    fn set_threshold(&mut self, threshold: f64) {
+        self.0.set_threshold(threshold);
+    }
+
     fn name(&self) -> &'static str {
         "snapshot"
     }

@@ -12,13 +12,17 @@
 //!                  [--speeds 1.0,0.5,...] [--max-iters N] [--json]
 //!                  [--trace out.json]  (Chrome-trace export of the
 //!                  cross-layer event recorder; open in about:tracing)
+//!                  [--elastic]  (tcp only: survive rank-process loss by
+//!                  shrinking the world and re-solving)
 //! repro serve      [--workers 2] [--queue 64] [--listen 127.0.0.1:7070]
 //!                  [--once] [--stats-addr 127.0.0.1:9090]
 //!                  (multi-tenant solve service; NDJSON job specs in,
 //!                  NDJSON reports + tenant summary out; a
 //!                  {"stats":true} input line answers with live service
-//!                  stats; --stats-addr serves Prometheus text over HTTP;
-//!                  stdin mode drains cleanly on SIGINT/SIGTERM)
+//!                  stats and {"steer":{"job":N,...}} steers a running
+//!                  job; --stats-addr serves Prometheus text over HTTP;
+//!                  both stdin and --listen modes drain cleanly on
+//!                  SIGINT/SIGTERM)
 //! repro rank       --join HOST:PORT --rank N [--speed 1.0]
 //!                  (internal: one rank of a --transport tcp solve;
 //!                  spawned by the parent `repro solve` process)
@@ -112,14 +116,18 @@ fn print_usage() {
                     detection protocol; f32 clamps the default threshold\n             \
                     to 1e-4 unless --threshold is given; exits 2 when the\n             \
                     solve does not converge within --max-iters;\n             \
-                    --trace out.json writes a Chrome trace of the run)\n  \
+                    --trace out.json writes a Chrome trace of the run;\n             \
+                    --elastic with --transport tcp shrinks the world and\n             \
+                    re-solves when a rank process dies)\n  \
          serve      multi-tenant solve service: newline-delimited JSON job\n             \
                     specs on stdin (or --listen HOST:PORT; --once for a\n             \
                     single connection), NDJSON reports + per-tenant summary\n             \
                     out; --workers/--queue bound the worker pool and the\n             \
                     admission queue; a {{\"stats\":true}} line answers with\n             \
-                    live stats and --stats-addr HOST:PORT serves Prometheus\n             \
-                    text; stdin mode drains cleanly on SIGINT/SIGTERM;\n             \
+                    live stats, {{\"steer\":{{\"job\":N,\"cancel\":true}}}} (or\n             \
+                    \"threshold\"/\"scale_rhs\") steers a running job, and\n             \
+                    --stats-addr HOST:PORT serves Prometheus text; stdin\n             \
+                    and --listen modes drain cleanly on SIGINT/SIGTERM;\n             \
                     exits 2 on any unconverged/failed/rejected job\n  \
          submit     seeded open-loop load generator against an in-process\n             \
                     service (--count/--rate/--seed/--workers)\n  \
@@ -234,15 +242,27 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
         // convergence target width-appropriate (explicit --threshold wins).
         cfg.threshold = cfg.threshold.max(1e-4);
     }
+    let elastic = flags.contains_key("elastic");
+    if elastic && cfg.transport != TransportKind::Tcp {
+        return Err(Error::Config(
+            "--elastic needs --transport tcp: only the multi-process path \
+             can lose (and drop) whole rank processes"
+                .into(),
+        ));
+    }
     let problem = flags.get("problem").map(String::as_str).unwrap_or("convdiff");
     let converged = match (problem, cfg.precision) {
-        ("convdiff", Precision::F64) => print_solve(flags, &cfg, solve_convdiff::<f64>(&cfg)?)?,
-        ("convdiff", Precision::F32) => print_solve(flags, &cfg, solve_convdiff::<f32>(&cfg)?)?,
+        ("convdiff", Precision::F64) => {
+            print_solve(flags, &cfg, solve_convdiff::<f64>(&cfg, elastic)?)?
+        }
+        ("convdiff", Precision::F32) => {
+            print_solve(flags, &cfg, solve_convdiff::<f32>(&cfg, elastic)?)?
+        }
         ("jacobi" | "jacobi1d", Precision::F64) => {
-            print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg)?)?
+            print_solve(flags, &cfg, solve_jacobi::<f64>(&cfg, elastic)?)?
         }
         ("jacobi" | "jacobi1d", Precision::F32) => {
-            print_solve(flags, &cfg, solve_jacobi::<f32>(&cfg)?)?
+            print_solve(flags, &cfg, solve_jacobi::<f32>(&cfg, elastic)?)?
         }
         (other, _) => {
             return Err(Error::Config(format!(
@@ -264,8 +284,22 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<ExitCode> {
 /// The paper's workload. `--transport tcp` solves take the genuinely
 /// multi-process path (one `repro rank` subprocess per rank over
 /// localhost sockets); everything else runs rank threads in-process.
-fn solve_convdiff<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
+/// `--elastic` survives rank-process loss by shrinking and re-solving
+/// ([`distributed::solve_elastic`]); elastic worlds use a 1-D slab
+/// decomposition so the factory can rebuild them at any rank count.
+fn solve_convdiff<S: Scalar>(cfg: &ExperimentConfig, elastic: bool) -> Result<SolveReport<S>> {
     if cfg.transport == TransportKind::Tcp {
+        if elastic {
+            let base = cfg.clone();
+            let (rep, p) = distributed::solve_elastic(cfg.world_size(), move |p| {
+                let mut c = base.clone();
+                c.process_grid = (p, 1, 1);
+                let problem = ConvDiffProblem::from_config(&c)?;
+                Ok((c, problem))
+            })?;
+            report_final_world(cfg.world_size(), p);
+            return Ok(rep);
+        }
         distributed::solve_spawned(cfg, &ConvDiffProblem::from_config(cfg)?)
     } else {
         solve_experiment::<S>(cfg)
@@ -275,12 +309,29 @@ fn solve_convdiff<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
 /// The second shipped workload through the same `SolverSession` path:
 /// `--n` interior points of the 1-D backward-Euler heat chain, split
 /// over the configured world size.
-fn solve_jacobi<S: Scalar>(cfg: &ExperimentConfig) -> Result<SolveReport<S>> {
-    let problem = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?;
+fn solve_jacobi<S: Scalar>(cfg: &ExperimentConfig, elastic: bool) -> Result<SolveReport<S>> {
     if cfg.transport == TransportKind::Tcp {
-        distributed::solve_spawned(cfg, &problem)
+        if elastic {
+            let base = cfg.clone();
+            let (rep, p) = distributed::solve_elastic(cfg.world_size(), move |p| {
+                let mut c = base.clone();
+                c.process_grid = (p, 1, 1);
+                let problem = Jacobi1D::new(c.n, p, c.dt)?;
+                Ok((c, problem))
+            })?;
+            report_final_world(cfg.world_size(), p);
+            return Ok(rep);
+        }
+        distributed::solve_spawned(cfg, &Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?)
     } else {
+        let problem = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?;
         SolverSession::<S>::builder(cfg).problem(problem).build()?.run()
+    }
+}
+
+fn report_final_world(asked: usize, got: usize) {
+    if got != asked {
+        eprintln!("solve: finished elastically at {got} of {asked} ranks");
     }
 }
 
@@ -395,8 +446,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
     };
     let all_ok = match flags.get("listen") {
         Some(addr) => {
+            // The same SIGINT/SIGTERM latch stdin mode has: on a signal
+            // the accept loop stops taking connections, every job already
+            // accepted through completed connections has been drained by
+            // its serve_stream, and the tenant summary below still
+            // prints. The listener polls non-blocking so a parked
+            // accept() cannot outlive the latch.
+            signal::install();
             let listener = std::net::TcpListener::bind(addr.as_str())
                 .map_err(|e| Error::Config(format!("cannot listen on {addr}: {e}")))?;
+            listener.set_nonblocking(true)?;
             // Report the *bound* address: `--listen 127.0.0.1:0` gets a
             // kernel-assigned port and callers need to learn it.
             let bound = listener
@@ -406,24 +465,40 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<ExitCode> {
             eprintln!("repro serve: listening on {bound}");
             let once = flags.contains_key("once");
             let mut all_ok = true;
-            for conn in listener.incoming() {
-                // One bad connection (accept failure, garbage bytes,
-                // invalid UTF-8) must not take the service down: report
-                // it and keep listening.
-                let served = conn.map_err(Error::from).and_then(|stream| {
-                    let reader = std::io::BufReader::new(stream.try_clone()?);
-                    let mut writer = std::io::BufWriter::new(stream);
-                    serve_stream(&svc, reader, &mut writer)
-                });
-                match served {
-                    Ok(ok) => all_ok &= ok,
+            loop {
+                if signal::triggered() {
+                    eprintln!("repro serve: signal received; draining accepted jobs");
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // One bad connection (garbage bytes, invalid
+                        // UTF-8, reset) must not take the service down:
+                        // report it and keep listening.
+                        let served = (|| {
+                            stream.set_nonblocking(false)?;
+                            let reader = std::io::BufReader::new(stream.try_clone()?);
+                            let mut writer = std::io::BufWriter::new(stream);
+                            serve_stream(&svc, reader, &mut writer)
+                        })();
+                        match served {
+                            Ok(ok) => all_ok &= ok,
+                            Err(e) => {
+                                all_ok = false;
+                                eprintln!("repro serve: connection error: {e}");
+                            }
+                        }
+                        if once {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
                     Err(e) => {
                         all_ok = false;
-                        eprintln!("repro serve: connection error: {e}");
+                        eprintln!("repro serve: accept error: {e}");
                     }
-                }
-                if once {
-                    break;
                 }
             }
             all_ok
@@ -625,7 +700,8 @@ fn serve_stdin<W: Write>(svc: &SolveService, out: &mut W) -> Result<bool> {
 }
 
 /// Handle one input line: a `{"stats":true}` query is answered in place
-/// with the live service stats object; anything else is a job spec to
+/// with the live service stats object, a `{"steer":{...}}` verb posts a
+/// steering command to an accepted job; anything else is a job spec to
 /// submit. Returns false when the line was rejected or unparseable.
 fn handle_line<W: Write>(
     svc: &SolveService,
@@ -642,6 +718,9 @@ fn handle_line<W: Write>(
             writeln!(out, "{}", json::write(&svc.stats().to_json()))?;
             out.flush()?;
             return Ok(true);
+        }
+        if let Some(s) = v.get("steer") {
+            return steer_line(svc, s, tickets, out);
         }
     }
     match JobSpec::parse(line) {
@@ -663,6 +742,94 @@ fn handle_line<W: Write>(
             Ok(false)
         }
     }
+}
+
+/// The `{"steer":{...}}` NDJSON verb: post a live steering command to a
+/// job accepted on this connection. The object names the job and one
+/// command:
+///
+/// ```text
+/// {"steer":{"job":3,"cancel":true}}        cooperative cancellation
+/// {"steer":{"job":3,"threshold":1e-8}}     retarget convergence
+/// {"steer":{"job":3,"scale_rhs":2.0}}      rescale the RHS in flight
+/// ```
+///
+/// The answer line reports whether the command landed (`applied`) — a
+/// queued-job cancel lands too; other commands need the job RUNNING on
+/// the steered path (async, single step). Malformed verbs count against
+/// the connection's exit code; a command that merely missed its job
+/// (already settled) does not.
+fn steer_line<W: Write>(
+    svc: &SolveService,
+    verb: &json::Json,
+    tickets: &[JobTicket],
+    out: &mut W,
+) -> Result<bool> {
+    use jack2::jack::SteerCommand;
+    let answer = |out: &mut W, job: Option<u64>, applied: bool, err: Option<String>| {
+        let mut m = std::collections::BTreeMap::new();
+        if let Some(id) = job {
+            m.insert("steer".to_string(), json::Json::Num(id as f64));
+        }
+        m.insert("applied".to_string(), json::Json::Bool(applied));
+        if let Some(e) = err {
+            m.insert("error".to_string(), json::Json::Str(e));
+        }
+        writeln!(out, "{}", json::write(&json::Json::Obj(m)))?;
+        out.flush()?;
+        Ok::<(), Error>(())
+    };
+    let Some(job_id) = verb.get("job").and_then(json::Json::as_f64) else {
+        answer(out, None, false, Some("steer verb needs a \"job\" id".into()))?;
+        return Ok(false);
+    };
+    let job_id = job_id as u64;
+    let cmd = if matches!(verb.get("cancel"), Some(json::Json::Bool(true))) {
+        Some(SteerCommand::Cancel)
+    } else if let Some(t) = verb.get("threshold").and_then(json::Json::as_f64) {
+        Some(SteerCommand::SetThreshold(t))
+    } else {
+        verb.get("scale_rhs")
+            .and_then(json::Json::as_f64)
+            .map(SteerCommand::ScaleRhs)
+    };
+    let Some(cmd) = cmd else {
+        answer(
+            out,
+            Some(job_id),
+            false,
+            Some("steer verb needs \"cancel\", \"threshold\" or \"scale_rhs\"".into()),
+        )?;
+        return Ok(false);
+    };
+    let bad = match cmd {
+        SteerCommand::SetThreshold(t) if !(t.is_finite() && t > 0.0) => {
+            Some(format!("threshold must be finite and positive ({t})"))
+        }
+        SteerCommand::ScaleRhs(f) if !f.is_finite() || f == 0.0 => {
+            Some(format!("scale_rhs must be finite and nonzero ({f})"))
+        }
+        _ => None,
+    };
+    if let Some(msg) = bad {
+        answer(out, Some(job_id), false, Some(msg))?;
+        return Ok(false);
+    }
+    let Some(ticket) = tickets.iter().find(|t| t.job_id == job_id) else {
+        answer(
+            out,
+            Some(job_id),
+            false,
+            Some("no such job on this connection".into()),
+        )?;
+        return Ok(false);
+    };
+    let applied = match cmd {
+        SteerCommand::Cancel => svc.cancel(ticket),
+        other => svc.steer(ticket, other),
+    };
+    answer(out, Some(job_id), applied, None)?;
+    Ok(true)
 }
 
 /// Emit one report line per accepted job, in submission order.
@@ -811,6 +978,8 @@ fn cmd_staleness() -> Result<()> {
 fn cmd_faults() -> Result<()> {
     let rows = faults::run()?;
     faults::print(&rows);
+    let loss = faults::rank_loss()?;
+    faults::print_rank_loss(&loss);
     Ok(())
 }
 

@@ -75,6 +75,18 @@ pub enum EventKind {
     GlobalConvergence = 25,
     /// Solve resumed after a negative verdict.
     Resume = 26,
+    // --- live steering & elasticity ---
+    /// Steering command posted to a hub (`a` = opcode).
+    SteerPost = 27,
+    /// Steering command applied at an iterate boundary (`a` = opcode,
+    /// `b` = steering epoch).
+    SteerApply = 28,
+    /// A rank's partition handed off to a neighbor (`a` = victim rank,
+    /// `b` = designee rank).
+    Handoff = 29,
+    /// Distributed solve rebuilt at a smaller world size (`a` = new
+    /// rank count).
+    Resize = 30,
 }
 
 impl EventKind {
@@ -109,6 +121,10 @@ impl EventKind {
             EventKind::SnapshotComplete => "snapshot_complete",
             EventKind::GlobalConvergence => "global_convergence",
             EventKind::Resume => "resume",
+            EventKind::SteerPost => "steer_post",
+            EventKind::SteerApply => "steer_apply",
+            EventKind::Handoff => "handoff",
+            EventKind::Resize => "resize",
         }
     }
 
@@ -141,6 +157,10 @@ impl EventKind {
             24 => EventKind::SnapshotComplete,
             25 => EventKind::GlobalConvergence,
             26 => EventKind::Resume,
+            27 => EventKind::SteerPost,
+            28 => EventKind::SteerApply,
+            29 => EventKind::Handoff,
+            30 => EventKind::Resize,
             _ => return None,
         })
     }

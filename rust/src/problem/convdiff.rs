@@ -320,6 +320,7 @@ impl<S: Scalar> Problem<S> for ConvDiffProblem {
                     face_link,
                     zero_faces,
                     coeffs: coeffs_s,
+                    rhs_scale: 1.0,
                     rhs: vec![S::ZERO; vol],
                     compute,
                     link_sizes,
@@ -354,6 +355,9 @@ pub struct ConvDiffWorker<S: Scalar> {
     /// All-zero halo planes for physical boundaries.
     zero_faces: [Vec<S>; 6],
     coeffs: [S; 8],
+    /// Accumulated live-steering RHS factor (`scale_rhs`), folded into
+    /// every `begin_step` rebuild.
+    rhs_scale: f64,
     rhs: Vec<S>,
     compute: Box<dyn ComputeBackend<S>>,
     link_sizes: Vec<usize>,
@@ -380,9 +384,9 @@ impl<S: Scalar> ProblemWorker<S> for ConvDiffWorker<S> {
         // narrowed once into the payload-width RHS block.
         let (nx, ny, nz) = self.sub.dims;
         debug_assert_eq!(prev.len(), nx * ny * nz);
-        let (op, rhs) = (&self.op, &mut self.rhs);
+        let (op, rhs, scale) = (&self.op, &mut self.rhs, self.rhs_scale);
         for_each_cell(self.sub.dims, self.sub.lo, op.h(), |i, _, (x, y, z)| {
-            rhs[i] = S::from_f64(prev[i].to_f64() / op.dt + op.source(x, y, z));
+            rhs[i] = S::from_f64((prev[i].to_f64() / op.dt + op.source(x, y, z)) * scale);
         });
         Ok(())
     }
@@ -412,6 +416,15 @@ impl<S: Scalar> ProblemWorker<S> for ConvDiffWorker<S> {
         }
         for (l, &f) in self.faces.iter().enumerate() {
             extract_face(v.sol, dims, f, &mut v.send[l]);
+        }
+        Ok(())
+    }
+
+    fn scale_rhs(&mut self, factor: f64) -> Result<()> {
+        self.rhs_scale *= factor;
+        let f = S::from_f64(factor);
+        for r in self.rhs.iter_mut() {
+            *r = *r * f;
         }
         Ok(())
     }

@@ -169,6 +169,7 @@ impl<S: Scalar> Problem<S> for Jacobi1D {
                     cd: S::from_f64(cd),
                     co: S::from_f64(co),
                     inv_cd: S::from_f64(1.0 / cd),
+                    rhs_scale: 1.0,
                     rhs: vec![S::ZERO; len],
                     scratch: vec![S::ZERO; len],
                     left_link,
@@ -214,6 +215,9 @@ pub struct JacobiWorker<S: Scalar> {
     cd: S,
     co: S,
     inv_cd: S,
+    /// Accumulated live-steering RHS factor (`scale_rhs`), folded into
+    /// every `begin_step` rebuild.
+    rhs_scale: f64,
     rhs: Vec<S>,
     scratch: Vec<S>,
     left_link: Option<usize>,
@@ -257,7 +261,8 @@ impl<S: Scalar> ProblemWorker<S> for JacobiWorker<S> {
         debug_assert_eq!(prev.len(), self.len);
         for i in 0..self.len {
             let x = (self.offset + i + 1) as f64 * self.h;
-            self.rhs[i] = S::from_f64(prev[i].to_f64() / self.dt + source_term(x));
+            self.rhs[i] =
+                S::from_f64((prev[i].to_f64() / self.dt + source_term(x)) * self.rhs_scale);
         }
         Ok(())
     }
@@ -299,6 +304,15 @@ impl<S: Scalar> ProblemWorker<S> for JacobiWorker<S> {
             std::mem::swap(v.sol, &mut self.scratch);
         }
         self.publish_boundary(v.sol, v.send);
+        Ok(())
+    }
+
+    fn scale_rhs(&mut self, factor: f64) -> Result<()> {
+        self.rhs_scale *= factor;
+        let f = S::from_f64(factor);
+        for r in self.rhs.iter_mut() {
+            *r = *r * f;
+        }
         Ok(())
     }
 }

@@ -142,6 +142,19 @@ pub trait ProblemWorker<S: Scalar>: Send + 'static {
     /// block in place, fill the pointwise residual, and publish the new
     /// boundary into the send buffers.
     fn compute(&mut self, v: ComputeView<'_, S>, inner_sweeps: usize) -> Result<()>;
+
+    /// Live steering ([`crate::jack::steer::SteerCommand::ScaleRhs`]):
+    /// multiply the local right-hand side by `factor`, in place, so the
+    /// solve re-converges to the rescaled system. Workers that rebuild
+    /// their RHS in `begin_step` must fold the factor into future
+    /// rebuilds too. The default refuses, so only workers that opt in
+    /// are steerable.
+    fn scale_rhs(&mut self, factor: f64) -> Result<()> {
+        let _ = factor;
+        Err(Error::Config(
+            "this problem's worker does not support RHS rescaling".into(),
+        ))
+    }
 }
 
 /// Face directions of a box subdomain, in the canonical link order used

@@ -18,9 +18,10 @@ use std::time::Duration;
 
 use crate::config::{ExperimentConfig, Precision};
 use crate::error::{Error, Result};
+use crate::jack::SteerHandle;
 use crate::problem::{ConvDiffProblem, Jacobi1D, Problem};
 use crate::scalar::Scalar;
-use crate::solver::{SolveReport, SolverSession};
+use crate::solver::{SolveReport, SolverSession, SteerReport, SteerScript};
 use crate::transport::BufferPool;
 use crate::util::json::Json;
 
@@ -160,6 +161,16 @@ impl JobSpec {
         }
         Ok(())
     }
+
+    /// Whether this job runs through the steered solver path, making it
+    /// receptive to live [`crate::jack::SteerCommand`]s — in particular
+    /// mid-run cancellation via [`crate::service::SolveService::cancel`].
+    /// Steering fences the asynchronous termination detector, so only
+    /// async single-step solves qualify; everything else runs the plain
+    /// (uninterruptible) path.
+    pub fn steerable(&self) -> bool {
+        self.cfg.scheme.is_async() && self.cfg.time_steps == 1
+    }
 }
 
 /// Terminal status of a job.
@@ -169,7 +180,9 @@ pub enum JobOutcome {
     Converged,
     /// The solve finished but at least one step hit `max_iters`.
     MaxIters,
-    /// Cancelled while still queued; the solve never ran.
+    /// Cancelled: either while still queued (the solve never ran) or —
+    /// for steerable jobs — mid-run at an iterate boundary via the
+    /// steering control plane.
     Cancelled,
     /// The solve returned an error.
     Failed(String),
@@ -251,6 +264,9 @@ pub struct ExecSummary {
     pub iterations: u64,
     pub r_n: f64,
     pub wall: Duration,
+    /// The solve stopped at an iterate boundary on a steering `Cancel`
+    /// (only ever true on the steered path).
+    pub cancelled: bool,
 }
 
 fn summarize<S: Scalar>(rep: SolveReport<S>) -> ExecSummary {
@@ -259,7 +275,15 @@ fn summarize<S: Scalar>(rep: SolveReport<S>) -> ExecSummary {
         iterations: rep.iterations(),
         r_n: rep.r_n,
         wall: rep.total_wall,
+        cancelled: false,
     }
+}
+
+fn summarize_steered<S: Scalar>(rep: SteerReport<S>) -> ExecSummary {
+    let cancelled = rep.cancelled;
+    let mut s = summarize(rep.report);
+    s.cancelled = cancelled;
+    s
 }
 
 fn run_session<S: Scalar, P: Problem<S>>(
@@ -273,6 +297,21 @@ fn run_session<S: Scalar, P: Problem<S>>(
             .pools(pools)
             .build()?
             .run()?,
+    ))
+}
+
+fn run_session_steered<S: Scalar, P: Problem<S>>(
+    cfg: &ExperimentConfig,
+    problem: P,
+    pools: Vec<BufferPool>,
+    hub: SteerHandle,
+) -> Result<ExecSummary> {
+    Ok(summarize_steered(
+        SolverSession::<S>::builder(cfg)
+            .problem(problem)
+            .pools(pools)
+            .build()?
+            .run_steered_with(hub, &SteerScript::default())?,
     ))
 }
 
@@ -299,6 +338,39 @@ pub fn execute(spec: &JobSpec, pools: Vec<BufferPool>) -> Result<ExecSummary> {
             cfg,
             Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?,
             pools,
+        ),
+    }
+}
+
+/// Like [`execute`], but through the steered solver path: the solve
+/// polls `hub` at every iterate boundary, so commands posted to it
+/// (threshold changes, RHS rescales, cancellation) take effect while
+/// the job runs. Only valid for steerable specs ([`JobSpec::steerable`]);
+/// the session rejects anything else.
+pub fn execute_steered(
+    spec: &JobSpec,
+    pools: Vec<BufferPool>,
+    hub: SteerHandle,
+) -> Result<ExecSummary> {
+    let cfg = &spec.cfg;
+    match (spec.problem, cfg.precision) {
+        (ProblemKind::ConvDiff, Precision::F64) => {
+            run_session_steered::<f64, _>(cfg, ConvDiffProblem::from_config(cfg)?, pools, hub)
+        }
+        (ProblemKind::ConvDiff, Precision::F32) => {
+            run_session_steered::<f32, _>(cfg, ConvDiffProblem::from_config(cfg)?, pools, hub)
+        }
+        (ProblemKind::Jacobi, Precision::F64) => run_session_steered::<f64, _>(
+            cfg,
+            Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?,
+            pools,
+            hub,
+        ),
+        (ProblemKind::Jacobi, Precision::F32) => run_session_steered::<f32, _>(
+            cfg,
+            Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt)?,
+            pools,
+            hub,
         ),
     }
 }

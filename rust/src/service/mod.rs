@@ -48,10 +48,18 @@
 //!   buffers: steady-state job turnover performs no pool allocations
 //!   (`PoolStats::high_water` stays flat — enforced by
 //!   `tests/service.rs`).
-//! * **Cancellation** ([`SolveService::cancel`]) only aborts jobs still
-//!   in the queue: a running solve always completes (ranks would
-//!   otherwise tear mid-protocol). Cancelled jobs still settle through a
-//!   worker so every accepted job produces exactly one report.
+//! * **Cancellation** ([`SolveService::cancel`]) aborts queued jobs
+//!   immediately, and *steerable* running jobs (async single-step
+//!   solves — [`JobSpec::steerable`]) cooperatively: the worker runs
+//!   them through the steered solver path, so a posted
+//!   [`crate::jack::SteerCommand::Cancel`] stops every rank at the next
+//!   iterate boundary and the job settles as `Cancelled`. Running jobs
+//!   on the plain path (sync schemes, multi-step solves) still run to
+//!   completion — their ranks would otherwise tear mid-protocol.
+//!   Cancelled jobs always settle so every accepted job produces
+//!   exactly one report. [`SolveService::steer`] posts arbitrary
+//!   steering commands (threshold, RHS scale) to a running steerable
+//!   job by ticket.
 //! * **Shutdown** ([`SolveService::drain`] / [`SolveService::shutdown`])
 //!   flips admission off *inside* the queue lock — nothing can slip in
 //!   after the drain begins — then in-flight jobs run to completion and
@@ -84,7 +92,7 @@ pub mod job;
 pub mod loadgen;
 pub mod registry;
 
-pub use job::{execute, ExecSummary, JobOutcome, JobReport, JobSpec, ProblemKind};
+pub use job::{execute, execute_steered, ExecSummary, JobOutcome, JobReport, JobSpec, ProblemKind};
 pub use loadgen::{default_mix, LoadArrival, LoadGen};
 pub use registry::{JobHandle, JobRegistry, JobState};
 
@@ -96,6 +104,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::Error;
+use crate::jack::{SteerCommand, SteerHandle};
 use crate::metrics::TenantMetrics;
 use crate::obs::{self, stats::ServiceStats, EventKind};
 use crate::transport::{BufferPool, PoolStats};
@@ -218,6 +227,11 @@ struct Shared {
     /// buffers. A lane is only ever locked by its own worker (per job)
     /// and by observability reads.
     pool_lanes: Vec<Mutex<Vec<BufferPool>>>,
+    /// Control-plane hubs of currently RUNNING steerable jobs, keyed by
+    /// job id. A worker registers the hub just before the solve and
+    /// removes it right after, so a posted command either reaches a live
+    /// solve or the lookup fails — never a dangling hub.
+    steer: Mutex<BTreeMap<u64, SteerHandle>>,
 }
 
 /// The long-lived runtime. See the module docs for the full policy.
@@ -244,6 +258,7 @@ impl SolveService {
             next_id: AtomicU64::new(0),
             tenants: Mutex::new(BTreeMap::new()),
             pool_lanes: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            steer: Mutex::new(BTreeMap::new()),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -317,11 +332,38 @@ impl SolveService {
         t.entry(tenant.to_string()).or_default().rejected += 1;
     }
 
-    /// Cancel a job still waiting in the queue. `false` once it is
-    /// running, settled, or the ticket is stale. A successful cancel
-    /// still yields a (`Cancelled`) report to collect.
+    /// Cancel a job. Queued jobs are cancelled immediately (the claim
+    /// is revoked before a worker runs them); RUNNING *steerable* jobs
+    /// (async single-step — [`JobSpec::steerable`]) are cancelled
+    /// cooperatively by posting [`SteerCommand::Cancel`] to the solve's
+    /// control plane, which stops every rank at its next iterate
+    /// boundary. Returns `false` for non-steerable running jobs,
+    /// settled jobs, and stale tickets. A successful cancel still
+    /// yields a (`Cancelled`) report to collect.
     pub fn cancel(&self, ticket: &JobTicket) -> bool {
-        self.shared.registry.cancel(ticket.handle)
+        if self.shared.registry.cancel(ticket.handle) {
+            return true;
+        }
+        self.steer(ticket, SteerCommand::Cancel)
+    }
+
+    /// Post a steering command to a RUNNING steerable job's control
+    /// plane (threshold change, RHS rescale, cancellation). `false`
+    /// when the job is not currently running through the steered path
+    /// — queued, settled, stale, or not steerable. `Kill` is refused:
+    /// partition handoff is a solver-test facility, not a tenant verb.
+    pub fn steer(&self, ticket: &JobTicket, cmd: SteerCommand) -> bool {
+        if matches!(cmd, SteerCommand::Kill { .. }) {
+            return false;
+        }
+        let hubs = self.shared.steer.lock().unwrap();
+        match hubs.get(&ticket.job_id) {
+            Some(hub) => {
+                hub.post(cmd);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Current state of a ticket's job (`None` once collected).
@@ -520,17 +562,35 @@ fn worker_loop(shared: &Shared, worker: usize) {
         if shared.registry.claim(job.handle) {
             // Exclusive claim won: run the solve with this worker's pool
             // lane so the world's per-rank pools persist across jobs.
+            // Steerable jobs get a control-plane hub, registered for the
+            // duration of the solve so cancel/steer can reach them.
             let pools = lane_pools(shared, worker, job.spec.cfg.world_size());
+            let hub = if job.spec.steerable() {
+                let hub = SteerHandle::new();
+                let mut hubs = shared.steer.lock().unwrap();
+                hubs.insert(job.job_id, hub.clone());
+                Some(hub)
+            } else {
+                None
+            };
             let run = obs::span(EventKind::JobRun, job.job_id, 0);
             let t0 = Instant::now();
-            let result = catch_unwind(AssertUnwindSafe(|| execute(&job.spec, pools)));
+            let result = catch_unwind(AssertUnwindSafe(|| match &hub {
+                Some(h) => execute_steered(&job.spec, pools, h.clone()),
+                None => execute(&job.spec, pools),
+            }));
             report.wall = t0.elapsed();
             drop(run);
+            if hub.is_some() {
+                shared.steer.lock().unwrap().remove(&job.job_id);
+            }
             report.outcome = match result {
                 Ok(Ok(s)) => {
                     report.iterations = s.iterations;
                     report.r_n = s.r_n;
-                    if s.converged {
+                    if s.cancelled {
+                        JobOutcome::Cancelled
+                    } else if s.converged {
                         JobOutcome::Converged
                     } else {
                         JobOutcome::MaxIters
@@ -650,6 +710,44 @@ mod tests {
             other => panic!("expected Invalid rejection, got {other:?}"),
         }
         assert_eq!(svc.tenant_metrics()["unit"].rejected, 1);
+    }
+
+    #[test]
+    fn running_steerable_job_is_cancelled_cooperatively() {
+        let svc = SolveService::start(ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        });
+        // Async job with an unreachable threshold: without the cancel it
+        // would grind through every one of its max_iters iterations.
+        let mut spec = tiny_jacobi();
+        spec.cfg.scheme = crate::config::Scheme::Asynchronous;
+        spec.cfg.threshold = 1e-300;
+        spec.cfg.max_iters = 2_000_000;
+        assert!(spec.steerable());
+        let ticket = svc.submit(spec).ticket().expect("admitted");
+        // Wait for the worker to claim it, then cancel mid-run.
+        let t0 = Instant::now();
+        while svc.state(&ticket) == Some(JobState::Queued) {
+            assert!(t0.elapsed() < Duration::from_secs(30), "never claimed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t0 = Instant::now();
+        while !svc.cancel(&ticket) {
+            // The claim-to-hub-registration window is tiny but real.
+            assert!(
+                svc.state(&ticket).is_some(),
+                "job settled before cancel landed"
+            );
+            assert!(t0.elapsed() < Duration::from_secs(30), "cancel never took");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rep = svc
+            .collect(&ticket, Duration::from_secs(60))
+            .expect("settles");
+        assert_eq!(rep.outcome, JobOutcome::Cancelled);
+        let m = svc.shutdown();
+        assert_eq!(m["unit"].cancelled, 1);
     }
 
     #[test]

@@ -116,6 +116,53 @@ pub fn solve_spawned<S: Scalar, P: Problem<S>>(
     }
 }
 
+/// Restart-based elasticity for the multi-process TCP path: run the
+/// solve via [`solve_spawned`], and when a rank process dies mid-solve
+/// (any [`Error::Transport`] — EOF on a control stream, rendezvous
+/// dropout, nonzero exit), rebuild the problem at one fewer rank via
+/// the `make` factory and run again. The dead process's partition is
+/// not migrated live — the cross-process world has no shared memory to
+/// hand a partition over — so elasticity here means "shrink and
+/// re-solve", which is exactly the recovery a batch driver wants: the
+/// job still exits 0 with a converged report, just on a smaller world.
+///
+/// `make(p)` must return the config and problem for a `p`-rank world
+/// (e.g. re-split a [`Jacobi1D`] line over `p` partitions). Non-
+/// transport errors (bad config, unconverged report handling) abort
+/// immediately; only rank loss triggers a retry. Each shrink emits an
+/// [`obs::EventKind::Resize`] instant so traces show the resize points.
+///
+/// Returns the report together with the rank count that produced it.
+pub fn solve_elastic<S, P, F>(start_ranks: usize, make: F) -> Result<(SolveReport<S>, usize)>
+where
+    S: Scalar,
+    P: Problem<S>,
+    F: Fn(usize) -> Result<(ExperimentConfig, P)>,
+{
+    if start_ranks == 0 {
+        return Err(Error::Config("cannot solve a zero-rank problem".into()));
+    }
+    let mut p = start_ranks;
+    loop {
+        let (cfg, problem) = make(p)?;
+        if problem.world_size() != p {
+            return Err(Error::Config(format!(
+                "elastic factory built a {}-rank problem when asked for {p}",
+                problem.world_size()
+            )));
+        }
+        match solve_spawned::<S, P>(&cfg, &problem) {
+            Ok(report) => return Ok((report, p)),
+            Err(Error::Transport(msg)) if p > 1 => {
+                eprintln!("elastic: lost a rank at p={p} ({msg}); re-solving at p={}", p - 1);
+                obs::instant(obs::EventKind::Resize, (p - 1) as u64, p as u64);
+                p -= 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// The fallible middle of [`solve_spawned`]: everything between "bind"
 /// and "all reports read". Spawned children are pushed into `children`
 /// as they start so the caller can clean up on any error.

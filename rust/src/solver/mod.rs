@@ -10,6 +10,7 @@ pub mod distributed;
 pub mod driver;
 pub mod native;
 pub mod session;
+pub mod steering;
 pub mod xla_backend;
 
 pub use backend::ComputeBackend;
@@ -19,4 +20,5 @@ pub use native::NativeBackend;
 pub use session::{
     solve_experiment, NoProblem, SolveReport, SolverSession, SolverSessionBuilder, StepReport,
 };
+pub use steering::{SteerAction, SteerReport, SteerScript};
 pub use xla_backend::XlaBackend;

@@ -255,6 +255,18 @@ impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
         self.cfg.termination
     }
 
+    /// The experiment configuration this session was built from (the
+    /// steered runner in [`super::steering`] shares it).
+    pub(crate) fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Seeded per-rank buffer pools (see
+    /// [`SolverSessionBuilder::pools`]).
+    pub(crate) fn pools_ref(&self) -> &[BufferPool] {
+        &self.pools
+    }
+
     /// Run the full time-stepped solve: build per-rank workers (one-time
     /// problem setup), compose the transport world, run one thread per
     /// rank over the JACK2 session API, then assemble and verify against

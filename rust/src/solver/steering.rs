@@ -1,0 +1,572 @@
+//! The steered solve runner: live reconfiguration and rank-dropout
+//! tolerance for an in-flight asynchronous solve.
+//!
+//! [`SolverSession::run`] drives a fixed problem to convergence;
+//! [`SolverSession::run_steered`] drives the *same* per-rank machinery
+//! under external loop control so a driver can change the problem while
+//! it runs. A [`SteerScript`] describes *when* (in spanning-tree-root
+//! iterations, the [`SteerHandle::root_iters`] clock) to post *which*
+//! [`SteerCommand`]s; a driver thread replays the script against the
+//! hub, rank 0 broadcasts each command down the detection spanning tree
+//! ([`crate::jack::JackComm::poll_steer`]), and every rank applies it at
+//! its next iterate boundary, fencing its termination detector into the
+//! new steering epoch.
+//!
+//! ## Rank dropout as cooperative handoff
+//!
+//! A [`SteerCommand::Kill`] makes the victim rank stop driving its
+//! communicator: the victim's thread boxes its whole per-rank state
+//! (communicator + worker, a [`Slot`]) into the hub's handoff mailbox
+//! and the designee's thread adopts it, interleaving both logical ranks
+//! from then on. Asynchronous iterations never block, so one thread can
+//! drive any number of communicators; global termination cannot be
+//! decided while the victim's partition is parked (its detection
+//! contributions are missing), so adoption is race-free. The victim must
+//! not be rank 0, which owns the steer broadcast itself.
+//!
+//! Steered runs are restricted to asynchronous schemes (a synchronous
+//! solve's collectives would deadlock across a reconfiguration) and a
+//! single time step (steering epochs and backward-Euler steps would
+//! otherwise both want to re-arm the detector).
+
+use std::any::Any;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, TransportKind};
+use crate::error::{Error, Result};
+use crate::graph::CommGraph;
+use crate::jack::steer::{SteerCommand, SteerHandle};
+use crate::jack::{AsyncConfig, IterateOpts, JackComm, NormKind, StepOutcome, StepState};
+use crate::obs;
+use crate::problem::{Problem, ProblemWorker};
+use crate::scalar::Scalar;
+use crate::simmpi::{NetworkModel, World, WorldConfig};
+use crate::solver::session::{aggregate_report, RankOutcome, RankStep, SolveReport, SolverSession};
+use crate::transport::{ShmConfig, ShmWorld, TcpConfig, TcpWorld, Transport};
+use crate::util::Rng64;
+
+/// One scripted steering action: post `command` once the spanning-tree
+/// root has completed at least `after_root_iters` iterations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SteerAction {
+    pub after_root_iters: u64,
+    pub command: SteerCommand,
+}
+
+/// A deterministic steering plan, replayed against the hub by the
+/// runner's driver thread in `after_root_iters` order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SteerScript {
+    pub actions: Vec<SteerAction>,
+}
+
+impl SteerScript {
+    pub fn new(actions: Vec<SteerAction>) -> Self {
+        SteerScript { actions }
+    }
+
+    /// Structural validation against a world of `world` ranks.
+    pub fn validate(&self, world: usize) -> Result<()> {
+        for a in &self.actions {
+            match a.command {
+                SteerCommand::SetThreshold(t) => {
+                    if !(t > 0.0) || !t.is_finite() {
+                        return Err(Error::Config(format!(
+                            "steer: threshold must be finite and positive ({t})"
+                        )));
+                    }
+                }
+                SteerCommand::ScaleRhs(f) => {
+                    if !f.is_finite() || f == 0.0 {
+                        return Err(Error::Config(format!(
+                            "steer: RHS scale must be finite and nonzero ({f})"
+                        )));
+                    }
+                }
+                SteerCommand::Cancel => {}
+                SteerCommand::Kill { victim, designee } => {
+                    if victim == 0 {
+                        return Err(Error::Config(
+                            "steer: cannot kill rank 0 (it roots the steer \
+                             broadcast and the detection spanning tree)"
+                                .into(),
+                        ));
+                    }
+                    if victim >= world || designee >= world {
+                        return Err(Error::Config(format!(
+                            "steer: kill {victim}->{designee} out of range for \
+                             {world} ranks"
+                        )));
+                    }
+                    if designee == victim {
+                        return Err(Error::Config(format!(
+                            "steer: rank {victim} cannot adopt itself"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The last scripted threshold change, if any (the effective
+    /// convergence target of the steered solve).
+    pub fn threshold_override(&self) -> Option<f64> {
+        self.actions.iter().rev().find_map(|a| match a.command {
+            SteerCommand::SetThreshold(t) => Some(t),
+            _ => None,
+        })
+    }
+
+    /// Product of all scripted RHS factors (the steered solve converges
+    /// to the solution of the system scaled by this).
+    pub fn rhs_scale(&self) -> f64 {
+        self.actions
+            .iter()
+            .filter_map(|a| match a.command {
+                SteerCommand::ScaleRhs(f) => Some(f),
+                _ => None,
+            })
+            .product()
+    }
+
+    /// Whether the script requests cancellation.
+    pub fn has_cancel(&self) -> bool {
+        self.actions
+            .iter()
+            .any(|a| matches!(a.command, SteerCommand::Cancel))
+    }
+}
+
+/// Outcome of a steered solve: the usual [`SolveReport`] plus the
+/// control plane's summary.
+#[derive(Debug)]
+pub struct SteerReport<S: Scalar = f64> {
+    pub report: SolveReport<S>,
+    /// A [`SteerCommand::Cancel`] ended the solve (the report's solution
+    /// is the last iterate, not a converged one).
+    pub cancelled: bool,
+    /// Steering epochs opened (commands applied cluster-wide).
+    pub epochs: u64,
+    /// Partitions adopted via [`SteerCommand::Kill`] handoff.
+    pub handoffs: usize,
+}
+
+impl<S: Scalar, P: Problem<S>> SolverSession<S, P> {
+    /// Run a steered solve with a fresh control plane, replaying
+    /// `script`. See the module docs; requires an asynchronous scheme
+    /// and `time_steps == 1`.
+    pub fn run_steered(&self, script: &SteerScript) -> Result<SteerReport<S>> {
+        self.run_steered_with(SteerHandle::new(), script)
+    }
+
+    /// Run a steered solve over a caller-owned [`SteerHandle`]. The
+    /// caller may post additional commands live (the solve service's
+    /// `steer` verb does), on top of the scripted ones.
+    pub fn run_steered_with(
+        &self,
+        hub: SteerHandle,
+        script: &SteerScript,
+    ) -> Result<SteerReport<S>> {
+        let cfg = self.cfg();
+        if !cfg.scheme.is_async() {
+            return Err(Error::Config(
+                "steering requires an asynchronous scheme (--scheme async): \
+                 synchronous collectives would block across the \
+                 reconfiguration boundary"
+                    .into(),
+            ));
+        }
+        if cfg.time_steps != 1 {
+            return Err(Error::Config(format!(
+                "steered solves run a single time step (got {})",
+                cfg.time_steps
+            )));
+        }
+        let p = self.problem().world_size();
+        script.validate(p)?;
+        let graphs = self.problem().comm_graphs()?;
+        let workers = self.problem().workers(self.backend(), cfg.inner_sweeps)?;
+        if workers.len() != p {
+            return Err(Error::Config(format!(
+                "problem built {} workers for {p} ranks",
+                workers.len()
+            )));
+        }
+
+        if cfg.trace {
+            obs::reset();
+            obs::set_enabled(true);
+        }
+
+        // Replay the script from a driver thread clocked on the root's
+        // iteration counter. `done` releases it if the solve ends before
+        // the script is exhausted.
+        let done = Arc::new(AtomicBool::new(false));
+        let adopted = Arc::new(AtomicUsize::new(0));
+        let driver = {
+            let hub = hub.clone();
+            let done = done.clone();
+            let mut actions = script.actions.clone();
+            actions.sort_by_key(|a| a.after_root_iters);
+            std::thread::spawn(move || {
+                let mut idx = 0;
+                while idx < actions.len() && !done.load(Ordering::Acquire) {
+                    if hub.root_iters() >= actions[idx].after_root_iters {
+                        hub.post(actions[idx].command);
+                        idx += 1;
+                    } else {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            })
+        };
+
+        let t0 = Instant::now();
+        let run = match self.transport() {
+            TransportKind::Sim => {
+                let mut network = NetworkModel::uniform(cfg.net_latency_us, cfg.net_jitter);
+                network.per_byte = Duration::from_nanos(1);
+                if cfg.net_bandwidth > 0.0 {
+                    network.bandwidth = Some(cfg.net_bandwidth);
+                }
+                if cfg.net_spike_every > 0 {
+                    network.spike_every = cfg.net_spike_every;
+                    network.spike = Duration::from_micros(cfg.net_spike_us);
+                }
+                let world_cfg = WorldConfig {
+                    size: p,
+                    network,
+                    seed: cfg.seed,
+                    rank_speed: cfg.rank_speed.clone(),
+                    pools: self.pools_ref().to_vec(),
+                };
+                let (_world, eps) = World::new(world_cfg);
+                spawn_ranks_steered(eps, graphs, workers, cfg, &hub, &adopted)
+            }
+            TransportKind::Shm => {
+                let shm_cfg = ShmConfig::homogeneous(p)
+                    .with_rank_speed(cfg.rank_speed.clone())
+                    .with_pools(self.pools_ref().to_vec());
+                let (_world, eps) = ShmWorld::new(shm_cfg);
+                spawn_ranks_steered(eps, graphs, workers, cfg, &hub, &adopted)
+            }
+            TransportKind::Tcp => {
+                let tcp_cfg = TcpConfig::homogeneous(p)
+                    .with_rank_speed(cfg.rank_speed.clone())
+                    .with_pools(self.pools_ref().to_vec());
+                let (_world, eps) = TcpWorld::new(tcp_cfg);
+                spawn_ranks_steered(eps, graphs, workers, cfg, &hub, &adopted)
+            }
+        };
+        done.store(true, Ordering::Release);
+        let _ = driver.join();
+        let mut results = run?;
+        let total_wall = t0.elapsed();
+
+        // One result per logical rank, in rank order, regardless of which
+        // thread finished it.
+        results.sort_by_key(|r| r.rank);
+        let cancelled = results.iter().any(|r| r.cancelled);
+        let outcomes: Vec<RankOutcome<S>> = results.into_iter().map(|r| r.outcome).collect();
+
+        // Aggregate against the *effective* problem — what the root
+        // actually applied, not what the script intended: the last
+        // applied threshold decides convergence, and the applied RHS
+        // factor rescales the oracle system for the r_n verification.
+        // (The hub log also covers commands posted live through a
+        // caller-owned handle, which no script describes.)
+        let mut eff_cfg = cfg.clone();
+        if let Some(t) = hub.applied_threshold() {
+            eff_cfg.threshold = t;
+        }
+        let mut report = aggregate_report(
+            &eff_cfg,
+            self.problem(),
+            self.backend(),
+            self.transport(),
+            outcomes,
+            total_wall,
+        );
+        let scale = hub.applied_rhs_scale();
+        if scale != 1.0 {
+            let prev = vec![0.0; self.problem().global_len()];
+            let b: Vec<f64> = self
+                .problem()
+                .rhs_global(&prev)
+                .into_iter()
+                .map(|x| x * scale)
+                .collect();
+            let sol: Vec<f64> = report.solution.iter().map(|x| x.to_f64()).collect();
+            report.r_n = self.problem().residual_max_norm(&sol, &b);
+        }
+        if cancelled {
+            // A cancelled solve keeps its last iterate; it did not meet
+            // any threshold.
+            report.converged = false;
+        }
+        if cfg.trace {
+            obs::set_enabled(false);
+            report.trace = obs::drain();
+        }
+        Ok(SteerReport {
+            report,
+            cancelled,
+            epochs: hub.epoch(),
+            handoffs: adopted.load(Ordering::Acquire),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-thread execution
+// ---------------------------------------------------------------------
+
+/// All state needed to drive one logical rank — movable between threads
+/// through the hub's handoff mailbox as a `Box<dyn Any + Send>`.
+struct Slot<T: Transport, S: Scalar, W: ProblemWorker<S>> {
+    rank: usize,
+    comm: JackComm<T, S>,
+    worker: W,
+    speed: f64,
+    work_rng: Rng64,
+    iters: u64,
+    t0: Instant,
+}
+
+/// One finished logical rank.
+struct SteeredRankResult<S: Scalar> {
+    rank: usize,
+    outcome: RankOutcome<S>,
+    cancelled: bool,
+}
+
+fn spawn_ranks_steered<T, S, W>(
+    eps: Vec<T>,
+    graphs: Vec<CommGraph>,
+    workers: Vec<W>,
+    cfg: &ExperimentConfig,
+    hub: &SteerHandle,
+    adopted: &Arc<AtomicUsize>,
+) -> Result<Vec<SteeredRankResult<S>>>
+where
+    T: Transport + 'static,
+    S: Scalar,
+    W: ProblemWorker<S>,
+{
+    let p = eps.len();
+    // Logical ranks not yet in a terminal state: parked (handed-off)
+    // partitions still count, so every thread keeps polling the mailbox
+    // until the whole solve is settled.
+    let active = Arc::new(AtomicUsize::new(p));
+    let mut handles = Vec::with_capacity(p);
+    for ((ep, graph), worker) in eps.into_iter().zip(graphs).zip(workers) {
+        debug_assert_eq!(ep.rank(), worker.rank(), "worker order must be rank order");
+        let cfg = cfg.clone();
+        let hub = hub.clone();
+        let active = active.clone();
+        let adopted = adopted.clone();
+        handles.push(std::thread::spawn(move || {
+            run_rank_steered(ep, graph, worker, cfg, hub, active, adopted)
+        }));
+    }
+    let mut results = Vec::with_capacity(p);
+    for h in handles {
+        results.extend(
+            h.join()
+                .map_err(|_| Error::Protocol("steered rank thread panicked (see stderr)".into()))??,
+        );
+    }
+    Ok(results)
+}
+
+/// One worker thread: drives its own rank's [`Slot`] and any partitions
+/// handed off to it, until every logical rank in the world has settled.
+fn run_rank_steered<T, S, W>(
+    ep: T,
+    graph: CommGraph,
+    mut worker: W,
+    cfg: ExperimentConfig,
+    hub: SteerHandle,
+    active: Arc<AtomicUsize>,
+    adopted: Arc<AtomicUsize>,
+) -> Result<Vec<SteeredRankResult<S>>>
+where
+    T: Transport + 'static,
+    S: Scalar,
+    W: ProblemWorker<S>,
+{
+    let link_sizes = worker.link_sizes();
+    let vol = worker.local_len();
+    let my_rank = worker.rank();
+    obs::set_lane(my_rank as u32, &format!("rank-{my_rank}"));
+
+    let mut comm = JackComm::<_, S>::builder(ep, graph)?
+        .with_buffers(&link_sizes, &link_sizes)?
+        .with_residual(vol, NormKind::from_norm_type(cfg.norm_type))
+        .with_solution(vol)
+        .build_async(AsyncConfig {
+            max_recv_requests: cfg.max_recv_requests,
+            threshold: cfg.threshold,
+            send_discard: cfg.send_discard,
+            termination: cfg.termination,
+            ..AsyncConfig::default()
+        })?;
+    comm.attach_steer(hub.clone())?;
+    let speed = comm.endpoint().speed();
+    let work_rng = Rng64::new(cfg.seed ^ 0x5EED).fork(my_rank as u64 + 1);
+
+    // Single-time-step setup, exactly like `run_rank`'s step 0: build the
+    // RHS from a zero previous iterate, publish the initial faces, post
+    // the iteration-0 send.
+    let prev_sol = vec![S::ZERO; vol];
+    worker.begin_step(&prev_sol)?;
+    worker.publish(comm.compute_view())?;
+    comm.send()?;
+
+    let mut slots: Vec<Slot<T, S, W>> = vec![Slot {
+        rank: my_rank,
+        comm,
+        worker,
+        speed,
+        work_rng,
+        iters: 0,
+        t0: Instant::now(),
+    }];
+    let mut results = Vec::new();
+
+    let opts = IterateOpts {
+        threshold: cfg.threshold,
+        max_iters: cfg.max_iters,
+        wait_sends: false,
+        detect: cfg.detect,
+    };
+    let work_floor = Duration::from_micros(cfg.work_floor_us);
+
+    loop {
+        // Adopt partitions parked for this rank (`Kill` handoff).
+        for boxed in hub.claim_handoffs(my_rank) {
+            let mut slot = *boxed
+                .downcast::<Slot<T, S, W>>()
+                .map_err(|_| Error::Protocol("handoff slot type mismatch".into()))?;
+            slot.comm.steer_adopt();
+            adopted.fetch_add(1, Ordering::AcqRel);
+            obs::instant(obs::EventKind::Handoff, slot.rank as u64, my_rank as u64);
+            slots.push(slot);
+        }
+        if slots.is_empty() {
+            if active.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            // Idle but the solve is not settled: a partition may yet be
+            // parked for us.
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+
+        let mut i = 0;
+        while i < slots.len() {
+            enum Verdict {
+                Keep,
+                Finished(bool),
+                Park(usize),
+            }
+            let verdict = {
+                let slot = &mut slots[i];
+                // Steering boundary first: a fence must land before the
+                // residual of the *new* problem is computed, and a
+                // `ScaleRhs` must rescale the worker before the next
+                // compute so the detector never harvests a pre-scale
+                // residual.
+                slot.comm.poll_steer()?;
+                for cmd in slot.comm.take_steer_events() {
+                    if let SteerCommand::ScaleRhs(f) = cmd {
+                        slot.worker.scale_rhs(f)?;
+                    }
+                }
+                if slot.iters >= cfg.max_iters {
+                    Verdict::Finished(false)
+                } else {
+                    let Slot {
+                        comm,
+                        worker,
+                        speed,
+                        work_rng,
+                        ..
+                    } = slot;
+                    let state = comm.iterate_step(&opts, |v| {
+                        let floor = if cfg.work_jitter > 0.0 {
+                            work_floor.mul_f64(1.0 + work_rng.range_f64(0.0, cfg.work_jitter))
+                        } else {
+                            work_floor
+                        };
+                        let t0 = Instant::now();
+                        if let Err(e) = worker.compute(v, cfg.inner_sweeps) {
+                            return StepOutcome::Abort(e);
+                        }
+                        let elapsed = t0.elapsed();
+                        let target =
+                            Duration::from_secs_f64(elapsed.max(floor).as_secs_f64() / *speed);
+                        if target > elapsed {
+                            std::thread::sleep(target - elapsed);
+                        }
+                        StepOutcome::Continue
+                    })?;
+                    slot.iters += 1;
+                    match state {
+                        StepState::Continue => Verdict::Keep,
+                        StepState::Done => Verdict::Finished(false),
+                        StepState::Cancelled => Verdict::Finished(true),
+                        StepState::Handoff => Verdict::Park(
+                            slot.comm
+                                .steer_handoff()
+                                .expect("Handoff state implies a designee"),
+                        ),
+                    }
+                }
+            };
+            match verdict {
+                Verdict::Keep => i += 1,
+                Verdict::Finished(cancelled) => {
+                    let slot = slots.swap_remove(i);
+                    results.push(finish_slot(slot, cancelled));
+                    active.fetch_sub(1, Ordering::AcqRel);
+                }
+                Verdict::Park(designee) => {
+                    let slot = slots.swap_remove(i);
+                    hub.park_handoff(designee, Box::new(slot) as Box<dyn Any + Send>);
+                }
+            }
+        }
+        // Asynchronous ranks never block; on hosts with fewer cores than
+        // ranks they must yield or OS timeslices dominate every hop.
+        std::thread::yield_now();
+    }
+    Ok(results)
+}
+
+/// Fold a settled slot into the rank outcome `aggregate_report` expects.
+fn finish_slot<T: Transport, S: Scalar, W: ProblemWorker<S>>(
+    slot: Slot<T, S, W>,
+    cancelled: bool,
+) -> SteeredRankResult<S> {
+    let comm = slot.comm;
+    SteeredRankResult {
+        rank: slot.rank,
+        outcome: RankOutcome {
+            sol: comm.solution().to_vec(),
+            prev_sol: vec![S::ZERO; comm.solution().len()],
+            metrics: comm.metrics.clone(),
+            steps: vec![RankStep {
+                iterations: comm.metrics.iterations,
+                wall: slot.t0.elapsed(),
+                reported_norm: comm.residual_norm(),
+                snapshots: comm.metrics.snapshots,
+            }],
+            trace: Vec::new(),
+        },
+        cancelled,
+    }
+}

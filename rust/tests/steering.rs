@@ -1,0 +1,423 @@
+//! Live-steering acceptance suite (ISSUE 10 tentpole): seeded steering
+//! scripts against an in-flight asynchronous solve must re-converge to
+//! the *new* sequential oracle on every transport.
+//!
+//! Four scripts × three transports (test names are prefixed
+//! `steering_sim_` / `steering_shm_` / `steering_tcp_` so the CI matrix
+//! job can run one transport per leg):
+//!
+//! * **threshold tighten** — start at a loose target, steer to a much
+//!   tighter one mid-flight; the solve must keep going and land the
+//!   tight target (graded against the *applied* threshold);
+//! * **RHS change** — rescale the right-hand side mid-flight; the solve
+//!   must re-converge to the scaled system's solution (the report's
+//!   `r_n` oracle is recomputed against the scaled RHS), and the final
+//!   iterate must *not* satisfy the original system;
+//! * **cancel** — cooperative cancellation ends an unconvergeable solve
+//!   promptly at an iterate boundary, reported as cancelled, never as
+//!   converged;
+//! * **kill + handoff** — a victim rank parks its partition and a
+//!   designee adopts it; the shrunken thread set still drives every
+//!   logical rank to the oracle solution.
+//!
+//! Plus the service front door (live `SolveService::steer` retargets a
+//! running job) and the out-of-process elasticity acceptance: killing a
+//! real `repro rank` process under `repro solve --elastic` shrinks the
+//! world and re-converges, exit 0.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use jack2::config::{ExperimentConfig, Scheme, TransportKind};
+use jack2::jack::SteerCommand;
+use jack2::problem::{Jacobi1D, Problem};
+use jack2::service::{JobOutcome, JobState, JobSpec, ProblemKind, ServiceConfig, SolveService};
+use jack2::solver::{SolverSession, SteerAction, SteerReport, SteerScript};
+
+/// A 3-rank asynchronous chain solve, small enough that each script run
+/// finishes in well under a second but long enough (hundreds of
+/// iterations to converge) that every scripted command lands mid-flight.
+fn steer_cfg(transport: TransportKind, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        process_grid: (3, 1, 1),
+        n: 36,
+        scheme: Scheme::Asynchronous,
+        transport,
+        threshold: 1e-6,
+        max_iters: 500_000,
+        time_steps: 1,
+        net_latency_us: 2,
+        net_jitter: 0.1,
+        seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run_script(cfg: &ExperimentConfig, script: SteerScript) -> SteerReport {
+    let problem = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt).expect("problem");
+    SolverSession::<f64>::builder(cfg)
+        .problem(problem)
+        .build()
+        .expect("session builds")
+        .run_steered(&script)
+        .expect("steered solve runs")
+}
+
+// ---------------------------------------------------------------------
+// Script 1: tighten the threshold mid-flight
+// ---------------------------------------------------------------------
+
+fn threshold_tighten(transport: TransportKind) {
+    let mut cfg = steer_cfg(transport, 0x57EE_0001);
+    cfg.threshold = 1e-3; // loose initial target, ~3 decades above the steer
+    let rep = run_script(
+        &cfg,
+        SteerScript::new(vec![SteerAction {
+            after_root_iters: 5,
+            command: SteerCommand::SetThreshold(1e-8),
+        }]),
+    );
+    assert!(rep.epochs >= 1, "the SetThreshold never opened an epoch");
+    assert!(!rep.cancelled);
+    assert!(
+        rep.report.converged,
+        "solve must land the tightened target (reported norm vs 1e-8)"
+    );
+    // The oracle residual must sit at the *tightened* scale — orders of
+    // magnitude below the original 1e-3 target (100x staleness slack, as
+    // elsewhere in the async suites).
+    assert!(
+        rep.report.r_n <= 1e-6,
+        "r_n {} is not at the tightened 1e-8 scale",
+        rep.report.r_n
+    );
+}
+
+#[test]
+fn steering_sim_threshold_tighten_reconverges() {
+    threshold_tighten(TransportKind::Sim);
+}
+
+#[test]
+fn steering_shm_threshold_tighten_reconverges() {
+    threshold_tighten(TransportKind::Shm);
+}
+
+#[test]
+fn steering_tcp_threshold_tighten_reconverges() {
+    threshold_tighten(TransportKind::Tcp);
+}
+
+// ---------------------------------------------------------------------
+// Script 2: rescale the RHS mid-flight
+// ---------------------------------------------------------------------
+
+fn rhs_change(transport: TransportKind) {
+    const SCALE: f64 = 2.5;
+    let cfg = steer_cfg(transport, 0x57EE_0002);
+    let rep = run_script(
+        &cfg,
+        SteerScript::new(vec![SteerAction {
+            after_root_iters: 5,
+            command: SteerCommand::ScaleRhs(SCALE),
+        }]),
+    );
+    assert!(rep.epochs >= 1, "the ScaleRhs never opened an epoch");
+    assert!(rep.report.converged, "solve must re-converge after the rescale");
+    // `r_n` is already verified against the *scaled* oracle system.
+    assert!(
+        rep.report.r_n <= 1e-4,
+        "r_n {} vs the scaled oracle (threshold 1e-6)",
+        rep.report.r_n
+    );
+    // And the final iterate must genuinely be the scaled system's
+    // solution: against the ORIGINAL RHS it misses by (SCALE-1)*||b||.
+    let problem = Jacobi1D::new(cfg.n, cfg.world_size(), cfg.dt).unwrap();
+    let b_orig = Problem::<f64>::rhs_global(&problem, &vec![0.0; cfg.n]);
+    let stale = Problem::<f64>::residual_max_norm(&problem, &rep.report.solution, &b_orig);
+    assert!(
+        stale > 1.0,
+        "solution still satisfies the pre-steer system (residual {stale}); \
+         the RHS change never took effect"
+    );
+}
+
+#[test]
+fn steering_sim_rhs_change_reconverges_to_scaled_oracle() {
+    rhs_change(TransportKind::Sim);
+}
+
+#[test]
+fn steering_shm_rhs_change_reconverges_to_scaled_oracle() {
+    rhs_change(TransportKind::Shm);
+}
+
+#[test]
+fn steering_tcp_rhs_change_reconverges_to_scaled_oracle() {
+    rhs_change(TransportKind::Tcp);
+}
+
+// ---------------------------------------------------------------------
+// Script 3: cooperative cancellation
+// ---------------------------------------------------------------------
+
+fn cancel_mid_flight(transport: TransportKind) {
+    let mut cfg = steer_cfg(transport, 0x57EE_0003);
+    cfg.threshold = 1e-300; // unreachable: only the cancel can end this
+    let rep = run_script(
+        &cfg,
+        SteerScript::new(vec![SteerAction {
+            after_root_iters: 20,
+            command: SteerCommand::Cancel,
+        }]),
+    );
+    assert!(rep.cancelled, "the cancel must be reported");
+    assert!(
+        !rep.report.converged,
+        "a cancelled solve must never read as converged"
+    );
+    assert!(rep.epochs >= 1);
+    // Prompt cooperative exit: every rank stopped within a few broadcast
+    // hops of the command, nowhere near the iteration bound.
+    assert!(
+        rep.report.iterations() < 100_000,
+        "cancel was not prompt ({} iterations)",
+        rep.report.iterations()
+    );
+    assert_eq!(rep.report.solution.len(), cfg.n, "last iterate is kept");
+}
+
+#[test]
+fn steering_sim_cancel_stops_promptly() {
+    cancel_mid_flight(TransportKind::Sim);
+}
+
+#[test]
+fn steering_shm_cancel_stops_promptly() {
+    cancel_mid_flight(TransportKind::Shm);
+}
+
+#[test]
+fn steering_tcp_cancel_stops_promptly() {
+    cancel_mid_flight(TransportKind::Tcp);
+}
+
+// ---------------------------------------------------------------------
+// Script 4: rank kill + partition handoff
+// ---------------------------------------------------------------------
+
+fn kill_and_handoff(transport: TransportKind) {
+    let cfg = steer_cfg(transport, 0x57EE_0004);
+    let rep = run_script(
+        &cfg,
+        SteerScript::new(vec![SteerAction {
+            after_root_iters: 5,
+            command: SteerCommand::Kill {
+                victim: 2,
+                designee: 1,
+            },
+        }]),
+    );
+    assert!(rep.epochs >= 1, "the Kill never opened an epoch");
+    assert_eq!(rep.handoffs, 1, "rank 1 must adopt rank 2's partition");
+    assert!(
+        rep.report.converged,
+        "the shrunken thread set must still drive every logical rank home"
+    );
+    assert!(
+        rep.report.r_n <= 1e-4,
+        "r_n {} after handoff (threshold 1e-6)",
+        rep.report.r_n
+    );
+    assert_eq!(rep.report.solution.len(), cfg.n, "no partition was lost");
+}
+
+#[test]
+fn steering_sim_rank_kill_hands_off_and_reconverges() {
+    kill_and_handoff(TransportKind::Sim);
+}
+
+#[test]
+fn steering_shm_rank_kill_hands_off_and_reconverges() {
+    kill_and_handoff(TransportKind::Shm);
+}
+
+#[test]
+fn steering_tcp_rank_kill_hands_off_and_reconverges() {
+    kill_and_handoff(TransportKind::Tcp);
+}
+
+// ---------------------------------------------------------------------
+// Service front door: steer a RUNNING job
+// ---------------------------------------------------------------------
+
+/// A job admitted with an unreachable threshold is retargeted live
+/// through `SolveService::steer` — and, because convergence is graded
+/// against the *applied* threshold, settles as `Converged`.
+#[test]
+fn steering_sim_service_live_threshold_retarget() {
+    let svc = SolveService::start(ServiceConfig {
+        workers: 1,
+        queue_capacity: 4,
+        registry_capacity: 0,
+    });
+    let mut spec = JobSpec::default();
+    spec.tenant = "retarget".into();
+    spec.problem = ProblemKind::Jacobi;
+    spec.cfg.process_grid = (2, 1, 1);
+    spec.cfg.n = 24;
+    spec.cfg.scheme = Scheme::Asynchronous;
+    spec.cfg.threshold = 1e-300; // unreachable until the steer lands
+    spec.cfg.max_iters = 10_000_000;
+    spec.cfg.net_latency_us = 1;
+    spec.cfg.net_jitter = 0.0;
+    let ticket = svc.submit(spec).ticket().expect("admission");
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while svc.state(&ticket) == Some(JobState::Queued) {
+        assert!(Instant::now() < deadline, "job never claimed");
+        std::thread::yield_now();
+    }
+    // The worker registers the steer hub just after flipping the state;
+    // retry until the post lands (or the job settles, which would fail
+    // the collect assertion below anyway).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !svc.steer(&ticket, SteerCommand::SetThreshold(1e-2)) {
+        assert!(svc.state(&ticket).is_some(), "ticket went stale");
+        assert!(Instant::now() < deadline, "steer never landed");
+        std::thread::yield_now();
+    }
+
+    let rep = svc
+        .collect(&ticket, Duration::from_secs(300))
+        .expect("job settles");
+    assert_eq!(
+        rep.outcome,
+        JobOutcome::Converged,
+        "retargeted job must be graded against the applied 1e-2 threshold"
+    );
+    assert!(rep.r_n < 1.0, "r_n {} at the retargeted scale", rep.r_n);
+    let m = svc.shutdown();
+    assert_eq!(m["retarget"].converged, 1);
+}
+
+// ---------------------------------------------------------------------
+// Out-of-process elasticity: kill a real rank process
+// ---------------------------------------------------------------------
+
+fn wait_timeout(child: &mut Child, limit: Duration) -> Option<std::process::ExitStatus> {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return Some(status);
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// PIDs of live `repro rank --join ...` children of `parent`.
+fn rank_children(parent: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir("/proc") else {
+        return out;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(pid) = name.to_str().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+            continue;
+        };
+        // "pid (comm) state ppid ..." — comm may embed anything; split
+        // after the last ')'.
+        let Some((_, rest)) = stat.rsplit_once(')') else {
+            continue;
+        };
+        let ppid = rest.split_whitespace().nth(1).and_then(|p| p.parse::<u32>().ok());
+        if ppid != Some(parent) {
+            continue;
+        }
+        let Ok(cmd) = std::fs::read(format!("/proc/{pid}/cmdline")) else {
+            continue;
+        };
+        let args: Vec<&str> = cmd
+            .split(|b| *b == 0)
+            .map(|s| std::str::from_utf8(s).unwrap_or(""))
+            .collect();
+        if args.iter().any(|a| *a == "rank") && args.iter().any(|a| *a == "--join") {
+            out.push(pid);
+        }
+    }
+    out
+}
+
+/// ISSUE 10 acceptance: `repro solve --transport tcp --elastic` loses a
+/// rank *process* to SIGKILL mid-solve, shrinks the world by one, and
+/// still converges — exit 0, with the elastic re-solve visible on
+/// stderr.
+#[test]
+fn elastic_tcp_solve_survives_rank_process_kill() {
+    // A work floor of 6ms/iteration stretches the ~300-iteration solve
+    // to ~2s, so a kill 500ms after spawn is reliably mid-solve.
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "solve", "--problem", "jacobi", "--grid", "3x1x1", "--n", "24",
+            "--scheme", "trivial", "--transport", "tcp", "--elastic",
+            "--threshold", "1e-8", "--work-floor-us", "6000", "--json",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro solve --elastic");
+    let solve_pid = child.id();
+
+    // Wait for all three rank processes, then let the solve get going.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let ranks = loop {
+        let ranks = rank_children(solve_pid);
+        if ranks.len() == 3 {
+            break ranks;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("only {} rank processes appeared", ranks.len());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    std::thread::sleep(Duration::from_millis(500));
+
+    // SIGKILL one rank process (not via a Child handle we own — these
+    // are the solve's children; `kill` is a shell builtin everywhere).
+    let victim = ranks[2];
+    let status = Command::new("sh")
+        .args(["-c", &format!("kill -9 {victim}")])
+        .status()
+        .expect("run kill");
+    assert!(status.success(), "kill -9 {victim} failed");
+
+    let status = wait_timeout(&mut child, Duration::from_secs(120)).unwrap_or_else(|| {
+        let _ = child.kill();
+        panic!("elastic solve hung after its rank was killed");
+    });
+    let out = child.wait_with_output().expect("collect output");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        status.success(),
+        "elastic solve must converge after the kill; status {status}, stderr: {stderr}"
+    );
+    assert!(stdout.contains(r#""converged":true"#), "{stdout}");
+    assert!(
+        stderr.contains("re-solving at p=2"),
+        "the shrink must be reported: {stderr}"
+    );
+    assert!(
+        stderr.contains("finished elastically at 2 of 3 ranks"),
+        "{stderr}"
+    );
+}

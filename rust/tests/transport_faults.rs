@@ -10,7 +10,11 @@
 //! * a receive deadline on a half-open connection (the peer is alive
 //!   and connected but silent — the deadline still fires);
 //! * a world whose rendezvous point refuses connections (construction
-//!   fails cleanly instead of retrying forever).
+//!   fails cleanly instead of retrying forever);
+//! * a rank that goes silent *mid-detection* (wedged, not crashed) —
+//!   none of the three termination protocols may declare a verdict from
+//!   the partial world, and no survivor may hang (seeded probe in
+//!   `jack2::experiments::faults`).
 
 use std::collections::BTreeMap;
 use std::io::Read;
@@ -19,7 +23,8 @@ use std::process::{Child, Command, Stdio};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use jack2::config::{ExperimentConfig, Scheme};
+use jack2::config::{ExperimentConfig, Scheme, TerminationKind};
+use jack2::experiments::faults;
 use jack2::transport::tcp::{write_line, Rendezvous, TcpOpts, TcpWorld};
 use jack2::util::json::{self, Json};
 
@@ -144,6 +149,59 @@ fn recv_deadline_respected_on_half_open_link() {
         elapsed < Duration::from_secs(5),
         "recv overshot its deadline on a half-open link ({elapsed:?})"
     );
+}
+
+/// A rank lost mid-detection must produce *no* termination verdict on
+/// any surviving rank (global convergence is undecidable without it)
+/// and *no* hang (survivors run out their full iteration budget). One
+/// seeded probe per termination protocol; each probe bounds its own
+/// wall clock so a protocol that blocks on the dead peer fails the
+/// assertion instead of wedging the suite.
+fn assert_no_false_verdict(termination: TerminationKind) {
+    let t0 = Instant::now();
+    let row = faults::rank_loss_one(termination, 0xFA11_0000 + termination as u64)
+        .expect("rank-loss probe runs");
+    assert!(
+        t0.elapsed() < Duration::from_secs(120),
+        "{}: probe took {:?} — a survivor blocked on the dead rank",
+        termination.name(),
+        t0.elapsed()
+    );
+    assert_eq!(
+        row.false_verdicts,
+        0,
+        "{}: declared termination with a rank dead mid-detection",
+        termination.name()
+    );
+    for (i, iters) in row.survivor_iters.iter().enumerate() {
+        assert_eq!(
+            *iters,
+            faults::LOSS_MAX_ITERS,
+            "{}: survivor {i} stopped early ({} of {} iterations)",
+            termination.name(),
+            iters,
+            faults::LOSS_MAX_ITERS
+        );
+    }
+    assert!(
+        row.victim_iters < faults::LOSS_MAX_ITERS,
+        "the victim must actually have died early"
+    );
+}
+
+#[test]
+fn rank_loss_mid_detection_snapshot_no_false_verdict() {
+    assert_no_false_verdict(TerminationKind::Snapshot);
+}
+
+#[test]
+fn rank_loss_mid_detection_persistence_no_false_verdict() {
+    assert_no_false_verdict(TerminationKind::Persistence);
+}
+
+#[test]
+fn rank_loss_mid_detection_recursive_doubling_no_false_verdict() {
+    assert_no_false_verdict(TerminationKind::RecursiveDoubling);
 }
 
 /// Joining a world whose rendezvous listener is gone must fail fast and

@@ -1,0 +1,333 @@
+//! `bench_gate` — the CI regression gate over `BENCH_comm_micro.json`.
+//!
+//! Replaces the inline Python gate that used to live in
+//! `.github/workflows/ci.yml`: the same checks, but checked in,
+//! reviewed with the code that produces the numbers, and runnable
+//! locally —
+//!
+//! ```text
+//! cargo bench --bench comm_micro
+//! cargo run --release --bin bench_gate            # from rust/
+//! cargo run --release --bin bench_gate -- path/to/BENCH_comm_micro.json
+//! ```
+//!
+//! Gated series (one section per bench emitter, hard thresholds only
+//! where the quantity is deterministic; everything scheduler-dependent
+//! is presence-gated and read as a trend across PRs):
+//!
+//! * `pooled_vs_clone` — pooled sends ≥ 1× clone baseline, zero
+//!   steady-state allocations;
+//! * `backend_roundtrip` — both in-process backends measured;
+//! * `tcp_roundtrip` — all three payload sizes measured on the wire;
+//! * `stencil_simd` — SIMD never regresses below the scalar oracle;
+//! * `shm_wakeup` — both wakeup mechanisms measured;
+//! * `halo_coalesce` — coalescing keeps its deterministic 2× message
+//!   reduction;
+//! * `solve_precision` — f32 and f64 trajectories populated;
+//! * `termination_detection` — all three protocols populated;
+//! * `service_throughput` — both pool widths populated, jobs complete;
+//! * `trace_overhead` — disabled tracing ≤ 1.05× bare code;
+//! * `steer_reconverge` — every steering script re-converges and every
+//!   steered script actually opened an epoch.
+//!
+//! Exit 0 when every gate holds, 1 otherwise (with every violation
+//! printed, not just the first).
+
+use std::process::ExitCode;
+
+use jack2::util::json::{self, Json};
+
+/// Accumulates violations so one run reports every regression.
+struct Gate {
+    ok: bool,
+}
+
+impl Gate {
+    fn regression(&mut self, msg: &str) {
+        println!("  ^ REGRESSION: {msg}");
+        self.ok = false;
+    }
+
+    fn incomplete(&mut self, msg: String) {
+        println!("{msg}");
+        self.ok = false;
+    }
+}
+
+fn rows<'a>(doc: &'a Json, series: &str) -> Vec<&'a Json> {
+    doc.get(series)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().collect())
+        .unwrap_or_default()
+}
+
+fn num(row: &Json, key: &str) -> f64 {
+    row.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+}
+
+fn text<'a>(row: &'a Json, key: &str) -> &'a str {
+    row.get(key).and_then(|v| v.as_str()).unwrap_or("")
+}
+
+fn have<F: Fn(&Json) -> String>(rows: &[&Json], f: F) -> Vec<String> {
+    let mut v: Vec<String> = rows.iter().map(|r| f(*r)).collect();
+    v.sort();
+    v.dedup();
+    v
+}
+
+fn covers(have: &[String], want: &[&str]) -> bool {
+    want.iter().all(|w| have.iter().any(|h| h == w))
+}
+
+fn main() -> ExitCode {
+    let path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "BENCH_comm_micro.json".to_string());
+    let raw = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let doc = match json::parse(&raw) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bench_gate: {path} is not valid JSON: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("bench_gate: {path}");
+    let mut g = Gate { ok: true };
+
+    // Pooled sends: the ISSUE 1 headline — faster than the clone
+    // baseline and allocation-free in steady state, at every size.
+    let pooled = rows(&doc, "pooled_vs_clone");
+    if pooled.is_empty() {
+        g.incomplete(format!("no pooled_vs_clone rows in {path}"));
+    }
+    for r in &pooled {
+        println!(
+            "payload {}: pooled {:.0}ns/msg, clone {:.0}ns/msg, speedup {:.2}x, steady allocs {}",
+            num(r, "payload_f64s") as u64,
+            num(r, "pooled_ns_per_msg"),
+            num(r, "clone_ns_per_msg"),
+            num(r, "speedup"),
+            num(r, "steady_state_allocations") as u64,
+        );
+        if num(r, "speedup") < 1.0 {
+            g.regression("pooled path slower than clone baseline");
+        }
+        if num(r, "steady_state_allocations") > 0.0 {
+            g.regression("pooled path allocated in steady state");
+        }
+    }
+
+    // Both in-process backends stay measured (presence gate only).
+    let backend = rows(&doc, "backend_roundtrip");
+    for r in &backend {
+        println!(
+            "{:>6} payload {}: {:.0}ns/msg",
+            text(r, "backend"),
+            num(r, "payload_f64s") as u64,
+            num(r, "ns_per_msg"),
+        );
+    }
+    let backends = have(&backend, |r| text(r, "backend").to_string());
+    if !covers(&backends, &["simmpi", "shm"]) {
+        g.incomplete(format!("backend_roundtrip series incomplete: {backends:?}"));
+    }
+
+    // ISSUE 8: the real-socket round-trip keeps all three payload sizes.
+    let tcp = rows(&doc, "tcp_roundtrip");
+    for r in &tcp {
+        println!(
+            "   tcp payload {}: {:.0}ns/msg",
+            num(r, "payload_f64s") as u64,
+            num(r, "ns_per_msg"),
+        );
+    }
+    let tcp_sizes = have(&tcp, |r| (num(r, "payload_f64s") as u64).to_string());
+    if tcp_sizes.len() < 3 {
+        g.incomplete(format!(
+            "tcp_roundtrip series incomplete ({} rows in {path})",
+            tcp.len()
+        ));
+    }
+
+    // ISSUE 6a: SIMD sweeps never regress below the scalar oracle.
+    let simd = rows(&doc, "stencil_simd");
+    for r in &simd {
+        println!(
+            "stencil {:>4} ({}): scalar {:.0}ns/sweep, simd {:.0}ns/sweep, speedup {:.2}x",
+            text(r, "width"),
+            text(r, "simd_level"),
+            num(r, "scalar_ns_per_sweep"),
+            num(r, "simd_ns_per_sweep"),
+            num(r, "speedup"),
+        );
+        if num(r, "speedup") < 1.0 {
+            g.regression("SIMD sweep slower than scalar loop");
+        }
+    }
+    let widths = have(&simd, |r| text(r, "width").to_string());
+    if !covers(&widths, &["f32", "f64"]) {
+        g.incomplete(format!("stencil_simd series incomplete: {widths:?}"));
+    }
+
+    // ISSUE 6b: both wakeup mechanisms stay measured (presence gate).
+    let wakeup = rows(&doc, "shm_wakeup");
+    for r in &wakeup {
+        println!(
+            "wakeup {:>11}: {:.0}ns/roundtrip",
+            text(r, "mechanism"),
+            num(r, "ns_per_roundtrip"),
+        );
+    }
+    let mechs = have(&wakeup, |r| text(r, "mechanism").to_string());
+    if !covers(&mechs, &["condvar", "wake_signal"]) {
+        g.incomplete(format!("shm_wakeup series incomplete: {mechs:?}"));
+    }
+
+    // ISSUE 6c: coalescing keeps its deterministic 2x message reduction
+    // on the 2x2x2 torus (6 links -> 3 peers per rank).
+    let halo = rows(&doc, "halo_coalesce");
+    for r in &halo {
+        println!(
+            "halo {:>10}: {:.0} msgs/step/rank, {:.1}us/step",
+            text(r, "mode"),
+            num(r, "msgs_per_step_per_rank"),
+            num(r, "ns_per_step") / 1e3,
+        );
+    }
+    let coalesced = halo.iter().find(|r| text(r, "mode") == "coalesced");
+    let per_buffer = halo.iter().find(|r| text(r, "mode") == "per_buffer");
+    match (coalesced, per_buffer) {
+        (Some(c), Some(p)) => {
+            let ratio = num(p, "msgs_per_step_per_rank")
+                / num(c, "msgs_per_step_per_rank").max(1e-9);
+            println!("halo message reduction: {ratio:.2}x");
+            if ratio < 2.0 {
+                g.regression("coalescing no longer halves wire messages");
+            }
+        }
+        _ => {
+            let modes = have(&halo, |r| text(r, "mode").to_string());
+            g.incomplete(format!("halo_coalesce series incomplete: {modes:?}"));
+        }
+    }
+
+    // Mixed precision: both widths stay populated (presence gate).
+    let precision = rows(&doc, "solve_precision");
+    for r in &precision {
+        println!(
+            "solve {:>4}: {:.2}ms, {} iters, r_n {:.1e}",
+            text(r, "precision"),
+            num(r, "wall_ns") / 1e6,
+            num(r, "iterations") as u64,
+            num(r, "r_n"),
+        );
+    }
+    let widths = have(&precision, |r| text(r, "precision").to_string());
+    if !covers(&widths, &["f32", "f64"]) {
+        g.incomplete(format!("solve_precision series incomplete: {widths:?}"));
+    }
+
+    // ISSUE 5: all three detection protocols stay populated.
+    let detect = rows(&doc, "termination_detection");
+    for r in &detect {
+        println!(
+            "detect {:>18}: {:.2}ms, {} iters, r_n {:.1e}",
+            text(r, "protocol"),
+            num(r, "wall_ns") / 1e6,
+            num(r, "iterations") as u64,
+            num(r, "r_n"),
+        );
+    }
+    let protos = have(&detect, |r| text(r, "protocol").to_string());
+    if !covers(&protos, &["snapshot", "persistence", "recursive-doubling"]) {
+        g.incomplete(format!(
+            "termination_detection series incomplete: {protos:?}"
+        ));
+    }
+
+    // ISSUE 7: both worker-pool widths populated, and jobs complete.
+    let service = rows(&doc, "service_throughput");
+    for r in &service {
+        println!(
+            "service w{}: {}/{} jobs, {:.0} jobs/s, p99 queue-to-done {:.2}ms",
+            num(r, "workers") as u64,
+            num(r, "completed") as u64,
+            num(r, "jobs") as u64,
+            num(r, "jobs_per_sec"),
+            num(r, "p99_latency_ns") / 1e6,
+        );
+        if num(r, "completed") <= 0.0 {
+            g.regression("service completed no jobs under the bench load");
+        }
+    }
+    let pools = have(&service, |r| (num(r, "workers") as u64).to_string());
+    if !covers(&pools, &["2", "4"]) {
+        g.incomplete(format!("service_throughput series incomplete: {pools:?}"));
+    }
+
+    // ISSUE 9: tracing stays near-free when disabled (<= 1.05x bare
+    // code); the enabled row is trend-only.
+    let trace = rows(&doc, "trace_overhead");
+    for r in &trace {
+        println!(
+            "trace {:>9}: {:.0}ns/iter ({:.3}x baseline)",
+            text(r, "mode"),
+            num(r, "ns_per_iter"),
+            num(r, "ratio_vs_baseline"),
+        );
+    }
+    let modes = have(&trace, |r| text(r, "mode").to_string());
+    if covers(&modes, &["baseline", "disabled", "enabled"]) {
+        let disabled = trace.iter().find(|r| text(r, "mode") == "disabled").unwrap();
+        if num(disabled, "ratio_vs_baseline") > 1.05 {
+            g.regression("disabled tracing costs more than 1.05x");
+        }
+    } else {
+        g.incomplete(format!("trace_overhead series incomplete: {modes:?}"));
+    }
+
+    // ISSUE 10: every steering script re-converges, and every steered
+    // script actually opened an epoch (a zero-epoch "steered" run means
+    // the command never reached the root — the series would silently
+    // measure an unsteered solve).
+    let steer = rows(&doc, "steer_reconverge");
+    for r in &steer {
+        println!(
+            "steer {:>9}: {:.2}ms, {} iters, {} epochs, r_n {:.1e}",
+            text(r, "script"),
+            num(r, "wall_ns") / 1e6,
+            num(r, "iterations") as u64,
+            num(r, "epochs") as u64,
+            num(r, "r_n"),
+        );
+        if num(r, "converged") != 1.0 {
+            g.regression("steered solve did not re-converge");
+        }
+        let epochs = num(r, "epochs");
+        if text(r, "script") == "baseline" {
+            if epochs != 0.0 {
+                g.regression("unsteered baseline opened a steering epoch");
+            }
+        } else if epochs < 1.0 {
+            g.regression("steering command never opened an epoch");
+        }
+    }
+    let scripts = have(&steer, |r| text(r, "script").to_string());
+    if !covers(&scripts, &["baseline", "tighten", "rhs_scale"]) {
+        g.incomplete(format!("steer_reconverge series incomplete: {scripts:?}"));
+    }
+
+    if g.ok {
+        println!("bench_gate: all series present, all gates hold");
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
